@@ -1,0 +1,95 @@
+//! End-to-end AFD serving on a real (tiny) transformer.
+//!
+//! Loads the AOT-compiled XLA artifacts (`make artifacts`), spins up the
+//! full `rA–1F` threaded topology — r Attention workers with
+//! device-resident KV caches, one FFN server receiving the aggregated
+//! batch per layer — and serves batched autoregressive greedy-decode
+//! requests with continuous batching. Reports latency/throughput and
+//! compares AFD against the coupled (monolithic) baseline running the
+//! fused artifact on one instance.
+//!
+//! This is the headline validation driver recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+
+use afd::runtime::artifact::{default_artifacts_dir, Manifest};
+use afd::runtime::executor::LocalRuntime;
+use afd::runtime::model_runner::FusedModel;
+use afd::server::driver::closed_loop_requests;
+use afd::server::engine::{serve, EngineConfig};
+use afd::util::tablefmt::{sig, Table};
+use afd::util::timer::{fmt_duration, Stopwatch};
+
+fn main() -> afd::Result<()> {
+    afd::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    manifest.check_files()?;
+    let m = &manifest.model;
+    println!(
+        "model: d_model={} heads={} layers={} vocab={} kv_capacity={}",
+        m.d_model, m.n_heads, m.n_layers, m.vocab, m.kv_capacity
+    );
+    println!("topology: {}A-1F, B={} (aggregate {})", m.workers, m.batch_per_worker, m.aggregate_batch);
+
+    // --- AFD serving run ---
+    let n_requests = 3 * m.workers * m.batch_per_worker;
+    let budget = 16u64;
+    let requests = closed_loop_requests(n_requests, 4, budget, 20260710);
+    println!("\nserving {n_requests} requests (decode budget {budget}) through the AFD engine...");
+    let report = serve(&manifest, requests, EngineConfig::default())?;
+
+    let mut t = Table::new(&["metric", "value"]).with_title("AFD serving report");
+    t.row(&["completed requests".to_string(), report.completed.to_string()]);
+    t.row(&["wall time".to_string(), fmt_duration(report.wall_secs)]);
+    t.row(&["tokens/sec (bundle)".to_string(), sig(report.tokens_per_sec, 4)]);
+    t.row(&["tokens/sec/instance".to_string(), sig(report.tokens_per_sec_per_instance, 4)]);
+    t.row(&["mean TPOT".to_string(), fmt_duration(report.mean_tpot)]);
+    t.row(&["p99 TPOT".to_string(), fmt_duration(report.p99_tpot)]);
+    t.row(&["decode steps".to_string(), report.steps.to_string()]);
+    t.row(&["FFN busy fraction".to_string(), format!("{:.1}%", 100.0 * report.ffn_busy_fraction)]);
+    t.row(&[
+        "attention compute (sum)".to_string(),
+        fmt_duration(report.phases.attention_secs),
+    ]);
+    t.row(&["A->F->A wait (sum)".to_string(), fmt_duration(report.phases.ffn_wait_secs)]);
+    t.print();
+
+    // --- Coupled baseline: one monolithic instance, fused artifact ---
+    println!("\ncoupled baseline (fused artifact, 1 instance)...");
+    let rt = LocalRuntime::new(manifest.clone())?;
+    let mut fused = FusedModel::new(&rt)?;
+    let mut ids: Vec<i32> = (0..m.batch_per_worker as i32).collect();
+    let steps = budget * 3; // same token volume per slot as the AFD run
+    let sw = Stopwatch::start();
+    let mut tokens = 0u64;
+    for step in 0..steps {
+        ids = fused.decode_step(&ids)?;
+        tokens += m.batch_per_worker as u64;
+        // Continuous-batching emulation: recycle cache when budget hit.
+        if (step + 1) % budget == 0 {
+            fused = FusedModel::new(&rt)?;
+        }
+    }
+    let coupled_secs = sw.elapsed_secs();
+    let coupled_tps = tokens as f64 / coupled_secs;
+    println!(
+        "coupled: {} tokens in {} -> {:.1} tokens/sec/instance",
+        tokens,
+        fmt_duration(coupled_secs),
+        coupled_tps
+    );
+    println!(
+        "AFD per-instance vs coupled per-instance: {:.2}x",
+        report.tokens_per_sec_per_instance / coupled_tps
+    );
+    println!(
+        "\n(Caveat: on this shared-CPU testbed all {}+1 'instances' contend for\n\
+         the same cores — each PJRT client spins its own intra-op pool — and the\n\
+         interpret-mode Pallas attention dominates compute, so coupled wins here.\n\
+         The paper's regime (separate devices, FFN weight-load amortization) is\n\
+         reproduced by the simulator benches with Table 3 coefficients:\n\
+         `cargo bench --bench baseline_coupled` shows AFD winning 1.3x.)",
+        report.workers
+    );
+    Ok(())
+}

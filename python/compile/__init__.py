@@ -1,0 +1,6 @@
+"""Build-time compile package: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Nothing in this package is imported at serving time; ``make artifacts``
+runs :mod:`compile.aot` once and the Rust coordinator consumes only the
+emitted ``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+"""

@@ -1,0 +1,278 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``). Python never appears on the
+serving request path; the Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them through PJRT.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Emitted artifacts (see also artifacts/manifest.json):
+
+  embed                 token ids [B] -> residual [B, D]
+  attention_l{i}        per-worker Attention step, layer i (stateful; KV in/out)
+  ffn_l{i}              FFN-server step, layer i, aggregated batch N = r*B
+  ffn_worker_l{i}       FFN at per-worker batch B (colocated baseline + calib)
+  lm_head               residual [B, D] -> (greedy ids [B], logits [B, V])
+  fused_step            whole coupled decode step (parity oracle + baseline)
+  attention_cal_s{S}    calibration variants: KV capacity sweep (alpha_A fit)
+  ffn_cal_n{N}          calibration variants: batch sweep (alpha_F fit)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer
+    elides any constant larger than a few elements as ``constant({...})``,
+    which the HLO text *parser* silently reads back as zeros — the model
+    weights (closed-over constants) would vanish in the Rust runtime.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_entry(fn: Callable, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def build_artifacts(
+    cfg: M.ModelConfig,
+    workers: int,
+    batch_per_worker: int,
+    cal_capacities: List[int],
+    cal_batches: List[int],
+    cal_attention_batches: List[int] = (),
+) -> Dict[str, dict]:
+    """Construct {artifact_name: {fn, arg_specs, io}} for every entry point."""
+    weights = M.init_weights(cfg)
+    b = batch_per_worker
+    n_agg = workers * batch_per_worker
+    s, h, dh, d = cfg.kv_capacity, cfg.n_heads, cfg.head_dim, cfg.d_model
+
+    arts: Dict[str, dict] = {}
+
+    arts["embed"] = {
+        "fn": lambda ids: (M.embed(cfg, weights, ids),),
+        "specs": [spec([b], I32)],
+        "io": {
+            "inputs": [{"name": "ids", "shape": [b], "dtype": "s32"}],
+            "outputs": [{"name": "x", "shape": [b, d], "dtype": "f32"}],
+        },
+    }
+
+    arts["lm_head"] = {
+        "fn": lambda x: M.lm_head(cfg, weights, x),
+        "specs": [spec([b, d])],
+        "io": {
+            "inputs": [{"name": "x", "shape": [b, d], "dtype": "f32"}],
+            "outputs": [
+                {"name": "ids", "shape": [b], "dtype": "s32"},
+                {"name": "logits", "shape": [b, cfg.vocab], "dtype": "f32"},
+            ],
+        },
+    }
+
+    for i, w in enumerate(weights.layers):
+        arts[f"attention_l{i}"] = {
+            "fn": (
+                lambda x, kc, vc, lens, _w=w: M.attention_block(cfg, _w, x, kc, vc, lens)
+            ),
+            "specs": [
+                spec([b, d]),
+                spec([b, s, h, dh]),
+                spec([b, s, h, dh]),
+                spec([b], I32),
+            ],
+            "io": M.attention_io_shapes(cfg, b),
+        }
+        arts[f"ffn_l{i}"] = {
+            "fn": lambda x, _w=w: (M.ffn_block(cfg, _w, x),),
+            "specs": [spec([n_agg, d])],
+            "io": M.ffn_io_shapes(cfg, n_agg),
+        }
+        arts[f"ffn_worker_l{i}"] = {
+            "fn": lambda x, _w=w: (M.ffn_block(cfg, _w, x),),
+            "specs": [spec([b, d])],
+            "io": M.ffn_io_shapes(cfg, b),
+        }
+
+    def fused(x, k0, v0, k1, v1, lens):
+        # Flattened-arg wrapper (PJRT takes a flat argument list).
+        y, ks, vs = M.fused_step(cfg, weights, x, [k0, k1], [v0, v1], lens)
+        return (y, ks[0], vs[0], ks[1], vs[1])
+
+    assert cfg.n_layers == 2, "fused_step wrapper is specialized to 2 layers"
+    arts["fused_step"] = {
+        "fn": fused,
+        "specs": [
+            spec([b, d]),
+            spec([b, s, h, dh]),
+            spec([b, s, h, dh]),
+            spec([b, s, h, dh]),
+            spec([b, s, h, dh]),
+            spec([b], I32),
+        ],
+        "io": {
+            "inputs": [
+                {"name": "x", "shape": [b, d], "dtype": "f32"},
+                {"name": "k0", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "v0", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "k1", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "v1", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "seq_lens", "shape": [b], "dtype": "s32"},
+            ],
+            "outputs": [
+                {"name": "x_out", "shape": [b, d], "dtype": "f32"},
+                {"name": "k0_out", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "v0_out", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "k1_out", "shape": [b, s, h, dh], "dtype": "f32"},
+                {"name": "v1_out", "shape": [b, s, h, dh], "dtype": "f32"},
+            ],
+        },
+    }
+
+    # Calibration variants: the latency-model regression (paper Table 3 /
+    # Appendix B analogue) measures these across their sweep parameter.
+    w0 = weights.layers[0]
+    for cap in cal_capacities:
+        ccfg = M.ModelConfig(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            head_dim=cfg.head_dim,
+            d_ff=cfg.d_ff,
+            vocab=cfg.vocab,
+            n_layers=cfg.n_layers,
+            kv_capacity=cap,
+            seed=cfg.seed,
+        )
+        arts[f"attention_cal_s{cap}"] = {
+            "fn": (
+                lambda x, kc, vc, lens, _c=ccfg, _w=w0: M.attention_block(
+                    _c, _w, x, kc, vc, lens, use_kernel=False
+                )
+            ),
+            "specs": [
+                spec([b, d]),
+                spec([b, cap, h, dh]),
+                spec([b, cap, h, dh]),
+                spec([b], I32),
+            ],
+            "io": M.attention_io_shapes(ccfg, b),
+        }
+    # Attention batch sweep at fixed capacity: token load = batch * S.
+    # (The interpret-mode kernel is linear in batch; the capacity sweep
+    # carries interpreter overhead superlinear in S — see table3 bench.)
+    for n in cal_attention_batches:
+        arts[f"attention_cal_b{n}"] = {
+            "fn": (
+                lambda x, kc, vc, lens, _w=w0: M.attention_block(
+                    cfg, _w, x, kc, vc, lens, use_kernel=False
+                )
+            ),
+            "specs": [
+                spec([n, d]),
+                spec([n, s, h, dh]),
+                spec([n, s, h, dh]),
+                spec([n], I32),
+            ],
+            "io": M.attention_io_shapes(cfg, n),
+        }
+    for n in cal_batches:
+        arts[f"ffn_cal_n{n}"] = {
+            "fn": lambda x, _w=w0: (M.ffn_block(cfg, _w, x),),
+            "specs": [spec([n, d])],
+            "io": M.ffn_io_shapes(cfg, n),
+        }
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--workers", type=int, default=4, help="r: Attention workers per FFN")
+    ap.add_argument("--batch", type=int, default=8, help="B: microbatch per worker")
+    ap.add_argument(
+        "--cal-capacities", default="64,128,256,512", help="KV capacity sweep for alpha_A"
+    )
+    ap.add_argument(
+        "--cal-attention-batches",
+        default="2,4,8,16,24",
+        help="attention batch sweep (token load = batch * capacity) for alpha_A",
+    )
+    ap.add_argument("--cal-batches", default="8,16,32,64,128", help="batch sweep for alpha_F")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig()
+    cal_caps = [int(x) for x in args.cal_capacities.split(",") if x]
+    cal_ns = [int(x) for x in args.cal_batches.split(",") if x]
+    cal_abs = [int(x) for x in args.cal_attention_batches.split(",") if x]
+    arts = build_artifacts(cfg, args.workers, args.batch, cal_caps, cal_ns, cal_abs)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "n_layers": cfg.n_layers,
+            "kv_capacity": cfg.kv_capacity,
+            "seed": cfg.seed,
+        },
+        "topology": {
+            "workers": args.workers,
+            "batch_per_worker": args.batch,
+            "aggregate_batch": args.workers * args.batch,
+        },
+        "calibration": {
+            "capacities": cal_caps,
+            "batches": cal_ns,
+            "attention_batches": cal_abs,
+        },
+        "artifacts": {},
+    }
+    for name, art in sorted(arts.items()):
+        text = lower_entry(art["fn"], art["specs"])
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": fname, **art["io"]}
+        print(f"  lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(arts)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

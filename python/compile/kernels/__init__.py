@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels for the AFD decode step, plus pure-jnp oracles."""
+
+from .decode_attention import decode_attention
+from .ffn import swiglu_ffn
+from . import ref
+
+__all__ = ["decode_attention", "swiglu_ffn", "ref"]

@@ -1,0 +1,168 @@
+"""Pallas flash-decoding kernel: single-token attention over a padded KV cache.
+
+This is the Layer-1 compute hot-spot of the AFD Attention worker. The paper
+models Attention latency as ``t_A(T) = alpha_A * T + beta_A`` because decode
+attention is memory-bandwidth bound: the whole KV cache (T tokens) must be
+streamed from HBM once per step. The kernel is structured to make exactly
+that streaming schedule explicit on TPU:
+
+  * grid = (B, H, S/Sb): one program per (request, head, kv-block);
+  * BlockSpec tiles the KV cache as [1, Sb, 1, Dh] blocks, which is the
+    HBM->VMEM double-bufferable unit (the TPU analogue of the paper's
+    "read the KV cache once at effective bandwidth");
+  * an online-softmax (flash-decoding) recurrence carried in VMEM scratch
+    (running max m, normalizer l, fp32 accumulator acc), so no S-sized
+    intermediate ever materializes;
+  * fp32 accumulation regardless of the input dtype (bf16-safe).
+
+The kernel is lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); on a real TPU the same BlockSpec schedule is
+what Mosaic would pipeline. Correctness is pinned against
+``ref.decode_attention_ref`` by pytest/hypothesis.
+
+HARDWARE ADAPTATION (paper -> TPU idiom): the paper's Ascend formulation
+counts per-token bytes ``(d_c + d_rope) * 2`` against effective HBM
+bandwidth (Appendix B.2). Here the per-(head, block) bytes are
+``Sb * Dh * itemsize`` for K and V; the grid iterates the same total
+``T * Dh_bytes`` traffic, so the cost model shape — latency linear in the
+token load T — is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Large-negative constant used instead of -inf so that fully-masked blocks
+# cannot produce NaN in the online-softmax recurrence.
+NEG_MASK = -1.0e30
+
+
+def _decode_attention_kernel(
+    len_ref,  # [1]           int32, valid length for this request
+    q_ref,    # [1, 1, Dh]    query block
+    k_ref,    # [1, Sb, 1, Dh] key block
+    v_ref,    # [1, Sb, 1, Dh] value block
+    o_ref,    # [1, 1, Dh]    output block
+    acc_ref,  # VMEM [Dh]     fp32 accumulator
+    m_ref,    # VMEM [1]      running max
+    l_ref,    # VMEM [1]      running normalizer
+    *,
+    block_s: int,
+    num_blocks: int,
+    scale: float,
+):
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_MASK)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)           # [Dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [Sb, Dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # [Sb, Dh]
+    seq_len = len_ref[0]
+
+    # Positions covered by this KV block, masked against the valid length.
+    positions = blk * block_s + jax.lax.iota(jnp.int32, block_s)
+    valid = positions < seq_len
+
+    s = jnp.dot(k, q) * scale                        # [Sb]
+    s = jnp.where(valid, s, NEG_MASK)
+
+    # Online softmax update (flash-decoding recurrence).
+    m_prev = m_ref[0]
+    l_prev = l_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                           # [Sb]
+    # Masked lanes contribute exp(NEG_MASK - m_cur) ~ 0 exactly because
+    # NEG_MASK << any real score; force them to 0 for bit-cleanliness.
+    p = jnp.where(valid, p, 0.0)
+    l_ref[0] = alpha * l_prev + jnp.sum(p)
+    m_ref[0] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+
+    @pl.when(blk == num_blocks - 1)
+    def _finalize():
+        # seq_len >= 1 always holds in decode (the slot just appended the
+        # current token), so l > 0 and the division is safe.
+        o_ref[0, 0, :] = (acc_ref[...] / l_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    *,
+    block_s: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-decoding attention via a Pallas kernel.
+
+    Args:
+      q:        [B, H, Dh] current-step queries.
+      k_cache:  [B, S, H, Dh] padded key cache.
+      v_cache:  [B, S, H, Dh] padded value cache.
+      seq_lens: [B] int32 valid lengths (1 <= seq_lens[b] <= S).
+      block_s:  KV-sequence tile size (the HBM->VMEM streaming unit).
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      [B, H, Dh] attention output in the dtype of ``q``.
+    """
+    b, s, h, dh = k_cache.shape
+    if q.shape != (b, h, dh):
+        raise ValueError(f"q shape {q.shape} incompatible with cache {k_cache.shape}")
+    if s % block_s != 0:
+        raise ValueError(f"kv capacity {s} must be a multiple of block_s={block_s}")
+    num_blocks = s // block_s
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _decode_attention_kernel,
+        block_s=block_s,
+        num_blocks=num_blocks,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, num_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, k: (i,)),
+            pl.BlockSpec((1, 1, dh), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda i, j, k: (i, k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i, j, k: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seq_lens, q, k_cache, v_cache)
+
+
+def vmem_bytes(block_s: int, dh: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one program instance, in bytes.
+
+    Used by DESIGN.md's roofline discussion: q + K-block + V-block +
+    scratch (acc, m, l) + output. This is the number to keep under the
+    ~16 MiB/core VMEM budget when tuning ``block_s`` for a real TPU.
+    """
+    q = dh * itemsize
+    kv = 2 * block_s * dh * itemsize
+    scratch = (dh + 2) * 4
+    out = dh * itemsize
+    return q + kv + scratch + out

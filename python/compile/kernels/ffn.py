@@ -1,0 +1,95 @@
+"""Pallas SwiGLU FFN kernel: the Layer-1 hot-spot of the AFD FFN server.
+
+The paper models FFN latency as ``t_F(rB) = alpha_F * rB + beta_F`` because
+with a large enough aggregated batch the FFN is compute-bound: FLOPs are
+``6 * D * F`` per token (three weight matrices, forward only), executed on
+the MXU at peak. The kernel is tiled so the MXU sees well-shaped matmuls:
+
+  * grid = (N/Bn,): one program per batch tile;
+  * the batch tile [Bn, D] streams through VMEM while the three weight
+    blocks stay resident (weights are small for the demo model; on a real
+    TPU they would be tiled over F as well — see ``vmem_bytes``);
+  * fp32 accumulation via ``preferred_element_type``.
+
+Lowered with ``interpret=True`` for CPU PJRT. Correctness pinned against
+``ref.swiglu_ffn_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    y = jnp.dot((silu * u).astype(x.dtype), wd_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def swiglu_ffn(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    *,
+    block_n: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """SwiGLU feed-forward over an aggregated batch, via a Pallas kernel.
+
+    Args:
+      x:      [N, D] aggregated activations (N = r * B in the AFD bundle).
+      w_gate: [D, F]
+      w_up:   [D, F]
+      w_down: [F, D]
+      block_n: batch tile size.
+      interpret: run in interpret mode (required on CPU PJRT).
+
+    Returns:
+      [N, D] in the dtype of ``x``.
+    """
+    n, d = x.shape
+    dg, f = w_gate.shape
+    if dg != d or w_up.shape != (d, f) or w_down.shape != (f, d):
+        raise ValueError(
+            f"weight shapes {w_gate.shape}/{w_up.shape}/{w_down.shape} "
+            f"incompatible with x {x.shape}"
+        )
+    if n % block_n != 0:
+        raise ValueError(f"batch {n} must be a multiple of block_n={block_n}")
+
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)
+
+
+def flops(n: int, d: int, f: int) -> int:
+    """Forward FLOPs: 3 matmuls x 2 FLOPs/MAC = 6*D*F per token (paper Eq. 20)."""
+    return 6 * d * f * n
+
+
+def vmem_bytes(block_n: int, d: int, f: int, itemsize: int = 4) -> int:
+    """VMEM working set per program: x tile + 3 weight blocks + 2 intermediates + out."""
+    x = block_n * d * itemsize
+    w = (2 * d * f + f * d) * itemsize
+    inter = 2 * block_n * f * 4
+    out = block_n * d * itemsize
+    return x + w + inter + out

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest (see
+python/tests/test_kernels.py, which sweeps shapes and dtypes with
+hypothesis). The oracles are written in the most obvious jnp form —
+no tiling, no online softmax — so that a bug in the kernel cannot be
+mirrored in the reference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Masked single-token (decode) attention over a padded KV cache.
+
+    Args:
+      q:        [B, H, Dh]  query for the current decode position.
+      k_cache:  [B, S, H, Dh] padded key cache (positions >= seq_lens[b] are
+                garbage and must not influence the output).
+      v_cache:  [B, S, H, Dh] padded value cache.
+      seq_lens: [B] int32, number of valid positions per request.
+
+    Returns:
+      [B, H, Dh] attention output, same dtype as ``q``.
+    """
+    b, s, h, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    # scores[b, h, s] = q[b, h, :] . k[b, s, h, :]
+    scores = jnp.einsum("bhd,bshd->bhs", qf, kf) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)[None, None, :]
+    mask = pos < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def swiglu_ffn_ref(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+) -> jnp.ndarray:
+    """SwiGLU feed-forward: (silu(x @ Wg) * (x @ Wu)) @ Wd.
+
+    Args:
+      x:      [N, D]
+      w_gate: [D, F]
+      w_up:   [D, F]
+      w_down: [F, D]
+
+    Returns:
+      [N, D], same dtype as ``x``.
+    """
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    y = (silu * u) @ w_down.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm: x * rsqrt(mean(x^2) + eps) * gamma, rowwise over the last axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jnp.reciprocal(jnp.sqrt(ms + eps)) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,238 @@
+"""Layer-2 JAX model: the AFD-split decode step of a tiny transformer.
+
+The paper's architecture (Figure 1) splits each transformer layer into a
+stateful Attention block (per Attention worker, owns the KV cache) and a
+stateless FFN block (shared FFN server, sees the aggregated batch rB).
+This module defines exactly those two entry points, plus embedding and
+LM-head entry points so the Rust coordinator can run a *real*
+autoregressive greedy-decode loop end to end:
+
+    embed -> [attention_block -> (A->F) -> ffn_block -> (F->A)] x L -> lm_head
+
+Weights are generated deterministically (fixed seed) and closed over, so
+they become constants in the lowered HLO; the Rust side never handles
+weights. The per-layer functions call the Layer-1 Pallas kernels
+(``kernels.decode_attention``, ``kernels.swiglu_ffn``), so the kernels lower
+into the same HLO artifact that the Rust PJRT runtime executes.
+
+A ``fused_step`` entry point (all L layers, attention+FFN colocated) is
+also exported: it is both the parity oracle for the split pipeline and the
+"coupled/monolithic" baseline that the paper's AFD architecture is compared
+against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, swiglu_ffn
+from .kernels import ref
+from .kernels.ref import rmsnorm_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny dense transformer used for the end-to-end AFD serving demo.
+
+    The provisioning framework is architecture-agnostic (it consumes only
+    linear latency coefficients), so a small model suffices to exercise
+    every code path: KV-cache growth, A<->F activation transfer, aggregated
+    FFN batching, greedy sampling.
+    """
+
+    d_model: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 384
+    vocab: int = 256
+    n_layers: int = 2
+    kv_capacity: int = 128
+    seed: int = 20260710
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerWeights:
+    wq: jnp.ndarray  # [D, D]
+    wk: jnp.ndarray  # [D, D]
+    wv: jnp.ndarray  # [D, D]
+    wo: jnp.ndarray  # [D, D]
+    w_gate: jnp.ndarray  # [D, F]
+    w_up: jnp.ndarray  # [D, F]
+    w_down: jnp.ndarray  # [F, D]
+    g_attn: jnp.ndarray  # [D] RMSNorm gain (pre-attention)
+    g_ffn: jnp.ndarray  # [D] RMSNorm gain (pre-FFN)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelWeights:
+    embedding: jnp.ndarray  # [V, D]
+    g_final: jnp.ndarray  # [D]
+    w_lm: jnp.ndarray  # [D, V]
+    layers: Tuple[LayerWeights, ...]
+
+
+def init_weights(cfg: ModelConfig) -> ModelWeights:
+    """Deterministic weight init (fixed seed -> reproducible artifacts)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    keys = jax.random.split(key, 2 + 7 * cfg.n_layers)
+    embedding = dense(keys[0], (v, d), 1.0)
+    w_lm = dense(keys[1], (d, v), d)
+    layers = []
+    for i in range(cfg.n_layers):
+        k = keys[2 + 7 * i : 2 + 7 * (i + 1)]
+        layers.append(
+            LayerWeights(
+                wq=dense(k[0], (d, d), d),
+                wk=dense(k[1], (d, d), d),
+                wv=dense(k[2], (d, d), d),
+                wo=dense(k[3], (d, d), d),
+                w_gate=dense(k[4], (d, f), d),
+                w_up=dense(k[5], (d, f), d),
+                w_down=dense(k[6], (f, d), f),
+                g_attn=jnp.ones((d,), jnp.float32),
+                g_ffn=jnp.ones((d,), jnp.float32),
+            )
+        )
+    return ModelWeights(
+        embedding=embedding,
+        g_final=jnp.ones((d,), jnp.float32),
+        w_lm=w_lm,
+        layers=tuple(layers),
+    )
+
+
+# ---------------------------------------------------------------------------
+# AFD-split entry points (one HLO artifact each)
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    cfg: ModelConfig,
+    w: LayerWeights,
+    x: jnp.ndarray,  # [B, D] residual stream
+    k_cache: jnp.ndarray,  # [B, S, H, Dh]
+    v_cache: jnp.ndarray,  # [B, S, H, Dh]
+    seq_lens: jnp.ndarray,  # [B] int32: tokens already in the cache
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stateful Attention-worker step for one layer (paper Fig. 1, "A").
+
+    Appends the current token's K/V at position ``seq_lens`` and attends
+    over ``seq_lens + 1`` valid positions. Returns the post-attention
+    residual stream and the updated caches. The caller (Rust coordinator)
+    owns ``seq_lens`` bookkeeping.
+
+    ``use_kernel=False`` swaps the Pallas flash-decoding kernel for the
+    pure-jnp oracle. Numerics are identical (pinned by pytest); the jnp
+    path lowers to plain fused HLO, which matters for the *latency
+    calibration* artifacts: the interpret-mode Pallas while-loop carries
+    full-buffer copies per grid step on the CPU backend (superlinear
+    cost), whereas calibration needs the linear KV-traffic scaling the
+    paper models.
+    """
+    b = x.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    hidden = rmsnorm_ref(x, w.g_attn)
+    q = (hidden @ w.wq).reshape(b, h, dh)
+    k_new = (hidden @ w.wk).reshape(b, h, dh)
+    v_new = (hidden @ w.wv).reshape(b, h, dh)
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, seq_lens].set(k_new)
+    v_cache = v_cache.at[rows, seq_lens].set(v_new)
+    if use_kernel:
+        attn = decode_attention(q, k_cache, v_cache, seq_lens + 1)
+    else:
+        attn = ref.decode_attention_ref(q, k_cache, v_cache, seq_lens + 1)
+    out = attn.reshape(b, h * dh) @ w.wo
+    return x + out, k_cache, v_cache
+
+
+def ffn_block(cfg: ModelConfig, w: LayerWeights, x: jnp.ndarray) -> jnp.ndarray:
+    """Stateless FFN-server step for one layer over the aggregated batch rB."""
+    hidden = rmsnorm_ref(x, w.g_ffn)
+    # Tile the batch in units of 8 when possible; any divisor keeps the
+    # kernel correct (tile-invariance is pinned by tests).
+    block_n = math.gcd(x.shape[0], 8)
+    return x + swiglu_ffn(hidden, w.w_gate, w.w_up, w.w_down, block_n=block_n)
+
+
+def embed(cfg: ModelConfig, weights: ModelWeights, ids: jnp.ndarray) -> jnp.ndarray:
+    """Token ids [B] int32 -> residual stream [B, D]."""
+    return weights.embedding[ids]
+
+
+def lm_head(
+    cfg: ModelConfig, weights: ModelWeights, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual stream [B, D] -> (greedy next-token ids [B] int32, logits [B, V])."""
+    hidden = rmsnorm_ref(x, weights.g_final)
+    logits = hidden @ weights.w_lm
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+
+def fused_step(
+    cfg: ModelConfig,
+    weights: ModelWeights,
+    x: jnp.ndarray,
+    k_caches: List[jnp.ndarray],  # n_layers x [B, S, H, Dh]
+    v_caches: List[jnp.ndarray],
+    seq_lens: jnp.ndarray,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], List[jnp.ndarray]]:
+    """Monolithic (coupled) decode step: all layers, attention+FFN colocated.
+
+    Parity oracle for the split pipeline and the paper's baseline
+    architecture (Section 2: "a monolithic architecture deploys both
+    Attention and FFN blocks on the same hardware").
+    """
+    new_k, new_v = [], []
+    for i, w in enumerate(weights.layers):
+        x, k, v = attention_block(cfg, w, x, k_caches[i], v_caches[i], seq_lens)
+        x = ffn_block(cfg, w, x)
+        new_k.append(k)
+        new_v.append(v)
+    return x, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# Shape manifest helpers (consumed by aot.py and mirrored in Rust)
+# ---------------------------------------------------------------------------
+
+
+def attention_io_shapes(cfg: ModelConfig, batch: int) -> Dict[str, list]:
+    s, h, dh, d = cfg.kv_capacity, cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "inputs": [
+            {"name": "x", "shape": [batch, d], "dtype": "f32"},
+            {"name": "k_cache", "shape": [batch, s, h, dh], "dtype": "f32"},
+            {"name": "v_cache", "shape": [batch, s, h, dh], "dtype": "f32"},
+            {"name": "seq_lens", "shape": [batch], "dtype": "s32"},
+        ],
+        "outputs": [
+            {"name": "x_out", "shape": [batch, d], "dtype": "f32"},
+            {"name": "k_cache_out", "shape": [batch, s, h, dh], "dtype": "f32"},
+            {"name": "v_cache_out", "shape": [batch, s, h, dh], "dtype": "f32"},
+        ],
+    }
+
+
+def ffn_io_shapes(cfg: ModelConfig, batch: int) -> Dict[str, list]:
+    d = cfg.d_model
+    return {
+        "inputs": [{"name": "x", "shape": [batch, d], "dtype": "f32"}],
+        "outputs": [{"name": "x_out", "shape": [batch, d], "dtype": "f32"}],
+    }

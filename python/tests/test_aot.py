@@ -1,0 +1,71 @@
+"""AOT pipeline tests: every artifact lowers to parseable HLO text with the
+shapes the manifest promises, and lowering is reproducible."""
+
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig(kv_capacity=32)
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    return aot.build_artifacts(
+        CFG, workers=2, batch_per_worker=4, cal_capacities=[32], cal_batches=[4]
+    )
+
+
+def test_expected_artifact_set(artifacts):
+    names = set(artifacts)
+    assert {"embed", "lm_head", "fused_step", "attention_cal_s32", "ffn_cal_n4"} <= names
+    for i in range(CFG.n_layers):
+        assert {f"attention_l{i}", f"ffn_l{i}", f"ffn_worker_l{i}"} <= names
+
+
+def test_lowered_hlo_is_text_with_entry(artifacts):
+    art = artifacts["ffn_l0"]
+    text = aot.lower_entry(art["fn"], art["specs"])
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root must be a tuple.
+    assert re.search(r"ROOT.*tuple", text)
+
+
+def test_attention_artifact_shapes_in_hlo(artifacts):
+    art = artifacts["attention_l0"]
+    text = aot.lower_entry(art["fn"], art["specs"])
+    # KV cache parameter with the manifest shape must appear: [4,32,4,32].
+    assert "f32[4,32,4,32]" in text
+    assert "s32[4]" in text
+
+
+def test_ffn_aggregate_batch_shape(artifacts):
+    # workers=2 x batch=4 -> aggregated FFN batch 8.
+    art = artifacts["ffn_l0"]
+    assert art["io"]["inputs"][0]["shape"] == [8, CFG.d_model]
+    text = aot.lower_entry(art["fn"], art["specs"])
+    assert f"f32[8,{CFG.d_model}]" in text
+
+
+def test_lowering_is_deterministic(artifacts):
+    art = artifacts["embed"]
+    t1 = aot.lower_entry(art["fn"], art["specs"])
+    t2 = aot.lower_entry(art["fn"], art["specs"])
+    assert t1 == t2
+
+
+def test_manifest_io_types(artifacts):
+    for name, art in artifacts.items():
+        io = art["io"]
+        assert io["inputs"] and io["outputs"], name
+        for tensor in io["inputs"] + io["outputs"]:
+            assert tensor["dtype"] in ("f32", "s32"), (name, tensor)
+            assert all(isinstance(d, int) and d > 0 for d in tensor["shape"])
+
+
+def test_spec_helper():
+    s = aot.spec([2, 3], jnp.int32)
+    assert s.shape == (2, 3) and s.dtype == jnp.int32

@@ -1,0 +1,206 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes, dtypes, sequence lengths and tile sizes of the
+Pallas kernels against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from compile.kernels import decode_attention, swiglu_ffn
+from compile.kernels import ref
+from compile.kernels.decode_attention import vmem_bytes as attn_vmem
+from compile.kernels.ffn import flops as ffn_flops, vmem_bytes as ffn_vmem
+
+SETTINGS = dict(
+    deadline=None,
+    max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def tol(dtype):
+    return {"float32": 2e-5, "bfloat16": 3e-2}[jnp.dtype(dtype).name]
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 6),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 32]),
+    s_blocks=st.integers(1, 4),
+    block_s=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, dh, s_blocks, block_s, dtype, seed):
+    s = s_blocks * block_s
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    q = rand(kq, (b, h, dh), dtype)
+    k = rand(kk, (b, s, h, dh), dtype)
+    v = rand(kv, (b, s, h, dh), dtype)
+    lens = jax.random.randint(kl, (b,), 1, s + 1).astype(jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=block_s)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol(dtype), rtol=tol(dtype)
+    )
+
+
+def test_decode_attention_len_one_is_value_passthrough():
+    """With a single valid position, softmax weight is 1 -> output == v[0]."""
+    key = jax.random.PRNGKey(0)
+    b, s, h, dh = 3, 64, 2, 16
+    q = rand(key, (b, h, dh), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    lens = jnp.ones((b,), jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 0]), atol=1e-6)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Positions beyond seq_lens must not influence the result at all."""
+    key = jax.random.PRNGKey(7)
+    b, s, h, dh = 2, 64, 2, 16
+    q = rand(key, (b, h, dh), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    lens = jnp.asarray([5, 33], jnp.int32)
+    base = decode_attention(q, k, v, lens)
+    # Poison the padding region with huge values.
+    pos = jnp.arange(s)[None, :, None, None]
+    poison = jnp.where(pos >= lens[:, None, None, None], 1e9, 0.0)
+    out = decode_attention(q, k + poison, v + poison, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-5)
+
+
+def test_decode_attention_full_cache():
+    key = jax.random.PRNGKey(3)
+    b, s, h, dh = 2, 32, 2, 8
+    q = rand(key, (b, h, dh), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=8)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_block_size_invariance():
+    """Result must be identical (to fp tolerance) for any tile size."""
+    key = jax.random.PRNGKey(11)
+    b, s, h, dh = 3, 64, 4, 16
+    q = rand(key, (b, h, dh), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    lens = jnp.asarray([1, 40, 64], jnp.int32)
+    outs = [
+        np.asarray(decode_attention(q, k, v, lens, block_s=bs)) for bs in (8, 16, 32, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_no_nan_with_extreme_scores():
+    key = jax.random.PRNGKey(5)
+    b, s, h, dh = 2, 32, 1, 8
+    q = rand(key, (b, h, dh), jnp.float32, scale=100.0)
+    k = rand(jax.random.fold_in(key, 1), (b, s, h, dh), jnp.float32, scale=100.0)
+    v = rand(jax.random.fold_in(key, 2), (b, s, h, dh), jnp.float32)
+    lens = jnp.asarray([2, 32], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens))
+    assert np.isfinite(out).all()
+
+
+def test_decode_attention_rejects_bad_shapes():
+    q = jnp.zeros((2, 2, 8), jnp.float32)
+    k = jnp.zeros((2, 32, 2, 8), jnp.float32)
+    lens = jnp.ones((2,), jnp.int32)
+    with pytest.raises(ValueError):
+        decode_attention(jnp.zeros((3, 2, 8), jnp.float32), k, k, lens)
+    with pytest.raises(ValueError):
+        decode_attention(q, k, k, lens, block_s=24)  # 32 % 24 != 0
+
+
+def test_attention_vmem_estimate_within_budget():
+    # DESIGN.md roofline: default tile must sit far below 16 MiB VMEM.
+    assert attn_vmem(block_s=32, dh=32) < 16 * 1024 * 1024 // 64
+
+
+# ---------------------------------------------------------------------------
+# swiglu_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([2, 4, 8]),
+    d=st.sampled_from([16, 64, 128]),
+    f=st.sampled_from([32, 96, 384]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_swiglu_matches_ref(n_blocks, block_n, d, f, dtype, seed):
+    n = n_blocks * block_n
+    key = jax.random.PRNGKey(seed)
+    kx, kg, ku, kd = jax.random.split(key, 4)
+    x = rand(kx, (n, d), dtype)
+    wg = rand(kg, (d, f), dtype, scale=d**-0.5)
+    wu = rand(ku, (d, f), dtype, scale=d**-0.5)
+    wd = rand(kd, (f, d), dtype, scale=f**-0.5)
+    out = swiglu_ffn(x, wg, wu, wd, block_n=block_n)
+    exp = ref.swiglu_ffn_ref(x, wg, wu, wd)
+    assert out.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol(dtype), rtol=tol(dtype)
+    )
+
+
+def test_swiglu_zero_input_gives_zero():
+    d, f = 32, 64
+    x = jnp.zeros((8, d), jnp.float32)
+    w = jnp.ones((d, f), jnp.float32)
+    out = swiglu_ffn(x, w, w, jnp.ones((f, d), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_swiglu_tile_invariance():
+    key = jax.random.PRNGKey(9)
+    n, d, f = 16, 64, 128
+    x = rand(key, (n, d), jnp.float32)
+    wg = rand(jax.random.fold_in(key, 1), (d, f), jnp.float32, scale=0.1)
+    wu = rand(jax.random.fold_in(key, 2), (d, f), jnp.float32, scale=0.1)
+    wd = rand(jax.random.fold_in(key, 3), (f, d), jnp.float32, scale=0.1)
+    outs = [np.asarray(swiglu_ffn(x, wg, wu, wd, block_n=bn)) for bn in (1, 2, 4, 8, 16)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+def test_swiglu_rejects_bad_shapes():
+    x = jnp.zeros((8, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        swiglu_ffn(x, jnp.zeros((8, 32), jnp.float32), jnp.zeros((16, 32), jnp.float32), jnp.zeros((32, 16), jnp.float32))
+    with pytest.raises(ValueError):
+        swiglu_ffn(x, jnp.zeros((16, 32), jnp.float32), jnp.zeros((16, 32), jnp.float32), jnp.zeros((32, 16), jnp.float32), block_n=3)
+
+
+def test_ffn_flops_formula():
+    # Paper Eq. (20): 6 * H * d_expert per token.
+    assert ffn_flops(n=16, d=7168, f=2048) == 16 * 6 * 7168 * 2048
+    assert ffn_vmem(block_n=8, d=128, f=384) > 0

@@ -1,0 +1,164 @@
+"""L2 model tests: AFD split/fused parity, KV-cache semantics, determinism."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(kv_capacity=32)
+W = M.init_weights(CFG)
+B = 4
+
+
+def fresh_caches(cfg=CFG, b=B):
+    shape = (b, cfg.kv_capacity, cfg.n_heads, cfg.head_dim)
+    return (
+        [jnp.zeros(shape, jnp.float32) for _ in range(cfg.n_layers)],
+        [jnp.zeros(shape, jnp.float32) for _ in range(cfg.n_layers)],
+    )
+
+
+def test_weights_deterministic():
+    w2 = M.init_weights(CFG)
+    np.testing.assert_array_equal(np.asarray(W.embedding), np.asarray(w2.embedding))
+    np.testing.assert_array_equal(np.asarray(W.layers[1].w_down), np.asarray(w2.layers[1].w_down))
+
+
+def test_weights_distinct_across_layers():
+    assert not np.allclose(np.asarray(W.layers[0].wq), np.asarray(W.layers[1].wq))
+
+
+def test_embed_shape_and_lookup():
+    ids = jnp.asarray([0, 1, 2, 255 % CFG.vocab], jnp.int32)[:B]
+    x = M.embed(CFG, W, ids)
+    assert x.shape == (B, CFG.d_model)
+    np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(W.embedding[0]))
+
+
+def test_lm_head_greedy_argmax():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, CFG.d_model), jnp.float32)
+    ids, logits = M.lm_head(CFG, W, x)
+    assert ids.shape == (B,) and logits.shape == (B, CFG.vocab)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_attention_block_appends_kv_at_seq_lens():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (B, CFG.d_model), jnp.float32)
+    kcs, vcs = fresh_caches()
+    lens = jnp.asarray([0, 3, 7, 31], jnp.int32)
+    _, k_new, v_new = M.attention_block(CFG, W.layers[0], x, kcs[0], vcs[0], lens)
+    hidden = ref.rmsnorm_ref(x, W.layers[0].g_attn)
+    exp_k = (hidden @ W.layers[0].wk).reshape(B, CFG.n_heads, CFG.head_dim)
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(k_new[b, int(lens[b])]), np.asarray(exp_k[b]), atol=1e-5
+        )
+        # Other positions untouched (still zero).
+        mask = np.ones(CFG.kv_capacity, bool)
+        mask[int(lens[b])] = False
+        assert np.abs(np.asarray(k_new[b][mask])).max() == 0.0
+        assert np.abs(np.asarray(v_new[b][mask])).max() == 0.0
+
+
+def test_split_pipeline_matches_fused_step():
+    """AFD-split execution (A then F per layer) == monolithic fused_step."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (B, CFG.d_model), jnp.float32)
+    kcs, vcs = fresh_caches()
+    lens = jnp.asarray([0, 1, 2, 3], jnp.int32)
+
+    y_fused, kf, vf = M.fused_step(CFG, W, x, list(kcs), list(vcs), lens)
+
+    y = x
+    ks, vs = list(kcs), list(vcs)
+    for i, w in enumerate(W.layers):
+        y, ks[i], vs[i] = M.attention_block(CFG, w, y, ks[i], vs[i], lens)
+        y = M.ffn_block(CFG, w, y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_fused), atol=1e-5)
+    for i in range(CFG.n_layers):
+        np.testing.assert_allclose(np.asarray(ks[i]), np.asarray(kf[i]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vs[i]), np.asarray(vf[i]), atol=1e-5)
+
+
+def test_multi_step_decode_grows_cache_and_stays_finite():
+    key = jax.random.PRNGKey(3)
+    ids = jax.random.randint(key, (B,), 0, CFG.vocab).astype(jnp.int32)
+    kcs, vcs = fresh_caches()
+    lens = jnp.zeros((B,), jnp.int32)
+    x = M.embed(CFG, W, ids)
+    for step in range(5):
+        x_new, kcs, vcs = M.fused_step(CFG, W, x, kcs, vcs, lens)
+        lens = lens + 1
+        ids, _ = M.lm_head(CFG, W, x_new)
+        x = M.embed(CFG, W, ids)
+        assert np.isfinite(np.asarray(x_new)).all()
+    # After 5 steps, positions 0..4 of the key cache must be populated.
+    assert np.abs(np.asarray(kcs[0][:, :5])).max() > 0
+    assert np.abs(np.asarray(kcs[0][:, 5:])).max() == 0
+
+
+def test_decode_is_deterministic():
+    key = jax.random.PRNGKey(4)
+    ids0 = jax.random.randint(key, (B,), 0, CFG.vocab).astype(jnp.int32)
+
+    def run():
+        kcs, vcs = fresh_caches()
+        lens = jnp.zeros((B,), jnp.int32)
+        x = M.embed(CFG, W, ids0)
+        toks = []
+        for _ in range(4):
+            x, kcs, vcs = M.fused_step(CFG, W, x, kcs, vcs, lens)
+            lens = lens + 1
+            ids, _ = M.lm_head(CFG, W, x)
+            toks.append(np.asarray(ids))
+            x = M.embed(CFG, W, ids)
+        return np.stack(toks)
+
+    np.testing.assert_array_equal(run(), run())
+
+
+def test_ffn_block_is_stateless_and_batch_splittable():
+    """FFN over the aggregated batch == concatenation of per-worker FFN.
+
+    This is the property that makes AFD aggregation sound (paper Sec. 2:
+    'FFN blocks are stateless'). block_n=8 requires each split to be a
+    multiple of 8, matching the artifact shapes.
+    """
+    key = jax.random.PRNGKey(5)
+    n = 32
+    x = jax.random.normal(key, (n, CFG.d_model), jnp.float32)
+    full = M.ffn_block(CFG, W.layers[0], x)
+    parts = [M.ffn_block(CFG, W.layers[0], x[i : i + 8]) for i in range(0, n, 8)]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(jnp.concatenate(parts)), atol=1e-5)
+
+
+def test_attention_io_shapes_manifest():
+    io = M.attention_io_shapes(CFG, batch=8)
+    names = [t["name"] for t in io["inputs"]]
+    assert names == ["x", "k_cache", "v_cache", "seq_lens"]
+    assert io["inputs"][1]["shape"] == [8, CFG.kv_capacity, CFG.n_heads, CFG.head_dim]
+    assert io["outputs"][0]["shape"] == [8, CFG.d_model]
+    io_f = M.ffn_io_shapes(CFG, batch=32)
+    assert io_f["inputs"][0]["shape"] == [32, CFG.d_model]
+
+
+def test_config_head_consistency_assert():
+    with pytest.raises(AssertionError):
+        M.ModelConfig(d_model=100, n_heads=3, head_dim=32)
+
+
+def test_attention_block_kernel_and_jnp_paths_agree():
+    """use_kernel=False (calibration artifacts) must match the Pallas path."""
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (B, CFG.d_model), jnp.float32)
+    kcs, vcs = fresh_caches()
+    lens = jnp.asarray([0, 2, 5, 9], jnp.int32)
+    a = M.attention_block(CFG, W.layers[0], x, kcs[0], vcs[0], lens, use_kernel=True)
+    b = M.attention_block(CFG, W.layers[0], x, kcs[0], vcs[0], lens, use_kernel=False)
+    for ta, tb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ta), np.asarray(tb), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,135 @@
+//! PERF — hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md).
+//!
+//! Measures each layer:
+//!   L3 sim     — simulator event rate (slot-steps/sec) at the paper config
+//!   L3 math    — kappa_r quadrature, Gaussian excess, estimator throughput
+//!   L3 rng     — PCG64 and distribution sampling rates
+//!   runtime    — PJRT decode-step latency (attention / ffn / fused), the
+//!                serving engine's per-step cost (if artifacts are built)
+
+use afd::bench_support::harness::{bench, BenchConfig};
+use afd::config::experiment::ExperimentConfig;
+use afd::sim::engine::{simulate, SimOptions};
+use afd::stats::distributions::{Distribution, LengthDist};
+use afd::stats::order_statistics::{expected_max_std_normal, gaussian_excess};
+use afd::stats::rng::Pcg64;
+use afd::workload::estimator::estimate_stationary;
+use afd::workload::generator::RequestGenerator;
+use afd::workload::trace::Trace;
+
+fn main() {
+    let fast = std::env::var("AFD_FAST").is_ok();
+    let cfg_fast = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: if fast { 5 } else { 20 },
+        min_time_secs: if fast { 0.1 } else { 0.5 },
+    };
+    println!("== L3 simulator ==");
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.requests_per_instance = 300;
+        let r = 8;
+        let res = bench("sim r=8 B=256 (300 req/inst)", cfg_fast, || {
+            simulate(&cfg, r, SimOptions::default()).metrics.completed
+        });
+        // Event rate: completions * mu_D slot-steps per run.
+        let slot_steps = 300.0 * r as f64 * 500.0;
+        println!(
+            "{}  -> {:.1}M slot-steps/sec",
+            res.summary(),
+            res.throughput(slot_steps) / 1e6
+        );
+        // Full paper-scale Fig. 3 sweep cost estimate.
+        let paper_steps = 10_000.0 * (1 + 2 + 4 + 8 + 16 + 24 + 32) as f64 * 500.0;
+        println!(
+            "  est. full Fig.3 sweep: {:.1}s (paper's artifact: ~15 min)",
+            paper_steps / (res.throughput(slot_steps))
+        );
+    }
+
+    println!("\n== L3 analysis math ==");
+    {
+        let res = bench("kappa_r quadrature (cold, r=24)", cfg_fast, || {
+            // Defeat the cache by alternating r values outside it.
+            afd::stats::quadrature::adaptive_simpson(
+                &|z| z * afd::stats::order_statistics::max_normal_pdf(24, z),
+                -9.0,
+                12.0,
+                1e-12,
+            )
+        });
+        println!("{}", res.summary());
+        let res = bench("kappa_r cached lookup", cfg_fast, || expected_max_std_normal(24));
+        println!("{}", res.summary());
+        let res = bench("gaussian_excess(r=8)", cfg_fast, || gaussian_excess(8, 0.7));
+        println!("{}", res.summary());
+
+        let mut gen = RequestGenerator::new(
+            afd::config::workload::WorkloadSpec::paper_section5(),
+            5,
+        );
+        let trace = Trace::new(gen.trace(100_000));
+        let res = bench("estimator theta/nu on 100k-trace", cfg_fast, || {
+            estimate_stationary(&trace).unwrap()
+        });
+        println!("{}  -> {:.1}M req/sec", res.summary(), res.throughput(1e5) / 1e6);
+    }
+
+    println!("\n== L3 rng/distributions ==");
+    {
+        let mut rng = Pcg64::new(1);
+        let res = bench("pcg64 1M u64", cfg_fast, || {
+            let mut acc = 0u64;
+            for _ in 0..1_000_000 {
+                acc ^= rng.next_u64();
+            }
+            acc
+        });
+        println!("{}  -> {:.0}M u64/sec", res.summary(), res.throughput(1e6) / 1e6);
+        let dist = LengthDist::geometric_with_mean(500.0);
+        let res = bench("geometric 1M samples", cfg_fast, || {
+            let mut acc = 0u64;
+            for _ in 0..1_000_000 {
+                acc += dist.sample(&mut rng);
+            }
+            acc
+        });
+        println!("{}  -> {:.0}M samples/sec", res.summary(), res.throughput(1e6) / 1e6);
+    }
+
+    println!("\n== runtime (PJRT) ==");
+    {
+        use afd::runtime::artifact::{default_artifacts_dir, Manifest};
+        use afd::runtime::executor::LocalRuntime;
+        use afd::runtime::model_runner::{afd_worker_step, AttentionWorkerModel, FusedModel};
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").is_file() {
+            println!("artifacts not built; skipping runtime benches");
+            return;
+        }
+        let manifest = Manifest::load(dir).unwrap();
+        let rt = LocalRuntime::new(manifest.clone()).unwrap();
+        let b = manifest.model.batch_per_worker;
+
+        let mut worker = AttentionWorkerModel::new(&rt).unwrap();
+        let ids: Vec<i32> = vec![1; b];
+        let res = bench("afd worker decode step (B=8, 2 layers)", cfg_fast, || {
+            // Reset when nearing capacity.
+            if worker.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
+                worker = AttentionWorkerModel::new(&rt).unwrap();
+            }
+            afd_worker_step(&rt, &mut worker, &ids).unwrap()
+        });
+        println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
+
+        let mut fused = FusedModel::new(&rt).unwrap();
+        let res = bench("fused decode step (coupled baseline)", cfg_fast, || {
+            if fused.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
+                fused = FusedModel::new(&rt).unwrap();
+            }
+            fused.decode_step(&ids).unwrap()
+        });
+        println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
+    }
+}

@@ -1,0 +1,82 @@
+//! TAB1 — paper Table 1 (Appendix A.3): relative synchronization overhead,
+//! Monte Carlo vs. CLT prediction (B = 256, mu_P = 100, mu_D = 500,
+//! 50,000 trials per r).
+//!
+//! Paper values:
+//!   r=2: 2.98% / 3.00%   r=4: 5.52% / 5.47%   r=8: 7.74% / 7.57%
+//!   r=12: 8.88% / 8.66%  r=16: 9.66% / 9.39%  r=24: 11.37% / 11.01%
+//! Acceptance: |MC - CLT| < 0.5% everywhere (the paper's own criterion).
+//!
+//! Additionally validates against *exact* (non-Gaussian) slot-load
+//! sampling, which the paper's CLT argument predicts to agree at B = 256.
+
+use afd::analysis::barrier::{
+    barrier_monte_carlo_exact, overhead_monte_carlo_gaussian, relative_overhead,
+};
+use afd::config::workload::WorkloadSpec;
+use afd::util::csvio::CsvTable;
+use afd::util::pool::par_map;
+use afd::util::tablefmt::{pct, Table};
+use afd::workload::stationary::stationary_geometric;
+
+fn main() {
+    let fast = std::env::var("AFD_FAST").is_ok();
+    let batch = 256;
+    let trials = if fast { 5_000 } else { 50_000 };
+    let load = stationary_geometric(100.0, 9900.0, 500.0);
+    let spec = WorkloadSpec::paper_section5();
+    // NOTE: the paper's final row is labeled r=24 (11.37%/11.01%) but its
+    // CLT value corresponds to kappa_32 = 2.0697, not kappa_24 = 1.9477 —
+    // an apparent row-label typo. We report both r=24 and r=32; r=32
+    // reproduces the paper's 11.01% CLT figure. See EXPERIMENTS.md §TAB1.
+    let rs = [2usize, 4, 8, 12, 16, 24, 32];
+    let paper_mc = [0.0298, 0.0552, 0.0774, 0.0888, 0.0966, f64::NAN, 0.1137];
+    let paper_clt = [0.0300, 0.0547, 0.0757, 0.0866, 0.0939, f64::NAN, 0.1101];
+
+    // Parallel Monte Carlo across r values.
+    let rows: Vec<(usize, f64, f64, f64)> = par_map(&rs, rs.len(), |&r| {
+        let mc = overhead_monte_carlo_gaussian(&load, batch, r, trials, 1234 + r as u64);
+        let clt = relative_overhead(&load, batch, r);
+        let exact_w = barrier_monte_carlo_exact(&spec, batch, r, (trials / 10).max(500), 77 + r as u64);
+        let exact = exact_w / (batch as f64 * load.theta) - 1.0;
+        (r, mc, clt, exact)
+    });
+
+    let mut t = Table::new(&["r", "MC overhead", "CLT prediction", "exact-sampling", "paper MC", "paper CLT"])
+        .with_title("Table 1 — barrier synchronization overhead (B=256)");
+    let mut csv = CsvTable::new(&["r", "mc", "clt", "exact"]);
+    for (i, &(r, mc, clt, exact)) in rows.iter().enumerate() {
+        let fmt_paper = |x: f64| if x.is_finite() { pct(x) } else { "-".to_string() };
+        t.row(&[
+            r.to_string(),
+            pct(mc),
+            pct(clt),
+            pct(exact),
+            fmt_paper(paper_mc[i]),
+            fmt_paper(paper_clt[i]),
+        ]);
+        csv.push_row(&[r.to_string(), format!("{mc:.5}"), format!("{clt:.5}"), format!("{exact:.5}")]);
+        assert!(
+            (mc - clt).abs() < 0.005,
+            "r={r}: MC {mc:.4} vs CLT {clt:.4} exceeds the 0.5% criterion"
+        );
+        if !fast {
+            assert!(
+                (exact - clt).abs() < 0.01,
+                "r={r}: exact-sampling {exact:.4} vs CLT {clt:.4} exceeds 1%"
+            );
+        }
+        if paper_clt[i].is_finite() {
+            assert!(
+                (clt - paper_clt[i]).abs() < 0.001,
+                "r={r}: our CLT {clt:.4} != paper CLT {:.4}",
+                paper_clt[i]
+            );
+        }
+    }
+    t.print();
+    println!("acceptance: |MC - CLT| < 0.5% for all r; CLT column matches the paper.");
+    std::fs::create_dir_all("bench_out").ok();
+    csv.write_path("bench_out/table1.csv").unwrap();
+    println!("wrote bench_out/table1.csv");
+}

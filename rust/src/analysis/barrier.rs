@@ -1,0 +1,196 @@
+//! Barrier-aware Attention load — Theorem 4.3.
+//!
+//! The synchronized Attention phase waits for the slowest of `r` workers,
+//! each summing `B` i.i.d. stationary slot loads. The CLT gives
+//!
+//! ```text
+//! E[W_{B,r}] = B theta + sqrt(B) nu kappa_r + o(sqrt(B))          (Eq. 7)
+//! ```
+//!
+//! with relative synchronization overhead `(nu/theta) kappa_r / sqrt(B)`
+//! — growing like `sqrt(2 log r)` in the fan-in and decaying like
+//! `B^{-1/2}` in the microbatch. This module provides both the CLT
+//! prediction and a Monte Carlo estimator (Table 1's two columns).
+
+use crate::stats::order_statistics::expected_max_std_normal;
+use crate::stats::rng::Pcg64;
+use crate::workload::stationary::StationaryLoad;
+
+/// CLT approximation of the expected barrier load `E[W_{B,r}]` (Eq. 7).
+pub fn expected_barrier_load(load: &StationaryLoad, batch: usize, r: usize) -> f64 {
+    let b = batch as f64;
+    b * load.theta + b.sqrt() * load.nu() * expected_max_std_normal(r)
+}
+
+/// Relative synchronization overhead `(E[W] - B theta) / (B theta)`
+/// = `(nu/theta) kappa_r / sqrt(B)` (§4.2).
+pub fn relative_overhead(load: &StationaryLoad, batch: usize, r: usize) -> f64 {
+    let b = batch as f64;
+    (load.nu() / load.theta) * expected_max_std_normal(r) / b.sqrt()
+}
+
+/// Monte Carlo estimate of the relative overhead using Gaussian worker
+/// loads `T_j ~ N(B theta, B nu^2)` — the experiment of Appendix A.3
+/// (50,000 trials per r in the paper's Table 1).
+pub fn overhead_monte_carlo_gaussian(
+    load: &StationaryLoad,
+    batch: usize,
+    r: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let b = batch as f64;
+    let m = b * load.theta;
+    let s = b.sqrt() * load.nu();
+    let mut rng = Pcg64::new(seed);
+    let mut sum = 0.0;
+    for _ in 0..trials {
+        let mut w = f64::NEG_INFINITY;
+        for _ in 0..r {
+            w = w.max(m + s * rng.next_gaussian());
+        }
+        sum += w;
+    }
+    let mean_w = sum / trials as f64;
+    (mean_w - m) / m
+}
+
+/// Monte Carlo estimate of `E[W_{B,r}]` by *exact* slot-load sampling
+/// (sums of B stationary loads, no Gaussian approximation) — used to
+/// validate the CLT regime-of-validity claims.
+pub fn barrier_monte_carlo_exact(
+    spec: &crate::config::workload::WorkloadSpec,
+    batch: usize,
+    r: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    // Draw stationary slot loads by *exact* length-biased sampling
+    // (Lemma 4.1's stationary law): pick a request (P, D) with
+    // probability proportional to D from a large i.i.d. pool, then a
+    // uniform age in {0, ..., D-1}; the slot load is P + age.
+    let mut rng = Pcg64::new(seed);
+    let mut gen = crate::workload::generator::RequestGenerator::new(spec.clone(), seed ^ 0xABCD);
+    let pool_size = 300_000;
+    let pool = gen.trace(pool_size);
+    // Cumulative D weights for weighted request selection.
+    let mut cum: Vec<u64> = Vec::with_capacity(pool_size);
+    let mut acc = 0u64;
+    for q in &pool {
+        acc += q.decode;
+        cum.push(acc);
+    }
+    let total_d = acc;
+    let mut draw_load = |rng: &mut Pcg64| -> f64 {
+        let x = rng.next_below(total_d);
+        let i = cum.partition_point(|&c| c <= x);
+        let q = &pool[i];
+        (q.prefill + rng.next_below(q.decode)) as f64
+    };
+    let mut sum = 0.0;
+    for _ in 0..trials {
+        let mut w = f64::NEG_INFINITY;
+        for _ in 0..r {
+            let mut t = 0.0;
+            for _ in 0..batch {
+                t += draw_load(&mut rng);
+            }
+            w = w.max(t);
+        }
+        sum += w;
+    }
+    sum / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::workload::stationary::stationary_geometric;
+
+    fn paper_load() -> StationaryLoad {
+        stationary_geometric(100.0, 9900.0, 500.0)
+    }
+
+    #[test]
+    fn table1_clt_predictions() {
+        // Paper Table 1, CLT column (B=256, mu_P=100, mu_D=500):
+        // r=2: 3.00%, r=4: 5.47%, r=8: 7.57%, r=12: 8.66%, r=16: 9.39%.
+        //
+        // The paper's final row (labeled r=24: 11.01%) corresponds to
+        // kappa = 2.0718 — which is kappa_32, not kappa_24 = 1.9477
+        // (verified against scipy): the row appears to be mislabeled.
+        // The exact r=24 overhead is 10.35%; r=32 reproduces 11.00%.
+        // See EXPERIMENTS.md §TAB1.
+        let load = paper_load();
+        let cases = [
+            (2usize, 0.0300),
+            (4, 0.0547),
+            (8, 0.0757),
+            (12, 0.0866),
+            (16, 0.0939),
+            (24, 0.1035),
+            (32, 0.1100),
+        ];
+        for (r, want) in cases {
+            let got = relative_overhead(&load, 256, r);
+            assert!(
+                (got - want).abs() < 0.0006,
+                "r={r}: got {:.4}%, expected {:.2}%",
+                100.0 * got,
+                100.0 * want
+            );
+        }
+    }
+
+    #[test]
+    fn barrier_load_r1_is_mean_field() {
+        let load = paper_load();
+        let w = expected_barrier_load(&load, 256, 1);
+        assert!((w - 256.0 * 599.0).abs() < 1e-9);
+        assert_eq!(relative_overhead(&load, 256, 1), 0.0);
+    }
+
+    #[test]
+    fn overhead_decays_with_batch() {
+        let load = paper_load();
+        let o256 = relative_overhead(&load, 256, 8);
+        let o1024 = relative_overhead(&load, 1024, 8);
+        assert!((o1024 / o256 - 0.5).abs() < 1e-9, "sqrt(B) scaling");
+    }
+
+    #[test]
+    fn monte_carlo_gaussian_matches_clt() {
+        // The paper's Table 1 MC column matches CLT within 0.5%.
+        let load = paper_load();
+        for r in [2usize, 8, 24] {
+            let mc = overhead_monte_carlo_gaussian(&load, 256, r, 50_000, 7);
+            let clt = relative_overhead(&load, 256, r);
+            assert!(
+                (mc - clt).abs() < 0.005,
+                "r={r}: MC {:.4} vs CLT {:.4}",
+                mc,
+                clt
+            );
+        }
+    }
+
+    #[test]
+    fn exact_sampling_close_to_clt_at_large_batch() {
+        let spec = WorkloadSpec::paper_section5();
+        let load = paper_load();
+        let r = 4;
+        let exact = barrier_monte_carlo_exact(&spec, 256, r, 2_000, 3);
+        let clt = expected_barrier_load(&load, 256, r);
+        assert!(
+            (exact / clt - 1.0).abs() < 0.02,
+            "exact {exact} vs CLT {clt}"
+        );
+    }
+
+    #[test]
+    fn zero_variance_load_has_no_barrier_penalty() {
+        let load = StationaryLoad { theta: 100.0, nu_sq: 0.0 };
+        assert_eq!(expected_barrier_load(&load, 64, 16), 6400.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Cycle-time approximations — paper §4.3.
+//!
+//! Mean-field (Eq. 8):
+//! ```text
+//! tau_mf(B; r) = max{ mu_A, alpha_C rB + beta_C, alpha_F rB + beta_F }
+//! mu_A = alpha_A B theta + beta_A
+//! ```
+//!
+//! Gaussian barrier-aware (Eq. 9):
+//! ```text
+//! tau_G(B; r) = G_{B,r} + sigma_A * E[(M_r - z_{B,r})_+]
+//! sigma_A = alpha_A sqrt(B) nu,   z_{B,r} = (G_{B,r} - mu_A) / sigma_A
+//! ```
+//! where `G_{B,r} = max{t_C(rB), t_F(rB)}` and `M_r` is the max of `r`
+//! standard normals. `tau_bar = tau_G + o(sqrt(B))` (Appendix A.4).
+
+use crate::config::hardware::HardwareParams;
+use crate::stats::order_statistics::gaussian_excess;
+use crate::workload::stationary::StationaryLoad;
+
+/// All derived quantities for one (hardware, workload, B) operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPoint {
+    pub hw: HardwareParams,
+    pub load: StationaryLoad,
+    /// Microbatch per Attention worker (paper's B).
+    pub batch: usize,
+}
+
+impl OperatingPoint {
+    pub fn new(hw: HardwareParams, load: StationaryLoad, batch: usize) -> Self {
+        Self { hw, load, batch }
+    }
+
+    /// Mean Attention latency `mu_A = alpha_A B theta + beta_A`.
+    pub fn mu_a(&self) -> f64 {
+        self.hw.alpha_a * self.batch as f64 * self.load.theta + self.hw.beta_a
+    }
+
+    /// Attention latency dispersion `sigma_A = alpha_A sqrt(B) nu`.
+    pub fn sigma_a(&self) -> f64 {
+        self.hw.alpha_a * (self.batch as f64).sqrt() * self.load.nu()
+    }
+
+    /// `G_{B,r} = max{t_C(rB), t_F(rB)}` — the deterministic non-Attention
+    /// floor of the cycle.
+    pub fn g(&self, r: f64) -> f64 {
+        let agg = r * self.batch as f64;
+        self.hw.t_comm(agg).max(self.hw.t_ffn(agg))
+    }
+
+    /// Mean-field cycle time (Eq. 8). Accepts continuous `r`.
+    pub fn tau_mean_field(&self, r: f64) -> f64 {
+        self.mu_a().max(self.g(r))
+    }
+
+    /// Gaussian barrier-aware cycle time (Eq. 9). Integer `r` (the
+    /// order statistic is over r workers).
+    pub fn tau_gaussian(&self, r: usize) -> f64 {
+        let g = self.g(r as f64);
+        let sigma = self.sigma_a();
+        if sigma <= 0.0 {
+            // Deterministic workers: barrier is exactly the mean field.
+            return self.mu_a().max(g);
+        }
+        let z = (g - self.mu_a()) / sigma;
+        g + sigma * gaussian_excess(r, z)
+    }
+
+    /// Per-instance throughput under the mean-field cycle (Eq. 1 + Eq. 8).
+    pub fn throughput_mean_field(&self, r: f64) -> f64 {
+        r * self.batch as f64 / ((r + 1.0) * self.tau_mean_field(r))
+    }
+
+    /// Per-instance throughput under the Gaussian cycle (Eq. 11).
+    pub fn throughput_gaussian(&self, r: usize) -> f64 {
+        let rf = r as f64;
+        rf * self.batch as f64 / ((rf + 1.0) * self.tau_gaussian(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::stationary::stationary_geometric;
+
+    fn paper_op() -> OperatingPoint {
+        OperatingPoint::new(
+            HardwareParams::paper_table3(),
+            stationary_geometric(100.0, 9900.0, 500.0),
+            256,
+        )
+    }
+
+    #[test]
+    fn mu_a_paper_value() {
+        // alpha_A * 256 * 599 + 50 = 0.00165 * 153344 + 50 = 303.0176.
+        let op = paper_op();
+        assert!((op.mu_a() - 303.0176).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_a_paper_value() {
+        // alpha_A * 16 * sqrt(259400) = 0.00165*16*509.31... ~ 13.446.
+        let op = paper_op();
+        let want = 0.00165 * 16.0 * 259_400.0f64.sqrt();
+        assert!((op.sigma_a() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tau_mean_field_regimes() {
+        let op = paper_op();
+        // Small r: Attention binds (mu_A > G).
+        assert!((op.tau_mean_field(1.0) - op.mu_a()).abs() < 1e-12);
+        // Large r: FFN binds.
+        let tau32 = op.tau_mean_field(32.0);
+        assert!((tau32 - op.hw.t_ffn(32.0 * 256.0)).abs() < 1e-12);
+        assert!(tau32 > op.mu_a());
+    }
+
+    #[test]
+    fn gaussian_cycle_exceeds_mean_field() {
+        let op = paper_op();
+        for r in [1usize, 2, 8, 24] {
+            let mf = op.tau_mean_field(r as f64);
+            let g = op.tau_gaussian(r);
+            assert!(g >= mf - 1e-9, "r={r}: tau_G {g} < tau_mf {mf}");
+        }
+        // The gap grows with r in the Attention-bound region.
+        let gap2 = op.tau_gaussian(2) - op.tau_mean_field(2.0);
+        let gap8 = op.tau_gaussian(8) - op.tau_mean_field(8.0);
+        assert!(gap8 > gap2);
+    }
+
+    #[test]
+    fn gaussian_cycle_approaches_g_when_ffn_dominates() {
+        let op = paper_op();
+        // At r = 32 the FFN term is far above mu_A; the excess ~ 0.
+        let tau = op.tau_gaussian(32);
+        let g = op.g(32.0);
+        assert!((tau - g) / g < 0.01, "tau {tau} vs g {g}");
+    }
+
+    #[test]
+    fn deterministic_load_reduces_to_mean_field() {
+        let mut op = paper_op();
+        op.load = crate::workload::stationary::StationaryLoad { theta: 599.0, nu_sq: 0.0 };
+        for r in [1usize, 8, 32] {
+            assert_eq!(op.tau_gaussian(r), op.tau_mean_field(r as f64));
+        }
+    }
+
+    #[test]
+    fn throughput_shapes() {
+        let op = paper_op();
+        // Throughput rises toward r* ~ 9.3 then falls.
+        let t4 = op.throughput_mean_field(4.0);
+        let t9 = op.throughput_mean_field(9.3);
+        let t32 = op.throughput_mean_field(32.0);
+        assert!(t9 > t4 && t9 > t32, "t4={t4} t9={t9} t32={t32}");
+        // Gaussian throughput strictly below mean-field (barrier cost).
+        assert!(op.throughput_gaussian(8) < op.throughput_mean_field(8.0));
+    }
+}

@@ -1,0 +1,219 @@
+//! Mean-field optimal A/F ratio — Theorem 4.4.
+//!
+//! Under `tau_mf` the throughput `Thr(r) = rB / ((r+1) tau_mf(B;r))` is
+//! piecewise-smooth in `r`; the optimum is one of the closed-form
+//! candidates of Eq. (10):
+//!
+//! 1. the Attention-region boundary
+//!    `min{ (mu_A - beta_C)/(alpha_C B), (mu_A - beta_F)/(alpha_F B) }`
+//!    (throughput increases with r while Attention binds);
+//! 2. the interior stationary points `sqrt(beta_C / (alpha_C B))` and
+//!    `sqrt(beta_F / (alpha_F B))` of the comm-/FFN-bound branches;
+//! 3. the comm/FFN crossover `(beta_C - beta_F) / (B (alpha_F - alpha_C))`.
+
+use crate::analysis::cycle_time::OperatingPoint;
+
+/// One candidate ratio with its provenance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub r: f64,
+    pub kind: CandidateKind,
+    pub throughput: f64,
+}
+
+/// Which branch of Theorem 4.4 produced a candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateKind {
+    /// Attention-region boundary (balance condition `mu_A = t_C or t_F`).
+    AttentionBoundary,
+    /// Stationary point of the communication-bound branch.
+    CommStationary,
+    /// Stationary point of the FFN-bound branch.
+    FfnStationary,
+    /// Crossover of the comm and FFN latencies.
+    CommFfnCrossover,
+}
+
+/// Result of the mean-field rule.
+#[derive(Debug, Clone)]
+pub struct MeanFieldOptimum {
+    /// The optimal (continuous) ratio `r*_mf`.
+    pub r_star: f64,
+    /// Thr_mf at the optimum (tokens per cycle-unit per instance).
+    pub throughput: f64,
+    /// All evaluated candidates, sorted by descending throughput.
+    pub candidates: Vec<Candidate>,
+}
+
+/// Evaluate Theorem 4.4's candidate set and return the optimum.
+pub fn mean_field_optimum(op: &OperatingPoint) -> MeanFieldOptimum {
+    let hw = &op.hw;
+    let b = op.batch as f64;
+    let mu_a = op.mu_a();
+
+    let mut raw: Vec<(f64, CandidateKind)> = Vec::new();
+
+    // (1) End of the Attention-bound region.
+    let boundary_c = (mu_a - hw.beta_c) / (hw.alpha_c * b);
+    let boundary_f = (mu_a - hw.beta_f) / (hw.alpha_f * b);
+    let boundary = boundary_c.min(boundary_f);
+    raw.push((boundary, CandidateKind::AttentionBoundary));
+
+    // (2) Interior stationary points.
+    raw.push(((hw.beta_c / (hw.alpha_c * b)).sqrt(), CandidateKind::CommStationary));
+    raw.push(((hw.beta_f / (hw.alpha_f * b)).sqrt(), CandidateKind::FfnStationary));
+
+    // (3) Comm/FFN crossover (only meaningful when slopes differ).
+    if (hw.alpha_f - hw.alpha_c).abs() > 0.0 {
+        raw.push((
+            (hw.beta_c - hw.beta_f) / (b * (hw.alpha_f - hw.alpha_c)),
+            CandidateKind::CommFfnCrossover,
+        ));
+    }
+
+    let mut candidates: Vec<Candidate> = raw
+        .into_iter()
+        .filter(|(r, _)| r.is_finite() && *r > 0.0)
+        .map(|(r, kind)| Candidate { r, kind, throughput: op.throughput_mean_field(r) })
+        .collect();
+    // Guard: if every candidate was filtered (degenerate parameters),
+    // fall back to r = 1.
+    if candidates.is_empty() {
+        candidates.push(Candidate {
+            r: 1.0,
+            kind: CandidateKind::AttentionBoundary,
+            throughput: op.throughput_mean_field(1.0),
+        });
+    }
+    candidates.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    let best = candidates[0];
+    MeanFieldOptimum { r_star: best.r, throughput: best.throughput, candidates }
+}
+
+/// Dense continuous scan of Thr_mf over `[lo, hi]` — a brute-force
+/// verifier for Theorem 4.4 used in tests and the candidate-audit bench.
+pub fn scan_optimum(op: &OperatingPoint, lo: f64, hi: f64, steps: usize) -> (f64, f64) {
+    assert!(hi > lo && steps >= 2);
+    let mut best = (lo, op.throughput_mean_field(lo));
+    for i in 0..=steps {
+        let r = lo + (hi - lo) * i as f64 / steps as f64;
+        let t = op.throughput_mean_field(r);
+        if t > best.1 {
+            best = (r, t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::HardwareParams;
+    use crate::workload::stationary::{stationary_geometric, StationaryLoad};
+
+    fn paper_op() -> OperatingPoint {
+        OperatingPoint::new(
+            HardwareParams::paper_table3(),
+            stationary_geometric(100.0, 9900.0, 500.0),
+            256,
+        )
+    }
+
+    #[test]
+    fn paper_r_star_is_9_point_3() {
+        // Paper §5.2: "the theoretical optimal A/F ratio is r*_mf ≈ 9.3".
+        let opt = mean_field_optimum(&paper_op());
+        assert!(
+            (opt.r_star - 9.3).abs() < 0.35,
+            "r* = {} (want ~9.3)",
+            opt.r_star
+        );
+        // The binding candidate is the Attention/FFN balance point.
+        assert_eq!(opt.candidates[0].kind, CandidateKind::AttentionBoundary);
+    }
+
+    #[test]
+    fn closed_form_matches_brute_force_scan() {
+        let op = paper_op();
+        let opt = mean_field_optimum(&op);
+        let (r_scan, t_scan) = scan_optimum(&op, 0.1, 64.0, 200_000);
+        assert!(
+            (opt.r_star - r_scan).abs() < 0.01,
+            "closed form {} vs scan {}",
+            opt.r_star,
+            r_scan
+        );
+        assert!((opt.throughput - t_scan).abs() / t_scan < 1e-6);
+    }
+
+    #[test]
+    fn closed_form_matches_scan_across_random_parameters() {
+        // Property check over random (hardware, workload, B).
+        use crate::stats::rng::Pcg64;
+        let mut rng = Pcg64::new(31);
+        for case in 0..60 {
+            let hw = HardwareParams {
+                alpha_a: 1e-4 + rng.next_f64() * 1e-2,
+                beta_a: rng.next_f64() * 200.0,
+                alpha_f: 1e-3 + rng.next_f64() * 0.3,
+                beta_f: rng.next_f64() * 300.0,
+                alpha_c: 1e-4 + rng.next_f64() * 0.1,
+                beta_c: rng.next_f64() * 100.0,
+            };
+            let load = StationaryLoad {
+                theta: 10.0 + rng.next_f64() * 1000.0,
+                nu_sq: rng.next_f64() * 1e5,
+            };
+            let batch = 16 + (rng.next_below(512) as usize);
+            let op = OperatingPoint::new(hw, load, batch);
+            let opt = mean_field_optimum(&op);
+            let (r_scan, t_scan) = scan_optimum(&op, 1e-3, 256.0, 80_000);
+            // The scan's optimum may sit outside the candidate list when
+            // r* falls outside [1e-3, 256]; compare throughputs.
+            assert!(
+                opt.throughput >= t_scan * (1.0 - 1e-4),
+                "case {case}: closed-form Thr {} < scan Thr {} (r* {} vs {})",
+                opt.throughput,
+                t_scan,
+                opt.r_star,
+                r_scan
+            );
+        }
+    }
+
+    #[test]
+    fn candidates_sorted_descending() {
+        let opt = mean_field_optimum(&paper_op());
+        for w in opt.candidates.windows(2) {
+            assert!(w[0].throughput >= w[1].throughput);
+        }
+    }
+
+    #[test]
+    fn larger_theta_needs_more_attention_workers() {
+        // Fig. 4b's observed trend: r* grows with total context length.
+        let hw = HardwareParams::paper_table3();
+        let short = OperatingPoint::new(hw, stationary_geometric(50.0, 2450.0, 200.0), 256);
+        let long = OperatingPoint::new(hw, stationary_geometric(400.0, 9900.0, 1000.0), 256);
+        let r_short = mean_field_optimum(&short).r_star;
+        let r_long = mean_field_optimum(&long).r_star;
+        assert!(r_long > r_short, "r_long {r_long} <= r_short {r_short}");
+    }
+
+    #[test]
+    fn batch_ablation_ordering() {
+        // Fig. 4a: r* = {7.08, 9.34, 10.31} for B = {128, 256, 512}.
+        let hw = HardwareParams::paper_table3();
+        let load = stationary_geometric(100.0, 9900.0, 500.0);
+        let r128 = mean_field_optimum(&OperatingPoint::new(hw, load, 128)).r_star;
+        let r256 = mean_field_optimum(&OperatingPoint::new(hw, load, 256)).r_star;
+        let r512 = mean_field_optimum(&OperatingPoint::new(hw, load, 512)).r_star;
+        // Tolerances ~5%: the paper's reported values carry its own
+        // rounding of theta (see EXPERIMENTS.md); its acceptance criterion
+        // is 10%.
+        assert!((r128 - 7.08).abs() < 0.4, "r128 {r128}");
+        assert!((r256 - 9.34).abs() < 0.45, "r256 {r256}");
+        assert!((r512 - 10.31).abs() < 0.55, "r512 {r512}");
+        assert!(r128 < r256 && r256 < r512);
+    }
+}

@@ -1,0 +1,27 @@
+//! The paper's analytical contribution.
+//!
+//! * [`barrier`] — Theorem 4.3: barrier-aware Attention load and the
+//!   relative synchronization overhead (Table 1).
+//! * [`cycle_time`] — §4.3: mean-field (Eq. 8) and Gaussian (Eq. 9)
+//!   cycle-time approximations and the per-instance throughput (Eq. 1).
+//! * [`meanfield`] — Theorem 4.4: the closed-form candidate set (Eq. 10)
+//!   and `r*_mf`.
+//! * [`provisioning`] — the practical recipe: trace -> estimator ->
+//!   `r*_mf` -> barrier-aware `r*_G` (Eq. 12).
+//! * [`regimes`] — Attention/Comm/FFN bottleneck classification and
+//!   regime boundaries.
+
+pub mod barrier;
+pub mod cycle_time;
+pub mod meanfield;
+pub mod provisioning;
+pub mod regimes;
+
+pub use barrier::{expected_barrier_load, relative_overhead};
+pub use cycle_time::OperatingPoint;
+pub use meanfield::{mean_field_optimum, Candidate, CandidateKind, MeanFieldOptimum};
+pub use provisioning::{
+    barrier_aware_optimum, recommend_from_load, recommend_from_trace, BarrierAwareOptimum,
+    Recommendation,
+};
+pub use regimes::{classify_regime, regime_boundaries, Regime};

@@ -1,0 +1,193 @@
+//! Provisioning rules — the paper's practical recipe (§4.4).
+//!
+//! 1. Estimate `(theta_hat, nu_hat^2)` from a request trace (Appendix A.6).
+//! 2. Compute the closed-form mean-field `r*_mf` (Theorem 4.4).
+//! 3. Refine with the barrier-aware discrete rule `r*_G` (Eq. 12) when
+//!    cross-worker imbalance is non-negligible.
+
+use crate::analysis::cycle_time::OperatingPoint;
+use crate::analysis::meanfield::{mean_field_optimum, MeanFieldOptimum};
+use crate::analysis::regimes::{classify_regime, Regime};
+use crate::config::hardware::HardwareParams;
+use crate::error::{AfdError, Result};
+use crate::workload::stationary::StationaryLoad;
+use crate::workload::trace::Trace;
+
+/// Barrier-aware discrete optimum (Eq. 12).
+#[derive(Debug, Clone)]
+pub struct BarrierAwareOptimum {
+    /// The best integer fan-in in the feasible set.
+    pub r_star: usize,
+    /// Thr_G at the optimum.
+    pub throughput: f64,
+    /// Thr_G over the whole feasible set (for diagnostics/plots).
+    pub profile: Vec<(usize, f64)>,
+}
+
+/// Maximize `Thr_G(B; r)` over a feasible set of integer fan-ins.
+pub fn barrier_aware_optimum(
+    op: &OperatingPoint,
+    feasible: &[usize],
+) -> Result<BarrierAwareOptimum> {
+    if feasible.is_empty() || feasible.contains(&0) {
+        return Err(AfdError::Analysis(
+            "feasible fan-in set must be non-empty with positive entries".into(),
+        ));
+    }
+    let profile: Vec<(usize, f64)> =
+        feasible.iter().map(|&r| (r, op.throughput_gaussian(r))).collect();
+    let &(r_star, throughput) = profile
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    Ok(BarrierAwareOptimum { r_star, throughput, profile })
+}
+
+/// Complete provisioning recommendation.
+#[derive(Debug, Clone)]
+pub struct Recommendation {
+    pub load: StationaryLoad,
+    pub mean_field: MeanFieldOptimum,
+    pub barrier_aware: BarrierAwareOptimum,
+    /// Operating regime at the recommended integer ratio.
+    pub regime: Regime,
+    /// Relative synchronization overhead at the recommendation (§4.2).
+    pub sync_overhead: f64,
+}
+
+/// The paper's practical recipe, from a trace.
+///
+/// `feasible`: candidate integer fan-ins (e.g. divisor-constrained by the
+/// cluster). If empty, `1..=ceil(2 r*_mf)` is used.
+pub fn recommend_from_trace(
+    hw: &HardwareParams,
+    trace: &Trace,
+    batch: usize,
+    feasible: &[usize],
+) -> Result<Recommendation> {
+    let load = crate::workload::estimator::estimate_stationary(trace)?;
+    recommend_from_load(hw, load, batch, feasible)
+}
+
+/// The practical recipe, from known stationary moments.
+pub fn recommend_from_load(
+    hw: &HardwareParams,
+    load: StationaryLoad,
+    batch: usize,
+    feasible: &[usize],
+) -> Result<Recommendation> {
+    hw.validate()?;
+    load.validate()?;
+    if batch == 0 {
+        return Err(AfdError::Analysis("batch must be >= 1".into()));
+    }
+    let op = OperatingPoint::new(*hw, load, batch);
+    let mean_field = mean_field_optimum(&op);
+    let default_set: Vec<usize> = if feasible.is_empty() {
+        let hi = (2.0 * mean_field.r_star).ceil().max(2.0) as usize;
+        (1..=hi).collect()
+    } else {
+        feasible.to_vec()
+    };
+    let barrier_aware = barrier_aware_optimum(&op, &default_set)?;
+    let regime = classify_regime(&op, barrier_aware.r_star as f64);
+    let sync_overhead =
+        crate::analysis::barrier::relative_overhead(&load, batch, barrier_aware.r_star);
+    Ok(Recommendation { load, mean_field, barrier_aware, regime, sync_overhead })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::workload::generator::RequestGenerator;
+    use crate::workload::stationary::stationary_geometric;
+
+    fn paper_load() -> StationaryLoad {
+        stationary_geometric(100.0, 9900.0, 500.0)
+    }
+
+    #[test]
+    fn barrier_aware_agrees_with_mean_field_at_paper_config() {
+        // Paper §4.2: "after incorporating this correction ... the
+        // simulation-optimal r* remains at 8" over the Fig. 3 sweep grid,
+        // i.e. the same grid point wins under both rules.
+        let hw = HardwareParams::paper_table3();
+        let op = OperatingPoint::new(hw, paper_load(), 256);
+        let grid = vec![1, 2, 4, 8, 16, 24, 32];
+        let ba = barrier_aware_optimum(&op, &grid).unwrap();
+        assert_eq!(ba.r_star, 8);
+        // Mean-field restricted to the same grid also picks 8.
+        let mf_on_grid = grid
+            .iter()
+            .map(|&r| (r, op.throughput_mean_field(r as f64)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(mf_on_grid.0, 8);
+    }
+
+    #[test]
+    fn barrier_aware_over_dense_grid_is_at_most_mean_field() {
+        let hw = HardwareParams::paper_table3();
+        let op = OperatingPoint::new(hw, paper_load(), 256);
+        let dense: Vec<usize> = (1..=20).collect();
+        let ba = barrier_aware_optimum(&op, &dense).unwrap();
+        // Barrier penalizes large r; r*_G <= ceil(r*_mf) + 1.
+        let mf = mean_field_optimum(&op);
+        assert!(
+            (ba.r_star as f64) <= mf.r_star.ceil() + 1.0,
+            "r_G {} vs r_mf {}",
+            ba.r_star,
+            mf.r_star
+        );
+        assert!(ba.throughput <= mf.throughput + 1e-9);
+    }
+
+    #[test]
+    fn recipe_from_trace_matches_closed_form() {
+        let hw = HardwareParams::paper_table3();
+        let mut gen = RequestGenerator::new(WorkloadSpec::paper_section5(), 11);
+        let trace = Trace::new(gen.trace(50_000));
+        let rec = recommend_from_trace(&hw, &trace, 256, &[]).unwrap();
+        let exact = recommend_from_load(&hw, paper_load(), 256, &[]).unwrap();
+        assert!(
+            (rec.mean_field.r_star - exact.mean_field.r_star).abs()
+                < 0.1 * exact.mean_field.r_star,
+            "trace r* {} vs exact {}",
+            rec.mean_field.r_star,
+            exact.mean_field.r_star
+        );
+        assert!(rec.sync_overhead > 0.0 && rec.sync_overhead < 0.2);
+    }
+
+    #[test]
+    fn feasible_set_respected() {
+        let hw = HardwareParams::paper_table3();
+        let rec = recommend_from_load(&hw, paper_load(), 256, &[2, 4]).unwrap();
+        assert!(rec.barrier_aware.r_star == 2 || rec.barrier_aware.r_star == 4);
+        assert_eq!(rec.barrier_aware.profile.len(), 2);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        let hw = HardwareParams::paper_table3();
+        assert!(recommend_from_load(&hw, paper_load(), 0, &[]).is_err());
+        let op = OperatingPoint::new(hw, paper_load(), 256);
+        assert!(barrier_aware_optimum(&op, &[]).is_err());
+        assert!(barrier_aware_optimum(&op, &[0, 1]).is_err());
+        let bad = StationaryLoad { theta: -1.0, nu_sq: 1.0 };
+        assert!(recommend_from_load(&hw, bad, 256, &[]).is_err());
+    }
+
+    #[test]
+    fn profile_is_unimodal_ish_around_optimum() {
+        let hw = HardwareParams::paper_table3();
+        let op = OperatingPoint::new(hw, paper_load(), 256);
+        let grid: Vec<usize> = (1..=32).collect();
+        let ba = barrier_aware_optimum(&op, &grid).unwrap();
+        // Throughput at the ends is strictly below the peak.
+        let peak = ba.throughput;
+        assert!(ba.profile[0].1 < peak);
+        assert!(ba.profile.last().unwrap().1 < peak);
+    }
+}

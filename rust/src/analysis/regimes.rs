@@ -1,0 +1,147 @@
+//! Operating-regime classification (paper §4.4's three-way decomposition:
+//! Attention-, communication-, and FFN-bottleneck).
+
+use crate::analysis::cycle_time::OperatingPoint;
+
+/// Which phase binds the mean-field cycle at a given ratio.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// `mu_A` is the max: Attention-bound (FFN starved; small r).
+    AttentionBound,
+    /// `t_C(rB)` is the max: communication-bound.
+    CommBound,
+    /// `t_F(rB)` is the max: FFN-bound (Attention blocks; large r).
+    FfnBound,
+}
+
+impl Regime {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::AttentionBound => "attention-bound",
+            Regime::CommBound => "comm-bound",
+            Regime::FfnBound => "ffn-bound",
+        }
+    }
+}
+
+/// Classify the binding phase at ratio `r` (ties break toward the later
+/// pipeline stage, matching how bubbles manifest).
+pub fn classify_regime(op: &OperatingPoint, r: f64) -> Regime {
+    let agg = r * op.batch as f64;
+    let a = op.mu_a();
+    let c = op.hw.t_comm(agg);
+    let f = op.hw.t_ffn(agg);
+    if f >= a && f >= c {
+        Regime::FfnBound
+    } else if c >= a {
+        Regime::CommBound
+    } else {
+        Regime::AttentionBound
+    }
+}
+
+/// The ratio interval over which each regime is active (analytic
+/// boundaries; used by the regime-map bench and doc examples).
+pub fn regime_boundaries(op: &OperatingPoint) -> Vec<(Regime, f64, f64)> {
+    // Scan analytically: boundaries occur where mu_A = t_C, mu_A = t_F,
+    // t_C = t_F. Collect breakpoints then classify midpoints.
+    let b = op.batch as f64;
+    let mu_a = op.mu_a();
+    let hw = &op.hw;
+    let mut points = vec![0.0f64];
+    for bp in [
+        (mu_a - hw.beta_c) / (hw.alpha_c * b),
+        (mu_a - hw.beta_f) / (hw.alpha_f * b),
+        (hw.beta_c - hw.beta_f) / (b * (hw.alpha_f - hw.alpha_c)),
+    ] {
+        if bp.is_finite() && bp > 0.0 {
+            points.push(bp);
+        }
+    }
+    points.push(f64::INFINITY);
+    points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points.dedup();
+    let mut out = Vec::new();
+    for w in points.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mid = if hi.is_infinite() { lo + 1.0 } else { 0.5 * (lo + hi) };
+        if mid <= 0.0 {
+            continue;
+        }
+        let regime = classify_regime(op, mid);
+        // Merge adjacent intervals with the same regime.
+        match out.last_mut() {
+            Some((prev, _, prev_hi)) if *prev == regime => *prev_hi = hi,
+            _ => out.push((regime, lo, hi)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::HardwareParams;
+    use crate::workload::stationary::stationary_geometric;
+
+    fn paper_op() -> OperatingPoint {
+        OperatingPoint::new(
+            HardwareParams::paper_table3(),
+            stationary_geometric(100.0, 9900.0, 500.0),
+            256,
+        )
+    }
+
+    #[test]
+    fn paper_regimes_small_vs_large_r() {
+        let op = paper_op();
+        assert_eq!(classify_regime(&op, 1.0), Regime::AttentionBound);
+        assert_eq!(classify_regime(&op, 32.0), Regime::FfnBound);
+    }
+
+    #[test]
+    fn paper_has_no_comm_regime() {
+        // With Table 3 coefficients, t_F > t_C for all rB > 0 (the paper's
+        // "communication can be effectively hidden" condition).
+        let op = paper_op();
+        let bounds = regime_boundaries(&op);
+        assert!(bounds.iter().all(|(r, _, _)| *r != Regime::CommBound), "{bounds:?}");
+        // Exactly two regimes: attention then ffn.
+        assert_eq!(bounds.len(), 2);
+        assert_eq!(bounds[0].0, Regime::AttentionBound);
+        assert_eq!(bounds[1].0, Regime::FfnBound);
+        // Boundary near r*_mf ~ 9.55 (the balance point).
+        assert!((bounds[0].2 - 9.55).abs() < 0.1, "boundary {}", bounds[0].2);
+    }
+
+    #[test]
+    fn comm_heavy_hardware_shows_comm_regime() {
+        let hw = HardwareParams {
+            alpha_c: 0.2,  // expensive interconnect
+            beta_c: 50.0,
+            ..HardwareParams::paper_table3()
+        };
+        let op = OperatingPoint::new(hw, stationary_geometric(100.0, 9900.0, 500.0), 256);
+        assert_eq!(classify_regime(&op, 32.0), Regime::CommBound);
+        let bounds = regime_boundaries(&op);
+        assert!(bounds.iter().any(|(r, _, _)| *r == Regime::CommBound));
+    }
+
+    #[test]
+    fn boundaries_partition_positive_axis() {
+        let op = paper_op();
+        let bounds = regime_boundaries(&op);
+        assert_eq!(bounds[0].1, 0.0);
+        assert!(bounds.last().unwrap().2.is_infinite());
+        for w in bounds.windows(2) {
+            assert_eq!(w[0].2, w[1].1, "contiguous intervals");
+        }
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Regime::AttentionBound.name(), "attention-bound");
+        assert_eq!(Regime::CommBound.name(), "comm-bound");
+        assert_eq!(Regime::FfnBound.name(), "ffn-bound");
+    }
+}

@@ -1,0 +1,182 @@
+//! Statistical timing harness (criterion is unavailable offline).
+//!
+//! Warms up, runs timed iterations until both a minimum iteration count
+//! and a minimum wall-clock budget are met, and reports mean/p50/p99 with
+//! outlier-robust statistics. Benches are plain binaries with
+//! `harness = false`; `cargo bench` runs them directly.
+
+use std::time::Instant;
+
+use crate::stats::moments::{percentile, RunningMoments};
+use crate::util::timer::fmt_duration;
+
+/// Configuration for one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Minimum total measured time before stopping (seconds).
+    pub min_time_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, min_iters: 10, max_iters: 10_000, min_time_secs: 1.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for heavyweight end-to-end benches.
+    pub fn heavyweight() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 50, min_time_secs: 0.5 }
+    }
+}
+
+/// Result of one measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    /// Ops-per-second given `ops` work items per iteration.
+    pub fn throughput(&self, ops: f64) -> f64 {
+        ops / self.mean_secs
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10} /iter  (p50 {:>10}, p99 {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean_secs),
+            fmt_duration(self.p50_secs),
+            fmt_duration(self.p99_secs),
+            self.iters
+        )
+    }
+}
+
+/// Measure a closure. The closure's return value is folded into a black
+/// box to prevent dead-code elimination.
+pub fn bench<R>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters * 2);
+    let mut moments = RunningMoments::new();
+    let started = Instant::now();
+    while (samples.len() < cfg.min_iters
+        || started.elapsed().as_secs_f64() < cfg.min_time_secs)
+        && samples.len() < cfg.max_iters
+    {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        let dt = t.elapsed().as_secs_f64();
+        samples.push(dt);
+        moments.push(dt);
+    }
+    let p50 = percentile(&mut samples.clone(), 50.0);
+    let p99 = percentile(&mut samples.clone(), 99.0);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: moments.mean(),
+        std_secs: moments.std_dev(),
+        p50_secs: p50,
+        p99_secs: p99,
+        min_secs: moments.min(),
+        max_secs: moments.max(),
+    }
+}
+
+/// Bench with a per-iteration setup stage excluded from timing.
+pub fn bench_with_setup<S, R>(
+    name: &str,
+    cfg: BenchConfig,
+    mut setup: impl FnMut() -> S,
+    mut f: impl FnMut(S) -> R,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        let s = setup();
+        std::hint::black_box(f(s));
+    }
+    let mut samples = Vec::new();
+    let mut moments = RunningMoments::new();
+    let started = Instant::now();
+    while (samples.len() < cfg.min_iters
+        || started.elapsed().as_secs_f64() < cfg.min_time_secs)
+        && samples.len() < cfg.max_iters
+    {
+        let s = setup();
+        let t = Instant::now();
+        std::hint::black_box(f(s));
+        let dt = t.elapsed().as_secs_f64();
+        samples.push(dt);
+        moments.push(dt);
+    }
+    let p50 = percentile(&mut samples.clone(), 50.0);
+    let p99 = percentile(&mut samples.clone(), 99.0);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: moments.mean(),
+        std_secs: moments.std_dev(),
+        p50_secs: p50,
+        p99_secs: p99,
+        min_secs: moments.min(),
+        max_secs: moments.max(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let cfg = BenchConfig { warmup_iters: 0, min_iters: 5, max_iters: 5, min_time_secs: 0.0 };
+        let r = bench("sleep-1ms", cfg, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_secs >= 0.001, "mean {}", r.mean_secs);
+        assert!(r.mean_secs < 0.05);
+        assert!(r.p99_secs >= r.p50_secs);
+        assert!(r.min_secs <= r.mean_secs && r.mean_secs <= r.max_secs);
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_secs: 0.5,
+            std_secs: 0.0,
+            p50_secs: 0.5,
+            p99_secs: 0.5,
+            min_secs: 0.5,
+            max_secs: 0.5,
+        };
+        assert_eq!(r.throughput(100.0), 200.0);
+        assert!(r.summary().contains("x"));
+    }
+
+    #[test]
+    fn setup_excluded_from_timing() {
+        let cfg = BenchConfig { warmup_iters: 0, min_iters: 3, max_iters: 3, min_time_secs: 0.0 };
+        let r = bench_with_setup(
+            "setup-heavy",
+            cfg,
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+            |_| 1 + 1,
+        );
+        // The 2ms setup must not be counted.
+        assert!(r.mean_secs < 0.001, "mean {}", r.mean_secs);
+    }
+}

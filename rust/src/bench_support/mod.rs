@@ -1,0 +1,7 @@
+//! Bench harness (criterion replacement) + shared figure/table builders.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{ablation_series, fast_mode, fig3, metrics_table, Fig3Data, Fig3Row};
+pub use harness::{bench, bench_with_setup, BenchConfig, BenchResult};

@@ -1,0 +1,171 @@
+//! Experiment configuration: one struct tying hardware + workload +
+//! topology + sweep parameters together, loadable from a single TOML file
+//! (the "real config system" entry point used by the CLI and benches).
+
+use crate::config::hardware::HardwareParams;
+use crate::config::toml::TomlDoc;
+use crate::config::topology::Topology;
+use crate::config::workload::WorkloadSpec;
+use crate::error::Result;
+
+/// Full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Human-readable experiment label (used in outputs).
+    pub name: String,
+    pub hardware: HardwareParams,
+    pub workload: WorkloadSpec,
+    pub topology: Topology,
+    /// Fan-in values to sweep (paper Fig. 3: {1, 2, 4, 8, 16, 24, 32}).
+    pub ratio_sweep: Vec<usize>,
+    /// Requests to complete per Attention instance (paper: N = 10,000).
+    pub requests_per_instance: usize,
+    /// Throughput is computed over the first `stable_fraction` of request
+    /// completions (paper: 80%) to avoid startup/drain distortion.
+    pub stable_fraction: f64,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's Section 5.2 configuration.
+    fn default() -> Self {
+        Self {
+            name: "paper-section5".into(),
+            hardware: HardwareParams::paper_table3(),
+            workload: WorkloadSpec::paper_section5(),
+            topology: Topology::new(8, 256),
+            ratio_sweep: vec![1, 2, 4, 8, 16, 24, 32],
+            requests_per_instance: 10_000,
+            stable_fraction: 0.8,
+            seed: 20260710,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.hardware.validate()?;
+        self.workload.validate()?;
+        self.topology.validate()?;
+        if self.ratio_sweep.is_empty() || self.ratio_sweep.iter().any(|&r| r == 0) {
+            return Err(crate::error::AfdError::config(
+                "ratio_sweep must be non-empty with positive entries",
+            ));
+        }
+        if !(0.0 < self.stable_fraction && self.stable_fraction <= 1.0) {
+            return Err(crate::error::AfdError::config(
+                "stable_fraction must be in (0, 1]",
+            ));
+        }
+        if self.requests_per_instance == 0 {
+            return Err(crate::error::AfdError::config(
+                "requests_per_instance must be >= 1",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load from TOML text; missing keys fall back to the paper defaults.
+    pub fn from_toml_text(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        Self::from_toml(&doc)
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let d = Self::default();
+        let cfg = Self {
+            name: doc.get_str("name", &d.name)?,
+            hardware: HardwareParams::from_toml(doc)?,
+            workload: WorkloadSpec::from_toml(doc)?,
+            topology: Topology::from_toml(doc)?,
+            ratio_sweep: doc
+                .get_f64_list(
+                    "experiment.ratio_sweep",
+                    &d.ratio_sweep.iter().map(|&r| r as f64).collect::<Vec<_>>(),
+                )?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            requests_per_instance: doc
+                .get_usize("experiment.requests_per_instance", d.requests_per_instance)?,
+            stable_fraction: doc.get_f64("experiment.stable_fraction", d.stable_fraction)?,
+            seed: doc.get_usize("experiment.seed", d.seed as usize)? as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_toml(&TomlDoc::parse_file(path)?)
+    }
+
+    /// Clone with a different per-worker batch (Fig. 4a ablation helper).
+    pub fn with_batch(&self, batch: usize) -> Self {
+        let mut c = self.clone();
+        c.topology.batch_per_worker = batch;
+        c
+    }
+
+    /// Clone with a different workload (Fig. 4b ablation helper).
+    pub fn with_workload(&self, workload: WorkloadSpec) -> Self {
+        let mut c = self.clone();
+        c.workload = workload;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_config() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.topology.batch_per_worker, 256);
+        assert_eq!(c.ratio_sweep, vec![1, 2, 4, 8, 16, 24, 32]);
+        assert_eq!(c.requests_per_instance, 10_000);
+        assert!((c.stable_fraction - 0.8).abs() < 1e-12);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_selected_fields() {
+        let text = r#"
+name = "ablation-b128"
+[topology]
+batch_per_worker = 128
+[experiment]
+ratio_sweep = [1, 2, 4]
+requests_per_instance = 500
+"#;
+        let c = ExperimentConfig::from_toml_text(text).unwrap();
+        assert_eq!(c.name, "ablation-b128");
+        assert_eq!(c.topology.batch_per_worker, 128);
+        assert_eq!(c.ratio_sweep, vec![1, 2, 4]);
+        assert_eq!(c.requests_per_instance, 500);
+        // Untouched fields keep paper defaults.
+        assert_eq!(c.hardware.alpha_f, 0.083);
+    }
+
+    #[test]
+    fn invalid_sweep_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.ratio_sweep = vec![];
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.stable_fraction = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ablation_helpers() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.with_batch(512).topology.batch_per_worker, 512);
+        let w = WorkloadSpec::independent(
+            crate::stats::distributions::LengthDist::Deterministic(10),
+            crate::stats::distributions::LengthDist::Deterministic(5),
+        );
+        assert_eq!(c.with_workload(w.clone()).workload, w);
+    }
+}

@@ -1,0 +1,160 @@
+//! Hardware latency coefficients (paper §3.1 / Appendix B, Table 3).
+//!
+//! The entire analysis consumes hardware only through six linear latency
+//! coefficients:
+//!
+//! ```text
+//! t_A(T)  = alpha_a * T  + beta_a      Attention (memory-bound, token load T)
+//! t_F(n)  = alpha_f * n  + beta_f      FFN (compute-bound, aggregated batch n)
+//! t_C(n)  = alpha_c * n  + beta_c      A<->F round-trip communication
+//! ```
+//!
+//! Defaults are the paper's published Table 3 values, calibrated on
+//! DeepSeek-V3 / Ascend 910C ("cycles" time unit). Use
+//! [`crate::latency::calibration`] to fit coefficients for other hardware
+//! from execution traces (we do this against our own PJRT runtime in the
+//! `table3_calibration` bench).
+
+use crate::config::toml::TomlDoc;
+use crate::error::{AfdError, Result};
+
+/// The six linear latency coefficients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareParams {
+    /// Attention cycles per token of KV load.
+    pub alpha_a: f64,
+    /// Attention fixed overhead (projections, norms, launch).
+    pub beta_a: f64,
+    /// FFN cycles per request in the aggregated batch.
+    pub alpha_f: f64,
+    /// FFN fixed overhead (weight-load amortization floor).
+    pub beta_f: f64,
+    /// Communication cycles per token (round trip).
+    pub alpha_c: f64,
+    /// Communication startup cost.
+    pub beta_c: f64,
+}
+
+impl Default for HardwareParams {
+    /// Paper Table 3 (DeepSeek-V3 on Ascend 910C, via linear regression).
+    fn default() -> Self {
+        Self {
+            alpha_a: 0.00165,
+            beta_a: 50.0,
+            alpha_f: 0.083,
+            beta_f: 100.0,
+            alpha_c: 0.022,
+            beta_c: 20.0,
+        }
+    }
+}
+
+impl HardwareParams {
+    /// Paper Table 3 coefficients (explicit alias of `default`).
+    pub fn paper_table3() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let fields = [
+            ("alpha_a", self.alpha_a),
+            ("beta_a", self.beta_a),
+            ("alpha_f", self.alpha_f),
+            ("beta_f", self.beta_f),
+            ("alpha_c", self.alpha_c),
+            ("beta_c", self.beta_c),
+        ];
+        for (name, v) in fields {
+            if !v.is_finite() || v < 0.0 {
+                return Err(AfdError::config(format!(
+                    "hardware.{name} must be finite and >= 0, got {v}"
+                )));
+            }
+        }
+        if self.alpha_a <= 0.0 || self.alpha_f <= 0.0 {
+            return Err(AfdError::config(
+                "alpha_a and alpha_f must be > 0 (degenerate latency model)",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Read from a `[hardware]` TOML table, with Table 3 defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let d = Self::default();
+        let hw = Self {
+            alpha_a: doc.get_f64("hardware.alpha_a", d.alpha_a)?,
+            beta_a: doc.get_f64("hardware.beta_a", d.beta_a)?,
+            alpha_f: doc.get_f64("hardware.alpha_f", d.alpha_f)?,
+            beta_f: doc.get_f64("hardware.beta_f", d.beta_f)?,
+            alpha_c: doc.get_f64("hardware.alpha_c", d.alpha_c)?,
+            beta_c: doc.get_f64("hardware.beta_c", d.beta_c)?,
+        };
+        hw.validate()?;
+        Ok(hw)
+    }
+
+    /// Attention latency for token load `t` (paper: alpha_A*T + beta_A).
+    pub fn t_attention(&self, tokens: f64) -> f64 {
+        self.alpha_a * tokens + self.beta_a
+    }
+
+    /// FFN latency for aggregated batch `n` (paper: alpha_F*rB + beta_F).
+    pub fn t_ffn(&self, batch: f64) -> f64 {
+        self.alpha_f * batch + self.beta_f
+    }
+
+    /// Communication round-trip latency for aggregated batch `n`.
+    pub fn t_comm(&self, batch: f64) -> f64 {
+        self.alpha_c * batch + self.beta_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_defaults() {
+        let hw = HardwareParams::paper_table3();
+        assert_eq!(hw.alpha_a, 0.00165);
+        assert_eq!(hw.beta_a, 50.0);
+        assert_eq!(hw.alpha_f, 0.083);
+        assert_eq!(hw.beta_f, 100.0);
+        assert_eq!(hw.alpha_c, 0.022);
+        assert_eq!(hw.beta_c, 20.0);
+        hw.validate().unwrap();
+    }
+
+    #[test]
+    fn latency_evaluation() {
+        let hw = HardwareParams::paper_table3();
+        // mu_A for B=256, theta=599: 0.00165*153344 + 50 = 303.0176.
+        let t = hw.t_attention(256.0 * 599.0);
+        assert!((t - 303.0176).abs() < 1e-9);
+        assert!((hw.t_ffn(2048.0) - (0.083 * 2048.0 + 100.0)).abs() < 1e-12);
+        assert!((hw.t_comm(2048.0) - (0.022 * 2048.0 + 20.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_roundtrip_with_overrides() {
+        let doc = TomlDoc::parse("[hardware]\nalpha_a = 0.002\nbeta_f = 80").unwrap();
+        let hw = HardwareParams::from_toml(&doc).unwrap();
+        assert_eq!(hw.alpha_a, 0.002);
+        assert_eq!(hw.beta_f, 80.0);
+        assert_eq!(hw.alpha_f, 0.083); // default preserved
+    }
+
+    #[test]
+    fn validation_rejects_negative_and_zero_slopes() {
+        let mut hw = HardwareParams::default();
+        hw.beta_c = -1.0;
+        assert!(hw.validate().is_err());
+        let mut hw = HardwareParams::default();
+        hw.alpha_f = 0.0;
+        assert!(hw.validate().is_err());
+        let mut hw = HardwareParams::default();
+        hw.alpha_a = f64::NAN;
+        assert!(hw.validate().is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system: TOML-subset parsing plus typed experiment,
+//! hardware, workload and topology configuration.
+
+pub mod experiment;
+pub mod hardware;
+pub mod toml;
+pub mod topology;
+pub mod workload;
+
+pub use experiment::ExperimentConfig;
+pub use hardware::HardwareParams;
+pub use topology::Topology;
+pub use workload::WorkloadSpec;

@@ -1,0 +1,340 @@
+//! TOML-subset parser (serde/toml crates are unavailable offline).
+//!
+//! Supports: `[table]` and `[dotted.table]` headers, `key = value` with
+//! strings, integers, floats, booleans and homogeneous arrays, `#`
+//! comments, and dotted lookup (`cfg.get("hardware.alpha_a")`).
+//! Unsupported TOML (multi-line strings, inline tables, dates) is
+//! rejected with an error naming the line.
+
+use std::collections::BTreeMap;
+
+use crate::error::{AfdError, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: flat map from dotted key path to value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[') {
+                let header = header
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated table header"))?
+                    .trim();
+                if header.is_empty() || header.starts_with('[') {
+                    return Err(err(lineno, "arrays of tables are not supported"));
+                }
+                prefix = header.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let full_key = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            let value = parse_value(value.trim(), lineno)?;
+            if doc.values.insert(full_key.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key {full_key:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| AfdError::config(format!("{key}: expected number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| AfdError::config(format!("{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| AfdError::config(format!("{key}: expected string, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| AfdError::config(format!("{key}: expected bool, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .as_array()
+                .and_then(|items| items.iter().map(|x| x.as_f64()).collect::<Option<Vec<_>>>())
+                .ok_or_else(|| {
+                    AfdError::config(format!("{key}: expected numeric array, got {v:?}"))
+                }),
+        }
+    }
+
+    /// All keys under a table prefix (for diagnostics and validation).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let dotted = format!("{prefix}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&dotted))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> AfdError {
+    AfdError::config(format!("toml line {}: {}", lineno + 1, msg))
+}
+
+/// Remove a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue> {
+    if text.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(body) = text.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = text.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        // Only treat as int when there is no float syntax.
+        if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value {text:?}")))
+}
+
+/// Split an array body on top-level commas (no nested-array support needed
+/// beyond one level, but handle it anyway).
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# AFD experiment config
+title = "fig3"
+
+[hardware]
+alpha_a = 0.00165   # cycles/token
+beta_a = 50
+alpha_f = 0.083
+pipelined = true
+
+[workload]
+prefill = "geometric"
+mean_prefill = 100
+ratios = [1, 2, 4, 8.5]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("title", "").unwrap(), "fig3");
+        assert_eq!(doc.get_f64("hardware.alpha_a", 0.0).unwrap(), 0.00165);
+        assert_eq!(doc.get_usize("hardware.beta_a", 0).unwrap(), 50);
+        assert!(doc.get_bool("hardware.pipelined", false).unwrap());
+        assert_eq!(
+            doc.get_f64_list("workload.ratios", &[]).unwrap(),
+            vec![1.0, 2.0, 4.0, 8.5]
+        );
+        assert_eq!(doc.get_str("workload.prefill", "").unwrap(), "geometric");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.get_f64("x", 2.5).unwrap(), 2.5);
+        assert_eq!(doc.get_str("s", "d").unwrap(), "d");
+    }
+
+    #[test]
+    fn type_mismatch_is_error() {
+        let doc = TomlDoc::parse("x = \"not a number\"").unwrap();
+        assert!(doc.get_f64("x", 0.0).is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let doc = TomlDoc::parse("s = \"a # b\"").unwrap();
+        assert_eq!(doc.get_str("s", "").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let e = TomlDoc::parse("ok = 1\nbroken line").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000\nf = 1_0.5").unwrap();
+        assert_eq!(doc.get_usize("n", 0).unwrap(), 1_000_000);
+        assert_eq!(doc.get_f64("f", 0.0).unwrap(), 10.5);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let keys = doc.keys_under("hardware");
+        assert!(keys.contains(&"hardware.alpha_a"));
+        assert!(!keys.contains(&"workload.prefill"));
+    }
+}

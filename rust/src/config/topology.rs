@@ -1,0 +1,115 @@
+//! Bundle topology: the `rA–1F` deployment shape (paper §3).
+//!
+//! `r := x/y` Attention instances per FFN instance need not be an
+//! integer: `r = 3.5` realizes as a `7A–2F` deployment. The simulator and
+//! the serving engine operate on integer fan-ins; the analysis layer
+//! optimizes over continuous `r` and the provisioning rule maps back to
+//! the feasible set.
+
+use crate::config::toml::TomlDoc;
+use crate::error::{AfdError, Result};
+
+/// An `rA–1F` bundle shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    /// Attention instances per FFN instance (integer for execution).
+    pub workers: usize,
+    /// Microbatch size per Attention worker (paper's B).
+    pub batch_per_worker: usize,
+}
+
+impl Topology {
+    pub fn new(workers: usize, batch_per_worker: usize) -> Self {
+        Self { workers, batch_per_worker }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(AfdError::config("topology.workers must be >= 1"));
+        }
+        if self.batch_per_worker == 0 {
+            return Err(AfdError::config("topology.batch_per_worker must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Aggregated FFN batch `rB`.
+    pub fn aggregate_batch(&self) -> usize {
+        self.workers * self.batch_per_worker
+    }
+
+    /// Total instance count `r + 1` (throughput normalizer, Eq. 1).
+    pub fn total_instances(&self) -> usize {
+        self.workers + 1
+    }
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let t = Self {
+            workers: doc.get_usize("topology.workers", 8)?,
+            batch_per_worker: doc.get_usize("topology.batch_per_worker", 256)?,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+/// Reduce a possibly-fractional provisioning ratio to a realizable
+/// `xA–yF` deployment with bounded denominator (Stern–Brocot search).
+///
+/// `ratio_to_deployment(3.5, 4)` = (7, 2); `ratio_to_deployment(9.3, 10)`
+/// = (28, 3) (28/3 = 9.33). Useful when the analysis recommends a
+/// non-integer `r*`.
+pub fn ratio_to_deployment(r: f64, max_ffn: usize) -> (usize, usize) {
+    assert!(r > 0.0 && r.is_finite());
+    let mut best = (r.round().max(1.0) as usize, 1usize);
+    let mut best_err = (best.0 as f64 / best.1 as f64 - r).abs();
+    for y in 1..=max_ffn.max(1) {
+        let x = (r * y as f64).round().max(1.0) as usize;
+        let err = (x as f64 / y as f64 - r).abs();
+        if err + 1e-12 < best_err {
+            best = (x, y);
+            best_err = err;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_and_instances() {
+        let t = Topology::new(8, 256);
+        assert_eq!(t.aggregate_batch(), 2048);
+        assert_eq!(t.total_instances(), 9);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn zero_rejected() {
+        assert!(Topology::new(0, 1).validate().is_err());
+        assert!(Topology::new(1, 0).validate().is_err());
+    }
+
+    #[test]
+    fn toml_defaults_match_paper() {
+        let doc = TomlDoc::parse("").unwrap();
+        let t = Topology::from_toml(&doc).unwrap();
+        assert_eq!(t.workers, 8);
+        assert_eq!(t.batch_per_worker, 256);
+    }
+
+    #[test]
+    fn fractional_ratio_deployments() {
+        assert_eq!(ratio_to_deployment(3.5, 4), (7, 2));
+        assert_eq!(ratio_to_deployment(8.0, 4), (8, 1));
+        let (x, y) = ratio_to_deployment(9.3, 10);
+        assert!((x as f64 / y as f64 - 9.3).abs() < 0.05, "{x}/{y}");
+    }
+
+    #[test]
+    fn integer_ratio_prefers_small_denominator() {
+        assert_eq!(ratio_to_deployment(4.0, 8), (4, 1));
+    }
+}

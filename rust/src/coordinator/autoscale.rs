@@ -1,0 +1,178 @@
+//! Online provisioning: apply the paper's recipe continuously from the
+//! live completion stream.
+//!
+//! A sliding window of completed `(P, D)` observations feeds the
+//! nonparametric estimator (Appendix A.6); the barrier-aware rule
+//! (Eq. 12) then recommends a fan-in. Hysteresis suppresses flapping:
+//! a reconfiguration is emitted only when the recommended `r` differs
+//! from the current one by at least `min_delta` and the predicted
+//! throughput gain exceeds `min_gain`.
+
+use std::collections::VecDeque;
+
+use crate::analysis::cycle_time::OperatingPoint;
+use crate::analysis::provisioning::barrier_aware_optimum;
+use crate::config::hardware::HardwareParams;
+use crate::error::Result;
+use crate::workload::request::RequestLengths;
+use crate::workload::trace::Trace;
+
+/// A recommended reconfiguration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reconfiguration {
+    pub from_r: usize,
+    pub to_r: usize,
+    /// Predicted relative throughput gain.
+    pub predicted_gain: f64,
+}
+
+/// Sliding-window autoscaler.
+pub struct Autoscaler {
+    hw: HardwareParams,
+    batch: usize,
+    window: VecDeque<RequestLengths>,
+    window_size: usize,
+    feasible: Vec<usize>,
+    current_r: usize,
+    min_delta: usize,
+    min_gain: f64,
+}
+
+impl Autoscaler {
+    pub fn new(
+        hw: HardwareParams,
+        batch: usize,
+        current_r: usize,
+        feasible: Vec<usize>,
+        window_size: usize,
+    ) -> Self {
+        assert!(window_size >= 16, "window too small for a stable estimate");
+        Self {
+            hw,
+            batch,
+            window: VecDeque::with_capacity(window_size),
+            window_size,
+            feasible,
+            current_r,
+            min_delta: 1,
+            min_gain: 0.02,
+        }
+    }
+
+    pub fn with_hysteresis(mut self, min_delta: usize, min_gain: f64) -> Self {
+        self.min_delta = min_delta;
+        self.min_gain = min_gain;
+        self
+    }
+
+    pub fn current_r(&self) -> usize {
+        self.current_r
+    }
+
+    pub fn observations(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Feed one completed request.
+    pub fn observe(&mut self, lengths: RequestLengths) {
+        if self.window.len() == self.window_size {
+            self.window.pop_front();
+        }
+        self.window.push_back(lengths);
+    }
+
+    /// Evaluate the rule; returns a reconfiguration when warranted.
+    pub fn evaluate(&mut self) -> Result<Option<Reconfiguration>> {
+        if self.window.len() < self.window_size / 2 {
+            return Ok(None); // not enough evidence yet
+        }
+        let trace = Trace::new(self.window.iter().copied().collect());
+        let load = crate::workload::estimator::estimate_stationary(&trace)?;
+        let op = OperatingPoint::new(self.hw, load, self.batch);
+        let opt = barrier_aware_optimum(&op, &self.feasible)?;
+        let current_thr = op.throughput_gaussian(self.current_r);
+        let gain = opt.throughput / current_thr - 1.0;
+        if opt.r_star.abs_diff(self.current_r) >= self.min_delta && gain > self.min_gain {
+            let rec = Reconfiguration {
+                from_r: self.current_r,
+                to_r: opt.r_star,
+                predicted_gain: gain,
+            };
+            self.current_r = opt.r_star;
+            return Ok(Some(rec));
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::stats::distributions::LengthDist;
+    use crate::workload::generator::RequestGenerator;
+
+    fn feed(a: &mut Autoscaler, spec: &WorkloadSpec, n: usize, seed: u64) {
+        let mut g = RequestGenerator::new(spec.clone(), seed);
+        for _ in 0..n {
+            a.observe(g.next_lengths());
+        }
+    }
+
+    #[test]
+    fn recommends_upscale_when_context_grows() {
+        let hw = HardwareParams::paper_table3();
+        let feasible: Vec<usize> = (1..=24).collect();
+        // Start at the optimum for a short-context workload.
+        let mut a = Autoscaler::new(hw, 256, 4, feasible, 2000);
+        // Long-context workload arrives: theta jumps, more workers needed.
+        let long = WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(400.0),
+            LengthDist::geometric_with_mean(1000.0),
+        );
+        feed(&mut a, &long, 2000, 1);
+        let rec = a.evaluate().unwrap().expect("should reconfigure");
+        assert!(rec.to_r > rec.from_r, "{rec:?}");
+        assert!(rec.predicted_gain > 0.02);
+        assert_eq!(a.current_r(), rec.to_r);
+    }
+
+    #[test]
+    fn stays_put_at_optimum() {
+        let hw = HardwareParams::paper_table3();
+        let spec = WorkloadSpec::paper_section5();
+        let mut a = Autoscaler::new(hw, 256, 8, (1..=24).collect(), 2000);
+        feed(&mut a, &spec, 2000, 2);
+        // r = 8 is the integer-grid optimum for the paper workload.
+        assert!(a.evaluate().unwrap().is_none());
+        assert_eq!(a.current_r(), 8);
+    }
+
+    #[test]
+    fn needs_enough_observations() {
+        let hw = HardwareParams::paper_table3();
+        let mut a = Autoscaler::new(hw, 256, 1, (1..=24).collect(), 2000);
+        feed(&mut a, &WorkloadSpec::paper_section5(), 100, 3);
+        assert!(a.evaluate().unwrap().is_none());
+        assert_eq!(a.observations(), 100);
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_moves() {
+        let hw = HardwareParams::paper_table3();
+        let spec = WorkloadSpec::paper_section5();
+        // Current r = 9; optimum 8 or 9 — marginal. Demand a huge gain.
+        let mut a = Autoscaler::new(hw, 256, 9, (1..=24).collect(), 2000)
+            .with_hysteresis(1, 0.5);
+        feed(&mut a, &spec, 2000, 4);
+        assert!(a.evaluate().unwrap().is_none());
+    }
+
+    #[test]
+    fn window_slides() {
+        let hw = HardwareParams::paper_table3();
+        let mut a = Autoscaler::new(hw, 256, 1, vec![1, 2], 100);
+        feed(&mut a, &WorkloadSpec::paper_section5(), 500, 5);
+        assert_eq!(a.observations(), 100);
+    }
+}

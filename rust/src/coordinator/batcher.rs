@@ -1,0 +1,262 @@
+//! Continuous-batching admission control.
+//!
+//! Owns the global queue and the per-worker (router-decided) queues;
+//! whenever a worker slot frees, the next queued request is admitted
+//! immediately — the paper's "slot is immediately refilled" semantics
+//! (Fig. 1). Tracks every request's lifecycle via
+//! [`crate::coordinator::request_state`].
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::kv::KvSlotManager;
+use crate::coordinator::request_state::{ServingRequest, TrackedRequest};
+use crate::coordinator::router::{Policy, Router, WorkerLoad};
+use crate::error::{AfdError, Result};
+
+/// An admission event: request placed into (worker, slot).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admission {
+    pub request_id: u64,
+    pub worker: usize,
+    pub slot: usize,
+    pub seed_token: i32,
+}
+
+/// The continuous batcher.
+pub struct Batcher {
+    router: Router,
+    worker_queues: Vec<VecDeque<u64>>,
+    pub kv: Vec<KvSlotManager>,
+    requests: HashMap<u64, TrackedRequest>,
+    /// (worker, slot) -> request id for live slots.
+    slot_owner: HashMap<(usize, usize), u64>,
+    completed: Vec<u64>,
+}
+
+impl Batcher {
+    pub fn new(workers: usize, slots_per_worker: usize, kv_capacity: u64, policy: Policy) -> Self {
+        Self {
+            router: Router::new(policy),
+            worker_queues: vec![VecDeque::new(); workers],
+            kv: (0..workers).map(|_| KvSlotManager::new(slots_per_worker, kv_capacity)).collect(),
+            requests: HashMap::new(),
+            slot_owner: HashMap::new(),
+            completed: Vec::new(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_queues.len()
+    }
+
+    fn worker_loads(&self) -> Vec<WorkerLoad> {
+        (0..self.workers())
+            .map(|w| WorkerLoad {
+                queued: self.worker_queues[w].len(),
+                token_load: self.kv[w].token_load(),
+                free_slots: self.kv[w].free_slots(),
+            })
+            .collect()
+    }
+
+    /// Submit a request: routed to a worker queue (admission happens via
+    /// [`Batcher::fill_slots`]). Rejects requests that can never fit.
+    pub fn submit(&mut self, request: ServingRequest) -> Result<usize> {
+        if !self.kv[0].fits(request.prefill, request.decode_budget) {
+            return Err(AfdError::Coordinator(format!(
+                "request {}: context {} exceeds KV capacity {}",
+                request.id,
+                request.prefill + request.decode_budget,
+                self.kv[0].capacity()
+            )));
+        }
+        if self.requests.contains_key(&request.id) {
+            return Err(AfdError::Coordinator(format!("duplicate request id {}", request.id)));
+        }
+        let worker = self.router.route(&self.worker_loads());
+        self.worker_queues[worker].push_back(request.id);
+        self.requests.insert(request.id, TrackedRequest::new(request));
+        Ok(worker)
+    }
+
+    /// Admit queued requests into free slots. Returns the admissions
+    /// performed (the engine uses these to seed model slots).
+    ///
+    /// Two passes: each worker drains its own queue FIFO; any slots still
+    /// free then *steal* from the longest other queue — routing is a
+    /// placement hint, and head-of-line blocking across workers would
+    /// waste slots (continuous batching demands immediate refill).
+    pub fn fill_slots(&mut self, now: f64) -> Result<Vec<Admission>> {
+        let mut admissions = Vec::new();
+        for w in 0..self.workers() {
+            while self.kv[w].free_slots() > 0 {
+                let Some(&rid) = self.worker_queues[w].front() else { break };
+                self.worker_queues[w].pop_front();
+                admissions.push(self.admit_to(w, rid, now)?);
+            }
+        }
+        // Work stealing: free slots pull from the longest foreign queue.
+        for w in 0..self.workers() {
+            while self.kv[w].free_slots() > 0 {
+                let donor = (0..self.workers())
+                    .filter(|&d| d != w && !self.worker_queues[d].is_empty())
+                    .max_by_key(|&d| self.worker_queues[d].len());
+                let Some(donor) = donor else { break };
+                let rid = self.worker_queues[donor].pop_front().unwrap();
+                admissions.push(self.admit_to(w, rid, now)?);
+            }
+        }
+        Ok(admissions)
+    }
+
+    fn admit_to(&mut self, worker: usize, rid: u64, now: f64) -> Result<Admission> {
+        let tracked = self
+            .requests
+            .get_mut(&rid)
+            .ok_or_else(|| AfdError::Coordinator(format!("unknown request {rid}")))?;
+        let slot =
+            self.kv[worker].admit(rid, tracked.request.prefill, tracked.request.decode_budget)?;
+        tracked.admit(worker, slot, now)?;
+        self.slot_owner.insert((worker, slot), rid);
+        Ok(Admission {
+            request_id: rid,
+            worker,
+            slot,
+            seed_token: tracked.request.seed_token,
+        })
+    }
+
+    /// Record one produced token for every live slot of `worker` at time
+    /// `now`. Returns slots that completed (freed for refill).
+    pub fn step_worker(&mut self, worker: usize, now: f64) -> Result<Vec<usize>> {
+        let mut completed_slots = Vec::new();
+        for slot in 0..self.kv[worker].n_slots() {
+            let Some(&rid) = self.slot_owner.get(&(worker, slot)) else { continue };
+            let tracked = self
+                .requests
+                .get_mut(&rid)
+                .ok_or_else(|| AfdError::Coordinator(format!("unknown request {rid}")))?;
+            let done = tracked.produce_token(now)?;
+            if done {
+                self.kv[worker].release(slot)?;
+                self.slot_owner.remove(&(worker, slot));
+                self.completed.push(rid);
+                completed_slots.push(slot);
+            } else {
+                self.kv[worker].advance(slot)?;
+            }
+        }
+        Ok(completed_slots)
+    }
+
+    /// Completed request ids in completion order.
+    pub fn completed(&self) -> &[u64] {
+        &self.completed
+    }
+
+    pub fn request(&self, id: u64) -> Option<&TrackedRequest> {
+        self.requests.get(&id)
+    }
+
+    /// Total queued (not yet admitted) requests.
+    pub fn queued(&self) -> usize {
+        self.worker_queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Live (decoding) requests.
+    pub fn live(&self) -> usize {
+        self.slot_owner.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, decode_budget: u64) -> ServingRequest {
+        ServingRequest {
+            id,
+            seed_token: id as i32 % 7,
+            prefill: 4,
+            decode_budget,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn submit_fill_step_complete_refill() {
+        let mut b = Batcher::new(2, 1, 100, Policy::RoundRobin);
+        b.submit(req(0, 2)).unwrap();
+        b.submit(req(1, 1)).unwrap();
+        b.submit(req(2, 1)).unwrap(); // waits for a slot
+        let adm = b.fill_slots(0.0).unwrap();
+        assert_eq!(adm.len(), 2);
+        assert_eq!(b.live(), 2);
+        assert_eq!(b.queued(), 1);
+
+        // Step both workers: request 1 (budget 1) completes.
+        let done0 = b.step_worker(0, 1.0).unwrap();
+        let done1 = b.step_worker(1, 1.0).unwrap();
+        assert_eq!(done0.len() + done1.len(), 1);
+        assert_eq!(b.completed().len(), 1);
+
+        // Refill admits request 2 into the freed slot.
+        let adm2 = b.fill_slots(1.0).unwrap();
+        assert_eq!(adm2.len(), 1);
+        assert_eq!(adm2[0].request_id, 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn tpot_recorded_on_completion() {
+        let mut b = Batcher::new(1, 1, 100, Policy::RoundRobin);
+        b.submit(req(9, 2)).unwrap();
+        b.fill_slots(10.0).unwrap();
+        b.step_worker(0, 11.0).unwrap();
+        b.step_worker(0, 12.0).unwrap();
+        let t = b.request(9).unwrap();
+        assert!(t.is_completed());
+        assert!((t.tpot().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oversize_request_rejected_at_submit() {
+        let mut b = Batcher::new(1, 1, 10, Policy::RoundRobin);
+        assert!(b.submit(req(0, 20)).is_err());
+        let r = ServingRequest { id: 1, seed_token: 0, prefill: 8, decode_budget: 3, arrival: 0.0 };
+        assert!(b.submit(r).is_err());
+    }
+
+    #[test]
+    fn duplicate_id_rejected() {
+        let mut b = Batcher::new(1, 2, 100, Policy::RoundRobin);
+        b.submit(req(5, 1)).unwrap();
+        assert!(b.submit(req(5, 1)).is_err());
+    }
+
+    #[test]
+    fn load_balanced_policy_spreads_tokens() {
+        let mut b = Batcher::new(2, 4, 1000, Policy::LeastTokenLoad);
+        for i in 0..8 {
+            b.submit(ServingRequest {
+                id: i,
+                seed_token: 0,
+                prefill: if i % 2 == 0 { 100 } else { 1 },
+                decode_budget: 10,
+                arrival: 0.0,
+            })
+            .unwrap();
+            b.fill_slots(0.0).unwrap();
+        }
+        let l0 = b.kv[0].token_load();
+        let l1 = b.kv[1].token_load();
+        let ratio = l0.max(l1) as f64 / l0.min(l1).max(1) as f64;
+        assert!(ratio < 3.0, "loads {l0} vs {l1}");
+    }
+
+    #[test]
+    fn step_on_empty_worker_is_noop() {
+        let mut b = Batcher::new(1, 2, 100, Policy::RoundRobin);
+        assert!(b.step_worker(0, 1.0).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,173 @@
+//! KV-cache slot manager (coordinator-side bookkeeping).
+//!
+//! Tracks, per worker, which slots are live, each slot's sequence length,
+//! and capacity headroom. The actual cache tensors live device-side in
+//! the runtime ([`crate::runtime::AttentionWorkerModel`]); this manager is
+//! the source of truth the batcher and router consult, and it enforces
+//! admission-time capacity feasibility (a request whose prefill + budget
+//! exceeds capacity must be rejected up front, not mid-decode).
+
+use crate::error::{AfdError, Result};
+
+/// State of one KV slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    /// Live with current sequence length (prefill + produced tokens).
+    Live { request_id: u64, seq_len: u64 },
+}
+
+/// Per-worker slot table.
+#[derive(Debug, Clone)]
+pub struct KvSlotManager {
+    slots: Vec<SlotState>,
+    capacity: u64,
+}
+
+impl KvSlotManager {
+    pub fn new(n_slots: usize, capacity: u64) -> Self {
+        assert!(n_slots >= 1 && capacity >= 1);
+        Self { slots: vec![SlotState::Free; n_slots], capacity }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, SlotState::Free)).count()
+    }
+
+    pub fn live_slots(&self) -> usize {
+        self.slots.len() - self.free_slots()
+    }
+
+    /// Total token load over live slots (+1 per live slot for the token
+    /// being decoded, matching `t_A`'s driving variable).
+    pub fn token_load(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                SlotState::Free => 0,
+                SlotState::Live { seq_len, .. } => seq_len + 1,
+            })
+            .sum()
+    }
+
+    /// Whether a request with `prefill + decode_budget` total context fits
+    /// the per-slot capacity at all.
+    pub fn fits(&self, prefill: u64, decode_budget: u64) -> bool {
+        prefill + decode_budget <= self.capacity
+    }
+
+    /// Admit a request into the first free slot. Returns the slot index.
+    pub fn admit(&mut self, request_id: u64, prefill: u64, decode_budget: u64) -> Result<usize> {
+        if !self.fits(prefill, decode_budget) {
+            return Err(AfdError::Coordinator(format!(
+                "request {request_id}: context {} exceeds KV capacity {}",
+                prefill + decode_budget,
+                self.capacity
+            )));
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| matches!(s, SlotState::Free))
+            .ok_or_else(|| {
+                AfdError::Coordinator(format!("request {request_id}: no free slot"))
+            })?;
+        self.slots[slot] = SlotState::Live { request_id, seq_len: prefill };
+        Ok(slot)
+    }
+
+    /// Advance a live slot by one decoded token.
+    pub fn advance(&mut self, slot: usize) -> Result<u64> {
+        match &mut self.slots[slot] {
+            SlotState::Live { seq_len, .. } => {
+                *seq_len += 1;
+                if *seq_len > self.capacity {
+                    return Err(AfdError::Coordinator(format!(
+                        "slot {slot} overflowed capacity {}",
+                        self.capacity
+                    )));
+                }
+                Ok(*seq_len)
+            }
+            SlotState::Free => {
+                Err(AfdError::Coordinator(format!("advance on free slot {slot}")))
+            }
+        }
+    }
+
+    /// Release a completed slot.
+    pub fn release(&mut self, slot: usize) -> Result<u64> {
+        match self.slots[slot] {
+            SlotState::Live { request_id, .. } => {
+                self.slots[slot] = SlotState::Free;
+                Ok(request_id)
+            }
+            SlotState::Free => {
+                Err(AfdError::Coordinator(format!("release of free slot {slot}")))
+            }
+        }
+    }
+
+    pub fn slot(&self, i: usize) -> SlotState {
+        self.slots[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_advance_release_cycle() {
+        let mut kv = KvSlotManager::new(2, 100);
+        assert_eq!(kv.free_slots(), 2);
+        let s = kv.admit(7, 10, 20).unwrap();
+        assert_eq!(s, 0);
+        assert_eq!(kv.live_slots(), 1);
+        assert_eq!(kv.token_load(), 11);
+        assert_eq!(kv.advance(s).unwrap(), 11);
+        assert_eq!(kv.token_load(), 12);
+        assert_eq!(kv.release(s).unwrap(), 7);
+        assert_eq!(kv.free_slots(), 2);
+        assert_eq!(kv.token_load(), 0);
+    }
+
+    #[test]
+    fn capacity_feasibility_checked_at_admission() {
+        let mut kv = KvSlotManager::new(1, 50);
+        assert!(!kv.fits(40, 20));
+        assert!(kv.admit(1, 40, 20).is_err());
+        assert!(kv.admit(1, 40, 10).is_ok());
+    }
+
+    #[test]
+    fn no_free_slot_is_error() {
+        let mut kv = KvSlotManager::new(1, 100);
+        kv.admit(1, 0, 10).unwrap();
+        assert!(kv.admit(2, 0, 10).is_err());
+    }
+
+    #[test]
+    fn advance_overflow_detected() {
+        let mut kv = KvSlotManager::new(1, 5);
+        let s = kv.admit(1, 4, 1).unwrap();
+        assert_eq!(kv.advance(s).unwrap(), 5);
+        assert!(kv.advance(s).is_err());
+    }
+
+    #[test]
+    fn illegal_slot_ops() {
+        let mut kv = KvSlotManager::new(2, 10);
+        assert!(kv.advance(0).is_err());
+        assert!(kv.release(1).is_err());
+        assert_eq!(kv.slot(0), SlotState::Free);
+    }
+}

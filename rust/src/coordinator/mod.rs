@@ -1,0 +1,26 @@
+//! The L3 coordination layer: everything between the request API and the
+//! PJRT runtime.
+//!
+//! * [`request_state`] — request lifecycle state machine.
+//! * [`router`] — placement policies (round-robin / JSQ / least-token-load).
+//! * [`kv`] — per-worker KV slot accounting with capacity enforcement.
+//! * [`batcher`] — continuous-batching admission (slots refilled the step
+//!   they free, paper Fig. 1).
+//! * [`scheduler`] — the synchronized A->F->A step protocol
+//!   ([`scheduler::StepBarrier`]) and microbatch-pipeline accounting
+//!   ([`scheduler::PipelineEstimator`], paper Fig. 2).
+//! * [`autoscale`] — online application of the provisioning rule.
+
+pub mod autoscale;
+pub mod batcher;
+pub mod kv;
+pub mod request_state;
+pub mod router;
+pub mod scheduler;
+
+pub use autoscale::{Autoscaler, Reconfiguration};
+pub use batcher::{Admission, Batcher};
+pub use kv::{KvSlotManager, SlotState};
+pub use request_state::{RequestState, ServingRequest, TrackedRequest};
+pub use router::{Policy, Router, WorkerLoad};
+pub use scheduler::{PipelineEstimator, StepBarrier};

@@ -1,0 +1,152 @@
+//! Request routing policies across Attention workers.
+//!
+//! The paper's cross-worker barrier (Theorem 4.3) is driven by load
+//! *imbalance*: routing that equalizes per-worker token load shrinks the
+//! effective `nu` and with it the synchronization overhead — the
+//! "load-balancing routing policies [Chen et al., 2026]" remark of §3.2.
+//! Three policies are provided and ablated in the router bench:
+//!
+//! * [`Policy::RoundRobin`] — oblivious placement.
+//! * [`Policy::JoinShortestQueue`] — fewest queued requests.
+//! * [`Policy::LeastTokenLoad`] — smallest current token load (the
+//!   universal-balancing-principle analogue; strongest variance
+//!   reduction).
+
+/// Per-worker view the router sees at placement time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerLoad {
+    /// Requests waiting in this worker's admission queue.
+    pub queued: usize,
+    /// Current total token load of the worker's live slots.
+    pub token_load: u64,
+    /// Number of free slots.
+    pub free_slots: usize,
+}
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    JoinShortestQueue,
+    LeastTokenLoad,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::JoinShortestQueue => "jsq",
+            Policy::LeastTokenLoad => "least-token-load",
+        }
+    }
+}
+
+/// Stateful router.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: Policy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Self {
+        Self { policy, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Choose a destination worker for the next request.
+    pub fn route(&mut self, workers: &[WorkerLoad]) -> usize {
+        assert!(!workers.is_empty());
+        match self.policy {
+            Policy::RoundRobin => {
+                let w = self.rr_next % workers.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                w
+            }
+            Policy::JoinShortestQueue => {
+                // Fewest queued; tie-break by token load then index.
+                (0..workers.len())
+                    .min_by_key(|&i| (workers[i].queued, workers[i].token_load, i))
+                    .unwrap()
+            }
+            Policy::LeastTokenLoad => {
+                // Smallest effective load including queued backlog proxy.
+                (0..workers.len())
+                    .min_by_key(|&i| {
+                        (workers[i].token_load + 1000 * workers[i].queued as u64, i)
+                    })
+                    .unwrap()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(specs: &[(usize, u64)]) -> Vec<WorkerLoad> {
+        specs
+            .iter()
+            .map(|&(queued, token_load)| WorkerLoad { queued, token_load, free_slots: 1 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Policy::RoundRobin);
+        let w = loads(&[(0, 0), (0, 0), (0, 0)]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&w)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_prefers_short_queue() {
+        let mut r = Router::new(Policy::JoinShortestQueue);
+        assert_eq!(r.route(&loads(&[(3, 0), (1, 999), (2, 0)])), 1);
+        // Ties broken by token load.
+        assert_eq!(r.route(&loads(&[(1, 50), (1, 10)])), 1);
+    }
+
+    #[test]
+    fn least_token_load_prefers_light_worker() {
+        let mut r = Router::new(Policy::LeastTokenLoad);
+        assert_eq!(r.route(&loads(&[(0, 500), (0, 100), (0, 300)])), 1);
+        // Queued backlog counts against a worker.
+        assert_eq!(r.route(&loads(&[(2, 100), (0, 1500)])), 1);
+    }
+
+    #[test]
+    fn balancing_reduces_load_spread() {
+        // Simulate placements of heterogeneous requests and verify the
+        // balanced policy yields lower cross-worker spread than RR.
+        use crate::stats::rng::Pcg64;
+        let spread = |policy: Policy| {
+            let mut rng = Pcg64::new(3);
+            let mut router = Router::new(policy);
+            let mut tokens = [0u64; 4];
+            for _ in 0..4000 {
+                let w: Vec<WorkerLoad> = tokens
+                    .iter()
+                    .map(|&t| WorkerLoad { queued: 0, token_load: t, free_slots: 1 })
+                    .collect();
+                let dst = router.route(&w);
+                tokens[dst] += rng.next_range(1, 1000);
+            }
+            let max = *tokens.iter().max().unwrap() as f64;
+            let min = *tokens.iter().min().unwrap() as f64;
+            max - min
+        };
+        assert!(spread(Policy::LeastTokenLoad) < spread(Policy::RoundRobin));
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::RoundRobin.name(), "round-robin");
+        assert_eq!(Policy::JoinShortestQueue.name(), "jsq");
+        assert_eq!(Policy::LeastTokenLoad.name(), "least-token-load");
+    }
+}

@@ -1,0 +1,216 @@
+//! Step scheduler: the synchronized decode-step protocol of an rA–1F
+//! bundle, and microbatch-pipelining accounting (paper §2, Fig. 2).
+//!
+//! The protocol per step and per layer is:
+//!
+//! 1. every worker computes its attention block (barrier: slowest wins);
+//! 2. A->F: workers send activations; the scheduler aggregates `rB` rows;
+//! 3. the FFN server computes the layer FFN over the aggregate;
+//! 4. F->A: the scheduler scatters rows back to their workers.
+//!
+//! [`StepBarrier`] implements the rendezvous used by the threaded engine;
+//! [`PipelineEstimator`] reproduces Fig. 2's bubble accounting for a
+//! given microbatch count (used by the pipelining ablation bench).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AfdError, Result};
+use crate::runtime::tensor::Tensor;
+
+/// Aggregates per-worker activations, releases the aggregate to the FFN,
+/// then scatters results back. One instance per bundle, shared by
+/// worker/FFN threads.
+pub struct StepBarrier {
+    workers: usize,
+    gather: Mutex<GatherState>,
+    to_ffn: Sender<Tensor>,
+    results: Mutex<Vec<Option<Sender<Tensor>>>>,
+}
+
+struct GatherState {
+    pending: Vec<Option<Tensor>>,
+    arrived: usize,
+}
+
+impl StepBarrier {
+    /// Returns (barrier, ffn_inbox): the FFN thread receives aggregated
+    /// activations from `ffn_inbox`.
+    pub fn new(workers: usize) -> (Arc<StepBarrier>, Receiver<Tensor>) {
+        let (to_ffn, ffn_inbox) = channel();
+        let barrier = Arc::new(StepBarrier {
+            workers,
+            gather: Mutex::new(GatherState {
+                pending: (0..workers).map(|_| None).collect(),
+                arrived: 0,
+            }),
+            to_ffn,
+            results: Mutex::new((0..workers).map(|_| None).collect()),
+        });
+        (barrier, ffn_inbox)
+    }
+
+    /// Worker `w` contributes its activations for this layer-step and
+    /// registers a channel on which it will receive its slice back.
+    /// When the last worker arrives, the aggregate is sent to the FFN.
+    pub fn submit(&self, worker: usize, activations: Tensor) -> Result<Receiver<Tensor>> {
+        let (tx, rx) = channel();
+        {
+            let mut results = self.results.lock().unwrap();
+            if results[worker].is_some() {
+                return Err(AfdError::Coordinator(format!(
+                    "worker {worker} double-submitted a step"
+                )));
+            }
+            results[worker] = Some(tx);
+        }
+        let mut g = self.gather.lock().unwrap();
+        if g.pending[worker].is_some() {
+            return Err(AfdError::Coordinator(format!("worker {worker} duplicate activation")));
+        }
+        g.pending[worker] = Some(activations);
+        g.arrived += 1;
+        if g.arrived == self.workers {
+            // Last arrival aggregates and dispatches (A->F).
+            let parts: Vec<Tensor> = g.pending.iter_mut().map(|p| p.take().unwrap()).collect();
+            g.arrived = 0;
+            drop(g);
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let agg = Tensor::concat0(&refs)?;
+            self.to_ffn
+                .send(agg)
+                .map_err(|_| AfdError::Server("FFN inbox closed".into()))?;
+        }
+        Ok(rx)
+    }
+
+    /// FFN thread: scatter the layer output back to the workers (F->A).
+    pub fn scatter(&self, output: Tensor) -> Result<()> {
+        let parts = output.split0(self.workers)?;
+        let mut results = self.results.lock().unwrap();
+        for (w, part) in parts.into_iter().enumerate() {
+            let tx = results[w].take().ok_or_else(|| {
+                AfdError::Coordinator(format!("no pending result channel for worker {w}"))
+            })?;
+            tx.send(part).map_err(|_| AfdError::Server(format!("worker {w} gone")))?;
+        }
+        Ok(())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+/// Analytic microbatch-pipelining model (paper Fig. 2): with `m`
+/// microbatches and per-microbatch phase times `(t_a, t_c, t_f)` per
+/// layer, estimate the steady-state per-layer makespan and the bubble
+/// fraction. Communication hides when `m >= 3` and `t_a, t_f >= t_c`
+/// (the paper's "sufficient microbatches" remark).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineEstimator {
+    /// Attention time per microbatch.
+    pub t_a: f64,
+    /// One-way communication time per microbatch.
+    pub t_c: f64,
+    /// FFN time per microbatch.
+    pub t_f: f64,
+}
+
+impl PipelineEstimator {
+    /// Per-layer makespan with `m` microbatches (list-schedule recurrence
+    /// over the A -> C -> F -> C chain with A and F as serial resources).
+    pub fn makespan(&self, m: usize) -> f64 {
+        assert!(m >= 1);
+        let mut a_free = 0.0f64;
+        let mut f_free = 0.0f64;
+        let mut finish = 0.0f64;
+        for _ in 0..m {
+            let a_end = a_free + self.t_a;
+            a_free = a_end;
+            let f_start = (a_end + self.t_c).max(f_free);
+            let f_end = f_start + self.t_f;
+            f_free = f_end;
+            finish = f_end + self.t_c;
+        }
+        finish
+    }
+
+    /// Bubble fraction on the bottleneck resource relative to ideal.
+    pub fn bubble_fraction(&self, m: usize) -> f64 {
+        let ideal = (self.t_a.max(self.t_f)) * m as f64;
+        let act = self.makespan(m);
+        ((act - ideal) / act).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_gathers_ffn_sees_aggregate_scatter_returns_slices() {
+        let (barrier, ffn_inbox) = StepBarrier::new(2);
+        let b = barrier.clone();
+        let t0 = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let t1 = Tensor::from_f32(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+
+        let h0 = std::thread::spawn({
+            let b = b.clone();
+            let t0 = t0.clone();
+            move || {
+                let rx = b.submit(0, t0).unwrap();
+                rx.recv().unwrap()
+            }
+        });
+        let h1 = std::thread::spawn({
+            let b = b.clone();
+            let t1 = t1.clone();
+            move || {
+                let rx = b.submit(1, t1).unwrap();
+                rx.recv().unwrap()
+            }
+        });
+        // FFN side: receive aggregate, double it, scatter.
+        let agg = ffn_inbox.recv().unwrap();
+        assert_eq!(agg.shape(), &[4, 2]);
+        let doubled: Vec<f32> = agg.as_f32().unwrap().iter().map(|x| x * 2.0).collect();
+        barrier.scatter(Tensor::from_f32(&[4, 2], doubled).unwrap()).unwrap();
+
+        let r0 = h0.join().unwrap();
+        let r1 = h1.join().unwrap();
+        assert_eq!(r0.as_f32().unwrap(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(r1.as_f32().unwrap(), &[10.0, 12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn double_submit_rejected() {
+        let (barrier, _inbox) = StepBarrier::new(2);
+        let t = Tensor::zeros_f32(&[1, 2]);
+        let _rx = barrier.submit(0, t.clone()).unwrap();
+        assert!(barrier.submit(0, t).is_err());
+    }
+
+    #[test]
+    fn pipeline_three_microbatches_hide_comm() {
+        // Paper Fig. 2a: with >= 3 microbatches and balanced phases,
+        // communication is fully hidden.
+        let p = PipelineEstimator { t_a: 10.0, t_c: 3.0, t_f: 10.0 };
+        // Single microbatch: full serial chain visible.
+        assert!((p.makespan(1) - 26.0).abs() < 1e-9);
+        // Many microbatches: per-microbatch cost -> max(t_a, t_f).
+        let m = 32;
+        let per = p.makespan(m) / m as f64;
+        assert!((per - 10.0) / 10.0 < 0.1, "per-microbatch {per}");
+        assert!(p.bubble_fraction(32) < p.bubble_fraction(1));
+    }
+
+    #[test]
+    fn pipeline_attention_growth_creates_bubbles() {
+        // Paper Fig. 2b: when attention inflates past the balance point,
+        // FFN starves — visible as a larger makespan.
+        let balanced = PipelineEstimator { t_a: 10.0, t_c: 2.0, t_f: 10.0 };
+        let inflated = PipelineEstimator { t_a: 14.0, t_c: 2.0, t_f: 10.0 };
+        assert!(inflated.makespan(8) > balanced.makespan(8));
+    }
+}

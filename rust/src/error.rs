@@ -1,0 +1,80 @@
+//! Crate-wide error taxonomy.
+
+use thiserror::Error;
+
+/// Unified error type for the `afd` crate.
+#[derive(Error, Debug)]
+pub enum AfdError {
+    /// Configuration file or value errors (parse + validation).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Workload/trace errors (malformed trace rows, empty traces, ...).
+    #[error("workload error: {0}")]
+    Workload(String),
+
+    /// Analytical-layer errors (infeasible parameters, divergent moments).
+    #[error("analysis error: {0}")]
+    Analysis(String),
+
+    /// Simulator invariant violations.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Coordinator state-machine violations.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// PJRT runtime failures (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest problems (missing file, shape mismatch).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Serving-engine failures (channel teardown, worker panic).
+    #[error("server error: {0}")]
+    Server(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors surfaced from the `xla` crate (PJRT C API).
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for AfdError {
+    fn from(e: xla::Error) -> Self {
+        AfdError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = AfdError> = std::result::Result<T, E>;
+
+impl AfdError {
+    /// Convenience constructor used pervasively by validation code.
+    pub fn config(msg: impl Into<String>) -> Self {
+        AfdError::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_domain_prefix() {
+        let e = AfdError::Analysis("nu must be finite".into());
+        assert!(e.to_string().contains("analysis error"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: AfdError = io.into();
+        assert!(matches!(e, AfdError::Io(_)));
+    }
+}

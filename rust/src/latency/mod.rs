@@ -1,0 +1,11 @@
+//! Latency layer: linear phase models (§3.1), trace calibration
+//! (Appendix B regression), and the first-principles roofline derivation
+//! (Appendix B symbolic formulas).
+
+pub mod calibration;
+pub mod model;
+pub mod roofline;
+
+pub use calibration::{calibrate, calibrate_hardware, Calibrated, Sample};
+pub use model::{LinearLatency, PhaseModels};
+pub use roofline::{derive_slopes, ArchitectureSpec, DerivedSlopes, HardwareProfile};

@@ -1,0 +1,113 @@
+//! Linear latency models `t(x) = alpha * x + beta` (paper §3.1).
+
+/// One linear latency model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearLatency {
+    /// Cost per unit of the driving variable (tokens or requests).
+    pub alpha: f64,
+    /// Fixed per-invocation cost.
+    pub beta: f64,
+}
+
+impl LinearLatency {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Self { alpha, beta }
+    }
+
+    pub fn eval(&self, x: f64) -> f64 {
+        self.alpha * x + self.beta
+    }
+
+    /// Inverse: the x at which latency reaches `t` (None if t < beta).
+    pub fn invert(&self, t: f64) -> Option<f64> {
+        if self.alpha <= 0.0 || t < self.beta {
+            None
+        } else {
+            Some((t - self.beta) / self.alpha)
+        }
+    }
+
+    /// The driving-variable value where this model crosses `other`
+    /// (None if parallel).
+    pub fn crossover(&self, other: &LinearLatency) -> Option<f64> {
+        let da = self.alpha - other.alpha;
+        if da == 0.0 {
+            None
+        } else {
+            Some((other.beta - self.beta) / da)
+        }
+    }
+}
+
+/// The three phase models of an AFD bundle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseModels {
+    /// Attention: latency vs *token load* T.
+    pub attention: LinearLatency,
+    /// FFN: latency vs *aggregated batch* rB.
+    pub ffn: LinearLatency,
+    /// Communication round trip: latency vs aggregated batch rB.
+    pub comm: LinearLatency,
+}
+
+impl PhaseModels {
+    pub fn from_hardware(hw: &crate::config::hardware::HardwareParams) -> Self {
+        Self {
+            attention: LinearLatency::new(hw.alpha_a, hw.beta_a),
+            ffn: LinearLatency::new(hw.alpha_f, hw.beta_f),
+            comm: LinearLatency::new(hw.alpha_c, hw.beta_c),
+        }
+    }
+
+    /// Whether communication can be hidden by pipelining across the whole
+    /// sweep: the paper's operating condition `t_A, t_F > 2 t_C`.
+    pub fn comm_hidden(&self, token_load: f64, agg_batch: f64) -> bool {
+        let tc = self.comm.eval(agg_batch);
+        self.attention.eval(token_load) > 2.0 * tc && self.ffn.eval(agg_batch) > 2.0 * tc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::HardwareParams;
+
+    #[test]
+    fn eval_and_invert() {
+        let m = LinearLatency::new(0.083, 100.0);
+        assert!((m.eval(2048.0) - 269.984).abs() < 1e-9);
+        let x = m.invert(269.984).unwrap();
+        assert!((x - 2048.0).abs() < 1e-9);
+        assert!(m.invert(50.0).is_none());
+    }
+
+    #[test]
+    fn crossover_point() {
+        // Comm (0.022x + 20) crosses FFN (0.083x + 100) where
+        // 0.061x = -80 -> negative: they never cross for positive x
+        // (FFN always above for the paper's parameters).
+        let comm = LinearLatency::new(0.022, 20.0);
+        let ffn = LinearLatency::new(0.083, 100.0);
+        let x = comm.crossover(&ffn).unwrap();
+        assert!(x < 0.0);
+        assert!(comm.crossover(&comm).is_none());
+    }
+
+    #[test]
+    fn paper_comm_hidden_condition() {
+        // Around the paper's operating point (r <= ~16), communication is
+        // hideable: t_A, t_F > 2 t_C. Far past the optimum (r = 32) the
+        // round-trip cost alone exceeds mu_A — one more reason large r
+        // loses (the paper's sweep also stops gaining there).
+        let pm = PhaseModels::from_hardware(&HardwareParams::paper_table3());
+        let b = 256.0;
+        let theta = 599.0;
+        for r in [1.0, 4.0, 8.0, 9.3, 16.0] {
+            assert!(
+                pm.comm_hidden(b * theta, r * b),
+                "comm not hidden at r={r}"
+            );
+        }
+        assert!(!pm.comm_hidden(b * theta, 32.0 * b));
+    }
+}

@@ -1,0 +1,219 @@
+//! First-principles latency derivation — Appendix B.
+//!
+//! The paper derives the slopes symbolically from hardware parameters and
+//! the DeepSeek-V3 architecture:
+//!
+//! ```text
+//! alpha_A = (d_c + d_rope) * bytes / (beta_HBM * eta_mem)          (Eq. 19)
+//! alpha_F = N_expert/card * 6 H d_expert / (pi_peak eta_compute)
+//!           * k (1 + MTP) / N_expert                               (Eq. 26)
+//! alpha_C = N_expert/card * 3 H / beta_net * k (1 + MTP) / N_expert (Eq. 31)
+//! ```
+//!
+//! Hardware values for Ascend 910C are confidential; this module keeps the
+//! derivation symbolic so any platform can be plugged in, and provides a
+//! CPU-PJRT profile for our own testbed plus a check that plausible
+//! accelerator numbers reproduce the *order* of Table 3.
+
+/// Platform hardware parameters (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HardwareProfile {
+    /// Peak compute throughput, FLOP/s (paper: INT8 TFLOPS).
+    pub pi_peak: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub beta_hbm: f64,
+    /// Effective memory-bandwidth utilization in (0, 1].
+    pub eta_mem: f64,
+    /// Effective compute utilization in (0, 1].
+    pub eta_compute: f64,
+    /// Effective A<->F network bandwidth, bytes/s.
+    pub beta_net: f64,
+}
+
+/// Model architecture constants (paper B.1, DeepSeek-V3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchitectureSpec {
+    /// Hidden size H.
+    pub hidden: f64,
+    /// Compressed KV dimension d_c + d_rope.
+    pub kv_dim: f64,
+    /// Bytes per KV element (BF16 = 2).
+    pub kv_bytes: f64,
+    /// Expert intermediate dimension d_expert.
+    pub d_expert: f64,
+    /// Total experts N_expert.
+    pub n_expert: f64,
+    /// Experts per token k.
+    pub top_k: f64,
+    /// Multi-token-prediction depth.
+    pub mtp_depth: f64,
+    /// Experts resident per card.
+    pub experts_per_card: f64,
+}
+
+impl ArchitectureSpec {
+    /// DeepSeek-V3 constants from Appendix B.1.
+    pub fn deepseek_v3() -> Self {
+        Self {
+            hidden: 7168.0,
+            kv_dim: 576.0,
+            kv_bytes: 2.0,
+            d_expert: 2048.0,
+            n_expert: 256.0,
+            top_k: 8.0,
+            mtp_depth: 1.0,
+            experts_per_card: 16.0,
+        }
+    }
+
+    /// Our tiny demo transformer (python/compile/model.py), dense FFN:
+    /// modeled as a 1-expert, k=1 "MoE" so the same formulas apply.
+    pub fn demo_tiny() -> Self {
+        Self {
+            hidden: 128.0,
+            kv_dim: 128.0, // H heads x Dh = 4 x 32 (uncompressed KV)
+            kv_bytes: 4.0, // f32
+            d_expert: 384.0,
+            n_expert: 1.0,
+            top_k: 1.0,
+            mtp_depth: 0.0,
+            experts_per_card: 1.0,
+        }
+    }
+
+    /// Batch-size mapping factor `k (1 + MTP) / N_expert` (Eq. 24).
+    pub fn expert_batch_factor(&self) -> f64 {
+        self.top_k * (1.0 + self.mtp_depth) / self.n_expert
+    }
+}
+
+/// Derived slopes (seconds per unit; convert to "cycles" by multiplying
+/// with a clock rate if desired).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DerivedSlopes {
+    /// Attention seconds per token of KV load (Eq. 19).
+    pub alpha_a: f64,
+    /// FFN seconds per request in the aggregated batch (Eq. 26).
+    pub alpha_f: f64,
+    /// Communication seconds per request (Eq. 31).
+    pub alpha_c: f64,
+}
+
+/// Apply Appendix B's derivation.
+pub fn derive_slopes(hw: &HardwareProfile, arch: &ArchitectureSpec) -> DerivedSlopes {
+    // Eq. 17-19: KV bytes per token over effective bandwidth.
+    let v_token = arch.kv_dim * arch.kv_bytes;
+    let alpha_a = v_token / (hw.beta_hbm * hw.eta_mem);
+
+    // Eq. 20-26: FLOPs per expert per token over effective compute,
+    // times experts per card, times the expert-batch mapping.
+    let flops_per_token = 6.0 * arch.hidden * arch.d_expert;
+    let alpha_f = arch.experts_per_card * flops_per_token
+        / (hw.pi_peak * hw.eta_compute)
+        * arch.expert_batch_factor();
+
+    // Eq. 27-31: 3H bytes per token over network bandwidth.
+    let alpha_c =
+        arch.experts_per_card * 3.0 * arch.hidden / hw.beta_net * arch.expert_batch_factor();
+
+    DerivedSlopes { alpha_a, alpha_f, alpha_c }
+}
+
+/// Arithmetic-intensity threshold (FLOPs/byte) above which the FFN is
+/// compute-bound on this hardware — the roofline ridge point.
+pub fn roofline_ridge(hw: &HardwareProfile) -> f64 {
+    (hw.pi_peak * hw.eta_compute) / (hw.beta_hbm * hw.eta_mem)
+}
+
+/// Minimum aggregated batch for the FFN to reach compute-bound operation:
+/// weights are read once per step (2 H d_expert k_bytes per expert), so
+/// intensity grows linearly in the per-expert batch.
+pub fn ffn_saturation_batch(hw: &HardwareProfile, arch: &ArchitectureSpec, weight_bytes: f64) -> f64 {
+    // FLOPs per expert-token: 6 H d_expert; bytes per expert: weights.
+    // intensity(B_e) = 6 H d_expert B_e / weight_bytes >= ridge.
+    let ridge = roofline_ridge(hw);
+    let per_token_flops = 6.0 * arch.hidden * arch.d_expert;
+    let b_e = ridge * weight_bytes / per_token_flops;
+    // Convert per-expert batch to aggregated batch via Eq. 24.
+    b_e / arch.expert_batch_factor()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A plausible 910C-class accelerator (public ballpark figures).
+    fn plausible_npu() -> HardwareProfile {
+        HardwareProfile {
+            pi_peak: 512e12,   // 512 TFLOPS INT8-class
+            beta_hbm: 1.6e12,  // 1.6 TB/s
+            eta_mem: 0.7,
+            eta_compute: 0.45,
+            beta_net: 150e9, // 150 GB/s effective
+        }
+    }
+
+    #[test]
+    fn deepseek_v3_constants() {
+        let a = ArchitectureSpec::deepseek_v3();
+        assert_eq!(a.kv_dim, 576.0);
+        // Eq. 24: k(1+MTP)/N = 8*2/256 = 1/16.
+        assert!((a.expert_batch_factor() - 1.0 / 16.0).abs() < 1e-12);
+        // Eq. 17: 1152 bytes per token.
+        assert_eq!(a.kv_dim * a.kv_bytes, 1152.0);
+        // Eq. 20: ~8.81e7 FLOPs per expert-token.
+        assert!((6.0 * a.hidden * a.d_expert - 8.81e7).abs() < 1e6);
+    }
+
+    #[test]
+    fn slope_ratios_match_table3_order() {
+        // The confidential hardware prevents exact reproduction, but the
+        // derived alpha_F / alpha_A ratio should land within an order of
+        // magnitude of Table 3's 0.083 / 0.00165 = ~50 for plausible
+        // hardware (the paper's own consistency claim).
+        let s = derive_slopes(&plausible_npu(), &ArchitectureSpec::deepseek_v3());
+        let ratio = s.alpha_f / s.alpha_a;
+        let table3_ratio = 0.083 / 0.00165;
+        assert!(
+            ratio / table3_ratio > 0.1 && ratio / table3_ratio < 10.0,
+            "alpha_F/alpha_A = {ratio:.1} vs Table 3 {table3_ratio:.1}"
+        );
+    }
+
+    #[test]
+    fn attention_slope_is_bandwidth_bound() {
+        let hw = plausible_npu();
+        let s = derive_slopes(&hw, &ArchitectureSpec::deepseek_v3());
+        // 1152 bytes / (1.6e12 * 0.7) = ~1.03e-9 s/token.
+        assert!((s.alpha_a - 1152.0 / (1.6e12 * 0.7)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ridge_and_saturation() {
+        let hw = plausible_npu();
+        let arch = ArchitectureSpec::deepseek_v3();
+        let ridge = roofline_ridge(&hw);
+        assert!(ridge > 50.0 && ridge < 1000.0, "ridge {ridge}");
+        // Weight bytes per expert: 3 matrices H x d_expert, INT8 = 1 byte.
+        let wbytes = 3.0 * arch.hidden * arch.d_expert;
+        let b_sat = ffn_saturation_batch(&hw, &arch, wbytes);
+        // Saturation batch should be positive and modest (hundreds-ish).
+        assert!(b_sat > 1.0 && b_sat < 100_000.0, "b_sat {b_sat}");
+    }
+
+    #[test]
+    fn demo_arch_slopes_positive() {
+        let hw = HardwareProfile {
+            pi_peak: 100e9, // ~CPU-scale
+            beta_hbm: 20e9,
+            eta_mem: 0.5,
+            eta_compute: 0.5,
+            beta_net: 10e9,
+        };
+        let s = derive_slopes(&hw, &ArchitectureSpec::demo_tiny());
+        assert!(s.alpha_a > 0.0 && s.alpha_f > 0.0 && s.alpha_c > 0.0);
+        // Dense tiny model: FFN slope (per request) far above per-token
+        // attention slope.
+        assert!(s.alpha_f > s.alpha_a);
+    }
+}

@@ -1,0 +1,55 @@
+//! # afd — Analytical Provisioning for Attention–FFN Disaggregated LLM Serving
+//!
+//! A production-quality reproduction of *"Analytical Provisioning for
+//! Attention–FFN Disaggregated LLM Serving under Stochastic Workloads"*:
+//! an AFD serving framework whose first-class feature is the paper's
+//! closed-form provisioning rule for the Attention-to-FFN instance ratio
+//! `r` in an `rA–1F` bundle.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`stats`] — probability substrate: deterministic RNG, distributions,
+//!   Gaussian special functions, order statistics (`kappa_r`), quadrature,
+//!   running moments, least-squares regression.
+//! * [`workload`] — request model `(P, D)`, synthetic generators, trace
+//!   I/O, the nonparametric estimator of the stationary per-slot load
+//!   (paper Eq. 15–16), and the closed-form moments of Lemma 4.1.
+//! * [`latency`] — linear latency models `t = alpha * x + beta` (paper
+//!   §3.1), calibration by regression (Appendix B / Table 3), and the
+//!   first-principles roofline derivation (Appendix B).
+//! * [`analysis`] — the paper's analytical contribution: mean-field cycle
+//!   time & Theorem 4.4 candidates, the Gaussian barrier of Theorem 4.3,
+//!   the Gaussian cycle time Eq. (9), and the provisioning rules
+//!   `r*_mf` / `r*_G` (Eq. 10 / Eq. 12).
+//! * [`sim`] — the trace-calibrated discrete-event AFD simulator of §5.1
+//!   (six-state batch FSM, two batches in flight, continuous batching).
+//! * [`coordinator`] — the serving-side coordination layer: routing,
+//!   continuous batching admission, KV slot management, step scheduling
+//!   with a cross-worker barrier, bundle topology, online autoscaling.
+//! * [`runtime`] — PJRT execution of the AOT-compiled XLA artifacts
+//!   (`artifacts/*.hlo.txt`) produced by `python/compile/aot.py`.
+//! * [`server`] — the threaded serving engine that ties the coordinator
+//!   to the runtime and drives a real autoregressive decode loop.
+//! * [`config`] — TOML-subset configuration for experiments and serving.
+//! * [`bench_support`] — the bench harness regenerating every figure and
+//!   table of the paper's evaluation section.
+//! * [`testkit`] — a small property-testing framework used by the test
+//!   suite (the environment is offline; no proptest).
+//!
+//! Python (JAX + Pallas) exists only on the build path; see `DESIGN.md`.
+
+pub mod error;
+pub mod util;
+pub mod stats;
+pub mod config;
+pub mod workload;
+pub mod latency;
+pub mod analysis;
+pub mod sim;
+pub mod coordinator;
+pub mod runtime;
+pub mod server;
+pub mod bench_support;
+pub mod testkit;
+
+pub use error::{AfdError, Result};

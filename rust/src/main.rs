@@ -1,0 +1,208 @@
+//! `afd` — command-line interface to the AFD provisioning framework.
+//!
+//! Subcommands:
+//!   provision   compute r*_mf / r*_G from workload parameters or a trace
+//!   simulate    run the discrete-event simulator for one ratio
+//!   sweep       sweep ratios (Fig. 3 data) and print the table
+//!   estimate    estimate (theta, nu^2) from a trace CSV
+//!   serve       run the real PJRT serving engine on the demo model
+//!   gen-trace   generate a synthetic production-like trace CSV
+//!   regimes     print the operating-regime map for the configuration
+
+use afd::analysis::cycle_time::OperatingPoint;
+use afd::analysis::provisioning::{recommend_from_load, recommend_from_trace};
+use afd::config::experiment::ExperimentConfig;
+use afd::error::Result;
+use afd::sim::engine::{simulate, sweep_ratios, SimOptions};
+use afd::util::cli::{Args, HelpBuilder};
+use afd::util::tablefmt::{sig, Table};
+use afd::workload::stationary::stationary_for_spec;
+use afd::workload::trace::Trace;
+
+fn main() {
+    afd::util::logging::init();
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("provision") => provision(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("estimate") => cmd_estimate(args),
+        Some("serve") => cmd_serve(args),
+        Some("gen-trace") => cmd_gen_trace(args),
+        Some("regimes") => cmd_regimes(args),
+        _ => {
+            print!(
+                "{}",
+                HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
+                    .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
+                    .entry("simulate", "run the discrete-event AFD simulator at --r")
+                    .entry("sweep", "simulate the configured ratio sweep and print the Fig.3 table")
+                    .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
+                    .entry("serve", "serve batched requests through the real PJRT engine")
+                    .entry("gen-trace", "write a synthetic production-like trace CSV")
+                    .entry("regimes", "print attention/comm/ffn regime boundaries")
+                    .render()
+            );
+            Ok(())
+        }
+    }
+}
+
+fn provision(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let batch = args.get_usize("batch", cfg.topology.batch_per_worker)?;
+    let rec = if let Some(trace_path) = args.get("trace") {
+        let trace = Trace::load_csv(trace_path)?;
+        println!("estimated from {} requests in {trace_path}", trace.len());
+        recommend_from_trace(&cfg.hardware, &trace, batch, &[])?
+    } else {
+        let load = stationary_for_spec(&cfg.workload, cfg.seed);
+        recommend_from_load(&cfg.hardware, load, batch, &[])?
+    };
+    println!("theta = {:.2}, nu = {:.2}", rec.load.theta, rec.load.nu());
+    println!("mean-field r*_mf = {:.3} (Thr {:.5})", rec.mean_field.r_star, rec.mean_field.throughput);
+    println!(
+        "barrier-aware r*_G = {} (Thr {:.5}), regime: {}, sync overhead {:.2}%",
+        rec.barrier_aware.r_star,
+        rec.barrier_aware.throughput,
+        rec.regime.name(),
+        100.0 * rec.sync_overhead
+    );
+    let mut t = Table::new(&["candidate r", "kind", "throughput"]);
+    for c in &rec.mean_field.candidates {
+        t.row(&[sig(c.r, 4), format!("{:?}", c.kind), sig(c.throughput, 5)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.requests_per_instance = args.get_usize("requests", cfg.requests_per_instance)?;
+    cfg.topology.batch_per_worker = args.get_usize("batch", cfg.topology.batch_per_worker)?;
+    let r = args.get_usize("r", 8)?;
+    let out = simulate(&cfg, r, SimOptions::default());
+    let m = &out.metrics;
+    println!("r = {r}, B = {}", m.batch);
+    println!("throughput/instance = {:.6} tokens/cycle", m.throughput_per_instance);
+    println!("TPOT = {:.3} cycles", m.tpot);
+    println!("idle: attention {:.2}%, ffn {:.2}%", 100.0 * m.idle_attention, 100.0 * m.idle_ffn);
+    println!("mean barrier load = {:.1}, mean worker load = {:.1}", m.mean_barrier_load, m.mean_worker_load);
+    println!("completed {} requests in {:.0} cycles", m.completed, m.total_time);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.requests_per_instance = args.get_usize("requests", cfg.requests_per_instance)?;
+    if let Some(_rs) = args.get("ratios") {
+        cfg.ratio_sweep = args.get_list_usize("ratios", &[])?;
+    }
+    let metrics = sweep_ratios(&cfg, SimOptions::default());
+    let load = stationary_for_spec(&cfg.workload, cfg.seed);
+    let op = OperatingPoint::new(cfg.hardware, load, cfg.topology.batch_per_worker);
+    let mut t = Table::new(&["r", "sim Thr/inst", "theory Thr_mf", "theory Thr_G", "TPOT", "idle_A", "idle_F"])
+        .with_title("Ratio sweep (paper Fig. 3)");
+    for m in &metrics {
+        t.row(&[
+            m.r.to_string(),
+            sig(m.throughput_per_instance, 5),
+            sig(op.throughput_mean_field(m.r as f64), 5),
+            sig(op.throughput_gaussian(m.r), 5),
+            sig(m.tpot, 5),
+            format!("{:.1}%", 100.0 * m.idle_attention),
+            format!("{:.1}%", 100.0 * m.idle_ffn),
+        ]);
+    }
+    t.print();
+    if let Some(path) = args.get("csv") {
+        afd::server::metrics_export::sim_sweep_to_csv(&metrics, path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| afd::AfdError::config("estimate requires --trace <csv>"))?;
+    let trace = Trace::load_csv(path)?;
+    let est = afd::workload::estimator::estimate_with_error(&trace)?;
+    println!("n = {}", est.n);
+    println!("theta = {:.3} ± {:.3}", est.load.theta, est.theta_se);
+    println!("nu^2  = {:.1} ± {:.1} (nu = {:.2})", est.load.nu_sq, est.nu_sq_se, est.load.nu());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use afd::runtime::artifact::{default_artifacts_dir, Manifest};
+    use afd::server::driver::closed_loop_requests;
+    use afd::server::engine::{serve, EngineConfig};
+    let dir = args.get_str("artifacts", default_artifacts_dir().to_str().unwrap());
+    let manifest = Manifest::load(dir)?;
+    manifest.check_files()?;
+    let n = args.get_usize("requests", 2 * manifest.model.workers * manifest.model.batch_per_worker)?;
+    let budget = args.get_u64("decode-budget", 16)?;
+    let requests = closed_loop_requests(n, 4, budget, 20260710);
+    println!(
+        "serving {n} requests on {}A-1F (B = {})...",
+        manifest.model.workers, manifest.model.batch_per_worker
+    );
+    let report = serve(&manifest, requests, EngineConfig::default())?;
+    print!("{}", afd::server::metrics_export::report_to_json(&report).to_string_pretty());
+    println!();
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    use afd::workload::trace::{synthetic_production_trace, ProductionCorpus};
+    let corpus = match args.get_str("corpus", "openchat-like").as_str() {
+        "openchat-like" => ProductionCorpus::OpenChatLike,
+        "burstgpt-like" => ProductionCorpus::BurstGptLike,
+        "lmsys-like" => ProductionCorpus::LmsysLike,
+        "wildchat-like" => ProductionCorpus::WildChatLike,
+        other => {
+            return Err(afd::AfdError::config(format!("unknown corpus {other:?}")));
+        }
+    };
+    let n = args.get_usize("n", 10_000)?;
+    let seed = args.get_u64("seed", 1)?;
+    let out = args.get_str("out", "trace.csv");
+    synthetic_production_trace(corpus, n, seed).save_csv(&out)?;
+    println!("wrote {n} requests ({}) to {out}", corpus.name());
+    Ok(())
+}
+
+fn cmd_regimes(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let load = stationary_for_spec(&cfg.workload, cfg.seed);
+    let op = OperatingPoint::new(cfg.hardware, load, cfg.topology.batch_per_worker);
+    let mut t = Table::new(&["regime", "r from", "r to"]).with_title("Operating regimes");
+    for (regime, lo, hi) in afd::analysis::regimes::regime_boundaries(&op) {
+        t.row(&[
+            regime.name().to_string(),
+            sig(lo, 4),
+            if hi.is_infinite() { "inf".into() } else { sig(hi, 4) },
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,266 @@
+//! Artifact manifest + HLO-text loading.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every AOT-lowered entry point (file name, input/output tensor specs).
+//! This module parses the manifest, loads the HLO **text** (the
+//! interchange format — serialized protos from jax >= 0.5 are rejected by
+//! xla_extension 0.5.1), and compiles executables on the PJRT client.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{AfdError, Result};
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+/// One tensor specification from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .field("name")?
+            .as_str()
+            .ok_or_else(|| AfdError::Artifact("tensor name must be a string".into()))?
+            .to_string();
+        let shape = j
+            .field("shape")?
+            .as_arr()
+            .ok_or_else(|| AfdError::Artifact(format!("{name}: shape must be an array")))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| AfdError::Artifact(format!("{name}: bad dimension")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::from_manifest(
+            j.field("dtype")?
+                .as_str()
+                .ok_or_else(|| AfdError::Artifact(format!("{name}: dtype must be a string")))?,
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One artifact (entry point) from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model/topology metadata recorded by the AOT step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub kv_capacity: usize,
+    pub workers: usize,
+    pub batch_per_worker: usize,
+    pub aggregate_batch: usize,
+    /// KV-capacity sweep emitted for latency calibration.
+    pub cal_capacities: Vec<usize>,
+    /// Batch sweep emitted for latency calibration.
+    pub cal_batches: Vec<usize>,
+    /// Attention batch sweep (token load = batch * capacity) emitted for
+    /// alpha_A calibration.
+    pub cal_attention_batches: Vec<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            AfdError::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let model = j.field("model")?;
+        let topo = j.field("topology")?;
+        let cal = j.field("calibration")?;
+        let get = |obj: &Json, k: &str| -> Result<usize> {
+            obj.field(k)?
+                .as_usize()
+                .ok_or_else(|| AfdError::Artifact(format!("manifest field {k} must be integer")))
+        };
+        let cal_list = |k: &str| -> Result<Vec<usize>> {
+            // Optional list (older manifests may omit newer sweeps).
+            let Some(arr) = cal.get(k) else { return Ok(Vec::new()) };
+            arr.as_arr()
+                .ok_or_else(|| AfdError::Artifact(format!("calibration.{k} must be array")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| AfdError::Artifact(format!("calibration.{k}: bad value")))
+                })
+                .collect()
+        };
+        let meta = ModelMeta {
+            d_model: get(model, "d_model")?,
+            n_heads: get(model, "n_heads")?,
+            head_dim: get(model, "head_dim")?,
+            d_ff: get(model, "d_ff")?,
+            vocab: get(model, "vocab")?,
+            n_layers: get(model, "n_layers")?,
+            kv_capacity: get(model, "kv_capacity")?,
+            workers: get(topo, "workers")?,
+            batch_per_worker: get(topo, "batch_per_worker")?,
+            aggregate_batch: get(topo, "aggregate_batch")?,
+            cal_capacities: cal_list("capacities")?,
+            cal_batches: cal_list("batches")?,
+            cal_attention_batches: cal_list("attention_batches")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .field("artifacts")?
+            .as_obj()
+            .ok_or_else(|| AfdError::Artifact("artifacts must be an object".into()))?;
+        for (name, spec) in arts {
+            let file = dir.join(
+                spec.field("file")?
+                    .as_str()
+                    .ok_or_else(|| AfdError::Artifact(format!("{name}: file must be string")))?,
+            );
+            let tensors = |k: &str| -> Result<Vec<TensorSpec>> {
+                spec.field(k)?
+                    .as_arr()
+                    .ok_or_else(|| AfdError::Artifact(format!("{name}: {k} must be array")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir, model: meta, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| AfdError::Artifact(format!("artifact {name:?} not in manifest")))
+    }
+
+    /// Verify every artifact file exists on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for a in self.artifacts.values() {
+            if !a.file.is_file() {
+                return Err(AfdError::Artifact(format!(
+                    "missing artifact file {} (run `make artifacts`)",
+                    a.file.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$AFD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("AFD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"d_model": 128, "n_heads": 4, "head_dim": 32, "d_ff": 384,
+                "vocab": 256, "n_layers": 2, "kv_capacity": 128, "seed": 1},
+      "topology": {"workers": 4, "batch_per_worker": 8, "aggregate_batch": 32},
+      "calibration": {"capacities": [64, 128], "batches": [8, 16]},
+      "artifacts": {
+        "embed": {"file": "embed.hlo.txt",
+          "inputs": [{"name": "ids", "shape": [8], "dtype": "s32"}],
+          "outputs": [{"name": "x", "shape": [8, 128], "dtype": "f32"}]}
+      }
+    }"#;
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("afd_manifest_test");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, 128);
+        assert_eq!(m.model.workers, 4);
+        assert_eq!(m.model.cal_batches, vec![8, 16]);
+        let a = m.artifact("embed").unwrap();
+        assert_eq!(a.inputs[0].dtype, DType::S32);
+        assert_eq!(a.outputs[0].shape, vec![8, 128]);
+        assert_eq!(a.outputs[0].elements(), 1024);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_files_reports_missing() {
+        let dir = std::env::temp_dir().join("afd_manifest_missing");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.check_files().is_err());
+        std::fs::write(dir.join("embed.hlo.txt"), "HloModule x").unwrap();
+        assert!(m.check_files().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").is_file() {
+            let m = Manifest::load(&dir).unwrap();
+            m.check_files().unwrap();
+            assert!(m.artifacts.len() >= 10);
+            assert_eq!(m.model.aggregate_batch, m.model.workers * m.model.batch_per_worker);
+            for i in 0..m.model.n_layers {
+                m.artifact(&format!("attention_l{i}")).unwrap();
+                m.artifact(&format!("ffn_l{i}")).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let e = Manifest::load("/nonexistent-dir-afd").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

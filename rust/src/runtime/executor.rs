@@ -1,0 +1,393 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//!
+//! Thread model: the `xla` crate's wrappers are `Rc`-based and therefore
+//! **thread-confined**. Each AFD instance (Attention worker thread, FFN
+//! server thread) owns its own [`LocalRuntime`] — its own PJRT client and
+//! compiled executables — exactly mirroring the paper's topology where
+//! every instance is a separate device. Host [`Tensor`]s are the only
+//! values that cross threads (that *is* the A<->F communication).
+//!
+//! [`DeviceTensor`]s are persistent PJRT buffers confined to their owning
+//! thread; Attention workers keep KV caches device-resident across steps
+//! (the runtime hot-path optimization recorded in EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::error::{AfdError, Result};
+use crate::runtime::artifact::{ArtifactSpec, Manifest, TensorSpec};
+use crate::runtime::tensor::{DType, Tensor};
+
+/// A device-resident tensor (opaque PJRT buffer). Thread-confined.
+pub struct DeviceTensor {
+    pub(crate) buffer: xla::PjRtBuffer,
+    pub spec: TensorSpec,
+}
+
+impl DeviceTensor {
+    /// Copy back to the host.
+    pub fn to_host(&self) -> Result<Tensor> {
+        let lit = self.buffer.to_literal_sync()?;
+        literal_to_tensor(&lit, &self.spec)
+    }
+}
+
+/// A compiled artifact ready to execute. Thread-confined.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executable {
+    /// Load HLO text and compile on the given client.
+    pub fn load(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Executable> {
+        let path = spec.file.to_str().ok_or_else(|| {
+            AfdError::Artifact(format!("non-utf8 artifact path {:?}", spec.file))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executable { spec: spec.clone(), exe, client: client.clone() })
+    }
+
+    fn check_inputs(&self, inputs: &[&Tensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(AfdError::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                return Err(AfdError::Runtime(format!(
+                    "{}: input {:?} expects {:?}/{:?}, got {:?}/{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.shape,
+                    s.dtype,
+                    t.shape(),
+                    t.dtype()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors, returning host tensors.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = take_root(result, &self.spec.name)?;
+        let tuple = root.to_literal_sync()?.to_tuple()?;
+        self.unpack_outputs(tuple)
+    }
+
+    /// Execute with a mix of host uploads and persistent device buffers;
+    /// outputs stay on device.
+    pub fn run_device(&self, inputs: &[ExecInput]) -> Result<Vec<DeviceTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(AfdError::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        // Pass 1: upload host tensors (ownership kept in `owned`).
+        let mut owned: Vec<Option<xla::PjRtBuffer>> = Vec::with_capacity(inputs.len());
+        for (inp, spec) in inputs.iter().zip(&self.spec.inputs) {
+            match inp {
+                ExecInput::Host(t) => {
+                    if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                        return Err(AfdError::Runtime(format!(
+                            "{}: input {:?} shape/dtype mismatch",
+                            self.spec.name, spec.name
+                        )));
+                    }
+                    owned.push(Some(upload(&self.client, t)?));
+                }
+                ExecInput::Device(d) => {
+                    if d.spec.shape != spec.shape || d.spec.dtype != spec.dtype {
+                        return Err(AfdError::Runtime(format!(
+                            "{}: device input {:?} shape mismatch",
+                            self.spec.name, spec.name
+                        )));
+                    }
+                    owned.push(None);
+                }
+            }
+        }
+        // Pass 2: assemble argument references.
+        let arg_refs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(inp, o)| match inp {
+                ExecInput::Host(_) => o.as_ref().unwrap(),
+                ExecInput::Device(d) => &d.buffer,
+            })
+            .collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&arg_refs)?;
+        let root = take_root(result, &self.spec.name)?;
+        if self.spec.outputs.len() == 1 {
+            return Ok(vec![DeviceTensor { buffer: root, spec: self.spec.outputs[0].clone() }]);
+        }
+        // Multi-output: the computation returns a tuple buffer; split via
+        // a host literal and re-upload (CPU client: cheap memcpys).
+        let tuple = root.to_literal_sync()?.to_tuple()?;
+        let tensors = self.unpack_outputs(tuple)?;
+        tensors
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(t, s)| {
+                upload(&self.client, &t).map(|b| DeviceTensor { buffer: b, spec: s.clone() })
+            })
+            .collect()
+    }
+
+    fn unpack_outputs(&self, tuple: Vec<xla::Literal>) -> Result<Vec<Tensor>> {
+        if tuple.len() != self.spec.outputs.len() {
+            return Err(AfdError::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tuple.len()
+            )));
+        }
+        tuple
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| literal_to_tensor(lit, spec))
+            .collect()
+    }
+}
+
+fn take_root(result: Vec<Vec<xla::PjRtBuffer>>, name: &str) -> Result<xla::PjRtBuffer> {
+    result
+        .into_iter()
+        .next()
+        .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+        .ok_or_else(|| AfdError::Runtime(format!("{name}: empty result")))
+}
+
+/// An executable input: host tensor (uploaded per call) or persistent
+/// device buffer.
+pub enum ExecInput<'a> {
+    Host(&'a Tensor),
+    Device(&'a DeviceTensor),
+}
+
+fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    Ok(match t {
+        Tensor::F32 { shape, data } => client.buffer_from_host_buffer::<f32>(data, shape, None)?,
+        Tensor::S32 { shape, data } => client.buffer_from_host_buffer::<i32>(data, shape, None)?,
+    })
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match t {
+        Tensor::F32 { shape, data } => (xla::ElementType::F32, shape, bytes_of_f32(data)),
+        Tensor::S32 { shape, data } => (xla::ElementType::S32, shape, bytes_of_i32(data)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes).map_err(AfdError::from)
+}
+
+fn literal_to_tensor(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    match spec.dtype {
+        DType::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+        DType::S32 => Tensor::from_s32(&spec.shape, lit.to_vec::<i32>()?),
+    }
+}
+
+fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// A per-thread runtime: one PJRT client + compile-once executable cache.
+///
+/// Construct one per AFD instance thread. `Manifest` (plain data) is the
+/// only shared state.
+pub struct LocalRuntime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl LocalRuntime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Upload a host tensor into a persistent device buffer.
+    pub fn to_device(&self, t: &Tensor) -> Result<DeviceTensor> {
+        let spec =
+            TensorSpec { name: "uploaded".into(), shape: t.shape().to_vec(), dtype: t.dtype() };
+        Ok(DeviceTensor { buffer: upload(&self.client, t)?, spec })
+    }
+
+    /// Get (compiling on first use) the named executable.
+    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let exe = Rc::new(Executable::load(&self.client, &spec)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a list of artifacts (startup path).
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::default_artifacts_dir;
+
+    fn runtime() -> Option<LocalRuntime> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").is_file() {
+            Some(LocalRuntime::new(Manifest::load(dir).unwrap()).unwrap())
+        } else {
+            eprintln!("skipping runtime test: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn embed_executes_and_distinct_tokens_differ() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.get("embed").unwrap();
+        let m = rt.manifest().model.clone();
+        let b = m.batch_per_worker;
+        let ids = Tensor::from_s32(&[b], (0..b as i32).collect()).unwrap();
+        let out = exe.run(&[&ids]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[b, m.d_model]);
+        let x = out[0].as_f32().unwrap();
+        assert!(x[..m.d_model] != x[m.d_model..2 * m.d_model]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.get("embed").unwrap();
+        let b = rt.manifest().model.batch_per_worker;
+        let bad = Tensor::from_s32(&[3], vec![0, 1, 2]).unwrap();
+        assert!(exe.run(&[&bad]).is_err());
+        let f32bad = Tensor::from_f32(&[b], vec![0.0; b]).unwrap();
+        assert!(exe.run(&[&f32bad]).is_err());
+        assert!(exe.run(&[]).is_err());
+    }
+
+    #[test]
+    fn attention_step_updates_cache_position_zero_only() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.get("attention_l0").unwrap();
+        let m = rt.manifest().model.clone();
+        let b = m.batch_per_worker;
+        let x = Tensor::from_f32(&[b, m.d_model], vec![0.1; b * m.d_model]).unwrap();
+        let kc = Tensor::zeros_f32(&[b, m.kv_capacity, m.n_heads, m.head_dim]);
+        let lens = Tensor::zeros_s32(&[b]);
+        let out = exe.run(&[&x, &kc, &kc, &lens]).unwrap();
+        assert_eq!(out.len(), 3);
+        let k = out[1].as_f32().unwrap();
+        let row = m.n_heads * m.head_dim;
+        assert!(k[..row].iter().map(|v| v * v).sum::<f32>() > 0.0);
+        assert_eq!(k[row..2 * row].iter().map(|v| v * v).sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn ffn_split_equals_aggregate() {
+        let Some(rt) = runtime() else { return };
+        let agg = rt.get("ffn_l0").unwrap();
+        let per = rt.get("ffn_worker_l0").unwrap();
+        let m = rt.manifest().model.clone();
+        let (n, b) = (m.aggregate_batch, m.batch_per_worker);
+        let data: Vec<f32> = (0..n * m.d_model).map(|i| (i as f32 * 0.01).sin()).collect();
+        let x = Tensor::from_f32(&[n, m.d_model], data.clone()).unwrap();
+        let full = agg.run(&[&x]).unwrap().remove(0);
+        let mut parts = Vec::new();
+        for w in 0..m.workers {
+            let lo = w * b * m.d_model;
+            let xw = Tensor::from_f32(&[b, m.d_model], data[lo..lo + b * m.d_model].to_vec())
+                .unwrap();
+            parts.push(per.run(&[&xw]).unwrap().remove(0));
+        }
+        let cat = Tensor::concat0(&parts.iter().collect::<Vec<_>>()).unwrap();
+        let maxerr = full
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(cat.as_f32().unwrap())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxerr < 1e-5, "maxerr {maxerr}");
+    }
+
+    #[test]
+    fn device_tensors_chain_across_steps() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.get("attention_l0").unwrap();
+        let m = rt.manifest().model.clone();
+        let b = m.batch_per_worker;
+        let x = Tensor::from_f32(&[b, m.d_model], vec![0.05; b * m.d_model]).unwrap();
+        let kc = Tensor::zeros_f32(&[b, m.kv_capacity, m.n_heads, m.head_dim]);
+        let lens0 = Tensor::zeros_s32(&[b]);
+        let out1 = exe
+            .run_device(&[
+                ExecInput::Host(&x),
+                ExecInput::Host(&kc),
+                ExecInput::Host(&kc),
+                ExecInput::Host(&lens0),
+            ])
+            .unwrap();
+        let lens1 = Tensor::from_s32(&[b], vec![1; b]).unwrap();
+        let out2 = exe
+            .run_device(&[
+                ExecInput::Host(&x),
+                ExecInput::Device(&out1[1]),
+                ExecInput::Device(&out1[2]),
+                ExecInput::Host(&lens1),
+            ])
+            .unwrap();
+        let k2 = out2[1].to_host().unwrap();
+        let row = m.n_heads * m.head_dim;
+        let k = k2.as_f32().unwrap();
+        assert!(k[..row].iter().any(|&v| v != 0.0));
+        assert!(k[row..2 * row].iter().any(|&v| v != 0.0));
+        assert!(k[2 * row..3 * row].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.get("lm_head").unwrap();
+        let b = rt.get("lm_head").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        rt.preload(&["embed"]).unwrap();
+    }
+}

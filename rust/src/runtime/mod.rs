@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (HLO text) and execute
+//! them on the request path.
+//!
+//! * [`tensor`] — host tensors crossing the coordinator boundary.
+//! * [`artifact`] — `artifacts/manifest.json` parsing + file checks.
+//! * [`executor`] — compile-once executable cache, host/device execution.
+//! * [`model_runner`] — typed Attention-worker / FFN-server / fused-
+//!   baseline model wrappers with device-resident KV caches.
+
+pub mod artifact;
+pub mod executor;
+pub mod model_runner;
+pub mod tensor;
+
+pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, ModelMeta, TensorSpec};
+pub use executor::{DeviceTensor, ExecInput, Executable, LocalRuntime};
+pub use model_runner::{afd_worker_step, AttentionWorkerModel, FfnServerModel, FusedModel};
+pub use tensor::{DType, Tensor};

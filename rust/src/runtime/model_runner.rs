@@ -1,0 +1,309 @@
+//! Typed wrappers over the AFD model artifacts: the operations an
+//! Attention worker and the FFN server execute per decode step, plus the
+//! fused (coupled) baseline step.
+//!
+//! Each wrapper is thread-confined (it holds `Rc<Executable>`s from its
+//! thread's [`LocalRuntime`]); an [`AttentionWorkerModel`] keeps its layer
+//! KV caches as persistent device buffers, so the only data crossing
+//! threads is the hidden-state activation — exactly the paper's A<->F
+//! communication.
+
+use std::rc::Rc;
+
+use crate::error::{AfdError, Result};
+use crate::runtime::executor::{DeviceTensor, ExecInput, Executable, LocalRuntime};
+use crate::runtime::tensor::Tensor;
+
+/// Per-worker stateful model: embedding + per-layer attention + lm head,
+/// with device-resident KV caches.
+pub struct AttentionWorkerModel {
+    embed: Rc<Executable>,
+    attention: Vec<Rc<Executable>>,
+    lm_head: Rc<Executable>,
+    /// Per-layer (K, V) caches on device.
+    kv: Vec<(DeviceTensor, DeviceTensor)>,
+    /// Current sequence length per slot.
+    seq_lens: Vec<i32>,
+    batch: usize,
+    kv_capacity: usize,
+}
+
+impl AttentionWorkerModel {
+    pub fn new(rt: &LocalRuntime) -> Result<Self> {
+        let mm = rt.manifest().model.clone();
+        let b = mm.batch_per_worker;
+        let mut attention = Vec::new();
+        let mut kv = Vec::new();
+        for layer in 0..mm.n_layers {
+            attention.push(rt.get(&format!("attention_l{layer}"))?);
+            let zeros = Tensor::zeros_f32(&[b, mm.kv_capacity, mm.n_heads, mm.head_dim]);
+            kv.push((rt.to_device(&zeros)?, rt.to_device(&zeros)?));
+        }
+        Ok(Self {
+            embed: rt.get("embed")?,
+            attention,
+            lm_head: rt.get("lm_head")?,
+            kv,
+            seq_lens: vec![0; b],
+            batch: b,
+            kv_capacity: mm.kv_capacity,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.attention.len()
+    }
+
+    pub fn seq_lens(&self) -> &[i32] {
+        &self.seq_lens
+    }
+
+    /// Total token load Σ (seq_lens + 1) — the per-worker T_j of §3.3
+    /// (each live slot reads its cache plus the just-appended token).
+    pub fn token_load(&self) -> u64 {
+        self.seq_lens.iter().map(|&l| l as u64 + 1).sum()
+    }
+
+    /// Reset a completed slot for a fresh request (the attention mask
+    /// makes stale cache content beyond seq_len unreadable).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.seq_lens[slot] = 0;
+    }
+
+    /// Embed token ids into the residual stream.
+    pub fn embed(&self, ids: &[i32]) -> Result<Tensor> {
+        let t = Tensor::from_s32(&[self.batch], ids.to_vec())?;
+        Ok(self.embed.run(&[&t])?.remove(0))
+    }
+
+    /// Run one layer's attention block, updating the device KV cache.
+    pub fn attention_layer(&mut self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        if self.seq_lens.iter().any(|&l| l as usize >= self.kv_capacity) {
+            return Err(AfdError::Runtime(format!(
+                "KV capacity {} exhausted (seq_lens {:?}...)",
+                self.kv_capacity,
+                &self.seq_lens[..self.seq_lens.len().min(4)]
+            )));
+        }
+        let lens = Tensor::from_s32(&[self.batch], self.seq_lens.clone())?;
+        let (k, v) = &self.kv[layer];
+        let mut out = self.attention[layer].run_device(&[
+            ExecInput::Host(x),
+            ExecInput::Device(k),
+            ExecInput::Device(v),
+            ExecInput::Host(&lens),
+        ])?;
+        // outputs: (x_out, k_cache_out, v_cache_out)
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let x_out = out.pop().unwrap().to_host()?;
+        self.kv[layer] = (k_new, v_new);
+        Ok(x_out)
+    }
+
+    /// Advance the per-slot sequence lengths after a full decode step.
+    pub fn advance_step(&mut self) {
+        for l in &mut self.seq_lens {
+            *l += 1;
+        }
+    }
+
+    /// Greedy-sample next tokens from the residual stream.
+    pub fn lm_head(&self, x: &Tensor) -> Result<Vec<i32>> {
+        let out = self.lm_head.run(&[x])?;
+        Ok(out[0].as_s32()?.to_vec())
+    }
+}
+
+/// The stateless FFN server model: per-layer FFN over the aggregated
+/// batch.
+pub struct FfnServerModel {
+    ffn: Vec<Rc<Executable>>,
+    pub aggregate_batch: usize,
+    pub d_model: usize,
+}
+
+impl FfnServerModel {
+    pub fn new(rt: &LocalRuntime) -> Result<Self> {
+        let m = rt.manifest();
+        let ffn = (0..m.model.n_layers)
+            .map(|l| rt.get(&format!("ffn_l{l}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { ffn, aggregate_batch: m.model.aggregate_batch, d_model: m.model.d_model })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.ffn.len()
+    }
+
+    /// Run layer `layer`'s FFN over the aggregated activations [N, D].
+    pub fn ffn_layer(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        Ok(self.ffn[layer].run(&[x])?.remove(0))
+    }
+}
+
+/// The coupled (monolithic) baseline: whole decode layerstack in one
+/// artifact per worker, host-side KV caches.
+pub struct FusedModel {
+    embed: Rc<Executable>,
+    fused: Rc<Executable>,
+    lm_head: Rc<Executable>,
+    k: Vec<Tensor>,
+    v: Vec<Tensor>,
+    seq_lens: Vec<i32>,
+    batch: usize,
+}
+
+impl FusedModel {
+    pub fn new(rt: &LocalRuntime) -> Result<Self> {
+        let mm = rt.manifest().model.clone();
+        assert_eq!(mm.n_layers, 2, "fused artifact is specialized to 2 layers");
+        let b = mm.batch_per_worker;
+        let zeros = Tensor::zeros_f32(&[b, mm.kv_capacity, mm.n_heads, mm.head_dim]);
+        Ok(Self {
+            embed: rt.get("embed")?,
+            fused: rt.get("fused_step")?,
+            lm_head: rt.get("lm_head")?,
+            k: vec![zeros.clone(), zeros.clone()],
+            v: vec![zeros.clone(), zeros],
+            seq_lens: vec![0; b],
+            batch: b,
+        })
+    }
+
+    /// One full decode step: ids -> next ids.
+    pub fn decode_step(&mut self, ids: &[i32]) -> Result<Vec<i32>> {
+        let idt = Tensor::from_s32(&[self.batch], ids.to_vec())?;
+        let x = self.embed.run(&[&idt])?.remove(0);
+        let lens = Tensor::from_s32(&[self.batch], self.seq_lens.clone())?;
+        let mut out =
+            self.fused.run(&[&x, &self.k[0], &self.v[0], &self.k[1], &self.v[1], &lens])?;
+        // (x_out, k0, v0, k1, v1)
+        let v1 = out.pop().unwrap();
+        let k1 = out.pop().unwrap();
+        let v0 = out.pop().unwrap();
+        let k0 = out.pop().unwrap();
+        let y = out.pop().unwrap();
+        self.k = vec![k0, k1];
+        self.v = vec![v0, v1];
+        for l in &mut self.seq_lens {
+            *l += 1;
+        }
+        let ids = self.lm_head.run(&[&y])?;
+        Ok(ids[0].as_s32()?.to_vec())
+    }
+
+    pub fn seq_lens(&self) -> &[i32] {
+        &self.seq_lens
+    }
+}
+
+/// Run one full AFD decode step on a single worker using the per-worker
+/// FFN artifacts (test/demo helper mirroring the full bundle's data flow).
+pub fn afd_worker_step(
+    rt: &LocalRuntime,
+    worker: &mut AttentionWorkerModel,
+    ids: &[i32],
+) -> Result<Vec<i32>> {
+    let mut x = worker.embed(ids)?;
+    for layer in 0..worker.n_layers() {
+        x = worker.attention_layer(layer, &x)?;
+        let ffn = rt.get(&format!("ffn_worker_l{layer}"))?;
+        x = ffn.run(&[&x])?.remove(0);
+    }
+    worker.advance_step();
+    worker.lm_head(&x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{default_artifacts_dir, Manifest};
+
+    fn runtime() -> Option<LocalRuntime> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").is_file() {
+            Some(LocalRuntime::new(Manifest::load(dir).unwrap()).unwrap())
+        } else {
+            eprintln!("skipping model-runner test: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn afd_split_matches_fused_baseline_token_for_token() {
+        // The CORE end-to-end numerical parity check: disaggregated
+        // execution (attention artifact + ffn artifact, device-side KV)
+        // must reproduce the monolithic fused artifact's greedy decode
+        // exactly for several steps.
+        let Some(rt) = runtime() else { return };
+        let mm = rt.manifest().model.clone();
+        let mut worker = AttentionWorkerModel::new(&rt).unwrap();
+        let mut fused = FusedModel::new(&rt).unwrap();
+
+        let mut ids_split: Vec<i32> =
+            (0..mm.batch_per_worker as i32).map(|i| (i * 37) % mm.vocab as i32).collect();
+        let mut ids_fused = ids_split.clone();
+        for step in 0..4 {
+            ids_split = afd_worker_step(&rt, &mut worker, &ids_split).unwrap();
+            ids_fused = fused.decode_step(&ids_fused).unwrap();
+            assert_eq!(ids_split, ids_fused, "diverged at step {step}");
+        }
+        assert_eq!(worker.seq_lens(), fused.seq_lens());
+    }
+
+    #[test]
+    fn token_load_accounting() {
+        let Some(rt) = runtime() else { return };
+        let mut worker = AttentionWorkerModel::new(&rt).unwrap();
+        let b = worker.batch() as u64;
+        assert_eq!(worker.token_load(), b); // every slot at len 0 -> load 1
+        worker.advance_step();
+        assert_eq!(worker.token_load(), 2 * b);
+        worker.reset_slot(0);
+        assert_eq!(worker.token_load(), 2 * b - 1);
+    }
+
+    #[test]
+    fn kv_capacity_exhaustion_is_detected() {
+        let Some(rt) = runtime() else { return };
+        let mut worker = AttentionWorkerModel::new(&rt).unwrap();
+        let cap = rt.manifest().model.kv_capacity;
+        worker.seq_lens = vec![cap as i32; worker.batch()];
+        let x = Tensor::zeros_f32(&[worker.batch(), rt.manifest().model.d_model]);
+        assert!(worker.attention_layer(0, &x).is_err());
+    }
+
+    #[test]
+    fn greedy_decode_is_deterministic_across_runs() {
+        let Some(rt) = runtime() else { return };
+        let mm = rt.manifest().model.clone();
+        let run = || {
+            let mut w = AttentionWorkerModel::new(&rt).unwrap();
+            let mut cur: Vec<i32> = vec![1; mm.batch_per_worker];
+            let mut all = Vec::new();
+            for _ in 0..3 {
+                cur = afd_worker_step(&rt, &mut w, &cur).unwrap();
+                all.push(cur.clone());
+            }
+            all
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn ffn_server_model_preserves_zero_and_shape() {
+        let Some(rt) = runtime() else { return };
+        let ffn = FfnServerModel::new(&rt).unwrap();
+        assert_eq!(ffn.n_layers(), 2);
+        let x = Tensor::zeros_f32(&[ffn.aggregate_batch, ffn.d_model]);
+        let y = ffn.ffn_layer(0, &x).unwrap();
+        assert_eq!(y.shape(), x.shape());
+        // rmsnorm(0)=0 -> swiglu(0)=0 -> residual 0.
+        assert!(y.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+}

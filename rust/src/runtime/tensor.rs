@@ -1,0 +1,228 @@
+//! Host-side tensors: minimal shape-checked containers used at the
+//! coordinator <-> PJRT boundary.
+
+use crate::error::{AfdError, Result};
+
+/// Element type of a tensor (mirrors the manifest's dtype strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => Err(AfdError::Artifact(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn zeros_s32(shape: &[usize]) -> Tensor {
+        Tensor::S32 { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(AfdError::Runtime(format!(
+                "shape {shape:?} incompatible with {} elements",
+                data.len()
+            )));
+        }
+        Ok(Tensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn from_s32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != data.len() {
+            return Err(AfdError::Runtime(format!(
+                "shape {shape:?} incompatible with {} elements",
+                data.len()
+            )));
+        }
+        Ok(Tensor::S32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::S32 { .. } => DType::S32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::S32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(AfdError::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::S32 { data, .. } => Ok(data),
+            _ => Err(AfdError::Runtime("tensor is not s32".into())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(AfdError::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    /// Concatenate along axis 0 (used to aggregate worker activations for
+    /// the FFN server). All inputs must share trailing dimensions.
+    pub fn concat0(tensors: &[&Tensor]) -> Result<Tensor> {
+        if tensors.is_empty() {
+            return Err(AfdError::Runtime("concat0 of zero tensors".into()));
+        }
+        let first = tensors[0];
+        let tail = &first.shape()[1..];
+        let mut rows = 0usize;
+        for t in tensors {
+            if &t.shape()[1..] != tail || t.dtype() != first.dtype() {
+                return Err(AfdError::Runtime(format!(
+                    "concat0 mismatch: {:?} vs {:?}",
+                    t.shape(),
+                    first.shape()
+                )));
+            }
+            rows += t.shape()[0];
+        }
+        let mut shape = vec![rows];
+        shape.extend_from_slice(tail);
+        match first {
+            Tensor::F32 { .. } => {
+                let mut data = Vec::with_capacity(shape.iter().product());
+                for t in tensors {
+                    data.extend_from_slice(t.as_f32()?);
+                }
+                Ok(Tensor::F32 { shape, data })
+            }
+            Tensor::S32 { .. } => {
+                let mut data = Vec::with_capacity(shape.iter().product());
+                for t in tensors {
+                    data.extend_from_slice(t.as_s32()?);
+                }
+                Ok(Tensor::S32 { shape, data })
+            }
+        }
+    }
+
+    /// Split along axis 0 into equal chunks (scatter FFN outputs back to
+    /// workers). `parts` must divide the leading dimension.
+    pub fn split0(&self, parts: usize) -> Result<Vec<Tensor>> {
+        let rows = self.shape()[0];
+        if parts == 0 || rows % parts != 0 {
+            return Err(AfdError::Runtime(format!(
+                "cannot split {rows} rows into {parts} parts"
+            )));
+        }
+        let chunk_rows = rows / parts;
+        let stride: usize = self.shape()[1..].iter().product::<usize>().max(1);
+        let mut shape = self.shape().to_vec();
+        shape[0] = chunk_rows;
+        let mut out = Vec::with_capacity(parts);
+        for i in 0..parts {
+            let lo = i * chunk_rows * stride;
+            let hi = lo + chunk_rows * stride;
+            out.push(match self {
+                Tensor::F32 { data, .. } => {
+                    Tensor::F32 { shape: shape.clone(), data: data[lo..hi].to_vec() }
+                }
+                Tensor::S32 { data, .. } => {
+                    Tensor::S32 { shape: shape.clone(), data: data[lo..hi].to_vec() }
+                }
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_f32(&[2, 3], vec![0.0; 6]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_s32().is_err());
+        assert!(Tensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn concat_and_split_roundtrip() {
+        let a = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_f32(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let cat = Tensor::concat0(&[&a, &b]).unwrap();
+        assert_eq!(cat.shape(), &[4, 2]);
+        assert_eq!(cat.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let parts = cat.split0(2).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_mismatch_rejected() {
+        let a = Tensor::zeros_f32(&[2, 2]);
+        let b = Tensor::zeros_f32(&[2, 3]);
+        assert!(Tensor::concat0(&[&a, &b]).is_err());
+        let c = Tensor::zeros_s32(&[2, 2]);
+        assert!(Tensor::concat0(&[&a, &c]).is_err());
+        assert!(Tensor::concat0(&[]).is_err());
+    }
+
+    #[test]
+    fn split_invalid_parts() {
+        let t = Tensor::zeros_f32(&[4, 2]);
+        assert!(t.split0(3).is_err());
+        assert!(t.split0(0).is_err());
+        assert_eq!(t.split0(4).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::from_manifest("f32").unwrap(), DType::F32);
+        assert_eq!(DType::from_manifest("s32").unwrap(), DType::S32);
+        assert!(DType::from_manifest("f64").is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Workload drivers for the serving engine.
+//!
+//! Generates [`ServingRequest`] sets from the workload layer. In the AFD
+//! decode-bundle model a request arrives with its prompt KV conceptually
+//! materialized (prefill runs on a separate pool under PD disaggregation);
+//! the engine accounts the prefill length against KV capacity and token
+//! load, while the demo model's actual cache content starts from the seed
+//! token — the latency-relevant behaviour (cache growth, capacity
+//! pressure, load imbalance) is preserved. See DESIGN.md §substitutions.
+
+use crate::config::workload::WorkloadSpec;
+use crate::coordinator::request_state::ServingRequest;
+use crate::stats::rng::Pcg64;
+use crate::workload::generator::RequestGenerator;
+
+/// Fixed-size closed-loop request set with uniform budgets.
+pub fn closed_loop_requests(n: usize, prefill: u64, decode_budget: u64, seed: u64) -> Vec<ServingRequest> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| ServingRequest {
+            id: i as u64,
+            seed_token: rng.next_below(256) as i32,
+            prefill,
+            decode_budget,
+            arrival: 0.0,
+        })
+        .collect()
+}
+
+/// Request set drawn from a [`WorkloadSpec`], with budgets clamped so
+/// every request fits the model's KV capacity.
+pub fn requests_from_spec(
+    spec: &WorkloadSpec,
+    n: usize,
+    kv_capacity: u64,
+    seed: u64,
+) -> Vec<ServingRequest> {
+    let mut gen = RequestGenerator::new(spec.clone(), seed);
+    let mut rng = Pcg64::new(seed ^ 0x5EED);
+    (0..n)
+        .map(|i| {
+            let lengths = gen.next_lengths();
+            // Clamp: prefill at most half capacity, decode fits remainder.
+            let prefill = lengths.prefill.min(kv_capacity / 2);
+            let decode = lengths.decode.clamp(1, kv_capacity - prefill - 1);
+            ServingRequest {
+                id: i as u64,
+                seed_token: rng.next_below(256) as i32,
+                prefill,
+                decode_budget: decode,
+                arrival: 0.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::distributions::LengthDist;
+
+    #[test]
+    fn closed_loop_shapes() {
+        let reqs = closed_loop_requests(10, 4, 8, 1);
+        assert_eq!(reqs.len(), 10);
+        assert!(reqs.iter().all(|r| r.decode_budget == 8 && r.prefill == 4));
+        assert!(reqs.iter().all(|r| (0..256).contains(&r.seed_token)));
+        // Distinct ids.
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+    }
+
+    #[test]
+    fn spec_requests_fit_capacity() {
+        let spec = WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(300.0),
+            LengthDist::geometric_with_mean(800.0),
+        );
+        let cap = 128;
+        let reqs = requests_from_spec(&spec, 500, cap, 2);
+        for r in &reqs {
+            assert!(r.prefill + r.decode_budget <= cap, "{r:?}");
+            assert!(r.decode_budget >= 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = WorkloadSpec::paper_section5();
+        let a = requests_from_spec(&spec, 50, 128, 3);
+        let b = requests_from_spec(&spec, 50, 128, 3);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,334 @@
+//! The threaded AFD serving engine: real `rA–1F` execution.
+//!
+//! Topology: `r` Attention-worker OS threads + 1 FFN-server OS thread,
+//! each owning its own PJRT runtime (thread-confined clients — one
+//! "device" per instance, as in the paper's deployment). Per decode step
+//! and per layer, workers compute their attention blocks, rendezvous at
+//! the [`StepBarrier`] (A->F gather), the FFN thread computes the
+//! aggregated batch, and the scatter (F->A) releases the workers into the
+//! next layer — Python appears nowhere.
+//!
+//! Requests flow through the [`Batcher`] under continuous batching:
+//! completed slots are refilled the same step. The engine reports
+//! serving latency/throughput plus per-phase time accounting, making it
+//! the measured end-to-end artefact (examples/e2e_serving.rs).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::request_state::ServingRequest;
+use crate::coordinator::router::Policy;
+use crate::coordinator::scheduler::StepBarrier;
+use crate::error::{AfdError, Result};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::executor::LocalRuntime;
+use crate::runtime::model_runner::{AttentionWorkerModel, FfnServerModel};
+use crate::util::pool::Barrier;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Routing policy for request placement.
+    pub policy: Policy,
+    /// Stop after this many completed requests (None = drain all).
+    pub target_completions: Option<usize>,
+    /// Hard cap on decode steps (safety against livelock in tests).
+    pub max_steps: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { policy: Policy::LeastTokenLoad, target_completions: None, max_steps: 1_000_000 }
+    }
+}
+
+/// Per-phase time accounting from one worker thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimes {
+    pub attention_secs: f64,
+    pub ffn_wait_secs: f64,
+    pub other_secs: f64,
+    pub steps: u64,
+}
+
+/// End-to-end serving report.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub workers: usize,
+    pub batch_per_worker: usize,
+    pub completed: usize,
+    pub wall_secs: f64,
+    /// Output tokens per wall second, whole bundle.
+    pub tokens_per_sec: f64,
+    /// Per-instance throughput (divides by r + 1, Eq. 1).
+    pub tokens_per_sec_per_instance: f64,
+    /// Mean time per output token over completed requests.
+    pub mean_tpot: f64,
+    /// p99 TPOT.
+    pub p99_tpot: f64,
+    /// Decode steps executed per worker.
+    pub steps: u64,
+    /// Aggregated per-phase accounting (summed over workers).
+    pub phases: PhaseTimes,
+    /// FFN-server busy fraction.
+    pub ffn_busy_fraction: f64,
+}
+
+/// Run the engine on a fixed request set (closed loop).
+pub fn serve(
+    manifest: &Manifest,
+    requests: Vec<ServingRequest>,
+    cfg: EngineConfig,
+) -> Result<ServingReport> {
+    let r = manifest.model.workers;
+    let b = manifest.model.batch_per_worker;
+    let n_layers = manifest.model.n_layers;
+    let target = cfg.target_completions.unwrap_or(requests.len()).min(requests.len());
+    if target == 0 {
+        return Err(AfdError::Server("no requests to serve".into()));
+    }
+
+    let mut batcher = Batcher::new(r, b, manifest.model.kv_capacity as u64, cfg.policy);
+    for req in requests {
+        batcher.submit(req)?;
+    }
+    let batcher = Arc::new(Mutex::new(batcher));
+    let (step_barrier, ffn_inbox) = StepBarrier::new(r);
+    let sync = Barrier::new(r);
+    let stop = Arc::new(AtomicBool::new(false));
+    let started = Instant::now();
+
+    // FFN server thread. It must hold only a Weak reference to the step
+    // barrier: the barrier owns the gather channel's sender, and the FFN
+    // loop terminates when every strong (worker/engine) reference drops.
+    let ffn_manifest = manifest.clone();
+    let ffn_barrier = Arc::downgrade(&step_barrier);
+    let ffn_handle = std::thread::Builder::new()
+        .name("afd-ffn".into())
+        .spawn(move || -> Result<f64> {
+            let rt = LocalRuntime::new(ffn_manifest)?;
+            let model = FfnServerModel::new(&rt)?;
+            let mut layer = 0usize;
+            let mut busy = 0.0f64;
+            while let Ok(agg) = ffn_inbox.recv() {
+                let t = Instant::now();
+                let out = model.ffn_layer(layer, &agg)?;
+                busy += t.elapsed().as_secs_f64();
+                let Some(barrier) = ffn_barrier.upgrade() else { break };
+                barrier.scatter(out)?;
+                layer = (layer + 1) % n_layers;
+            }
+            Ok(busy)
+        })
+        .map_err(|e| AfdError::Server(format!("spawn ffn: {e}")))?;
+
+    // Attention worker threads.
+    let mut handles = Vec::new();
+    for w in 0..r {
+        let manifest = manifest.clone();
+        let batcher = batcher.clone();
+        let step_barrier = step_barrier.clone();
+        let sync = sync.clone();
+        let stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("afd-attn-{w}"))
+            .spawn(move || -> Result<PhaseTimes> {
+                let rt = LocalRuntime::new(manifest)?;
+                let mut model = AttentionWorkerModel::new(&rt)?;
+                let mut ids: Vec<i32> = vec![0; b];
+                let mut live: Vec<bool> = vec![false; b];
+                let mut phases = PhaseTimes::default();
+
+                // Initial admissions (leader fills all workers' slots).
+                if sync.wait() {
+                    let mut bt = batcher.lock().unwrap();
+                    bt.fill_slots(0.0)?;
+                }
+                sync.wait();
+                {
+                    let bt = batcher.lock().unwrap();
+                    for slot in 0..b {
+                        if let crate::coordinator::kv::SlotState::Live { request_id, .. } =
+                            bt.kv[w].slot(slot)
+                        {
+                            let req = bt.request(request_id).unwrap();
+                            ids[slot] = req.request.seed_token;
+                            live[slot] = true;
+                            model.reset_slot(slot);
+                        }
+                    }
+                }
+
+                loop {
+                    // Leader decides termination at the step boundary.
+                    if sync.wait() {
+                        let bt = batcher.lock().unwrap();
+                        let done = bt.completed().len() >= target;
+                        if done || phases.steps >= cfg.max_steps {
+                            stop.store(true, Ordering::SeqCst);
+                        }
+                    }
+                    sync.wait();
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+
+                    let step_start = Instant::now();
+                    // Embed current tokens.
+                    let mut x = model.embed(&ids)?;
+                    // Per-layer: attention (this thread) -> A->F -> FFN
+                    // (server thread) -> F->A.
+                    for layer in 0..model.n_layers() {
+                        let t_a = Instant::now();
+                        x = model.attention_layer(layer, &x)?;
+                        phases.attention_secs += t_a.elapsed().as_secs_f64();
+                        let t_w = Instant::now();
+                        let rx = step_barrier.submit(w, x)?;
+                        x = rx
+                            .recv()
+                            .map_err(|_| AfdError::Server("ffn channel closed".into()))?;
+                        phases.ffn_wait_secs += t_w.elapsed().as_secs_f64();
+                    }
+                    let next = model.lm_head(&x)?;
+                    model.advance_step();
+
+                    // Continuous batching: report tokens, refill slots.
+                    let now = started.elapsed().as_secs_f64();
+                    {
+                        let mut bt = batcher.lock().unwrap();
+                        let completed_slots = bt.step_worker(w, now)?;
+                        for &slot in &completed_slots {
+                            live[slot] = false;
+                        }
+                        for slot in 0..b {
+                            if live[slot] {
+                                ids[slot] = next[slot];
+                            }
+                        }
+                        for adm in bt.fill_slots(now)? {
+                            if adm.worker == w {
+                                model.reset_slot(adm.slot);
+                                ids[adm.slot] = adm.seed_token;
+                                live[adm.slot] = true;
+                            }
+                        }
+                        // Keep drained (dead) slots at seq 0 so a long
+                        // drain tail cannot exhaust KV capacity.
+                        for slot in 0..b {
+                            if !live[slot] {
+                                model.reset_slot(slot);
+                            }
+                        }
+                    }
+                    phases.steps += 1;
+                    phases.other_secs += step_start.elapsed().as_secs_f64();
+                }
+                Ok(phases)
+            })
+            .map_err(|e| AfdError::Server(format!("spawn worker {w}: {e}")))?;
+        handles.push(handle);
+    }
+
+    // Join workers.
+    let mut phases = PhaseTimes::default();
+    let mut steps = 0u64;
+    for h in handles {
+        let p = h
+            .join()
+            .map_err(|_| AfdError::Server("worker panicked".into()))??;
+        phases.attention_secs += p.attention_secs;
+        phases.ffn_wait_secs += p.ffn_wait_secs;
+        phases.other_secs += p.other_secs;
+        steps = steps.max(p.steps);
+    }
+    // Closing the last barrier reference shuts the FFN inbox down.
+    drop(step_barrier);
+    let ffn_busy = ffn_handle
+        .join()
+        .map_err(|_| AfdError::Server("ffn thread panicked".into()))??;
+
+    let wall = started.elapsed().as_secs_f64();
+    let bt = batcher.lock().unwrap();
+    let mut tpots = Vec::new();
+    let mut tokens = 0u64;
+    for &rid in bt.completed().iter().take(target) {
+        let t = bt.request(rid).unwrap();
+        if let Some(tpot) = t.tpot() {
+            tpots.push(tpot);
+        }
+        tokens += t.request.decode_budget;
+    }
+    let completed = bt.completed().len().min(target);
+    if completed == 0 {
+        return Err(AfdError::Server(format!(
+            "no requests completed within {} steps",
+            cfg.max_steps
+        )));
+    }
+    let mean_tpot = tpots.iter().sum::<f64>() / tpots.len() as f64;
+    let p99 = crate::stats::moments::percentile(&mut tpots, 99.0);
+    Ok(ServingReport {
+        workers: r,
+        batch_per_worker: b,
+        completed,
+        wall_secs: wall,
+        tokens_per_sec: tokens as f64 / wall,
+        tokens_per_sec_per_instance: tokens as f64 / wall / (r + 1) as f64,
+        mean_tpot,
+        p99_tpot: p99,
+        steps,
+        phases,
+        ffn_busy_fraction: (ffn_busy / wall).min(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::default_artifacts_dir;
+    use crate::server::driver::closed_loop_requests;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").is_file() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping engine test: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn serves_batch_of_requests_end_to_end() {
+        let Some(m) = manifest() else { return };
+        // Enough requests to exercise refill: 3x the bundle capacity.
+        let n = 3 * m.model.workers * m.model.batch_per_worker;
+        let requests = closed_loop_requests(n, 4, 12, 20260710);
+        let report = serve(&m, requests, EngineConfig::default()).unwrap();
+        assert!(report.completed >= n, "completed {} of {n}", report.completed);
+        assert!(report.tokens_per_sec > 0.0);
+        assert!(report.mean_tpot > 0.0);
+        assert!(report.p99_tpot >= report.mean_tpot);
+        assert!(report.steps > 12); // more steps than any single budget
+        assert!(report.ffn_busy_fraction > 0.0 && report.ffn_busy_fraction <= 1.0);
+    }
+
+    #[test]
+    fn respects_target_completions() {
+        let Some(m) = manifest() else { return };
+        let n = 2 * m.model.workers * m.model.batch_per_worker;
+        let requests = closed_loop_requests(n, 2, 6, 7);
+        let cfg = EngineConfig { target_completions: Some(8), ..Default::default() };
+        let report = serve(&m, requests, cfg).unwrap();
+        assert!(report.completed >= 8);
+        assert!(report.completed < n);
+    }
+
+    #[test]
+    fn empty_request_set_is_error() {
+        let Some(m) = manifest() else { return };
+        assert!(serve(&m, vec![], EngineConfig::default()).is_err());
+    }
+}

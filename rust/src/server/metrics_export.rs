@@ -1,0 +1,124 @@
+//! Metric export: serving reports and simulator metrics as JSON/CSV for
+//! downstream analysis and the EXPERIMENTS.md tables.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::server::engine::ServingReport;
+use crate::sim::metrics::SimMetrics;
+use crate::util::csvio::CsvTable;
+use crate::util::json::Json;
+
+/// Serialize a serving report to JSON.
+pub fn report_to_json(r: &ServingReport) -> Json {
+    Json::obj()
+        .set("workers", Json::Num(r.workers as f64))
+        .set("batch_per_worker", Json::Num(r.batch_per_worker as f64))
+        .set("completed", Json::Num(r.completed as f64))
+        .set("wall_secs", Json::Num(r.wall_secs))
+        .set("tokens_per_sec", Json::Num(r.tokens_per_sec))
+        .set("tokens_per_sec_per_instance", Json::Num(r.tokens_per_sec_per_instance))
+        .set("mean_tpot", Json::Num(r.mean_tpot))
+        .set("p99_tpot", Json::Num(r.p99_tpot))
+        .set("steps", Json::Num(r.steps as f64))
+        .set("ffn_busy_fraction", Json::Num(r.ffn_busy_fraction))
+        .set(
+            "phases",
+            Json::obj()
+                .set("attention_secs", Json::Num(r.phases.attention_secs))
+                .set("ffn_wait_secs", Json::Num(r.phases.ffn_wait_secs))
+                .set("other_secs", Json::Num(r.phases.other_secs)),
+        )
+}
+
+/// Write a ratio sweep of simulator metrics as CSV (one row per r).
+pub fn sim_sweep_to_csv(metrics: &[SimMetrics], path: impl AsRef<Path>) -> Result<()> {
+    let mut t = CsvTable::new(&[
+        "r",
+        "batch",
+        "throughput_per_instance",
+        "delivered_throughput_per_instance",
+        "tpot",
+        "idle_attention",
+        "idle_ffn",
+        "total_time",
+        "completed",
+        "mean_barrier_load",
+        "mean_worker_load",
+    ]);
+    for m in metrics {
+        t.push_row(&[
+            m.r.to_string(),
+            m.batch.to_string(),
+            format!("{:.8}", m.throughput_per_instance),
+            format!("{:.8}", m.delivered_throughput_per_instance),
+            format!("{:.6}", m.tpot),
+            format!("{:.6}", m.idle_attention),
+            format!("{:.6}", m.idle_ffn),
+            format!("{:.3}", m.total_time),
+            m.completed.to_string(),
+            format!("{:.3}", m.mean_barrier_load),
+            format!("{:.3}", m.mean_worker_load),
+        ]);
+    }
+    t.write_path(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::engine::PhaseTimes;
+
+    #[test]
+    fn report_json_roundtrip() {
+        let r = ServingReport {
+            workers: 4,
+            batch_per_worker: 8,
+            completed: 96,
+            wall_secs: 1.5,
+            tokens_per_sec: 640.0,
+            tokens_per_sec_per_instance: 128.0,
+            mean_tpot: 0.01,
+            p99_tpot: 0.02,
+            steps: 40,
+            phases: PhaseTimes {
+                attention_secs: 1.0,
+                ffn_wait_secs: 0.3,
+                other_secs: 0.2,
+                steps: 40,
+            },
+            ffn_busy_fraction: 0.5,
+        };
+        let j = report_to_json(&r);
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.field("workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            back.field("phases").unwrap().field("attention_secs").unwrap().as_f64().unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn sweep_csv_writes() {
+        let m = SimMetrics {
+            r: 8,
+            batch: 256,
+            throughput_per_instance: 0.94,
+            delivered_throughput_per_instance: 0.95,
+            tpot: 321.0,
+            idle_attention: 0.1,
+            idle_ffn: 0.2,
+            total_time: 1e7,
+            completed: 80000,
+            mean_barrier_load: 160_000.0,
+            mean_worker_load: 153_000.0,
+        };
+        let path = std::env::temp_dir().join("afd_sweep_test.csv");
+        sim_sweep_to_csv(&[m], &path).unwrap();
+        let t = CsvTable::read_path(&path).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.column_u64("r").unwrap(), vec![8]);
+        std::fs::remove_file(path).ok();
+    }
+}

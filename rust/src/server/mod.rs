@@ -1,0 +1,9 @@
+//! The serving front: threaded engine, workload drivers, metric export.
+
+pub mod driver;
+pub mod engine;
+pub mod metrics_export;
+
+pub use driver::{closed_loop_requests, requests_from_spec};
+pub use engine::{serve, EngineConfig, PhaseTimes, ServingReport};
+pub use metrics_export::{report_to_json, sim_sweep_to_csv};

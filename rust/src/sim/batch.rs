@@ -1,0 +1,120 @@
+//! The six-state batch FSM of the paper's simulator (§5.1).
+//!
+//! Each `Batch` object cycles Attention -> A2F transfer -> Waiting(FFN)
+//! -> FFN -> F2A transfer -> Waiting(Attention) -> repeat. Two batches
+//! are kept in flight so FFN work on one overlaps Attention work on the
+//! other.
+
+/// FSM states of one in-flight batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchState {
+    /// Attention workers are computing this batch's microbatches.
+    Attention,
+    /// Activations in flight to the FFN server.
+    A2F,
+    /// Queued at the FFN server (it is busy with the other batch).
+    WaitingFfn,
+    /// FFN server is computing the aggregated batch.
+    Ffn,
+    /// Outputs in flight back to the Attention workers.
+    F2A,
+    /// Ready for the next decode step (workers may still be busy with
+    /// the other batch).
+    WaitingAttention,
+}
+
+impl BatchState {
+    /// The successor state in the cycle.
+    pub fn next(self) -> BatchState {
+        match self {
+            BatchState::Attention => BatchState::A2F,
+            BatchState::A2F => BatchState::WaitingFfn,
+            BatchState::WaitingFfn => BatchState::Ffn,
+            BatchState::Ffn => BatchState::F2A,
+            BatchState::F2A => BatchState::WaitingAttention,
+            BatchState::WaitingAttention => BatchState::Attention,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchState::Attention => "attention",
+            BatchState::A2F => "a2f",
+            BatchState::WaitingFfn => "waiting-ffn",
+            BatchState::Ffn => "ffn",
+            BatchState::F2A => "f2a",
+            BatchState::WaitingAttention => "waiting-attention",
+        }
+    }
+}
+
+/// One step-level transition record (optional event log for debugging
+/// and for the pipeline-bubble visualizations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub batch: usize,
+    pub step: u64,
+    /// Barrier token load max_j T_j for this step.
+    pub barrier_load: u64,
+    pub attention_start: f64,
+    pub attention_end: f64,
+    pub ffn_start: f64,
+    pub ffn_end: f64,
+    pub ready_at: f64,
+}
+
+impl StepRecord {
+    /// Pipeline bubble between data-ready and FFN start (FFN-side wait).
+    pub fn ffn_wait(&self) -> f64 {
+        self.ffn_start - self.attention_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_cycle_is_six_states() {
+        let mut s = BatchState::Attention;
+        let mut seen = vec![s];
+        for _ in 0..5 {
+            s = s.next();
+            seen.push(s);
+        }
+        assert_eq!(s.next(), BatchState::Attention);
+        assert_eq!(seen.len(), 6);
+        // All distinct.
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_ne!(seen[i], seen[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut s = BatchState::Attention;
+        let mut names = std::collections::HashSet::new();
+        for _ in 0..6 {
+            names.insert(s.name());
+            s = s.next();
+        }
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn step_record_wait() {
+        let rec = StepRecord {
+            batch: 0,
+            step: 1,
+            barrier_load: 100,
+            attention_start: 0.0,
+            attention_end: 10.0,
+            ffn_start: 12.0,
+            ffn_end: 20.0,
+            ready_at: 21.0,
+        };
+        assert!((rec.ffn_wait() - 2.0).abs() < 1e-12);
+    }
+}

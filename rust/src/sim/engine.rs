@@ -1,0 +1,489 @@
+//! The discrete-event AFD simulator (paper §5.1).
+//!
+//! Simulates an `rA–1F` bundle cycle-by-cycle. Each of the two in-flight
+//! `Batch` objects cycles through the six-state FSM (Attention -> A2F ->
+//! WaitingFfn -> FFN -> F2A -> WaitingAttention); the shared FFN server
+//! and the r Attention workers are the contended resources, so FFN work
+//! on one batch overlaps Attention work on the other — the interleaved
+//! two-batch schedule the paper describes for masking transfer latency.
+//!
+//! Time is continuous (f64 "cycles", matching Table 3 units). The engine
+//! advances whichever batch is ready earliest; resource acquisition is in
+//! arrival order. Within the Attention phase, worker j starts when both
+//! the batch's data is ready (previous F2A done) and worker j is free
+//! (it may still be computing the other batch); the phase completes at
+//! the *barrier* — the slowest worker (paper §3.3's `W_{B,r}`).
+
+use crate::config::experiment::ExperimentConfig;
+use crate::config::hardware::HardwareParams;
+use crate::sim::batch::StepRecord;
+use crate::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
+use crate::sim::slots::{Completion, SlotArray};
+use crate::workload::generator::RequestGenerator;
+
+/// Default number of batches kept in flight. The paper's Fig. 2 notes
+/// that "typically >= 3" microbatches are needed to mask communication;
+/// with only 2, the serial chain `t_A + t_C + t_F` exceeds
+/// `2 max(t_A, t_F)` near the balance point under the Table 3
+/// coefficients, leaving visible transfer bubbles (we verified both
+/// modes; see EXPERIMENTS.md §FIG3).
+pub const BATCHES_IN_FLIGHT: usize = 3;
+
+/// Options beyond the experiment config.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Record per-step [`StepRecord`]s (memory-heavy; for debugging).
+    pub record_steps: bool,
+    /// Stop after this many total completed requests (overrides the
+    /// config's `requests_per_instance * r` when Some).
+    pub max_completions: Option<usize>,
+    /// Batches kept in flight (microbatch pipelining depth).
+    pub batches_in_flight: usize,
+    /// Initialize slots from the stationary law (Lemma 4.1) instead of
+    /// cold age-0 requests. Default true: removes the ~mu_D-step KV ramp
+    /// that the renewal analysis assumes away; set false to study
+    /// transients.
+    pub warm_start: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            record_steps: false,
+            max_completions: None,
+            batches_in_flight: BATCHES_IN_FLIGHT,
+            warm_start: true,
+        }
+    }
+}
+
+/// Full simulation output.
+pub struct SimOutput {
+    pub metrics: SimMetrics,
+    /// All completion records, in finish-time order.
+    pub completions: Vec<Completion>,
+    /// Optional step log.
+    pub steps: Vec<StepRecord>,
+}
+
+/// One batch's bookkeeping inside the engine.
+struct BatchLane {
+    /// Per-worker slot arrays (each B slots).
+    workers: Vec<SlotArray>,
+    /// Time at which this batch is ready for its next Attention phase.
+    ready_at: f64,
+    /// Steps executed.
+    steps: u64,
+}
+
+/// Run the simulator for a given fan-in `r` (overriding the config's
+/// topology worker count).
+pub fn simulate(cfg: &ExperimentConfig, r: usize, opts: SimOptions) -> SimOutput {
+    assert!(r >= 1, "fan-in must be >= 1");
+    let hw = &cfg.hardware;
+    let b = cfg.topology.batch_per_worker;
+    let target_completions =
+        opts.max_completions.unwrap_or(cfg.requests_per_instance * r);
+
+    let n_lanes = opts.batches_in_flight.max(1);
+    // Seed hierarchy: one root generator, forked per (batch, worker).
+    let mut root = RequestGenerator::new(cfg.workload.clone(), cfg.seed);
+    let mut lanes: Vec<BatchLane> = (0..n_lanes)
+        .map(|g| BatchLane {
+            workers: (0..r)
+                .map(|j| {
+                    let gen = root.fork((g * 1024 + j) as u64);
+                    if opts.warm_start {
+                        SlotArray::new_stationary(b, gen, cfg.seed ^ (g * 131 + j) as u64)
+                    } else {
+                        SlotArray::new(b, gen)
+                    }
+                })
+                .collect(),
+            ready_at: 0.0,
+            steps: 0,
+        })
+        .collect();
+
+    // Resource availability clocks.
+    let mut worker_free = vec![0.0f64; r];
+    let mut ffn_free = 0.0f64;
+
+    // Busy-time accumulators for idle ratios.
+    let mut busy_attention = vec![0.0f64; r];
+    let mut busy_ffn = 0.0f64;
+
+    // Diagnostics.
+    let mut sum_barrier_load = 0.0f64;
+    let mut sum_mean_load = 0.0f64;
+    let mut n_steps = 0u64;
+
+    let mut completions: Vec<Completion> = Vec::with_capacity(target_completions + 64);
+    let mut steps_log = Vec::new();
+    // Lane-step finish times for the delivered-rate metric.
+    let mut step_times: Vec<f64> = Vec::new();
+
+    let agg = (r * b) as f64;
+    let t_ffn = hw.t_ffn(agg);
+    let tc_half = hw.t_comm(agg) / 2.0;
+
+    let mut last_finish = 0.0f64;
+    while completions.len() < target_completions {
+        // Advance the batch that is ready earliest (event order).
+        let g = (0..n_lanes)
+            .min_by(|&a, &b| lanes[a].ready_at.partial_cmp(&lanes[b].ready_at).unwrap())
+            .unwrap();
+        let ready = lanes[g].ready_at;
+
+        // --- Attention phase (per-worker start, barrier end) ---
+        let mut att_barrier: f64 = 0.0;
+        let mut att_start_min = f64::INFINITY;
+        let mut max_load = 0u64;
+        let mut sum_load = 0u64;
+        for j in 0..r {
+            let load = lanes[g].workers[j].token_load();
+            max_load = max_load.max(load);
+            sum_load += load;
+            let t_a = hw.t_attention(load as f64);
+            let start = worker_free[j].max(ready);
+            let end = start + t_a;
+            worker_free[j] = end;
+            busy_attention[j] += t_a;
+            att_barrier = att_barrier.max(end);
+            att_start_min = att_start_min.min(start);
+        }
+        sum_barrier_load += max_load as f64;
+        sum_mean_load += sum_load as f64 / r as f64;
+        n_steps += 1;
+
+        // --- A2F transfer ---
+        let a2f_done = att_barrier + tc_half;
+
+        // --- FFN phase (shared server; waits if busy with other batch) ---
+        let ffn_start = a2f_done.max(ffn_free);
+        let ffn_done = ffn_start + t_ffn;
+        ffn_free = ffn_done;
+        busy_ffn += t_ffn;
+
+        // --- F2A transfer; batch becomes ready for its next step ---
+        let f2a_done = ffn_done + tc_half;
+        lanes[g].ready_at = f2a_done;
+        lanes[g].steps += 1;
+        step_times.push(f2a_done);
+
+        // Slots advance: the step's tokens are delivered at f2a_done.
+        for j in 0..r {
+            lanes[g].workers[j].step(f2a_done, &mut completions);
+        }
+        last_finish = f2a_done;
+
+        if opts.record_steps {
+            steps_log.push(StepRecord {
+                batch: g,
+                step: lanes[g].steps,
+                barrier_load: max_load,
+                attention_start: att_start_min,
+                attention_end: att_barrier,
+                ffn_start,
+                ffn_end: ffn_done,
+                ready_at: f2a_done,
+            });
+        }
+    }
+
+    // Completions were appended batch-by-batch at nondecreasing times per
+    // lane, but lanes interleave: sort by finish time for the stable
+    // window (cheap: nearly sorted).
+    completions.sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
+    completions.truncate(target_completions);
+
+    let total_time = last_finish;
+    let (throughput, _t80) =
+        stable_throughput(&completions, cfg.stable_fraction, r + 1);
+    // Delivered rate over the warm window (skip the first 25% of steps):
+    // every lane-step delivers r*B tokens.
+    let delivered = {
+        let skip = step_times.len() / 4;
+        let warm_steps = (step_times.len() - skip) as f64;
+        let warm_time = total_time - step_times.get(skip).copied().unwrap_or(0.0);
+        if warm_time > 0.0 {
+            warm_steps * (r * b) as f64 / warm_time / (r + 1) as f64
+        } else {
+            f64::NAN
+        }
+    };
+    let idle_attention = 1.0
+        - busy_attention.iter().sum::<f64>() / (r as f64 * total_time);
+    let idle_ffn = 1.0 - busy_ffn / total_time;
+
+    SimOutput {
+        metrics: SimMetrics {
+            r,
+            batch: b,
+            throughput_per_instance: throughput,
+            delivered_throughput_per_instance: delivered,
+            tpot: mean_tpot(&completions),
+            idle_attention: idle_attention.max(0.0),
+            idle_ffn: idle_ffn.max(0.0),
+            total_time,
+            completed: completions.len(),
+            mean_barrier_load: sum_barrier_load / n_steps as f64,
+            mean_worker_load: sum_mean_load / n_steps as f64,
+        },
+        completions,
+        steps: steps_log,
+    }
+}
+
+/// Sweep the configured ratio grid, returning metrics per r.
+pub fn sweep_ratios(cfg: &ExperimentConfig, opts: SimOptions) -> Vec<SimMetrics> {
+    cfg.ratio_sweep
+        .iter()
+        .map(|&r| simulate(cfg, r, opts).metrics)
+        .collect()
+}
+
+/// Simulate a *coupled* (monolithic) baseline: Attention and FFN colocated
+/// on every instance, no disaggregation, no A<->F transfer. Per step each
+/// instance pays `t_A(T) + t_F(B)` for its own microbatch of B. Used by
+/// the baseline-comparison bench (the architecture AFD improves on).
+pub fn simulate_coupled(cfg: &ExperimentConfig, instances: usize, opts: SimOptions) -> SimOutput {
+    assert!(instances >= 1);
+    let hw: &HardwareParams = &cfg.hardware;
+    let b = cfg.topology.batch_per_worker;
+    let target = opts.max_completions.unwrap_or(cfg.requests_per_instance * instances);
+    let mut root = RequestGenerator::new(cfg.workload.clone(), cfg.seed ^ 0xC0_FFEE);
+    let mut workers: Vec<SlotArray> = (0..instances)
+        .map(|j| {
+            let gen = root.fork(j as u64);
+            if opts.warm_start {
+                SlotArray::new_stationary(b, gen, cfg.seed ^ (j as u64).wrapping_mul(977))
+            } else {
+                SlotArray::new(b, gen)
+            }
+        })
+        .collect();
+    let mut clock = vec![0.0f64; instances];
+    let mut steps = vec![0u64; instances];
+    let mut completions = Vec::with_capacity(target + 64);
+    let mut busy = 0.0f64;
+    while completions.len() < target {
+        // Advance the earliest instance (they are independent).
+        let j = (0..instances)
+            .min_by(|&a, &b| clock[a].partial_cmp(&clock[b]).unwrap())
+            .unwrap();
+        let t = hw.t_attention(workers[j].token_load() as f64) + hw.t_ffn(b as f64);
+        clock[j] += t;
+        steps[j] += 1;
+        busy += t;
+        let now = clock[j];
+        workers[j].step(now, &mut completions);
+    }
+    completions.sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
+    completions.truncate(target);
+    let total_time = clock.iter().cloned().fold(0.0, f64::max);
+    let (throughput, _) = stable_throughput(&completions, cfg.stable_fraction, instances);
+    // Delivered tokens per cycle per instance (unbiased; steady state).
+    let delivered = (0..instances)
+        .map(|j| if clock[j] > 0.0 { steps[j] as f64 * b as f64 / clock[j] } else { 0.0 })
+        .sum::<f64>()
+        / instances as f64;
+    SimOutput {
+        metrics: SimMetrics {
+            r: instances,
+            batch: b,
+            throughput_per_instance: throughput,
+            delivered_throughput_per_instance: delivered,
+            tpot: mean_tpot(&completions),
+            idle_attention: (1.0 - busy / (instances as f64 * total_time)).max(0.0),
+            idle_ffn: 0.0,
+            total_time,
+            completed: completions.len(),
+            mean_barrier_load: f64::NAN,
+            mean_worker_load: f64::NAN,
+        },
+        completions,
+        steps: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::cycle_time::OperatingPoint;
+    use crate::workload::stationary::stationary_geometric;
+
+    /// Small config for fast tests: scaled-down paper workload.
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 32;
+        cfg.requests_per_instance = 300;
+        cfg.workload = crate::config::workload::WorkloadSpec::independent(
+            crate::stats::distributions::LengthDist::geometric_with_mean(20.0),
+            crate::stats::distributions::LengthDist::geometric_with_mean(50.0),
+        );
+        cfg
+    }
+
+    #[test]
+    fn completes_requested_number() {
+        let cfg = small_cfg();
+        let out = simulate(&cfg, 2, SimOptions::default());
+        assert_eq!(out.completions.len(), 600);
+        assert!(out.metrics.total_time > 0.0);
+        assert!(out.metrics.throughput_per_instance > 0.0);
+        assert!(out.metrics.tpot > 0.0);
+    }
+
+    #[test]
+    fn completions_sorted_by_finish_time() {
+        let cfg = small_cfg();
+        let out = simulate(&cfg, 3, SimOptions::default());
+        for w in out.completions.windows(2) {
+            assert!(w[0].finish_time <= w[1].finish_time);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let a = simulate(&cfg, 2, SimOptions::default());
+        let b = simulate(&cfg, 2, SimOptions::default());
+        assert_eq!(a.metrics.total_time, b.metrics.total_time);
+        assert_eq!(a.metrics.throughput_per_instance, b.metrics.throughput_per_instance);
+    }
+
+    #[test]
+    fn ffn_idle_decreases_with_r() {
+        // Needs an attention-bound r=1 regime (mu_A > t_F) for the FFN to
+        // starve at small r, and a horizon >> mu_D so the KV ramp ends:
+        // B = 512 with mu_D = 100 gives mu_A ~ 218 vs t_F ~ 142.
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 512;
+        cfg.requests_per_instance = 3_000;
+        cfg.workload = crate::config::workload::WorkloadSpec::independent(
+            crate::stats::distributions::LengthDist::geometric_with_mean(100.0),
+            crate::stats::distributions::LengthDist::geometric_with_mean(100.0),
+        );
+        let idle1 = simulate(&cfg, 1, SimOptions::default()).metrics.idle_ffn;
+        let idle8 = simulate(&cfg, 8, SimOptions::default()).metrics.idle_ffn;
+        assert!(
+            idle1 > 0.2 && idle1 > idle8,
+            "eta_F should fall with r: r=1 {idle1:.3} vs r=8 {idle8:.3}"
+        );
+    }
+
+    #[test]
+    fn attention_idle_grows_with_r_past_balance() {
+        let cfg = small_cfg();
+        let small = simulate(&cfg, 1, SimOptions::default()).metrics.idle_attention;
+        let large = simulate(&cfg, 24, SimOptions::default()).metrics.idle_attention;
+        assert!(large > small, "eta_A r=1 {small:.3} vs r=24 {large:.3}");
+    }
+
+    #[test]
+    fn mean_worker_load_approaches_b_theta() {
+        let mut cfg = small_cfg();
+        cfg.requests_per_instance = 3000;
+        let out = simulate(&cfg, 2, SimOptions::default());
+        // theta for (mu_P=20, mu_D=50 geometric): 20 + 49 = 69.
+        let b_theta = 32.0 * 69.0;
+        assert!(
+            (out.metrics.mean_worker_load / b_theta - 1.0).abs() < 0.06,
+            "mean load {} vs B*theta {}",
+            out.metrics.mean_worker_load,
+            b_theta
+        );
+    }
+
+    #[test]
+    fn barrier_load_matches_theorem_4_3() {
+        let mut cfg = small_cfg();
+        cfg.requests_per_instance = 3000;
+        let r = 4;
+        let out = simulate(&cfg, r, SimOptions::default());
+        let load = stationary_geometric(20.0, 380.0, 50.0);
+        let predicted =
+            crate::analysis::barrier::expected_barrier_load(&load, 32, r);
+        assert!(
+            (out.metrics.mean_barrier_load / predicted - 1.0).abs() < 0.06,
+            "sim barrier {} vs CLT {}",
+            out.metrics.mean_barrier_load,
+            predicted
+        );
+    }
+
+    #[test]
+    fn cycle_time_matches_gaussian_approximation() {
+        // Total time / steps should track tau_G.
+        let mut cfg = small_cfg();
+        cfg.requests_per_instance = 2000;
+        let r = 2;
+        let out = simulate(&cfg, r, SimOptions { record_steps: true, ..Default::default() });
+        // Per-LANE period: with m batches in flight sharing every
+        // resource, the steady-state lane period is m x the cycle time
+        // (each resource serves every lane once per period); bundle
+        // throughput is identical to the single-cycle model's.
+        let n_lane_steps = out.steps.len() as f64 / BATCHES_IN_FLIGHT as f64;
+        let lane_period = out.metrics.total_time / n_lane_steps;
+        let load = stationary_geometric(20.0, 380.0, 50.0);
+        let op = OperatingPoint::new(cfg.hardware, load, 32);
+        let tau = op.tau_gaussian(r);
+        let m = BATCHES_IN_FLIGHT as f64;
+        assert!(
+            (lane_period / (m * tau) - 1.0).abs() < 0.10,
+            "lane period {lane_period} vs m tau_G {}",
+            m * tau
+        );
+    }
+
+    #[test]
+    fn step_records_consistent() {
+        let cfg = small_cfg();
+        let out = simulate(&cfg, 2, SimOptions { record_steps: true, max_completions: Some(100), ..Default::default() });
+        assert!(!out.steps.is_empty());
+        for s in &out.steps {
+            assert!(s.attention_end >= s.attention_start);
+            assert!(s.ffn_start >= s.attention_end);
+            assert!(s.ffn_end > s.ffn_start);
+            assert!(s.ready_at > s.ffn_end);
+            assert!(s.barrier_load > 0);
+        }
+        // FFN serialization: ffn intervals must not overlap.
+        let mut intervals: Vec<(f64, f64)> =
+            out.steps.iter().map(|s| (s.ffn_start, s.ffn_end)).collect();
+        intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in intervals.windows(2) {
+            assert!(w[1].0 >= w[0].1 - 1e-9, "FFN overlap: {w:?}");
+        }
+    }
+
+    #[test]
+    fn coupled_baseline_runs_and_is_slower_per_instance_at_scale() {
+        // With the paper's cost structure, AFD at the optimal r beats the
+        // coupled baseline on per-instance throughput (FFN amortization).
+        let mut cfg = small_cfg();
+        cfg.requests_per_instance = 1000;
+        // Give the workload the paper-like cost asymmetry.
+        let afd = simulate(&cfg, 8, SimOptions::default());
+        let coupled = simulate_coupled(&cfg, 9, SimOptions::default());
+        assert!(coupled.metrics.throughput_per_instance > 0.0);
+        assert!(
+            afd.metrics.throughput_per_instance > coupled.metrics.throughput_per_instance,
+            "AFD {} <= coupled {}",
+            afd.metrics.throughput_per_instance,
+            coupled.metrics.throughput_per_instance
+        );
+    }
+
+    #[test]
+    fn sweep_produces_one_metric_per_ratio() {
+        let mut cfg = small_cfg();
+        cfg.ratio_sweep = vec![1, 2, 4];
+        cfg.requests_per_instance = 100;
+        let ms = sweep_ratios(&cfg, SimOptions::default());
+        assert_eq!(ms.len(), 3);
+        assert_eq!(ms[0].r, 1);
+        assert_eq!(ms[2].r, 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! Trace-calibrated discrete-event AFD simulator (paper §5.1).
+//!
+//! * [`batch`] — the six-state batch FSM and step records.
+//! * [`slots`] — continuous-batching slot arrays with O(1) incremental
+//!   token-load maintenance.
+//! * [`engine`] — the two-batches-in-flight interleaved engine, plus a
+//!   coupled (monolithic) baseline.
+//! * [`metrics`] — stable 80% throughput, TPOT, idle ratios (§5.2).
+
+pub mod batch;
+pub mod engine;
+pub mod metrics;
+pub mod slots;
+
+pub use batch::{BatchState, StepRecord};
+pub use engine::{simulate, simulate_coupled, sweep_ratios, SimOptions, SimOutput};
+pub use metrics::SimMetrics;
+pub use slots::{Completion, SlotArray};

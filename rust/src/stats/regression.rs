@@ -1,0 +1,148 @@
+//! Ordinary least squares in one variable: `y = alpha * x + beta`.
+//!
+//! This is the calibration tool of Appendix B: the paper's Table 3
+//! coefficients were "obtained via linear regression on real execution
+//! traces"; `latency::calibration` uses this module to do the same
+//! against our PJRT runtime measurements.
+
+/// Result of a univariate least-squares fit `y ≈ alpha x + beta`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Coefficient of determination R².
+    pub r_squared: f64,
+    /// Residual standard error.
+    pub residual_std: f64,
+    pub n: usize,
+}
+
+/// Fit `y = alpha x + beta` by OLS. Requires >= 2 distinct x values.
+pub fn fit_linear(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mean_x = xs.iter().sum::<f64>() / n;
+    let mean_y = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let dx = x - mean_x;
+        let dy = y - mean_y;
+        sxx += dx * dx;
+        sxy += dx * dy;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 {
+        return None;
+    }
+    let alpha = sxy / sxx;
+    let beta = mean_y - alpha * mean_x;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(&x, &y)| {
+            let e = y - (alpha * x + beta);
+            e * e
+        })
+        .sum();
+    let r_squared = if syy == 0.0 { 1.0 } else { 1.0 - ss_res / syy };
+    let dof = (xs.len() as f64 - 2.0).max(1.0);
+    Some(LinearFit {
+        alpha,
+        beta,
+        r_squared,
+        residual_std: (ss_res / dof).sqrt(),
+        n: xs.len(),
+    })
+}
+
+/// Fit a line through the log-survival function of integer samples:
+/// `log P(X > x) ≈ slope * x + intercept`. A geometric distribution has
+/// `slope = log(1 - p)`; used by the Fig. 5 evidence bench to quantify
+/// how geometric a decode-length trace is.
+pub fn fit_log_survival(samples: &[u64]) -> Option<LinearFit> {
+    if samples.is_empty() {
+        return None;
+    }
+    let max = *samples.iter().max().unwrap();
+    let n = samples.len() as f64;
+    let mut counts = vec![0u64; max as usize + 1];
+    for &s in samples {
+        counts[s as usize] += 1;
+    }
+    // Survival S(x) = P(X > x), evaluated at integer x.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut above = samples.len() as u64;
+    for (x, &c) in counts.iter().enumerate() {
+        above -= c;
+        let s = above as f64 / n;
+        // Only keep well-estimated points (at least ~30 samples in tail).
+        if above >= 30 {
+            xs.push(x as f64);
+            ys.push(s.ln());
+        }
+    }
+    fit_linear(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn recovers_exact_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.083 * x + 100.0).collect();
+        let fit = fit_linear(&xs, &ys).unwrap();
+        assert!((fit.alpha - 0.083).abs() < 1e-12);
+        assert!((fit.beta - 100.0).abs() < 1e-10);
+        assert!((fit.r_squared - 1.0).abs() < 1e-12);
+        assert!(fit.residual_std < 1e-9);
+    }
+
+    #[test]
+    fn recovers_noisy_line() {
+        let mut rng = Pcg64::new(4);
+        let xs: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| 1.65e-3 * x + 50.0 + rng.next_gaussian() * 0.01).collect();
+        let fit = fit_linear(&xs, &ys).unwrap();
+        assert!((fit.alpha - 1.65e-3).abs() < 1e-4, "alpha {}", fit.alpha);
+        assert!((fit.beta - 50.0).abs() < 0.05, "beta {}", fit.beta);
+        assert!(fit.r_squared > 0.99);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(fit_linear(&[1.0], &[2.0]).is_none());
+        assert!(fit_linear(&[1.0, 1.0], &[2.0, 3.0]).is_none());
+        assert!(fit_linear(&[1.0, 2.0], &[1.0]).is_none());
+    }
+
+    #[test]
+    fn log_survival_of_geometric_has_log_q_slope() {
+        // Geometric(p) on {1, 2, ...}: P(X > x) = (1-p)^x, slope ln(1-p).
+        let p: f64 = 0.02;
+        let mut rng = Pcg64::new(77);
+        let samples: Vec<u64> = (0..200_000)
+            .map(|_| {
+                // Inverse-CDF sampling.
+                let u = rng.next_f64_open();
+                (u.ln() / (1.0 - p).ln()).ceil().max(1.0) as u64
+            })
+            .collect();
+        let fit = fit_log_survival(&samples).unwrap();
+        let want = (1.0 - p).ln();
+        assert!(
+            (fit.alpha - want).abs() < 0.002,
+            "slope {} want {want}",
+            fit.alpha
+        );
+        assert!(fit.r_squared > 0.99);
+    }
+}

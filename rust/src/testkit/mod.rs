@@ -1,0 +1,213 @@
+//! A small property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Provides seeded generators, a `forall` runner with failure-case
+//! minimization ("shrink-lite": retry with simpler values drawn from the
+//! same generator), and combinators for the shapes our invariants need.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath)
+//! use afd::testkit::{forall, Gen};
+//! forall("sum is commutative", 200, Gen::pair(Gen::u64_range(0, 1000), Gen::u64_range(0, 1000)),
+//!     |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::stats::rng::Pcg64;
+
+/// A seeded random generator of values of type `T`, with an optional
+/// simplification order used for shrinking.
+pub struct Gen<T> {
+    sample: Box<dyn Fn(&mut Pcg64) -> T>,
+    /// Generate a "smaller" candidate near `value` (used for shrinking).
+    shrink: Option<Box<dyn Fn(&T, &mut Pcg64) -> Option<T>>>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(sample: impl Fn(&mut Pcg64) -> T + 'static) -> Self {
+        Self { sample: Box::new(sample), shrink: None }
+    }
+
+    pub fn with_shrink(mut self, shrink: impl Fn(&T, &mut Pcg64) -> Option<T> + 'static) -> Self {
+        self.shrink = Some(Box::new(shrink));
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.sample)(rng)
+    }
+
+    /// Map the generated values (loses shrinking).
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| f((self.sample)(rng)))
+    }
+}
+
+impl Gen<u64> {
+    pub fn u64_range(lo: u64, hi: u64) -> Gen<u64> {
+        assert!(lo <= hi);
+        Gen::new(move |rng| rng.next_range(lo, hi))
+            .with_shrink(move |&v, _| if v > lo { Some(lo + (v - lo) / 2) } else { None })
+    }
+}
+
+impl Gen<usize> {
+    pub fn usize_range(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(lo <= hi);
+        Gen::new(move |rng| rng.next_range(lo as u64, hi as u64) as usize)
+            .with_shrink(move |&v, _| if v > lo { Some(lo + (v - lo) / 2) } else { None })
+    }
+}
+
+impl Gen<f64> {
+    pub fn f64_range(lo: f64, hi: f64) -> Gen<f64> {
+        assert!(lo <= hi && lo.is_finite() && hi.is_finite());
+        Gen::new(move |rng| lo + (hi - lo) * rng.next_f64())
+            .with_shrink(move |&v, _| if v > lo + 1e-9 { Some(lo + (v - lo) / 2.0) } else { None })
+    }
+
+    /// Positive floats log-uniform over [lo, hi] (spans magnitudes).
+    pub fn f64_log_range(lo: f64, hi: f64) -> Gen<f64> {
+        assert!(lo > 0.0 && hi >= lo);
+        let (ll, lh) = (lo.ln(), hi.ln());
+        Gen::new(move |rng| (ll + (lh - ll) * rng.next_f64()).exp())
+    }
+}
+
+impl<T: 'static> Gen<Vec<T>> {
+    /// Vector of `len_lo..=len_hi` elements from `inner`.
+    pub fn vec_of(inner: Gen<T>, len_lo: usize, len_hi: usize) -> Gen<Vec<T>> {
+        assert!(len_lo <= len_hi);
+        Gen::new(move |rng| {
+            let len = rng.next_range(len_lo as u64, len_hi as u64) as usize;
+            (0..len).map(|_| inner.sample(rng)).collect()
+        })
+    }
+}
+
+impl<A: 'static, B: 'static> Gen<(A, B)> {
+    pub fn pair(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+        Gen::new(move |rng| (a.sample(rng), b.sample(rng)))
+    }
+}
+
+impl<A: 'static, B: 'static, C: 'static> Gen<(A, B, C)> {
+    pub fn triple(a: Gen<A>, b: Gen<B>, c: Gen<C>) -> Gen<(A, B, C)> {
+        Gen::new(move |rng| (a.sample(rng), b.sample(rng), c.sample(rng)))
+    }
+}
+
+/// Run `cases` random cases of `property` against `gen`; panic with the
+/// (possibly shrunk) counterexample on failure. Deterministic: the seed
+/// is derived from the property name, so failures reproduce.
+pub fn forall<T: std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    property: impl Fn(&T) -> bool,
+) {
+    let seed = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let value = gen.sample(&mut rng);
+        if !property(&value) {
+            // Shrink: repeatedly simplify while the property still fails.
+            let mut worst = value;
+            if let Some(shrink) = &gen.shrink {
+                let mut budget = 200;
+                while budget > 0 {
+                    budget -= 1;
+                    match shrink(&worst, &mut rng) {
+                        Some(candidate) if !property(&candidate) => worst = candidate,
+                        _ => break,
+                    }
+                }
+            }
+            panic!(
+                "property {name:?} failed at case {case} with counterexample: {worst:?}"
+            );
+        }
+    }
+}
+
+/// `forall` variant where the property returns a Result-like message.
+pub fn forall_msg<T: std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    property: impl Fn(&T) -> std::result::Result<(), String>,
+) {
+    forall(name, cases, gen, |v| match property(v) {
+        Ok(()) => true,
+        Err(msg) => {
+            eprintln!("property {name:?}: {msg}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("add-commutes", 500, Gen::pair(Gen::u64_range(0, 1_000_000), Gen::u64_range(0, 1_000_000)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn failing_property_reports_counterexample() {
+        forall("always-small", 100, Gen::u64_range(0, 1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrinking_moves_toward_lo() {
+        // Capture the panic message and verify the counterexample shrank
+        // to (near) the boundary 500.
+        let result = std::panic::catch_unwind(|| {
+            forall("shrinks", 100, Gen::u64_range(0, 100_000), |&x| x < 500);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        let value: u64 = msg
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("numeric counterexample");
+        assert!(value < 1200, "shrunk value {value} should approach 500, msg: {msg}");
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut rng1 = Pcg64::new(1);
+        let g = Gen::f64_range(0.0, 1.0);
+        let a = g.sample(&mut rng1);
+        let mut rng2 = Pcg64::new(1);
+        let b = g.sample(&mut rng2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vec_and_log_range_generators() {
+        let mut rng = Pcg64::new(2);
+        let g = Gen::vec_of(Gen::usize_range(1, 10), 0, 5);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            assert!(v.len() <= 5);
+            assert!(v.iter().all(|&x| (1..=10).contains(&x)));
+        }
+        let lg = Gen::f64_log_range(1e-3, 1e3);
+        for _ in 0..50 {
+            let x = lg.sample(&mut rng);
+            assert!((1e-3..=1e3 + 1e-9).contains(&x));
+        }
+    }
+}

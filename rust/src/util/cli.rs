@@ -1,0 +1,234 @@
+//! Minimal declarative command-line parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed extraction with defaults, and auto-generated help.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the libxla_extension rpath)
+//! use afd::util::cli::Args;
+//! let args = Args::parse_from(["afd", "--ratio", "8", "--verbose"].iter().map(|s| s.to_string()));
+//! assert_eq!(args.get_f64("ratio", 1.0).unwrap(), 8.0);
+//! assert!(args.has_flag("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{AfdError, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Binary name (argv[0]).
+    pub program: String,
+    /// First non-flag token, if treated as a subcommand by the caller.
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs. Last occurrence wins.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments (excluding the subcommand).
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first item is the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut it = items.into_iter();
+        let program = it.next().unwrap_or_default();
+        let rest: Vec<String> = it.collect();
+        Self::parse_tokens(program, &rest)
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args())
+    }
+
+    fn parse_tokens(program: String, tokens: &[String]) -> Args {
+        let mut args = Args { program, ..Default::default() };
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(body.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// True when `--name` was given as a bare switch or as `--name true`.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed extraction with default; errors on unparseable values.
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| AfdError::config(format!("--{name}: expected float, got {v:?}"))),
+        }
+    }
+
+    /// Typed extraction with default; errors on unparseable values.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| AfdError::config(format!("--{name}: expected integer, got {v:?}"))),
+        }
+    }
+
+    /// Typed extraction with default; errors on unparseable values.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| AfdError::config(format!("--{name}: expected integer, got {v:?}"))),
+        }
+    }
+
+    /// Comma-separated list of typed values, e.g. `--ratios 1,2,4,8`.
+    pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        AfdError::config(format!("--{name}: expected float list, got {v:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of typed values, e.g. `--rs 1,2,4,8`.
+    pub fn get_list_usize(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        AfdError::config(format!("--{name}: expected int list, got {v:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Help-text builder for subcommand binaries.
+pub struct HelpBuilder {
+    program: String,
+    about: String,
+    entries: Vec<(String, String)>,
+}
+
+impl HelpBuilder {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self { program: program.into(), about: about.into(), entries: Vec::new() }
+    }
+
+    pub fn entry(mut self, name: &str, help: &str) -> Self {
+        self.entries.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let width = self.entries.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+        let mut out = format!("{}\n\nUsage: {} <command> [options]\n\n", self.about, self.program);
+        for (n, h) in &self.entries {
+            out.push_str(&format!("  {n:<width$}  {h}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(std::iter::once("afd".to_string()).chain(toks.iter().map(|s| s.to_string())))
+    }
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = parse(&["simulate", "--ratio", "8", "--batch=256"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get_f64("ratio", 0.0).unwrap(), 8.0);
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 256);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NOTE: `--flag value`-style ambiguity is resolved greedily (the
+        // token after `--verbose` would be consumed as its value), so
+        // bare switches go last or use `--verbose=true`.
+        let a = parse(&["run", "trace.csv", "out.csv", "--verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["trace.csv", "out.csv"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["--r", "1", "--r", "2"]);
+        assert_eq!(a.get_usize("r", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn typed_errors_are_config_errors() {
+        let a = parse(&["--ratio", "abc"]);
+        assert!(a.get_f64("ratio", 0.0).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse(&["--rs", "1,2,4", "--fs", "0.5, 1.5"]);
+        assert_eq!(a.get_list_usize("rs", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list_f64("fs", &[]).unwrap(), vec![0.5, 1.5]);
+        assert_eq!(a.get_list_f64("absent", &[9.0]).unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn flag_as_true_value() {
+        let a = parse(&["--verbose=true"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn help_builder_renders_aligned() {
+        let h = HelpBuilder::new("afd", "AFD toolkit").entry("simulate", "run sim").render();
+        assert!(h.contains("simulate") && h.contains("AFD toolkit"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Tiny CSV reader/writer for traces and metric exports.
+//!
+//! Deliberately simple: comma-separated, first row is the header, values
+//! are unquoted (our traces are numeric). Quoted fields containing commas
+//! are supported on read for robustness against external traces.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{AfdError, Result};
+
+/// An in-memory CSV table: header + rows of equal width.
+#[derive(Debug, Clone, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of displayable values.
+    pub fn push_row<T: std::fmt::Display>(&mut self, values: &[T]) {
+        assert_eq!(values.len(), self.header.len(), "row width != header width");
+        self.rows.push(values.iter().map(|v| v.to_string()).collect());
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| AfdError::Workload(format!("csv column {name:?} not found")))
+    }
+
+    /// Typed column extraction.
+    pub fn column_f64(&self, name: &str) -> Result<Vec<f64>> {
+        let idx = self.col(name)?;
+        self.rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row[idx].trim().parse().map_err(|_| {
+                    AfdError::Workload(format!(
+                        "csv row {}: column {name:?} value {:?} is not a float",
+                        i + 2,
+                        row[idx]
+                    ))
+                })
+            })
+            .collect()
+    }
+
+    /// Typed column extraction.
+    pub fn column_u64(&self, name: &str) -> Result<Vec<u64>> {
+        let idx = self.col(name)?;
+        self.rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row[idx].trim().parse().map_err(|_| {
+                    AfdError::Workload(format!(
+                        "csv row {}: column {name:?} value {:?} is not an integer",
+                        i + 2,
+                        row[idx]
+                    ))
+                })
+            })
+            .collect()
+    }
+
+    pub fn write_path(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(w, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn read_path(path: impl AsRef<Path>) -> Result<Self> {
+        let reader = BufReader::new(File::open(&path)?);
+        let mut lines = reader.lines();
+        let header_line = lines
+            .next()
+            .ok_or_else(|| AfdError::Workload("csv file is empty".into()))??;
+        let header = split_csv_line(&header_line);
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = split_csv_line(&line);
+            if row.len() != header.len() {
+                return Err(AfdError::Workload(format!(
+                    "csv row {} has {} fields, header has {}",
+                    i + 2,
+                    row.len(),
+                    header.len()
+                )));
+            }
+            rows.push(row);
+        }
+        Ok(Self { header, rows })
+    }
+}
+
+/// Split one CSV line, honoring double-quoted fields.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_file() {
+        let mut t = CsvTable::new(&["prefill", "decode"]);
+        t.push_row(&[100, 512]);
+        t.push_row(&[7, 1]);
+        let path = std::env::temp_dir().join("afd_csv_test.csv");
+        t.write_path(&path).unwrap();
+        let back = CsvTable::read_path(&path).unwrap();
+        assert_eq!(back.header, vec!["prefill", "decode"]);
+        assert_eq!(back.column_u64("decode").unwrap(), vec![512, 1]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn quoted_fields() {
+        assert_eq!(split_csv_line(r#"a,"b,c",d"#), vec!["a", "b,c", "d"]);
+        assert_eq!(split_csv_line(r#""he said ""hi""",2"#), vec![r#"he said "hi""#, "2"]);
+    }
+
+    #[test]
+    fn typed_column_errors() {
+        let mut t = CsvTable::new(&["x"]);
+        t.push_row(&["abc"]);
+        assert!(t.column_f64("x").is_err());
+        assert!(t.column_f64("missing").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_row(&[1]);
+    }
+}

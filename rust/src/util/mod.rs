@@ -1,0 +1,12 @@
+//! General-purpose substrates built from scratch for the offline
+//! environment (no clap/serde/tokio/criterion available): CLI parsing,
+//! JSON emission, CSV I/O, aligned table formatting, logging, a thread
+//! pool, and timing helpers.
+
+pub mod cli;
+pub mod csvio;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod tablefmt;
+pub mod timer;

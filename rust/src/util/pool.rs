@@ -1,0 +1,193 @@
+//! A small fixed-size thread pool plus a scoped parallel-map helper.
+//!
+//! Tokio is unavailable offline; the serving engine pins one OS thread per
+//! AFD instance anyway (an Attention worker is a device in the paper's
+//! model), so a plain pool + channels is the honest architecture.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool. Jobs run FIFO across workers.
+pub struct ThreadPool {
+    senders: Vec<Sender<Message>>,
+    handles: Vec<JoinHandle<()>>,
+    next: std::sync::atomic::AtomicUsize,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx): (Sender<Message>, Receiver<Message>) = channel();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("afd-pool-{i}"))
+                    .spawn(move || {
+                        while let Ok(Message::Run(job)) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self { senders, handles, next: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    /// Submit a job (round-robin placement).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let i = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.senders.len();
+        self.senders[i].send(Message::Run(Box::new(f))).expect("pool worker alive");
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Parallel map over a slice with plain scoped threads (no pool needed):
+/// used by Monte Carlo benches to spread trials over cores.
+pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(items: &[T], threads: usize, f: F) -> Vec<R> {
+    assert!(threads >= 1);
+    let chunk = items.len().div_ceil(threads.max(1)).max(1);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let out_chunks: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|scope| {
+        for (slot_chunk, item_chunk) in out_chunks.into_iter().zip(items.chunks(chunk)) {
+            let f = &f;
+            scope.spawn(move || {
+                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("par_map slot filled")).collect()
+}
+
+/// Reusable N-party synchronization barrier (condvar-based).
+///
+/// Models the paper's synchronized Attention phase: all `r` workers must
+/// arrive before any proceeds; the per-step cycle is governed by the
+/// slowest (the barrier load `W_{B,r}`).
+pub struct Barrier {
+    lock: Mutex<BarrierState>,
+    cvar: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+}
+
+impl Barrier {
+    pub fn new(parties: usize) -> Arc<Self> {
+        assert!(parties >= 1);
+        Arc::new(Self {
+            lock: Mutex::new(BarrierState { count: 0, generation: 0 }),
+            cvar: Condvar::new(),
+            parties,
+        })
+    }
+
+    /// Block until all parties arrive. Returns true for exactly one
+    /// "leader" per generation (useful for once-per-step work).
+    pub fn wait(&self) -> bool {
+        let mut state = self.lock.lock().unwrap();
+        let gen = state.generation;
+        state.count += 1;
+        if state.count == self.parties {
+            state.count = 0;
+            state.generation += 1;
+            self.cvar.notify_all();
+            true
+        } else {
+            while state.generation == gen {
+                state = self.cvar.wait(state).unwrap();
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = counter.clone();
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, 7, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_single_thread_and_empty() {
+        assert_eq!(par_map(&[1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
+        let empty: Vec<i32> = vec![];
+        assert!(par_map(&empty, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn barrier_synchronizes_and_elects_one_leader() {
+        let barrier = Barrier::new(8);
+        let leaders = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let b = barrier.clone();
+                let l = leaders.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        if b.wait() {
+                            l.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::SeqCst), 50);
+    }
+}

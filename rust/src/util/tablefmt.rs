@@ -1,0 +1,135 @@
+//! Aligned plain-text table printer used by benches and examples to emit
+//! the paper's tables/figure series in a readable form.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A text table with aligned columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; header.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, align: Align) -> Self {
+        self.aligns[col] = align;
+        self
+    }
+
+    pub fn row<T: std::fmt::Display>(&mut self, values: &[T]) {
+        assert_eq!(values.len(), self.header.len(), "row width != header width");
+        self.rows.push(values.iter().map(|v| v.to_string()).collect());
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let sep: String = {
+            let parts: Vec<String> = widths.iter().map(|w| "-".repeat(w + 2)).collect();
+            format!("+{}+", parts.join("+"))
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let parts: Vec<String> = (0..ncols)
+                .map(|i| match self.aligns[i] {
+                    Align::Left => format!(" {:<width$} ", cells[i], width = widths[i]),
+                    Align::Right => format!(" {:>width$} ", cells[i], width = widths[i]),
+                })
+                .collect();
+            format!("|{}|", parts.join("|"))
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with a sensible number of significant digits for tables.
+pub fn sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let magnitude = x.abs().log10().floor() as i32;
+    let decimals = (digits as i32 - 1 - magnitude).max(0) as usize;
+    format!("{x:.decimals$}")
+}
+
+/// Format a ratio as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["r", "throughput"]).with_title("Fig 3").align(0, Align::Left);
+        t.row(&["1".to_string(), "0.123".to_string()]);
+        t.row(&["16".to_string(), "1.5".to_string()]);
+        let s = t.render();
+        assert!(s.contains("Fig 3"));
+        assert!(s.contains("| 1 "));
+        // All lines between separators share a width.
+        let lens: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn sig_digits() {
+        assert_eq!(sig(0.0016489, 3), "0.00165");
+        assert_eq!(sig(150074.0, 4), "150074");
+        assert_eq!(sig(9.337, 3), "9.34");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.1101), "11.01%");
+    }
+}

@@ -1,0 +1,186 @@
+//! Nonparametric trace estimator of `(theta, nu^2)` — Appendix A.6.
+//!
+//! Given a request trace `(P_i, D_i)_{i=1}^n`, the estimators are ratios
+//! of i.i.d. sums (Eq. 15–16):
+//!
+//! ```text
+//! theta_hat = sum_i [ D_i P_i + D_i (D_i - 1)/2 ] / sum_i D_i
+//! q_hat     = sum_i [ D_i P_i^2 + P_i D_i (D_i-1) + D_i (D_i-1)(2D_i-1)/6 ] / sum_i D_i
+//! nu2_hat   = q_hat - theta_hat^2
+//! ```
+//!
+//! Strongly consistent under Lemma 4.1's moment conditions; we also expose
+//! a jackknife standard error so callers can judge trace sufficiency.
+
+use crate::error::{AfdError, Result};
+use crate::workload::request::RequestLengths;
+use crate::workload::stationary::StationaryLoad;
+use crate::workload::trace::Trace;
+
+/// Estimate `(theta, nu^2)` from a trace (Eq. 15–16).
+pub fn estimate_stationary(trace: &Trace) -> Result<StationaryLoad> {
+    if trace.is_empty() {
+        return Err(AfdError::Workload("estimator needs a non-empty trace".into()));
+    }
+    let (mut num1, mut num2, mut den) = (0.0f64, 0.0f64, 0.0f64);
+    for r in &trace.requests {
+        let (c1, c2, d) = cycle_contributions(r);
+        num1 += c1;
+        num2 += c2;
+        den += d;
+    }
+    let theta = num1 / den;
+    let q = num2 / den;
+    let load = StationaryLoad { theta, nu_sq: q - theta * theta };
+    load.validate()?;
+    Ok(load)
+}
+
+/// Per-request renewal-cycle contributions: (reward1, reward2, length).
+fn cycle_contributions(r: &RequestLengths) -> (f64, f64, f64) {
+    let p = r.prefill as f64;
+    let d = r.decode as f64;
+    let c1 = d * p + d * (d - 1.0) / 2.0;
+    let c2 = d * p * p + p * d * (d - 1.0) + d * (d - 1.0) * (2.0 * d - 1.0) / 6.0;
+    (c1, c2, d)
+}
+
+/// Estimate with leave-one-out jackknife standard errors for
+/// `(theta_hat, nu2_hat)`.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimateWithError {
+    pub load: StationaryLoad,
+    pub theta_se: f64,
+    pub nu_sq_se: f64,
+    pub n: usize,
+}
+
+/// Jackknife the ratio estimators (O(n) using sum differences).
+pub fn estimate_with_error(trace: &Trace) -> Result<EstimateWithError> {
+    let n = trace.len();
+    if n < 2 {
+        return Err(AfdError::Workload("jackknife needs >= 2 requests".into()));
+    }
+    let contribs: Vec<(f64, f64, f64)> =
+        trace.requests.iter().map(cycle_contributions).collect();
+    let (tot1, tot2, totd) = contribs.iter().fold((0.0, 0.0, 0.0), |acc, c| {
+        (acc.0 + c.0, acc.1 + c.1, acc.2 + c.2)
+    });
+    let full_theta = tot1 / totd;
+    let full_q = tot2 / totd;
+    let full = StationaryLoad { theta: full_theta, nu_sq: full_q - full_theta * full_theta };
+    full.validate()?;
+
+    let mut theta_sq_dev = 0.0;
+    let mut nu_sq_dev = 0.0;
+    let mut theta_sum = 0.0;
+    let mut nu_sum = 0.0;
+    let mut jacks = Vec::with_capacity(n);
+    for c in &contribs {
+        let theta_i = (tot1 - c.0) / (totd - c.2);
+        let q_i = (tot2 - c.1) / (totd - c.2);
+        let nu_i = q_i - theta_i * theta_i;
+        theta_sum += theta_i;
+        nu_sum += nu_i;
+        jacks.push((theta_i, nu_i));
+    }
+    let theta_bar = theta_sum / n as f64;
+    let nu_bar = nu_sum / n as f64;
+    for (t, v) in jacks {
+        theta_sq_dev += (t - theta_bar) * (t - theta_bar);
+        nu_sq_dev += (v - nu_bar) * (v - nu_bar);
+    }
+    let factor = (n as f64 - 1.0) / n as f64;
+    Ok(EstimateWithError {
+        load: full,
+        theta_se: (factor * theta_sq_dev * n as f64 / (n as f64 - 1.0)).sqrt()
+            * ((n as f64 - 1.0) / n as f64).sqrt(),
+        nu_sq_se: (factor * nu_sq_dev * n as f64 / (n as f64 - 1.0)).sqrt()
+            * ((n as f64 - 1.0) / n as f64).sqrt(),
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::workload::generator::RequestGenerator;
+    use crate::workload::stationary::stationary_geometric;
+
+    fn paper_trace(n: usize, seed: u64) -> Trace {
+        let mut g = RequestGenerator::new(WorkloadSpec::paper_section5(), seed);
+        Trace::new(g.trace(n))
+    }
+
+    #[test]
+    fn estimator_is_exact_on_single_request_type() {
+        // Every request (P=5, D=3): stationary Y uniform on {5, 6, 7}.
+        let trace = Trace::new(vec![RequestLengths::new(5, 3); 10]);
+        let e = estimate_stationary(&trace).unwrap();
+        assert!((e.theta - 6.0).abs() < 1e-12);
+        assert!((e.nu_sq - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_converges_to_corollary_values() {
+        let trace = paper_trace(100_000, 1);
+        let e = estimate_stationary(&trace).unwrap();
+        let exact = stationary_geometric(100.0, 9900.0, 500.0);
+        assert!((e.theta / exact.theta - 1.0).abs() < 0.02, "theta {}", e.theta);
+        assert!((e.nu_sq / exact.nu_sq - 1.0).abs() < 0.05, "nu2 {}", e.nu_sq);
+    }
+
+    #[test]
+    fn length_biasing_is_captured() {
+        // Two request types with equal frequency: (P=0, D=1) and (P=0, D=9).
+        // Arrival-average load would be tiny; stationary (length-biased)
+        // age distribution spends 9/10 of steps in the long request.
+        let mut reqs = Vec::new();
+        for _ in 0..500 {
+            reqs.push(RequestLengths::new(0, 1));
+            reqs.push(RequestLengths::new(0, 9));
+        }
+        let e = estimate_stationary(&Trace::new(reqs)).unwrap();
+        // theta = E[D(D-1)/2]/E[D] = (0 + 36)/2 / 5 = 3.6.
+        assert!((e.theta - 3.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_rejected() {
+        assert!(estimate_stationary(&Trace::default()).is_err());
+    }
+
+    #[test]
+    fn jackknife_error_shrinks_with_n() {
+        let small = estimate_with_error(&paper_trace(500, 3)).unwrap();
+        let large = estimate_with_error(&paper_trace(50_000, 3)).unwrap();
+        assert!(large.theta_se < small.theta_se);
+        assert!(large.theta_se > 0.0);
+        // 10x the sample -> ~sqrt(100) = 10x smaller SE.
+        assert!(large.theta_se < small.theta_se / 5.0);
+    }
+
+    #[test]
+    fn jackknife_estimate_matches_plain() {
+        let t = paper_trace(2000, 4);
+        let a = estimate_stationary(&t).unwrap();
+        let b = estimate_with_error(&t).unwrap();
+        assert!((a.theta - b.load.theta).abs() < 1e-12);
+        assert!((a.nu_sq - b.load.nu_sq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimator_within_error_of_truth() {
+        let e = estimate_with_error(&paper_trace(20_000, 5)).unwrap();
+        let exact = stationary_geometric(100.0, 9900.0, 500.0);
+        // Truth within ~4 standard errors.
+        assert!(
+            (e.load.theta - exact.theta).abs() < 4.0 * e.theta_se,
+            "theta {} ± {} vs {}",
+            e.load.theta,
+            e.theta_se,
+            exact.theta
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Synthetic request generation from a [`WorkloadSpec`].
+//!
+//! Draws i.i.d. `(P, D)` pairs, optionally with positive dependence
+//! between prompt and decode length (the paper's Lemma 4.1 keeps a
+//! `Cov(P, D)/mu_D` correction for exactly this case).
+
+use crate::config::workload::WorkloadSpec;
+use crate::stats::distributions::Distribution;
+use crate::stats::rng::Pcg64;
+use crate::workload::request::RequestLengths;
+
+/// Stateful sampler of request lengths.
+pub struct RequestGenerator {
+    spec: WorkloadSpec,
+    rng: Pcg64,
+    next_id: u64,
+}
+
+impl RequestGenerator {
+    pub fn new(spec: WorkloadSpec, seed: u64) -> Self {
+        Self { spec, rng: Pcg64::new(seed), next_id: 0 }
+    }
+
+    /// Independent child generator (per Attention worker / per slot).
+    pub fn fork(&mut self, tag: u64) -> RequestGenerator {
+        RequestGenerator { spec: self.spec.clone(), rng: self.rng.fork(tag), next_id: 0 }
+    }
+
+    /// Draw the next request's lengths.
+    ///
+    /// With `correlation = c > 0`, the decode lifetime is a mixture:
+    /// with probability `c` it is resampled proportionally to the
+    /// prompt's relative size (long prompts -> stochastically long
+    /// decodes); with probability `1 - c` it is the independent draw.
+    /// The marginal mean of D is preserved; Cov(P, D) > 0 appears.
+    pub fn next_lengths(&mut self) -> RequestLengths {
+        let p = self.spec.prefill.sample(&mut self.rng);
+        let mut d = self.spec.decode.sample(&mut self.rng).max(1);
+        let c = self.spec.correlation;
+        if c > 0.0 && self.rng.next_f64() < c {
+            let mu_p = self.spec.prefill.mean().max(1.0);
+            // Scale an independent draw by the prompt's relative length.
+            let scale = (p as f64 / mu_p).max(0.05);
+            let d2 = self.spec.decode.sample(&mut self.rng) as f64 * scale;
+            d = (d2.round() as u64).max(1);
+        }
+        RequestLengths::new(p, d)
+    }
+
+    /// Draw the next request with a fresh id.
+    pub fn next_request(&mut self) -> (u64, RequestLengths) {
+        let id = self.next_id;
+        self.next_id += 1;
+        (id, self.next_lengths())
+    }
+
+    /// Generate a whole trace of `n` requests.
+    pub fn trace(&mut self, n: usize) -> Vec<RequestLengths> {
+        (0..n).map(|_| self.next_lengths()).collect()
+    }
+
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::distributions::LengthDist;
+    use crate::stats::moments::RunningMoments;
+
+    #[test]
+    fn independent_draws_match_marginals() {
+        let spec = WorkloadSpec::paper_section5();
+        let mut g = RequestGenerator::new(spec, 1);
+        let mut mp = RunningMoments::new();
+        let mut md = RunningMoments::new();
+        for _ in 0..200_000 {
+            let r = g.next_lengths();
+            mp.push(r.prefill as f64);
+            md.push(r.decode as f64);
+        }
+        assert!((mp.mean() / 100.0 - 1.0).abs() < 0.02, "mu_P {}", mp.mean());
+        assert!((md.mean() / 500.0 - 1.0).abs() < 0.02, "mu_D {}", md.mean());
+        assert!((mp.variance() / 9900.0 - 1.0).abs() < 0.05);
+        assert!((md.variance() / 249500.0 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn decode_lifetime_is_at_least_one() {
+        let spec = WorkloadSpec::independent(
+            LengthDist::Deterministic(0),
+            LengthDist::Geometric { p: 0.9, shift: 1 },
+        );
+        let mut g = RequestGenerator::new(spec, 2);
+        for _ in 0..1000 {
+            assert!(g.next_lengths().decode >= 1);
+        }
+    }
+
+    #[test]
+    fn correlation_induces_positive_covariance() {
+        let mut spec = WorkloadSpec::paper_section5();
+        spec.correlation = 0.8;
+        let mut g = RequestGenerator::new(spec, 3);
+        let n = 100_000;
+        let (mut sp, mut sd, mut spd) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let r = g.next_lengths();
+            sp += r.prefill as f64;
+            sd += r.decode as f64;
+            spd += r.prefill as f64 * r.decode as f64;
+        }
+        let cov = spd / n as f64 - (sp / n as f64) * (sd / n as f64);
+        assert!(cov > 1000.0, "expected positive covariance, got {cov}");
+    }
+
+    #[test]
+    fn zero_correlation_has_near_zero_covariance() {
+        let spec = WorkloadSpec::paper_section5();
+        let mut g = RequestGenerator::new(spec, 4);
+        let n = 200_000;
+        let (mut sp, mut sd, mut spd) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let r = g.next_lengths();
+            sp += r.prefill as f64;
+            sd += r.decode as f64;
+            spd += r.prefill as f64 * r.decode as f64;
+        }
+        let cov = spd / n as f64 - (sp / n as f64) * (sd / n as f64);
+        // Cov scale: sigma_P * sigma_D ~ 100*500 = 5e4; demand |cov| well below.
+        assert!(cov.abs() < 1500.0, "cov {cov}");
+    }
+
+    #[test]
+    fn ids_increment_and_forks_diverge() {
+        let spec = WorkloadSpec::paper_section5();
+        let mut g = RequestGenerator::new(spec, 5);
+        let (id0, _) = g.next_request();
+        let (id1, _) = g.next_request();
+        assert_eq!((id0, id1), (0, 1));
+        let mut f1 = g.fork(0);
+        let mut f2 = g.fork(1);
+        let same = (0..32).filter(|_| f1.next_lengths() == f2.next_lengths()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn trace_generation() {
+        let spec = WorkloadSpec::paper_section5();
+        let mut g = RequestGenerator::new(spec, 6);
+        let t = g.trace(100);
+        assert_eq!(t.len(), 100);
+    }
+}

@@ -1,0 +1,25 @@
+//! Workload layer: request model, synthetic generation, trace I/O, and
+//! the paper's stationary per-slot load characterization.
+//!
+//! * [`request`] — `(P, D)` lifecycle and token-load accounting.
+//! * [`generator`] — i.i.d. (optionally P–D correlated) samplers.
+//! * [`trace`] — CSV trace I/O + synthetic production-corpus analogues.
+//! * [`stationary`] — Lemma 4.1 / Corollary 4.5 closed forms, Monte
+//!   Carlo cross-checks, heavy-tail regimes (Appendix A.7).
+//! * [`estimator`] — the nonparametric `(theta, nu^2)` estimator of
+//!   Appendix A.6 with jackknife errors.
+
+pub mod estimator;
+pub mod generator;
+pub mod request;
+pub mod stationary;
+pub mod trace;
+
+pub use estimator::{estimate_stationary, estimate_with_error};
+pub use generator::RequestGenerator;
+pub use request::{ActiveRequest, RequestId, RequestLengths};
+pub use stationary::{
+    classify_tail, stationary_for_spec, stationary_geometric, stationary_independent,
+    StationaryLoad, TailRegime,
+};
+pub use trace::{synthetic_production_trace, ProductionCorpus, Trace};

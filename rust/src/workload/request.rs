@@ -1,0 +1,112 @@
+//! Request lifecycle model.
+//!
+//! A request occupies one decode slot for `D` synchronized steps; at age
+//! `a ∈ {0, ..., D-1}` it contributes token load `P + a` to its Attention
+//! worker (prefill KV plus the tokens decoded so far). This is exactly the
+//! renewal-cycle structure of Lemma 4.1.
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// A request's length parameters, as drawn at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestLengths {
+    /// Prefill (prompt) length P in tokens.
+    pub prefill: u64,
+    /// Decode lifetime D in steps (>= 1).
+    pub decode: u64,
+}
+
+impl RequestLengths {
+    pub fn new(prefill: u64, decode: u64) -> Self {
+        debug_assert!(decode >= 1, "decode lifetime must be >= 1");
+        Self { prefill, decode }
+    }
+
+    /// Token load contributed at age `a` (0-based): `P + a`.
+    pub fn load_at_age(&self, age: u64) -> u64 {
+        debug_assert!(age < self.decode);
+        self.prefill + age
+    }
+
+    /// Total token-load contribution over the lifetime:
+    /// `sum_{a=0}^{D-1} (P + a) = D*P + D(D-1)/2` (Lemma 4.1 numerator).
+    pub fn lifetime_load(&self) -> u64 {
+        self.decode * self.prefill + self.decode * (self.decode - 1) / 2
+    }
+}
+
+/// A live request occupying a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActiveRequest {
+    pub id: RequestId,
+    pub lengths: RequestLengths,
+    /// Current age in decode steps (tokens generated so far).
+    pub age: u64,
+}
+
+impl ActiveRequest {
+    pub fn admit(id: RequestId, lengths: RequestLengths) -> Self {
+        Self { id, lengths, age: 0 }
+    }
+
+    /// Current token load `P + age`.
+    pub fn token_load(&self) -> u64 {
+        self.lengths.load_at_age(self.age)
+    }
+
+    /// Advance one decode step. Returns `true` if the request completed
+    /// (it has generated its D-th token and the slot must be refilled).
+    pub fn step(&mut self) -> bool {
+        self.age += 1;
+        self.age >= self.lengths.decode
+    }
+
+    /// Steps remaining before completion.
+    pub fn remaining(&self) -> u64 {
+        self.lengths.decode - self.age
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_at_age_and_lifetime_sum() {
+        let r = RequestLengths::new(10, 4);
+        assert_eq!(r.load_at_age(0), 10);
+        assert_eq!(r.load_at_age(3), 13);
+        // 10+11+12+13 = 46 = 4*10 + 4*3/2.
+        assert_eq!(r.lifetime_load(), 46);
+    }
+
+    #[test]
+    fn lifetime_load_closed_form_matches_sum() {
+        for p in [0u64, 1, 7, 100] {
+            for d in [1u64, 2, 5, 50] {
+                let r = RequestLengths::new(p, d);
+                let direct: u64 = (0..d).map(|a| p + a).sum();
+                assert_eq!(r.lifetime_load(), direct, "p={p} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_request_lifecycle() {
+        let mut r = ActiveRequest::admit(1, RequestLengths::new(5, 3));
+        assert_eq!(r.token_load(), 5);
+        assert_eq!(r.remaining(), 3);
+        assert!(!r.step());
+        assert_eq!(r.token_load(), 6);
+        assert!(!r.step());
+        assert!(r.step()); // third step completes
+    }
+
+    #[test]
+    fn single_step_request_completes_immediately() {
+        let mut r = ActiveRequest::admit(2, RequestLengths::new(0, 1));
+        assert_eq!(r.token_load(), 0);
+        assert!(r.step());
+    }
+}

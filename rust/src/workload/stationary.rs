@@ -1,0 +1,295 @@
+//! Stationary per-slot token load: Lemma 4.1, Corollary 4.5, and the
+//! heavy-tail regime classification of Appendix A.7.
+//!
+//! Under continuous batching, one decode slot observed at a uniformly
+//! random step holds a request of random "age". The renewal–reward
+//! theorem (cycle = one request, cycle length = D) gives the stationary
+//! load `Y = P + A` the moments
+//!
+//! ```text
+//! theta  = E[D P + D(D-1)/2] / E[D]                             (Eq. 3)
+//! E[Y^2] = E[D P^2 + P D(D-1) + D(D-1)(2D-1)/6] / E[D]          (Eq. 3)
+//! nu^2   = E[Y^2] - theta^2
+//! ```
+//!
+//! and, for independent P and D (Eq. 4):
+//!
+//! ```text
+//! theta = mu_P + (mu_D - 1)/2 + sigma_D^2 / (2 mu_D)
+//! ```
+//!
+//! The *age-adjusted, length-biased* statistic `theta` — not the naive
+//! `mu_P + mu_D` — is what drives provisioning.
+
+use crate::config::workload::WorkloadSpec;
+use crate::error::{AfdError, Result};
+use crate::stats::distributions::{Distribution, LengthDist};
+
+/// The stationary per-slot load moments `(theta, nu^2)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StationaryLoad {
+    /// Mean stationary token load per slot (paper's theta).
+    pub theta: f64,
+    /// Variance of the stationary token load (paper's nu^2).
+    pub nu_sq: f64,
+}
+
+impl StationaryLoad {
+    pub fn nu(&self) -> f64 {
+        self.nu_sq.sqrt()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.theta.is_finite() || self.theta <= 0.0 {
+            return Err(AfdError::Analysis(format!(
+                "theta must be finite and positive, got {}",
+                self.theta
+            )));
+        }
+        if !self.nu_sq.is_finite() || self.nu_sq < 0.0 {
+            return Err(AfdError::Analysis(format!(
+                "nu^2 must be finite and non-negative, got {}",
+                self.nu_sq
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Closed form for **independent** P, D via Eq. (4) plus the second-moment
+/// analogue. Requires the marginal moments only.
+///
+/// Derivation of the second moment under independence:
+/// `E[D P^2] = E[P^2] E[D]`, `E[P D(D-1)] = mu_P E[D(D-1)]`, and
+/// `E[D(D-1)(2D-1)/6]` from the first three moments of D.
+pub fn stationary_independent(
+    mu_p: f64,
+    var_p: f64,
+    mu_d: f64,
+    var_d: f64,
+    ed3: Option<f64>,
+) -> StationaryLoad {
+    assert!(mu_d >= 1.0, "mu_D must be >= 1");
+    let theta = mu_p + (mu_d - 1.0) / 2.0 + var_d / (2.0 * mu_d);
+    let ep2 = var_p + mu_p * mu_p;
+    let ed2 = var_d + mu_d * mu_d;
+    // E[D^3]: exact if provided; otherwise a geometric-family surrogate
+    // E[D^3] for Geom(p) on {1,..}: (6 - 6p + p^2)/p^3 with p = 1/mu_D.
+    let ed3 = ed3.unwrap_or_else(|| {
+        let p = 1.0 / mu_d;
+        (6.0 - 6.0 * p + p * p) / (p * p * p)
+    });
+    // E[D(D-1)] = E[D^2] - E[D]; E[D(D-1)(2D-1)] = 2E[D^3] - 3E[D^2] + E[D].
+    let edd1 = ed2 - mu_d;
+    let edd1d2 = 2.0 * ed3 - 3.0 * ed2 + mu_d;
+    let ey2 = (ep2 * mu_d + mu_p * edd1 + edd1d2 / 6.0) / mu_d;
+    StationaryLoad { theta, nu_sq: ey2 - theta * theta }
+}
+
+/// Corollary 4.5: independent P and geometric D on {1, 2, ...}.
+///
+/// With `mu_out := (1-p)/p = mu_D - 1` generated tokens:
+/// `theta = mu_P + mu_out`, `nu^2 = sigma_P^2 + mu_out (mu_out + 1)`.
+pub fn stationary_geometric(mu_p: f64, var_p: f64, mu_d: f64) -> StationaryLoad {
+    assert!(mu_d >= 1.0);
+    let mu_out = mu_d - 1.0;
+    StationaryLoad { theta: mu_p + mu_out, nu_sq: var_p + mu_out * (mu_out + 1.0) }
+}
+
+/// Monte Carlo estimate of the stationary moments by direct simulation of
+/// one slot for `steps` decode steps (used to validate the closed forms).
+pub fn stationary_monte_carlo(
+    spec: &WorkloadSpec,
+    steps: usize,
+    seed: u64,
+) -> StationaryLoad {
+    use crate::workload::generator::RequestGenerator;
+    let mut g = RequestGenerator::new(spec.clone(), seed);
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut n = 0usize;
+    let mut current = g.next_lengths();
+    let mut age = 0u64;
+    while n < steps {
+        let y = (current.prefill + age) as f64;
+        s1 += y;
+        s2 += y * y;
+        n += 1;
+        age += 1;
+        if age >= current.decode {
+            current = g.next_lengths();
+            age = 0;
+        }
+    }
+    let mean = s1 / n as f64;
+    StationaryLoad { theta: mean, nu_sq: s2 / n as f64 - mean * mean }
+}
+
+/// Compute `(theta, nu^2)` for a [`WorkloadSpec`] analytically when the
+/// structure allows it, falling back to Monte Carlo otherwise
+/// (correlated P–D or empirical marginals with unknown third moments).
+pub fn stationary_for_spec(spec: &WorkloadSpec, seed: u64) -> StationaryLoad {
+    if spec.correlation == 0.0 {
+        if let LengthDist::Geometric { shift: 1, .. } = spec.decode {
+            return stationary_geometric(
+                spec.prefill.mean(),
+                spec.prefill.variance(),
+                spec.decode.mean(),
+            );
+        }
+        if let LengthDist::Deterministic(d) = spec.decode {
+            // sigma_D = 0; exact third moment d^3.
+            return stationary_independent(
+                spec.prefill.mean(),
+                spec.prefill.variance(),
+                d as f64,
+                0.0,
+                Some((d as f64).powi(3)),
+            );
+        }
+    }
+    stationary_monte_carlo(spec, 2_000_000, seed)
+}
+
+/// Heavy-tail regime of Appendix A.7, keyed on the Pareto tail index
+/// `alpha` of the decode-lifetime distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TailRegime {
+    /// `alpha > 3`: `nu^2 < inf`, Gaussian barrier theory applies.
+    GaussianOk,
+    /// `2 < alpha <= 3`: `theta < inf` but `nu^2 = inf`; sqrt(B) CLT
+    /// correction is replaced by `B^{1/gamma}` stable-law fluctuations
+    /// with `gamma = alpha - 1`.
+    StableLaw { gamma: f64 },
+    /// `alpha <= 2`: `theta` may diverge; mean-field load undefined.
+    Undefined,
+}
+
+/// Classify the barrier-fluctuation regime for a decode distribution.
+pub fn classify_tail(decode: &LengthDist) -> TailRegime {
+    match decode {
+        LengthDist::Pareto { alpha, .. } => {
+            if *alpha > 3.0 {
+                TailRegime::GaussianOk
+            } else if *alpha > 2.0 {
+                TailRegime::StableLaw { gamma: alpha - 1.0 }
+            } else {
+                TailRegime::Undefined
+            }
+        }
+        // All light-tailed families have every moment.
+        _ => TailRegime::GaussianOk,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+
+    #[test]
+    fn paper_section5_theta_and_nu() {
+        // Corollary 4.5: theta = 100 + 499 = 599;
+        // nu^2 = 9900 + 499*500 = 259400.
+        let s = stationary_geometric(100.0, 9900.0, 500.0);
+        assert!((s.theta - 599.0).abs() < 1e-9);
+        assert!((s.nu_sq - 259_400.0).abs() < 1e-6);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn general_form_agrees_with_geometric_specialization() {
+        // Geom(p) on {1,..}: mean 1/p, var (1-p)/p^2, E[D^3] = (6-6p+p^2)/p^3.
+        let mu_d = 500.0;
+        let var_d = 249_500.0;
+        let a = stationary_independent(100.0, 9900.0, mu_d, var_d, None);
+        let b = stationary_geometric(100.0, 9900.0, mu_d);
+        assert!((a.theta - b.theta).abs() < 1e-6, "theta {} vs {}", a.theta, b.theta);
+        assert!((a.nu_sq / b.nu_sq - 1.0).abs() < 1e-9, "nu2 {} vs {}", a.nu_sq, b.nu_sq);
+    }
+
+    #[test]
+    fn theta_is_not_the_naive_guess() {
+        // The paper stresses theta != mu_P + mu_D in general. For the
+        // geometric workload theta = mu_P + mu_D - 1 (off by one), but for
+        // deterministic D: theta = mu_P + (D-1)/2, far from mu_P + D.
+        let s = stationary_independent(100.0, 0.0, 501.0, 0.0, Some(501.0f64.powi(3)));
+        assert!((s.theta - (100.0 + 250.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_decode_exact_moments() {
+        // D = d fixed, P = p fixed: Y uniform on {p, ..., p+d-1}.
+        let d = 10.0;
+        let s = stationary_independent(5.0, 0.0, d, 0.0, Some(d * d * d));
+        assert!((s.theta - (5.0 + 4.5)).abs() < 1e-9);
+        // Var of uniform{0..9} = (100-1)/12 = 8.25.
+        assert!((s.nu_sq - 8.25).abs() < 1e-9, "nu_sq {}", s.nu_sq);
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form() {
+        let spec = WorkloadSpec::paper_section5();
+        // One-slot time averages decorrelate every ~mu_D steps, so the
+        // second moment mixes slowly: use a long horizon + loose bound.
+        let mc = stationary_monte_carlo(&spec, 6_000_000, 42);
+        let exact = stationary_geometric(100.0, 9900.0, 500.0);
+        assert!((mc.theta / exact.theta - 1.0).abs() < 0.02, "theta {} vs {}", mc.theta, exact.theta);
+        assert!((mc.nu_sq / exact.nu_sq - 1.0).abs() < 0.10, "nu2 {} vs {}", mc.nu_sq, exact.nu_sq);
+    }
+
+    #[test]
+    fn spec_dispatch_uses_closed_form_for_geometric() {
+        let spec = WorkloadSpec::paper_section5();
+        let s = stationary_for_spec(&spec, 1);
+        assert!((s.theta - 599.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_dispatch_deterministic() {
+        let spec = WorkloadSpec::independent(
+            LengthDist::Deterministic(5),
+            LengthDist::Deterministic(10),
+        );
+        let s = stationary_for_spec(&spec, 1);
+        assert!((s.theta - 9.5).abs() < 1e-9);
+        assert!((s.nu_sq - 8.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlated_spec_falls_back_to_monte_carlo_with_larger_theta() {
+        let mut spec = WorkloadSpec::paper_section5();
+        spec.correlation = 0.8;
+        let s = stationary_for_spec(&spec, 7);
+        // Positive Cov(P, D) length-biases long-prompt requests: theta
+        // must exceed the independent value (Lemma 4.1's Cov term).
+        assert!(s.theta > 599.0, "theta {}", s.theta);
+    }
+
+    #[test]
+    fn tail_classification() {
+        assert_eq!(
+            classify_tail(&LengthDist::Pareto { alpha: 3.5, xmin: 1 }),
+            TailRegime::GaussianOk
+        );
+        assert_eq!(
+            classify_tail(&LengthDist::Pareto { alpha: 2.5, xmin: 1 }),
+            TailRegime::StableLaw { gamma: 1.5 }
+        );
+        assert_eq!(
+            classify_tail(&LengthDist::Pareto { alpha: 1.5, xmin: 1 }),
+            TailRegime::Undefined
+        );
+        assert_eq!(
+            classify_tail(&LengthDist::geometric_with_mean(10.0)),
+            TailRegime::GaussianOk
+        );
+    }
+
+    #[test]
+    fn validation_rejects_degenerate() {
+        assert!(StationaryLoad { theta: 0.0, nu_sq: 1.0 }.validate().is_err());
+        assert!(StationaryLoad { theta: 1.0, nu_sq: -1.0 }.validate().is_err());
+        assert!(StationaryLoad { theta: 1.0, nu_sq: f64::INFINITY }.validate().is_err());
+    }
+}

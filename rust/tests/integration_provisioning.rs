@@ -1,0 +1,159 @@
+//! Integration: the paper's full practical recipe, end to end.
+//!
+//! trace -> nonparametric estimator (A.6) -> mean-field rule (Thm 4.4)
+//! -> barrier-aware refinement (Eq. 12) -> discrete-event simulator
+//! validation (§5), across several workloads and hardware variants.
+
+use afd::analysis::cycle_time::OperatingPoint;
+use afd::analysis::provisioning::{barrier_aware_optimum, recommend_from_trace};
+use afd::config::experiment::ExperimentConfig;
+use afd::config::hardware::HardwareParams;
+use afd::config::workload::WorkloadSpec;
+use afd::sim::engine::{simulate, SimOptions};
+use afd::stats::distributions::LengthDist;
+use afd::workload::generator::RequestGenerator;
+use afd::workload::trace::Trace;
+
+fn trace_for(spec: &WorkloadSpec, n: usize, seed: u64) -> Trace {
+    let mut gen = RequestGenerator::new(spec.clone(), seed);
+    Trace::new(gen.trace(n))
+}
+
+/// The headline validation, scaled down: predicted r* within the paper's
+/// 10% criterion of the simulation-optimal over a dense integer grid.
+#[test]
+fn predicted_ratio_matches_simulation_optimal_within_10pct() {
+    let mut cfg = ExperimentConfig::default();
+    // Scaled-down workload (same shape) to keep the dense grid fast.
+    cfg.topology.batch_per_worker = 64;
+    cfg.requests_per_instance = 3_000;
+    cfg.workload = WorkloadSpec::independent(
+        LengthDist::geometric_with_mean(50.0),
+        LengthDist::geometric_with_mean(150.0),
+    );
+    let trace = trace_for(&cfg.workload, 30_000, 9);
+    let rec = recommend_from_trace(&cfg.hardware, &trace, cfg.topology.batch_per_worker, &[])
+        .unwrap();
+    let r_pred = rec.barrier_aware.r_star;
+
+    // Dense integer grid around the prediction.
+    let lo = (r_pred as f64 * 0.5).floor().max(1.0) as usize;
+    let hi = (r_pred as f64 * 1.6).ceil() as usize;
+    let mut best = (0usize, f64::MIN);
+    for r in lo..=hi {
+        let m = simulate(&cfg, r, SimOptions::default()).metrics;
+        if m.throughput_per_instance > best.1 {
+            best = (r, m.throughput_per_instance);
+        }
+    }
+    let rel = (r_pred as f64 - best.0 as f64).abs() / best.0 as f64;
+    assert!(
+        rel <= 0.10 + 1.0 / best.0 as f64, // 10% + one grid step slack
+        "predicted r* = {r_pred}, simulation-optimal = {} (rel err {:.2})",
+        best.0,
+        rel
+    );
+}
+
+#[test]
+fn recipe_is_stable_across_trace_resamples() {
+    let hw = HardwareParams::paper_table3();
+    let spec = WorkloadSpec::paper_section5();
+    let mut rs = Vec::new();
+    for seed in 0..5 {
+        let trace = trace_for(&spec, 20_000, seed);
+        let rec = recommend_from_trace(&hw, &trace, 256, &[]).unwrap();
+        rs.push(rec.barrier_aware.r_star);
+    }
+    let min = *rs.iter().min().unwrap();
+    let max = *rs.iter().max().unwrap();
+    assert!(max - min <= 1, "recommendation unstable across resamples: {rs:?}");
+}
+
+#[test]
+fn hardware_variants_shift_the_optimum_sensibly() {
+    let load = afd::workload::stationary::stationary_geometric(100.0, 9900.0, 500.0);
+    let base = HardwareParams::paper_table3();
+    let feasible: Vec<usize> = (1..=64).collect();
+
+    // Faster FFN (larger-capacity server) -> more attention workers per F.
+    let mut fast_ffn = base;
+    fast_ffn.alpha_f = base.alpha_f / 2.0;
+    let r_base = barrier_aware_optimum(&OperatingPoint::new(base, load, 256), &feasible)
+        .unwrap()
+        .r_star;
+    let r_fast =
+        barrier_aware_optimum(&OperatingPoint::new(fast_ffn, load, 256), &feasible)
+            .unwrap()
+            .r_star;
+    assert!(r_fast > r_base, "faster FFN should raise r*: {r_base} -> {r_fast}");
+
+    // Faster attention (more HBM bandwidth) -> fewer workers needed.
+    let mut fast_attn = base;
+    fast_attn.alpha_a = base.alpha_a / 2.0;
+    let r_fa =
+        barrier_aware_optimum(&OperatingPoint::new(fast_attn, load, 256), &feasible)
+            .unwrap()
+            .r_star;
+    assert!(r_fa < r_base, "faster attention should lower r*: {r_base} -> {r_fa}");
+}
+
+#[test]
+fn simulator_tracks_gaussian_theory_across_workloads() {
+    // For several workloads, the simulated throughput at each grid point
+    // stays within 12% of the Gaussian cycle-time theory.
+    let specs = [
+        WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(30.0),
+            LengthDist::geometric_with_mean(80.0),
+        ),
+        WorkloadSpec::independent(
+            LengthDist::Deterministic(40),
+            LengthDist::geometric_with_mean(120.0),
+        ),
+        WorkloadSpec::independent(
+            LengthDist::UniformInt { lo: 10, hi: 90 },
+            LengthDist::geometric_with_mean(100.0),
+        ),
+    ];
+    for (i, spec) in specs.into_iter().enumerate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 48;
+        cfg.requests_per_instance = 4_000;
+        cfg.workload = spec;
+        let load = afd::workload::stationary::stationary_for_spec(&cfg.workload, 3);
+        let op = OperatingPoint::new(cfg.hardware, load, 48);
+        for r in [2usize, 6, 12] {
+            let sim = simulate(&cfg, r, SimOptions::default()).metrics;
+            // Delivered-rate metric: unbiased for sim-vs-theory checks
+            // (the paper's completions metric carries a small horizon
+            // bias; see SimMetrics docs). Gaussian theory slightly
+            // overestimates the barrier under multi-lane pipelining
+            // (lanes average stragglers), so compare against the
+            // [gaussian, mean-field] envelope with 8% slack.
+            let lo = op.throughput_gaussian(r) * 0.92;
+            let hi = op.throughput_mean_field(r as f64) * 1.08;
+            let d = sim.delivered_throughput_per_instance;
+            assert!(
+                d >= lo && d <= hi,
+                "workload {i}, r={r}: delivered {d} outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn correlated_workload_raises_theta_and_r_star() {
+    let hw = HardwareParams::paper_table3();
+    let mut spec = WorkloadSpec::paper_section5();
+    let indep = recommend_from_trace(&hw, &trace_for(&spec, 30_000, 4), 256, &[]).unwrap();
+    spec.correlation = 0.8;
+    let corr = recommend_from_trace(&hw, &trace_for(&spec, 30_000, 4), 256, &[]).unwrap();
+    assert!(
+        corr.load.theta > indep.load.theta,
+        "Cov(P,D) > 0 must raise theta: {} vs {}",
+        corr.load.theta,
+        indep.load.theta
+    );
+    assert!(corr.mean_field.r_star >= indep.mean_field.r_star);
+}

@@ -1,0 +1,235 @@
+//! Property-based invariants (testkit) over the coordinator and the
+//! analytical layer: routing, batching, KV accounting, estimator
+//! consistency, cycle-time monotonicity.
+
+use afd::analysis::cycle_time::OperatingPoint;
+use afd::config::hardware::HardwareParams;
+use afd::coordinator::batcher::Batcher;
+use afd::coordinator::kv::KvSlotManager;
+use afd::coordinator::request_state::ServingRequest;
+use afd::coordinator::router::{Policy, Router, WorkerLoad};
+use afd::stats::rng::Pcg64;
+use afd::testkit::{forall, Gen};
+use afd::workload::request::RequestLengths;
+use afd::workload::stationary::StationaryLoad;
+use afd::workload::trace::Trace;
+
+#[test]
+fn prop_router_never_out_of_range() {
+    forall(
+        "router in range",
+        300,
+        Gen::triple(
+            Gen::usize_range(1, 12),
+            Gen::u64_range(0, 2),
+            Gen::u64_range(0, u64::MAX / 2),
+        ),
+        |&(workers, policy_pick, seed)| {
+            let policy = match policy_pick {
+                0 => Policy::RoundRobin,
+                1 => Policy::JoinShortestQueue,
+                _ => Policy::LeastTokenLoad,
+            };
+            let mut rng = Pcg64::new(seed);
+            let mut router = Router::new(policy);
+            for _ in 0..50 {
+                let loads: Vec<WorkerLoad> = (0..workers)
+                    .map(|_| WorkerLoad {
+                        queued: rng.next_below(5) as usize,
+                        token_load: rng.next_below(10_000),
+                        free_slots: rng.next_below(4) as usize,
+                    })
+                    .collect();
+                if router.route(&loads) >= workers {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_kv_token_load_equals_sum_of_live_seq_plus_one() {
+    forall(
+        "kv accounting",
+        200,
+        Gen::pair(Gen::usize_range(1, 16), Gen::u64_range(1, u64::MAX / 2)),
+        |&(slots, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let capacity = 64;
+            let mut kv = KvSlotManager::new(slots, capacity);
+            let mut mirror: Vec<Option<u64>> = vec![None; slots]; // seq_len mirror
+            for step in 0..300u64 {
+                match rng.next_below(3) {
+                    0 => {
+                        // admit if room
+                        let prefill = rng.next_below(capacity / 2);
+                        let budget = 1 + rng.next_below(capacity / 2 - 1);
+                        if kv.free_slots() > 0 && prefill + budget <= capacity {
+                            let slot = kv.admit(step, prefill, budget).unwrap();
+                            if mirror[slot].is_some() {
+                                return false; // admitted into a live slot
+                            }
+                            mirror[slot] = Some(prefill);
+                        }
+                    }
+                    1 => {
+                        // advance a random live slot
+                        let live: Vec<usize> =
+                            (0..slots).filter(|&s| mirror[s].is_some()).collect();
+                        if !live.is_empty() {
+                            let s = *rng.choose(&live);
+                            let m = mirror[s].unwrap();
+                            if m + 1 <= capacity {
+                                if kv.advance(s).is_err() {
+                                    return false;
+                                }
+                                mirror[s] = Some(m + 1);
+                            }
+                        }
+                    }
+                    _ => {
+                        // release a random live slot
+                        let live: Vec<usize> =
+                            (0..slots).filter(|&s| mirror[s].is_some()).collect();
+                        if !live.is_empty() {
+                            let s = *rng.choose(&live);
+                            kv.release(s).unwrap();
+                            mirror[s] = None;
+                        }
+                    }
+                }
+                let expect: u64 = mirror.iter().flatten().map(|&l| l + 1).sum();
+                if kv.token_load() != expect {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // queued + live + completed == submitted, at every step.
+    forall(
+        "batcher conservation",
+        80,
+        Gen::triple(
+            Gen::usize_range(1, 4),
+            Gen::usize_range(1, 4),
+            Gen::u64_range(1, u64::MAX / 2),
+        ),
+        |&(workers, slots, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let mut b = Batcher::new(workers, slots, 256, Policy::LeastTokenLoad);
+            let total = 40u64;
+            for id in 0..total {
+                b.submit(ServingRequest {
+                    id,
+                    seed_token: 0,
+                    prefill: rng.next_below(32),
+                    decode_budget: 1 + rng.next_below(8),
+                    arrival: 0.0,
+                })
+                .unwrap();
+            }
+            for step in 0..400u64 {
+                b.fill_slots(step as f64).unwrap();
+                for w in 0..workers {
+                    b.step_worker(w, step as f64 + 0.5).unwrap();
+                }
+                let sum = b.queued() + b.live() + b.completed().len();
+                if sum != total as usize {
+                    return false;
+                }
+                if b.completed().len() == total as usize {
+                    return true;
+                }
+            }
+            false // did not drain — livelock
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_matches_exact_on_two_point_traces() {
+    // For a trace of two request types, theta_hat must equal the exact
+    // renewal-reward ratio (rational arithmetic done in f64).
+    forall(
+        "estimator exactness",
+        200,
+        Gen::triple(
+            Gen::pair(Gen::u64_range(0, 500), Gen::u64_range(1, 200)),
+            Gen::pair(Gen::u64_range(0, 500), Gen::u64_range(1, 200)),
+            Gen::usize_range(1, 50),
+        ),
+        |&((p1, d1), (p2, d2), reps)| {
+            let mut reqs = Vec::new();
+            for _ in 0..reps {
+                reqs.push(RequestLengths::new(p1, d1));
+                reqs.push(RequestLengths::new(p2, d2));
+            }
+            let est = afd::workload::estimator::estimate_stationary(&Trace::new(reqs)).unwrap();
+            let num = (d1 * p1 + d1 * (d1 - 1) / 2 + d2 * p2 + d2 * (d2 - 1) / 2) as f64;
+            let den = (d1 + d2) as f64;
+            let exact = num / den;
+            (est.theta - exact).abs() < 1e-9 * exact.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_cycle_time_monotone_in_r_and_load() {
+    forall(
+        "tau monotone",
+        200,
+        Gen::triple(
+            Gen::f64_range(10.0, 2000.0),
+            Gen::f64_range(0.0, 1e5),
+            Gen::usize_range(16, 512),
+        ),
+        |&(theta, nu_sq, batch)| {
+            let hw = HardwareParams::paper_table3();
+            let op = OperatingPoint::new(hw, StationaryLoad { theta, nu_sq }, batch);
+            // tau_mf nondecreasing in r; tau_G >= tau_mf; throughput positive.
+            let mut prev = 0.0;
+            for r in 1..=32usize {
+                let mf = op.tau_mean_field(r as f64);
+                if mf + 1e-12 < prev {
+                    return false;
+                }
+                prev = mf;
+                if op.tau_gaussian(r) + 1e-9 < mf {
+                    return false;
+                }
+                if op.throughput_gaussian(r) <= 0.0 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_barrier_overhead_monotone_in_r() {
+    forall(
+        "kappa monotone overhead",
+        100,
+        Gen::pair(Gen::f64_range(50.0, 1000.0), Gen::f64_range(1.0, 1e5)),
+        |&(theta, nu_sq)| {
+            let load = StationaryLoad { theta, nu_sq };
+            let mut prev = -1.0;
+            for r in 1..=24usize {
+                let o = afd::analysis::barrier::relative_overhead(&load, 128, r);
+                if o < prev - 1e-12 {
+                    return false;
+                }
+                prev = o;
+            }
+            true
+        },
+    );
+}

@@ -1,72 +1,68 @@
-//! Ablation sweep: how the optimal A/F ratio moves with batch size and
-//! workload shape (paper Fig. 4a/4b, reduced scale for interactive use).
+//! Ablation sweep on the parallel grid runner: how the optimal A/F
+//! ratio moves with batch size and workload shape (paper Fig. 4a/4b,
+//! reduced scale for interactive use).
+//!
+//! One `run_grid` call covers both ablations: the full
+//! (scenario × r × B) cross-product executes in parallel on the crate
+//! thread pool, and the per-(scenario, B) group summaries *are* the
+//! Fig. 4 series — theory `r*_G` against the simulation optimum.
 //!
 //! Run: `cargo run --release --example ablation_sweep`
 //! Full-scale figures: `cargo bench --bench fig4a_batch_ablation` etc.
+//! The same sweep from the CLI: `afd sweep --batches 128,256,512`.
 
-use afd::analysis::cycle_time::OperatingPoint;
-use afd::analysis::meanfield::mean_field_optimum;
-use afd::bench_support::figures::fig3;
 use afd::config::experiment::ExperimentConfig;
-use afd::config::workload::WorkloadSpec;
-use afd::stats::distributions::LengthDist;
+use afd::sim::engine::SimOptions;
+use afd::sweep::emit;
+use afd::sweep::grid::{run_grid, SweepGrid};
+use afd::sweep::scenarios;
 use afd::util::tablefmt::{sig, Table};
-use afd::workload::stationary::stationary_for_spec;
 
 fn main() -> afd::Result<()> {
     let mut base = ExperimentConfig::default();
     base.requests_per_instance = 2_000; // interactive scale
-    base.ratio_sweep = vec![2, 4, 6, 8, 10, 12, 16];
 
-    // --- Fig. 4a analogue: batch-size ablation ---
-    let mut t = Table::new(&["B", "r*_mf (theory)", "sim-opt r", "peak Thr/inst"])
+    // --- Fig. 4a analogue: batch-size ablation on the paper workload ---
+    let grid_4a = SweepGrid {
+        scenarios: scenarios::resolve("paper-geometric")?,
+        ratios: vec![2, 4, 6, 8, 10, 12, 16],
+        batches: vec![128, 256, 512],
+    };
+    let res_4a = run_grid(&base, &grid_4a, SimOptions::default(), 0)?;
+    let mut t = Table::new(&["B", "r*_G (theory)", "sim-opt r", "peak Thr/inst"])
         .with_title("Batch-size ablation (Fig. 4a, reduced scale)");
-    for b in [128usize, 256, 512] {
-        let cfg = base.with_batch(b);
-        let load = stationary_for_spec(&cfg.workload, cfg.seed);
-        let op = OperatingPoint::new(cfg.hardware, load, b);
-        let r_mf = mean_field_optimum(&op).r_star;
-        let data = fig3(&cfg);
-        let peak = data
-            .rows
-            .iter()
-            .map(|r| r.sim_delivered)
-            .fold(f64::MIN, f64::max);
+    for g in &res_4a.groups {
         t.row(&[
-            b.to_string(),
-            sig(r_mf, 4),
-            data.sim_optimal_r_delivered().to_string(),
-            sig(peak, 5),
+            g.batch.to_string(),
+            g.r_star_g.to_string(),
+            g.sim_opt_r.to_string(),
+            sig(g.sim_peak, 5),
         ]);
     }
     t.print();
 
-    // --- Fig. 4b analogue: workload ablation ---
-    let mut t = Table::new(&["workload", "theta", "r*_mf", "sim-opt r"])
+    // --- Fig. 4b analogue: workload ablation at the paper batch size ---
+    let grid_4b = SweepGrid {
+        scenarios: scenarios::resolve("short-chat,paper-geometric,long-context")?,
+        ratios: vec![2, 4, 6, 8, 10, 12, 16],
+        batches: vec![256],
+    };
+    let res_4b = run_grid(&base, &grid_4b, SimOptions::default(), 0)?;
+    let mut t = Table::new(&["workload", "theta", "r*_G (theory)", "sim-opt r"])
         .with_title("Workload ablation (Fig. 4b, reduced scale)");
-    let workloads = [
-        ("short ctx (P=50, D=200)", 50.0, 200.0),
-        ("paper    (P=100, D=500)", 100.0, 500.0),
-        ("long ctx (P=400, D=900)", 400.0, 900.0),
-    ];
-    for (label, mu_p, mu_d) in workloads {
-        let spec = WorkloadSpec::independent(
-            LengthDist::geometric_with_mean(mu_p),
-            LengthDist::geometric_with_mean(mu_d),
-        );
-        let cfg = base.with_workload(spec);
-        let load = stationary_for_spec(&cfg.workload, cfg.seed);
-        let op = OperatingPoint::new(cfg.hardware, load, cfg.topology.batch_per_worker);
-        let r_mf = mean_field_optimum(&op).r_star;
-        let data = fig3(&cfg);
+    for g in &res_4b.groups {
         t.row(&[
-            label.to_string(),
-            sig(load.theta, 4),
-            sig(r_mf, 4),
-            data.sim_optimal_r_delivered().to_string(),
+            g.scenario.clone(),
+            sig(g.load.theta, 4),
+            g.r_star_g.to_string(),
+            g.sim_opt_r.to_string(),
         ]);
     }
     t.print();
+
+    // Full per-cell detail for either ablation:
+    println!();
+    emit::summary_table(&res_4b).print();
     println!("\nr* grows with context length and batch size — Fig. 4's two trends.");
     Ok(())
 }

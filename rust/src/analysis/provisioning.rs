@@ -43,6 +43,25 @@ pub fn barrier_aware_optimum(
     Ok(BarrierAwareOptimum { r_star, throughput, profile })
 }
 
+/// Barrier-aware discrete optimum over an explicit ratio grid, from raw
+/// hardware + stationary moments (the sweep subsystem's theory column:
+/// the paper's `r*_G` restricted to the same grid the simulator sweeps,
+/// so theory and simulation argmaxes are directly comparable).
+pub fn r_star_g_on_grid(
+    hw: &HardwareParams,
+    load: StationaryLoad,
+    batch: usize,
+    grid: &[usize],
+) -> Result<BarrierAwareOptimum> {
+    hw.validate()?;
+    load.validate()?;
+    if batch == 0 {
+        return Err(AfdError::Analysis("batch must be >= 1".into()));
+    }
+    let op = OperatingPoint::new(*hw, load, batch);
+    barrier_aware_optimum(&op, grid)
+}
+
 /// Complete provisioning recommendation.
 #[derive(Debug, Clone)]
 pub struct Recommendation {
@@ -158,6 +177,17 @@ mod tests {
             exact.mean_field.r_star
         );
         assert!(rec.sync_overhead > 0.0 && rec.sync_overhead < 0.2);
+    }
+
+    #[test]
+    fn r_star_g_on_grid_matches_operating_point_path() {
+        let hw = HardwareParams::paper_table3();
+        let grid = vec![1, 2, 4, 8, 16, 24, 32];
+        let direct = r_star_g_on_grid(&hw, paper_load(), 256, &grid).unwrap();
+        assert_eq!(direct.r_star, 8);
+        assert_eq!(direct.profile.len(), grid.len());
+        assert!(r_star_g_on_grid(&hw, paper_load(), 0, &grid).is_err());
+        assert!(r_star_g_on_grid(&hw, paper_load(), 256, &[]).is_err());
     }
 
     #[test]

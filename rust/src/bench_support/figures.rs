@@ -4,8 +4,9 @@
 use crate::analysis::cycle_time::OperatingPoint;
 use crate::analysis::meanfield::mean_field_optimum;
 use crate::config::experiment::ExperimentConfig;
-use crate::sim::engine::{sweep_ratios, SimOptions};
+use crate::sim::engine::SimOptions;
 use crate::sim::metrics::SimMetrics;
+use crate::sweep::grid::parallel_sweep_ratios;
 use crate::util::tablefmt::{sig, Table};
 use crate::workload::stationary::{stationary_for_spec, StationaryLoad};
 
@@ -34,10 +35,15 @@ pub struct Fig3Data {
 }
 
 /// Build the Fig. 3 dataset: simulate the sweep and overlay theory.
+///
+/// The sweep runs one ratio per pool worker ([`parallel_sweep_ratios`]);
+/// per-ratio results are bitwise identical to the serial
+/// `sim::engine::sweep_ratios` (every cell reseeds from the config), so
+/// parallelism changes wall-clock only.
 pub fn fig3(cfg: &ExperimentConfig) -> Fig3Data {
     let load = stationary_for_spec(&cfg.workload, cfg.seed);
     let op = OperatingPoint::new(cfg.hardware, load, cfg.topology.batch_per_worker);
-    let metrics = sweep_ratios(cfg, SimOptions::default());
+    let metrics = parallel_sweep_ratios(cfg, SimOptions::default());
     let rows: Vec<Fig3Row> = metrics
         .iter()
         .map(|m| Fig3Row {

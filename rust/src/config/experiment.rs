@@ -113,6 +113,21 @@ impl ExperimentConfig {
         c.workload = workload;
         c
     }
+
+    /// Clone with a different seed (per-cell seed hierarchy of the sweep
+    /// grid runner).
+    pub fn with_seed(&self, seed: u64) -> Self {
+        let mut c = self.clone();
+        c.seed = seed;
+        c
+    }
+
+    /// Clone with a different per-instance request budget (sweep scaling).
+    pub fn with_requests(&self, requests_per_instance: usize) -> Self {
+        let mut c = self.clone();
+        c.requests_per_instance = requests_per_instance;
+        c
+    }
 }
 
 #[cfg(test)]
@@ -167,5 +182,7 @@ requests_per_instance = 500
             crate::stats::distributions::LengthDist::Deterministic(5),
         );
         assert_eq!(c.with_workload(w.clone()).workload, w);
+        assert_eq!(c.with_seed(42).seed, 42);
+        assert_eq!(c.with_requests(123).requests_per_instance, 123);
     }
 }

@@ -1,52 +1,77 @@
 //! Crate-wide error taxonomy.
+//!
+//! Hand-rolled `Display`/`Error` impls — the build is offline and fully
+//! dependency-free, so no `thiserror` derive.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the `afd` crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum AfdError {
     /// Configuration file or value errors (parse + validation).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Workload/trace errors (malformed trace rows, empty traces, ...).
-    #[error("workload error: {0}")]
     Workload(String),
 
     /// Analytical-layer errors (infeasible parameters, divergent moments).
-    #[error("analysis error: {0}")]
     Analysis(String),
 
     /// Simulator invariant violations.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Coordinator state-machine violations.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// PJRT runtime failures (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest problems (missing file, shape mismatch).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Serving-engine failures (channel teardown, worker panic).
-    #[error("server error: {0}")]
     Server(String),
 
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors surfaced from the `xla` crate (PJRT C API).
-    #[error("xla error: {0}")]
+    /// Errors surfaced from the PJRT C API layer (`runtime::xla`).
     Xla(String),
 }
 
-impl From<xla::Error> for AfdError {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for AfdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AfdError::Config(m) => write!(f, "config error: {m}"),
+            AfdError::Workload(m) => write!(f, "workload error: {m}"),
+            AfdError::Analysis(m) => write!(f, "analysis error: {m}"),
+            AfdError::Sim(m) => write!(f, "simulation error: {m}"),
+            AfdError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            AfdError::Runtime(m) => write!(f, "runtime error: {m}"),
+            AfdError::Artifact(m) => write!(f, "artifact error: {m}"),
+            AfdError::Server(m) => write!(f, "server error: {m}"),
+            AfdError::Io(e) => write!(f, "i/o error: {e}"),
+            AfdError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for AfdError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AfdError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AfdError {
+    fn from(e: std::io::Error) -> Self {
+        AfdError::Io(e)
+    }
+}
+
+impl From<crate::runtime::xla::Error> for AfdError {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         AfdError::Xla(e.to_string())
     }
 }
@@ -76,5 +101,11 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
         let e: AfdError = io.into();
         assert!(matches!(e, AfdError::Io(_)));
+    }
+
+    #[test]
+    fn xla_error_converts_with_prefix() {
+        let e: AfdError = crate::runtime::xla::Error::unavailable().into();
+        assert!(e.to_string().contains("xla error"));
     }
 }

@@ -23,6 +23,10 @@
 //!   `r*_mf` / `r*_G` (Eq. 10 / Eq. 12).
 //! * [`sim`] — the trace-calibrated discrete-event AFD simulator of §5.1
 //!   (six-state batch FSM, two batches in flight, continuous batching).
+//! * [`sweep`] — the multi-scenario parallel sweep subsystem: a named
+//!   workload-scenario registry, a deterministic (scenario × r × B)
+//!   grid runner on the crate thread pool, and CSV/JSON emission with
+//!   theory-vs-simulation gap columns.
 //! * [`coordinator`] — the serving-side coordination layer: routing,
 //!   continuous batching admission, KV slot management, step scheduling
 //!   with a cross-worker barrier, bundle topology, online autoscaling.
@@ -46,6 +50,7 @@ pub mod workload;
 pub mod latency;
 pub mod analysis;
 pub mod sim;
+pub mod sweep;
 pub mod coordinator;
 pub mod runtime;
 pub mod server;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   provision   compute r*_mf / r*_G from workload parameters or a trace
 //!   simulate    run the discrete-event simulator for one ratio
-//!   sweep       sweep ratios (Fig. 3 data) and print the table
+//!   sweep       parallel multi-scenario (scenario x r x B) grid sweep
 //!   estimate    estimate (theta, nu^2) from a trace CSV
 //!   serve       run the real PJRT serving engine on the demo model
 //!   gen-trace   generate a synthetic production-like trace CSV
@@ -13,7 +13,7 @@ use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::{recommend_from_load, recommend_from_trace};
 use afd::config::experiment::ExperimentConfig;
 use afd::error::Result;
-use afd::sim::engine::{simulate, sweep_ratios, SimOptions};
+use afd::sim::engine::{simulate, SimOptions};
 use afd::util::cli::{Args, HelpBuilder};
 use afd::util::tablefmt::{sig, Table};
 use afd::workload::stationary::stationary_for_spec;
@@ -54,7 +54,7 @@ fn run(args: &Args) -> Result<()> {
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
                     .entry("simulate", "run the discrete-event AFD simulator at --r")
-                    .entry("sweep", "simulate the configured ratio sweep and print the Fig.3 table")
+                    .entry("sweep", "parallel multi-scenario (scenario x r x B) sweep with theory-vs-sim columns")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
@@ -110,31 +110,82 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `afd sweep`: run the (scenario × r × B) cross-product in parallel and
+/// print the theory-vs-simulation summary (Fig. 3 across workloads).
+///
+/// Options:
+///   --scenarios all|name,name   registry selection (default all);
+///                               `config` sweeps the config's [workload]
+///   --ratios 1,2,4,...          fan-in grid (default config ratio_sweep)
+///   --batches 256,...           per-worker batch grid (default config B)
+///   --requests N                completions per Attention instance
+///   --threads N                 pool workers (default: one per core)
+///   --serial                    run the serial reference instead
+///   --cells                     also print the per-cell table
+///   --csv PATH / --json PATH    write per-cell results
+///   --list                      print the scenario registry and exit
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use afd::sweep::emit;
+    use afd::sweep::grid::{run_grid, run_grid_serial, SweepGrid};
+    use afd::sweep::scenarios;
+    use afd::util::tablefmt::Align;
+
+    if args.has_flag("list") {
+        let mut t = Table::new(&["scenario", "description", "theta"])
+            .align(0, Align::Left)
+            .align(1, Align::Left)
+            .with_title("Workload scenario registry");
+        for s in scenarios::registry() {
+            t.row(&[s.name.to_string(), s.description.to_string(), sig(s.expected_load().theta, 4)]);
+        }
+        t.print();
+        return Ok(());
+    }
+
     let mut cfg = load_config(args)?;
     cfg.requests_per_instance = args.get_usize("requests", cfg.requests_per_instance)?;
-    if let Some(_rs) = args.get("ratios") {
-        cfg.ratio_sweep = args.get_list_usize("ratios", &[])?;
+    // `--scenarios config` sweeps the config file's own [workload]
+    // (the pre-registry behavior of this subcommand); anything else
+    // selects from the registry and replaces the config workload.
+    let selector = args.get_str("scenarios", "all");
+    let selected = if selector.trim() == "config" {
+        vec![afd::sweep::Scenario {
+            name: "config",
+            description: "the [workload] table of the loaded experiment config",
+            spec: cfg.workload.clone(),
+        }]
+    } else {
+        scenarios::resolve(&selector)?
+    };
+    let grid = SweepGrid {
+        scenarios: selected,
+        ratios: args.get_list_usize("ratios", &cfg.ratio_sweep)?,
+        batches: args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
+    };
+    let threads = args.get_usize("threads", 0)?;
+    println!(
+        "sweeping {} scenario(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
+        grid.scenarios.len(),
+        grid.ratios.len(),
+        grid.batches.len(),
+        grid.cell_count(),
+        if args.has_flag("serial") { "serial reference".to_string() } else { format!("{} threads", if threads == 0 { afd::util::pool::default_threads(grid.cell_count()) } else { threads }) },
+    );
+    let res = if args.has_flag("serial") {
+        run_grid_serial(&cfg, &grid, SimOptions::default())?
+    } else {
+        run_grid(&cfg, &grid, SimOptions::default(), threads)?
+    };
+    emit::summary_table(&res).print();
+    if args.has_flag("cells") {
+        emit::cells_table(&res).print();
     }
-    let metrics = sweep_ratios(&cfg, SimOptions::default());
-    let load = stationary_for_spec(&cfg.workload, cfg.seed);
-    let op = OperatingPoint::new(cfg.hardware, load, cfg.topology.batch_per_worker);
-    let mut t = Table::new(&["r", "sim Thr/inst", "theory Thr_mf", "theory Thr_G", "TPOT", "idle_A", "idle_F"])
-        .with_title("Ratio sweep (paper Fig. 3)");
-    for m in &metrics {
-        t.row(&[
-            m.r.to_string(),
-            sig(m.throughput_per_instance, 5),
-            sig(op.throughput_mean_field(m.r as f64), 5),
-            sig(op.throughput_gaussian(m.r), 5),
-            sig(m.tpot, 5),
-            format!("{:.1}%", 100.0 * m.idle_attention),
-            format!("{:.1}%", 100.0 * m.idle_ffn),
-        ]);
-    }
-    t.print();
     if let Some(path) = args.get("csv") {
-        afd::server::metrics_export::sim_sweep_to_csv(&metrics, path)?;
+        emit::write_csv(&res, path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        emit::write_json(&res, path)?;
         println!("wrote {path}");
     }
     Ok(())

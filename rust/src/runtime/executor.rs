@@ -18,6 +18,11 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
+// In dependency-free offline builds this resolves to the gated stub; with
+// the real bindings vendored, delete this line and the `xla::` paths below
+// resolve to the external crate unchanged.
+use crate::runtime::xla;
+
 use crate::error::{AfdError, Result};
 use crate::runtime::artifact::{ArtifactSpec, Manifest, TensorSpec};
 use crate::runtime::tensor::{DType, Tensor};

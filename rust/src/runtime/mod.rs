@@ -11,6 +11,7 @@ pub mod artifact;
 pub mod executor;
 pub mod model_runner;
 pub mod tensor;
+pub mod xla;
 
 pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, ModelMeta, TensorSpec};
 pub use executor::{DeviceTensor, ExecInput, Executable, LocalRuntime};

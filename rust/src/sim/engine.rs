@@ -201,12 +201,16 @@ pub fn simulate(cfg: &ExperimentConfig, r: usize, opts: SimOptions) -> SimOutput
     let (throughput, _t80) =
         stable_throughput(&completions, cfg.stable_fraction, r + 1);
     // Delivered rate over the warm window (skip the first 25% of steps):
-    // every lane-step delivers r*B tokens.
+    // every lane-step delivers r*B tokens. The window starts at the
+    // finish time of step `skip`, so it contains the completions of steps
+    // skip+1 .. len-1 — count those *intervals*, not the endpoint step
+    // itself, or the estimate is biased high by ~1/(len-skip) at short
+    // horizons.
     let delivered = {
         let skip = step_times.len() / 4;
-        let warm_steps = (step_times.len() - skip) as f64;
+        let warm_steps = (step_times.len().saturating_sub(skip + 1)) as f64;
         let warm_time = total_time - step_times.get(skip).copied().unwrap_or(0.0);
-        if warm_time > 0.0 {
+        if warm_time > 0.0 && warm_steps > 0.0 {
             warm_steps * (r * b) as f64 / warm_time / (r + 1) as f64
         } else {
             f64::NAN
@@ -473,6 +477,61 @@ mod tests {
             "AFD {} <= coupled {}",
             afd.metrics.throughput_per_instance,
             coupled.metrics.throughput_per_instance
+        );
+    }
+
+    #[test]
+    fn delivered_rate_counts_intervals_not_endpoints() {
+        // Reconstruct the estimator from the step log: the warm window
+        // (step_times[skip], total_time] contains the completions of
+        // steps skip+1 .. len-1, i.e. len-skip-1 deliveries of r*B
+        // tokens each. A short horizon amplifies the old endpoint bias.
+        let mut cfg = small_cfg();
+        cfg.requests_per_instance = 40;
+        let r = 2;
+        let out =
+            simulate(&cfg, r, SimOptions { record_steps: true, ..Default::default() });
+        let times: Vec<f64> = out.steps.iter().map(|s| s.ready_at).collect();
+        assert!(times.len() >= 8);
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0], "step finish times must be nondecreasing");
+        }
+        let skip = times.len() / 4;
+        let b = cfg.topology.batch_per_worker;
+        let expect = (times.len() - skip - 1) as f64 * (r * b) as f64
+            / (out.metrics.total_time - times[skip])
+            / (r + 1) as f64;
+        let got = out.metrics.delivered_throughput_per_instance;
+        assert!(
+            (got - expect).abs() < 1e-12 * expect,
+            "delivered {got} vs interval-count reconstruction {expect}"
+        );
+    }
+
+    #[test]
+    fn delivered_rate_unbiased_at_short_horizons() {
+        // Deterministic workload in the FFN-bound regime: every warm
+        // lane-step takes exactly t_F, so the delivered rate is a
+        // horizon-independent constant. The endpoint-counting bug biased
+        // the short-horizon estimate high by ~1/(steps - skip).
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 64;
+        cfg.workload = crate::config::workload::WorkloadSpec::independent(
+            crate::stats::distributions::LengthDist::Deterministic(100),
+            crate::stats::distributions::LengthDist::Deterministic(20),
+        );
+        cfg.requests_per_instance = 2_000;
+        let long = simulate(&cfg, 2, SimOptions::default())
+            .metrics
+            .delivered_throughput_per_instance;
+        cfg.requests_per_instance = 160;
+        let short = simulate(&cfg, 2, SimOptions::default())
+            .metrics
+            .delivered_throughput_per_instance;
+        assert!(long.is_finite() && short.is_finite());
+        assert!(
+            (short / long - 1.0).abs() < 0.02,
+            "short-horizon delivered {short} vs long-horizon {long}"
         );
     }
 

@@ -1,0 +1,266 @@
+//! Sweep result emission: CSV (one row per grid cell, with the group's
+//! theory-vs-simulation columns repeated on every row for flat-file
+//! analysis), JSON (nested cells + group summaries), and the human
+//! summary table the CLI prints.
+//!
+//! All formatting is deterministic, so serial and parallel runs of the
+//! same grid emit byte-identical files — the acceptance check for the
+//! grid runner rides on this.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::sweep::grid::{GroupSummary, SweepCell, SweepResults};
+use crate::util::csvio::CsvTable;
+use crate::util::json::Json;
+use crate::util::tablefmt::{sig, Table};
+
+/// CSV header (kept stable; downstream plotting scripts key on names).
+pub const CSV_HEADER: [&str; 18] = [
+    "scenario",
+    "r",
+    "batch",
+    "seed",
+    "theta",
+    "nu",
+    "sim_throughput",
+    "sim_delivered",
+    "tpot",
+    "idle_attention",
+    "idle_ffn",
+    "theory_thr_mf",
+    "theory_thr_g",
+    "r_star_g",
+    "sim_opt_r",
+    "ratio_gap",
+    "completed",
+    "total_time",
+];
+
+fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
+    res.groups
+        .iter()
+        .find(|g| g.scenario == cell.scenario && g.batch == cell.metrics.batch)
+        .expect("every cell belongs to a group")
+}
+
+/// Flatten results into an in-memory CSV table (one row per cell).
+pub fn to_csv_table(res: &SweepResults) -> CsvTable {
+    let mut t = CsvTable::new(&CSV_HEADER);
+    for cell in &res.cells {
+        let g = group_for(res, cell);
+        let m = &cell.metrics;
+        t.push_row(&[
+            cell.scenario.clone(),
+            m.r.to_string(),
+            m.batch.to_string(),
+            cell.seed.to_string(),
+            format!("{:.6}", cell.load.theta),
+            format!("{:.6}", cell.load.nu()),
+            format!("{:.8}", m.throughput_per_instance),
+            format!("{:.8}", m.delivered_throughput_per_instance),
+            format!("{:.6}", m.tpot),
+            format!("{:.6}", m.idle_attention),
+            format!("{:.6}", m.idle_ffn),
+            format!("{:.8}", cell.theory_mf),
+            format!("{:.8}", cell.theory_g),
+            g.r_star_g.to_string(),
+            g.sim_opt_r.to_string(),
+            format!("{:.6}", g.ratio_gap),
+            m.completed.to_string(),
+            format!("{:.3}", m.total_time),
+        ]);
+    }
+    t
+}
+
+/// Write the per-cell CSV.
+pub fn write_csv(res: &SweepResults, path: impl AsRef<Path>) -> Result<()> {
+    to_csv_table(res).write_path(path)
+}
+
+fn cell_to_json(cell: &SweepCell) -> Json {
+    let m = &cell.metrics;
+    Json::obj()
+        .set("scenario", Json::Str(cell.scenario.clone()))
+        .set("r", Json::Num(m.r as f64))
+        .set("batch", Json::Num(m.batch as f64))
+        // String, not Num: the SplitMix64-derived seeds use the full u64
+        // range and would lose low bits through an f64.
+        .set("seed", Json::Str(cell.seed.to_string()))
+        .set("theta", Json::Num(cell.load.theta))
+        .set("nu_sq", Json::Num(cell.load.nu_sq))
+        .set("sim_throughput", Json::Num(m.throughput_per_instance))
+        .set("sim_delivered", Json::Num(m.delivered_throughput_per_instance))
+        .set("tpot", Json::Num(m.tpot))
+        .set("idle_attention", Json::Num(m.idle_attention))
+        .set("idle_ffn", Json::Num(m.idle_ffn))
+        .set("theory_thr_mf", Json::Num(cell.theory_mf))
+        .set("theory_thr_g", Json::Num(cell.theory_g))
+        .set("completed", Json::Num(m.completed as f64))
+        .set("total_time", Json::Num(m.total_time))
+}
+
+fn group_to_json(g: &GroupSummary) -> Json {
+    Json::obj()
+        .set("scenario", Json::Str(g.scenario.clone()))
+        .set("batch", Json::Num(g.batch as f64))
+        .set("theta", Json::Num(g.load.theta))
+        .set("r_star_g", Json::Num(g.r_star_g as f64))
+        .set("theory_peak", Json::Num(g.theory_peak))
+        .set("sim_opt_r", Json::Num(g.sim_opt_r as f64))
+        .set("sim_peak", Json::Num(g.sim_peak))
+        .set("ratio_gap", Json::Num(g.ratio_gap))
+}
+
+/// Full results as one JSON document.
+pub fn to_json(res: &SweepResults) -> Json {
+    Json::obj()
+        .set("cells", Json::Arr(res.cells.iter().map(cell_to_json).collect()))
+        .set("groups", Json::Arr(res.groups.iter().map(group_to_json).collect()))
+}
+
+/// Write the JSON document (pretty-printed).
+pub fn write_json(res: &SweepResults, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut text = to_json(res).to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// Per-group summary table: the CLI's headline output.
+pub fn summary_table(res: &SweepResults) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "B",
+        "theta",
+        "r*_G (theory)",
+        "sim-opt r",
+        "gap",
+        "sim peak Thr/inst",
+        "theory peak Thr_G",
+    ])
+    .with_title("Sweep summary — barrier-aware theory vs simulation optimum per scenario");
+    for g in &res.groups {
+        t.row(&[
+            g.scenario.clone(),
+            g.batch.to_string(),
+            sig(g.load.theta, 4),
+            g.r_star_g.to_string(),
+            g.sim_opt_r.to_string(),
+            format!("{:.1}%", 100.0 * g.ratio_gap),
+            sig(g.sim_peak, 5),
+            sig(g.theory_peak, 5),
+        ]);
+    }
+    t
+}
+
+/// Per-cell detail table (printed with `--cells`).
+pub fn cells_table(res: &SweepResults) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "r",
+        "B",
+        "sim Thr/inst",
+        "delivered",
+        "Thr_mf",
+        "Thr_G",
+        "TPOT",
+        "idle_A",
+        "idle_F",
+    ])
+    .with_title("Sweep cells");
+    for c in &res.cells {
+        let m = &c.metrics;
+        t.row(&[
+            c.scenario.clone(),
+            m.r.to_string(),
+            m.batch.to_string(),
+            sig(m.throughput_per_instance, 5),
+            sig(m.delivered_throughput_per_instance, 5),
+            sig(c.theory_mf, 5),
+            sig(c.theory_g, 5),
+            sig(m.tpot, 5),
+            format!("{:.1}%", 100.0 * m.idle_attention),
+            format!("{:.1}%", 100.0 * m.idle_ffn),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::sim::engine::SimOptions;
+    use crate::sweep::grid::{run_grid_serial, SweepGrid};
+    use crate::sweep::scenarios;
+
+    fn small_results() -> SweepResults {
+        let mut base = ExperimentConfig::default();
+        base.requests_per_instance = 80;
+        let grid = SweepGrid {
+            scenarios: scenarios::resolve("deterministic-stress").unwrap(),
+            ratios: vec![1, 2],
+            batches: vec![8],
+        };
+        run_grid_serial(&base, &grid, SimOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn csv_has_one_row_per_cell_with_group_columns() {
+        let res = small_results();
+        let t = to_csv_table(&res);
+        assert_eq!(t.header.len(), CSV_HEADER.len());
+        assert_eq!(t.rows.len(), res.cells.len());
+        // Group columns are present and consistent on every row.
+        let r_star: Vec<u64> = t.column_u64("r_star_g").unwrap();
+        let sim_opt: Vec<u64> = t.column_u64("sim_opt_r").unwrap();
+        assert!(r_star.windows(2).all(|w| w[0] == w[1]));
+        assert!(sim_opt.windows(2).all(|w| w[0] == w[1]));
+        assert!(t.column_f64("theory_thr_g").unwrap().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn csv_roundtrips_through_file() {
+        let res = small_results();
+        let path = std::env::temp_dir().join("afd_sweep_emit_test.csv");
+        write_csv(&res, &path).unwrap();
+        let back = CsvTable::read_path(&path).unwrap();
+        assert_eq!(back.rows.len(), res.cells.len());
+        assert_eq!(back.header, CSV_HEADER.to_vec());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_groups() {
+        let res = small_results();
+        let j = to_json(&res);
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        let cells = back.field("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), res.cells.len());
+        let groups = back.field("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups.len(), res.groups.len());
+        assert_eq!(
+            groups[0].field("scenario").unwrap().as_str().unwrap(),
+            "deterministic-stress"
+        );
+    }
+
+    #[test]
+    fn tables_render() {
+        let res = small_results();
+        let s = summary_table(&res).render();
+        assert!(s.contains("r*_G"));
+        assert!(s.contains("deterministic-stress"));
+        let c = cells_table(&res).render();
+        assert!(c.contains("Thr_G"));
+    }
+}

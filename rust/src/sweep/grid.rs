@@ -1,0 +1,406 @@
+//! Parallel (scenario × r × B) grid runner.
+//!
+//! Every cell of the cross-product is one independent discrete-event
+//! simulation ([`crate::sim::engine::simulate`]); cells are spread over
+//! the [`crate::util::pool::ThreadPool`] and collected by index, so the
+//! output order is the grid order regardless of scheduling.
+//!
+//! **Determinism.** Each cell derives its own seed from the experiment
+//! seed and its grid coordinates (SplitMix64 chain, the same hierarchy
+//! `RequestGenerator::fork` uses inside a cell), and the simulator is a
+//! pure function of its config — so a parallel run is bitwise identical
+//! to [`run_grid_serial`], which the determinism tests assert.
+
+use crate::config::experiment::ExperimentConfig;
+use crate::error::Result;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::metrics::SimMetrics;
+use crate::stats::rng::SplitMix64;
+use crate::sweep::scenarios::Scenario;
+use crate::util::pool::{default_threads, ThreadPool};
+use crate::workload::stationary::StationaryLoad;
+
+/// The cross-product to sweep.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub scenarios: Vec<Scenario>,
+    /// Fan-in values (paper's r axis).
+    pub ratios: Vec<usize>,
+    /// Per-worker microbatch sizes (paper's B axis).
+    pub batches: Vec<usize>,
+}
+
+impl SweepGrid {
+    /// Grid over the config's ratio sweep and batch at the registry
+    /// scenarios.
+    pub fn from_config(scenarios: Vec<Scenario>, cfg: &ExperimentConfig) -> Self {
+        Self {
+            scenarios,
+            ratios: cfg.ratio_sweep.clone(),
+            batches: vec![cfg.topology.batch_per_worker],
+        }
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.scenarios.len() * self.ratios.len() * self.batches.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.scenarios.is_empty() {
+            return Err(crate::error::AfdError::config("sweep grid needs >= 1 scenario"));
+        }
+        if self.ratios.is_empty() || self.ratios.contains(&0) {
+            return Err(crate::error::AfdError::config(
+                "sweep grid ratios must be non-empty with positive entries",
+            ));
+        }
+        if self.batches.is_empty() || self.batches.contains(&0) {
+            return Err(crate::error::AfdError::config(
+                "sweep grid batches must be non-empty with positive entries",
+            ));
+        }
+        // Duplicate names would collide in the per-(scenario, B) group
+        // summaries (and the CSV's group columns key on the name).
+        let mut names: Vec<&str> = self.scenarios.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(crate::error::AfdError::config(format!(
+                    "scenario {:?} appears more than once in the sweep grid",
+                    w[0]
+                )));
+            }
+        }
+        for s in &self.scenarios {
+            s.spec.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// One simulated grid cell.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub scenario: String,
+    /// Declared stationary moments of the scenario (theory inputs).
+    pub load: StationaryLoad,
+    /// The cell seed actually used (recorded for reproduction).
+    pub seed: u64,
+    pub metrics: SimMetrics,
+    /// Mean-field theory throughput `Thr_mf(B; r)` (Eq. 8).
+    pub theory_mf: f64,
+    /// Gaussian barrier-aware theory throughput `Thr_G(B; r)` (Eq. 9/11).
+    pub theory_g: f64,
+}
+
+/// Per-(scenario, B) summary: theory vs simulation optima over the swept
+/// ratio grid (the paper's "within 10%" comparison, Fig. 3/4).
+#[derive(Debug, Clone)]
+pub struct GroupSummary {
+    pub scenario: String,
+    pub batch: usize,
+    pub load: StationaryLoad,
+    /// Barrier-aware theory argmax `r*_G` over the swept ratios (Eq. 12).
+    pub r_star_g: usize,
+    /// `Thr_G` at `r*_G`.
+    pub theory_peak: f64,
+    /// Simulation argmax over the swept ratios (by the unbiased
+    /// delivered-rate metric).
+    pub sim_opt_r: usize,
+    /// Delivered throughput at the simulation optimum.
+    pub sim_peak: f64,
+    /// Relative ratio gap `|r*_G - r_sim| / r_sim` (paper criterion:
+    /// within 10% or the same grid point).
+    pub ratio_gap: f64,
+}
+
+/// Full sweep output: cells in canonical grid order (scenario-major,
+/// then batch, then ratio) plus per-group summaries.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    pub cells: Vec<SweepCell>,
+    pub groups: Vec<GroupSummary>,
+}
+
+/// Derive the per-cell seed: a SplitMix64 chain over the experiment seed
+/// and the cell coordinates. Stable across runs, platforms, and thread
+/// schedules; distinct per cell so scenarios don't share request streams.
+pub fn cell_seed(base: u64, scenario_idx: usize, batch: usize, r: usize) -> u64 {
+    let mut sm = SplitMix64::new(
+        base ^ (scenario_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let a = sm.next_u64() ^ (batch as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    let mut sm2 = SplitMix64::new(a);
+    sm2.next_u64() ^ (r as u64).wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+/// One cell's config: the base experiment with the scenario workload,
+/// the cell batch, and the derived cell seed.
+fn cell_config(
+    base: &ExperimentConfig,
+    scenario: &Scenario,
+    scenario_idx: usize,
+    batch: usize,
+    r: usize,
+) -> ExperimentConfig {
+    base.with_workload(scenario.spec.clone())
+        .with_batch(batch)
+        .with_seed(cell_seed(base.seed, scenario_idx, batch, r))
+}
+
+struct CellJob {
+    scenario_idx: usize,
+    batch: usize,
+    r: usize,
+    cfg: ExperimentConfig,
+}
+
+fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
+    let mut jobs = Vec::with_capacity(grid.cell_count());
+    for (si, scenario) in grid.scenarios.iter().enumerate() {
+        for &batch in &grid.batches {
+            for &r in &grid.ratios {
+                jobs.push(CellJob {
+                    scenario_idx: si,
+                    batch,
+                    r,
+                    cfg: cell_config(base, scenario, si, batch, r),
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Assemble cells + group summaries from per-job metrics (in job order).
+fn assemble(grid: &SweepGrid, jobs: &[CellJob], metrics: Vec<SimMetrics>) -> SweepResults {
+    use crate::analysis::cycle_time::OperatingPoint;
+
+    // Theory columns are cheap and deterministic: compute serially.
+    // Declared moments once per scenario (the Monte Carlo fallback for
+    // non-closed-form decode laws is the expensive part).
+    let loads: Vec<StationaryLoad> =
+        grid.scenarios.iter().map(|s| s.expected_load()).collect();
+
+    let mut cells = Vec::with_capacity(jobs.len());
+    for (job, m) in jobs.iter().zip(metrics) {
+        let load = loads[job.scenario_idx];
+        // Hardware is shared across the grid (the base config's); cell
+        // configs only vary workload, batch, and seed.
+        let op = OperatingPoint::new(job.cfg.hardware, load, job.batch);
+        cells.push(SweepCell {
+            scenario: grid.scenarios[job.scenario_idx].name.to_string(),
+            load,
+            seed: job.cfg.seed,
+            theory_mf: op.throughput_mean_field(job.r as f64),
+            theory_g: op.throughput_gaussian(job.r),
+            metrics: m,
+        });
+    }
+
+    // Group summaries per (scenario, batch), in grid order.
+    let mut groups = Vec::with_capacity(grid.scenarios.len() * grid.batches.len());
+    let rn = grid.ratios.len();
+    for (si, scenario) in grid.scenarios.iter().enumerate() {
+        for (bi, &batch) in grid.batches.iter().enumerate() {
+            let start = (si * grid.batches.len() + bi) * rn;
+            let slice = &cells[start..start + rn];
+            let (mut r_star_g, mut theory_peak) = (slice[0].metrics.r, slice[0].theory_g);
+            let (mut sim_opt_r, mut sim_peak) =
+                (slice[0].metrics.r, slice[0].metrics.delivered_throughput_per_instance);
+            for c in &slice[1..] {
+                if c.theory_g > theory_peak {
+                    theory_peak = c.theory_g;
+                    r_star_g = c.metrics.r;
+                }
+                let d = c.metrics.delivered_throughput_per_instance;
+                if d > sim_peak {
+                    sim_peak = d;
+                    sim_opt_r = c.metrics.r;
+                }
+            }
+            groups.push(GroupSummary {
+                scenario: scenario.name.to_string(),
+                batch,
+                load: loads[si],
+                r_star_g,
+                theory_peak,
+                sim_opt_r,
+                sim_peak,
+                ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs() / sim_opt_r as f64,
+            });
+        }
+    }
+
+    SweepResults { cells, groups }
+}
+
+/// Run the grid on `threads` pool workers (0 = one per core, capped at
+/// the cell count).
+pub fn run_grid(
+    base: &ExperimentConfig,
+    grid: &SweepGrid,
+    opts: SimOptions,
+    threads: usize,
+) -> Result<SweepResults> {
+    grid.validate()?;
+    let jobs = build_jobs(base, grid);
+    let n_threads =
+        if threads == 0 { default_threads(jobs.len()) } else { threads.min(jobs.len()).max(1) };
+    let pool = ThreadPool::new(n_threads);
+    let cfgs: Vec<(ExperimentConfig, usize)> =
+        jobs.iter().map(|j| (j.cfg.clone(), j.r)).collect();
+    let metrics = pool.map(cfgs, move |(cfg, r)| simulate(&cfg, r, opts).metrics);
+    Ok(assemble(grid, &jobs, metrics))
+}
+
+/// Serial reference: identical output to [`run_grid`], one cell at a
+/// time on the calling thread. The determinism tests compare the two
+/// bitwise.
+pub fn run_grid_serial(
+    base: &ExperimentConfig,
+    grid: &SweepGrid,
+    opts: SimOptions,
+) -> Result<SweepResults> {
+    grid.validate()?;
+    let jobs = build_jobs(base, grid);
+    let metrics: Vec<SimMetrics> =
+        jobs.iter().map(|j| simulate(&j.cfg, j.r, opts).metrics).collect();
+    Ok(assemble(grid, &jobs, metrics))
+}
+
+/// Parallel drop-in for [`crate::sim::engine::sweep_ratios`]: same
+/// single-workload ratio sweep, same seeds, same output — one simulation
+/// per pool worker instead of a serial loop. Used by the figure builders
+/// so every figure bench is a parallel run.
+pub fn parallel_sweep_ratios(cfg: &ExperimentConfig, opts: SimOptions) -> Vec<SimMetrics> {
+    let pool = ThreadPool::new(default_threads(cfg.ratio_sweep.len()));
+    let jobs: Vec<(ExperimentConfig, usize)> =
+        cfg.ratio_sweep.iter().map(|&r| (cfg.clone(), r)).collect();
+    pool.map(jobs, move |(cfg, r)| simulate(&cfg, r, opts).metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::stats::distributions::LengthDist;
+    use crate::sweep::scenarios;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.requests_per_instance = 120;
+        cfg
+    }
+
+    fn tiny_grid() -> SweepGrid {
+        SweepGrid {
+            scenarios: scenarios::resolve("short-chat,deterministic-stress").unwrap(),
+            ratios: vec![1, 2, 4],
+            batches: vec![8, 16],
+        }
+    }
+
+    #[test]
+    fn grid_shape_and_order() {
+        let base = tiny_base();
+        let grid = tiny_grid();
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 12);
+        assert_eq!(res.groups.len(), 4);
+        // Canonical order: scenario-major, then batch, then ratio.
+        assert_eq!(res.cells[0].scenario, "short-chat");
+        assert_eq!(res.cells[0].metrics.batch, 8);
+        assert_eq!(res.cells[0].metrics.r, 1);
+        assert_eq!(res.cells[3].metrics.batch, 16);
+        assert_eq!(res.cells[6].scenario, "deterministic-stress");
+        assert_eq!(res.cells[11].metrics.r, 4);
+        for g in &res.groups {
+            assert!(grid.ratios.contains(&g.r_star_g));
+            assert!(grid.ratios.contains(&g.sim_opt_r));
+            assert!(g.sim_peak > 0.0);
+            assert!(g.theory_peak > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let base = tiny_base();
+        let grid = tiny_grid();
+        let par = run_grid(&base, &grid, SimOptions::default(), 4).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(par.cells.len(), ser.cells.len());
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(
+                a.metrics.throughput_per_instance.to_bits(),
+                b.metrics.throughput_per_instance.to_bits()
+            );
+            assert_eq!(
+                a.metrics.delivered_throughput_per_instance.to_bits(),
+                b.metrics.delivered_throughput_per_instance.to_bits()
+            );
+            assert_eq!(a.theory_g.to_bits(), b.theory_g.to_bits());
+        }
+    }
+
+    #[test]
+    fn cell_seeds_are_distinct_across_coordinates() {
+        let mut seen = std::collections::BTreeSet::new();
+        for si in 0..8 {
+            for &b in &[64usize, 256] {
+                for &r in &[1usize, 2, 4, 8, 16, 32] {
+                    assert!(
+                        seen.insert(cell_seed(20260710, si, b, r)),
+                        "seed collision at ({si}, {b}, {r})"
+                    );
+                }
+            }
+        }
+        // And the hierarchy responds to the base seed.
+        assert_ne!(cell_seed(1, 0, 64, 1), cell_seed(2, 0, 64, 1));
+    }
+
+    #[test]
+    fn parallel_sweep_ratios_matches_serial_engine_sweep() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 16;
+        cfg.requests_per_instance = 150;
+        cfg.ratio_sweep = vec![1, 2, 4];
+        cfg.workload = WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(20.0),
+            LengthDist::geometric_with_mean(50.0),
+        );
+        let par = parallel_sweep_ratios(&cfg, SimOptions::default());
+        let ser = crate::sim::engine::sweep_ratios(&cfg, SimOptions::default());
+        assert_eq!(par.len(), ser.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.r, b.r);
+            assert_eq!(a.total_time.to_bits(), b.total_time.to_bits());
+            assert_eq!(
+                a.delivered_throughput_per_instance.to_bits(),
+                b.delivered_throughput_per_instance.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_grids_rejected() {
+        let base = tiny_base();
+        let mut g = tiny_grid();
+        g.ratios.clear();
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let mut g = tiny_grid();
+        g.batches = vec![0];
+        assert!(run_grid(&base, &g, SimOptions::default(), 2).is_err());
+        let mut g = tiny_grid();
+        g.scenarios.clear();
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        // Duplicate scenario names would make group lookups ambiguous.
+        let mut g = tiny_grid();
+        g.scenarios.push(g.scenarios[0].clone());
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+    }
+}

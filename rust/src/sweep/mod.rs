@@ -1,0 +1,28 @@
+//! Multi-scenario parallel sweep subsystem.
+//!
+//! The paper validates its closed-form A/F provisioning rule against the
+//! discrete-event simulator *across workloads* (§5, Fig. 3–4); related
+//! work shows the optimal ratio shifts sharply with workload shape. This
+//! subsystem makes that validation a one-command parallel run:
+//!
+//! * [`scenarios`] — a named registry of ~8 workload shapes (paper
+//!   geometric baseline, long-context LogNormal, heavy-tail Pareto,
+//!   short chat, bursty mixed-tenant empirical, deterministic stress,
+//!   correlated agentic), each with declared stationary moments.
+//! * [`grid`] — the parallel (scenario × r × B) grid runner on the
+//!   crate thread pool, with a per-cell seed hierarchy that keeps
+//!   parallel output bitwise identical to the serial reference.
+//! * [`emit`] — CSV/JSON emission with theory-vs-simulation gap columns
+//!   (`r*_G` from Eq. 12 against the simulation-optimal ratio, the
+//!   paper's "within 10%" headline comparison).
+//!
+//! Entry points: `afd sweep` (CLI), [`grid::run_grid`] (library), and
+//! [`grid::parallel_sweep_ratios`] (drop-in parallel Fig. 3 sweep used
+//! by the figure builders).
+
+pub mod emit;
+pub mod grid;
+pub mod scenarios;
+
+pub use grid::{run_grid, run_grid_serial, SweepGrid, SweepResults};
+pub use scenarios::{registry, Scenario};

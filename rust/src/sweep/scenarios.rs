@@ -1,0 +1,228 @@
+//! Named workload scenario registry.
+//!
+//! The paper validates its provisioning rule on a single geometric
+//! workload (§5.2); "Revealing the Challenges of Attention-FFN
+//! Disaggregation for Modern MoE Models" shows the optimal ratio shifts
+//! sharply with workload *shape*. The registry pins down a spanning set
+//! of shapes — every [`crate::stats::distributions::LengthDist`] family
+//! appears — each with a stable name usable from the `afd sweep` CLI and
+//! a declared stationary load `(theta, nu^2)` (Lemma 4.1) that the
+//! per-scenario smoke tests check the simulator against.
+
+use std::sync::Arc;
+
+use crate::config::workload::WorkloadSpec;
+use crate::stats::distributions::LengthDist;
+use crate::workload::stationary::{stationary_for_spec, StationaryLoad};
+
+/// Seed for the Monte Carlo fallback of [`stationary_for_spec`] — fixed
+/// so declared moments are identical across processes and threads (the
+/// grid runner's bitwise-determinism guarantee includes theory columns).
+pub const MOMENT_SEED: u64 = 0x5CEA_A710;
+
+/// One named workload scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Stable CLI/CSV identifier (kebab-case).
+    pub name: &'static str,
+    /// One-line description shown by `afd sweep --list`.
+    pub description: &'static str,
+    pub spec: WorkloadSpec,
+}
+
+impl Scenario {
+    /// Declared stationary per-slot load: closed form where the decode
+    /// family allows it (geometric / deterministic), seeded Monte Carlo
+    /// otherwise. Deterministic for a fixed registry.
+    pub fn expected_load(&self) -> StationaryLoad {
+        stationary_for_spec(&self.spec, MOMENT_SEED)
+    }
+}
+
+/// Mixed-tenant empirical prefill population: an 8:2 blend of short chat
+/// turns and long RAG-style contexts (the bursty bimodality production
+/// traces show). Deterministic by construction — counts are the weights.
+fn mixed_tenant_prefills() -> Arc<Vec<u64>> {
+    let mut v = Vec::with_capacity(1000);
+    // 80% short chat: 32..=96 tokens in steps of 8 (uniform-ish comb).
+    for i in 0..800u64 {
+        v.push(32 + 8 * (i % 9));
+    }
+    // 20% long-context tenants: 1024..=2048 in steps of 128.
+    for i in 0..200u64 {
+        v.push(1024 + 128 * (i % 9));
+    }
+    Arc::new(v)
+}
+
+/// The built-in scenario registry (order is the canonical sweep order).
+pub fn registry() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "paper-geometric",
+            description: "paper SS5.2 baseline: Geom(mu_P=100) prefill, Geom(mu_D=500) decode",
+            spec: WorkloadSpec::paper_section5(),
+        },
+        Scenario {
+            name: "short-chat",
+            description: "interactive chat: short geometric prompts and replies",
+            spec: WorkloadSpec::independent(
+                LengthDist::geometric_with_mean(50.0),
+                LengthDist::geometric_with_mean(150.0),
+            ),
+        },
+        Scenario {
+            name: "long-context",
+            description: "RAG/long-document prefill: LogNormal contexts, geometric decode",
+            spec: WorkloadSpec::independent(
+                // Continuous mean exp(mu + sigma^2/2) = 2000 at sigma 0.8.
+                LengthDist::LogNormal { mu: 2000.0_f64.ln() - 0.32, sigma: 0.8, min: 1 },
+                LengthDist::geometric_with_mean(400.0),
+            ),
+        },
+        Scenario {
+            name: "lognormal-decode",
+            description: "skewed response lengths: LogNormal decode lifetimes (MC moments)",
+            spec: WorkloadSpec::independent(
+                LengthDist::geometric_with_mean(200.0),
+                // Continuous mean exp(mu + sigma^2/2) = 600 at sigma 0.7.
+                LengthDist::LogNormal { mu: 600.0_f64.ln() - 0.245, sigma: 0.7, min: 1 },
+            ),
+        },
+        Scenario {
+            name: "heavy-tail-pareto",
+            description: "heavy-tail prefills: Pareto(alpha=3.5) contexts, finite nu^2 regime",
+            spec: WorkloadSpec::independent(
+                LengthDist::Pareto { alpha: 3.5, xmin: 60 },
+                LengthDist::geometric_with_mean(300.0),
+            ),
+        },
+        Scenario {
+            name: "bursty-mixed-tenant",
+            description: "bimodal empirical prefills: 80% short chat / 20% long-context tenants",
+            spec: WorkloadSpec::independent(
+                LengthDist::Empirical(mixed_tenant_prefills()),
+                LengthDist::geometric_with_mean(250.0),
+            ),
+        },
+        Scenario {
+            name: "deterministic-stress",
+            description: "zero-variance stress: fixed prefill and decode (barrier = mean field)",
+            spec: WorkloadSpec::independent(
+                LengthDist::Deterministic(512),
+                LengthDist::Deterministic(128),
+            ),
+        },
+        Scenario {
+            name: "correlated-agentic",
+            description: "agentic loops: long prompts induce long decodes (Cov(P,D) > 0)",
+            spec: WorkloadSpec {
+                prefill: LengthDist::geometric_with_mean(300.0),
+                decode: LengthDist::geometric_with_mean(400.0),
+                correlation: 0.5,
+            },
+        },
+    ]
+}
+
+/// All registry names, in canonical order.
+pub fn names() -> Vec<&'static str> {
+    registry().into_iter().map(|s| s.name).collect()
+}
+
+/// Look up one scenario by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+/// Resolve a CLI scenario selector: `"all"` (or empty) is the whole
+/// registry; otherwise a comma-separated name list, order-preserving.
+pub fn resolve(selector: &str) -> crate::error::Result<Vec<Scenario>> {
+    let sel = selector.trim();
+    if sel.is_empty() || sel == "all" {
+        return Ok(registry());
+    }
+    sel.split(',')
+        .map(|raw| {
+            let name = raw.trim();
+            by_name(name).ok_or_else(|| {
+                crate::error::AfdError::config(format!(
+                    "unknown scenario {name:?}; available: {}",
+                    names().join(", ")
+                ))
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_stable_unique_names_and_valid_specs() {
+        let reg = registry();
+        assert!(reg.len() >= 8, "expected >= 8 scenarios, got {}", reg.len());
+        let mut names: Vec<&str> = reg.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "duplicate scenario names");
+        for s in &reg {
+            s.spec.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!s.description.is_empty());
+        }
+    }
+
+    #[test]
+    fn registry_spans_every_distribution_family() {
+        let reg = registry();
+        let has = |pred: fn(&LengthDist) -> bool| {
+            reg.iter().any(|s| pred(&s.spec.prefill) || pred(&s.spec.decode))
+        };
+        assert!(has(|d| matches!(d, LengthDist::Geometric { .. })));
+        assert!(has(|d| matches!(d, LengthDist::Deterministic(_))));
+        assert!(has(|d| matches!(d, LengthDist::LogNormal { .. })));
+        assert!(has(|d| matches!(d, LengthDist::Pareto { .. })));
+        assert!(has(|d| matches!(d, LengthDist::Empirical(_))));
+        assert!(reg.iter().any(|s| s.spec.correlation > 0.0));
+    }
+
+    #[test]
+    fn declared_moments_are_finite_positive_and_deterministic() {
+        for s in registry() {
+            let a = s.expected_load();
+            a.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            let b = s.expected_load();
+            // Bitwise-stable: closed forms trivially, MC via MOMENT_SEED.
+            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "{}", s.name);
+            assert_eq!(a.nu_sq.to_bits(), b.nu_sq.to_bits(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn paper_scenario_declares_corollary_4_5_moments() {
+        let s = by_name("paper-geometric").unwrap();
+        let load = s.expected_load();
+        assert!((load.theta - 599.0).abs() < 1e-9);
+        assert!((load.nu_sq - 259_400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn resolve_selectors() {
+        assert_eq!(resolve("all").unwrap().len(), registry().len());
+        let two = resolve("short-chat, deterministic-stress").unwrap();
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[0].name, "short-chat");
+        assert_eq!(two[1].name, "deterministic-stress");
+        assert!(resolve("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn mixed_tenant_population_is_bimodal_with_8_to_2_weights() {
+        let v = mixed_tenant_prefills();
+        assert_eq!(v.len(), 1000);
+        let short = v.iter().filter(|&&x| x <= 96).count();
+        let long = v.iter().filter(|&&x| x >= 1024).count();
+        assert_eq!((short, long), (800, 200));
+    }
+}

@@ -54,6 +54,46 @@ impl ThreadPool {
     pub fn size(&self) -> usize {
         self.senders.len()
     }
+
+    /// Parallel map preserving input order: submit one job per item and
+    /// collect results by index. The closure must be deterministic per
+    /// item for output to be schedule-independent (the sweep grid runner
+    /// relies on this: every cell derives its RNG from its own seed, so
+    /// parallel and serial runs are bitwise identical).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = f.clone();
+            let tx = tx.clone();
+            self.submit(move || {
+                let r = f(item);
+                // The receiver outlives all jobs (we recv exactly n
+                // below); a send failure means it panicked — propagate.
+                tx.send((i, r)).expect("pool map collector alive");
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("pool map worker delivered a result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|x| x.expect("pool map slot filled")).collect()
+    }
+}
+
+/// Worker count for parallel sweeps: the machine's logical cores, capped
+/// by the job count, minimum one.
+pub fn default_threads(jobs: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    cores.min(jobs.max(1))
 }
 
 impl Drop for ThreadPool {
@@ -155,6 +195,25 @@ mod tests {
             rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         }
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_preserves_order_and_completes() {
+        let pool = ThreadPool::new(4);
+        let items: Vec<u64> = (0..257).collect();
+        let out = pool.map(items.clone(), |x| x * 3 + 1);
+        assert_eq!(out, items.iter().map(|x| x * 3 + 1).collect::<Vec<_>>());
+        // Empty input and reuse of the same pool.
+        let empty: Vec<u64> = vec![];
+        assert!(pool.map(empty, |x| x).is_empty());
+        assert_eq!(pool.map(vec![7u64], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn default_threads_bounds() {
+        assert_eq!(default_threads(0), 1);
+        assert_eq!(default_threads(1), 1);
+        assert!(default_threads(1_000_000) >= 1);
     }
 
     #[test]

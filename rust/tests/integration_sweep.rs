@@ -1,0 +1,145 @@
+//! Integration over the multi-scenario sweep subsystem.
+//!
+//! 1. Per-scenario smoke: every registry entry actually simulates, and
+//!    the measured mean per-slot token load matches the scenario's
+//!    declared stationary `theta` (Lemma 4.1) within 10% — the registry's
+//!    declared moments and the simulator agree on every workload shape.
+//! 2. Determinism: the parallel grid runner's output — including the
+//!    emitted CSV and JSON byte streams — is bitwise identical to the
+//!    serial reference run of the same grid.
+
+use afd::config::experiment::ExperimentConfig;
+use afd::sim::engine::{simulate, SimOptions};
+use afd::sweep::emit;
+use afd::sweep::grid::{run_grid, run_grid_serial, SweepGrid};
+use afd::sweep::scenarios::{registry, resolve};
+
+#[test]
+fn every_scenario_simulates_and_matches_declared_theta_within_10pct() {
+    let b = 32usize;
+    for s in registry() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = s.spec.clone();
+        cfg.topology.batch_per_worker = b;
+        cfg.requests_per_instance = 400;
+        let r = 2;
+        let out = simulate(&cfg, r, SimOptions::default());
+        assert_eq!(out.completions.len(), cfg.requests_per_instance * r, "{}", s.name);
+        assert!(out.metrics.total_time > 0.0, "{}", s.name);
+        assert!(out.metrics.throughput_per_instance > 0.0, "{}", s.name);
+
+        let measured = out.metrics.mean_worker_load / b as f64;
+        let declared = s.expected_load().theta;
+        assert!(
+            (measured / declared - 1.0).abs() < 0.10,
+            "{}: measured mean slot load {measured:.1} vs declared theta {declared:.1}",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn declared_nu_is_positive_except_deterministic_stress() {
+    for s in registry() {
+        let load = s.expected_load();
+        if s.name == "deterministic-stress" {
+            // P and D fixed: the only stationary randomness is the age,
+            // uniform on {0..D-1} — variance (D^2 - 1)/12, tiny vs theta.
+            assert!(load.nu() < load.theta, "{}", s.name);
+        } else {
+            assert!(load.nu_sq > 0.0, "{}: nu^2 {}", s.name, load.nu_sq);
+        }
+    }
+}
+
+fn determinism_grid() -> (ExperimentConfig, SweepGrid) {
+    let mut base = ExperimentConfig::default();
+    base.requests_per_instance = 150;
+    let grid = SweepGrid {
+        scenarios: resolve("short-chat,heavy-tail-pareto,bursty-mixed-tenant").unwrap(),
+        ratios: vec![1, 2, 4],
+        batches: vec![16],
+    };
+    (base, grid)
+}
+
+#[test]
+fn parallel_grid_run_is_bitwise_identical_to_serial_reference() {
+    let (base, grid) = determinism_grid();
+    let par = run_grid(&base, &grid, SimOptions::default(), 4).unwrap();
+    let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+
+    assert_eq!(par.cells.len(), grid.cell_count());
+    assert_eq!(ser.cells.len(), grid.cell_count());
+    for (a, b) in par.cells.iter().zip(&ser.cells) {
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.metrics.r, b.metrics.r);
+        assert_eq!(a.metrics.batch, b.metrics.batch);
+        assert_eq!(a.metrics.completed, b.metrics.completed);
+        for (x, y) in [
+            (a.metrics.total_time, b.metrics.total_time),
+            (a.metrics.throughput_per_instance, b.metrics.throughput_per_instance),
+            (
+                a.metrics.delivered_throughput_per_instance,
+                b.metrics.delivered_throughput_per_instance,
+            ),
+            (a.metrics.tpot, b.metrics.tpot),
+            (a.metrics.idle_attention, b.metrics.idle_attention),
+            (a.metrics.idle_ffn, b.metrics.idle_ffn),
+            (a.metrics.mean_barrier_load, b.metrics.mean_barrier_load),
+            (a.metrics.mean_worker_load, b.metrics.mean_worker_load),
+            (a.theory_mf, b.theory_mf),
+            (a.theory_g, b.theory_g),
+            (a.load.theta, b.load.theta),
+            (a.load.nu_sq, b.load.nu_sq),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} r={}", a.scenario, a.metrics.r);
+        }
+    }
+
+    // The emitted artifacts are byte-identical too (CSV + JSON).
+    let csv_par = render_csv(&par);
+    let csv_ser = render_csv(&ser);
+    assert_eq!(csv_par, csv_ser);
+    assert_eq!(emit::to_json(&par).to_string_pretty(), emit::to_json(&ser).to_string_pretty());
+
+    // One CSV row per cell, with the theory-vs-sim columns present.
+    let table = emit::to_csv_table(&par);
+    assert_eq!(table.rows.len(), grid.cell_count());
+    for col in ["r_star_g", "sim_opt_r", "ratio_gap", "theory_thr_g", "sim_delivered"] {
+        table.col(col).unwrap();
+    }
+}
+
+fn render_csv(res: &afd::sweep::grid::SweepResults) -> String {
+    let t = emit::to_csv_table(res);
+    let mut s = t.header.join(",");
+    for row in &t.rows {
+        s.push('\n');
+        s.push_str(&row.join(","));
+    }
+    s
+}
+
+#[test]
+fn repeated_parallel_runs_are_reproducible() {
+    let (base, grid) = determinism_grid();
+    let a = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+    let b = run_grid(&base, &grid, SimOptions::default(), 5).unwrap();
+    assert_eq!(render_csv(&a), render_csv(&b));
+}
+
+#[test]
+fn group_summaries_pick_grid_members_and_report_gap() {
+    let (base, grid) = determinism_grid();
+    let res = run_grid(&base, &grid, SimOptions::default(), 0).unwrap();
+    assert_eq!(res.groups.len(), grid.scenarios.len() * grid.batches.len());
+    for g in &res.groups {
+        assert!(grid.ratios.contains(&g.r_star_g), "{}: r*_G {}", g.scenario, g.r_star_g);
+        assert!(grid.ratios.contains(&g.sim_opt_r), "{}: sim-opt {}", g.scenario, g.sim_opt_r);
+        let expect_gap = (g.r_star_g as f64 - g.sim_opt_r as f64).abs() / g.sim_opt_r as f64;
+        assert_eq!(g.ratio_gap.to_bits(), expect_gap.to_bits(), "{}", g.scenario);
+        assert!(g.theory_peak > 0.0 && g.sim_peak > 0.0, "{}", g.scenario);
+    }
+}

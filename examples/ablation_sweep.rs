@@ -23,11 +23,11 @@ fn main() -> afd::Result<()> {
     base.requests_per_instance = 2_000; // interactive scale
 
     // --- Fig. 4a analogue: batch-size ablation on the paper workload ---
-    let grid_4a = SweepGrid {
-        scenarios: scenarios::resolve("paper-geometric")?,
-        ratios: vec![2, 4, 6, 8, 10, 12, 16],
-        batches: vec![128, 256, 512],
-    };
+    let grid_4a = SweepGrid::new(
+        scenarios::resolve("paper-geometric")?,
+        vec![2, 4, 6, 8, 10, 12, 16],
+        vec![128, 256, 512],
+    );
     let res_4a = run_grid(&base, &grid_4a, SimOptions::default(), 0)?;
     let mut t = Table::new(&["B", "r*_G (theory)", "sim-opt r", "peak Thr/inst"])
         .with_title("Batch-size ablation (Fig. 4a, reduced scale)");
@@ -42,11 +42,11 @@ fn main() -> afd::Result<()> {
     t.print();
 
     // --- Fig. 4b analogue: workload ablation at the paper batch size ---
-    let grid_4b = SweepGrid {
-        scenarios: scenarios::resolve("short-chat,paper-geometric,long-context")?,
-        ratios: vec![2, 4, 6, 8, 10, 12, 16],
-        batches: vec![256],
-    };
+    let grid_4b = SweepGrid::new(
+        scenarios::resolve("short-chat,paper-geometric,long-context")?,
+        vec![2, 4, 6, 8, 10, 12, 16],
+        vec![256],
+    );
     let res_4b = run_grid(&base, &grid_4b, SimOptions::default(), 0)?;
     let mut t = Table::new(&["workload", "theta", "r*_G (theory)", "sim-opt r"])
         .with_title("Workload ablation (Fig. 4b, reduced scale)");

@@ -10,7 +10,7 @@
 use afd::analysis::provisioning::recommend_from_load;
 use afd::config::experiment::ExperimentConfig;
 use afd::config::hardware::HardwareParams;
-use afd::sim::engine::{simulate, SimOptions};
+use afd::sim::session::Simulation;
 use afd::workload::stationary::stationary_geometric;
 
 fn main() -> afd::Result<()> {
@@ -39,7 +39,9 @@ fn main() -> afd::Result<()> {
     cfg.requests_per_instance = 5_000;
     let r_star = rec.barrier_aware.r_star;
     for r in [r_star / 2, r_star, r_star * 2] {
-        let m = simulate(&cfg, r.max(1), SimOptions::default()).metrics;
+        // The session builder defaults reproduce the classic closed-loop
+        // run; plug in OpenLoopPoisson / TraceReplay to change regimes.
+        let m = Simulation::builder(&cfg, r.max(1)).build()?.run().metrics;
         println!(
             "sim r = {:>2}: throughput/instance = {:.4} tokens/cycle (idle_A {:.0}%, idle_F {:.0}%)",
             m.r,

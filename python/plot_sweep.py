@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Regenerate Fig. 3/4-style plots from `afd sweep` CSV output.
+
+Reads the per-cell CSV written by `afd sweep --csv bench_out/sweep.csv`
+(schema: rust/src/sweep/emit.rs::CSV_HEADER) and emits:
+
+  * fig3_<scenario>_<arrival>.png — throughput vs r: simulated delivered
+    rate against the mean-field and Gaussian barrier-aware theory curves
+    (one figure per scenario x arrival x batch group);
+  * fig4_ratio_optima.png — r*_G (theory) vs sim-opt r per group, the
+    paper's "within 10%" comparison;
+  * open-loop groups additionally get fig_queue_<scenario>.png with the
+    rejection fraction and mean queue wait vs r.
+
+`--check` validates the CSV schema and numeric parses without importing
+matplotlib or opening a display — the CI gate after the mini-grid sweep.
+
+Usage:
+  python3 python/plot_sweep.py --csv bench_out/sweep.csv --out-dir bench_out
+  python3 python/plot_sweep.py --csv bench_out/sweep.csv --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+# Must match rust/src/sweep/emit.rs::CSV_HEADER exactly.
+EXPECTED_HEADER = [
+    "scenario", "r", "batch", "seed", "theta", "nu",
+    "sim_throughput", "sim_delivered", "tpot",
+    "idle_attention", "idle_ffn",
+    "theory_thr_mf", "theory_thr_g",
+    "r_star_g", "sim_opt_r", "ratio_gap",
+    "completed", "total_time",
+    "arrival", "lambda", "offered", "admitted", "rejected",
+    "mean_queue_wait", "mean_queue_len",
+]
+
+INT_COLS = {"r", "batch", "r_star_g", "sim_opt_r", "completed",
+            "offered", "admitted", "rejected"}
+STR_COLS = {"scenario", "seed", "arrival"}
+
+
+def load_rows(path: str) -> list[dict]:
+    with open(path, newline="") as f:
+        reader = csv.reader(f)
+        try:
+            header = next(reader)
+        except StopIteration:
+            raise SystemExit(f"error: {path} is empty")
+        if header != EXPECTED_HEADER:
+            missing = [c for c in EXPECTED_HEADER if c not in header]
+            extra = [c for c in header if c not in EXPECTED_HEADER]
+            raise SystemExit(
+                f"error: {path} schema mismatch\n"
+                f"  missing columns: {missing}\n  unexpected columns: {extra}\n"
+                f"  (expected the header of rust/src/sweep/emit.rs::CSV_HEADER)"
+            )
+        rows = []
+        for lineno, raw in enumerate(reader, start=2):
+            if len(raw) != len(header):
+                raise SystemExit(
+                    f"error: {path}:{lineno}: {len(raw)} fields, expected {len(header)}"
+                )
+            row: dict = {}
+            for key, value in zip(header, raw):
+                if key in STR_COLS:
+                    row[key] = value
+                elif key in INT_COLS:
+                    try:
+                        row[key] = int(value)
+                    except ValueError:
+                        raise SystemExit(
+                            f"error: {path}:{lineno}: column {key!r} = {value!r} is not an int"
+                        )
+                else:
+                    try:
+                        row[key] = float(value)
+                    except ValueError:
+                        raise SystemExit(
+                            f"error: {path}:{lineno}: column {key!r} = {value!r} is not a float"
+                        )
+            rows.append(row)
+    if not rows:
+        raise SystemExit(f"error: {path} has a header but no data rows")
+    return rows
+
+
+def groups_of(rows: list[dict]) -> dict[tuple, list[dict]]:
+    out: dict[tuple, list[dict]] = {}
+    for row in rows:
+        out.setdefault((row["scenario"], row["arrival"], row["batch"]), []).append(row)
+    for cells in out.values():
+        cells.sort(key=lambda c: c["r"])
+    return out
+
+
+def slug(text: str) -> str:
+    return "".join(ch if ch.isalnum() else "-" for ch in text).strip("-")
+
+
+def check(rows: list[dict]) -> None:
+    grouped = groups_of(rows)
+    for (scenario, arrival, batch), cells in grouped.items():
+        rs = [c["r"] for c in cells]
+        if len(set(rs)) != len(rs):
+            raise SystemExit(
+                f"error: duplicate r values in group ({scenario}, {arrival}, B={batch}): {rs}"
+            )
+        for c in cells:
+            if c["arrival"] == "open-poisson" and c["lambda"] <= 0.0:
+                raise SystemExit(
+                    f"error: open-poisson cell ({scenario}, r={c['r']}) has lambda <= 0"
+                )
+    print(
+        f"ok: {len(rows)} cells in {len(grouped)} group(s); "
+        f"arrivals: {sorted({r['arrival'] for r in rows})}"
+    )
+
+
+def plot(rows: list[dict], out_dir: str) -> None:
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    os.makedirs(out_dir, exist_ok=True)
+    grouped = groups_of(rows)
+    written = []
+
+    # Fig. 3 style: throughput vs r per group, theory overlaid.
+    for (scenario, arrival, batch), cells in grouped.items():
+        rs = [c["r"] for c in cells]
+        fig, ax = plt.subplots(figsize=(6.0, 4.0))
+        ax.plot(rs, [c["sim_delivered"] for c in cells],
+                "o-", label="simulation (delivered)")
+        ax.plot(rs, [c["theory_thr_mf"] for c in cells],
+                "--", label=r"theory $Thr_{mf}$ (Eq. 8)")
+        ax.plot(rs, [c["theory_thr_g"] for c in cells],
+                "-.", label=r"theory $Thr_G$ (Eq. 9/11)")
+        ax.axvline(cells[0]["r_star_g"], color="gray", lw=0.8,
+                   label=r"$r^*_G$ (Eq. 12)")
+        ax.set_xlabel("Attention:FFN ratio r")
+        ax.set_ylabel("throughput per instance (tokens/cycle)")
+        ax.set_title(f"{scenario} — {arrival}, B={batch}")
+        ax.legend(fontsize=8)
+        fig.tight_layout()
+        name = f"fig3_{slug(scenario)}_{slug(arrival)}_B{batch}.png"
+        fig.savefig(os.path.join(out_dir, name), dpi=150)
+        plt.close(fig)
+        written.append(name)
+
+        if arrival == "open-poisson":
+            fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(8.0, 3.2))
+            rej = [
+                c["rejected"] / c["offered"] if c["offered"] else 0.0 for c in cells
+            ]
+            ax1.plot(rs, rej, "s-")
+            ax1.set_xlabel("r")
+            ax1.set_ylabel("rejection fraction")
+            ax1.set_title("admission rejections")
+            ax2.plot(rs, [c["mean_queue_wait"] for c in cells], "s-")
+            ax2.set_xlabel("r")
+            ax2.set_ylabel("mean queue wait (cycles)")
+            ax2.set_title("queueing delay")
+            fig.suptitle(f"{scenario} — open loop, B={batch}", fontsize=10)
+            fig.tight_layout()
+            name = f"fig_queue_{slug(scenario)}_B{batch}.png"
+            fig.savefig(os.path.join(out_dir, name), dpi=150)
+            plt.close(fig)
+            written.append(name)
+
+    # Fig. 4 style: theory vs simulation optima across groups.
+    labels, theory, sim = [], [], []
+    for (scenario, arrival, batch), cells in sorted(grouped.items()):
+        labels.append(f"{scenario}\n{arrival}, B={batch}")
+        theory.append(cells[0]["r_star_g"])
+        sim.append(cells[0]["sim_opt_r"])
+    x = range(len(labels))
+    fig, ax = plt.subplots(figsize=(max(6.0, 1.2 * len(labels)), 4.0))
+    width = 0.38
+    ax.bar([i - width / 2 for i in x], theory, width, label=r"theory $r^*_G$")
+    ax.bar([i + width / 2 for i in x], sim, width, label="simulation optimum")
+    ax.set_xticks(list(x))
+    ax.set_xticklabels(labels, fontsize=7)
+    ax.set_ylabel("optimal r")
+    ax.set_title("provisioning rule vs simulation (Fig. 4 style)")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out_dir, "fig4_ratio_optima.png"), dpi=150)
+    plt.close(fig)
+    written.append("fig4_ratio_optima.png")
+
+    for name in written:
+        print(f"wrote {os.path.join(out_dir, name)}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--csv", default="bench_out/sweep.csv",
+                    help="per-cell CSV from `afd sweep --csv` (default %(default)s)")
+    ap.add_argument("--out-dir", default="bench_out",
+                    help="directory for PNGs (default %(default)s)")
+    ap.add_argument("--check", action="store_true",
+                    help="schema-validate only: no display, no matplotlib import")
+    args = ap.parse_args()
+
+    rows = load_rows(args.csv)
+    check(rows)
+    if args.check:
+        return 0
+    plot(rows, args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,87 @@ fn main() {
         );
     }
 
+    println!("\n== lane scheduling (BinaryHeap vs legacy linear min-scan) ==");
+    {
+        // Bench guard for the heap replacement of the O(lanes) ready-time
+        // min-scan: full-engine runs at the default pipelining depth
+        // (no-regression check) and deep pipelining (the win case), plus
+        // a pure selection microbench at both scales.
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 32;
+        cfg.requests_per_instance = 200;
+        for &m in &[3usize, 16, 64] {
+            let res = bench(&format!("session r=4 B=32 m={m}"), cfg_fast, || {
+                simulate(
+                    &cfg,
+                    4,
+                    SimOptions { batches_in_flight: m, ..SimOptions::default() },
+                )
+                .metrics
+                .completed
+            });
+            println!("{}", res.summary());
+        }
+
+        // Pure next-lane selection: K pop/update rounds over m lanes.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let rounds = 200_000usize;
+        for &m in &[3usize, 16, 64, 256] {
+            let mut rng = Pcg64::new(42);
+            let increments: Vec<f64> =
+                (0..rounds).map(|_| 1.0 + rng.next_f64()).collect();
+
+            let scan = bench(&format!("linear min-scan m={m}"), cfg_fast, || {
+                let mut ready: Vec<f64> = (0..m).map(|g| g as f64 * 0.1).collect();
+                let mut acc = 0.0f64;
+                for inc in &increments {
+                    let g = (0..m)
+                        .min_by(|&a, &b| ready[a].partial_cmp(&ready[b]).unwrap())
+                        .unwrap();
+                    acc += ready[g];
+                    ready[g] += inc;
+                }
+                acc
+            });
+            let heap = bench(&format!("binary heap    m={m}"), cfg_fast, || {
+                #[derive(PartialEq)]
+                struct Key(f64, usize);
+                impl Eq for Key {}
+                impl Ord for Key {
+                    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                        self.0.partial_cmp(&o.0).unwrap().then(self.1.cmp(&o.1))
+                    }
+                }
+                impl PartialOrd for Key {
+                    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                        Some(self.cmp(o))
+                    }
+                }
+                let mut heap: BinaryHeap<Reverse<Key>> =
+                    (0..m).map(|g| Reverse(Key(g as f64 * 0.1, g))).collect();
+                let mut acc = 0.0f64;
+                for inc in &increments {
+                    let Reverse(Key(t, g)) = heap.pop().unwrap();
+                    acc += t;
+                    heap.push(Reverse(Key(t + inc, g)));
+                }
+                acc
+            });
+            let speedup = scan.mean_secs / heap.mean_secs;
+            println!(
+                "{}\n{}\n  -> heap speedup at m={m}: {speedup:.2}x {}",
+                scan.summary(),
+                heap.summary(),
+                if m <= 3 {
+                    "(guard: parity expected at the default depth)"
+                } else {
+                    "(guard: heap must win as lanes grow)"
+                }
+            );
+        }
+    }
+
     println!("\n== L3 analysis math ==");
     {
         let res = bench("kappa_r quadrature (cold, r=24)", cfg_fast, || {

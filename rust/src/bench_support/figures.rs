@@ -36,7 +36,8 @@ pub struct Fig3Data {
 
 /// Build the Fig. 3 dataset: simulate the sweep and overlay theory.
 ///
-/// The sweep runs one ratio per pool worker ([`parallel_sweep_ratios`]);
+/// The sweep runs one closed-loop simulation session per pool worker
+/// ([`parallel_sweep_ratios`], built on `sim::session::Simulation`);
 /// per-ratio results are bitwise identical to the serial
 /// `sim::engine::sweep_ratios` (every cell reseeds from the config), so
 /// parallelism changes wall-clock only.

@@ -22,11 +22,16 @@
 //!   the Gaussian cycle time Eq. (9), and the provisioning rules
 //!   `r*_mf` / `r*_G` (Eq. 10 / Eq. 12).
 //! * [`sim`] — the trace-calibrated discrete-event AFD simulator of §5.1
-//!   (six-state batch FSM, two batches in flight, continuous batching).
+//!   (six-state batch FSM, pipelined batches in flight, continuous
+//!   batching), exposed through the composable `sim::session` API:
+//!   pluggable arrival processes (closed-loop / open-loop Poisson with
+//!   bounded admission), length sources (synthetic / sharded trace
+//!   replay), and step/completion/idle observers.
 //! * [`sweep`] — the multi-scenario parallel sweep subsystem: a named
-//!   workload-scenario registry, a deterministic (scenario × r × B)
-//!   grid runner on the crate thread pool, and CSV/JSON emission with
-//!   theory-vs-simulation gap columns.
+//!   workload-scenario registry (synthetic + trace replay), a
+//!   deterministic (scenario × arrival × r × B) grid runner on the
+//!   crate thread pool, and CSV/JSON emission with theory-vs-simulation
+//!   gap and queueing/rejection columns.
 //! * [`coordinator`] — the serving-side coordination layer: routing,
 //!   continuous batching admission, KV slot management, step scheduling
 //!   with a cross-worker barrier, bundle topology, online autoscaling.

@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   provision   compute r*_mf / r*_G from workload parameters or a trace
-//!   simulate    run the discrete-event simulator for one ratio
-//!   sweep       parallel multi-scenario (scenario x r x B) grid sweep
+//!   simulate    run one simulation session (aliases: sim; supports
+//!               --trace replay and --arrival open|closed)
+//!   sweep       parallel multi-scenario (scenario x arrival x r x B) sweep
 //!   estimate    estimate (theta, nu^2) from a trace CSV
 //!   serve       run the real PJRT serving engine on the demo model
 //!   gen-trace   generate a synthetic production-like trace CSV
@@ -13,7 +14,7 @@ use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::{recommend_from_load, recommend_from_trace};
 use afd::config::experiment::ExperimentConfig;
 use afd::error::Result;
-use afd::sim::engine::{simulate, SimOptions};
+use afd::sim::session::{OpenLoopPoisson, Simulation, TraceReplay};
 use afd::util::cli::{Args, HelpBuilder};
 use afd::util::tablefmt::{sig, Table};
 use afd::workload::stationary::stationary_for_spec;
@@ -42,7 +43,7 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("provision") => provision(args),
-        Some("simulate") => cmd_simulate(args),
+        Some("simulate") | Some("sim") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
         Some("estimate") => cmd_estimate(args),
         Some("serve") => cmd_serve(args),
@@ -53,8 +54,8 @@ fn run(args: &Args) -> Result<()> {
                 "{}",
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
-                    .entry("simulate", "run the discrete-event AFD simulator at --r")
-                    .entry("sweep", "parallel multi-scenario (scenario x r x B) sweep with theory-vs-sim columns")
+                    .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed)")
+                    .entry("sweep", "parallel (scenario x arrival x r x B) sweep with theory-vs-sim columns")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
@@ -94,12 +95,49 @@ fn provision(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `afd simulate` / `afd sim`: run one simulation session.
+///
+/// Options:
+///   --r N                fan-in (default 8)
+///   --requests N         completions per Attention instance
+///   --batch B            per-worker microbatch size
+///   --trace PATH         replay a prefill,decode CSV with deterministic
+///                        per-(lane, worker) sharding (instead of
+///                        synthetic sampling from the config workload)
+///   --arrival closed|open  arrival process (default closed)
+///   --lambda X           open-loop arrival rate in requests/cycle
+///   --queue N            open-loop admission-queue capacity (default 4096)
+///   --completions-csv P  write the completion records as CSV
 fn cmd_simulate(args: &Args) -> Result<()> {
     let mut cfg = load_config(args)?;
     cfg.requests_per_instance = args.get_usize("requests", cfg.requests_per_instance)?;
     cfg.topology.batch_per_worker = args.get_usize("batch", cfg.topology.batch_per_worker)?;
     let r = args.get_usize("r", 8)?;
-    let out = simulate(&cfg, r, SimOptions::default());
+    let mut builder = Simulation::builder(&cfg, r);
+    if let Some(path) = args.get("trace") {
+        let trace = Trace::load_csv(path)?;
+        println!("replaying {} requests from {path} (sharded per lane x worker)", trace.len());
+        builder = builder.length_source(TraceReplay::new(&trace)?);
+    }
+    match args.get_str("arrival", "closed").as_str() {
+        "closed" => {}
+        "open" => {
+            let lambda = args.get_f64("lambda", 0.0)?;
+            if lambda <= 0.0 {
+                return Err(afd::AfdError::config(
+                    "--arrival open requires --lambda <requests/cycle> (> 0)",
+                ));
+            }
+            let queue = args.get_usize("queue", 4096)?;
+            builder = builder.arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed)?);
+        }
+        other => {
+            return Err(afd::AfdError::config(format!(
+                "unknown arrival process {other:?}; expected closed|open"
+            )));
+        }
+    }
+    let out = builder.build()?.run();
     let m = &out.metrics;
     println!("r = {r}, B = {}", m.batch);
     println!("throughput/instance = {:.6} tokens/cycle", m.throughput_per_instance);
@@ -107,15 +145,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("idle: attention {:.2}%, ffn {:.2}%", 100.0 * m.idle_attention, 100.0 * m.idle_ffn);
     println!("mean barrier load = {:.1}, mean worker load = {:.1}", m.mean_barrier_load, m.mean_worker_load);
     println!("completed {} requests in {:.0} cycles", m.completed, m.total_time);
+    let a = &out.arrival;
+    if a.kind != "closed" {
+        println!(
+            "arrivals ({}, lambda = {:.5}/cycle): offered {}, admitted {}, rejected {}",
+            a.kind, a.lambda, a.offered, a.admitted, a.rejected
+        );
+        println!(
+            "queue: mean wait {:.2} cycles, mean length {:.2}",
+            a.mean_queue_wait, a.mean_queue_len
+        );
+    }
+    if let Some(path) = args.get("completions-csv") {
+        afd::server::metrics_export::completions_to_csv_table(&out.completions)
+            .write_path(path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
-/// `afd sweep`: run the (scenario × r × B) cross-product in parallel and
-/// print the theory-vs-simulation summary (Fig. 3 across workloads).
+/// `afd sweep`: run the (scenario × arrival × r × B) cross-product in
+/// parallel and print the theory-vs-simulation summary (Fig. 3 across
+/// workloads and arrival regimes).
 ///
 /// Options:
-///   --scenarios all|name,name   registry selection (default all);
+///   --scenarios all|trace:*|name,name  registry selection (default all);
 ///                               `config` sweeps the config's [workload]
+///   --arrival closed|open|both  arrival-process axis (default closed)
+///   --rho X                     open-loop utilization target (default 0.85)
+///   --lambda X                  open-loop absolute rate override (req/cycle)
+///   --queue N                   open-loop queue capacity (default 4096)
 ///   --ratios 1,2,4,...          fan-in grid (default config ratio_sweep)
 ///   --batches 256,...           per-worker batch grid (default config B)
 ///   --requests N                completions per Attention instance
@@ -125,8 +184,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///   --csv PATH / --json PATH    write per-cell results
 ///   --list                      print the scenario registry and exit
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use afd::sim::engine::SimOptions;
     use afd::sweep::emit;
-    use afd::sweep::grid::{run_grid, run_grid_serial, SweepGrid};
+    use afd::sweep::grid::{run_grid, run_grid_serial, ArrivalSpec, SweepGrid};
     use afd::sweep::scenarios;
     use afd::util::tablefmt::Align;
 
@@ -134,8 +194,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mut t = Table::new(&["scenario", "description", "theta"])
             .align(0, Align::Left)
             .align(1, Align::Left)
-            .with_title("Workload scenario registry");
-        for s in scenarios::registry() {
+            .with_title("Workload scenario registry (synthetic + trace replay)");
+        for s in scenarios::full_registry() {
             t.row(&[s.name.to_string(), s.description.to_string(), sig(s.expected_load().theta, 4)]);
         }
         t.print();
@@ -153,19 +213,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             name: "config",
             description: "the [workload] table of the loaded experiment config",
             spec: cfg.workload.clone(),
+            source: afd::sweep::SourceSpec::Synthetic,
         }]
     } else {
         scenarios::resolve(&selector)?
     };
-    let grid = SweepGrid {
-        scenarios: selected,
-        ratios: args.get_list_usize("ratios", &cfg.ratio_sweep)?,
-        batches: args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
+    let open_spec = ArrivalSpec::Open {
+        rho: args.get_f64("rho", 0.85)?,
+        lambda: match args.get("lambda") {
+            Some(_) => Some(args.get_f64("lambda", 0.0)?),
+            None => None,
+        },
+        queue_capacity: args.get_usize("queue", 4096)?,
     };
+    let arrivals = match args.get_str("arrival", "closed").as_str() {
+        "closed" => vec![ArrivalSpec::Closed],
+        "open" => vec![open_spec],
+        "both" => vec![ArrivalSpec::Closed, open_spec],
+        other => {
+            return Err(afd::AfdError::config(format!(
+                "unknown arrival axis {other:?}; expected closed|open|both"
+            )));
+        }
+    };
+    let grid = SweepGrid::new(
+        selected,
+        args.get_list_usize("ratios", &cfg.ratio_sweep)?,
+        args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
+    )
+    .with_arrivals(arrivals);
     let threads = args.get_usize("threads", 0)?;
     println!(
-        "sweeping {} scenario(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
+        "sweeping {} scenario(s) x {} arrival(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
         grid.scenarios.len(),
+        grid.arrivals.len(),
         grid.ratios.len(),
         grid.batches.len(),
         grid.cell_count(),

@@ -27,6 +27,30 @@ pub fn closed_loop_requests(n: usize, prefill: u64, decode_budget: u64, seed: u6
         .collect()
 }
 
+/// Open-loop request set: lengths from a [`WorkloadSpec`], arrival
+/// times stamped by a Poisson process at `lambda` requests per second —
+/// the serving-engine counterpart of the simulator's
+/// [`crate::sim::session::OpenLoopPoisson`] arrival process (same
+/// exponential-gap construction), so real-engine runs can be driven by
+/// the same traffic model the simulator was provisioned under.
+pub fn poisson_requests_from_spec(
+    spec: &WorkloadSpec,
+    n: usize,
+    kv_capacity: u64,
+    lambda: f64,
+    seed: u64,
+) -> Vec<ServingRequest> {
+    assert!(lambda > 0.0 && lambda.is_finite(), "lambda must be positive");
+    let mut requests = requests_from_spec(spec, n, kv_capacity, seed);
+    let mut rng = Pcg64::new(seed ^ 0xA441_11AA);
+    let mut t = 0.0f64;
+    for req in &mut requests {
+        t += -rng.next_f64_open().ln() / lambda;
+        req.arrival = t;
+    }
+    requests
+}
+
 /// Request set drawn from a [`WorkloadSpec`], with budgets clamped so
 /// every request fits the model's KV capacity.
 pub fn requests_from_spec(
@@ -91,5 +115,22 @@ mod tests {
         let a = requests_from_spec(&spec, 50, 128, 3);
         let b = requests_from_spec(&spec, 50, 128, 3);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn poisson_arrivals_increase_at_roughly_lambda() {
+        let spec = WorkloadSpec::paper_section5();
+        let lambda = 4.0;
+        let reqs = poisson_requests_from_spec(&spec, 2_000, 128, lambda, 11);
+        assert!(reqs.windows(2).all(|w| w[1].arrival > w[0].arrival));
+        let horizon = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / horizon;
+        assert!(
+            (rate / lambda - 1.0).abs() < 0.1,
+            "empirical rate {rate} vs lambda {lambda}"
+        );
+        // Same seed, same stream.
+        let again = poisson_requests_from_spec(&spec, 2_000, 128, lambda, 11);
+        assert_eq!(reqs, again);
     }
 }

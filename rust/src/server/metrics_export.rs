@@ -1,11 +1,23 @@
-//! Metric export: serving reports and simulator metrics as JSON/CSV for
-//! downstream analysis and the EXPERIMENTS.md tables.
+//! Metric export: serving reports, simulator metrics, and session
+//! outputs as JSON/CSV for downstream analysis and the EXPERIMENTS.md
+//! tables.
+//!
+//! With the `sim::session` redesign this module owns the byte-stable
+//! serialization of simulation outputs (completions CSV + metrics JSON)
+//! that the closed-loop regression test compares against the frozen
+//! reference engine, plus [`CompletionCsvExporter`] — a
+//! [`SimObserver`] that streams completions out of the engine loop as
+//! they happen (metric collection is no longer welded into the engine).
 
+use std::cell::RefCell;
 use std::path::Path;
+use std::rc::Rc;
 
 use crate::error::Result;
 use crate::server::engine::ServingReport;
 use crate::sim::metrics::SimMetrics;
+use crate::sim::session::{ArrivalStats, SimObserver};
+use crate::sim::slots::Completion;
 use crate::util::csvio::CsvTable;
 use crate::util::json::Json;
 
@@ -64,6 +76,112 @@ pub fn sim_sweep_to_csv(metrics: &[SimMetrics], path: impl AsRef<Path>) -> Resul
     t.write_path(path)
 }
 
+/// Header of the completions CSV ([`completions_to_csv_table`]).
+pub const COMPLETIONS_CSV_HEADER: [&str; 3] = ["finish_time", "admit_time", "decode_len"];
+
+/// Append one completion row (the single formatting authority shared by
+/// the post-hoc table builder and the streaming exporter — their
+/// byte-compatibility contract lives here).
+fn push_completion_row(t: &mut CsvTable, c: &Completion) {
+    // Rust's shortest round-trip float formatting: bitwise-identical
+    // simulations emit byte-identical tables.
+    t.push_row(&[
+        format!("{}", c.finish_time),
+        format!("{}", c.admit_time),
+        c.decode_len.to_string(),
+    ]);
+}
+
+/// Completion records as a CSV table (byte-stable; see
+/// `push_completion_row`).
+pub fn completions_to_csv_table(completions: &[Completion]) -> CsvTable {
+    let mut t = CsvTable::new(&COMPLETIONS_CSV_HEADER);
+    for c in completions {
+        push_completion_row(&mut t, c);
+    }
+    t
+}
+
+/// Render a CSV table to a single string (header + newline-joined rows).
+pub fn csv_to_string(t: &CsvTable) -> String {
+    let mut s = t.header.join(",");
+    for row in &t.rows {
+        s.push('\n');
+        s.push_str(&row.join(","));
+    }
+    s.push('\n');
+    s
+}
+
+/// Completion records as one CSV string.
+pub fn completions_to_csv_string(completions: &[Completion]) -> String {
+    csv_to_string(&completions_to_csv_table(completions))
+}
+
+/// Simulator metrics as JSON (byte-stable for identical runs).
+pub fn sim_metrics_to_json(m: &SimMetrics) -> Json {
+    Json::obj()
+        .set("r", Json::Num(m.r as f64))
+        .set("batch", Json::Num(m.batch as f64))
+        .set("throughput_per_instance", Json::Num(m.throughput_per_instance))
+        .set(
+            "delivered_throughput_per_instance",
+            Json::Num(m.delivered_throughput_per_instance),
+        )
+        .set("tpot", Json::Num(m.tpot))
+        .set("idle_attention", Json::Num(m.idle_attention))
+        .set("idle_ffn", Json::Num(m.idle_ffn))
+        .set("total_time", Json::Num(m.total_time))
+        .set("completed", Json::Num(m.completed as f64))
+        .set("mean_barrier_load", Json::Num(m.mean_barrier_load))
+        .set("mean_worker_load", Json::Num(m.mean_worker_load))
+}
+
+/// Arrival-process statistics as JSON.
+pub fn arrival_stats_to_json(a: &ArrivalStats) -> Json {
+    Json::obj()
+        .set("kind", Json::Str(a.kind.to_string()))
+        .set("lambda", Json::Num(a.lambda))
+        .set("offered", Json::Num(a.offered as f64))
+        .set("admitted", Json::Num(a.admitted as f64))
+        .set("rejected", Json::Num(a.rejected as f64))
+        .set("mean_queue_wait", Json::Num(a.mean_queue_wait))
+        .set("mean_queue_len", Json::Num(a.mean_queue_len))
+}
+
+/// A [`SimObserver`] that streams completion records into a shared CSV
+/// table as the simulation runs — the metrics-export path expressed as
+/// an observer instead of post-hoc engine-output walking.
+pub struct CompletionCsvExporter {
+    table: Rc<RefCell<CsvTable>>,
+}
+
+impl CompletionCsvExporter {
+    pub fn new() -> Self {
+        Self { table: Rc::new(RefCell::new(CsvTable::new(&COMPLETIONS_CSV_HEADER))) }
+    }
+
+    /// Shared handle to the table; read it after `Simulation::run`.
+    pub fn handle(&self) -> Rc<RefCell<CsvTable>> {
+        self.table.clone()
+    }
+}
+
+impl Default for CompletionCsvExporter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimObserver for CompletionCsvExporter {
+    fn on_completions(&mut self, _now: f64, completions: &[Completion]) {
+        let mut t = self.table.borrow_mut();
+        for c in completions {
+            push_completion_row(&mut t, c);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +238,57 @@ mod tests {
         assert_eq!(t.rows.len(), 1);
         assert_eq!(t.column_u64("r").unwrap(), vec![8]);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn completions_csv_is_byte_stable() {
+        let completions = vec![
+            Completion { finish_time: 1234.5678901234, admit_time: 0.25, decode_len: 7 },
+            Completion { finish_time: 2000.0, admit_time: 1234.5678901234, decode_len: 3 },
+        ];
+        let a = completions_to_csv_string(&completions);
+        let b = completions_to_csv_string(&completions);
+        assert_eq!(a, b);
+        assert!(a.starts_with("finish_time,admit_time,decode_len\n"));
+        assert_eq!(a.lines().count(), 3);
+        // Shortest round-trip float formatting is lossless.
+        let table = completions_to_csv_table(&completions);
+        let back = table.column_f64("finish_time").unwrap();
+        assert_eq!(back[0].to_bits(), 1234.5678901234f64.to_bits());
+    }
+
+    #[test]
+    fn streaming_exporter_matches_post_hoc_export() {
+        use crate::config::experiment::ExperimentConfig;
+        use crate::sim::session::Simulation;
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 8;
+        cfg.requests_per_instance = 40;
+        let exporter = CompletionCsvExporter::new();
+        let handle = exporter.handle();
+        let out = Simulation::builder(&cfg, 2)
+            .observer(exporter)
+            .build()
+            .unwrap()
+            .run();
+        // The stream saw every completion (pre-sort, pre-truncation:
+        // possibly a few extra from the final step).
+        let streamed = handle.borrow();
+        assert!(streamed.rows.len() >= out.completions.len());
+        // Sorted + truncated post-hoc export is a subset by multiset.
+        let post = completions_to_csv_table(&out.completions);
+        assert_eq!(post.rows.len(), out.completions.len());
+        for row in &post.rows {
+            assert!(streamed.rows.contains(row), "missing streamed row {row:?}");
+        }
+    }
+
+    #[test]
+    fn arrival_stats_json_has_queueing_fields() {
+        let a = ArrivalStats::closed();
+        let j = arrival_stats_to_json(&a);
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.field("kind").unwrap().as_str().unwrap(), "closed");
+        assert_eq!(back.field("rejected").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -56,6 +56,8 @@ pub struct StepRecord {
     pub step: u64,
     /// Barrier token load max_j T_j for this step.
     pub barrier_load: u64,
+    /// Mean per-worker token load (1/r) Σ_j T_j for this step.
+    pub mean_load: f64,
     pub attention_start: f64,
     pub attention_end: f64,
     pub ffn_start: f64,
@@ -109,6 +111,7 @@ mod tests {
             batch: 0,
             step: 1,
             barrier_load: 100,
+            mean_load: 80.0,
             attention_start: 0.0,
             attention_end: 10.0,
             ffn_start: 12.0,

@@ -1,23 +1,32 @@
-//! The discrete-event AFD simulator (paper §5.1).
+//! Legacy entry points to the discrete-event AFD simulator (paper §5.1).
 //!
-//! Simulates an `rA–1F` bundle cycle-by-cycle. Each of the two in-flight
-//! `Batch` objects cycles through the six-state FSM (Attention -> A2F ->
-//! WaitingFfn -> FFN -> F2A -> WaitingAttention); the shared FFN server
-//! and the r Attention workers are the contended resources, so FFN work
-//! on one batch overlaps Attention work on the other — the interleaved
-//! two-batch schedule the paper describes for masking transfer latency.
+//! The engine loop itself lives in [`crate::sim::session`]: a composable
+//! `Simulation` builder over pluggable arrival processes, length sources,
+//! and observers. This module keeps the original free-function surface:
 //!
-//! Time is continuous (f64 "cycles", matching Table 3 units). The engine
-//! advances whichever batch is ready earliest; resource acquisition is in
-//! arrival order. Within the Attention phase, worker j starts when both
-//! the batch's data is ready (previous F2A done) and worker j is free
-//! (it may still be computing the other batch); the phase completes at
-//! the *barrier* — the slowest worker (paper §3.3's `W_{B,r}`).
+//! * [`simulate`] — **deprecated shim**: builds a closed-loop session
+//!   from [`SimOptions`] and runs it. Its output is byte-identical to
+//!   the pre-redesign engine (asserted against a frozen reference
+//!   implementation in `tests/integration_session.rs`); prefer
+//!   [`crate::sim::session::Simulation::builder`] in new code.
+//! * [`simulate_coupled`] — the monolithic (non-disaggregated) baseline.
+//! * [`sweep_ratios`] — serial ratio sweep over the config grid.
+//!
+//! Simulation semantics (unchanged): an `rA–1F` bundle advances
+//! cycle-by-cycle; each in-flight batch cycles through the six-state FSM
+//! (Attention -> A2F -> WaitingFfn -> FFN -> F2A -> WaitingAttention);
+//! the shared FFN server and the r Attention workers are the contended
+//! resources, so FFN work on one batch overlaps Attention work on
+//! another. Within the Attention phase, worker j starts when both the
+//! batch's data is ready (previous F2A done) and worker j is free; the
+//! phase completes at the *barrier* — the slowest worker (§3.3's
+//! `W_{B,r}`).
 
 use crate::config::experiment::ExperimentConfig;
 use crate::config::hardware::HardwareParams;
 use crate::sim::batch::StepRecord;
 use crate::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
+use crate::sim::session::{ArrivalStats, Simulation};
 use crate::sim::slots::{Completion, SlotArray};
 use crate::workload::generator::RequestGenerator;
 
@@ -29,7 +38,8 @@ use crate::workload::generator::RequestGenerator;
 /// modes; see EXPERIMENTS.md §FIG3).
 pub const BATCHES_IN_FLIGHT: usize = 3;
 
-/// Options beyond the experiment config.
+/// Options beyond the experiment config (legacy; the session builder
+/// exposes the same knobs plus arrival/source/observer plugs).
 #[derive(Debug, Clone, Copy)]
 pub struct SimOptions {
     /// Record per-step [`StepRecord`]s (memory-heavy; for debugging).
@@ -37,7 +47,9 @@ pub struct SimOptions {
     /// Stop after this many total completed requests (overrides the
     /// config's `requests_per_instance * r` when Some).
     pub max_completions: Option<usize>,
-    /// Batches kept in flight (microbatch pipelining depth).
+    /// Batches kept in flight (microbatch pipelining depth). Must be
+    /// >= 1: `Simulation::build()` rejects 0 with a config error (the
+    /// old engine silently clamped it), so [`simulate`] panics on 0.
     pub batches_in_flight: usize,
     /// Initialize slots from the stationary law (Lemma 4.1) instead of
     /// cold age-0 requests. Default true: removes the ~mu_D-step KV ramp
@@ -64,179 +76,23 @@ pub struct SimOutput {
     pub completions: Vec<Completion>,
     /// Optional step log.
     pub steps: Vec<StepRecord>,
-}
-
-/// One batch's bookkeeping inside the engine.
-struct BatchLane {
-    /// Per-worker slot arrays (each B slots).
-    workers: Vec<SlotArray>,
-    /// Time at which this batch is ready for its next Attention phase.
-    ready_at: f64,
-    /// Steps executed.
-    steps: u64,
+    /// Arrival-process statistics (trivial for the closed loop).
+    pub arrival: ArrivalStats,
 }
 
 /// Run the simulator for a given fan-in `r` (overriding the config's
 /// topology worker count).
+///
+/// **Deprecated shim** over the session API: equivalent to
+/// `Simulation::builder_with_options(cfg, r, opts).build()?.run()` with
+/// the default closed-loop arrival process and synthetic length source.
+/// Panics where the builder returns `Err` (r = 0, zero lanes, zero
+/// completion target).
 pub fn simulate(cfg: &ExperimentConfig, r: usize, opts: SimOptions) -> SimOutput {
-    assert!(r >= 1, "fan-in must be >= 1");
-    let hw = &cfg.hardware;
-    let b = cfg.topology.batch_per_worker;
-    let target_completions =
-        opts.max_completions.unwrap_or(cfg.requests_per_instance * r);
-
-    let n_lanes = opts.batches_in_flight.max(1);
-    // Seed hierarchy: one root generator, forked per (batch, worker).
-    let mut root = RequestGenerator::new(cfg.workload.clone(), cfg.seed);
-    let mut lanes: Vec<BatchLane> = (0..n_lanes)
-        .map(|g| BatchLane {
-            workers: (0..r)
-                .map(|j| {
-                    let gen = root.fork((g * 1024 + j) as u64);
-                    if opts.warm_start {
-                        SlotArray::new_stationary(b, gen, cfg.seed ^ (g * 131 + j) as u64)
-                    } else {
-                        SlotArray::new(b, gen)
-                    }
-                })
-                .collect(),
-            ready_at: 0.0,
-            steps: 0,
-        })
-        .collect();
-
-    // Resource availability clocks.
-    let mut worker_free = vec![0.0f64; r];
-    let mut ffn_free = 0.0f64;
-
-    // Busy-time accumulators for idle ratios.
-    let mut busy_attention = vec![0.0f64; r];
-    let mut busy_ffn = 0.0f64;
-
-    // Diagnostics.
-    let mut sum_barrier_load = 0.0f64;
-    let mut sum_mean_load = 0.0f64;
-    let mut n_steps = 0u64;
-
-    let mut completions: Vec<Completion> = Vec::with_capacity(target_completions + 64);
-    let mut steps_log = Vec::new();
-    // Lane-step finish times for the delivered-rate metric.
-    let mut step_times: Vec<f64> = Vec::new();
-
-    let agg = (r * b) as f64;
-    let t_ffn = hw.t_ffn(agg);
-    let tc_half = hw.t_comm(agg) / 2.0;
-
-    let mut last_finish = 0.0f64;
-    while completions.len() < target_completions {
-        // Advance the batch that is ready earliest (event order).
-        let g = (0..n_lanes)
-            .min_by(|&a, &b| lanes[a].ready_at.partial_cmp(&lanes[b].ready_at).unwrap())
-            .unwrap();
-        let ready = lanes[g].ready_at;
-
-        // --- Attention phase (per-worker start, barrier end) ---
-        let mut att_barrier: f64 = 0.0;
-        let mut att_start_min = f64::INFINITY;
-        let mut max_load = 0u64;
-        let mut sum_load = 0u64;
-        for j in 0..r {
-            let load = lanes[g].workers[j].token_load();
-            max_load = max_load.max(load);
-            sum_load += load;
-            let t_a = hw.t_attention(load as f64);
-            let start = worker_free[j].max(ready);
-            let end = start + t_a;
-            worker_free[j] = end;
-            busy_attention[j] += t_a;
-            att_barrier = att_barrier.max(end);
-            att_start_min = att_start_min.min(start);
-        }
-        sum_barrier_load += max_load as f64;
-        sum_mean_load += sum_load as f64 / r as f64;
-        n_steps += 1;
-
-        // --- A2F transfer ---
-        let a2f_done = att_barrier + tc_half;
-
-        // --- FFN phase (shared server; waits if busy with other batch) ---
-        let ffn_start = a2f_done.max(ffn_free);
-        let ffn_done = ffn_start + t_ffn;
-        ffn_free = ffn_done;
-        busy_ffn += t_ffn;
-
-        // --- F2A transfer; batch becomes ready for its next step ---
-        let f2a_done = ffn_done + tc_half;
-        lanes[g].ready_at = f2a_done;
-        lanes[g].steps += 1;
-        step_times.push(f2a_done);
-
-        // Slots advance: the step's tokens are delivered at f2a_done.
-        for j in 0..r {
-            lanes[g].workers[j].step(f2a_done, &mut completions);
-        }
-        last_finish = f2a_done;
-
-        if opts.record_steps {
-            steps_log.push(StepRecord {
-                batch: g,
-                step: lanes[g].steps,
-                barrier_load: max_load,
-                attention_start: att_start_min,
-                attention_end: att_barrier,
-                ffn_start,
-                ffn_end: ffn_done,
-                ready_at: f2a_done,
-            });
-        }
-    }
-
-    // Completions were appended batch-by-batch at nondecreasing times per
-    // lane, but lanes interleave: sort by finish time for the stable
-    // window (cheap: nearly sorted).
-    completions.sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
-    completions.truncate(target_completions);
-
-    let total_time = last_finish;
-    let (throughput, _t80) =
-        stable_throughput(&completions, cfg.stable_fraction, r + 1);
-    // Delivered rate over the warm window (skip the first 25% of steps):
-    // every lane-step delivers r*B tokens. The window starts at the
-    // finish time of step `skip`, so it contains the completions of steps
-    // skip+1 .. len-1 — count those *intervals*, not the endpoint step
-    // itself, or the estimate is biased high by ~1/(len-skip) at short
-    // horizons.
-    let delivered = {
-        let skip = step_times.len() / 4;
-        let warm_steps = (step_times.len().saturating_sub(skip + 1)) as f64;
-        let warm_time = total_time - step_times.get(skip).copied().unwrap_or(0.0);
-        if warm_time > 0.0 && warm_steps > 0.0 {
-            warm_steps * (r * b) as f64 / warm_time / (r + 1) as f64
-        } else {
-            f64::NAN
-        }
-    };
-    let idle_attention = 1.0
-        - busy_attention.iter().sum::<f64>() / (r as f64 * total_time);
-    let idle_ffn = 1.0 - busy_ffn / total_time;
-
-    SimOutput {
-        metrics: SimMetrics {
-            r,
-            batch: b,
-            throughput_per_instance: throughput,
-            delivered_throughput_per_instance: delivered,
-            tpot: mean_tpot(&completions),
-            idle_attention: idle_attention.max(0.0),
-            idle_ffn: idle_ffn.max(0.0),
-            total_time,
-            completed: completions.len(),
-            mean_barrier_load: sum_barrier_load / n_steps as f64,
-            mean_worker_load: sum_mean_load / n_steps as f64,
-        },
-        completions,
-        steps: steps_log,
-    }
+    Simulation::builder_with_options(cfg, r, opts)
+        .build()
+        .expect("simulate(): invalid options; use sim::session::Simulation for Result-based errors")
+        .run()
 }
 
 /// Sweep the configured ratio grid, returning metrics per r.
@@ -308,6 +164,7 @@ pub fn simulate_coupled(cfg: &ExperimentConfig, instances: usize, opts: SimOptio
         },
         completions,
         steps: Vec::new(),
+        arrival: ArrivalStats::closed(),
     }
 }
 
@@ -452,6 +309,7 @@ mod tests {
             assert!(s.ffn_end > s.ffn_start);
             assert!(s.ready_at > s.ffn_end);
             assert!(s.barrier_load > 0);
+            assert!(s.mean_load > 0.0 && s.mean_load <= s.barrier_load as f64);
         }
         // FFN serialization: ffn intervals must not overlap.
         let mut intervals: Vec<(f64, f64)> =

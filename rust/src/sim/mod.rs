@@ -2,17 +2,29 @@
 //!
 //! * [`batch`] — the six-state batch FSM and step records.
 //! * [`slots`] — continuous-batching slot arrays with O(1) incremental
-//!   token-load maintenance.
-//! * [`engine`] — the two-batches-in-flight interleaved engine, plus a
-//!   coupled (monolithic) baseline.
+//!   token-load maintenance and open-loop idle-slot support.
+//! * [`session`] — the composable simulation-session API: a `Simulation`
+//!   builder over pluggable [`session::ArrivalProcess`] (closed-loop
+//!   replenishment / open-loop Poisson with bounded admission),
+//!   [`session::LengthSource`] (synthetic generators / sharded trace
+//!   replay), and [`session::SimObserver`] (step/completion/idle hooks)
+//!   plugs, with O(log m) heap-based lane scheduling.
+//! * [`engine`] — the legacy free-function surface: the deprecated
+//!   `simulate()` shim (byte-identical to the pre-session engine), plus
+//!   a coupled (monolithic) baseline.
 //! * [`metrics`] — stable 80% throughput, TPOT, idle ratios (§5.2).
 
 pub mod batch;
 pub mod engine;
 pub mod metrics;
+pub mod session;
 pub mod slots;
 
 pub use batch::{BatchState, StepRecord};
 pub use engine::{simulate, simulate_coupled, sweep_ratios, SimOptions, SimOutput};
 pub use metrics::SimMetrics;
+pub use session::{
+    ArrivalProcess, ArrivalStats, ClosedLoopReplenish, LengthSource, LengthStream,
+    OpenLoopPoisson, SimObserver, Simulation, SyntheticSource, TraceReplay,
+};
 pub use slots::{Completion, SlotArray};

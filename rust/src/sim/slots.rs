@@ -1,11 +1,17 @@
 //! Continuous-batching slot management for one Attention microbatch.
 //!
-//! Each worker holds `B` slots per in-flight batch. A slot always hosts a
-//! live request; when a request generates its last token the slot is
-//! immediately refilled from the request generator (paper Fig. 1's green
-//! block). The microbatch's total token load `T = sum_b (P_b + age_b)` is
+//! Each worker holds `B` slots per in-flight batch. Under the closed-loop
+//! arrival process a slot always hosts a live request; when a request
+//! generates its last token the slot is immediately refilled from the
+//! length stream (paper Fig. 1's green block). Under open-loop admission
+//! control ([`crate::sim::session::OpenLoopPoisson`]) a slot may sit
+//! *idle* when no queued arrival is available, contributing zero token
+//! load until the arrival process admits a request into it.
+//!
+//! The microbatch's total token load `T = sum_b (P_b + age_b)` is
 //! maintained incrementally: O(1) per slot per step, no rescan.
 
+use crate::sim::session::{ArrivalProcess, ClosedLoopReplenish, LengthStream};
 use crate::workload::generator::RequestGenerator;
 use crate::workload::request::ActiveRequest;
 
@@ -29,42 +35,59 @@ impl Completion {
 
 /// A microbatch of continuously-batched slots.
 pub struct SlotArray {
-    slots: Vec<ActiveRequest>,
-    gen: RequestGenerator,
+    /// `None` = idle slot (only reachable under open-loop admission).
+    slots: Vec<Option<ActiveRequest>>,
+    stream: Box<dyn LengthStream>,
     /// Incrementally-maintained total token load Σ (P_b + age_b).
     token_load: u64,
     next_id: u64,
     /// Admission time per slot (for TPOT accounting).
     admit_times: Vec<f64>,
+    /// Number of occupied slots (== batch under closed loop).
+    live: usize,
 }
 
 impl SlotArray {
     /// Fill `batch` slots with fresh requests at time 0 (cold start: all
     /// requests begin at age 0; the KV load then ramps toward theta over
     /// ~mu_D steps).
-    pub fn new(batch: usize, mut gen: RequestGenerator) -> Self {
+    pub fn new(batch: usize, gen: RequestGenerator) -> Self {
+        Self::from_stream(batch, Box::new(gen))
+    }
+
+    /// [`Self::new`] over any length stream (trace replay, synthetic, ...).
+    pub fn from_stream(batch: usize, mut stream: Box<dyn LengthStream>) -> Self {
         assert!(batch >= 1);
         let mut slots = Vec::with_capacity(batch);
         let mut token_load = 0u64;
         for i in 0..batch {
-            let lengths = gen.next_lengths();
+            let lengths = stream.next_lengths();
             let req = ActiveRequest::admit(i as u64, lengths);
             token_load += req.token_load();
-            slots.push(req);
+            slots.push(Some(req));
         }
         let admit_times = vec![0.0; batch];
-        Self { slots, gen, token_load, next_id: batch as u64, admit_times }
+        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
     }
 
     /// Fill `batch` slots from the *stationary* law of Lemma 4.1:
     /// requests drawn with probability proportional to their decode
     /// lifetime (length-biasing), at a uniform age. Starts the simulator
     /// in steady state, eliminating the cold-start ramp.
-    pub fn new_stationary(batch: usize, mut gen: RequestGenerator, seed: u64) -> Self {
+    pub fn new_stationary(batch: usize, gen: RequestGenerator, seed: u64) -> Self {
+        Self::stationary_from_stream(batch, Box::new(gen), seed)
+    }
+
+    /// [`Self::new_stationary`] over any length stream. The length-biased
+    /// pool is drawn by consuming `(8 * batch).max(4096)` entries from
+    /// the stream (for a [`RequestGenerator`] this is exactly the legacy
+    /// `gen.trace(n)` draw order, preserving byte-identical seeds).
+    pub fn stationary_from_stream(batch: usize, mut stream: Box<dyn LengthStream>, seed: u64) -> Self {
         assert!(batch >= 1);
         use crate::stats::rng::Pcg64;
         let mut rng = Pcg64::new(seed ^ 0x57A7);
-        let pool = gen.trace((8 * batch).max(4096));
+        let pool: Vec<_> =
+            (0..(8 * batch).max(4096)).map(|_| stream.next_lengths()).collect();
         let mut cum: Vec<u64> = Vec::with_capacity(pool.len());
         let mut acc = 0u64;
         for q in &pool {
@@ -80,14 +103,33 @@ impl SlotArray {
             let age = rng.next_below(lengths.decode);
             let req = ActiveRequest { id: i as u64, lengths, age };
             token_load += req.token_load();
-            slots.push(req);
+            slots.push(Some(req));
         }
         let admit_times = vec![0.0; batch];
-        Self { slots, gen, token_load, next_id: batch as u64, admit_times }
+        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+    }
+
+    /// All slots idle (the open-loop cold start: the system is empty and
+    /// fills as the arrival process admits requests).
+    pub fn empty_from_stream(batch: usize, stream: Box<dyn LengthStream>) -> Self {
+        assert!(batch >= 1);
+        Self {
+            slots: vec![None; batch],
+            stream,
+            token_load: 0,
+            next_id: 0,
+            admit_times: vec![0.0; batch],
+            live: 0,
+        }
     }
 
     pub fn batch(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Number of occupied slots.
+    pub fn live(&self) -> usize {
+        self.live
     }
 
     /// Current total token load of the microbatch (the T_j of §3.3).
@@ -95,36 +137,81 @@ impl SlotArray {
         self.token_load
     }
 
-    /// Advance every slot by one decode step at simulation time `now`,
-    /// refilling completed slots and appending their completion records.
+    /// Advance every live slot by one decode step at simulation time
+    /// `now`, refilling completed slots immediately (closed loop) and
+    /// appending their completion records.
+    pub fn step(&mut self, now: f64, completions: &mut Vec<Completion>) {
+        self.step_admission(now, &mut ClosedLoopReplenish, completions);
+    }
+
+    /// [`Self::step`] under an arrival process: a freed slot refills only
+    /// when `arrival.try_admit(now)` grants a request; otherwise it goes
+    /// idle until [`Self::fill_empty`] revives it.
     ///
     /// Token-load bookkeeping per slot: a continuing request's load grows
     /// by exactly 1; a completed slot swaps `P_old + D_old - 1` for the
-    /// fresh request's `P_new + 0`.
-    pub fn step(&mut self, now: f64, completions: &mut Vec<Completion>) {
+    /// fresh request's `P_new + 0` (or for 0 when the slot goes idle).
+    pub fn step_admission(
+        &mut self,
+        now: f64,
+        arrival: &mut dyn ArrivalProcess,
+        completions: &mut Vec<Completion>,
+    ) {
         for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
-            let old_load = slot.token_load();
-            if slot.step() {
+            let Some(req) = slot.as_mut() else { continue };
+            let old_load = req.token_load();
+            if req.step() {
                 completions.push(Completion {
                     finish_time: now,
                     admit_time: *admit,
-                    decode_len: slot.lengths.decode,
+                    decode_len: req.lengths.decode,
                 });
-                let lengths = self.gen.next_lengths();
-                *slot = ActiveRequest::admit(self.next_id, lengths);
-                self.next_id += 1;
-                *admit = now;
-                self.token_load = self.token_load - old_load + slot.token_load();
+                if arrival.try_admit(now).is_some() {
+                    let lengths = self.stream.next_lengths();
+                    *req = ActiveRequest::admit(self.next_id, lengths);
+                    self.next_id += 1;
+                    *admit = now;
+                    self.token_load = self.token_load - old_load + req.token_load();
+                } else {
+                    *slot = None;
+                    self.live -= 1;
+                    self.token_load -= old_load;
+                }
             } else {
                 self.token_load += 1;
             }
         }
     }
 
+    /// Admit queued arrivals into idle slots at time `now`. No-op under
+    /// the closed loop (no slot is ever idle). Stops at the first refusal:
+    /// `try_admit` returning `None` means no arrival is available at
+    /// `now`, so later idle slots cannot be filled either.
+    pub fn fill_empty(&mut self, now: f64, arrival: &mut dyn ArrivalProcess) {
+        if self.live == self.slots.len() {
+            return;
+        }
+        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
+            if slot.is_some() {
+                continue;
+            }
+            if arrival.try_admit(now).is_none() {
+                return;
+            }
+            let lengths = self.stream.next_lengths();
+            let req = ActiveRequest::admit(self.next_id, lengths);
+            self.next_id += 1;
+            self.token_load += req.token_load();
+            *slot = Some(req);
+            *admit = now;
+            self.live += 1;
+        }
+    }
+
     /// Recompute the token load from scratch (testing invariant).
     #[cfg(test)]
     fn token_load_direct(&self) -> u64 {
-        self.slots.iter().map(|s| s.token_load()).sum()
+        self.slots.iter().flatten().map(|s| s.token_load()).sum()
     }
 }
 
@@ -220,9 +307,58 @@ mod tests {
         for s in 0..500 {
             slots.step(s as f64, &mut completions);
         }
-        let mut ids: Vec<u64> = slots.slots.iter().map(|s| s.id).collect();
+        let mut ids: Vec<u64> = slots.slots.iter().flatten().map(|s| s.id).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 8);
+    }
+
+    /// A denying arrival process: admits nothing, ever.
+    struct DenyAll;
+    impl ArrivalProcess for DenyAll {
+        fn try_admit(&mut self, _now: f64) -> Option<f64> {
+            None
+        }
+        fn initial_fill(&self) -> bool {
+            false
+        }
+        fn stats(&self, _total_time: f64) -> crate::sim::session::ArrivalStats {
+            crate::sim::session::ArrivalStats::closed()
+        }
+        fn name(&self) -> &'static str {
+            "deny-all"
+        }
+    }
+
+    #[test]
+    fn denied_refill_idles_the_slot_and_drops_its_load() {
+        let spec = WorkloadSpec::independent(
+            LengthDist::Deterministic(5),
+            LengthDist::Deterministic(2),
+        );
+        let mut slots = SlotArray::new(2, RequestGenerator::new(spec, 7));
+        let mut completions = Vec::new();
+        let mut deny = DenyAll;
+        slots.step_admission(1.0, &mut deny, &mut completions);
+        assert_eq!(slots.live(), 2); // age 1, nothing completed yet
+        slots.step_admission(2.0, &mut deny, &mut completions);
+        assert_eq!(completions.len(), 2);
+        assert_eq!(slots.live(), 0);
+        assert_eq!(slots.token_load(), 0);
+        // Stepping an all-idle array is a no-op.
+        slots.step_admission(3.0, &mut deny, &mut completions);
+        assert_eq!(completions.len(), 2);
+        // A granting process revives the slots via fill_empty.
+        slots.fill_empty(4.0, &mut ClosedLoopReplenish);
+        assert_eq!(slots.live(), 2);
+        assert_eq!(slots.token_load(), 10); // two fresh P=5, age-0 requests
+    }
+
+    #[test]
+    fn empty_from_stream_starts_idle() {
+        let slots = SlotArray::empty_from_stream(4, Box::new(gen(9)));
+        assert_eq!(slots.live(), 0);
+        assert_eq!(slots.token_load(), 0);
+        assert_eq!(slots.batch(), 4);
     }
 }

@@ -5,7 +5,11 @@
 //!
 //! All formatting is deterministic, so serial and parallel runs of the
 //! same grid emit byte-identical files — the acceptance check for the
-//! grid runner rides on this.
+//! grid runner rides on this. The arrival-process axis adds the
+//! queueing/rejection columns (`arrival`, `lambda`, `offered`,
+//! `admitted`, `rejected`, `mean_queue_wait`, `mean_queue_len`) at the
+//! end of the row, keeping the legacy column prefix stable for existing
+//! plotting scripts.
 
 use std::path::Path;
 
@@ -15,8 +19,9 @@ use crate::util::csvio::CsvTable;
 use crate::util::json::Json;
 use crate::util::tablefmt::{sig, Table};
 
-/// CSV header (kept stable; downstream plotting scripts key on names).
-pub const CSV_HEADER: [&str; 18] = [
+/// CSV header (kept stable; downstream plotting scripts key on names —
+/// `python/plot_sweep.py --check` validates this exact schema).
+pub const CSV_HEADER: [&str; 25] = [
     "scenario",
     "r",
     "batch",
@@ -35,12 +40,23 @@ pub const CSV_HEADER: [&str; 18] = [
     "ratio_gap",
     "completed",
     "total_time",
+    "arrival",
+    "lambda",
+    "offered",
+    "admitted",
+    "rejected",
+    "mean_queue_wait",
+    "mean_queue_len",
 ];
 
 fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
     res.groups
         .iter()
-        .find(|g| g.scenario == cell.scenario && g.batch == cell.metrics.batch)
+        .find(|g| {
+            g.scenario == cell.scenario
+                && g.batch == cell.metrics.batch
+                && g.arrival == cell.arrival.kind
+        })
         .expect("every cell belongs to a group")
 }
 
@@ -50,6 +66,7 @@ pub fn to_csv_table(res: &SweepResults) -> CsvTable {
     for cell in &res.cells {
         let g = group_for(res, cell);
         let m = &cell.metrics;
+        let a = &cell.arrival;
         t.push_row(&[
             cell.scenario.clone(),
             m.r.to_string(),
@@ -69,6 +86,13 @@ pub fn to_csv_table(res: &SweepResults) -> CsvTable {
             format!("{:.6}", g.ratio_gap),
             m.completed.to_string(),
             format!("{:.3}", m.total_time),
+            a.kind.to_string(),
+            format!("{:.8}", a.lambda),
+            a.offered.to_string(),
+            a.admitted.to_string(),
+            a.rejected.to_string(),
+            format!("{:.6}", a.mean_queue_wait),
+            format!("{:.6}", a.mean_queue_len),
         ]);
     }
     t
@@ -81,6 +105,7 @@ pub fn write_csv(res: &SweepResults, path: impl AsRef<Path>) -> Result<()> {
 
 fn cell_to_json(cell: &SweepCell) -> Json {
     let m = &cell.metrics;
+    let a = &cell.arrival;
     Json::obj()
         .set("scenario", Json::Str(cell.scenario.clone()))
         .set("r", Json::Num(m.r as f64))
@@ -99,11 +124,23 @@ fn cell_to_json(cell: &SweepCell) -> Json {
         .set("theory_thr_g", Json::Num(cell.theory_g))
         .set("completed", Json::Num(m.completed as f64))
         .set("total_time", Json::Num(m.total_time))
+        .set(
+            "arrival",
+            Json::obj()
+                .set("kind", Json::Str(a.kind.to_string()))
+                .set("lambda", Json::Num(a.lambda))
+                .set("offered", Json::Num(a.offered as f64))
+                .set("admitted", Json::Num(a.admitted as f64))
+                .set("rejected", Json::Num(a.rejected as f64))
+                .set("mean_queue_wait", Json::Num(a.mean_queue_wait))
+                .set("mean_queue_len", Json::Num(a.mean_queue_len)),
+        )
 }
 
 fn group_to_json(g: &GroupSummary) -> Json {
     Json::obj()
         .set("scenario", Json::Str(g.scenario.clone()))
+        .set("arrival", Json::Str(g.arrival.clone()))
         .set("batch", Json::Num(g.batch as f64))
         .set("theta", Json::Num(g.load.theta))
         .set("r_star_g", Json::Num(g.r_star_g as f64))
@@ -138,6 +175,7 @@ pub fn write_json(res: &SweepResults, path: impl AsRef<Path>) -> Result<()> {
 pub fn summary_table(res: &SweepResults) -> Table {
     let mut t = Table::new(&[
         "scenario",
+        "arrival",
         "B",
         "theta",
         "r*_G (theory)",
@@ -150,6 +188,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
     for g in &res.groups {
         t.row(&[
             g.scenario.clone(),
+            g.arrival.clone(),
             g.batch.to_string(),
             sig(g.load.theta, 4),
             g.r_star_g.to_string(),
@@ -166,6 +205,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
 pub fn cells_table(res: &SweepResults) -> Table {
     let mut t = Table::new(&[
         "scenario",
+        "arrival",
         "r",
         "B",
         "sim Thr/inst",
@@ -175,12 +215,14 @@ pub fn cells_table(res: &SweepResults) -> Table {
         "TPOT",
         "idle_A",
         "idle_F",
+        "rejected",
     ])
     .with_title("Sweep cells");
     for c in &res.cells {
         let m = &c.metrics;
         t.row(&[
             c.scenario.clone(),
+            c.arrival.kind.to_string(),
             m.r.to_string(),
             m.batch.to_string(),
             sig(m.throughput_per_instance, 5),
@@ -190,6 +232,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
             sig(m.tpot, 5),
             format!("{:.1}%", 100.0 * m.idle_attention),
             format!("{:.1}%", 100.0 * m.idle_ffn),
+            c.arrival.rejected.to_string(),
         ]);
     }
     t
@@ -200,17 +243,17 @@ mod tests {
     use super::*;
     use crate::config::experiment::ExperimentConfig;
     use crate::sim::engine::SimOptions;
-    use crate::sweep::grid::{run_grid_serial, SweepGrid};
+    use crate::sweep::grid::{run_grid_serial, ArrivalSpec, SweepGrid};
     use crate::sweep::scenarios;
 
     fn small_results() -> SweepResults {
         let mut base = ExperimentConfig::default();
         base.requests_per_instance = 80;
-        let grid = SweepGrid {
-            scenarios: scenarios::resolve("deterministic-stress").unwrap(),
-            ratios: vec![1, 2],
-            batches: vec![8],
-        };
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        );
         run_grid_serial(&base, &grid, SimOptions::default()).unwrap()
     }
 
@@ -226,6 +269,10 @@ mod tests {
         assert!(r_star.windows(2).all(|w| w[0] == w[1]));
         assert!(sim_opt.windows(2).all(|w| w[0] == w[1]));
         assert!(t.column_f64("theory_thr_g").unwrap().iter().all(|&x| x > 0.0));
+        // Closed-loop rows carry trivial queueing columns.
+        assert!(t.column_u64("rejected").unwrap().iter().all(|&x| x == 0));
+        let arr = t.col("arrival").unwrap();
+        assert!(t.rows.iter().all(|row| row[arr] == "closed"));
     }
 
     #[test]
@@ -246,12 +293,36 @@ mod tests {
         let back = Json::parse(&j.to_string_pretty()).unwrap();
         let cells = back.field("cells").unwrap().as_arr().unwrap();
         assert_eq!(cells.len(), res.cells.len());
+        assert_eq!(
+            cells[0].field("arrival").unwrap().field("kind").unwrap().as_str().unwrap(),
+            "closed"
+        );
         let groups = back.field("groups").unwrap().as_arr().unwrap();
         assert_eq!(groups.len(), res.groups.len());
         assert_eq!(
             groups[0].field("scenario").unwrap().as_str().unwrap(),
             "deterministic-stress"
         );
+    }
+
+    #[test]
+    fn open_loop_rows_emit_queueing_columns() {
+        let mut base = ExperimentConfig::default();
+        base.requests_per_instance = 50;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.9, 64)]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        let t = to_csv_table(&res);
+        let arr = t.col("arrival").unwrap();
+        assert!(t.rows.iter().all(|row| row[arr] == "open-poisson"));
+        assert!(t.column_f64("lambda").unwrap().iter().all(|&x| x > 0.0));
+        assert!(t.column_u64("offered").unwrap().iter().all(|&x| x > 0));
+        assert!(t.column_u64("admitted").unwrap().iter().all(|&x| x > 0));
+        assert!(t.column_f64("mean_queue_wait").unwrap().iter().all(|&x| x >= 0.0));
     }
 
     #[test]
@@ -262,5 +333,6 @@ mod tests {
         assert!(s.contains("deterministic-stress"));
         let c = cells_table(&res).render();
         assert!(c.contains("Thr_G"));
+        assert!(c.contains("closed"));
     }
 }

@@ -1,29 +1,98 @@
-//! Parallel (scenario × r × B) grid runner.
+//! Parallel (scenario × arrival × r × B) grid runner.
 //!
-//! Every cell of the cross-product is one independent discrete-event
-//! simulation ([`crate::sim::engine::simulate`]); cells are spread over
-//! the [`crate::util::pool::ThreadPool`] and collected by index, so the
+//! Every cell of the cross-product is one independent simulation session
+//! ([`crate::sim::session::Simulation`]); cells are spread over the
+//! [`crate::util::pool::ThreadPool`] and collected by index, so the
 //! output order is the grid order regardless of scheduling.
+//!
+//! **Axes.** Besides the legacy workload-shape × fan-in × batch grid,
+//! the runner sweeps the *arrival process* ([`ArrivalSpec`]): closed-loop
+//! replenishment (the paper's saturation regime) or open-loop Poisson
+//! traffic through a bounded admission queue, calibrated to a target
+//! utilization of the barrier-aware theory capacity. Scenario length
+//! sources follow [`crate::sweep::scenarios::SourceSpec`]: synthetic
+//! sampling or deterministic trace replay.
 //!
 //! **Determinism.** Each cell derives its own seed from the experiment
 //! seed and its grid coordinates (SplitMix64 chain, the same hierarchy
-//! `RequestGenerator::fork` uses inside a cell), and the simulator is a
-//! pure function of its config — so a parallel run is bitwise identical
-//! to [`run_grid_serial`], which the determinism tests assert.
+//! `RequestGenerator::fork` uses inside a cell), and a session is a pure
+//! function of its configuration — so a parallel run is bitwise
+//! identical to [`run_grid_serial`], which the determinism tests assert.
 
+use crate::analysis::cycle_time::OperatingPoint;
 use crate::config::experiment::ExperimentConfig;
 use crate::error::Result;
-use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::engine::SimOptions;
 use crate::sim::metrics::SimMetrics;
+use crate::sim::session::{ArrivalStats, OpenLoopPoisson, Simulation};
 use crate::stats::rng::SplitMix64;
 use crate::sweep::scenarios::Scenario;
 use crate::util::pool::{default_threads, ThreadPool};
 use crate::workload::stationary::StationaryLoad;
 
+/// One point on the arrival-process axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Closed-loop replenishment: every freed slot refills instantly
+    /// (the legacy engine's only mode).
+    Closed,
+    /// Open-loop Poisson arrivals through a bounded admission queue.
+    Open {
+        /// Target utilization of the cell's barrier-aware theory
+        /// capacity; the per-cell rate is
+        /// `rho * Thr_G(r) * (r + 1) / mu_D` requests per cycle.
+        rho: f64,
+        /// Absolute rate override (requests per cycle); `Some` ignores
+        /// `rho`.
+        lambda: Option<f64>,
+        /// Admission-queue capacity (arrivals beyond it are rejected).
+        queue_capacity: usize,
+    },
+}
+
+impl ArrivalSpec {
+    /// Open spec at a target utilization with the default queue bound.
+    pub fn open(rho: f64, queue_capacity: usize) -> Self {
+        ArrivalSpec::Open { rho, lambda: None, queue_capacity }
+    }
+
+    /// Stable identifier emitted in CSV/JSON.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Closed => "closed",
+            ArrivalSpec::Open { .. } => "open-poisson",
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let ArrivalSpec::Open { rho, lambda, queue_capacity } = self {
+            if let Some(l) = lambda {
+                if !(l.is_finite() && *l > 0.0) {
+                    return Err(crate::error::AfdError::config(format!(
+                        "open arrival lambda must be positive and finite, got {l}"
+                    )));
+                }
+            } else if !(rho.is_finite() && *rho > 0.0) {
+                return Err(crate::error::AfdError::config(format!(
+                    "open arrival rho must be positive and finite, got {rho}"
+                )));
+            }
+            if *queue_capacity == 0 {
+                return Err(crate::error::AfdError::config(
+                    "open arrival queue_capacity must be >= 1",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// The cross-product to sweep.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub scenarios: Vec<Scenario>,
+    /// Arrival processes (default: closed loop only).
+    pub arrivals: Vec<ArrivalSpec>,
     /// Fan-in values (paper's r axis).
     pub ratios: Vec<usize>,
     /// Per-worker microbatch sizes (paper's B axis).
@@ -31,23 +100,38 @@ pub struct SweepGrid {
 }
 
 impl SweepGrid {
+    /// Closed-loop grid (the legacy shape).
+    pub fn new(scenarios: Vec<Scenario>, ratios: Vec<usize>, batches: Vec<usize>) -> Self {
+        Self { scenarios, arrivals: vec![ArrivalSpec::Closed], ratios, batches }
+    }
+
+    /// Replace the arrival-process axis.
+    pub fn with_arrivals(mut self, arrivals: Vec<ArrivalSpec>) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
     /// Grid over the config's ratio sweep and batch at the registry
     /// scenarios.
     pub fn from_config(scenarios: Vec<Scenario>, cfg: &ExperimentConfig) -> Self {
-        Self {
-            scenarios,
-            ratios: cfg.ratio_sweep.clone(),
-            batches: vec![cfg.topology.batch_per_worker],
-        }
+        Self::new(scenarios, cfg.ratio_sweep.clone(), vec![cfg.topology.batch_per_worker])
     }
 
     pub fn cell_count(&self) -> usize {
-        self.scenarios.len() * self.ratios.len() * self.batches.len()
+        self.scenarios.len() * self.arrivals.len() * self.ratios.len() * self.batches.len()
     }
 
     pub fn validate(&self) -> Result<()> {
         if self.scenarios.is_empty() {
             return Err(crate::error::AfdError::config("sweep grid needs >= 1 scenario"));
+        }
+        if self.arrivals.is_empty() {
+            return Err(crate::error::AfdError::config(
+                "sweep grid needs >= 1 arrival process",
+            ));
+        }
+        for a in &self.arrivals {
+            a.validate()?;
         }
         if self.ratios.is_empty() || self.ratios.contains(&0) {
             return Err(crate::error::AfdError::config(
@@ -71,6 +155,17 @@ impl SweepGrid {
                 )));
             }
         }
+        // Duplicate arrival kinds would collide in group summaries too.
+        let mut kinds: Vec<&str> = self.arrivals.iter().map(|a| a.kind()).collect();
+        kinds.sort_unstable();
+        for w in kinds.windows(2) {
+            if w[0] == w[1] {
+                return Err(crate::error::AfdError::config(format!(
+                    "arrival process {:?} appears more than once in the sweep grid",
+                    w[0]
+                )));
+            }
+        }
         for s in &self.scenarios {
             s.spec.validate()?;
         }
@@ -87,17 +182,22 @@ pub struct SweepCell {
     /// The cell seed actually used (recorded for reproduction).
     pub seed: u64,
     pub metrics: SimMetrics,
+    /// Arrival-process statistics (queueing/rejection; trivial for
+    /// closed loop).
+    pub arrival: ArrivalStats,
     /// Mean-field theory throughput `Thr_mf(B; r)` (Eq. 8).
     pub theory_mf: f64,
     /// Gaussian barrier-aware theory throughput `Thr_G(B; r)` (Eq. 9/11).
     pub theory_g: f64,
 }
 
-/// Per-(scenario, B) summary: theory vs simulation optima over the swept
-/// ratio grid (the paper's "within 10%" comparison, Fig. 3/4).
+/// Per-(scenario, arrival, B) summary: theory vs simulation optima over
+/// the swept ratio grid (the paper's "within 10%" comparison, Fig. 3/4).
 #[derive(Debug, Clone)]
 pub struct GroupSummary {
     pub scenario: String,
+    /// Arrival-process kind of this group ("closed" / "open-poisson").
+    pub arrival: String,
     pub batch: usize,
     pub load: StationaryLoad,
     /// Barrier-aware theory argmax `r*_G` over the swept ratios (Eq. 12).
@@ -115,7 +215,7 @@ pub struct GroupSummary {
 }
 
 /// Full sweep output: cells in canonical grid order (scenario-major,
-/// then batch, then ratio) plus per-group summaries.
+/// then arrival, then batch, then ratio) plus per-group summaries.
 #[derive(Debug, Clone)]
 pub struct SweepResults {
     pub cells: Vec<SweepCell>,
@@ -124,7 +224,10 @@ pub struct SweepResults {
 
 /// Derive the per-cell seed: a SplitMix64 chain over the experiment seed
 /// and the cell coordinates. Stable across runs, platforms, and thread
-/// schedules; distinct per cell so scenarios don't share request streams.
+/// schedules; distinct per cell so scenarios don't share request
+/// streams. The arrival process deliberately does not enter the chain:
+/// closed and open cells at the same coordinates share length streams,
+/// isolating the arrival-process effect.
 pub fn cell_seed(base: u64, scenario_idx: usize, batch: usize, r: usize) -> u64 {
     let mut sm = SplitMix64::new(
         base ^ (scenario_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -148,34 +251,112 @@ fn cell_config(
         .with_seed(cell_seed(base.seed, scenario_idx, batch, r))
 }
 
+/// Calibrate an open-loop arrival rate: `rho` times the barrier-aware
+/// theory capacity in requests per cycle, for a scenario with stationary
+/// load `load` and mean decode lifetime `mean_decode`.
+pub fn open_loop_rate(
+    hw: crate::config::hardware::HardwareParams,
+    load: StationaryLoad,
+    batch: usize,
+    r: usize,
+    rho: f64,
+    mean_decode: f64,
+) -> f64 {
+    let op = OperatingPoint::new(hw, load, batch);
+    let tokens_per_cycle = op.throughput_gaussian(r) * (r + 1) as f64;
+    rho * tokens_per_cycle / mean_decode.max(1.0)
+}
+
+/// Run one grid cell as a simulation session. Open specs arrive with
+/// their absolute `lambda` already resolved by [`build_jobs`].
+fn run_cell(
+    cfg: &ExperimentConfig,
+    scenario: &Scenario,
+    arrival: ArrivalSpec,
+    r: usize,
+    opts: SimOptions,
+) -> (SimMetrics, ArrivalStats) {
+    let mut builder = Simulation::builder_with_options(cfg, r, opts)
+        .record_steps(false)
+        .length_source(scenario.make_source(cfg.seed));
+    if let ArrivalSpec::Open { lambda, queue_capacity, .. } = arrival {
+        let rate = lambda.expect("build_jobs resolves open-loop rates");
+        builder = builder.arrival(
+            OpenLoopPoisson::new(rate, queue_capacity, cfg.seed)
+                .expect("open arrival spec validated"),
+        );
+    }
+    let out = builder.build().expect("grid cells validated").run();
+    (out.metrics, out.arrival)
+}
+
 struct CellJob {
     scenario_idx: usize,
+    arrival: ArrivalSpec,
     batch: usize,
     r: usize,
     cfg: ExperimentConfig,
 }
 
 fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
+    // Resolve utilization-based open-loop rates here, once: the moment
+    // estimates behind them (Monte Carlo / trace estimator) are constant
+    // per scenario and must not be recomputed inside every cell.
+    let needs_rates = grid
+        .arrivals
+        .iter()
+        .any(|a| matches!(a, ArrivalSpec::Open { lambda: None, .. }));
+    let scenario_moments: Vec<Option<(StationaryLoad, f64)>> = grid
+        .scenarios
+        .iter()
+        .map(|s| needs_rates.then(|| (s.expected_load(), s.mean_decode())))
+        .collect();
+
     let mut jobs = Vec::with_capacity(grid.cell_count());
     for (si, scenario) in grid.scenarios.iter().enumerate() {
-        for &batch in &grid.batches {
-            for &r in &grid.ratios {
-                jobs.push(CellJob {
-                    scenario_idx: si,
-                    batch,
-                    r,
-                    cfg: cell_config(base, scenario, si, batch, r),
-                });
+        for &arrival in &grid.arrivals {
+            for &batch in &grid.batches {
+                for &r in &grid.ratios {
+                    let arrival = match arrival {
+                        ArrivalSpec::Open { rho, lambda: None, queue_capacity } => {
+                            let (load, mean_decode) =
+                                scenario_moments[si].expect("moments computed when needed");
+                            let rate = open_loop_rate(
+                                base.hardware,
+                                load,
+                                batch,
+                                r,
+                                rho,
+                                mean_decode,
+                            );
+                            // Guard against degenerate theory output;
+                            // validation catches the user-facing cases.
+                            let rate =
+                                if rate.is_finite() && rate > 0.0 { rate } else { 1e-6 };
+                            ArrivalSpec::Open { rho, lambda: Some(rate), queue_capacity }
+                        }
+                        other => other,
+                    };
+                    jobs.push(CellJob {
+                        scenario_idx: si,
+                        arrival,
+                        batch,
+                        r,
+                        cfg: cell_config(base, scenario, si, batch, r),
+                    });
+                }
             }
         }
     }
     jobs
 }
 
-/// Assemble cells + group summaries from per-job metrics (in job order).
-fn assemble(grid: &SweepGrid, jobs: &[CellJob], metrics: Vec<SimMetrics>) -> SweepResults {
-    use crate::analysis::cycle_time::OperatingPoint;
-
+/// Assemble cells + group summaries from per-job results (in job order).
+fn assemble(
+    grid: &SweepGrid,
+    jobs: &[CellJob],
+    results: Vec<(SimMetrics, ArrivalStats)>,
+) -> SweepResults {
     // Theory columns are cheap and deterministic: compute serially.
     // Declared moments once per scenario (the Monte Carlo fallback for
     // non-closed-form decode laws is the expensive part).
@@ -183,7 +364,7 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], metrics: Vec<SimMetrics>) -> Swe
         grid.scenarios.iter().map(|s| s.expected_load()).collect();
 
     let mut cells = Vec::with_capacity(jobs.len());
-    for (job, m) in jobs.iter().zip(metrics) {
+    for (job, (m, arrival)) in jobs.iter().zip(results) {
         let load = loads[job.scenario_idx];
         // Hardware is shared across the grid (the base config's); cell
         // configs only vary workload, batch, and seed.
@@ -195,40 +376,45 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], metrics: Vec<SimMetrics>) -> Swe
             theory_mf: op.throughput_mean_field(job.r as f64),
             theory_g: op.throughput_gaussian(job.r),
             metrics: m,
+            arrival,
         });
     }
 
-    // Group summaries per (scenario, batch), in grid order.
-    let mut groups = Vec::with_capacity(grid.scenarios.len() * grid.batches.len());
+    // Group summaries per (scenario, arrival, batch), in grid order.
+    let mut groups =
+        Vec::with_capacity(grid.scenarios.len() * grid.arrivals.len() * grid.batches.len());
     let rn = grid.ratios.len();
     for (si, scenario) in grid.scenarios.iter().enumerate() {
-        for (bi, &batch) in grid.batches.iter().enumerate() {
-            let start = (si * grid.batches.len() + bi) * rn;
-            let slice = &cells[start..start + rn];
-            let (mut r_star_g, mut theory_peak) = (slice[0].metrics.r, slice[0].theory_g);
-            let (mut sim_opt_r, mut sim_peak) =
-                (slice[0].metrics.r, slice[0].metrics.delivered_throughput_per_instance);
-            for c in &slice[1..] {
-                if c.theory_g > theory_peak {
-                    theory_peak = c.theory_g;
-                    r_star_g = c.metrics.r;
+        for (ai, arrival) in grid.arrivals.iter().enumerate() {
+            for (bi, &batch) in grid.batches.iter().enumerate() {
+                let start = ((si * grid.arrivals.len() + ai) * grid.batches.len() + bi) * rn;
+                let slice = &cells[start..start + rn];
+                let (mut r_star_g, mut theory_peak) = (slice[0].metrics.r, slice[0].theory_g);
+                let (mut sim_opt_r, mut sim_peak) =
+                    (slice[0].metrics.r, slice[0].metrics.delivered_throughput_per_instance);
+                for c in &slice[1..] {
+                    if c.theory_g > theory_peak {
+                        theory_peak = c.theory_g;
+                        r_star_g = c.metrics.r;
+                    }
+                    let d = c.metrics.delivered_throughput_per_instance;
+                    if d > sim_peak {
+                        sim_peak = d;
+                        sim_opt_r = c.metrics.r;
+                    }
                 }
-                let d = c.metrics.delivered_throughput_per_instance;
-                if d > sim_peak {
-                    sim_peak = d;
-                    sim_opt_r = c.metrics.r;
-                }
+                groups.push(GroupSummary {
+                    scenario: scenario.name.to_string(),
+                    arrival: arrival.kind().to_string(),
+                    batch,
+                    load: loads[si],
+                    r_star_g,
+                    theory_peak,
+                    sim_opt_r,
+                    sim_peak,
+                    ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs() / sim_opt_r as f64,
+                });
             }
-            groups.push(GroupSummary {
-                scenario: scenario.name.to_string(),
-                batch,
-                load: loads[si],
-                r_star_g,
-                theory_peak,
-                sim_opt_r,
-                sim_peak,
-                ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs() / sim_opt_r as f64,
-            });
         }
     }
 
@@ -248,10 +434,14 @@ pub fn run_grid(
     let n_threads =
         if threads == 0 { default_threads(jobs.len()) } else { threads.min(jobs.len()).max(1) };
     let pool = ThreadPool::new(n_threads);
-    let cfgs: Vec<(ExperimentConfig, usize)> =
-        jobs.iter().map(|j| (j.cfg.clone(), j.r)).collect();
-    let metrics = pool.map(cfgs, move |(cfg, r)| simulate(&cfg, r, opts).metrics);
-    Ok(assemble(grid, &jobs, metrics))
+    let work: Vec<(ExperimentConfig, Scenario, ArrivalSpec, usize)> = jobs
+        .iter()
+        .map(|j| (j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.r))
+        .collect();
+    let results = pool.map(work, move |(cfg, scenario, arrival, r)| {
+        run_cell(&cfg, &scenario, arrival, r, opts)
+    });
+    Ok(assemble(grid, &jobs, results))
 }
 
 /// Serial reference: identical output to [`run_grid`], one cell at a
@@ -264,20 +454,28 @@ pub fn run_grid_serial(
 ) -> Result<SweepResults> {
     grid.validate()?;
     let jobs = build_jobs(base, grid);
-    let metrics: Vec<SimMetrics> =
-        jobs.iter().map(|j| simulate(&j.cfg, j.r, opts).metrics).collect();
-    Ok(assemble(grid, &jobs, metrics))
+    let results: Vec<(SimMetrics, ArrivalStats)> = jobs
+        .iter()
+        .map(|j| run_cell(&j.cfg, &grid.scenarios[j.scenario_idx], j.arrival, j.r, opts))
+        .collect();
+    Ok(assemble(grid, &jobs, results))
 }
 
 /// Parallel drop-in for [`crate::sim::engine::sweep_ratios`]: same
-/// single-workload ratio sweep, same seeds, same output — one simulation
-/// per pool worker instead of a serial loop. Used by the figure builders
-/// so every figure bench is a parallel run.
+/// single-workload ratio sweep, same seeds, same output — one
+/// closed-loop session per pool worker instead of a serial loop. Used by
+/// the figure builders so every figure bench is a parallel run.
 pub fn parallel_sweep_ratios(cfg: &ExperimentConfig, opts: SimOptions) -> Vec<SimMetrics> {
     let pool = ThreadPool::new(default_threads(cfg.ratio_sweep.len()));
     let jobs: Vec<(ExperimentConfig, usize)> =
         cfg.ratio_sweep.iter().map(|&r| (cfg.clone(), r)).collect();
-    pool.map(jobs, move |(cfg, r)| simulate(&cfg, r, opts).metrics)
+    pool.map(jobs, move |(cfg, r)| {
+        Simulation::builder_with_options(&cfg, r, opts)
+            .build()
+            .expect("ratio sweep options are valid")
+            .run()
+            .metrics
+    })
 }
 
 #[cfg(test)]
@@ -294,11 +492,11 @@ mod tests {
     }
 
     fn tiny_grid() -> SweepGrid {
-        SweepGrid {
-            scenarios: scenarios::resolve("short-chat,deterministic-stress").unwrap(),
-            ratios: vec![1, 2, 4],
-            batches: vec![8, 16],
-        }
+        SweepGrid::new(
+            scenarios::resolve("short-chat,deterministic-stress").unwrap(),
+            vec![1, 2, 4],
+            vec![8, 16],
+        )
     }
 
     #[test]
@@ -308,7 +506,7 @@ mod tests {
         let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
         assert_eq!(res.cells.len(), 12);
         assert_eq!(res.groups.len(), 4);
-        // Canonical order: scenario-major, then batch, then ratio.
+        // Canonical order: scenario-major, then arrival, batch, ratio.
         assert_eq!(res.cells[0].scenario, "short-chat");
         assert_eq!(res.cells[0].metrics.batch, 8);
         assert_eq!(res.cells[0].metrics.r, 1);
@@ -316,6 +514,7 @@ mod tests {
         assert_eq!(res.cells[6].scenario, "deterministic-stress");
         assert_eq!(res.cells[11].metrics.r, 4);
         for g in &res.groups {
+            assert_eq!(g.arrival, "closed");
             assert!(grid.ratios.contains(&g.r_star_g));
             assert!(grid.ratios.contains(&g.sim_opt_r));
             assert!(g.sim_peak > 0.0);
@@ -343,6 +542,53 @@ mod tests {
                 b.metrics.delivered_throughput_per_instance.to_bits()
             );
             assert_eq!(a.theory_g.to_bits(), b.theory_g.to_bits());
+        }
+    }
+
+    #[test]
+    fn open_arrival_axis_produces_queueing_metrics() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 60;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::Closed, ArrivalSpec::open(0.9, 256)]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        assert_eq!(res.groups.len(), 2);
+        // First two cells are closed, last two open (arrival-major inside
+        // a scenario).
+        assert_eq!(res.cells[0].arrival.kind, "closed");
+        assert_eq!(res.cells[1].arrival.kind, "closed");
+        assert_eq!(res.cells[2].arrival.kind, "open-poisson");
+        assert_eq!(res.cells[3].arrival.kind, "open-poisson");
+        for c in &res.cells[2..] {
+            assert!(c.arrival.lambda > 0.0);
+            assert!(c.arrival.offered > 0);
+            assert!(c.arrival.admitted > 0);
+            assert_eq!(c.metrics.completed, 60 * c.metrics.r);
+        }
+        assert_eq!(res.groups[0].arrival, "closed");
+        assert_eq!(res.groups[1].arrival, "open-poisson");
+    }
+
+    #[test]
+    fn open_arrival_parallel_matches_serial() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 50;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.8, 64)]);
+        let par = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(a.arrival, b.arrival);
         }
     }
 
@@ -401,6 +647,19 @@ mod tests {
         // Duplicate scenario names would make group lookups ambiguous.
         let mut g = tiny_grid();
         g.scenarios.push(g.scenarios[0].clone());
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        // Arrival axis must be present and valid.
+        let mut g = tiny_grid();
+        g.arrivals.clear();
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let mut g = tiny_grid();
+        g.arrivals = vec![ArrivalSpec::open(0.0, 64)];
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let mut g = tiny_grid();
+        g.arrivals = vec![ArrivalSpec::open(0.5, 0)];
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let mut g = tiny_grid();
+        g.arrivals = vec![ArrivalSpec::Closed, ArrivalSpec::Closed];
         assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
     }
 }

@@ -2,19 +2,25 @@
 //!
 //! The paper validates its closed-form A/F provisioning rule against the
 //! discrete-event simulator *across workloads* (§5, Fig. 3–4); related
-//! work shows the optimal ratio shifts sharply with workload shape. This
+//! work shows the optimal ratio shifts sharply with workload shape and
+//! that realistic arrival processes stress utilization further. This
 //! subsystem makes that validation a one-command parallel run:
 //!
-//! * [`scenarios`] — a named registry of ~8 workload shapes (paper
-//!   geometric baseline, long-context LogNormal, heavy-tail Pareto,
-//!   short chat, bursty mixed-tenant empirical, deterministic stress,
-//!   correlated agentic), each with declared stationary moments.
-//! * [`grid`] — the parallel (scenario × r × B) grid runner on the
-//!   crate thread pool, with a per-cell seed hierarchy that keeps
-//!   parallel output bitwise identical to the serial reference.
+//! * [`scenarios`] — a named registry of ~8 synthetic workload shapes
+//!   (paper geometric baseline, long-context LogNormal, heavy-tail
+//!   Pareto, short chat, bursty mixed-tenant empirical, deterministic
+//!   stress, correlated agentic), each with declared stationary moments,
+//!   plus four `trace:*` trace-replay scenarios backed by
+//!   [`crate::workload::trace::ProductionCorpus`] and driven through
+//!   deterministic per-(lane, worker) sharding.
+//! * [`grid`] — the parallel (scenario × arrival × r × B) grid runner
+//!   on the crate thread pool: closed-loop and open-loop Poisson
+//!   arrival processes per cell, with a per-cell seed hierarchy that
+//!   keeps parallel output bitwise identical to the serial reference.
 //! * [`emit`] — CSV/JSON emission with theory-vs-simulation gap columns
 //!   (`r*_G` from Eq. 12 against the simulation-optimal ratio, the
-//!   paper's "within 10%" headline comparison).
+//!   paper's "within 10%" headline comparison) and the open-loop
+//!   queueing/rejection columns.
 //!
 //! Entry points: `afd sweep` (CLI), [`grid::run_grid`] (library), and
 //! [`grid::parallel_sweep_ratios`] (drop-in parallel Fig. 3 sweep used
@@ -24,5 +30,5 @@ pub mod emit;
 pub mod grid;
 pub mod scenarios;
 
-pub use grid::{run_grid, run_grid_serial, SweepGrid, SweepResults};
-pub use scenarios::{registry, Scenario};
+pub use grid::{run_grid, run_grid_serial, ArrivalSpec, SweepGrid, SweepResults};
+pub use scenarios::{registry, trace_registry, Scenario, SourceSpec};

@@ -8,34 +8,109 @@
 //! appears — each with a stable name usable from the `afd sweep` CLI and
 //! a declared stationary load `(theta, nu^2)` (Lemma 4.1) that the
 //! per-scenario smoke tests check the simulator against.
+//!
+//! Beyond the synthetic shapes, [`trace_registry`] adds four
+//! **trace-replay** scenarios backed by
+//! [`crate::workload::trace::ProductionCorpus`] (openchat / burstgpt /
+//! lmsys / wildchat analogues): each replays a fixed synthetic trace
+//! through [`crate::sim::session::TraceReplay`] with deterministic
+//! per-(lane, worker) sharding, and declares its moments by running the
+//! nonparametric estimator (Appendix A.6) on that trace. Select them
+//! with `trace:<corpus>` or all at once with `trace:*`.
 
 use std::sync::Arc;
 
 use crate::config::workload::WorkloadSpec;
-use crate::stats::distributions::LengthDist;
+use crate::sim::session::{LengthSource, SyntheticSource, TraceReplay};
+use crate::stats::distributions::{Distribution, LengthDist};
 use crate::workload::stationary::{stationary_for_spec, StationaryLoad};
+use crate::workload::trace::{synthetic_production_trace, ProductionCorpus, Trace};
 
 /// Seed for the Monte Carlo fallback of [`stationary_for_spec`] — fixed
 /// so declared moments are identical across processes and threads (the
 /// grid runner's bitwise-determinism guarantee includes theory columns).
 pub const MOMENT_SEED: u64 = 0x5CEA_A710;
 
+/// Seed of the fixed synthetic traces behind the trace-replay scenarios
+/// (deterministic registry: same trace in every process and thread).
+pub const TRACE_SCENARIO_SEED: u64 = 0x7ACE_5EED;
+
+/// Length of the fixed traces behind the trace-replay scenarios.
+pub const TRACE_SCENARIO_LEN: usize = 20_000;
+
+/// Where a scenario's request lengths come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceSpec {
+    /// Sample (P, D) i.i.d. from the scenario's [`WorkloadSpec`], seeded
+    /// per grid cell (the legacy behavior).
+    Synthetic,
+    /// Replay the fixed synthetic analogue of a production corpus with
+    /// deterministic per-(lane, worker) sharding.
+    TraceReplay { corpus: ProductionCorpus, n: usize },
+}
+
 /// One named workload scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
-    /// Stable CLI/CSV identifier (kebab-case).
+    /// Stable CLI/CSV identifier (kebab-case; trace scenarios use a
+    /// `trace:` prefix).
     pub name: &'static str,
     /// One-line description shown by `afd sweep --list`.
     pub description: &'static str,
     pub spec: WorkloadSpec,
+    /// Length source driving the simulator for this scenario.
+    pub source: SourceSpec,
 }
 
 impl Scenario {
     /// Declared stationary per-slot load: closed form where the decode
     /// family allows it (geometric / deterministic), seeded Monte Carlo
-    /// otherwise. Deterministic for a fixed registry.
+    /// otherwise; trace scenarios estimate from their fixed trace
+    /// (Appendix A.6). Deterministic for a fixed registry.
     pub fn expected_load(&self) -> StationaryLoad {
-        stationary_for_spec(&self.spec, MOMENT_SEED)
+        match self.source {
+            SourceSpec::Synthetic => stationary_for_spec(&self.spec, MOMENT_SEED),
+            SourceSpec::TraceReplay { .. } => {
+                let trace = self.trace().expect("trace scenarios carry a trace");
+                crate::workload::estimator::estimate_stationary(&trace)
+                    .unwrap_or_else(|_| stationary_for_spec(&self.spec, MOMENT_SEED))
+            }
+        }
+    }
+
+    /// The fixed trace behind a trace-replay scenario (None otherwise).
+    pub fn trace(&self) -> Option<Trace> {
+        match self.source {
+            SourceSpec::TraceReplay { corpus, n } => {
+                Some(synthetic_production_trace(corpus, n, TRACE_SCENARIO_SEED))
+            }
+            SourceSpec::Synthetic => None,
+        }
+    }
+
+    /// Mean decode lifetime (for converting token rates to request
+    /// rates, e.g. open-loop arrival calibration).
+    pub fn mean_decode(&self) -> f64 {
+        match self.source {
+            SourceSpec::Synthetic => self.spec.decode.mean(),
+            SourceSpec::TraceReplay { .. } => {
+                let trace = self.trace().expect("trace scenarios carry a trace");
+                let n = trace.len().max(1) as f64;
+                trace.requests.iter().map(|r| r.decode as f64).sum::<f64>() / n
+            }
+        }
+    }
+
+    /// Build the session length source for this scenario. `seed` drives
+    /// synthetic sampling (the per-cell seed hierarchy); trace replay is
+    /// seed-independent by construction.
+    pub fn make_source(&self, seed: u64) -> Box<dyn LengthSource> {
+        match self.source {
+            SourceSpec::Synthetic => Box::new(SyntheticSource::new(self.spec.clone(), seed)),
+            SourceSpec::TraceReplay { corpus, n } => {
+                Box::new(TraceReplay::from_corpus(corpus, n, TRACE_SCENARIO_SEED))
+            }
+        }
     }
 }
 
@@ -55,13 +130,15 @@ fn mixed_tenant_prefills() -> Arc<Vec<u64>> {
     Arc::new(v)
 }
 
-/// The built-in scenario registry (order is the canonical sweep order).
+/// The built-in synthetic scenario registry (order is the canonical
+/// sweep order). Trace-replay scenarios live in [`trace_registry`].
 pub fn registry() -> Vec<Scenario> {
     vec![
         Scenario {
             name: "paper-geometric",
             description: "paper SS5.2 baseline: Geom(mu_P=100) prefill, Geom(mu_D=500) decode",
             spec: WorkloadSpec::paper_section5(),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "short-chat",
@@ -70,6 +147,7 @@ pub fn registry() -> Vec<Scenario> {
                 LengthDist::geometric_with_mean(50.0),
                 LengthDist::geometric_with_mean(150.0),
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "long-context",
@@ -79,6 +157,7 @@ pub fn registry() -> Vec<Scenario> {
                 LengthDist::LogNormal { mu: 2000.0_f64.ln() - 0.32, sigma: 0.8, min: 1 },
                 LengthDist::geometric_with_mean(400.0),
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "lognormal-decode",
@@ -88,6 +167,7 @@ pub fn registry() -> Vec<Scenario> {
                 // Continuous mean exp(mu + sigma^2/2) = 600 at sigma 0.7.
                 LengthDist::LogNormal { mu: 600.0_f64.ln() - 0.245, sigma: 0.7, min: 1 },
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "heavy-tail-pareto",
@@ -96,6 +176,7 @@ pub fn registry() -> Vec<Scenario> {
                 LengthDist::Pareto { alpha: 3.5, xmin: 60 },
                 LengthDist::geometric_with_mean(300.0),
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "bursty-mixed-tenant",
@@ -104,6 +185,7 @@ pub fn registry() -> Vec<Scenario> {
                 LengthDist::Empirical(mixed_tenant_prefills()),
                 LengthDist::geometric_with_mean(250.0),
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "deterministic-stress",
@@ -112,6 +194,7 @@ pub fn registry() -> Vec<Scenario> {
                 LengthDist::Deterministic(512),
                 LengthDist::Deterministic(128),
             ),
+            source: SourceSpec::Synthetic,
         },
         Scenario {
             name: "correlated-agentic",
@@ -121,38 +204,87 @@ pub fn registry() -> Vec<Scenario> {
                 decode: LengthDist::geometric_with_mean(400.0),
                 correlation: 0.5,
             },
+            source: SourceSpec::Synthetic,
         },
     ]
 }
 
-/// All registry names, in canonical order.
+fn trace_scenario(corpus: ProductionCorpus) -> Scenario {
+    let (name, description) = match corpus {
+        ProductionCorpus::OpenChatLike => (
+            "trace:openchat-like",
+            "replay the openchat-like corpus trace (short prompts, medium decodes)",
+        ),
+        ProductionCorpus::BurstGptLike => (
+            "trace:burstgpt-like",
+            "replay the burstgpt-like corpus trace (long prompts, short decodes)",
+        ),
+        ProductionCorpus::LmsysLike => (
+            "trace:lmsys-like",
+            "replay the lmsys-like corpus trace (medium prompts and decodes)",
+        ),
+        ProductionCorpus::WildChatLike => (
+            "trace:wildchat-like",
+            "replay the wildchat-like corpus trace (long-tailed prompts, long decodes)",
+        ),
+    };
+    Scenario {
+        name,
+        description,
+        spec: corpus.spec(),
+        source: SourceSpec::TraceReplay { corpus, n: TRACE_SCENARIO_LEN },
+    }
+}
+
+/// The four [`ProductionCorpus`] trace-replay scenarios (Appendix A.8
+/// analogues), in corpus order.
+pub fn trace_registry() -> Vec<Scenario> {
+    ProductionCorpus::all().into_iter().map(trace_scenario).collect()
+}
+
+/// Synthetic registry followed by the trace-replay registry.
+pub fn full_registry() -> Vec<Scenario> {
+    let mut all = registry();
+    all.extend(trace_registry());
+    all
+}
+
+/// All registry names (synthetic + trace), in canonical order.
 pub fn names() -> Vec<&'static str> {
-    registry().into_iter().map(|s| s.name).collect()
+    full_registry().into_iter().map(|s| s.name).collect()
 }
 
-/// Look up one scenario by name.
+/// Look up one scenario by name (synthetic or trace).
 pub fn by_name(name: &str) -> Option<Scenario> {
-    registry().into_iter().find(|s| s.name == name)
+    full_registry().into_iter().find(|s| s.name == name)
 }
 
-/// Resolve a CLI scenario selector: `"all"` (or empty) is the whole
-/// registry; otherwise a comma-separated name list, order-preserving.
+/// Resolve a CLI scenario selector: `"all"` (or empty) is the synthetic
+/// registry; `"trace:*"` is the trace-replay registry; otherwise a
+/// comma-separated name list (each name may also be `trace:*`),
+/// order-preserving.
 pub fn resolve(selector: &str) -> crate::error::Result<Vec<Scenario>> {
     let sel = selector.trim();
     if sel.is_empty() || sel == "all" {
         return Ok(registry());
     }
-    sel.split(',')
-        .map(|raw| {
-            let name = raw.trim();
-            by_name(name).ok_or_else(|| {
+    let mut out = Vec::new();
+    for raw in sel.split(',') {
+        let name = raw.trim();
+        if name == "all" {
+            out.extend(registry());
+        } else if name == "trace:*" {
+            out.extend(trace_registry());
+        } else {
+            out.push(by_name(name).ok_or_else(|| {
                 crate::error::AfdError::config(format!(
-                    "unknown scenario {name:?}; available: {}",
+                    "unknown scenario {name:?}; available: {} (or trace:*)",
                     names().join(", ")
                 ))
-            })
-        })
-        .collect()
+            })?);
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -161,8 +293,8 @@ mod tests {
 
     #[test]
     fn registry_has_stable_unique_names_and_valid_specs() {
-        let reg = registry();
-        assert!(reg.len() >= 8, "expected >= 8 scenarios, got {}", reg.len());
+        let reg = full_registry();
+        assert!(reg.len() >= 12, "expected >= 12 scenarios, got {}", reg.len());
         let mut names: Vec<&str> = reg.iter().map(|s| s.name).collect();
         names.sort_unstable();
         names.dedup();
@@ -189,11 +321,12 @@ mod tests {
 
     #[test]
     fn declared_moments_are_finite_positive_and_deterministic() {
-        for s in registry() {
+        for s in full_registry() {
             let a = s.expected_load();
             a.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
             let b = s.expected_load();
-            // Bitwise-stable: closed forms trivially, MC via MOMENT_SEED.
+            // Bitwise-stable: closed forms trivially, MC via MOMENT_SEED,
+            // trace estimates via TRACE_SCENARIO_SEED.
             assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "{}", s.name);
             assert_eq!(a.nu_sq.to_bits(), b.nu_sq.to_bits(), "{}", s.name);
         }
@@ -215,6 +348,53 @@ mod tests {
         assert_eq!(two[0].name, "short-chat");
         assert_eq!(two[1].name, "deterministic-stress");
         assert!(resolve("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn resolve_trace_selectors() {
+        let traces = resolve("trace:*").unwrap();
+        assert_eq!(traces.len(), 4);
+        assert!(traces.iter().all(|s| s.name.starts_with("trace:")));
+        assert!(traces
+            .iter()
+            .all(|s| matches!(s.source, SourceSpec::TraceReplay { .. })));
+        let one = resolve("trace:burstgpt-like").unwrap();
+        assert_eq!(one.len(), 1);
+        let mixed = resolve("paper-geometric,trace:*").unwrap();
+        assert_eq!(mixed.len(), 5);
+        assert_eq!(mixed[0].name, "paper-geometric");
+    }
+
+    #[test]
+    fn trace_scenarios_declare_estimated_moments_near_spec_moments() {
+        // The trace is sampled from the corpus spec, so the estimated
+        // (theta, nu^2) must land near the spec's Monte Carlo moments.
+        for s in trace_registry() {
+            let estimated = s.expected_load();
+            let spec_mc = stationary_for_spec(&s.spec, MOMENT_SEED);
+            assert!(
+                (estimated.theta / spec_mc.theta - 1.0).abs() < 0.10,
+                "{}: estimated theta {} vs spec {}",
+                s.name,
+                estimated.theta,
+                spec_mc.theta
+            );
+            assert!(s.mean_decode() > 1.0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn trace_scenarios_build_replay_sources() {
+        let s = by_name("trace:openchat-like").unwrap();
+        let mut source = s.make_source(123);
+        let mut a = source.stream(0, 0, 1, 2);
+        let mut b = source.stream(0, 1, 1, 2);
+        // Shards are disjoint residue classes of the same fixed trace.
+        let trace = s.trace().unwrap();
+        assert_eq!(trace.len(), TRACE_SCENARIO_LEN);
+        assert_eq!(a.next_lengths(), trace.requests[0]);
+        assert_eq!(b.next_lengths(), trace.requests[1]);
+        assert_eq!(a.next_lengths(), trace.requests[2]);
     }
 
     #[test]

@@ -55,11 +55,11 @@ fn declared_nu_is_positive_except_deterministic_stress() {
 fn determinism_grid() -> (ExperimentConfig, SweepGrid) {
     let mut base = ExperimentConfig::default();
     base.requests_per_instance = 150;
-    let grid = SweepGrid {
-        scenarios: resolve("short-chat,heavy-tail-pareto,bursty-mixed-tenant").unwrap(),
-        ratios: vec![1, 2, 4],
-        batches: vec![16],
-    };
+    let grid = SweepGrid::new(
+        resolve("short-chat,heavy-tail-pareto,bursty-mixed-tenant").unwrap(),
+        vec![1, 2, 4],
+        vec![16],
+    );
     (base, grid)
 }
 

@@ -7,6 +7,7 @@
 //! with no parametric assumptions.
 //!
 //! Run: `cargo run --release --example provisioning_from_trace`
+//! (`--n <requests>` shrinks the per-corpus trace for CI-sized runs.)
 
 use afd::analysis::provisioning::recommend_from_trace;
 use afd::config::hardware::HardwareParams;
@@ -17,7 +18,13 @@ use afd::workload::trace::{synthetic_production_trace, ProductionCorpus};
 fn main() -> afd::Result<()> {
     let hw = HardwareParams::paper_table3();
     let batch = 256;
-    let n = 20_000;
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args
+        .iter()
+        .position(|a| a == "--n")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
 
     let mut t = Table::new(&[
         "corpus",

@@ -37,11 +37,15 @@ EXPECTED_HEADER = [
     "completed", "total_time",
     "arrival", "lambda", "offered", "admitted", "rejected",
     "mean_queue_wait", "mean_queue_len",
+    "bundles", "policy", "bundle",
+    "imbalance", "idle_share", "realized_vs_eq1", "converged_r",
 ]
 
 INT_COLS = {"r", "batch", "r_star_g", "sim_opt_r", "completed",
-            "offered", "admitted", "rejected"}
-STR_COLS = {"scenario", "seed", "arrival"}
+            "offered", "admitted", "rejected", "bundles", "converged_r"}
+# `bundle` is "agg" on aggregate rows and the bundle index on per-bundle
+# rows of fleet cells, so it stays a string.
+STR_COLS = {"scenario", "seed", "arrival", "policy", "bundle"}
 
 
 def load_rows(path: str) -> list[dict]:
@@ -90,9 +94,18 @@ def load_rows(path: str) -> list[dict]:
 
 
 def groups_of(rows: list[dict]) -> dict[tuple, list[dict]]:
+    """Group *aggregate* rows (bundle == "agg") by the full group key.
+
+    Per-bundle rows of fleet cells share their cell's (scenario, r)
+    coordinates, so only aggregate rows enter the per-group r-axis.
+    """
     out: dict[tuple, list[dict]] = {}
     for row in rows:
-        out.setdefault((row["scenario"], row["arrival"], row["batch"]), []).append(row)
+        if row["bundle"] != "agg":
+            continue
+        key = (row["scenario"], row["arrival"], row["batch"],
+               row["bundles"], row["policy"])
+        out.setdefault(key, []).append(row)
     for cells in out.values():
         cells.sort(key=lambda c: c["r"])
     return out
@@ -104,20 +117,38 @@ def slug(text: str) -> str:
 
 def check(rows: list[dict]) -> None:
     grouped = groups_of(rows)
-    for (scenario, arrival, batch), cells in grouped.items():
+    if not grouped:
+        raise SystemExit("error: no aggregate (bundle == 'agg') rows found")
+    for (scenario, arrival, batch, bundles, policy), cells in grouped.items():
         rs = [c["r"] for c in cells]
         if len(set(rs)) != len(rs):
             raise SystemExit(
-                f"error: duplicate r values in group ({scenario}, {arrival}, B={batch}): {rs}"
+                f"error: duplicate r values in group "
+                f"({scenario}, {arrival}, B={batch}, {bundles}x{policy}): {rs}"
             )
         for c in cells:
             if c["arrival"] == "open-poisson" and c["lambda"] <= 0.0:
                 raise SystemExit(
                     f"error: open-poisson cell ({scenario}, r={c['r']}) has lambda <= 0"
                 )
+    # Per-bundle rows must carry a valid bundle index below their fleet
+    # size (aggregate rows use the "agg" label).
+    for row in rows:
+        if row["bundle"] == "agg":
+            continue
+        try:
+            idx = int(row["bundle"])
+        except ValueError:
+            raise SystemExit(f"error: bundle label {row['bundle']!r} is not an index")
+        if not 0 <= idx < row["bundles"]:
+            raise SystemExit(
+                f"error: bundle index {idx} out of range for fleet of {row['bundles']}"
+            )
+    n_bundle_rows = sum(1 for r in rows if r["bundle"] != "agg")
     print(
-        f"ok: {len(rows)} cells in {len(grouped)} group(s); "
-        f"arrivals: {sorted({r['arrival'] for r in rows})}"
+        f"ok: {len(rows)} rows ({n_bundle_rows} per-bundle) in {len(grouped)} group(s); "
+        f"arrivals: {sorted({r['arrival'] for r in rows})}; "
+        f"fleets: {sorted({(r['bundles'], r['policy']) for r in rows})}"
     )
 
 
@@ -131,7 +162,9 @@ def plot(rows: list[dict], out_dir: str) -> None:
     written = []
 
     # Fig. 3 style: throughput vs r per group, theory overlaid.
-    for (scenario, arrival, batch), cells in grouped.items():
+    for (scenario, arrival, batch, bundles, policy), cells in grouped.items():
+        fleet = "" if bundles == 1 else f", {bundles}x {policy}"
+        fleet_slug = "" if bundles == 1 else f"_{bundles}x{slug(policy)}"
         rs = [c["r"] for c in cells]
         fig, ax = plt.subplots(figsize=(6.0, 4.0))
         ax.plot(rs, [c["sim_delivered"] for c in cells],
@@ -144,10 +177,10 @@ def plot(rows: list[dict], out_dir: str) -> None:
                    label=r"$r^*_G$ (Eq. 12)")
         ax.set_xlabel("Attention:FFN ratio r")
         ax.set_ylabel("throughput per instance (tokens/cycle)")
-        ax.set_title(f"{scenario} — {arrival}, B={batch}")
+        ax.set_title(f"{scenario} — {arrival}, B={batch}{fleet}")
         ax.legend(fontsize=8)
         fig.tight_layout()
-        name = f"fig3_{slug(scenario)}_{slug(arrival)}_B{batch}.png"
+        name = f"fig3_{slug(scenario)}_{slug(arrival)}_B{batch}{fleet_slug}.png"
         fig.savefig(os.path.join(out_dir, name), dpi=150)
         plt.close(fig)
         written.append(name)
@@ -165,17 +198,37 @@ def plot(rows: list[dict], out_dir: str) -> None:
             ax2.set_xlabel("r")
             ax2.set_ylabel("mean queue wait (cycles)")
             ax2.set_title("queueing delay")
-            fig.suptitle(f"{scenario} — open loop, B={batch}", fontsize=10)
+            fig.suptitle(f"{scenario} — open loop, B={batch}{fleet}", fontsize=10)
             fig.tight_layout()
-            name = f"fig_queue_{slug(scenario)}_B{batch}.png"
+            name = f"fig_queue_{slug(scenario)}_B{batch}{fleet_slug}.png"
+            fig.savefig(os.path.join(out_dir, name), dpi=150)
+            plt.close(fig)
+            written.append(name)
+
+        if bundles > 1:
+            # Fleet view: per-bundle imbalance and realized-vs-Eq.1.
+            fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(8.0, 3.2))
+            ax1.plot(rs, [c["imbalance"] for c in cells], "s-")
+            ax1.set_xlabel("r")
+            ax1.set_ylabel("token-load imbalance (max/mean - 1)")
+            ax1.set_title("cross-bundle imbalance")
+            ax2.plot(rs, [c["realized_vs_eq1"] for c in cells], "s-")
+            ax2.axhline(1.0, color="gray", lw=0.8)
+            ax2.set_xlabel("r")
+            ax2.set_ylabel("delivered / $Thr_G$")
+            ax2.set_title("realized vs Eq. 1 throughput")
+            fig.suptitle(f"{scenario} — {bundles}x {policy}, B={batch}", fontsize=10)
+            fig.tight_layout()
+            name = f"fig_fleet_{slug(scenario)}_B{batch}{fleet_slug}.png"
             fig.savefig(os.path.join(out_dir, name), dpi=150)
             plt.close(fig)
             written.append(name)
 
     # Fig. 4 style: theory vs simulation optima across groups.
     labels, theory, sim = [], [], []
-    for (scenario, arrival, batch), cells in sorted(grouped.items()):
-        labels.append(f"{scenario}\n{arrival}, B={batch}")
+    for (scenario, arrival, batch, bundles, policy), cells in sorted(grouped.items()):
+        fleet = "" if bundles == 1 else f", {bundles}x{policy}"
+        labels.append(f"{scenario}\n{arrival}, B={batch}{fleet}")
         theory.append(cells[0]["r_star_g"])
         sim.append(cells[0]["sim_opt_r"])
     x = range(len(labels))

@@ -46,6 +46,30 @@ fn main() {
             "  est. full Fig.3 sweep: {:.1}s (paper's artifact: ~15 min)",
             paper_steps / (res.throughput(slot_steps))
         );
+
+        // B = 512 single cell: the baseline guard for the still-open SoA
+        // `SlotArray` storage item (ROADMAP). Large batches stress the
+        // per-slot Option<ActiveRequest> AoS layout the most — record
+        // lane-steps/sec and slot-steps/sec so the SoA change has a
+        // before/after number.
+        let mut big = ExperimentConfig::default();
+        big.topology.batch_per_worker = 512;
+        big.requests_per_instance = if fast { 60 } else { 200 };
+        let r_big = 4;
+        let res = bench(&format!("sim r={r_big} B=512 single cell"), cfg_fast, || {
+            simulate(&big, r_big, SimOptions::default()).metrics.completed
+        });
+        // mu_D = 500 for the paper workload: each completion is ~500
+        // slot-steps; every lane-step advances r*B slots.
+        let slot_steps =
+            big.requests_per_instance as f64 * r_big as f64 * 500.0;
+        let lane_steps = slot_steps / (r_big * 512) as f64;
+        println!(
+            "{}  -> {:.2}M slot-steps/sec, {:.0} lane-steps/sec (B=512 SoA baseline)",
+            res.summary(),
+            res.throughput(slot_steps) / 1e6,
+            res.throughput(lane_steps)
+        );
     }
 
     println!("\n== lane scheduling (BinaryHeap vs legacy linear min-scan) ==");

@@ -1,196 +1,153 @@
-//! ROUTER — ablation of load-balancing placement (paper §3.2's remark:
-//! balancing routing shrinks the effective cross-worker variance, and
-//! with it the barrier overhead of Theorem 4.3 — with some irreducible
-//! residual variance).
+//! ROUTER — ablation of load-balancing placement at fleet scale,
+//! rewired onto the cluster simulator (paper §3.2's remark: balancing
+//! routing shrinks the effective cross-worker variance, and with it the
+//! barrier overhead of Theorem 4.3 — with some irreducible residual
+//! variance; at fleet scale the same effect governs cross-*bundle*
+//! skew).
 //!
-//! Model: under continuous batching, each step frees a set of slots
-//! spread across the r workers; the same number of new requests must be
-//! placed into exactly those slots. The *assignment* of requests to
-//! freed slots is the placement policy:
+//! Model: a 4-bundle `rA-1F` fleet under open-loop Poisson traffic at
+//! ~0.9x of the barrier-aware per-bundle capacity. The shared stream is
+//! split by each [`Policy`] in turn — round-robin (oblivious), JSQ
+//! (fewest queued), least-token-load (universal-balancing analogue) —
+//! through the *same* engine-agnostic coordinator
+//! ([`afd::coordinator::Router`] over `BundleLoad` snapshots) the real
+//! serving engine uses.
 //!
-//! * arrival-order (round-robin analogue): requests fill freed slots in
-//!   arrival order — oblivious to load;
-//! * random: a shuffled assignment (JSQ analogue at slot granularity);
-//! * least-token-load: largest-prompt request goes to the currently
-//!   lightest worker (greedy LPT balancing).
-//!
-//! We measure the stationary cross-worker spread E[max_j T_j]/E[T] - 1
-//! and the effective per-slot nu implied by Var(T_j), and compare with
-//! the i.i.d. CLT prediction of Theorem 4.3.
+//! We measure the time-average cross-bundle token-load imbalance
+//! `E[max_b T_b / mean T_b] - 1`, the spread of per-bundle delivered
+//! throughput, and queueing (mean wait, rejections), and assert the
+//! load-aware policies do not worsen the imbalance relative to RR.
 
-use afd::analysis::barrier::relative_overhead;
-use afd::config::workload::WorkloadSpec;
-use afd::stats::moments::RunningMoments;
-use afd::stats::rng::Pcg64;
+use afd::analysis::cycle_time::OperatingPoint;
+use afd::config::experiment::ExperimentConfig;
+use afd::coordinator::router::Policy;
+use afd::sim::cluster::{ClusterArrival, ClusterSimulation};
+use afd::sweep::grid::open_loop_rate;
 use afd::util::csvio::CsvTable;
 use afd::util::tablefmt::{pct, sig, Table};
-use afd::workload::generator::RequestGenerator;
-use afd::workload::stationary::{stationary_geometric, StationaryLoad};
+use afd::workload::stationary::stationary_geometric;
 
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Placement {
-    ArrivalOrder,
-    Random,
-    LeastTokenLoad,
+struct PolicyResult {
+    imbalance: f64,
+    delivered_spread: f64,
+    mean_wait: f64,
+    rejected: u64,
+    mean_delivered: f64,
 }
 
-impl Placement {
-    fn name(self) -> &'static str {
-        match self {
-            Placement::ArrivalOrder => "arrival-order (RR)",
-            Placement::Random => "random (JSQ-like)",
-            Placement::LeastTokenLoad => "least-token-load",
-        }
+fn run_policy(
+    cfg: &ExperimentConfig,
+    policy: Policy,
+    bundles: usize,
+    lambda_cluster: f64,
+    per_bundle_completions: usize,
+) -> PolicyResult {
+    let out = ClusterSimulation::builder(cfg, cfg.topology.workers)
+        .bundles(bundles)
+        .policy(policy)
+        .arrival(ClusterArrival::Open { lambda: lambda_cluster, queue_capacity: 8192 })
+        .completions_per_bundle(Some(per_bundle_completions))
+        .build()
+        .expect("valid ablation cluster")
+        .run()
+        .expect("ablation cluster runs");
+    let delivered: Vec<f64> = out
+        .bundles
+        .iter()
+        .map(|b| b.metrics.delivered_throughput_per_instance)
+        .collect();
+    let mean = delivered.iter().sum::<f64>() / delivered.len() as f64;
+    let max = delivered.iter().cloned().fold(f64::MIN, f64::max);
+    let min = delivered.iter().cloned().fold(f64::MAX, f64::min);
+    PolicyResult {
+        imbalance: out.load_imbalance,
+        delivered_spread: (max - min) / mean,
+        mean_wait: out.arrival.mean_queue_wait,
+        rejected: out.arrival.rejected,
+        mean_delivered: mean,
     }
-}
-
-/// Returns (mean worker load, mean max load, mean cross-worker variance).
-fn run_policy(policy: Placement, r: usize, b: usize, steps: usize, seed: u64) -> (f64, f64, f64) {
-    let spec = WorkloadSpec::paper_section5();
-    let mut gen = RequestGenerator::new(spec, seed);
-    let mut rng = Pcg64::new(seed ^ 0xB0B);
-    // Per-slot state: (remaining decode steps, current token load).
-    let mut remaining = vec![vec![0u64; b]; r];
-    let mut load = vec![vec![0u64; b]; r];
-    for w in 0..r {
-        for s in 0..b {
-            let req = gen.next_lengths();
-            remaining[w][s] = req.decode;
-            load[w][s] = req.prefill;
-        }
-    }
-    let mut mean_acc = RunningMoments::new();
-    let mut max_acc = RunningMoments::new();
-    let mut var_acc = RunningMoments::new();
-    let warmup = steps / 4;
-    for step in 0..steps {
-        // Advance; collect freed slots.
-        let mut freed: Vec<(usize, usize)> = Vec::new();
-        for w in 0..r {
-            for s in 0..b {
-                remaining[w][s] -= 1;
-                load[w][s] += 1;
-                if remaining[w][s] == 0 {
-                    freed.push((w, s));
-                    load[w][s] = 0; // vacated
-                }
-            }
-        }
-        // Draw replacements and place per policy.
-        let mut requests: Vec<_> = (0..freed.len()).map(|_| gen.next_lengths()).collect();
-        match policy {
-            Placement::ArrivalOrder => {}
-            Placement::Random => rng.shuffle(&mut requests),
-            Placement::LeastTokenLoad => {
-                // Largest prompt first; each goes to the lightest worker
-                // that still has a freed slot.
-                requests.sort_by_key(|q| std::cmp::Reverse(q.prefill));
-                let mut totals: Vec<u64> =
-                    (0..r).map(|w| load[w].iter().sum::<u64>()).collect();
-                let mut freed_by_worker: Vec<Vec<usize>> = vec![Vec::new(); r];
-                for &(w, s) in &freed {
-                    freed_by_worker[w].push(s);
-                }
-                for q in requests {
-                    let w = (0..r)
-                        .filter(|&w| !freed_by_worker[w].is_empty())
-                        .min_by_key(|&w| totals[w])
-                        .unwrap();
-                    let s = freed_by_worker[w].pop().unwrap();
-                    remaining[w][s] = q.decode;
-                    load[w][s] = q.prefill;
-                    totals[w] += q.prefill;
-                }
-                // Placement done inline; skip the generic path below.
-                if step >= warmup {
-                    record(&load, r, &mut mean_acc, &mut max_acc, &mut var_acc);
-                }
-                continue;
-            }
-        }
-        for (&(w, s), q) in freed.iter().zip(&requests) {
-            remaining[w][s] = q.decode;
-            load[w][s] = q.prefill;
-        }
-        if step >= warmup {
-            record(&load, r, &mut mean_acc, &mut max_acc, &mut var_acc);
-        }
-    }
-    (mean_acc.mean(), max_acc.mean(), var_acc.mean())
-}
-
-fn record(
-    load: &[Vec<u64>],
-    r: usize,
-    mean_acc: &mut RunningMoments,
-    max_acc: &mut RunningMoments,
-    var_acc: &mut RunningMoments,
-) {
-    let totals: Vec<u64> = (0..r).map(|w| load[w].iter().sum::<u64>()).collect();
-    let mean = totals.iter().sum::<u64>() as f64 / r as f64;
-    let max = *totals.iter().max().unwrap() as f64;
-    mean_acc.push(mean);
-    max_acc.push(max);
-    let var =
-        totals.iter().map(|&t| (t as f64 - mean) * (t as f64 - mean)).sum::<f64>() / r as f64;
-    var_acc.push(var);
 }
 
 fn main() {
     let fast = std::env::var("AFD_FAST").is_ok();
-    let (r, b) = (8usize, 256usize);
-    let steps = if fast { 4_000 } else { 30_000 };
-    let exact = stationary_geometric(100.0, 9900.0, 500.0);
-    let iid_overhead = relative_overhead(&exact, b, r);
+    let bundles = 4usize;
+    let r = 4usize;
+    let b = 64usize;
+    let per_bundle = if fast { 400 } else { 2_000 };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology.workers = r;
+    cfg.topology.batch_per_worker = b;
+    // The paper's geometric shape, scaled down for bench speed.
+    cfg.workload = afd::config::workload::WorkloadSpec::independent(
+        afd::stats::distributions::LengthDist::geometric_with_mean(100.0),
+        afd::stats::distributions::LengthDist::geometric_with_mean(100.0),
+    );
+
+    // 0.9x of the per-bundle barrier-aware capacity, times the fleet.
+    let load = stationary_geometric(100.0, 9900.0, 100.0);
+    let per_bundle_rate = open_loop_rate(cfg.hardware, load, b, r, 0.9, 100.0);
+    let lambda_cluster = per_bundle_rate * bundles as f64;
+    let op = OperatingPoint::new(cfg.hardware, load, b);
 
     let mut t = Table::new(&[
         "policy",
-        "mean load",
-        "mean max load",
-        "observed overhead",
-        "effective nu",
-        "implied CLT overhead",
+        "token-load imbalance",
+        "delivered spread",
+        "mean delivered/inst",
+        "vs Thr_G",
+        "mean queue wait",
+        "rejected",
     ])
-    .with_title("Router ablation — barrier overhead vs placement policy (r=8, B=256)");
-    let mut csv = CsvTable::new(&["policy", "overhead", "nu_eff"]);
+    .with_title(format!(
+        "Router ablation — {bundles} x {r}A-1F fleet, open loop at 0.9x capacity (B = {b})"
+    )
+    .as_str());
+    let mut csv = CsvTable::new(&["policy", "imbalance", "delivered_spread", "mean_wait"]);
     let mut results = Vec::new();
-    for policy in [Placement::ArrivalOrder, Placement::Random, Placement::LeastTokenLoad] {
-        let (mean, max, var) = run_policy(policy, r, b, steps, 99);
-        let overhead = max / mean - 1.0;
-        let nu_eff = (var / b as f64).sqrt();
-        let implied = relative_overhead(
-            &StationaryLoad { theta: exact.theta, nu_sq: nu_eff * nu_eff },
-            b,
-            r,
-        );
+    for policy in [Policy::RoundRobin, Policy::JoinShortestQueue, Policy::LeastTokenLoad] {
+        let res = run_policy(&cfg, policy, bundles, lambda_cluster, per_bundle);
         t.row(&[
             policy.name().to_string(),
-            sig(mean, 6),
-            sig(max, 6),
-            pct(overhead),
-            sig(nu_eff, 4),
-            pct(implied),
+            pct(res.imbalance),
+            pct(res.delivered_spread),
+            sig(res.mean_delivered, 5),
+            format!("{:.2}", res.mean_delivered / op.throughput_gaussian(r)),
+            sig(res.mean_wait, 4),
+            res.rejected.to_string(),
         ]);
         csv.push_row(&[
             policy.name().to_string(),
-            format!("{overhead:.5}"),
-            format!("{nu_eff:.2}"),
+            format!("{:.5}", res.imbalance),
+            format!("{:.5}", res.delivered_spread),
+            format!("{:.3}", res.mean_wait),
         ]);
-        results.push((policy, overhead));
+        results.push(res);
     }
     t.print();
-    println!("i.i.d. CLT prediction (Theorem 4.3, no balancing): {}", pct(iid_overhead));
-    let rr = results[0].1;
-    let lt = results[2].1;
+
+    let rr = &results[0];
+    let jsq = &results[1];
+    let ltl = &results[2];
+    // Guard: load-aware routing must not worsen cross-bundle imbalance.
     assert!(
-        lt < rr + 0.002,
-        "least-token-load must not worsen the barrier: RR {rr:.4} vs LTL {lt:.4}"
+        ltl.imbalance < rr.imbalance + 0.01,
+        "least-token-load must not worsen bundle imbalance: RR {:.4} vs LTL {:.4}",
+        rr.imbalance,
+        ltl.imbalance
+    );
+    assert!(
+        jsq.imbalance < rr.imbalance + 0.01,
+        "jsq must not worsen bundle imbalance: RR {:.4} vs JSQ {:.4}",
+        rr.imbalance,
+        jsq.imbalance
     );
     println!(
-        "load-aware placement: barrier overhead {} -> {} (residual variance remains,\n\
-         as the paper's §3.2 predicts).",
-        pct(rr),
-        pct(lt)
+        "load-aware placement: cross-bundle imbalance {} (RR) -> {} (JSQ) -> {} (LTL);\n\
+         residual variance remains, as §3.2 predicts.",
+        pct(rr.imbalance),
+        pct(jsq.imbalance),
+        pct(ltl.imbalance)
     );
     std::fs::create_dir_all("bench_out").ok();
     csv.write_path("bench_out/router.csv").unwrap();

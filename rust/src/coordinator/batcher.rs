@@ -9,8 +9,9 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::coordinator::kv::KvSlotManager;
+use crate::coordinator::load::LoadSnapshot;
 use crate::coordinator::request_state::{ServingRequest, TrackedRequest};
-use crate::coordinator::router::{Policy, Router, WorkerLoad};
+use crate::coordinator::router::{Policy, Router};
 use crate::error::{AfdError, Result};
 
 /// An admission event: request placed into (worker, slot).
@@ -49,12 +50,16 @@ impl Batcher {
         self.worker_queues.len()
     }
 
-    fn worker_loads(&self) -> Vec<WorkerLoad> {
+    /// Per-worker routing snapshots: the worker's KV view
+    /// ([`crate::coordinator::load::BundleLoad`] on [`KvSlotManager`])
+    /// with the batcher's per-worker queue length folded in. The same
+    /// snapshot type the cluster simulator routes over — one
+    /// coordinator, two engines.
+    pub fn loads(&self) -> Vec<LoadSnapshot> {
         (0..self.workers())
-            .map(|w| WorkerLoad {
+            .map(|w| LoadSnapshot {
                 queued: self.worker_queues[w].len(),
-                token_load: self.kv[w].token_load(),
-                free_slots: self.kv[w].free_slots(),
+                ..LoadSnapshot::of(&self.kv[w])
             })
             .collect()
     }
@@ -73,7 +78,7 @@ impl Batcher {
         if self.requests.contains_key(&request.id) {
             return Err(AfdError::Coordinator(format!("duplicate request id {}", request.id)));
         }
-        let worker = self.router.route(&self.worker_loads());
+        let worker = self.router.route(&self.loads());
         self.worker_queues[worker].push_back(request.id);
         self.requests.insert(request.id, TrackedRequest::new(request));
         Ok(worker)

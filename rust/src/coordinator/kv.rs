@@ -7,6 +7,7 @@
 //! admission-time capacity feasibility (a request whose prefill + budget
 //! exceeds capacity must be rejected up front, not mid-decode).
 
+use crate::coordinator::load::BundleLoad;
 use crate::error::{AfdError, Result};
 
 /// State of one KV slot.
@@ -84,17 +85,19 @@ impl KvSlotManager {
         Ok(slot)
     }
 
-    /// Advance a live slot by one decoded token.
+    /// Advance a live slot by one decoded token. Checks capacity before
+    /// mutating, so a refused advance leaves the slot state intact
+    /// (`seq_len <= capacity` is an invariant, not a best effort).
     pub fn advance(&mut self, slot: usize) -> Result<u64> {
+        let capacity = self.capacity;
         match &mut self.slots[slot] {
             SlotState::Live { seq_len, .. } => {
-                *seq_len += 1;
-                if *seq_len > self.capacity {
+                if *seq_len >= capacity {
                     return Err(AfdError::Coordinator(format!(
-                        "slot {slot} overflowed capacity {}",
-                        self.capacity
+                        "slot {slot} overflowed capacity {capacity}"
                     )));
                 }
+                *seq_len += 1;
                 Ok(*seq_len)
             }
             SlotState::Free => {
@@ -118,6 +121,45 @@ impl KvSlotManager {
 
     pub fn slot(&self, i: usize) -> SlotState {
         self.slots[i]
+    }
+
+    /// Remaining KV token capacity: full capacity for each free slot plus
+    /// the unconsumed margin of every live slot.
+    pub fn headroom(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                SlotState::Free => self.capacity,
+                SlotState::Live { seq_len, .. } => self.capacity.saturating_sub(*seq_len),
+            })
+            .sum()
+    }
+}
+
+/// A worker's slot table is directly routable: the engine-agnostic load
+/// view the coordinator policies consult ([`BundleLoad`]). The admission
+/// queue lives in the batcher, so `queued` is 0 at this granularity —
+/// [`crate::coordinator::Batcher`] folds its per-worker queues in when it
+/// builds routing snapshots.
+impl BundleLoad for KvSlotManager {
+    fn queued(&self) -> usize {
+        0
+    }
+
+    fn token_load(&self) -> u64 {
+        KvSlotManager::token_load(self)
+    }
+
+    fn live_slots(&self) -> usize {
+        KvSlotManager::live_slots(self)
+    }
+
+    fn free_slots(&self) -> usize {
+        KvSlotManager::free_slots(self)
+    }
+
+    fn kv_headroom(&self) -> u64 {
+        self.headroom()
     }
 }
 
@@ -156,11 +198,17 @@ mod tests {
     }
 
     #[test]
-    fn advance_overflow_detected() {
+    fn advance_overflow_detected_without_corrupting_state() {
         let mut kv = KvSlotManager::new(1, 5);
         let s = kv.admit(1, 4, 1).unwrap();
         assert_eq!(kv.advance(s).unwrap(), 5);
         assert!(kv.advance(s).is_err());
+        // The refused advance did not mutate the slot.
+        assert_eq!(kv.slot(s), SlotState::Live { request_id: 1, seq_len: 5 });
+        assert_eq!(kv.headroom(), 0);
+        // And it keeps refusing, stably.
+        assert!(kv.advance(s).is_err());
+        assert_eq!(kv.slot(s), SlotState::Live { request_id: 1, seq_len: 5 });
     }
 
     #[test]
@@ -169,5 +217,19 @@ mod tests {
         assert!(kv.advance(0).is_err());
         assert!(kv.release(1).is_err());
         assert_eq!(kv.slot(0), SlotState::Free);
+    }
+
+    #[test]
+    fn bundle_load_view_matches_inherent_accessors() {
+        let mut kv = KvSlotManager::new(3, 100);
+        kv.admit(1, 20, 10).unwrap();
+        kv.admit(2, 5, 10).unwrap();
+        let view: &dyn BundleLoad = &kv;
+        assert_eq!(view.queued(), 0);
+        assert_eq!(view.token_load(), 21 + 6);
+        assert_eq!(view.live_slots(), 2);
+        assert_eq!(view.free_slots(), 1);
+        // Headroom: free slot 100 + (100-20) + (100-5).
+        assert_eq!(view.kv_headroom(), 100 + 80 + 95);
     }
 }

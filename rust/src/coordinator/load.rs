@@ -1,0 +1,124 @@
+//! Engine-agnostic load observability — the surface the coordinator
+//! policies (routing, autoscaling, admission) consult.
+//!
+//! The coordinator used to read `server/`-specific state directly, which
+//! chained the router and autoscaler to the threaded PJRT engine and left
+//! them unreachable from the simulator. [`BundleLoad`] abstracts the four
+//! quantities every placement/scaling decision needs — queued backlog,
+//! live token load, slot occupancy, and KV headroom — so the same
+//! [`crate::coordinator::Router`] ranks real engine workers
+//! ([`crate::coordinator::KvSlotManager`] implements the trait) and
+//! simulated `rA-1F` bundles ([`crate::sim::cluster::ClusterSimulation`]
+//! builds [`LoadSnapshot`]s from its bundles) with one code path.
+
+/// A point-in-time view of one load-bearing unit (a worker inside a
+/// bundle, or a whole bundle inside a cluster) at decision time.
+pub trait BundleLoad {
+    /// Requests waiting in this unit's admission queue (not yet decoding).
+    fn queued(&self) -> usize;
+
+    /// Current total token load of the unit's live slots — the driving
+    /// variable of `t_A` (§3.1), and what balancing policies minimize the
+    /// spread of (§3.2).
+    fn token_load(&self) -> u64;
+
+    /// Occupied decode slots.
+    fn live_slots(&self) -> usize;
+
+    /// Free decode slots (admission capacity right now).
+    fn free_slots(&self) -> usize;
+
+    /// Remaining KV token capacity across the unit's slots. Units without
+    /// a hard KV bound (the simulator's unbounded-context model) report
+    /// `u64::MAX`.
+    fn kv_headroom(&self) -> u64 {
+        u64::MAX
+    }
+}
+
+/// Owned snapshot of a [`BundleLoad`] observation — what callers build
+/// when the underlying engine state cannot be borrowed across the
+/// routing call (the cluster simulator's per-arrival decisions, the
+/// batcher's per-submit ranking).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadSnapshot {
+    pub queued: usize,
+    pub token_load: u64,
+    pub live_slots: usize,
+    pub free_slots: usize,
+    pub kv_headroom: u64,
+}
+
+impl LoadSnapshot {
+    /// Snapshot any [`BundleLoad`] implementor.
+    pub fn of(load: &impl BundleLoad) -> Self {
+        Self {
+            queued: load.queued(),
+            token_load: load.token_load(),
+            live_slots: load.live_slots(),
+            free_slots: load.free_slots(),
+            kv_headroom: load.kv_headroom(),
+        }
+    }
+}
+
+impl BundleLoad for LoadSnapshot {
+    fn queued(&self) -> usize {
+        self.queued
+    }
+
+    fn token_load(&self) -> u64 {
+        self.token_load
+    }
+
+    fn live_slots(&self) -> usize {
+        self.live_slots
+    }
+
+    fn free_slots(&self) -> usize {
+        self.free_slots
+    }
+
+    fn kv_headroom(&self) -> u64 {
+        self.kv_headroom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed;
+    impl BundleLoad for Fixed {
+        fn queued(&self) -> usize {
+            3
+        }
+        fn token_load(&self) -> u64 {
+            700
+        }
+        fn live_slots(&self) -> usize {
+            5
+        }
+        fn free_slots(&self) -> usize {
+            11
+        }
+    }
+
+    #[test]
+    fn snapshot_captures_every_field() {
+        let s = LoadSnapshot::of(&Fixed);
+        assert_eq!(s.queued(), 3);
+        assert_eq!(s.token_load(), 700);
+        assert_eq!(s.live_slots(), 5);
+        assert_eq!(s.free_slots(), 11);
+        // Default headroom: unbounded.
+        assert_eq!(s.kv_headroom(), u64::MAX);
+    }
+
+    #[test]
+    fn snapshot_is_itself_a_bundle_load() {
+        let s = LoadSnapshot { queued: 1, token_load: 2, live_slots: 3, free_slots: 4, kv_headroom: 5 };
+        let s2 = LoadSnapshot::of(&s);
+        assert_eq!(s, s2);
+    }
+}

@@ -2,7 +2,13 @@
 //! PJRT runtime.
 //!
 //! * [`request_state`] — request lifecycle state machine.
-//! * [`router`] — placement policies (round-robin / JSQ / least-token-load).
+//! * [`load`] — the engine-agnostic [`load::BundleLoad`] observability
+//!   trait (queued backlog, token load, slot occupancy, KV headroom)
+//!   every policy decision consumes; implemented by the real engine's
+//!   KV tables and by the cluster simulator's bundle snapshots.
+//! * [`router`] — placement policies (round-robin / JSQ / least-token-load)
+//!   over any [`load::BundleLoad`] views: workers within a bundle, or
+//!   bundles within a simulated cluster.
 //! * [`kv`] — per-worker KV slot accounting with capacity enforcement.
 //! * [`batcher`] — continuous-batching admission (slots refilled the step
 //!   they free, paper Fig. 1).
@@ -14,6 +20,7 @@
 pub mod autoscale;
 pub mod batcher;
 pub mod kv;
+pub mod load;
 pub mod request_state;
 pub mod router;
 pub mod scheduler;
@@ -21,6 +28,7 @@ pub mod scheduler;
 pub use autoscale::{Autoscaler, Reconfiguration};
 pub use batcher::{Admission, Batcher};
 pub use kv::{KvSlotManager, SlotState};
+pub use load::{BundleLoad, LoadSnapshot};
 pub use request_state::{RequestState, ServingRequest, TrackedRequest};
-pub use router::{Policy, Router, WorkerLoad};
+pub use router::{Policy, Router};
 pub use scheduler::{PipelineEstimator, StepBarrier};

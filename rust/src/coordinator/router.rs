@@ -1,10 +1,20 @@
-//! Request routing policies across Attention workers.
+//! Request routing policies across load-bearing units (Attention workers
+//! within a bundle, or whole `rA-1F` bundles within a cluster).
 //!
 //! The paper's cross-worker barrier (Theorem 4.3) is driven by load
 //! *imbalance*: routing that equalizes per-worker token load shrinks the
 //! effective `nu` and with it the synchronization overhead — the
 //! "load-balancing routing policies [Chen et al., 2026]" remark of §3.2.
-//! Three policies are provided and ablated in the router bench:
+//! At fleet scale the same policies decide which bundle an arriving
+//! request joins, where skew changes the effective per-bundle workload
+//! the `r*_G` rule was derived for.
+//!
+//! The router is engine-agnostic: it ranks anything implementing
+//! [`BundleLoad`], so the threaded serving engine (via
+//! [`crate::coordinator::Batcher`]) and the cluster simulator (via
+//! [`crate::coordinator::LoadSnapshot`]s of its bundles) share one
+//! placement code path. Three policies are provided and ablated in the
+//! router bench:
 //!
 //! * [`Policy::RoundRobin`] — oblivious placement.
 //! * [`Policy::JoinShortestQueue`] — fewest queued requests.
@@ -12,16 +22,8 @@
 //!   universal-balancing-principle analogue; strongest variance
 //!   reduction).
 
-/// Per-worker view the router sees at placement time.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct WorkerLoad {
-    /// Requests waiting in this worker's admission queue.
-    pub queued: usize,
-    /// Current total token load of the worker's live slots.
-    pub token_load: u64,
-    /// Number of free slots.
-    pub free_slots: usize,
-}
+use crate::coordinator::load::BundleLoad;
+use crate::error::{AfdError, Result};
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +39,18 @@ impl Policy {
             Policy::RoundRobin => "round-robin",
             Policy::JoinShortestQueue => "jsq",
             Policy::LeastTokenLoad => "least-token-load",
+        }
+    }
+
+    /// Parse a CLI selector (accepts the short and the full spelling).
+    pub fn parse(name: &str) -> Result<Policy> {
+        match name.trim() {
+            "rr" | "round-robin" => Ok(Policy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Ok(Policy::JoinShortestQueue),
+            "ltl" | "least-token-load" => Ok(Policy::LeastTokenLoad),
+            other => Err(AfdError::config(format!(
+                "unknown routing policy {other:?}; expected rr|jsq|ltl"
+            ))),
         }
     }
 }
@@ -57,26 +71,27 @@ impl Router {
         self.policy
     }
 
-    /// Choose a destination worker for the next request.
-    pub fn route(&mut self, workers: &[WorkerLoad]) -> usize {
-        assert!(!workers.is_empty());
+    /// Choose a destination unit for the next request, given one
+    /// [`BundleLoad`] view per candidate.
+    pub fn route<L: BundleLoad>(&mut self, units: &[L]) -> usize {
+        assert!(!units.is_empty());
         match self.policy {
             Policy::RoundRobin => {
-                let w = self.rr_next % workers.len();
+                let w = self.rr_next % units.len();
                 self.rr_next = self.rr_next.wrapping_add(1);
                 w
             }
             Policy::JoinShortestQueue => {
                 // Fewest queued; tie-break by token load then index.
-                (0..workers.len())
-                    .min_by_key(|&i| (workers[i].queued, workers[i].token_load, i))
+                (0..units.len())
+                    .min_by_key(|&i| (units[i].queued(), units[i].token_load(), i))
                     .unwrap()
             }
             Policy::LeastTokenLoad => {
                 // Smallest effective load including queued backlog proxy.
-                (0..workers.len())
+                (0..units.len())
                     .min_by_key(|&i| {
-                        (workers[i].token_load + 1000 * workers[i].queued as u64, i)
+                        (units[i].token_load() + 1000 * units[i].queued() as u64, i)
                     })
                     .unwrap()
             }
@@ -87,11 +102,18 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::load::LoadSnapshot;
 
-    fn loads(specs: &[(usize, u64)]) -> Vec<WorkerLoad> {
+    fn loads(specs: &[(usize, u64)]) -> Vec<LoadSnapshot> {
         specs
             .iter()
-            .map(|&(queued, token_load)| WorkerLoad { queued, token_load, free_slots: 1 })
+            .map(|&(queued, token_load)| LoadSnapshot {
+                queued,
+                token_load,
+                live_slots: 0,
+                free_slots: 1,
+                kv_headroom: u64::MAX,
+            })
             .collect()
     }
 
@@ -129,9 +151,15 @@ mod tests {
             let mut router = Router::new(policy);
             let mut tokens = [0u64; 4];
             for _ in 0..4000 {
-                let w: Vec<WorkerLoad> = tokens
+                let w: Vec<LoadSnapshot> = tokens
                     .iter()
-                    .map(|&t| WorkerLoad { queued: 0, token_load: t, free_slots: 1 })
+                    .map(|&t| LoadSnapshot {
+                        queued: 0,
+                        token_load: t,
+                        live_slots: 0,
+                        free_slots: 1,
+                        kv_headroom: u64::MAX,
+                    })
                     .collect();
                 let dst = router.route(&w);
                 tokens[dst] += rng.next_range(1, 1000);
@@ -144,9 +172,13 @@ mod tests {
     }
 
     #[test]
-    fn policy_names() {
+    fn policy_names_and_parse() {
         assert_eq!(Policy::RoundRobin.name(), "round-robin");
         assert_eq!(Policy::JoinShortestQueue.name(), "jsq");
         assert_eq!(Policy::LeastTokenLoad.name(), "least-token-load");
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("jsq").unwrap(), Policy::JoinShortestQueue);
+        assert_eq!(Policy::parse("least-token-load").unwrap(), Policy::LeastTokenLoad);
+        assert!(Policy::parse("bogus").is_err());
     }
 }

@@ -26,15 +26,19 @@
 //!   batching), exposed through the composable `sim::session` API:
 //!   pluggable arrival processes (closed-loop / open-loop Poisson with
 //!   bounded admission), length sources (synthetic / sharded trace
-//!   replay), and step/completion/idle observers.
+//!   replay), and step/completion/idle observers — plus `sim::cluster`,
+//!   the fleet-scale simulation of N bundles sharing one routed request
+//!   stream with online per-bundle autoscaling.
 //! * [`sweep`] — the multi-scenario parallel sweep subsystem: a named
 //!   workload-scenario registry (synthetic + trace replay), a
-//!   deterministic (scenario × arrival × r × B) grid runner on the
-//!   crate thread pool, and CSV/JSON emission with theory-vs-simulation
-//!   gap and queueing/rejection columns.
-//! * [`coordinator`] — the serving-side coordination layer: routing,
-//!   continuous batching admission, KV slot management, step scheduling
-//!   with a cross-worker barrier, bundle topology, online autoscaling.
+//!   deterministic (scenario × arrival × fleet × r × B) grid runner on
+//!   the crate thread pool, and CSV/JSON emission with
+//!   theory-vs-simulation gap, queueing/rejection, and fleet columns.
+//! * [`coordinator`] — the engine-agnostic coordination layer: the
+//!   `BundleLoad` observability trait shared by the real engine and the
+//!   simulator, routing policies over it, continuous batching
+//!   admission, KV slot management, step scheduling with a cross-worker
+//!   barrier, bundle topology, online autoscaling.
 //! * [`runtime`] — PJRT execution of the AOT-compiled XLA artifacts
 //!   (`artifacts/*.hlo.txt`) produced by `python/compile/aot.py`.
 //! * [`server`] — the threaded serving engine that ties the coordinator

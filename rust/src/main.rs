@@ -4,7 +4,10 @@
 //!   provision   compute r*_mf / r*_G from workload parameters or a trace
 //!   simulate    run one simulation session (aliases: sim; supports
 //!               --trace replay and --arrival open|closed)
-//!   sweep       parallel multi-scenario (scenario x arrival x r x B) sweep
+//!   cluster     simulate a fleet of N rA-1F bundles sharing one request
+//!               stream (routing policies, online autoscaling)
+//!   sweep       parallel multi-scenario
+//!               (scenario x arrival x fleet x r x B) sweep
 //!   estimate    estimate (theta, nu^2) from a trace CSV
 //!   serve       run the real PJRT serving engine on the demo model
 //!   gen-trace   generate a synthetic production-like trace CSV
@@ -44,6 +47,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("provision") => provision(args),
         Some("simulate") | Some("sim") => cmd_simulate(args),
+        Some("cluster") => cmd_cluster(args),
         Some("sweep") => cmd_sweep(args),
         Some("estimate") => cmd_estimate(args),
         Some("serve") => cmd_serve(args),
@@ -55,7 +59,8 @@ fn run(args: &Args) -> Result<()> {
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
                     .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed)")
-                    .entry("sweep", "parallel (scenario x arrival x r x B) sweep with theory-vs-sim columns")
+                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale)")
+                    .entry("sweep", "parallel (scenario x arrival x fleet x r x B) sweep with theory-vs-sim columns")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
@@ -164,14 +169,181 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `afd sweep`: run the (scenario × arrival × r × B) cross-product in
-/// parallel and print the theory-vs-simulation summary (Fig. 3 across
-/// workloads and arrival regimes).
+/// `afd cluster`: simulate a fleet of N `rA-1F` bundles sharing one
+/// request stream.
+///
+/// Options:
+///   --bundles N          fleet size (default 2)
+///   --policy rr|jsq|ltl  routing policy (default jsq)
+///   --r N                fan-in per bundle (default 8)
+///   --requests N         completions per bundle (default
+///                        requests_per_instance x r)
+///   --batch B            per-worker microbatch size
+///   --arrival closed|open  arrival regime (default closed)
+///   --lambda X           cluster-wide open-loop rate (requests/cycle)
+///   --queue N            per-bundle inbox capacity (default 4096)
+///   --autoscale          enable online per-bundle autoscaling
+///   --feasible a,b,...   autoscaler candidate fan-ins (default 1..16)
+///   --window N           autoscaler estimator window (default 2000)
+///   --epoch N            completions per autoscale epoch (default 1500)
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use afd::analysis::provisioning::r_star_g_on_grid;
+    use afd::coordinator::router::Policy;
+    use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+    use afd::workload::estimator::estimate_stationary;
+
+    let mut cfg = load_config(args)?;
+    cfg.topology.batch_per_worker = args.get_usize("batch", cfg.topology.batch_per_worker)?;
+    let r = args.get_usize("r", 8)?;
+    let bundles = args.get_usize("bundles", 2)?;
+    let policy = Policy::parse(&args.get_str("policy", "jsq"))?;
+    let feasible: Vec<usize> = args.get_list_usize("feasible", &(1..=16).collect::<Vec<_>>())?;
+
+    let mut builder = ClusterSimulation::builder(&cfg, r).bundles(bundles).policy(policy);
+    if let Some(n) = args.get("requests") {
+        let n: usize = n.parse().map_err(|_| {
+            afd::AfdError::config(format!("--requests: expected integer, got {n:?}"))
+        })?;
+        builder = builder.completions_per_bundle(Some(n));
+    }
+    match args.get_str("arrival", "closed").as_str() {
+        "closed" => {}
+        "open" => {
+            let lambda = args.get_f64("lambda", 0.0)?;
+            if lambda <= 0.0 {
+                return Err(afd::AfdError::config(
+                    "--arrival open requires --lambda <requests/cycle> (> 0, cluster-wide)",
+                ));
+            }
+            let queue = args.get_usize("queue", 4096)?;
+            builder = builder
+                .arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
+        }
+        other => {
+            return Err(afd::AfdError::config(format!(
+                "unknown arrival regime {other:?}; expected closed|open"
+            )));
+        }
+    }
+    if args.has_flag("autoscale") {
+        builder = builder.autoscale(AutoscaleConfig {
+            feasible: feasible.clone(),
+            window: args.get_usize("window", 2000)?,
+            epoch_completions: args.get_usize("epoch", 1500)?,
+        });
+    }
+
+    println!(
+        "simulating {bundles} x {r}A-1F bundle(s), policy {}, B = {}",
+        policy.name(),
+        cfg.topology.batch_per_worker
+    );
+    let out = builder.build()?.run()?;
+
+    let mut t = Table::new(&[
+        "bundle",
+        "final r",
+        "delivered/inst",
+        "TPOT",
+        "idle_A",
+        "idle_F",
+        "admitted",
+        "mean wait",
+        "completed",
+        "time",
+    ])
+    .with_title("Per-bundle results");
+    for b in &out.bundles {
+        let m = &b.metrics;
+        t.row(&[
+            b.bundle.to_string(),
+            b.final_r.to_string(),
+            sig(m.delivered_throughput_per_instance, 5),
+            sig(m.tpot, 5),
+            format!("{:.1}%", 100.0 * m.idle_attention),
+            format!("{:.1}%", 100.0 * m.idle_ffn),
+            b.arrival.admitted.to_string(),
+            sig(b.arrival.mean_queue_wait, 4),
+            b.completions.len().to_string(),
+            format!("{:.0}", b.total_time),
+        ]);
+    }
+    t.print();
+
+    let agg = &out.aggregate;
+    println!(
+        "aggregate: delivered/inst = {:.6}, completed = {}, imbalance = {:.2}%",
+        agg.delivered_throughput_per_instance,
+        agg.completed,
+        100.0 * out.load_imbalance
+    );
+    let a = &out.arrival;
+    if a.kind != "closed" {
+        println!(
+            "arrivals ({}, lambda = {:.5}/cycle cluster-wide): offered {}, admitted {}, rejected {}",
+            a.kind, a.lambda, a.offered, a.admitted, a.rejected
+        );
+        println!(
+            "queues: mean wait {:.2} cycles, mean total length {:.2}",
+            a.mean_queue_wait, a.mean_queue_len
+        );
+    }
+    for b in &out.bundles {
+        for rec in &b.reconfigurations {
+            println!(
+                "bundle {}: autoscaled r {} -> {} (predicted gain {:.1}%)",
+                b.bundle,
+                rec.from_r,
+                rec.to_r,
+                100.0 * rec.predicted_gain
+            );
+        }
+    }
+
+    // Theory comparison: the offline rule on the completion stream's
+    // estimated moments vs the fleet's realized operating points.
+    let all: Vec<afd::workload::request::RequestLengths> = out
+        .bundles
+        .iter()
+        .flat_map(|b| b.completions.iter())
+        .map(|c| afd::workload::request::RequestLengths::new(c.prefill, c.decode_len.max(1)))
+        .collect();
+    if !all.is_empty() {
+        let trace = Trace::new(all);
+        if let Ok(load) = estimate_stationary(&trace) {
+            let opt = r_star_g_on_grid(
+                &cfg.hardware,
+                load,
+                cfg.topology.batch_per_worker,
+                &feasible,
+            )?;
+            let theory = afd::analysis::cycle_time::OperatingPoint::new(
+                cfg.hardware,
+                load,
+                cfg.topology.batch_per_worker,
+            )
+            .throughput_gaussian(r);
+            println!(
+                "theory (observed moments): r*_G = {} (Thr_G {:.5}); realized/Eq.1 at r={r}: {:.2}",
+                opt.r_star,
+                opt.throughput,
+                agg.delivered_throughput_per_instance / theory
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `afd sweep`: run the (scenario × arrival × fleet × r × B)
+/// cross-product in parallel and print the theory-vs-simulation summary
+/// (Fig. 3 across workloads, arrival regimes, and fleet shapes).
 ///
 /// Options:
 ///   --scenarios all|trace:*|name,name  registry selection (default all);
 ///                               `config` sweeps the config's [workload]
 ///   --arrival closed|open|both  arrival-process axis (default closed)
+///   --bundles 1,2,4             fleet-size axis (default 1)
+///   --policy rr,jsq,ltl         routing-policy axis (default rr)
 ///   --rho X                     open-loop utilization target (default 0.85)
 ///   --lambda X                  open-loop absolute rate override (req/cycle)
 ///   --queue N                   open-loop queue capacity (default 4096)
@@ -184,9 +356,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///   --csv PATH / --json PATH    write per-cell results
 ///   --list                      print the scenario registry and exit
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use afd::coordinator::router::Policy;
     use afd::sim::engine::SimOptions;
     use afd::sweep::emit;
-    use afd::sweep::grid::{run_grid, run_grid_serial, ArrivalSpec, SweepGrid};
+    use afd::sweep::grid::{run_grid, run_grid_serial, ArrivalSpec, FleetSpec, SweepGrid};
     use afd::sweep::scenarios;
     use afd::util::tablefmt::Align;
 
@@ -236,17 +409,39 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             )));
         }
     };
+    let bundles_axis = args.get_list_usize("bundles", &[1])?;
+    let policies: Vec<Policy> = args
+        .get_str("policy", "rr")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(Policy::parse)
+        .collect::<Result<_>>()?;
+    let mut fleets = Vec::new();
+    for &n in &bundles_axis {
+        if n == 1 {
+            // Policy is moot at one bundle: collapse to the canonical
+            // single shape instead of simulating one identical cell per
+            // policy.
+            fleets.push(FleetSpec::single());
+            continue;
+        }
+        for &p in &policies {
+            fleets.push(FleetSpec::new(n, p));
+        }
+    }
     let grid = SweepGrid::new(
         selected,
         args.get_list_usize("ratios", &cfg.ratio_sweep)?,
         args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
     )
-    .with_arrivals(arrivals);
+    .with_arrivals(arrivals)
+    .with_fleets(fleets);
     let threads = args.get_usize("threads", 0)?;
     println!(
-        "sweeping {} scenario(s) x {} arrival(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
+        "sweeping {} scenario(s) x {} arrival(s) x {} fleet(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
         grid.scenarios.len(),
         grid.arrivals.len(),
+        grid.fleets.len(),
         grid.ratios.len(),
         grid.batches.len(),
         grid.cell_count(),

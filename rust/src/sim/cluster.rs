@@ -1,0 +1,997 @@
+//! Fleet-scale cluster simulation: N `rA-1F` bundles sharing one request
+//! stream.
+//!
+//! The paper sizes a single bundle; its deployment target is a fleet,
+//! where routing skew and replenishment noise change the effective
+//! per-bundle workload the `r*_G` rule was derived for (cluster-level
+//! attention-disaggregated scheduling — Adrenaline, arXiv:2503.20552 —
+//! and fleet-level SLO-aware allocation — arXiv:2603.04716 — both live
+//! in this between-instance regime). [`ClusterSimulation`] runs N
+//! stepped [`Simulation`] bundles in lockstep virtual time:
+//!
+//! * **Shared arrivals.** One cluster-wide Poisson stream
+//!   ([`ClusterArrival::Open`]) is split across bundles at arrival time
+//!   by a pluggable routing [`Policy`] (round-robin / JSQ /
+//!   least-token-load) evaluated on per-bundle
+//!   [`crate::coordinator::load::BundleLoad`] snapshots — the same
+//!   engine-agnostic trait the real serving engine's batcher routes
+//!   over. Each bundle owns a bounded inbox; arrivals finding
+//!   their routed inbox full are rejected and counted. The closed loop
+//!   ([`ClusterArrival::Closed`]) keeps every bundle saturated
+//!   independently (the paper's capacity question, N at a time).
+//! * **Lockstep virtual time.** The cluster always advances the bundle
+//!   whose next lane-step starts earliest in global time (ties to the
+//!   lowest bundle index), so arrivals are routed against the load state
+//!   their arrival time implies, up to the one-lane-step skew the
+//!   single-bundle open loop already exhibits.
+//! * **Online autoscaling.** With [`AutoscaleConfig`], each bundle feeds
+//!   its completion stream (full `(P, D)` observations — completions
+//!   carry prefills) to a sliding-window
+//!   [`crate::coordinator::Autoscaler`] (A.6 estimator + Eq. 12) and is
+//!   *rebuilt at the recommended fan-in* at epoch boundaries: the
+//!   simulated analogue of reprovisioning a bundle in place. Per-bundle
+//!   reconfiguration histories and the converged `r` are reported so
+//!   sweeps can compare the online rule against `r_star_g_on_grid`.
+//!
+//! A 1-bundle cluster is *byte-identical* to the equivalent
+//! single-bundle [`Simulation`] (asserted across the scenario registry
+//! by `tests/integration_cluster.rs`): the single bundle receives the
+//! arrival process directly and `run` degenerates to the stepped
+//! engine's own loop.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::coordinator::autoscale::{Autoscaler, Reconfiguration};
+use crate::coordinator::load::LoadSnapshot;
+use crate::coordinator::router::{Policy, Router};
+use crate::error::{AfdError, Result};
+use crate::sim::engine::BATCHES_IN_FLIGHT;
+use crate::sim::metrics::SimMetrics;
+use crate::sim::session::{
+    ArrivalProcess, ArrivalStats, LengthSource, OpenLoopPoisson, Simulation,
+};
+use crate::sim::slots::Completion;
+use crate::stats::rng::SplitMix64;
+use crate::workload::request::RequestLengths;
+
+/// Cluster-wide arrival regime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterArrival {
+    /// Every bundle runs saturated (freed slots refill instantly); no
+    /// request stream is shared, so routing is moot — the baseline for
+    /// per-bundle capacity at fleet scale.
+    Closed,
+    /// One cluster-wide Poisson stream at `lambda` requests per cycle,
+    /// routed across bundles on arrival; each bundle's admission inbox
+    /// holds at most `queue_capacity` waiting requests.
+    Open { lambda: f64, queue_capacity: usize },
+}
+
+impl ClusterArrival {
+    fn validate(&self) -> Result<()> {
+        if let ClusterArrival::Open { lambda, queue_capacity } = self {
+            if !(lambda.is_finite() && *lambda > 0.0) {
+                return Err(AfdError::config(format!(
+                    "cluster arrival rate must be a positive finite requests/cycle, got {lambda}"
+                )));
+            }
+            if *queue_capacity == 0 {
+                return Err(AfdError::config("cluster inbox capacity must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Online autoscaling configuration (per bundle).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Candidate fan-ins the rule may pick from (Eq. 12's feasible set).
+    pub feasible: Vec<usize>,
+    /// Sliding estimator window (completed requests; >= 16).
+    pub window: usize,
+    /// Completions per bundle per epoch; the bundle is rebuilt at the
+    /// recommended `r` at each epoch boundary. Should be >= `window / 2`
+    /// for the estimator to reach its evaluation threshold every epoch.
+    pub epoch_completions: usize,
+}
+
+impl AutoscaleConfig {
+    fn validate(&self) -> Result<()> {
+        if self.feasible.is_empty() || self.feasible.contains(&0) {
+            return Err(AfdError::config(
+                "autoscale feasible set must be non-empty with positive entries",
+            ));
+        }
+        if self.window < 16 {
+            return Err(AfdError::config("autoscale window must be >= 16"));
+        }
+        if self.epoch_completions < 16 {
+            return Err(AfdError::config("autoscale epoch must be >= 16 completions"));
+        }
+        Ok(())
+    }
+}
+
+/// Per-bundle admission inbox shared between the cluster router (pushes)
+/// and the bundle's arrival proxy (pops).
+struct Inbox {
+    /// Global arrival times, FIFO.
+    queue: VecDeque<f64>,
+    capacity: usize,
+    admitted: u64,
+    wait_sum: f64,
+}
+
+/// The arrival process a routed bundle runs under: grants admissions
+/// from the bundle's inbox. `offset` maps the bundle's local virtual
+/// time (each epoch restarts at 0) onto the cluster's global clock.
+struct InboxArrival {
+    inbox: Rc<RefCell<Inbox>>,
+    offset: f64,
+}
+
+impl ArrivalProcess for InboxArrival {
+    fn try_admit(&mut self, now: f64) -> Option<f64> {
+        let global = self.offset + now;
+        let mut inbox = self.inbox.borrow_mut();
+        match inbox.queue.front() {
+            Some(&arrived) if arrived <= global => {
+                inbox.queue.pop_front();
+                inbox.admitted += 1;
+                inbox.wait_sum += global - arrived;
+                Some((arrived - self.offset).max(0.0))
+            }
+            _ => None,
+        }
+    }
+
+    fn initial_fill(&self) -> bool {
+        false
+    }
+
+    fn stats(&self, _total_time: f64) -> ArrivalStats {
+        let inbox = self.inbox.borrow();
+        ArrivalStats {
+            kind: "cluster-routed",
+            lambda: 0.0,
+            offered: 0,
+            admitted: inbox.admitted,
+            rejected: 0,
+            mean_queue_wait: if inbox.admitted > 0 {
+                inbox.wait_sum / inbox.admitted as f64
+            } else {
+                0.0
+            },
+            mean_queue_len: 0.0,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cluster-routed"
+    }
+}
+
+/// The cluster-wide Poisson generator (same exponential-gap construction
+/// as [`OpenLoopPoisson`], lifted above the bundles).
+struct SharedPoisson {
+    lambda: f64,
+    rng: crate::stats::rng::Pcg64,
+    next_arrival: f64,
+    offered: u64,
+    rejected: u64,
+    queue_integral: f64,
+    last_t: f64,
+}
+
+impl SharedPoisson {
+    fn new(lambda: f64, seed: u64) -> Self {
+        let mut rng = crate::stats::rng::Pcg64::new(seed ^ 0xC1_057E_12);
+        let first_gap = -rng.next_f64_open().ln() / lambda;
+        Self {
+            lambda,
+            rng,
+            next_arrival: first_gap,
+            offered: 0,
+            rejected: 0,
+            queue_integral: 0.0,
+            last_t: 0.0,
+        }
+    }
+
+    fn sample_gap(&mut self) -> f64 {
+        -self.rng.next_f64_open().ln() / self.lambda
+    }
+}
+
+/// One bundle's cluster-side state.
+struct Bundle {
+    index: usize,
+    seed: u64,
+    /// `None` only transiently while an epoch is being finalized.
+    sim: Option<Simulation>,
+    inbox: Option<Rc<RefCell<Inbox>>>,
+    /// Global time at which the current epoch's local t = 0 sits.
+    base_time: f64,
+    epoch: usize,
+    produced: usize,
+    target: usize,
+    current_r: usize,
+    autoscaler: Option<Autoscaler>,
+    reconfigurations: Vec<Reconfiguration>,
+    last_metrics: Option<SimMetrics>,
+    last_arrival: Option<ArrivalStats>,
+    /// Accumulated completions in global time.
+    completions: Vec<Completion>,
+    done: bool,
+}
+
+/// Output of one bundle over the whole cluster run.
+#[derive(Debug, Clone)]
+pub struct BundleOutput {
+    pub bundle: usize,
+    /// Fan-in the bundle ended on (== the configured r unless the
+    /// autoscaler reconfigured it).
+    pub final_r: usize,
+    /// Metrics of the bundle's final epoch (the converged operating
+    /// point under autoscaling; the whole run otherwise).
+    pub metrics: SimMetrics,
+    /// Per-bundle arrival accounting (admissions and queue waits for
+    /// routed bundles; trivial under the closed loop).
+    pub arrival: ArrivalStats,
+    /// All completions, stamped in cluster-global time.
+    pub completions: Vec<Completion>,
+    pub reconfigurations: Vec<Reconfiguration>,
+    /// Cumulative virtual time the bundle ran for.
+    pub total_time: f64,
+}
+
+/// Full cluster output.
+#[derive(Debug, Clone)]
+pub struct ClusterOutput {
+    pub policy: Policy,
+    pub bundles: Vec<BundleOutput>,
+    /// Bundle-mean metrics (a 1-bundle cluster's aggregate is the
+    /// bundle's metrics verbatim).
+    pub aggregate: SimMetrics,
+    /// Cluster-level arrival statistics: offered/rejected at the shared
+    /// stream, admissions and waits summed over bundle inboxes.
+    pub arrival: ArrivalStats,
+    /// Time-average cross-bundle token-load imbalance
+    /// `E[max_b T_b / mean_b T_b] - 1` sampled at every cluster step
+    /// (0 for a single bundle).
+    pub load_imbalance: f64,
+}
+
+impl ClusterOutput {
+    /// Converged per-bundle fan-ins (the autoscaler comparison column).
+    pub fn converged_r(&self) -> Vec<usize> {
+        self.bundles.iter().map(|b| b.final_r).collect()
+    }
+}
+
+/// Builder for a [`ClusterSimulation`].
+pub struct ClusterSimulationBuilder {
+    cfg: ExperimentConfig,
+    r: usize,
+    bundles: usize,
+    policy: Policy,
+    arrival: ClusterArrival,
+    autoscale: Option<AutoscaleConfig>,
+    batches_in_flight: usize,
+    warm_start: bool,
+    completions_per_bundle: Option<usize>,
+    source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
+}
+
+impl ClusterSimulationBuilder {
+    /// Number of `rA-1F` bundles in the fleet.
+    pub fn bundles(mut self, n: usize) -> Self {
+        self.bundles = n;
+        self
+    }
+
+    /// Routing policy splitting the shared stream across bundles.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Arrival regime (default [`ClusterArrival::Closed`]).
+    pub fn arrival(mut self, arrival: ClusterArrival) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Enable online per-bundle autoscaling.
+    pub fn autoscale(mut self, autoscale: AutoscaleConfig) -> Self {
+        self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Microbatch pipelining depth per bundle.
+    pub fn batches_in_flight(mut self, m: usize) -> Self {
+        self.batches_in_flight = m;
+        self
+    }
+
+    /// Warm-start bundle slots from the stationary law (closed loop).
+    pub fn warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
+        self
+    }
+
+    /// Completions each bundle runs to (default
+    /// `requests_per_instance * r`).
+    pub fn completions_per_bundle(mut self, n: Option<usize>) -> Self {
+        self.completions_per_bundle = n;
+        self
+    }
+
+    /// Length-source factory, called once per (bundle, epoch) with the
+    /// derived seed — how sweep scenarios plug their synthetic or
+    /// trace-replay sources into every bundle.
+    pub fn source_factory(
+        mut self,
+        factory: impl Fn(u64) -> Box<dyn LengthSource> + 'static,
+    ) -> Self {
+        self.source_factory = Some(Box::new(factory));
+        self
+    }
+
+    /// Validate and assemble the cluster (builds every bundle's first
+    /// epoch).
+    pub fn build(self) -> Result<ClusterSimulation> {
+        let ClusterSimulationBuilder {
+            cfg,
+            r,
+            bundles,
+            policy,
+            arrival,
+            autoscale,
+            batches_in_flight,
+            warm_start,
+            completions_per_bundle,
+            source_factory,
+        } = self;
+        if bundles == 0 {
+            return Err(AfdError::config("cluster needs >= 1 bundle"));
+        }
+        arrival.validate()?;
+        if let Some(a) = &autoscale {
+            a.validate()?;
+        }
+        let target = completions_per_bundle.unwrap_or(cfg.requests_per_instance * r);
+        if target == 0 {
+            return Err(AfdError::config("per-bundle completion target must be >= 1"));
+        }
+
+        let mut cluster = ClusterSimulation {
+            cfg,
+            r,
+            policy,
+            router: Router::new(policy),
+            arrival,
+            autoscale,
+            batches_in_flight,
+            warm_start,
+            source_factory,
+            shared: None,
+            bundles: Vec::with_capacity(bundles),
+            spread_sum: 0.0,
+            spread_samples: 0,
+        };
+
+        // The shared generator exists only when N > 1 routes a stream;
+        // a 1-bundle cluster hands the Poisson process straight to its
+        // bundle and stays byte-identical to the single-bundle session.
+        if let ClusterArrival::Open { lambda, .. } = cluster.arrival {
+            if bundles > 1 {
+                cluster.shared = Some(SharedPoisson::new(lambda, cluster.cfg.seed));
+            }
+        }
+
+        for i in 0..bundles {
+            let seed = bundle_seed(cluster.cfg.seed, i);
+            let inbox = match (&cluster.arrival, bundles) {
+                (ClusterArrival::Open { queue_capacity, .. }, n) if n > 1 => {
+                    Some(Rc::new(RefCell::new(Inbox {
+                        queue: VecDeque::new(),
+                        capacity: *queue_capacity,
+                        admitted: 0,
+                        wait_sum: 0.0,
+                    })))
+                }
+                _ => None,
+            };
+            let autoscaler = cluster.autoscale.as_ref().map(|a| {
+                Autoscaler::new(
+                    cluster.cfg.hardware,
+                    cluster.cfg.topology.batch_per_worker,
+                    r,
+                    a.feasible.clone(),
+                    a.window,
+                )
+            });
+            let mut bundle = Bundle {
+                index: i,
+                seed,
+                sim: None,
+                inbox,
+                base_time: 0.0,
+                epoch: 0,
+                produced: 0,
+                target,
+                current_r: r,
+                autoscaler,
+                reconfigurations: Vec::new(),
+                last_metrics: None,
+                last_arrival: None,
+                completions: Vec::with_capacity(target + 64),
+                done: false,
+            };
+            bundle.sim = Some(cluster.build_epoch_sim(&bundle)?);
+            cluster.bundles.push(bundle);
+        }
+        Ok(cluster)
+    }
+}
+
+/// Per-bundle seed: bundle 0 keeps the experiment seed (1-bundle
+/// clusters reproduce single-bundle sessions bit-for-bit); later bundles
+/// draw from a SplitMix64 chain over the base seed and their index.
+pub fn bundle_seed(base: u64, bundle: usize) -> u64 {
+    if bundle == 0 {
+        base
+    } else {
+        SplitMix64::new(base ^ (bundle as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)).next_u64()
+    }
+}
+
+/// Per-(bundle, epoch) seed: epoch 0 keeps the bundle seed; autoscaling
+/// epochs chain forward so rebuilt bundles never replay the same
+/// synthetic stream.
+fn epoch_seed(bundle_seed: u64, epoch: usize) -> u64 {
+    if epoch == 0 {
+        bundle_seed
+    } else {
+        SplitMix64::new(bundle_seed ^ (epoch as u64).wrapping_mul(0xA076_1D64_78BD_642F))
+            .next_u64()
+    }
+}
+
+/// A fleet of N stepped [`Simulation`] bundles in lockstep virtual time.
+pub struct ClusterSimulation {
+    cfg: ExperimentConfig,
+    r: usize,
+    policy: Policy,
+    router: Router,
+    arrival: ClusterArrival,
+    autoscale: Option<AutoscaleConfig>,
+    batches_in_flight: usize,
+    warm_start: bool,
+    source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
+    shared: Option<SharedPoisson>,
+    bundles: Vec<Bundle>,
+    spread_sum: f64,
+    spread_samples: u64,
+}
+
+impl ClusterSimulation {
+    pub fn builder(cfg: &ExperimentConfig, r: usize) -> ClusterSimulationBuilder {
+        ClusterSimulationBuilder {
+            cfg: cfg.clone(),
+            r,
+            bundles: 1,
+            policy: Policy::RoundRobin,
+            arrival: ClusterArrival::Closed,
+            autoscale: None,
+            batches_in_flight: BATCHES_IN_FLIGHT,
+            warm_start: true,
+            completions_per_bundle: None,
+            source_factory: None,
+        }
+    }
+
+    pub fn bundle_count(&self) -> usize {
+        self.bundles.len()
+    }
+
+    /// Build one epoch's engine for `bundle` at its current fan-in.
+    fn build_epoch_sim(&self, bundle: &Bundle) -> Result<Simulation> {
+        let epoch_target = match &self.autoscale {
+            Some(a) => a.epoch_completions.min(bundle.target - bundle.produced),
+            None => bundle.target,
+        }
+        .max(1);
+        let seed = epoch_seed(bundle.seed, bundle.epoch);
+        let cfg = self.cfg.with_seed(seed);
+        let mut builder = Simulation::builder(&cfg, bundle.current_r)
+            .batches_in_flight(self.batches_in_flight)
+            .warm_start(self.warm_start)
+            .max_completions(Some(epoch_target));
+        if let Some(factory) = &self.source_factory {
+            builder = builder.length_source(factory(seed));
+        }
+        if let ClusterArrival::Open { lambda, queue_capacity } = self.arrival {
+            match &bundle.inbox {
+                // Routed bundle: admissions come from the cluster inbox.
+                Some(inbox) => {
+                    builder = builder.arrival(InboxArrival {
+                        inbox: inbox.clone(),
+                        offset: bundle.base_time,
+                    });
+                }
+                // 1-bundle cluster: the Poisson stream feeds the bundle
+                // directly — byte-identical to `afd sim --arrival open`.
+                None => {
+                    builder =
+                        builder.arrival(OpenLoopPoisson::new(lambda, queue_capacity, cfg.seed)?);
+                }
+            }
+        }
+        builder.build()
+    }
+
+    /// Global time at which bundle `g`'s next lane-step begins.
+    fn global_ready(&self, g: usize) -> f64 {
+        self.bundles[g].base_time + self.bundles[g].sim.as_ref().unwrap().next_ready()
+    }
+
+    /// Generate and route shared arrivals up to global time `now`.
+    fn drain_arrivals(&mut self, now: f64) {
+        let Some(shared) = self.shared.as_mut() else { return };
+        loop {
+            let queued_total: usize = self
+                .bundles
+                .iter()
+                .filter_map(|b| b.inbox.as_ref())
+                .map(|ib| ib.borrow().queue.len())
+                .sum();
+            if shared.next_arrival > now {
+                if now > shared.last_t {
+                    shared.queue_integral += queued_total as f64 * (now - shared.last_t);
+                    shared.last_t = now;
+                }
+                return;
+            }
+            let t = shared.next_arrival;
+            shared.queue_integral += queued_total as f64 * (t - shared.last_t);
+            shared.last_t = t;
+            shared.offered += 1;
+
+            // Route on the load state at arrival time, over bundles that
+            // are still consuming.
+            let active: Vec<usize> =
+                self.bundles.iter().filter(|b| !b.done).map(|b| b.index).collect();
+            if active.is_empty() {
+                shared.rejected += 1;
+            } else {
+                let loads: Vec<LoadSnapshot> = active
+                    .iter()
+                    .map(|&i| {
+                        let b = &self.bundles[i];
+                        LoadSnapshot {
+                            queued: b.inbox.as_ref().unwrap().borrow().queue.len(),
+                            ..LoadSnapshot::of(b.sim.as_ref().unwrap())
+                        }
+                    })
+                    .collect();
+                let dst = active[self.router.route(&loads)];
+                let inbox = self.bundles[dst].inbox.as_ref().unwrap();
+                let mut ib = inbox.borrow_mut();
+                if ib.queue.len() < ib.capacity {
+                    ib.queue.push_back(t);
+                } else {
+                    shared.rejected += 1;
+                }
+            }
+            let gap = shared.sample_gap();
+            shared.next_arrival = t + gap;
+        }
+    }
+
+    /// Sample the cross-bundle token-load spread (imbalance diagnostic).
+    fn record_spread(&mut self) {
+        if self.bundles.len() < 2 {
+            return;
+        }
+        let loads: Vec<u64> = self
+            .bundles
+            .iter()
+            .filter(|b| !b.done)
+            .map(|b| b.sim.as_ref().unwrap().token_load())
+            .collect();
+        if loads.len() < 2 {
+            return;
+        }
+        let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+        if mean > 0.0 {
+            let max = *loads.iter().max().unwrap() as f64;
+            self.spread_sum += max / mean - 1.0;
+            self.spread_samples += 1;
+        }
+    }
+
+    /// Finalize bundle `g`'s epoch: harvest completions, feed the
+    /// autoscaler, and rebuild at the (possibly new) fan-in unless the
+    /// bundle reached its target.
+    fn finish_epoch(&mut self, g: usize) -> Result<()> {
+        {
+            let bundle = &mut self.bundles[g];
+            let sim = bundle.sim.take().expect("epoch sim present");
+            let epoch_time = sim.last_finish();
+            let out = sim.finish();
+            bundle.produced += out.completions.len();
+            let base = bundle.base_time;
+            bundle.completions.extend(out.completions.iter().map(|c| Completion {
+                finish_time: base + c.finish_time,
+                admit_time: base + c.admit_time,
+                ..*c
+            }));
+            if let Some(autoscaler) = &mut bundle.autoscaler {
+                for c in &out.completions {
+                    autoscaler.observe(RequestLengths::new(c.prefill, c.decode_len.max(1)));
+                }
+                if let Some(rec) = autoscaler.evaluate()? {
+                    bundle.reconfigurations.push(rec);
+                    bundle.current_r = rec.to_r;
+                }
+            }
+            bundle.last_metrics = Some(out.metrics);
+            bundle.last_arrival = Some(out.arrival);
+            bundle.base_time += epoch_time;
+            bundle.epoch += 1;
+        }
+        if self.bundles[g].produced >= self.bundles[g].target {
+            self.bundles[g].done = true;
+            // A finished bundle stops consuming: whatever its inbox
+            // still holds can never be admitted. Count those arrivals
+            // as rejected (dropped at bundle shutdown) and clear the
+            // queue so it stops inflating the queue-length integral —
+            // conservation stays offered == admitted + rejected +
+            // still-queued-at-active-bundles.
+            if let (Some(shared), Some(inbox)) =
+                (self.shared.as_mut(), &self.bundles[g].inbox)
+            {
+                let mut ib = inbox.borrow_mut();
+                shared.rejected += ib.queue.len() as u64;
+                ib.queue.clear();
+            }
+        } else {
+            let next = self.build_epoch_sim(&self.bundles[g])?;
+            self.bundles[g].sim = Some(next);
+        }
+        Ok(())
+    }
+
+    /// Run every bundle to its completion target.
+    pub fn run(mut self) -> Result<ClusterOutput> {
+        loop {
+            // Earliest-starting active bundle in global time; strict <
+            // keeps ties on the lowest bundle index.
+            let mut pick: Option<(f64, usize)> = None;
+            for g in 0..self.bundles.len() {
+                if self.bundles[g].done {
+                    continue;
+                }
+                let t = self.global_ready(g);
+                let better = match pick {
+                    Some((best, _)) => t < best,
+                    None => true,
+                };
+                if better {
+                    pick = Some((t, g));
+                }
+            }
+            let Some((global_ready, g)) = pick else { break };
+
+            self.drain_arrivals(global_ready);
+            self.record_spread();
+            self.bundles[g].sim.as_mut().unwrap().step();
+            if self.bundles[g].sim.as_ref().unwrap().is_done() {
+                self.finish_epoch(g)?;
+            }
+        }
+        Ok(self.assemble())
+    }
+
+    fn assemble(self) -> ClusterOutput {
+        let n = self.bundles.len();
+        let shared = self.shared;
+        let bundle_outputs: Vec<BundleOutput> = self
+            .bundles
+            .into_iter()
+            .map(|b| BundleOutput {
+                bundle: b.index,
+                final_r: b.current_r,
+                metrics: b.last_metrics.expect("every bundle ran >= 1 epoch"),
+                arrival: b.last_arrival.expect("every bundle ran >= 1 epoch"),
+                completions: b.completions,
+                reconfigurations: b.reconfigurations,
+                total_time: b.base_time,
+            })
+            .collect();
+
+        let total_time =
+            bundle_outputs.iter().map(|b| b.total_time).fold(0.0, f64::max);
+        // Aggregate semantics: rates/idle shares describe the final
+        // (converged) epoch per bundle; `completed` and `total_time`
+        // cover the whole run. Without autoscaling the two windows
+        // coincide, so a 1-bundle cluster's aggregate is the session's
+        // metrics verbatim (bit-for-bit — the byte-identity contract).
+        let aggregate = if n == 1 {
+            let mut m = bundle_outputs[0].metrics.clone();
+            m.completed = bundle_outputs[0].completions.len();
+            m.total_time = bundle_outputs[0].total_time;
+            m
+        } else {
+            let mean = |f: &dyn Fn(&SimMetrics) -> f64| {
+                bundle_outputs.iter().map(|b| f(&b.metrics)).sum::<f64>() / n as f64
+            };
+            SimMetrics {
+                r: self.r,
+                batch: self.cfg.topology.batch_per_worker,
+                throughput_per_instance: mean(&|m| m.throughput_per_instance),
+                delivered_throughput_per_instance: mean(&|m| {
+                    m.delivered_throughput_per_instance
+                }),
+                tpot: mean(&|m| m.tpot),
+                idle_attention: mean(&|m| m.idle_attention),
+                idle_ffn: mean(&|m| m.idle_ffn),
+                total_time,
+                completed: bundle_outputs.iter().map(|b| b.completions.len()).sum(),
+                mean_barrier_load: mean(&|m| m.mean_barrier_load),
+                mean_worker_load: mean(&|m| m.mean_worker_load),
+            }
+        };
+
+        let arrival = match (self.arrival, shared) {
+            (ClusterArrival::Closed, _) => ArrivalStats::closed(),
+            // 1-bundle open cluster: the bundle ran the Poisson process
+            // itself; its stats are the cluster stats.
+            (ClusterArrival::Open { .. }, None) => bundle_outputs[0].arrival,
+            (ClusterArrival::Open { lambda, .. }, Some(shared)) => {
+                let admitted: u64 =
+                    bundle_outputs.iter().map(|b| b.arrival.admitted).sum();
+                let wait_sum: f64 = bundle_outputs
+                    .iter()
+                    .map(|b| b.arrival.mean_queue_wait * b.arrival.admitted as f64)
+                    .sum();
+                ArrivalStats {
+                    kind: "open-poisson",
+                    lambda,
+                    offered: shared.offered,
+                    admitted,
+                    rejected: shared.rejected,
+                    mean_queue_wait: if admitted > 0 { wait_sum / admitted as f64 } else { 0.0 },
+                    mean_queue_len: if total_time > 0.0 {
+                        shared.queue_integral / total_time
+                    } else {
+                        0.0
+                    },
+                }
+            }
+        };
+
+        ClusterOutput {
+            policy: self.policy,
+            bundles: bundle_outputs,
+            aggregate,
+            arrival,
+            load_imbalance: if self.spread_samples > 0 {
+                self.spread_sum / self.spread_samples as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::WorkloadSpec;
+    use crate::stats::distributions::LengthDist;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 16;
+        cfg.requests_per_instance = 150;
+        cfg.workload = WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(20.0),
+            LengthDist::geometric_with_mean(50.0),
+        );
+        cfg
+    }
+
+    #[test]
+    fn one_bundle_closed_cluster_matches_single_session() {
+        let cfg = small_cfg();
+        let single = Simulation::builder(&cfg, 2).build().unwrap().run();
+        let cluster = ClusterSimulation::builder(&cfg, 2).build().unwrap().run().unwrap();
+        assert_eq!(cluster.bundles.len(), 1);
+        assert_eq!(cluster.bundles[0].completions, single.completions);
+        assert_eq!(
+            cluster.aggregate.total_time.to_bits(),
+            single.metrics.total_time.to_bits()
+        );
+        assert_eq!(
+            cluster.aggregate.delivered_throughput_per_instance.to_bits(),
+            single.metrics.delivered_throughput_per_instance.to_bits()
+        );
+        assert_eq!(cluster.load_imbalance, 0.0);
+        assert_eq!(cluster.arrival.kind, "closed");
+    }
+
+    #[test]
+    fn one_bundle_open_cluster_matches_single_open_session() {
+        let cfg = small_cfg();
+        let single = Simulation::builder(&cfg, 2)
+            .arrival(OpenLoopPoisson::new(0.05, 256, cfg.seed).unwrap())
+            .max_completions(Some(300))
+            .build()
+            .unwrap()
+            .run();
+        let cluster = ClusterSimulation::builder(&cfg, 2)
+            .arrival(ClusterArrival::Open { lambda: 0.05, queue_capacity: 256 })
+            .completions_per_bundle(Some(300))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(cluster.bundles[0].completions, single.completions);
+        assert_eq!(cluster.arrival, single.arrival);
+    }
+
+    #[test]
+    fn closed_fleet_runs_every_bundle_to_target_independently() {
+        let cfg = small_cfg();
+        let out = ClusterSimulation::builder(&cfg, 2)
+            .bundles(3)
+            .completions_per_bundle(Some(120))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.bundles.len(), 3);
+        for b in &out.bundles {
+            assert_eq!(b.completions.len(), 120, "bundle {}", b.bundle);
+            assert!(b.metrics.throughput_per_instance > 0.0);
+            assert_eq!(b.final_r, 2);
+        }
+        // Bundles run distinct streams: completion schedules differ.
+        assert_ne!(out.bundles[0].completions, out.bundles[1].completions);
+        // Aggregate completed counts the fleet.
+        assert_eq!(out.aggregate.completed, 360);
+        assert!(out.load_imbalance >= 0.0);
+    }
+
+    #[test]
+    fn open_fleet_routes_and_accounts_every_arrival() {
+        let cfg = small_cfg();
+        for policy in [Policy::RoundRobin, Policy::JoinShortestQueue, Policy::LeastTokenLoad] {
+            let out = ClusterSimulation::builder(&cfg, 2)
+                .bundles(2)
+                .policy(policy)
+                .arrival(ClusterArrival::Open { lambda: 0.2, queue_capacity: 64 })
+                .completions_per_bundle(Some(150))
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let a = out.arrival;
+            assert_eq!(a.kind, "open-poisson");
+            assert!(a.offered > 0, "{policy:?}");
+            // Exact conservation: every generated arrival was admitted
+            // or rejected (a finishing bundle flushes its stranded
+            // inbox into the rejected count).
+            assert_eq!(a.offered, a.admitted + a.rejected, "{policy:?}: {a:?}");
+            // Both bundles saw traffic.
+            for b in &out.bundles {
+                assert!(b.arrival.admitted > 0, "{policy:?} bundle {}", b.bundle);
+                assert_eq!(b.arrival.kind, "cluster-routed");
+            }
+            assert!(out.load_imbalance >= 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = small_cfg();
+        let run = || {
+            ClusterSimulation::builder(&cfg, 2)
+                .bundles(3)
+                .policy(Policy::JoinShortestQueue)
+                .arrival(ClusterArrival::Open { lambda: 0.25, queue_capacity: 128 })
+                .completions_per_bundle(Some(100))
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.arrival, b.arrival);
+        for (x, y) in a.bundles.iter().zip(&b.bundles) {
+            assert_eq!(x.completions, y.completions);
+            assert_eq!(x.metrics.total_time.to_bits(), y.metrics.total_time.to_bits());
+        }
+        assert_eq!(a.load_imbalance.to_bits(), b.load_imbalance.to_bits());
+    }
+
+    #[test]
+    fn autoscaler_reconfigures_a_mis_provisioned_bundle() {
+        // Start far below the rule's optimum; the online estimator must
+        // move r toward it within a few epochs.
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 64;
+        cfg.workload = WorkloadSpec::paper_section5();
+        let out = ClusterSimulation::builder(&cfg, 1)
+            .autoscale(AutoscaleConfig {
+                feasible: (1..=16).collect(),
+                window: 2000,
+                epoch_completions: 1500,
+            })
+            .completions_per_bundle(Some(6000))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let b = &out.bundles[0];
+        assert!(
+            !b.reconfigurations.is_empty(),
+            "expected at least one reconfiguration from r=1"
+        );
+        assert!(b.final_r > 1, "final r {}", b.final_r);
+        // The trajectory is monotone toward the optimum from below here.
+        for rec in &b.reconfigurations {
+            assert!(rec.to_r > rec.from_r, "{rec:?}");
+            assert!(rec.predicted_gain > 0.0);
+        }
+    }
+
+    #[test]
+    fn builder_validation() {
+        let cfg = small_cfg();
+        assert!(ClusterSimulation::builder(&cfg, 2).bundles(0).build().is_err());
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .arrival(ClusterArrival::Open { lambda: 0.0, queue_capacity: 4 })
+            .build()
+            .is_err());
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .arrival(ClusterArrival::Open { lambda: 0.1, queue_capacity: 0 })
+            .build()
+            .is_err());
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .autoscale(AutoscaleConfig {
+                feasible: vec![],
+                window: 2000,
+                epoch_completions: 500
+            })
+            .build()
+            .is_err());
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .autoscale(AutoscaleConfig {
+                feasible: vec![1, 2],
+                window: 4,
+                epoch_completions: 500
+            })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn bundle_seeds_are_stable_and_distinct() {
+        let base = 20260710u64;
+        assert_eq!(bundle_seed(base, 0), base);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..16 {
+            assert!(seen.insert(bundle_seed(base, i)), "collision at bundle {i}");
+        }
+        assert_ne!(bundle_seed(1, 3), bundle_seed(2, 3));
+    }
+}

@@ -12,15 +12,23 @@
 //! * [`engine`] — the legacy free-function surface: the deprecated
 //!   `simulate()` shim (byte-identical to the pre-session engine), plus
 //!   a coupled (monolithic) baseline.
+//! * [`cluster`] — fleet-scale simulation: N stepped sessions in
+//!   lockstep virtual time, one shared arrival stream split across
+//!   bundles by the coordinator's routing policies, and online
+//!   per-bundle autoscaling from observed completions.
 //! * [`metrics`] — stable 80% throughput, TPOT, idle ratios (§5.2).
 
 pub mod batch;
+pub mod cluster;
 pub mod engine;
 pub mod metrics;
 pub mod session;
 pub mod slots;
 
 pub use batch::{BatchState, StepRecord};
+pub use cluster::{
+    AutoscaleConfig, BundleOutput, ClusterArrival, ClusterOutput, ClusterSimulation,
+};
 pub use engine::{simulate, simulate_coupled, sweep_ratios, SimOptions, SimOutput};
 pub use metrics::SimMetrics;
 pub use session::{

@@ -134,25 +134,57 @@ impl LengthSource for SyntheticSource {
 
 /// Deterministic trace replay with per-(lane, worker) sharding: stream
 /// (g, j) of an (m, r) session reads trace indices
-/// `g*r + j, g*r + j + m*r, g*r + j + 2*m*r, ...` (wrapping), so every
-/// worker replays a disjoint residue class of the trace regardless of
-/// thread schedule, and the same session shape always reads the same
-/// requests.
+/// `o + g*r + j, o + g*r + j + m*r, o + g*r + j + 2*m*r, ...`
+/// (wrapping), so every worker replays a disjoint residue class of the
+/// trace regardless of thread schedule, and the same session shape
+/// always reads the same requests. The start offset `o` is 0 by
+/// default; [`TraceReplay::rotated`] phase-shifts it so fleet bundles
+/// replaying one shared trace consume *different* request subsequences
+/// instead of synchronized clones.
 pub struct TraceReplay {
     requests: Arc<Vec<RequestLengths>>,
+    offset: usize,
 }
 
 impl TraceReplay {
+    /// Build a replay source from a trace. Zero-length decode records
+    /// (`decode == 0`, possible in programmatically-built traces — CSV
+    /// loading already clamps them) are **skipped at load time**: a
+    /// request that never produces a token has no renewal cycle, and
+    /// replaying it would emit `inf`/`NaN` TPOT into metrics and CSVs.
     pub fn new(trace: &Trace) -> Result<Self> {
-        if trace.is_empty() {
-            return Err(AfdError::Workload("cannot replay an empty trace".into()));
+        let requests: Vec<RequestLengths> =
+            trace.requests.iter().copied().filter(|r| r.decode >= 1).collect();
+        let skipped = trace.requests.len() - requests.len();
+        if skipped > 0 {
+            crate::util::logging::warn(&format!(
+                "trace replay: skipped {skipped} zero-length decode record(s) of {}",
+                trace.requests.len()
+            ));
         }
-        Ok(Self { requests: Arc::new(trace.requests.clone()) })
+        if requests.is_empty() {
+            return Err(AfdError::Workload(
+                "cannot replay an empty trace (no records with decode >= 1)".into(),
+            ));
+        }
+        Ok(Self { requests: Arc::new(requests), offset: 0 })
     }
 
     /// Replay the synthetic analogue of a production corpus.
     pub fn from_corpus(corpus: ProductionCorpus, n: usize, seed: u64) -> Self {
-        Self { requests: Arc::new(synthetic_production_trace(corpus, n, seed).requests) }
+        Self {
+            requests: Arc::new(synthetic_production_trace(corpus, n, seed).requests),
+            offset: 0,
+        }
+    }
+
+    /// Phase-shift the replay start by `seed % len` positions. Distinct
+    /// seeds give distinct (deterministic) subsequences of the same
+    /// trace — how fleet bundles sharing one fixed trace avoid replaying
+    /// byte-identical streams.
+    pub fn rotated(mut self, seed: u64) -> Self {
+        self.offset = (seed % (self.requests.len() as u64).max(1)) as usize;
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -174,7 +206,7 @@ impl LengthSource for TraceReplay {
     ) -> Box<dyn LengthStream> {
         Box::new(TraceShard {
             requests: self.requests.clone(),
-            next: lane * n_workers + worker,
+            next: self.offset + lane * n_workers + worker,
             stride: (n_lanes * n_workers).max(1),
         })
     }
@@ -712,20 +744,60 @@ impl SimulationBuilder {
                 steps: 0,
             })
             .collect();
-        Ok(Simulation { cfg, r, target_completions, record_steps, arrival, lanes, observers })
+        let agg = (r * b) as f64;
+        Ok(Simulation {
+            metrics: MetricsCollector::new(r),
+            worker_free: vec![0.0; r],
+            ffn_free: 0.0,
+            t_ffn: cfg.hardware.t_ffn(agg),
+            tc_half: cfg.hardware.t_comm(agg) / 2.0,
+            // Lane scheduling: earliest-ready lane from a binary heap,
+            // O(log m) per step (the ROADMAP hot-path item). Ties (only
+            // the all-zero start) break to the lowest lane index, exactly
+            // like the legacy linear first-min scan.
+            heap: (0..m).map(|g| Reverse(LaneKey { ready_at: 0.0, lane: g })).collect(),
+            completions: Vec::with_capacity(target_completions + 64),
+            steps_log: Vec::new(),
+            last_finish: 0.0,
+            b,
+            cfg,
+            r,
+            target_completions,
+            record_steps,
+            arrival,
+            lanes,
+            observers,
+        })
     }
 }
 
 /// A fully-assembled simulation session. Create with
-/// [`Simulation::builder`], run with [`Simulation::run`].
+/// [`Simulation::builder`]; run to completion with [`Simulation::run`],
+/// or drive it one lane-step at a time with [`Simulation::step`] /
+/// [`Simulation::finish`] — the stepped surface
+/// [`crate::sim::cluster::ClusterSimulation`] uses to interleave N
+/// bundles in lockstep virtual time.
 pub struct Simulation {
     cfg: ExperimentConfig,
     r: usize,
+    b: usize,
     target_completions: usize,
     record_steps: bool,
     arrival: Box<dyn ArrivalProcess>,
     lanes: Vec<Lane>,
     observers: Vec<Box<dyn SimObserver>>,
+    // Stepped-engine state, initialized by the builder so `run` is just
+    // `while !is_done { step() } finish()` — byte-identical to the
+    // former monolithic loop.
+    metrics: MetricsCollector,
+    worker_free: Vec<f64>,
+    ffn_free: f64,
+    t_ffn: f64,
+    tc_half: f64,
+    heap: BinaryHeap<Reverse<LaneKey>>,
+    completions: Vec<Completion>,
+    steps_log: Vec<StepRecord>,
+    last_finish: f64,
 }
 
 impl Simulation {
@@ -756,136 +828,217 @@ impl Simulation {
             .record_steps(opts.record_steps)
     }
 
-    /// Run the session to its completion target.
-    pub fn run(mut self) -> SimOutput {
+    /// Fan-in of this session.
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// Per-worker microbatch size.
+    pub fn batch_per_worker(&self) -> usize {
+        self.b
+    }
+
+    /// Completion target the session runs to.
+    pub fn target_completions(&self) -> usize {
+        self.target_completions
+    }
+
+    /// Completions recorded so far (pre-sort, pre-truncation).
+    pub fn completed(&self) -> usize {
+        self.completions.len()
+    }
+
+    /// Whether the completion target has been reached.
+    pub fn is_done(&self) -> bool {
+        self.completions.len() >= self.target_completions
+    }
+
+    /// Virtual time at which the next lane-step would begin.
+    pub fn next_ready(&self) -> f64 {
+        self.heap.peek().map(|Reverse(k)| k.ready_at).expect("one heap entry per lane")
+    }
+
+    /// Virtual time of the last completed lane-step.
+    pub fn last_finish(&self) -> f64 {
+        self.last_finish
+    }
+
+    /// Current total token load across every lane and worker — the
+    /// bundle-level load signal cluster routing consumes.
+    pub fn token_load(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.workers.iter())
+            .map(|w| w.token_load())
+            .sum()
+    }
+
+    /// Occupied decode slots across every lane and worker.
+    pub fn live_slots(&self) -> usize {
+        self.lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum()
+    }
+
+    /// Total decode slots (lanes × r × B).
+    pub fn total_slots(&self) -> usize {
+        self.lanes.len() * self.r * self.b
+    }
+
+    /// Advance the earliest-ready lane through one full
+    /// Attention -> A2F -> FFN -> F2A step; returns the step's finish
+    /// time. [`Simulation::run`] is exactly this in a loop, so stepped
+    /// (cluster) and monolithic drives produce identical event schedules.
+    pub fn step(&mut self) -> f64 {
         let hw = self.cfg.hardware;
-        let b = self.cfg.topology.batch_per_worker;
         let r = self.r;
-        let m = self.lanes.len();
+        let Reverse(LaneKey { ready_at: ready, lane: g }) =
+            self.heap.pop().expect("one heap entry per lane");
 
-        let mut metrics = MetricsCollector::new(r);
-        let mut worker_free = vec![0.0f64; r];
-        let mut ffn_free = 0.0f64;
-
-        let mut completions: Vec<Completion> =
-            Vec::with_capacity(self.target_completions + 64);
-        let mut steps_log = Vec::new();
-
-        let agg = (r * b) as f64;
-        let t_ffn = hw.t_ffn(agg);
-        let tc_half = hw.t_comm(agg) / 2.0;
-
-        // Lane scheduling: earliest-ready lane from a binary heap,
-        // O(log m) per step (the ROADMAP hot-path item). Ties (only the
-        // all-zero start) break to the lowest lane index, exactly like
-        // the legacy linear first-min scan.
-        let mut heap: BinaryHeap<Reverse<LaneKey>> =
-            (0..m).map(|g| Reverse(LaneKey { ready_at: 0.0, lane: g })).collect();
-
-        let mut last_finish = 0.0f64;
-        while completions.len() < self.target_completions {
-            let Reverse(LaneKey { ready_at: ready, lane: g }) =
-                heap.pop().expect("one heap entry per lane");
-
-            // Open-loop admission into idle slots happens before the
-            // Attention phase so newly admitted requests decode this
-            // step. No-op under the closed loop.
-            self.arrival.advance_to(ready);
-            for j in 0..r {
-                self.lanes[g].workers[j].fill_empty(ready, &mut *self.arrival);
-            }
-
-            // --- Attention phase (per-worker start, barrier end) ---
-            let mut att_barrier: f64 = 0.0;
-            let mut att_start_min = f64::INFINITY;
-            let mut max_load = 0u64;
-            let mut sum_load = 0u64;
-            for j in 0..r {
-                let load = self.lanes[g].workers[j].token_load();
-                max_load = max_load.max(load);
-                sum_load += load;
-                let t_a = hw.t_attention(load as f64);
-                let start = worker_free[j].max(ready);
-                if start > worker_free[j] {
-                    for o in &mut self.observers {
-                        o.on_idle(Resource::Attention(j), worker_free[j], start);
-                    }
-                }
-                let end = start + t_a;
-                worker_free[j] = end;
-                metrics.on_attention(j, start, t_a);
-                for o in &mut self.observers {
-                    o.on_attention(j, start, t_a);
-                }
-                att_barrier = att_barrier.max(end);
-                att_start_min = att_start_min.min(start);
-            }
-
-            // --- A2F transfer ---
-            let a2f_done = att_barrier + tc_half;
-
-            // --- FFN phase (shared server; waits if busy) ---
-            let ffn_start = a2f_done.max(ffn_free);
-            if ffn_start > ffn_free {
-                for o in &mut self.observers {
-                    o.on_idle(Resource::Ffn, ffn_free, ffn_start);
-                }
-            }
-            let ffn_done = ffn_start + t_ffn;
-            ffn_free = ffn_done;
-            metrics.on_ffn(ffn_start, t_ffn);
-            for o in &mut self.observers {
-                o.on_ffn(ffn_start, t_ffn);
-            }
-
-            // --- F2A transfer; batch ready for its next step ---
-            let f2a_done = ffn_done + tc_half;
-            self.lanes[g].steps += 1;
-
-            // Slots advance: the step's tokens are delivered at f2a_done.
-            let before = completions.len();
-            for j in 0..r {
-                self.lanes[g].workers[j].step_admission(
-                    f2a_done,
-                    &mut *self.arrival,
-                    &mut completions,
-                );
-            }
-            last_finish = f2a_done;
-
-            let record = StepRecord {
-                batch: g,
-                step: self.lanes[g].steps,
-                barrier_load: max_load,
-                mean_load: sum_load as f64 / r as f64,
-                attention_start: att_start_min,
-                attention_end: att_barrier,
-                ffn_start,
-                ffn_end: ffn_done,
-                ready_at: f2a_done,
-            };
-            metrics.on_step(&record);
-            for o in &mut self.observers {
-                o.on_step(&record);
-                o.on_completions(f2a_done, &completions[before..]);
-            }
-            if self.record_steps {
-                steps_log.push(record);
-            }
-
-            heap.push(Reverse(LaneKey { ready_at: f2a_done, lane: g }));
+        // Open-loop admission into idle slots happens before the
+        // Attention phase so newly admitted requests decode this
+        // step. No-op under the closed loop.
+        self.arrival.advance_to(ready);
+        for j in 0..r {
+            self.lanes[g].workers[j].fill_empty(ready, &mut *self.arrival);
         }
 
+        // --- Attention phase (per-worker start, barrier end) ---
+        let mut att_barrier: f64 = 0.0;
+        let mut att_start_min = f64::INFINITY;
+        let mut max_load = 0u64;
+        let mut sum_load = 0u64;
+        for j in 0..r {
+            let load = self.lanes[g].workers[j].token_load();
+            max_load = max_load.max(load);
+            sum_load += load;
+            let t_a = hw.t_attention(load as f64);
+            let start = self.worker_free[j].max(ready);
+            if start > self.worker_free[j] {
+                for o in &mut self.observers {
+                    o.on_idle(Resource::Attention(j), self.worker_free[j], start);
+                }
+            }
+            let end = start + t_a;
+            self.worker_free[j] = end;
+            self.metrics.on_attention(j, start, t_a);
+            for o in &mut self.observers {
+                o.on_attention(j, start, t_a);
+            }
+            att_barrier = att_barrier.max(end);
+            att_start_min = att_start_min.min(start);
+        }
+
+        // --- A2F transfer ---
+        let a2f_done = att_barrier + self.tc_half;
+
+        // --- FFN phase (shared server; waits if busy) ---
+        let ffn_start = a2f_done.max(self.ffn_free);
+        if ffn_start > self.ffn_free {
+            for o in &mut self.observers {
+                o.on_idle(Resource::Ffn, self.ffn_free, ffn_start);
+            }
+        }
+        let ffn_done = ffn_start + self.t_ffn;
+        self.ffn_free = ffn_done;
+        self.metrics.on_ffn(ffn_start, self.t_ffn);
+        for o in &mut self.observers {
+            o.on_ffn(ffn_start, self.t_ffn);
+        }
+
+        // --- F2A transfer; batch ready for its next step ---
+        let f2a_done = ffn_done + self.tc_half;
+        self.lanes[g].steps += 1;
+
+        // Slots advance: the step's tokens are delivered at f2a_done.
+        let before = self.completions.len();
+        for j in 0..r {
+            self.lanes[g].workers[j].step_admission(
+                f2a_done,
+                &mut *self.arrival,
+                &mut self.completions,
+            );
+        }
+        self.last_finish = f2a_done;
+
+        let record = StepRecord {
+            batch: g,
+            step: self.lanes[g].steps,
+            barrier_load: max_load,
+            mean_load: sum_load as f64 / r as f64,
+            attention_start: att_start_min,
+            attention_end: att_barrier,
+            ffn_start,
+            ffn_end: ffn_done,
+            ready_at: f2a_done,
+        };
+        self.metrics.on_step(&record);
+        for o in &mut self.observers {
+            o.on_step(&record);
+            o.on_completions(f2a_done, &self.completions[before..]);
+        }
+        if self.record_steps {
+            self.steps_log.push(record);
+        }
+
+        self.heap.push(Reverse(LaneKey { ready_at: f2a_done, lane: g }));
+        f2a_done
+    }
+
+    /// Finalize a (possibly partially) stepped session into its output.
+    pub fn finish(mut self) -> SimOutput {
         // Completions were appended batch-by-batch at nondecreasing times
         // per lane, but lanes interleave: sort by finish time for the
         // stable window (cheap: nearly sorted).
-        completions.sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
-        completions.truncate(self.target_completions);
+        self.completions
+            .sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
+        self.completions.truncate(self.target_completions);
 
-        self.arrival.advance_to(last_finish);
-        let arrival = self.arrival.stats(last_finish);
-        let sim_metrics = metrics.finalize(&self.cfg, r, b, &completions, last_finish);
-        SimOutput { metrics: sim_metrics, completions, steps: steps_log, arrival }
+        self.arrival.advance_to(self.last_finish);
+        let arrival = self.arrival.stats(self.last_finish);
+        let sim_metrics = self.metrics.finalize(
+            &self.cfg,
+            self.r,
+            self.b,
+            &self.completions,
+            self.last_finish,
+        );
+        SimOutput {
+            metrics: sim_metrics,
+            completions: self.completions,
+            steps: self.steps_log,
+            arrival,
+        }
+    }
+
+    /// Run the session to its completion target.
+    pub fn run(mut self) -> SimOutput {
+        while !self.is_done() {
+            self.step();
+        }
+        self.finish()
+    }
+}
+
+/// A session is itself an observable load unit: the cluster simulator
+/// routes arriving requests across bundles by snapshotting each bundle's
+/// [`BundleLoad`] view (token load, slot occupancy). Bundle-level
+/// admission queues live in the cluster, so `queued` is 0 here — the
+/// cluster folds its per-bundle inbox length in, exactly as the batcher
+/// does for its per-worker queues.
+impl crate::coordinator::load::BundleLoad for Simulation {
+    fn queued(&self) -> usize {
+        0
+    }
+
+    fn token_load(&self) -> u64 {
+        Simulation::token_load(self)
+    }
+
+    fn live_slots(&self) -> usize {
+        Simulation::live_slots(self)
+    }
+
+    fn free_slots(&self) -> usize {
+        self.total_slots() - Simulation::live_slots(self)
     }
 }
 
@@ -1018,6 +1171,45 @@ mod tests {
         let b = run();
         assert_eq!(a.completions, b.completions);
         assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+    }
+
+    #[test]
+    fn stepped_drive_is_identical_to_monolithic_run() {
+        let cfg = small_cfg();
+        let run = Simulation::builder(&cfg, 2).build().unwrap().run();
+        let mut sim = Simulation::builder(&cfg, 2).build().unwrap();
+        assert_eq!(sim.next_ready(), 0.0);
+        assert_eq!(sim.live_slots(), sim.total_slots());
+        assert!(sim.token_load() > 0);
+        while !sim.is_done() {
+            let ready = sim.next_ready();
+            let t = sim.step();
+            assert!(t > ready);
+            assert_eq!(sim.last_finish(), t);
+        }
+        let stepped = sim.finish();
+        assert_eq!(run.completions, stepped.completions);
+        assert_eq!(
+            run.metrics.total_time.to_bits(),
+            stepped.metrics.total_time.to_bits()
+        );
+        assert_eq!(
+            run.metrics.delivered_throughput_per_instance.to_bits(),
+            stepped.metrics.delivered_throughput_per_instance.to_bits()
+        );
+    }
+
+    #[test]
+    fn trace_replay_skips_zero_length_decode_records() {
+        let mut requests: Vec<RequestLengths> =
+            (0..6u64).map(|i| RequestLengths { prefill: 10 + i, decode: 2 }).collect();
+        requests.push(RequestLengths { prefill: 99, decode: 0 });
+        let replay = TraceReplay::new(&Trace::new(requests)).unwrap();
+        // The degenerate record is gone from the replay pool.
+        assert_eq!(replay.len(), 6);
+        // A trace of only degenerate records cannot be replayed at all.
+        let empty = Trace::new(vec![RequestLengths { prefill: 1, decode: 0 }]);
+        assert!(TraceReplay::new(&empty).is_err());
     }
 
     #[test]

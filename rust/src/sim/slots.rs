@@ -22,14 +22,21 @@ pub struct Completion {
     pub finish_time: f64,
     /// Simulation time at which the request was admitted to the slot.
     pub admit_time: f64,
+    /// Prefill (prompt) length of the completed request — carried so
+    /// downstream consumers (the online autoscaler's A.6 estimator) can
+    /// reconstruct full `(P, D)` observations from the completion stream.
+    pub prefill: u64,
     /// Decode lifetime (number of output tokens produced).
     pub decode_len: u64,
 }
 
 impl Completion {
-    /// Time per output token for this request.
+    /// Time per output token for this request. Guarded against
+    /// zero-length decode records (malformed trace entries): the divisor
+    /// is clamped to 1 so a degenerate completion yields its residence
+    /// time rather than `inf`/`NaN` poisoning mean-TPOT metrics and CSVs.
     pub fn tpot(&self) -> f64 {
-        (self.finish_time - self.admit_time) / self.decode_len as f64
+        (self.finish_time - self.admit_time) / self.decode_len.max(1) as f64
     }
 }
 
@@ -164,6 +171,7 @@ impl SlotArray {
                 completions.push(Completion {
                     finish_time: now,
                     admit_time: *admit,
+                    prefill: req.lengths.prefill,
                     decode_len: req.lengths.decode,
                 });
                 if arrival.try_admit(now).is_some() {
@@ -352,6 +360,17 @@ mod tests {
         slots.fill_empty(4.0, &mut ClosedLoopReplenish);
         assert_eq!(slots.live(), 2);
         assert_eq!(slots.token_load(), 10); // two fresh P=5, age-0 requests
+    }
+
+    #[test]
+    fn tpot_is_finite_even_for_zero_length_decode_records() {
+        // Malformed trace entries (decode_len == 0) must not emit
+        // inf/NaN TPOT into metrics or CSVs: the divisor clamps to 1.
+        let c = Completion { finish_time: 10.0, admit_time: 4.0, prefill: 3, decode_len: 0 };
+        assert!(c.tpot().is_finite());
+        assert_eq!(c.tpot(), 6.0);
+        let ok = Completion { finish_time: 10.0, admit_time: 4.0, prefill: 3, decode_len: 3 };
+        assert_eq!(ok.tpot(), 2.0);
     }
 
     #[test]

@@ -18,9 +18,7 @@
 //! in the asymptotic overhead discussion of §4.2).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
-
-use once_cell::sync::Lazy;
+use std::sync::{Mutex, OnceLock};
 
 use super::gaussian::{normal_cdf, normal_pdf};
 use super::quadrature::gauss_legendre;
@@ -47,7 +45,11 @@ pub fn max_normal_pdf(r: usize, m: f64) -> f64 {
     r as f64 * normal_pdf(m) * normal_cdf(m).powi(r as i32 - 1)
 }
 
-static KAPPA_CACHE: Lazy<Mutex<HashMap<usize, f64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+static KAPPA_CACHE: OnceLock<Mutex<HashMap<usize, f64>>> = OnceLock::new();
+
+fn kappa_cache() -> &'static Mutex<HashMap<usize, f64>> {
+    KAPPA_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 /// `kappa_r = E[max(Z_1..Z_r)]` for i.i.d. standard normals (Eq. 5).
 ///
@@ -59,12 +61,12 @@ pub fn expected_max_std_normal(r: usize) -> f64 {
     if r == 1 {
         return 0.0;
     }
-    if let Some(&v) = KAPPA_CACHE.lock().unwrap().get(&r) {
+    if let Some(&v) = kappa_cache().lock().unwrap().get(&r) {
         return v;
     }
     let f = move |z: f64| z * max_normal_pdf(r, z);
     let v = composite_gl(&f, -9.0, 9.0 + (r as f64).ln());
-    KAPPA_CACHE.lock().unwrap().insert(r, v);
+    kappa_cache().lock().unwrap().insert(r, v);
     v
 }
 

@@ -1,19 +1,24 @@
-//! Sweep result emission: CSV (one row per grid cell, with the group's
-//! theory-vs-simulation columns repeated on every row for flat-file
-//! analysis), JSON (nested cells + group summaries), and the human
+//! Sweep result emission: CSV (one aggregate row per grid cell plus one
+//! row per bundle for fleet cells, with the group's theory-vs-simulation
+//! columns repeated on every row for flat-file analysis), JSON (nested
+//! cells + per-bundle breakdowns + group summaries), and the human
 //! summary table the CLI prints.
 //!
 //! All formatting is deterministic, so serial and parallel runs of the
 //! same grid emit byte-identical files — the acceptance check for the
 //! grid runner rides on this. The arrival-process axis adds the
 //! queueing/rejection columns (`arrival`, `lambda`, `offered`,
-//! `admitted`, `rejected`, `mean_queue_wait`, `mean_queue_len`) at the
-//! end of the row, keeping the legacy column prefix stable for existing
-//! plotting scripts.
+//! `admitted`, `rejected`, `mean_queue_wait`, `mean_queue_len`); the
+//! fleet axis appends `bundles`, `policy`, `bundle` (`agg` on aggregate
+//! rows, the bundle index on per-bundle rows), `imbalance`,
+//! `idle_share`, `realized_vs_eq1`, and `converged_r` — keeping the
+//! legacy column prefix stable for existing plotting scripts.
 
 use std::path::Path;
 
 use crate::error::Result;
+use crate::sim::metrics::SimMetrics;
+use crate::sim::session::ArrivalStats;
 use crate::sweep::grid::{GroupSummary, SweepCell, SweepResults};
 use crate::util::csvio::CsvTable;
 use crate::util::json::Json;
@@ -21,7 +26,7 @@ use crate::util::tablefmt::{sig, Table};
 
 /// CSV header (kept stable; downstream plotting scripts key on names —
 /// `python/plot_sweep.py --check` validates this exact schema).
-pub const CSV_HEADER: [&str; 25] = [
+pub const CSV_HEADER: [&str; 32] = [
     "scenario",
     "r",
     "batch",
@@ -47,6 +52,13 @@ pub const CSV_HEADER: [&str; 25] = [
     "rejected",
     "mean_queue_wait",
     "mean_queue_len",
+    "bundles",
+    "policy",
+    "bundle",
+    "imbalance",
+    "idle_share",
+    "realized_vs_eq1",
+    "converged_r",
 ];
 
 fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
@@ -56,44 +68,96 @@ fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
             g.scenario == cell.scenario
                 && g.batch == cell.metrics.batch
                 && g.arrival == cell.arrival.kind
+                && g.bundles == cell.cluster.bundles
+                && g.policy == cell.cluster.policy
         })
         .expect("every cell belongs to a group")
 }
 
-/// Flatten results into an in-memory CSV table (one row per cell).
+/// One CSV row: a cell's aggregate (`bundle_label = "agg"`) or one of
+/// its bundles. The metric/arrival columns carry the row's own values;
+/// the group and fleet columns repeat the cell context.
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    t: &mut CsvTable,
+    cell: &SweepCell,
+    g: &GroupSummary,
+    m: &SimMetrics,
+    a: &ArrivalStats,
+    bundle_label: String,
+    realized_vs_eq1: f64,
+    converged_r: usize,
+) {
+    let c = &cell.cluster;
+    t.push_row(&[
+        cell.scenario.clone(),
+        cell.metrics.r.to_string(),
+        m.batch.to_string(),
+        cell.seed.to_string(),
+        format!("{:.6}", cell.load.theta),
+        format!("{:.6}", cell.load.nu()),
+        format!("{:.8}", m.throughput_per_instance),
+        format!("{:.8}", m.delivered_throughput_per_instance),
+        format!("{:.6}", m.tpot),
+        format!("{:.6}", m.idle_attention),
+        format!("{:.6}", m.idle_ffn),
+        format!("{:.8}", cell.theory_mf),
+        format!("{:.8}", cell.theory_g),
+        g.r_star_g.to_string(),
+        g.sim_opt_r.to_string(),
+        format!("{:.6}", g.ratio_gap),
+        m.completed.to_string(),
+        format!("{:.3}", m.total_time),
+        a.kind.to_string(),
+        format!("{:.8}", a.lambda),
+        a.offered.to_string(),
+        a.admitted.to_string(),
+        a.rejected.to_string(),
+        format!("{:.6}", a.mean_queue_wait),
+        format!("{:.6}", a.mean_queue_len),
+        c.bundles.to_string(),
+        c.policy.clone(),
+        bundle_label,
+        format!("{:.6}", c.imbalance),
+        format!("{:.6}", c.idle_share),
+        format!("{:.6}", realized_vs_eq1),
+        converged_r.to_string(),
+    ]);
+}
+
+/// Flatten results into an in-memory CSV table: per-bundle rows first
+/// (fleet cells only), then the cell's aggregate row.
 pub fn to_csv_table(res: &SweepResults) -> CsvTable {
     let mut t = CsvTable::new(&CSV_HEADER);
     for cell in &res.cells {
         let g = group_for(res, cell);
-        let m = &cell.metrics;
-        let a = &cell.arrival;
-        t.push_row(&[
-            cell.scenario.clone(),
-            m.r.to_string(),
-            m.batch.to_string(),
-            cell.seed.to_string(),
-            format!("{:.6}", cell.load.theta),
-            format!("{:.6}", cell.load.nu()),
-            format!("{:.8}", m.throughput_per_instance),
-            format!("{:.8}", m.delivered_throughput_per_instance),
-            format!("{:.6}", m.tpot),
-            format!("{:.6}", m.idle_attention),
-            format!("{:.6}", m.idle_ffn),
-            format!("{:.8}", cell.theory_mf),
-            format!("{:.8}", cell.theory_g),
-            g.r_star_g.to_string(),
-            g.sim_opt_r.to_string(),
-            format!("{:.6}", g.ratio_gap),
-            m.completed.to_string(),
-            format!("{:.3}", m.total_time),
-            a.kind.to_string(),
-            format!("{:.8}", a.lambda),
-            a.offered.to_string(),
-            a.admitted.to_string(),
-            a.rejected.to_string(),
-            format!("{:.6}", a.mean_queue_wait),
-            format!("{:.6}", a.mean_queue_len),
-        ]);
+        for b in &cell.per_bundle {
+            let realized = if cell.theory_g > 0.0 {
+                b.metrics.delivered_throughput_per_instance / cell.theory_g
+            } else {
+                f64::NAN
+            };
+            push_row(
+                &mut t,
+                cell,
+                g,
+                &b.metrics,
+                &b.arrival,
+                b.bundle.to_string(),
+                realized,
+                b.final_r,
+            );
+        }
+        push_row(
+            &mut t,
+            cell,
+            g,
+            &cell.metrics,
+            &cell.arrival,
+            "agg".to_string(),
+            cell.cluster.realized_vs_eq1,
+            cell.cluster.converged_r,
+        );
     }
     t
 }
@@ -103,9 +167,20 @@ pub fn write_csv(res: &SweepResults, path: impl AsRef<Path>) -> Result<()> {
     to_csv_table(res).write_path(path)
 }
 
+fn arrival_to_json(a: &ArrivalStats) -> Json {
+    Json::obj()
+        .set("kind", Json::Str(a.kind.to_string()))
+        .set("lambda", Json::Num(a.lambda))
+        .set("offered", Json::Num(a.offered as f64))
+        .set("admitted", Json::Num(a.admitted as f64))
+        .set("rejected", Json::Num(a.rejected as f64))
+        .set("mean_queue_wait", Json::Num(a.mean_queue_wait))
+        .set("mean_queue_len", Json::Num(a.mean_queue_len))
+}
+
 fn cell_to_json(cell: &SweepCell) -> Json {
     let m = &cell.metrics;
-    let a = &cell.arrival;
+    let c = &cell.cluster;
     Json::obj()
         .set("scenario", Json::Str(cell.scenario.clone()))
         .set("r", Json::Num(m.r as f64))
@@ -124,16 +199,37 @@ fn cell_to_json(cell: &SweepCell) -> Json {
         .set("theory_thr_g", Json::Num(cell.theory_g))
         .set("completed", Json::Num(m.completed as f64))
         .set("total_time", Json::Num(m.total_time))
+        .set("arrival", arrival_to_json(&cell.arrival))
         .set(
-            "arrival",
+            "cluster",
             Json::obj()
-                .set("kind", Json::Str(a.kind.to_string()))
-                .set("lambda", Json::Num(a.lambda))
-                .set("offered", Json::Num(a.offered as f64))
-                .set("admitted", Json::Num(a.admitted as f64))
-                .set("rejected", Json::Num(a.rejected as f64))
-                .set("mean_queue_wait", Json::Num(a.mean_queue_wait))
-                .set("mean_queue_len", Json::Num(a.mean_queue_len)),
+                .set("bundles", Json::Num(c.bundles as f64))
+                .set("policy", Json::Str(c.policy.clone()))
+                .set("imbalance", Json::Num(c.imbalance))
+                .set("idle_share", Json::Num(c.idle_share))
+                .set("realized_vs_eq1", Json::Num(c.realized_vs_eq1))
+                .set("converged_r", Json::Num(c.converged_r as f64)),
+        )
+        .set(
+            "per_bundle",
+            Json::Arr(
+                cell.per_bundle
+                    .iter()
+                    .map(|b| {
+                        Json::obj()
+                            .set("bundle", Json::Num(b.bundle as f64))
+                            .set("final_r", Json::Num(b.final_r as f64))
+                            .set(
+                                "sim_delivered",
+                                Json::Num(b.metrics.delivered_throughput_per_instance),
+                            )
+                            .set("tpot", Json::Num(b.metrics.tpot))
+                            .set("completed", Json::Num(b.metrics.completed as f64))
+                            .set("total_time", Json::Num(b.metrics.total_time))
+                            .set("arrival", arrival_to_json(&b.arrival))
+                    })
+                    .collect(),
+            ),
         )
 }
 
@@ -141,6 +237,8 @@ fn group_to_json(g: &GroupSummary) -> Json {
     Json::obj()
         .set("scenario", Json::Str(g.scenario.clone()))
         .set("arrival", Json::Str(g.arrival.clone()))
+        .set("bundles", Json::Num(g.bundles as f64))
+        .set("policy", Json::Str(g.policy.clone()))
         .set("batch", Json::Num(g.batch as f64))
         .set("theta", Json::Num(g.load.theta))
         .set("r_star_g", Json::Num(g.r_star_g as f64))
@@ -176,6 +274,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
     let mut t = Table::new(&[
         "scenario",
         "arrival",
+        "fleet",
         "B",
         "theta",
         "r*_G (theory)",
@@ -189,6 +288,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
         t.row(&[
             g.scenario.clone(),
             g.arrival.clone(),
+            format!("{}x {}", g.bundles, g.policy),
             g.batch.to_string(),
             sig(g.load.theta, 4),
             g.r_star_g.to_string(),
@@ -206,6 +306,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
     let mut t = Table::new(&[
         "scenario",
         "arrival",
+        "fleet",
         "r",
         "B",
         "sim Thr/inst",
@@ -216,6 +317,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
         "idle_A",
         "idle_F",
         "rejected",
+        "imbalance",
     ])
     .with_title("Sweep cells");
     for c in &res.cells {
@@ -223,6 +325,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
         t.row(&[
             c.scenario.clone(),
             c.arrival.kind.to_string(),
+            format!("{}x {}", c.cluster.bundles, c.cluster.policy),
             m.r.to_string(),
             m.batch.to_string(),
             sig(m.throughput_per_instance, 5),
@@ -233,6 +336,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
             format!("{:.1}%", 100.0 * m.idle_attention),
             format!("{:.1}%", 100.0 * m.idle_ffn),
             c.arrival.rejected.to_string(),
+            format!("{:.1}%", 100.0 * c.cluster.imbalance),
         ]);
     }
     t
@@ -323,6 +427,41 @@ mod tests {
         assert!(t.column_u64("offered").unwrap().iter().all(|&x| x > 0));
         assert!(t.column_u64("admitted").unwrap().iter().all(|&x| x > 0));
         assert!(t.column_f64("mean_queue_wait").unwrap().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fleet_cells_emit_per_bundle_rows_plus_aggregate() {
+        use crate::coordinator::router::Policy;
+        use crate::sweep::grid::FleetSpec;
+        let mut base = ExperimentConfig::default();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.8, 64)])
+        .with_fleets(vec![FleetSpec::new(2, Policy::JoinShortestQueue)]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        let t = to_csv_table(&res);
+        // 2 cells x (2 bundle rows + 1 aggregate row).
+        assert_eq!(t.rows.len(), 6);
+        let bundle = t.col("bundle").unwrap();
+        let aggs = t.rows.iter().filter(|r| r[bundle] == "agg").count();
+        assert_eq!(aggs, 2);
+        assert!(t.rows.iter().any(|r| r[bundle] == "0"));
+        assert!(t.rows.iter().any(|r| r[bundle] == "1"));
+        let pol = t.col("policy").unwrap();
+        assert!(t.rows.iter().all(|r| r[pol] == "jsq"));
+        assert!(t.column_u64("bundles").unwrap().iter().all(|&x| x == 2));
+        assert!(t.column_f64("imbalance").unwrap().iter().all(|&x| x >= 0.0));
+        assert!(t.column_f64("realized_vs_eq1").unwrap().iter().all(|&x| x > 0.0));
+        assert!(t.column_u64("converged_r").unwrap().iter().all(|&x| x == 1 || x == 2));
+        // JSON carries the cluster + per-bundle structures.
+        let j = to_json(&res).to_string_pretty();
+        assert!(j.contains("\"cluster\""));
+        assert!(j.contains("\"per_bundle\""));
+        assert!(j.contains("\"imbalance\""));
     }
 
     #[test]

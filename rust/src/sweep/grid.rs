@@ -1,17 +1,21 @@
-//! Parallel (scenario × arrival × r × B) grid runner.
+//! Parallel (scenario × arrival × fleet × r × B) grid runner.
 //!
-//! Every cell of the cross-product is one independent simulation session
-//! ([`crate::sim::session::Simulation`]); cells are spread over the
-//! [`crate::util::pool::ThreadPool`] and collected by index, so the
-//! output order is the grid order regardless of scheduling.
+//! Every cell of the cross-product is one independent cluster simulation
+//! ([`crate::sim::cluster::ClusterSimulation`]; a 1-bundle fleet is
+//! byte-identical to the plain [`crate::sim::session::Simulation`]);
+//! cells are spread over the [`crate::util::pool::ThreadPool`] and
+//! collected by index, so the output order is the grid order regardless
+//! of scheduling.
 //!
 //! **Axes.** Besides the legacy workload-shape × fan-in × batch grid,
 //! the runner sweeps the *arrival process* ([`ArrivalSpec`]): closed-loop
 //! replenishment (the paper's saturation regime) or open-loop Poisson
 //! traffic through a bounded admission queue, calibrated to a target
-//! utilization of the barrier-aware theory capacity. Scenario length
-//! sources follow [`crate::sweep::scenarios::SourceSpec`]: synthetic
-//! sampling or deterministic trace replay.
+//! utilization of the barrier-aware theory capacity — and the *fleet*
+//! ([`FleetSpec`]): how many `rA-1F` bundles share the stream and which
+//! routing policy splits it. Scenario length sources follow
+//! [`crate::sweep::scenarios::SourceSpec`]: synthetic sampling or
+//! deterministic trace replay.
 //!
 //! **Determinism.** Each cell derives its own seed from the experiment
 //! seed and its grid coordinates (SplitMix64 chain, the same hierarchy
@@ -21,10 +25,12 @@
 
 use crate::analysis::cycle_time::OperatingPoint;
 use crate::config::experiment::ExperimentConfig;
+use crate::coordinator::router::Policy;
 use crate::error::Result;
+use crate::sim::cluster::{ClusterArrival, ClusterSimulation};
 use crate::sim::engine::SimOptions;
 use crate::sim::metrics::SimMetrics;
-use crate::sim::session::{ArrivalStats, OpenLoopPoisson, Simulation};
+use crate::sim::session::{ArrivalStats, Simulation};
 use crate::stats::rng::SplitMix64;
 use crate::sweep::scenarios::Scenario;
 use crate::util::pool::{default_threads, ThreadPool};
@@ -87,12 +93,42 @@ impl ArrivalSpec {
     }
 }
 
+/// One point on the fleet axis: how many bundles share the request
+/// stream, and which routing policy splits it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetSpec {
+    pub bundles: usize,
+    pub policy: Policy,
+}
+
+impl FleetSpec {
+    /// The legacy single-bundle shape (policy is moot at N = 1; round
+    /// robin is the canonical label).
+    pub fn single() -> Self {
+        FleetSpec { bundles: 1, policy: Policy::RoundRobin }
+    }
+
+    pub fn new(bundles: usize, policy: Policy) -> Self {
+        FleetSpec { bundles, policy }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.bundles == 0 {
+            return Err(crate::error::AfdError::config("fleet bundles must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
 /// The cross-product to sweep.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub scenarios: Vec<Scenario>,
     /// Arrival processes (default: closed loop only).
     pub arrivals: Vec<ArrivalSpec>,
+    /// Fleet shapes (default: one bundle, round robin — the legacy
+    /// single-bundle sweep).
+    pub fleets: Vec<FleetSpec>,
     /// Fan-in values (paper's r axis).
     pub ratios: Vec<usize>,
     /// Per-worker microbatch sizes (paper's B axis).
@@ -102,12 +138,24 @@ pub struct SweepGrid {
 impl SweepGrid {
     /// Closed-loop grid (the legacy shape).
     pub fn new(scenarios: Vec<Scenario>, ratios: Vec<usize>, batches: Vec<usize>) -> Self {
-        Self { scenarios, arrivals: vec![ArrivalSpec::Closed], ratios, batches }
+        Self {
+            scenarios,
+            arrivals: vec![ArrivalSpec::Closed],
+            fleets: vec![FleetSpec::single()],
+            ratios,
+            batches,
+        }
     }
 
     /// Replace the arrival-process axis.
     pub fn with_arrivals(mut self, arrivals: Vec<ArrivalSpec>) -> Self {
         self.arrivals = arrivals;
+        self
+    }
+
+    /// Replace the fleet axis.
+    pub fn with_fleets(mut self, fleets: Vec<FleetSpec>) -> Self {
+        self.fleets = fleets;
         self
     }
 
@@ -118,7 +166,11 @@ impl SweepGrid {
     }
 
     pub fn cell_count(&self) -> usize {
-        self.scenarios.len() * self.arrivals.len() * self.ratios.len() * self.batches.len()
+        self.scenarios.len()
+            * self.arrivals.len()
+            * self.fleets.len()
+            * self.ratios.len()
+            * self.batches.len()
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -166,11 +218,58 @@ impl SweepGrid {
                 )));
             }
         }
+        if self.fleets.is_empty() {
+            return Err(crate::error::AfdError::config("sweep grid needs >= 1 fleet shape"));
+        }
+        for f in &self.fleets {
+            f.validate()?;
+        }
+        let mut shapes: Vec<(usize, &str)> =
+            self.fleets.iter().map(|f| (f.bundles, f.policy.name())).collect();
+        shapes.sort_unstable();
+        for w in shapes.windows(2) {
+            if w[0] == w[1] {
+                return Err(crate::error::AfdError::config(format!(
+                    "fleet shape {:?} appears more than once in the sweep grid",
+                    w[0]
+                )));
+            }
+        }
         for s in &self.scenarios {
             s.spec.validate()?;
         }
         Ok(())
     }
+}
+
+/// Per-bundle detail of one fleet cell (empty for 1-bundle cells, where
+/// the aggregate IS the bundle).
+#[derive(Debug, Clone)]
+pub struct BundleCellMetrics {
+    pub bundle: usize,
+    /// Fan-in the bundle converged to (== the cell r without autoscaling).
+    pub final_r: usize,
+    pub metrics: SimMetrics,
+    pub arrival: ArrivalStats,
+}
+
+/// Fleet-level columns of one cell.
+#[derive(Debug, Clone)]
+pub struct ClusterCellStats {
+    pub bundles: usize,
+    /// Routing policy name ("round-robin" / "jsq" / "least-token-load").
+    pub policy: String,
+    /// Time-average cross-bundle token-load imbalance (max/mean - 1).
+    pub imbalance: f64,
+    /// Bundle-wide idle share over the r + 1 instances:
+    /// `(r * idle_attention + idle_ffn) / (r + 1)` of the aggregate.
+    pub idle_share: f64,
+    /// Aggregate delivered throughput relative to the Eq. 1 theory value
+    /// `Thr_G(B; r)` at this cell's r.
+    pub realized_vs_eq1: f64,
+    /// Median converged per-bundle fan-in (== cell r without
+    /// autoscaling).
+    pub converged_r: usize,
 }
 
 /// One simulated grid cell.
@@ -181,23 +280,33 @@ pub struct SweepCell {
     pub load: StationaryLoad,
     /// The cell seed actually used (recorded for reproduction).
     pub seed: u64,
+    /// Aggregate (bundle-mean) metrics of the cell's fleet.
     pub metrics: SimMetrics,
     /// Arrival-process statistics (queueing/rejection; trivial for
     /// closed loop).
     pub arrival: ArrivalStats,
+    /// Fleet-level columns (trivial for 1-bundle cells).
+    pub cluster: ClusterCellStats,
+    /// Per-bundle breakdowns (empty for 1-bundle cells).
+    pub per_bundle: Vec<BundleCellMetrics>,
     /// Mean-field theory throughput `Thr_mf(B; r)` (Eq. 8).
     pub theory_mf: f64,
     /// Gaussian barrier-aware theory throughput `Thr_G(B; r)` (Eq. 9/11).
     pub theory_g: f64,
 }
 
-/// Per-(scenario, arrival, B) summary: theory vs simulation optima over
-/// the swept ratio grid (the paper's "within 10%" comparison, Fig. 3/4).
+/// Per-(scenario, arrival, fleet, B) summary: theory vs simulation
+/// optima over the swept ratio grid (the paper's "within 10%"
+/// comparison, Fig. 3/4).
 #[derive(Debug, Clone)]
 pub struct GroupSummary {
     pub scenario: String,
     /// Arrival-process kind of this group ("closed" / "open-poisson").
     pub arrival: String,
+    /// Fleet size of this group.
+    pub bundles: usize,
+    /// Routing policy name of this group.
+    pub policy: String,
     pub batch: usize,
     pub load: StationaryLoad,
     /// Barrier-aware theory argmax `r*_G` over the swept ratios (Eq. 12).
@@ -225,9 +334,11 @@ pub struct SweepResults {
 /// Derive the per-cell seed: a SplitMix64 chain over the experiment seed
 /// and the cell coordinates. Stable across runs, platforms, and thread
 /// schedules; distinct per cell so scenarios don't share request
-/// streams. The arrival process deliberately does not enter the chain:
-/// closed and open cells at the same coordinates share length streams,
-/// isolating the arrival-process effect.
+/// streams. The arrival process and fleet shape deliberately do not
+/// enter the chain: closed/open and 1-bundle/N-bundle cells at the same
+/// coordinates share bundle-0 length streams, isolating the
+/// arrival-process and routing effects (bundles past the first fork via
+/// [`crate::sim::cluster::bundle_seed`]).
 pub fn cell_seed(base: u64, scenario_idx: usize, batch: usize, r: usize) -> u64 {
     let mut sm = SplitMix64::new(
         base ^ (scenario_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -267,32 +378,74 @@ pub fn open_loop_rate(
     rho * tokens_per_cycle / mean_decode.max(1.0)
 }
 
-/// Run one grid cell as a simulation session. Open specs arrive with
-/// their absolute `lambda` already resolved by [`build_jobs`].
+/// Raw per-cell simulation result (theory columns are attached in
+/// [`assemble`]).
+struct CellResult {
+    metrics: SimMetrics,
+    arrival: ArrivalStats,
+    imbalance: f64,
+    converged_r: Vec<usize>,
+    per_bundle: Vec<BundleCellMetrics>,
+}
+
+/// Run one grid cell as a cluster simulation (a 1-bundle fleet is
+/// byte-identical to the plain session the pre-fleet runner used). Open
+/// specs arrive with their absolute per-bundle `lambda` already resolved
+/// by [`build_jobs`]; the cluster-wide rate scales with the fleet size.
 fn run_cell(
     cfg: &ExperimentConfig,
     scenario: &Scenario,
     arrival: ArrivalSpec,
+    fleet: FleetSpec,
     r: usize,
     opts: SimOptions,
-) -> (SimMetrics, ArrivalStats) {
-    let mut builder = Simulation::builder_with_options(cfg, r, opts)
-        .record_steps(false)
-        .length_source(scenario.make_source(cfg.seed));
+) -> CellResult {
+    let scenario = scenario.clone();
+    let mut builder = ClusterSimulation::builder(cfg, r)
+        .bundles(fleet.bundles)
+        .policy(fleet.policy)
+        .batches_in_flight(opts.batches_in_flight)
+        .warm_start(opts.warm_start)
+        .completions_per_bundle(opts.max_completions)
+        .source_factory(move |seed| scenario.make_source(seed));
     if let ArrivalSpec::Open { lambda, queue_capacity, .. } = arrival {
         let rate = lambda.expect("build_jobs resolves open-loop rates");
-        builder = builder.arrival(
-            OpenLoopPoisson::new(rate, queue_capacity, cfg.seed)
-                .expect("open arrival spec validated"),
-        );
+        builder = builder.arrival(ClusterArrival::Open {
+            lambda: rate * fleet.bundles as f64,
+            queue_capacity,
+        });
     }
-    let out = builder.build().expect("grid cells validated").run();
-    (out.metrics, out.arrival)
+    let out = builder
+        .build()
+        .expect("grid cells validated")
+        .run()
+        .expect("grid cells run without autoscaling errors");
+    let per_bundle = if out.bundles.len() > 1 {
+        out.bundles
+            .iter()
+            .map(|b| BundleCellMetrics {
+                bundle: b.bundle,
+                final_r: b.final_r,
+                metrics: b.metrics.clone(),
+                arrival: b.arrival,
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    CellResult {
+        metrics: out.aggregate.clone(),
+        arrival: out.arrival,
+        imbalance: out.load_imbalance,
+        converged_r: out.converged_r(),
+        per_bundle,
+    }
 }
 
 struct CellJob {
     scenario_idx: usize,
     arrival: ArrivalSpec,
+    fleet: FleetSpec,
     batch: usize,
     r: usize,
     cfg: ExperimentConfig,
@@ -315,35 +468,38 @@ fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
     let mut jobs = Vec::with_capacity(grid.cell_count());
     for (si, scenario) in grid.scenarios.iter().enumerate() {
         for &arrival in &grid.arrivals {
-            for &batch in &grid.batches {
-                for &r in &grid.ratios {
-                    let arrival = match arrival {
-                        ArrivalSpec::Open { rho, lambda: None, queue_capacity } => {
-                            let (load, mean_decode) =
-                                scenario_moments[si].expect("moments computed when needed");
-                            let rate = open_loop_rate(
-                                base.hardware,
-                                load,
-                                batch,
-                                r,
-                                rho,
-                                mean_decode,
-                            );
-                            // Guard against degenerate theory output;
-                            // validation catches the user-facing cases.
-                            let rate =
-                                if rate.is_finite() && rate > 0.0 { rate } else { 1e-6 };
-                            ArrivalSpec::Open { rho, lambda: Some(rate), queue_capacity }
-                        }
-                        other => other,
-                    };
-                    jobs.push(CellJob {
-                        scenario_idx: si,
-                        arrival,
-                        batch,
-                        r,
-                        cfg: cell_config(base, scenario, si, batch, r),
-                    });
+            for &fleet in &grid.fleets {
+                for &batch in &grid.batches {
+                    for &r in &grid.ratios {
+                        let arrival = match arrival {
+                            ArrivalSpec::Open { rho, lambda: None, queue_capacity } => {
+                                let (load, mean_decode) = scenario_moments[si]
+                                    .expect("moments computed when needed");
+                                let rate = open_loop_rate(
+                                    base.hardware,
+                                    load,
+                                    batch,
+                                    r,
+                                    rho,
+                                    mean_decode,
+                                );
+                                // Guard against degenerate theory output;
+                                // validation catches the user-facing cases.
+                                let rate =
+                                    if rate.is_finite() && rate > 0.0 { rate } else { 1e-6 };
+                                ArrivalSpec::Open { rho, lambda: Some(rate), queue_capacity }
+                            }
+                            other => other,
+                        };
+                        jobs.push(CellJob {
+                            scenario_idx: si,
+                            arrival,
+                            fleet,
+                            batch,
+                            r,
+                            cfg: cell_config(base, scenario, si, batch, r),
+                        });
+                    }
                 }
             }
         }
@@ -352,11 +508,7 @@ fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
 }
 
 /// Assemble cells + group summaries from per-job results (in job order).
-fn assemble(
-    grid: &SweepGrid,
-    jobs: &[CellJob],
-    results: Vec<(SimMetrics, ArrivalStats)>,
-) -> SweepResults {
+fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> SweepResults {
     // Theory columns are cheap and deterministic: compute serially.
     // Declared moments once per scenario (the Monte Carlo fallback for
     // non-closed-form decode laws is the expensive part).
@@ -364,56 +516,87 @@ fn assemble(
         grid.scenarios.iter().map(|s| s.expected_load()).collect();
 
     let mut cells = Vec::with_capacity(jobs.len());
-    for (job, (m, arrival)) in jobs.iter().zip(results) {
+    for (job, res) in jobs.iter().zip(results) {
         let load = loads[job.scenario_idx];
         // Hardware is shared across the grid (the base config's); cell
         // configs only vary workload, batch, and seed.
         let op = OperatingPoint::new(job.cfg.hardware, load, job.batch);
+        let theory_g = op.throughput_gaussian(job.r);
+        let mut converged = res.converged_r.clone();
+        converged.sort_unstable();
+        let cluster = ClusterCellStats {
+            bundles: job.fleet.bundles,
+            policy: job.fleet.policy.name().to_string(),
+            imbalance: res.imbalance,
+            idle_share: (job.r as f64 * res.metrics.idle_attention + res.metrics.idle_ffn)
+                / (job.r + 1) as f64,
+            realized_vs_eq1: if theory_g > 0.0 {
+                res.metrics.delivered_throughput_per_instance / theory_g
+            } else {
+                f64::NAN
+            },
+            converged_r: converged[converged.len() / 2],
+        };
         cells.push(SweepCell {
             scenario: grid.scenarios[job.scenario_idx].name.to_string(),
             load,
             seed: job.cfg.seed,
             theory_mf: op.throughput_mean_field(job.r as f64),
-            theory_g: op.throughput_gaussian(job.r),
-            metrics: m,
-            arrival,
+            theory_g,
+            metrics: res.metrics,
+            arrival: res.arrival,
+            cluster,
+            per_bundle: res.per_bundle,
         });
     }
 
-    // Group summaries per (scenario, arrival, batch), in grid order.
-    let mut groups =
-        Vec::with_capacity(grid.scenarios.len() * grid.arrivals.len() * grid.batches.len());
+    // Group summaries per (scenario, arrival, fleet, batch), in grid
+    // order.
+    let mut groups = Vec::with_capacity(
+        grid.scenarios.len() * grid.arrivals.len() * grid.fleets.len() * grid.batches.len(),
+    );
     let rn = grid.ratios.len();
     for (si, scenario) in grid.scenarios.iter().enumerate() {
         for (ai, arrival) in grid.arrivals.iter().enumerate() {
-            for (bi, &batch) in grid.batches.iter().enumerate() {
-                let start = ((si * grid.arrivals.len() + ai) * grid.batches.len() + bi) * rn;
-                let slice = &cells[start..start + rn];
-                let (mut r_star_g, mut theory_peak) = (slice[0].metrics.r, slice[0].theory_g);
-                let (mut sim_opt_r, mut sim_peak) =
-                    (slice[0].metrics.r, slice[0].metrics.delivered_throughput_per_instance);
-                for c in &slice[1..] {
-                    if c.theory_g > theory_peak {
-                        theory_peak = c.theory_g;
-                        r_star_g = c.metrics.r;
+            for (fi, fleet) in grid.fleets.iter().enumerate() {
+                for (bi, &batch) in grid.batches.iter().enumerate() {
+                    let start = (((si * grid.arrivals.len() + ai) * grid.fleets.len() + fi)
+                        * grid.batches.len()
+                        + bi)
+                        * rn;
+                    let slice = &cells[start..start + rn];
+                    let (mut r_star_g, mut theory_peak) =
+                        (slice[0].metrics.r, slice[0].theory_g);
+                    let (mut sim_opt_r, mut sim_peak) = (
+                        slice[0].metrics.r,
+                        slice[0].metrics.delivered_throughput_per_instance,
+                    );
+                    for c in &slice[1..] {
+                        if c.theory_g > theory_peak {
+                            theory_peak = c.theory_g;
+                            r_star_g = c.metrics.r;
+                        }
+                        let d = c.metrics.delivered_throughput_per_instance;
+                        if d > sim_peak {
+                            sim_peak = d;
+                            sim_opt_r = c.metrics.r;
+                        }
                     }
-                    let d = c.metrics.delivered_throughput_per_instance;
-                    if d > sim_peak {
-                        sim_peak = d;
-                        sim_opt_r = c.metrics.r;
-                    }
+                    groups.push(GroupSummary {
+                        scenario: scenario.name.to_string(),
+                        arrival: arrival.kind().to_string(),
+                        bundles: fleet.bundles,
+                        policy: fleet.policy.name().to_string(),
+                        batch,
+                        load: loads[si],
+                        r_star_g,
+                        theory_peak,
+                        sim_opt_r,
+                        sim_peak,
+                        ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs()
+                            / sim_opt_r as f64,
+                    });
                 }
-                groups.push(GroupSummary {
-                    scenario: scenario.name.to_string(),
-                    arrival: arrival.kind().to_string(),
-                    batch,
-                    load: loads[si],
-                    r_star_g,
-                    theory_peak,
-                    sim_opt_r,
-                    sim_peak,
-                    ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs() / sim_opt_r as f64,
-                });
             }
         }
     }
@@ -434,12 +617,14 @@ pub fn run_grid(
     let n_threads =
         if threads == 0 { default_threads(jobs.len()) } else { threads.min(jobs.len()).max(1) };
     let pool = ThreadPool::new(n_threads);
-    let work: Vec<(ExperimentConfig, Scenario, ArrivalSpec, usize)> = jobs
+    let work: Vec<(ExperimentConfig, Scenario, ArrivalSpec, FleetSpec, usize)> = jobs
         .iter()
-        .map(|j| (j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.r))
+        .map(|j| {
+            (j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.fleet, j.r)
+        })
         .collect();
-    let results = pool.map(work, move |(cfg, scenario, arrival, r)| {
-        run_cell(&cfg, &scenario, arrival, r, opts)
+    let results = pool.map(work, move |(cfg, scenario, arrival, fleet, r)| {
+        run_cell(&cfg, &scenario, arrival, fleet, r, opts)
     });
     Ok(assemble(grid, &jobs, results))
 }
@@ -454,9 +639,11 @@ pub fn run_grid_serial(
 ) -> Result<SweepResults> {
     grid.validate()?;
     let jobs = build_jobs(base, grid);
-    let results: Vec<(SimMetrics, ArrivalStats)> = jobs
+    let results: Vec<CellResult> = jobs
         .iter()
-        .map(|j| run_cell(&j.cfg, &grid.scenarios[j.scenario_idx], j.arrival, j.r, opts))
+        .map(|j| {
+            run_cell(&j.cfg, &grid.scenarios[j.scenario_idx], j.arrival, j.fleet, j.r, opts)
+        })
         .collect();
     Ok(assemble(grid, &jobs, results))
 }
@@ -590,6 +777,101 @@ mod tests {
             assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
             assert_eq!(a.arrival, b.arrival);
         }
+    }
+
+    #[test]
+    fn fleet_axis_produces_per_bundle_rows_and_aggregate_columns() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 60;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.8, 128)])
+        .with_fleets(vec![
+            FleetSpec::single(),
+            FleetSpec::new(2, crate::coordinator::router::Policy::JoinShortestQueue),
+        ]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        assert_eq!(res.groups.len(), 2);
+        // Single-bundle cells: no per-bundle breakdown, trivial fleet
+        // columns.
+        for c in &res.cells[..2] {
+            assert_eq!(c.cluster.bundles, 1);
+            assert!(c.per_bundle.is_empty());
+            assert_eq!(c.cluster.imbalance, 0.0);
+            assert_eq!(c.cluster.converged_r, c.metrics.r);
+            assert!(c.cluster.realized_vs_eq1 > 0.0);
+        }
+        // Two-bundle JSQ cells: per-bundle rows present and consistent.
+        for c in &res.cells[2..] {
+            assert_eq!(c.cluster.bundles, 2);
+            assert_eq!(c.cluster.policy, "jsq");
+            assert_eq!(c.per_bundle.len(), 2);
+            assert!(c.cluster.imbalance >= 0.0);
+            for b in &c.per_bundle {
+                assert_eq!(b.final_r, c.metrics.r);
+                assert!(b.metrics.completed > 0);
+            }
+            // Aggregate delivered is the bundle mean.
+            let mean = c
+                .per_bundle
+                .iter()
+                .map(|b| b.metrics.delivered_throughput_per_instance)
+                .sum::<f64>()
+                / 2.0;
+            assert!((c.metrics.delivered_throughput_per_instance - mean).abs() < 1e-12);
+        }
+        assert_eq!(res.groups[0].bundles, 1);
+        assert_eq!(res.groups[1].bundles, 2);
+        assert_eq!(res.groups[1].policy, "jsq");
+    }
+
+    #[test]
+    fn fleet_parallel_matches_serial() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.7, 64)])
+        .with_fleets(vec![FleetSpec::new(
+            3,
+            crate::coordinator::router::Policy::LeastTokenLoad,
+        )]);
+        let par = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.cluster.imbalance.to_bits(), b.cluster.imbalance.to_bits());
+            assert_eq!(a.per_bundle.len(), b.per_bundle.len());
+            for (x, y) in a.per_bundle.iter().zip(&b.per_bundle) {
+                assert_eq!(
+                    x.metrics.total_time.to_bits(),
+                    y.metrics.total_time.to_bits()
+                );
+                assert_eq!(x.arrival, y.arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_fleet_shapes_rejected() {
+        let base = tiny_base();
+        let g = tiny_grid().with_fleets(vec![FleetSpec::single(), FleetSpec::single()]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let g = tiny_grid().with_fleets(vec![]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let g = tiny_grid().with_fleets(vec![FleetSpec::new(
+            0,
+            crate::coordinator::router::Policy::RoundRobin,
+        )]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
     }
 
     #[test]

@@ -13,22 +13,24 @@
 //!   plus four `trace:*` trace-replay scenarios backed by
 //!   [`crate::workload::trace::ProductionCorpus`] and driven through
 //!   deterministic per-(lane, worker) sharding.
-//! * [`grid`] — the parallel (scenario × arrival × r × B) grid runner
-//!   on the crate thread pool: closed-loop and open-loop Poisson
-//!   arrival processes per cell, with a per-cell seed hierarchy that
+//! * [`grid`] — the parallel (scenario × arrival × fleet × r × B) grid
+//!   runner on the crate thread pool: closed-loop and open-loop Poisson
+//!   arrival processes per cell, 1..N-bundle fleets under round-robin /
+//!   JSQ / least-token-load routing, with a per-cell seed hierarchy that
 //!   keeps parallel output bitwise identical to the serial reference.
 //! * [`emit`] — CSV/JSON emission with theory-vs-simulation gap columns
 //!   (`r*_G` from Eq. 12 against the simulation-optimal ratio, the
-//!   paper's "within 10%" headline comparison) and the open-loop
-//!   queueing/rejection columns.
+//!   paper's "within 10%" headline comparison), the open-loop
+//!   queueing/rejection columns, and the fleet columns (per-bundle rows,
+//!   imbalance, idle share, realized-vs-Eq.1, converged r).
 //!
-//! Entry points: `afd sweep` (CLI), [`grid::run_grid`] (library), and
-//! [`grid::parallel_sweep_ratios`] (drop-in parallel Fig. 3 sweep used
-//! by the figure builders).
+//! Entry points: `afd sweep` / `afd cluster` (CLI), [`grid::run_grid`]
+//! (library), and [`grid::parallel_sweep_ratios`] (drop-in parallel
+//! Fig. 3 sweep used by the figure builders).
 
 pub mod emit;
 pub mod grid;
 pub mod scenarios;
 
-pub use grid::{run_grid, run_grid_serial, ArrivalSpec, SweepGrid, SweepResults};
+pub use grid::{run_grid, run_grid_serial, ArrivalSpec, FleetSpec, SweepGrid, SweepResults};
 pub use scenarios::{registry, trace_registry, Scenario, SourceSpec};

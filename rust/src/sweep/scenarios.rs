@@ -102,13 +102,16 @@ impl Scenario {
     }
 
     /// Build the session length source for this scenario. `seed` drives
-    /// synthetic sampling (the per-cell seed hierarchy); trace replay is
-    /// seed-independent by construction.
+    /// synthetic sampling (the per-cell seed hierarchy); trace replay
+    /// always reads the same fixed trace, *phase-shifted* by the seed
+    /// (`seed % trace_len` start offset), so fleet bundles with forked
+    /// seeds consume distinct subsequences instead of byte-identical
+    /// streams while single cells stay deterministic per seed.
     pub fn make_source(&self, seed: u64) -> Box<dyn LengthSource> {
         match self.source {
             SourceSpec::Synthetic => Box::new(SyntheticSource::new(self.spec.clone(), seed)),
             SourceSpec::TraceReplay { corpus, n } => {
-                Box::new(TraceReplay::from_corpus(corpus, n, TRACE_SCENARIO_SEED))
+                Box::new(TraceReplay::from_corpus(corpus, n, TRACE_SCENARIO_SEED).rotated(seed))
             }
         }
     }
@@ -389,12 +392,27 @@ mod tests {
         let mut source = s.make_source(123);
         let mut a = source.stream(0, 0, 1, 2);
         let mut b = source.stream(0, 1, 1, 2);
-        // Shards are disjoint residue classes of the same fixed trace.
+        // Shards are disjoint residue classes of the same fixed trace,
+        // phase-shifted by the seed (123 % 20_000 = 123).
         let trace = s.trace().unwrap();
         assert_eq!(trace.len(), TRACE_SCENARIO_LEN);
-        assert_eq!(a.next_lengths(), trace.requests[0]);
-        assert_eq!(b.next_lengths(), trace.requests[1]);
-        assert_eq!(a.next_lengths(), trace.requests[2]);
+        assert_eq!(a.next_lengths(), trace.requests[123]);
+        assert_eq!(b.next_lengths(), trace.requests[124]);
+        assert_eq!(a.next_lengths(), trace.requests[125]);
+    }
+
+    #[test]
+    fn trace_sources_with_distinct_seeds_read_distinct_subsequences() {
+        // Fleet bundles fork their seeds; their trace replays must not
+        // be byte-identical clones of one another.
+        let s = by_name("trace:openchat-like").unwrap();
+        let first = |seed: u64| {
+            let mut source = s.make_source(seed);
+            let mut stream = source.stream(0, 0, 1, 1);
+            (0..8).map(|_| stream.next_lengths()).collect::<Vec<_>>()
+        };
+        assert_eq!(first(7), first(7), "same seed must stay deterministic");
+        assert_ne!(first(7), first(8), "distinct seeds must shift the replay");
     }
 
     #[test]

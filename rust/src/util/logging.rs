@@ -1,73 +1,82 @@
-//! A minimal `log`-crate backend writing to stderr with wall-clock offsets.
+//! A minimal hand-rolled stderr logger (the `log` crate is unavailable
+//! in the offline build environment) with wall-clock offsets.
 //!
-//! Controlled by `AFD_LOG` (error|warn|info|debug|trace, default `info`).
+//! Controlled by `AFD_LOG` (error|warn|info|debug, default `info`).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::Lazy;
+static START: OnceLock<Instant> = OnceLock::new();
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static INSTALLED: AtomicBool = AtomicBool::new(false);
+/// Numeric levels: higher is more verbose.
+const ERROR: u8 = 1;
+const WARN: u8 = 2;
+const INFO: u8 = 3;
+const DEBUG: u8 = 4;
 
-struct StderrLogger;
+/// Current max level (0 = uninitialized; init() sets it once).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.elapsed();
-        let level = match record.level() {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        eprintln!(
-            "[{:>8.3}s {} {}] {}",
-            t.as_secs_f64(),
-            level,
-            record.target(),
-            record.args()
-        );
-    }
-
-    fn flush(&self) {}
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+fn max_level() -> u8 {
+    let lvl = MAX_LEVEL.load(Ordering::Relaxed);
+    if lvl != 0 {
+        return lvl;
+    }
+    // Lazily initialize for library users that never call init().
+    init();
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+fn emit(level: u8, label: &str, msg: &str) {
+    if level > max_level() {
+        return;
+    }
+    let t = start().elapsed();
+    eprintln!("[{:>8.3}s {} afd] {}", t.as_secs_f64(), label, msg);
+}
 
 /// Install the logger (idempotent). Level from `AFD_LOG` env var.
 pub fn init() {
-    if INSTALLED.swap(true, Ordering::SeqCst) {
-        return;
-    }
-    Lazy::force(&START);
+    start();
     let level = match std::env::var("AFD_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => ERROR,
+        Ok("warn") => WARN,
+        Ok("debug") | Ok("trace") => DEBUG,
+        _ => INFO,
     };
-    if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
-    }
+    // First writer wins; later init() calls are no-ops.
+    let _ = MAX_LEVEL.compare_exchange(0, level, Ordering::SeqCst, Ordering::SeqCst);
+}
+
+pub fn error(msg: &str) {
+    emit(ERROR, "ERROR", msg);
+}
+
+pub fn warn(msg: &str) {
+    emit(WARN, "WARN ", msg);
+}
+
+pub fn info(msg: &str) {
+    emit(INFO, "INFO ", msg);
+}
+
+pub fn debug(msg: &str) {
+    emit(DEBUG, "DEBUG", msg);
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
-    fn init_is_idempotent() {
+    fn init_is_idempotent_and_levels_emit() {
         super::init();
         super::init();
-        log::info!("logging smoke test");
+        super::info("logging smoke test");
+        super::warn("warn smoke test");
+        super::debug("debug smoke test (may be filtered)");
     }
 }

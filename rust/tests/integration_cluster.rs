@@ -1,0 +1,183 @@
+//! Integration over the fleet-scale cluster simulator.
+//!
+//! 1. **1-bundle identity**: a 1-bundle `ClusterSimulation` under
+//!    round-robin routing reproduces the single-bundle `Simulation`
+//!    *byte-identically* (completions CSV + metrics JSON) across the
+//!    full scenario registry (synthetic + trace replay).
+//! 2. **Homogeneous JSQ fleet at 0.85x capacity**: with N = 4 bundles,
+//!    per-bundle realized (delivered) throughput lands within 10% of
+//!    the Eq. 1 theory value `Thr_G` at `r*_G`, and JSQ keeps admission
+//!    balanced across bundles.
+//! 3. **Online autoscaling**: started mis-provisioned, the per-bundle
+//!    autoscaler (A.6 estimator over the completion stream + Eq. 12)
+//!    converges to within ±1 of `r_star_g_on_grid` on at least 6 of the
+//!    8 synthetic registry scenarios (fixed seeds).
+
+use afd::analysis::cycle_time::OperatingPoint;
+use afd::analysis::provisioning::r_star_g_on_grid;
+use afd::config::experiment::ExperimentConfig;
+use afd::coordinator::router::Policy;
+use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
+use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+use afd::sim::session::Simulation;
+use afd::sweep::grid::open_loop_rate;
+use afd::sweep::scenarios;
+
+#[test]
+fn one_bundle_round_robin_cluster_is_byte_identical_on_every_registry_scenario() {
+    for scenario in scenarios::full_registry() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = scenario.spec.clone();
+        cfg.topology.batch_per_worker = 16;
+        cfg.requests_per_instance = 120;
+        let r = 2;
+
+        let single = Simulation::builder(&cfg, r)
+            .length_source(scenario.make_source(cfg.seed))
+            .build()
+            .unwrap()
+            .run();
+        let s2 = scenario.clone();
+        let cluster = ClusterSimulation::builder(&cfg, r)
+            .bundles(1)
+            .policy(Policy::RoundRobin)
+            .source_factory(move |seed| s2.make_source(seed))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+
+        assert_eq!(cluster.bundles.len(), 1, "{}", scenario.name);
+        assert_eq!(
+            completions_to_csv_string(&cluster.bundles[0].completions),
+            completions_to_csv_string(&single.completions),
+            "{}: completions CSV diverged between cluster and session",
+            scenario.name
+        );
+        assert_eq!(
+            sim_metrics_to_json(&cluster.aggregate).to_string_pretty(),
+            sim_metrics_to_json(&single.metrics).to_string_pretty(),
+            "{}: metrics JSON diverged between cluster and session",
+            scenario.name
+        );
+        assert_eq!(
+            sim_metrics_to_json(&cluster.bundles[0].metrics).to_string_pretty(),
+            sim_metrics_to_json(&single.metrics).to_string_pretty(),
+            "{}: per-bundle metrics diverged",
+            scenario.name
+        );
+    }
+}
+
+/// Fleet config used by the JSQ capacity test: a scaled-down geometric
+/// workload in the paper's cost regime.
+fn fleet_cfg(batch: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology.batch_per_worker = batch;
+    cfg.workload = afd::config::workload::WorkloadSpec::independent(
+        afd::stats::distributions::LengthDist::geometric_with_mean(100.0),
+        afd::stats::distributions::LengthDist::geometric_with_mean(100.0),
+    );
+    cfg
+}
+
+#[test]
+fn jsq_fleet_at_085_capacity_tracks_eq1_per_bundle() {
+    let batch = 64usize;
+    let bundles = 4usize;
+    let cfg = fleet_cfg(batch);
+    let load = afd::workload::stationary::stationary_geometric(100.0, 9900.0, 100.0);
+    let grid: Vec<usize> = (1..=12).collect();
+    let r_star = r_star_g_on_grid(&cfg.hardware, load, batch, &grid).unwrap().r_star;
+    let op = OperatingPoint::new(cfg.hardware, load, batch);
+    let thr_g = op.throughput_gaussian(r_star);
+
+    // 0.85x the per-bundle barrier-aware capacity, cluster-wide.
+    let lambda = bundles as f64
+        * open_loop_rate(cfg.hardware, load, batch, r_star, 0.85, 100.0);
+    let out = ClusterSimulation::builder(&cfg, r_star)
+        .bundles(bundles)
+        .policy(Policy::JoinShortestQueue)
+        .arrival(ClusterArrival::Open { lambda, queue_capacity: 8192 })
+        .completions_per_bundle(Some(1_200))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert_eq!(out.bundles.len(), bundles);
+    for b in &out.bundles {
+        let realized = b.metrics.delivered_throughput_per_instance;
+        assert!(
+            (realized / thr_g - 1.0).abs() < 0.10,
+            "bundle {}: realized {realized:.5} vs Thr_G({r_star}) {thr_g:.5} \
+             (off by {:.1}%)",
+            b.bundle,
+            100.0 * (realized / thr_g - 1.0).abs()
+        );
+    }
+    // JSQ keeps admissions balanced: no bundle starves or hogs.
+    let admitted: Vec<u64> = out.bundles.iter().map(|b| b.arrival.admitted).collect();
+    let max = *admitted.iter().max().unwrap() as f64;
+    let min = *admitted.iter().min().unwrap() as f64;
+    assert!(
+        max / min.max(1.0) < 1.25,
+        "JSQ admission skew too large: {admitted:?}"
+    );
+    // The stream was genuinely shared and mostly admitted at 0.85x.
+    assert!(out.arrival.offered > 0);
+    assert!(
+        out.arrival.rejected as f64 / out.arrival.offered as f64 < 0.05,
+        "unexpected rejections at 0.85x: {:?}",
+        out.arrival
+    );
+}
+
+#[test]
+fn autoscaler_converges_to_r_star_g_on_most_registry_scenarios() {
+    let batch = 64usize;
+    let grid: Vec<usize> = (1..=12).collect();
+    let mut hits = 0usize;
+    let mut report = Vec::new();
+    let synthetic = scenarios::registry();
+    let total = synthetic.len();
+    for scenario in synthetic {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = scenario.spec.clone();
+        cfg.topology.batch_per_worker = batch;
+        // Start mis-provisioned at r = 2 and let the online rule move.
+        let s2 = scenario.clone();
+        let out = ClusterSimulation::builder(&cfg, 2)
+            .source_factory(move |seed| s2.make_source(seed))
+            .autoscale(AutoscaleConfig {
+                feasible: grid.clone(),
+                window: 2000,
+                epoch_completions: 1500,
+            })
+            .completions_per_bundle(Some(6_000))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let converged = out.bundles[0].final_r;
+        let r_star = r_star_g_on_grid(&cfg.hardware, scenario.expected_load(), batch, &grid)
+            .unwrap()
+            .r_star;
+        let ok = converged.abs_diff(r_star) <= 1;
+        if ok {
+            hits += 1;
+        }
+        report.push(format!(
+            "{}: converged {} vs r*_G {} [{}]",
+            scenario.name,
+            converged,
+            r_star,
+            if ok { "ok" } else { "MISS" }
+        ));
+    }
+    assert!(
+        hits * 8 >= total * 6,
+        "autoscaler converged on only {hits}/{total} scenarios:\n{}",
+        report.join("\n")
+    );
+}

@@ -5,9 +5,10 @@
 use afd::analysis::cycle_time::OperatingPoint;
 use afd::config::hardware::HardwareParams;
 use afd::coordinator::batcher::Batcher;
-use afd::coordinator::kv::KvSlotManager;
+use afd::coordinator::kv::{KvSlotManager, SlotState};
 use afd::coordinator::request_state::ServingRequest;
-use afd::coordinator::router::{Policy, Router, WorkerLoad};
+use afd::coordinator::load::{BundleLoad, LoadSnapshot};
+use afd::coordinator::router::{Policy, Router};
 use afd::stats::rng::Pcg64;
 use afd::testkit::{forall, Gen};
 use afd::workload::request::RequestLengths;
@@ -33,11 +34,13 @@ fn prop_router_never_out_of_range() {
             let mut rng = Pcg64::new(seed);
             let mut router = Router::new(policy);
             for _ in 0..50 {
-                let loads: Vec<WorkerLoad> = (0..workers)
-                    .map(|_| WorkerLoad {
+                let loads: Vec<LoadSnapshot> = (0..workers)
+                    .map(|_| LoadSnapshot {
                         queued: rng.next_below(5) as usize,
                         token_load: rng.next_below(10_000),
+                        live_slots: rng.next_below(4) as usize,
                         free_slots: rng.next_below(4) as usize,
+                        kv_headroom: rng.next_below(100_000),
                     })
                     .collect();
                 if router.route(&loads) >= workers {
@@ -102,6 +105,91 @@ fn prop_kv_token_load_equals_sum_of_live_seq_plus_one() {
                 }
                 let expect: u64 = mirror.iter().flatten().map(|&l| l + 1).sum();
                 if kv.token_load() != expect {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_kv_capacity_accounting_conserved_under_interleavings() {
+    // Across random admit/advance/release interleavings:
+    //   * free_slots + live_slots == n_slots, always;
+    //   * no live slot's seq_len exceeds the per-slot capacity, so
+    //     headroom never underflows and token_load is bounded by
+    //     live * (capacity + 1);
+    //   * headroom + (token_load - live) == n_slots * capacity (the +1
+    //     per live slot in token_load is the in-flight decode token,
+    //     which headroom does not account).
+    forall(
+        "kv capacity conservation",
+        200,
+        Gen::triple(
+            Gen::usize_range(1, 12),
+            Gen::u64_range(8, 128),
+            Gen::u64_range(1, u64::MAX / 2),
+        ),
+        |&(slots, capacity, seed)| {
+            let mut rng = Pcg64::new(seed);
+            let mut kv = KvSlotManager::new(slots, capacity);
+            let total_capacity = slots as u64 * capacity;
+            for step in 0..400u64 {
+                match rng.next_below(4) {
+                    0 | 1 => {
+                        let prefill = rng.next_below(capacity);
+                        let budget = 1 + rng.next_below(capacity);
+                        let fits = prefill + budget <= capacity;
+                        let had_free = kv.free_slots() > 0;
+                        let res = kv.admit(step, prefill, budget);
+                        if !fits && res.is_ok() {
+                            return false; // over-capacity admission
+                        }
+                        if fits && had_free && res.is_err() {
+                            return false; // feasible admission refused
+                        }
+                    }
+                    2 => {
+                        let live: Vec<usize> = (0..slots)
+                            .filter(|&s| !matches!(kv.slot(s), SlotState::Free))
+                            .collect();
+                        if !live.is_empty() {
+                            let s = *rng.choose(&live);
+                            // A refused advance (at capacity) must leave
+                            // the slot untouched — checked below.
+                            let before = kv.slot(s);
+                            if kv.advance(s).is_err() && kv.slot(s) != before {
+                                return false;
+                            }
+                        }
+                    }
+                    _ => {
+                        let live: Vec<usize> = (0..slots)
+                            .filter(|&s| !matches!(kv.slot(s), SlotState::Free))
+                            .collect();
+                        if !live.is_empty() {
+                            let s = *rng.choose(&live);
+                            kv.release(s).unwrap();
+                        }
+                    }
+                }
+                // Conservation: every slot is free xor live.
+                if kv.free_slots() + kv.live_slots() != kv.n_slots() {
+                    return false;
+                }
+                // Per-slot capacity is never exceeded, so headroom plus
+                // consumed tokens is exactly conserved.
+                let mut used = 0u64;
+                for s in 0..slots {
+                    if let SlotState::Live { seq_len, .. } = kv.slot(s) {
+                        if seq_len > capacity {
+                            return false;
+                        }
+                        used += seq_len;
+                    }
+                }
+                if kv.headroom() + used != total_capacity {
                     return false;
                 }
             }

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Schema gate for the hotpath bench's ``--json`` perf records.
+
+``cargo bench --bench hotpath -- --json bench_out/hotpath.json`` emits an
+array of records::
+
+    [{"bench": str, "iters": int, "ns_per_iter": num, "slot_steps_per_sec": num}, ...]
+
+CI validates the schema here and uploads the file as the perf-history
+artifact (``BENCH_*.json`` trajectory). Deliberately *not* validated:
+absolute timings — CI runners are noisy, so perf numbers inform but never
+gate.
+
+Usage:
+    python3 python/check_bench_json.py bench_out/hotpath.json
+    python3 python/check_bench_json.py --selftest   # validator edge cases
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED = {
+    "bench": str,
+    "iters": int,
+    "ns_per_iter": (int, float),
+    "slot_steps_per_sec": (int, float),
+}
+
+
+def validate(records: object) -> list[str]:
+    """Return a list of schema violations (empty == valid)."""
+    errors: list[str] = []
+    if not isinstance(records, list):
+        return [f"top level must be a JSON array, got {type(records).__name__}"]
+    if not records:
+        errors.append("no bench records emitted (empty array)")
+    names: set[str] = set()
+    for i, rec in enumerate(records):
+        where = f"record[{i}]"
+        if not isinstance(rec, dict):
+            errors.append(f"{where}: must be an object, got {type(rec).__name__}")
+            continue
+        for key, expected in REQUIRED.items():
+            if key not in rec:
+                errors.append(f"{where}: missing key {key!r}")
+                continue
+            value = rec[key]
+            # bool is an int subclass in Python; never a valid measurement.
+            if isinstance(value, bool) or not isinstance(value, expected):
+                errors.append(
+                    f"{where}.{key}: expected {expected}, got {value!r}"
+                )
+                continue
+            if key != "bench" and value <= 0:
+                errors.append(f"{where}.{key}: must be positive, got {value!r}")
+        extra = set(rec) - set(REQUIRED)
+        if extra:
+            errors.append(f"{where}: unknown key(s) {sorted(extra)}")
+        name = rec.get("bench")
+        if isinstance(name, str):
+            if not name:
+                errors.append(f"{where}.bench: must be non-empty")
+            elif name in names:
+                errors.append(f"{where}.bench: duplicate name {name!r}")
+            names.add(name)
+    return errors
+
+
+def selftest() -> int:
+    """Exercise the validator's edge cases (run by CI before the real
+    artifact check, so a regression in ``validate`` cannot ship silently
+    on the happy path)."""
+    ok = [
+        {
+            "bench": "sim r=8 B=256",
+            "iters": 3,
+            "ns_per_iter": 1.5e6,
+            "slot_steps_per_sec": 2.0e6,
+        }
+    ]
+    cases = [
+        (ok, True, "well-formed record accepted"),
+        ([], False, "empty array rejected"),
+        ({"not": "a list"}, False, "non-array top level rejected"),
+        (["not a dict"], False, "non-object record rejected"),
+        ([{**ok[0], "iters": 0}], False, "non-positive iters rejected"),
+        ([{**ok[0], "iters": True}], False, "bool-typed iters rejected"),
+        ([{**ok[0], "ns_per_iter": "fast"}], False, "string timing rejected"),
+        ([{**ok[0], "bench": ""}], False, "empty bench name rejected"),
+        ([ok[0], dict(ok[0])], False, "duplicate bench name rejected"),
+        ([{**ok[0], "extra": 1}], False, "unknown key rejected"),
+        ([{k: v for k, v in ok[0].items() if k != "bench"}], False,
+         "missing key rejected"),
+    ]
+    failures = 0
+    for records, want_valid, label in cases:
+        got_valid = not validate(records)
+        status = "ok" if got_valid == want_valid else "FAIL"
+        if got_valid != want_valid:
+            failures += 1
+        print(f"check_bench_json selftest: {status} — {label}")
+    if failures:
+        print(f"check_bench_json selftest: {failures} case(s) failed", file=sys.stderr)
+        return 1
+    print(f"check_bench_json selftest: OK — {len(cases)} cases")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2 or argv[1] in ("-h", "--help"):
+        print(__doc__)
+        return 2
+    if argv[1] == "--selftest":
+        return selftest()
+    path = argv[1]
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"check_bench_json: cannot read {path}: {exc}", file=sys.stderr)
+        return 1
+    errors = validate(records)
+    if errors:
+        for e in errors:
+            print(f"check_bench_json: {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench_json: OK — {len(records)} record(s) in {path}")
+    for rec in records:
+        print(
+            f"  {rec['bench']:<28} {rec['ns_per_iter'] / 1e6:10.2f} ms/iter"
+            f"  {rec['slot_steps_per_sec'] / 1e6:8.2f}M slot-steps/sec"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

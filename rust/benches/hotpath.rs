@@ -1,24 +1,50 @@
 //! PERF — hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md).
 //!
 //! Measures each layer:
-//!   L3 sim     — simulator event rate (slot-steps/sec) at the paper config
+//!   L3 sim     — simulator event rate (slot-steps/sec) at the paper config,
+//!                and the SoA completion-calendar engine against the frozen
+//!                AoS reference at B = 512 and B = 2048
 //!   L3 math    — kappa_r quadrature, Gaussian excess, estimator throughput
 //!   L3 rng     — PCG64 and distribution sampling rates
 //!   runtime    — PJRT decode-step latency (attention / ffn / fused), the
 //!                serving engine's per-step cost (if artifacts are built)
+//!
+//! `--json <path>` additionally writes the simulator measurements as an
+//! array of `{bench, iters, ns_per_iter, slot_steps_per_sec}` records —
+//! the machine-readable perf trajectory CI uploads as an artifact
+//! (validated by `python/check_bench_json.py`).
 
-use afd::bench_support::harness::{bench, BenchConfig};
+use afd::bench_support::harness::{bench, bench_with_setup, BenchConfig, BenchResult};
 use afd::config::experiment::ExperimentConfig;
-use afd::sim::engine::{simulate, SimOptions};
+use afd::sim::engine::{simulate, SimOptions, BATCHES_IN_FLIGHT};
+use afd::sim::session::{ClosedLoopReplenish, Simulation};
 use afd::stats::distributions::{Distribution, LengthDist};
 use afd::stats::order_statistics::{expected_max_std_normal, gaussian_excess};
 use afd::stats::rng::Pcg64;
+use afd::testkit::reference::ReferenceSession;
+use afd::util::json::Json;
 use afd::workload::estimator::estimate_stationary;
 use afd::workload::generator::RequestGenerator;
 use afd::workload::trace::Trace;
 
+/// One JSON perf record: what `check_bench_json.py` validates.
+fn record(records: &mut Vec<Json>, res: &BenchResult, slot_steps: f64) {
+    records.push(
+        Json::obj()
+            .set("bench", Json::Str(res.name.clone()))
+            .set("iters", Json::Num(res.iters as f64))
+            .set("ns_per_iter", Json::Num(res.mean_secs * 1e9))
+            .set("slot_steps_per_sec", Json::Num(res.throughput(slot_steps))),
+    );
+}
+
 fn main() {
     let fast = std::env::var("AFD_FAST").is_ok();
+    let json_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter().position(|a| a == "--json").and_then(|i| args.get(i + 1).cloned())
+    };
+    let mut records: Vec<Json> = Vec::new();
     let cfg_fast = BenchConfig {
         warmup_iters: 1,
         min_iters: 3,
@@ -40,36 +66,86 @@ fn main() {
             res.summary(),
             res.throughput(slot_steps) / 1e6
         );
+        record(&mut records, &res, slot_steps);
         // Full paper-scale Fig. 3 sweep cost estimate.
         let paper_steps = 10_000.0 * (1 + 2 + 4 + 8 + 16 + 24 + 32) as f64 * 500.0;
         println!(
             "  est. full Fig.3 sweep: {:.1}s (paper's artifact: ~15 min)",
             paper_steps / (res.throughput(slot_steps))
         );
+    }
 
-        // B = 512 single cell: the baseline guard for the still-open SoA
-        // `SlotArray` storage item (ROADMAP). Large batches stress the
-        // per-slot Option<ActiveRequest> AoS layout the most — record
-        // lane-steps/sec and slot-steps/sec so the SoA change has a
-        // before/after number.
-        let mut big = ExperimentConfig::default();
-        big.topology.batch_per_worker = 512;
-        big.requests_per_instance = if fast { 60 } else { 200 };
-        let r_big = 4;
-        let res = bench(&format!("sim r={r_big} B=512 single cell"), cfg_fast, || {
-            simulate(&big, r_big, SimOptions::default()).metrics.completed
-        });
-        // mu_D = 500 for the paper workload: each completion is ~500
-        // slot-steps; every lane-step advances r*B slots.
-        let slot_steps =
-            big.requests_per_instance as f64 * r_big as f64 * 500.0;
-        let lane_steps = slot_steps / (r_big * 512) as f64;
-        println!(
-            "{}  -> {:.2}M slot-steps/sec, {:.0} lane-steps/sec (B=512 SoA baseline)",
-            res.summary(),
-            res.throughput(slot_steps) / 1e6,
-            res.throughput(lane_steps)
-        );
+    println!("\n== SoA slot engine vs frozen AoS reference (B = 512 / 2048) ==");
+    {
+        // The before/after pair for the ROADMAP SoA item: the same
+        // closed-loop session run by the production SoA
+        // completion-calendar engine (per step: O(1) + O(completions))
+        // and by `testkit::reference` — the pre-refactor AoS engine that
+        // walks all B Option<ActiveRequest> slots every step. Large
+        // batches widen the gap because completions per step scale with
+        // B/mu_D while the AoS walk scales with B. Session construction
+        // (the stationary warm-start draws, identical in both engines)
+        // is excluded from timing so the numbers isolate the step loop.
+        for &(b, reqs, reqs_fast) in &[(512usize, 200usize, 60usize), (2048, 120, 30)] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.topology.batch_per_worker = b;
+            cfg.requests_per_instance = if fast { reqs_fast } else { reqs };
+            let r = 4;
+            let target = cfg.requests_per_instance * r;
+            // mu_D = 500 for the paper workload: each completion is ~500
+            // slot-steps; every lane-step advances r*B live slots.
+            let slot_steps = target as f64 * 500.0;
+            let lane_steps = slot_steps / (r * b) as f64;
+
+            let soa_cfg = cfg.clone();
+            let soa = bench_with_setup(
+                &format!("SoA sim r={r} B={b}"),
+                cfg_fast,
+                || Simulation::builder(&soa_cfg, r).build().unwrap(),
+                |sim| sim.run().metrics.completed,
+            );
+            let aos_cfg = cfg.clone();
+            let aos = bench_with_setup(
+                &format!("AoS ref r={r} B={b}"),
+                cfg_fast,
+                || {
+                    ReferenceSession::build(
+                        &aos_cfg,
+                        r,
+                        BATCHES_IN_FLIGHT,
+                        true,
+                        target,
+                        Box::new(ClosedLoopReplenish),
+                        None,
+                    )
+                },
+                |session| session.run().0.completed,
+            );
+            let speedup = aos.mean_secs / soa.mean_secs;
+            println!(
+                "{}\n{}\n  -> SoA {:.2}M vs AoS {:.2}M slot-steps/sec, \
+                 {:.0} lane-steps/sec, speedup {speedup:.2}x \
+                 (guard: SoA must be >= 3x at B = 512+)",
+                soa.summary(),
+                aos.summary(),
+                soa.throughput(slot_steps) / 1e6,
+                aos.throughput(slot_steps) / 1e6,
+                soa.throughput(lane_steps),
+            );
+            record(&mut records, &soa, slot_steps);
+            record(&mut records, &aos, slot_steps);
+            // The in-process SoA/AoS *ratio* is noise-robust (same
+            // machine, same run), so the >= 3x guard is enforced, not
+            // just printed — except under AFD_FAST, whose tiny iteration
+            // budget makes even ratios jittery on loaded CI runners.
+            if !fast && speedup < 3.0 {
+                eprintln!(
+                    "hotpath: SoA speedup {speedup:.2}x at B={b} is below the 3x \
+                     guard over the frozen AoS baseline"
+                );
+                std::process::exit(1);
+            }
+        }
     }
 
     println!("\n== lane scheduling (BinaryHeap vs legacy linear min-scan) ==");
@@ -209,32 +285,44 @@ fn main() {
         use afd::runtime::executor::LocalRuntime;
         use afd::runtime::model_runner::{afd_worker_step, AttentionWorkerModel, FusedModel};
         let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").is_file() {
+        if dir.join("manifest.json").is_file() {
+            let manifest = Manifest::load(dir).unwrap();
+            let rt = LocalRuntime::new(manifest.clone()).unwrap();
+            let b = manifest.model.batch_per_worker;
+
+            let mut worker = AttentionWorkerModel::new(&rt).unwrap();
+            let ids: Vec<i32> = vec![1; b];
+            let res = bench("afd worker decode step (B=8, 2 layers)", cfg_fast, || {
+                // Reset when nearing capacity.
+                if worker.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
+                    worker = AttentionWorkerModel::new(&rt).unwrap();
+                }
+                afd_worker_step(&rt, &mut worker, &ids).unwrap()
+            });
+            println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
+
+            let mut fused = FusedModel::new(&rt).unwrap();
+            let res = bench("fused decode step (coupled baseline)", cfg_fast, || {
+                if fused.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
+                    fused = FusedModel::new(&rt).unwrap();
+                }
+                fused.decode_step(&ids).unwrap()
+            });
+            println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
+        } else {
             println!("artifacts not built; skipping runtime benches");
-            return;
         }
-        let manifest = Manifest::load(dir).unwrap();
-        let rt = LocalRuntime::new(manifest.clone()).unwrap();
-        let b = manifest.model.batch_per_worker;
+    }
 
-        let mut worker = AttentionWorkerModel::new(&rt).unwrap();
-        let ids: Vec<i32> = vec![1; b];
-        let res = bench("afd worker decode step (B=8, 2 layers)", cfg_fast, || {
-            // Reset when nearing capacity.
-            if worker.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
-                worker = AttentionWorkerModel::new(&rt).unwrap();
+    if let Some(path) = json_path {
+        let n = records.len();
+        let out = Json::Arr(records).to_string_pretty();
+        if let Some(parent) = std::path::Path::new(&path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).expect("create bench JSON directory");
             }
-            afd_worker_step(&rt, &mut worker, &ids).unwrap()
-        });
-        println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
-
-        let mut fused = FusedModel::new(&rt).unwrap();
-        let res = bench("fused decode step (coupled baseline)", cfg_fast, || {
-            if fused.seq_lens()[0] as usize >= manifest.model.kv_capacity - 2 {
-                fused = FusedModel::new(&rt).unwrap();
-            }
-            fused.decode_step(&ids).unwrap()
-        });
-        println!("{}  -> {:.0} tokens/sec", res.summary(), res.throughput(b as f64));
+        }
+        std::fs::write(&path, out).expect("write bench JSON");
+        println!("\nwrote {n} perf record(s) to {path}");
     }
 }

@@ -15,7 +15,10 @@
 //!   least-token-load) evaluated on per-bundle
 //!   [`crate::coordinator::load::BundleLoad`] snapshots — the same
 //!   engine-agnostic trait the real serving engine's batcher routes
-//!   over. Each bundle owns a bounded inbox; arrivals finding
+//!   over. Snapshotting a bundle is O(1): `Simulation` maintains its
+//!   token-load/occupancy aggregates incrementally, so per-arrival
+//!   routing cost no longer scales with lanes × workers × fleet size.
+//!   Each bundle owns a bounded inbox; arrivals finding
 //!   their routed inbox full are rejected and counted. The closed loop
 //!   ([`ClusterArrival::Closed`]) keeps every bundle saturated
 //!   independently (the paper's capacity question, N at a time).
@@ -564,7 +567,9 @@ impl ClusterSimulation {
             shared.offered += 1;
 
             // Route on the load state at arrival time, over bundles that
-            // are still consuming.
+            // are still consuming. The snapshots are O(1) cached reads
+            // (`Simulation::token_load`/`live_slots`), not engine
+            // rescans — this path runs once per shared-stream arrival.
             let active: Vec<usize> =
                 self.bundles.iter().filter(|b| !b.done).map(|b| b.index).collect();
             if active.is_empty() {

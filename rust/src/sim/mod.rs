@@ -1,8 +1,10 @@
 //! Trace-calibrated discrete-event AFD simulator (paper §5.1).
 //!
 //! * [`batch`] — the six-state batch FSM and step records.
-//! * [`slots`] — continuous-batching slot arrays with O(1) incremental
-//!   token-load maintenance and open-loop idle-slot support.
+//! * [`slots`] — continuous-batching slot arrays: structure-of-arrays
+//!   storage with a bucket-queue completion calendar (per step:
+//!   O(1) + O(completions), not O(B)), incremental token-load
+//!   maintenance, and open-loop idle-slot support via a free-list.
 //! * [`session`] — the composable simulation-session API: a `Simulation`
 //!   builder over pluggable [`session::ArrivalProcess`] (closed-loop
 //!   replenishment / open-loop Poisson with bounded admission),

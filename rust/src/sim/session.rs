@@ -31,6 +31,14 @@
 //! first-min tie-breaking preserved (lowest lane index wins), so heap
 //! and scan schedules are identical event-for-event.
 //!
+//! Bundle-level load aggregates (`token_load` / `live_slots`) are cached
+//! and maintained incrementally around the two slot-engine calls that
+//! can change them (`fill_empty`, `step_admission`), so
+//! [`Simulation::token_load`] and [`Simulation::live_slots`] are O(1)
+//! reads instead of lane × worker rescans — these are read on *every*
+//! shared-stream arrival by [`crate::sim::cluster::ClusterSimulation`]'s
+//! router, where the rescan cost compounded with fleet size.
+//!
 //! ```no_run
 //! use afd::config::experiment::ExperimentConfig;
 //! use afd::sim::session::{OpenLoopPoisson, Simulation};
@@ -745,6 +753,9 @@ impl SimulationBuilder {
             })
             .collect();
         let agg = (r * b) as f64;
+        let agg_token_load =
+            lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.token_load()).sum();
+        let agg_live = lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum();
         Ok(Simulation {
             metrics: MetricsCollector::new(r),
             worker_free: vec![0.0; r],
@@ -767,6 +778,8 @@ impl SimulationBuilder {
             arrival,
             lanes,
             observers,
+            agg_token_load,
+            agg_live,
         })
     }
 }
@@ -798,6 +811,12 @@ pub struct Simulation {
     completions: Vec<Completion>,
     steps_log: Vec<StepRecord>,
     last_finish: f64,
+    /// Cached Σ token load over every lane × worker, maintained
+    /// incrementally around the slot-engine calls so the cluster router
+    /// reads it in O(1) per arrival.
+    agg_token_load: u64,
+    /// Cached Σ occupied slots over every lane × worker.
+    agg_live: usize,
 }
 
 impl Simulation {
@@ -864,23 +883,41 @@ impl Simulation {
     }
 
     /// Current total token load across every lane and worker — the
-    /// bundle-level load signal cluster routing consumes.
+    /// bundle-level load signal cluster routing consumes. O(1): the
+    /// aggregate is maintained incrementally by [`Simulation::step`],
+    /// never recomputed by rescanning lanes/workers (asserted by the
+    /// `cached_aggregates_*` unit tests).
     pub fn token_load(&self) -> u64 {
-        self.lanes
-            .iter()
-            .flat_map(|l| l.workers.iter())
-            .map(|w| w.token_load())
-            .sum()
+        self.agg_token_load
     }
 
-    /// Occupied decode slots across every lane and worker.
+    /// Occupied decode slots across every lane and worker (O(1) cached
+    /// read, like [`Simulation::token_load`]).
     pub fn live_slots(&self) -> usize {
-        self.lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum()
+        self.agg_live
     }
 
     /// Total decode slots (lanes × r × B).
     pub fn total_slots(&self) -> usize {
         self.lanes.len() * self.r * self.b
+    }
+
+    /// Run `op` on worker (g, j) and fold its token-load/occupancy
+    /// delta into the cached bundle aggregates. Every mutation of a
+    /// worker's [`SlotArray`] must go through here — a mutation outside
+    /// this helper silently desyncs [`Simulation::token_load`] /
+    /// [`Simulation::live_slots`] and skews cluster routing.
+    fn mutate_worker(
+        &mut self,
+        g: usize,
+        j: usize,
+        op: impl FnOnce(&mut SlotArray, &mut dyn ArrivalProcess, &mut Vec<Completion>),
+    ) {
+        let w = &mut self.lanes[g].workers[j];
+        let (tl0, lv0) = (w.token_load(), w.live());
+        op(w, &mut *self.arrival, &mut self.completions);
+        self.agg_token_load = self.agg_token_load - tl0 + w.token_load();
+        self.agg_live = self.agg_live - lv0 + w.live();
     }
 
     /// Advance the earliest-ready lane through one full
@@ -898,7 +935,7 @@ impl Simulation {
         // step. No-op under the closed loop.
         self.arrival.advance_to(ready);
         for j in 0..r {
-            self.lanes[g].workers[j].fill_empty(ready, &mut *self.arrival);
+            self.mutate_worker(g, j, |w, arrival, _| w.fill_empty(ready, arrival));
         }
 
         // --- Attention phase (per-worker start, barrier end) ---
@@ -951,11 +988,9 @@ impl Simulation {
         // Slots advance: the step's tokens are delivered at f2a_done.
         let before = self.completions.len();
         for j in 0..r {
-            self.lanes[g].workers[j].step_admission(
-                f2a_done,
-                &mut *self.arrival,
-                &mut self.completions,
-            );
+            self.mutate_worker(g, j, |w, arrival, completions| {
+                w.step_admission(f2a_done, arrival, completions)
+            });
         }
         self.last_finish = f2a_done;
 
@@ -1257,6 +1292,57 @@ mod tests {
             .unwrap()
             .run();
         assert!(counts.borrow().1 > 0, "FFN idle gaps should be observed at r=1");
+    }
+
+    /// Sum the bundle aggregates the slow way — the lane × worker rescan
+    /// `token_load()` used to perform on every call.
+    fn rescan(sim: &Simulation) -> (u64, usize) {
+        let tl = sim.lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.token_load()).sum();
+        let lv = sim.lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum();
+        (tl, lv)
+    }
+
+    #[test]
+    fn cached_aggregates_match_rescan_closed_loop() {
+        let cfg = small_cfg();
+        let mut sim = Simulation::builder(&cfg, 3).build().unwrap();
+        let (tl, lv) = rescan(&sim);
+        assert_eq!(sim.token_load(), tl);
+        assert_eq!(sim.live_slots(), lv);
+        for step in 0..300 {
+            sim.step();
+            let (tl, lv) = rescan(&sim);
+            assert_eq!(sim.token_load(), tl, "step {step}");
+            assert_eq!(sim.live_slots(), lv, "step {step}");
+        }
+        // Closed loop: always fully occupied.
+        assert_eq!(sim.live_slots(), sim.total_slots());
+    }
+
+    #[test]
+    fn cached_aggregates_match_rescan_under_open_loop_churn() {
+        // Open loop with a tiny queue: slots go idle on refusal and are
+        // revived by fill_empty — the paths that mutate the aggregates
+        // outside the plain +1-per-step regime.
+        let cfg = small_cfg();
+        let mut sim = Simulation::builder(&cfg, 2)
+            .arrival(OpenLoopPoisson::new(0.05, 8, cfg.seed).unwrap())
+            .max_completions(Some(400))
+            .build()
+            .unwrap();
+        assert_eq!(sim.live_slots(), 0);
+        assert_eq!(sim.token_load(), 0);
+        let mut saw_partial = false;
+        while !sim.is_done() {
+            sim.step();
+            let (tl, lv) = rescan(&sim);
+            assert_eq!(sim.token_load(), tl);
+            assert_eq!(sim.live_slots(), lv);
+            if lv > 0 && lv < sim.total_slots() {
+                saw_partial = true;
+            }
+        }
+        assert!(saw_partial, "open loop never exercised partial occupancy");
     }
 
     #[test]

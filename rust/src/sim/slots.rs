@@ -1,4 +1,5 @@
-//! Continuous-batching slot management for one Attention microbatch.
+//! Continuous-batching slot management for one Attention microbatch —
+//! structure-of-arrays storage with a completion calendar.
 //!
 //! Each worker holds `B` slots per in-flight batch. Under the closed-loop
 //! arrival process a slot always hosts a live request; when a request
@@ -8,12 +9,41 @@
 //! *idle* when no queued arrival is available, contributing zero token
 //! load until the arrival process admits a request into it.
 //!
-//! The microbatch's total token load `T = sum_b (P_b + age_b)` is
-//! maintained incrementally: O(1) per slot per step, no rescan.
+//! **Hot-path layout.** The pre-SoA engine stored
+//! `Vec<Option<ActiveRequest>>` and touched every slot every step, even
+//! though a non-completing slot only does `token_load += 1`. This
+//! version exploits the renewal structure of Lemma 4.1 directly:
+//!
+//! * **Parallel arrays** (`prefill` / `decode` / `admit_times` / `ids` /
+//!   `complete_at`) replace the array-of-structs, so the per-step state
+//!   the engine actually reads stays dense and branch-free.
+//! * **Completion calendar**: a bucket queue keyed by the slot array's
+//!   own step counter. A request admitted at step `s` with decode
+//!   lifetime `D` completes exactly at step `s + D`, so the step loop
+//!   pops one bucket and touches *only the slots completing this step*.
+//!   Buckets fire in ascending slot-index order and refills consume the
+//!   [`LengthStream`] in that same order, so the completion stream is
+//!   byte-identical to the pre-SoA engine
+//!   (`testkit::reference::ReferenceSlotArray`, asserted by
+//!   `tests/integration_session.rs` and `tests/proptest_invariants.rs`).
+//! * **Arithmetic load update**: between completions every live slot's
+//!   load grows by exactly +1 per step, so the microbatch total
+//!   `T = sum_b (P_b + age_b)` advances by `+= live` and is corrected
+//!   only for the completing slots — O(1) + O(completions) per step
+//!   instead of O(B).
+//! * **Idle free-list**: idle slots live in an ordered set, so
+//!   [`SlotArray::fill_empty`] walks exactly the idle slots (ascending,
+//!   stopping at the first admission refusal, like the pre-SoA scan) —
+//!   not all `B` slots.
+
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::sim::session::{ArrivalProcess, ClosedLoopReplenish, LengthStream};
 use crate::workload::generator::RequestGenerator;
-use crate::workload::request::ActiveRequest;
+use crate::workload::request::RequestLengths;
+
+/// `complete_at` sentinel for an idle slot.
+const IDLE: u64 = u64::MAX;
 
 /// One completed-request record.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,21 +70,64 @@ impl Completion {
     }
 }
 
-/// A microbatch of continuously-batched slots.
+/// A microbatch of continuously-batched slots (SoA storage).
 pub struct SlotArray {
-    /// `None` = idle slot (only reachable under open-loop admission).
-    slots: Vec<Option<ActiveRequest>>,
+    // ---- parallel per-slot arrays (SoA) ----
+    /// Prefill length of the slot's current request (stale when idle).
+    prefill: Vec<u64>,
+    /// Decode lifetime of the slot's current request (stale when idle).
+    decode: Vec<u64>,
+    /// Admission time per slot (for TPOT accounting).
+    admit_times: Vec<f64>,
+    /// Request id per slot (stale when idle).
+    ids: Vec<u64>,
+    /// Step-counter value at which the slot's request completes, or
+    /// [`IDLE`]. The request's age is `decode.max(1) - (complete_at -
+    /// clock)` — derived, never stored, never incremented per step.
+    complete_at: Vec<u64>,
+    // ---- completion calendar + free-list ----
+    /// Bucket queue: `calendar[k]` holds the slots completing at step
+    /// `clock + k + 1`. One `pop_front` per step; buckets are sorted at
+    /// fire time so completions run in slot-index order.
+    calendar: VecDeque<Vec<u32>>,
+    /// Recycled bucket buffers: fired buckets are cleared and reused for
+    /// future completions instead of round-tripping through the
+    /// allocator every step (the hot loop is otherwise allocation-free).
+    spare_buckets: Vec<Vec<u32>>,
+    /// Idle slots, ascending (the `fill_empty` walk order).
+    free: BTreeSet<usize>,
+    // ---- aggregates ----
     stream: Box<dyn LengthStream>,
     /// Incrementally-maintained total token load Σ (P_b + age_b).
     token_load: u64,
-    next_id: u64,
-    /// Admission time per slot (for TPOT accounting).
-    admit_times: Vec<f64>,
     /// Number of occupied slots (== batch under closed loop).
     live: usize,
+    next_id: u64,
+    /// Steps advanced so far (the calendar key space).
+    clock: u64,
 }
 
 impl SlotArray {
+    fn with_capacity(batch: usize, stream: Box<dyn LengthStream>) -> Self {
+        assert!(batch >= 1);
+        assert!(batch < u32::MAX as usize, "slot indices are u32 in the calendar");
+        Self {
+            prefill: vec![0; batch],
+            decode: vec![0; batch],
+            admit_times: vec![0.0; batch],
+            ids: vec![0; batch],
+            complete_at: vec![IDLE; batch],
+            calendar: VecDeque::new(),
+            spare_buckets: Vec::new(),
+            free: BTreeSet::new(),
+            stream,
+            token_load: 0,
+            live: 0,
+            next_id: 0,
+            clock: 0,
+        }
+    }
+
     /// Fill `batch` slots with fresh requests at time 0 (cold start: all
     /// requests begin at age 0; the KV load then ramps toward theta over
     /// ~mu_D steps).
@@ -63,18 +136,13 @@ impl SlotArray {
     }
 
     /// [`Self::new`] over any length stream (trace replay, synthetic, ...).
-    pub fn from_stream(batch: usize, mut stream: Box<dyn LengthStream>) -> Self {
-        assert!(batch >= 1);
-        let mut slots = Vec::with_capacity(batch);
-        let mut token_load = 0u64;
+    pub fn from_stream(batch: usize, stream: Box<dyn LengthStream>) -> Self {
+        let mut slots = Self::with_capacity(batch, stream);
         for i in 0..batch {
-            let lengths = stream.next_lengths();
-            let req = ActiveRequest::admit(i as u64, lengths);
-            token_load += req.token_load();
-            slots.push(Some(req));
+            let lengths = slots.stream.next_lengths();
+            slots.admit_into(i, lengths, 0.0);
         }
-        let admit_times = vec![0.0; batch];
-        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+        slots
     }
 
     /// Fill `batch` slots from the *stationary* law of Lemma 4.1:
@@ -89,7 +157,11 @@ impl SlotArray {
     /// pool is drawn by consuming `(8 * batch).max(4096)` entries from
     /// the stream (for a [`RequestGenerator`] this is exactly the legacy
     /// `gen.trace(n)` draw order, preserving byte-identical seeds).
-    pub fn stationary_from_stream(batch: usize, mut stream: Box<dyn LengthStream>, seed: u64) -> Self {
+    pub fn stationary_from_stream(
+        batch: usize,
+        mut stream: Box<dyn LengthStream>,
+        seed: u64,
+    ) -> Self {
         assert!(batch >= 1);
         use crate::stats::rng::Pcg64;
         let mut rng = Pcg64::new(seed ^ 0x57A7);
@@ -101,37 +173,34 @@ impl SlotArray {
             acc += q.decode;
             cum.push(acc);
         }
-        let mut slots = Vec::with_capacity(batch);
-        let mut token_load = 0u64;
+        let mut slots = Self::with_capacity(batch, stream);
         for i in 0..batch {
             let x = rng.next_below(acc);
             let idx = cum.partition_point(|&c| c <= x);
             let lengths = pool[idx];
             let age = rng.next_below(lengths.decode);
-            let req = ActiveRequest { id: i as u64, lengths, age };
-            token_load += req.token_load();
-            slots.push(Some(req));
+            slots.prefill[i] = lengths.prefill;
+            slots.decode[i] = lengths.decode;
+            slots.ids[i] = i as u64;
+            slots.token_load += lengths.prefill + age;
+            slots.live += 1;
+            // Remaining lifetime is decode - age ∈ [1, decode].
+            slots.schedule_in(i, lengths.decode - age);
         }
-        let admit_times = vec![0.0; batch];
-        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+        slots.next_id = batch as u64;
+        slots
     }
 
     /// All slots idle (the open-loop cold start: the system is empty and
     /// fills as the arrival process admits requests).
     pub fn empty_from_stream(batch: usize, stream: Box<dyn LengthStream>) -> Self {
-        assert!(batch >= 1);
-        Self {
-            slots: vec![None; batch],
-            stream,
-            token_load: 0,
-            next_id: 0,
-            admit_times: vec![0.0; batch],
-            live: 0,
-        }
+        let mut slots = Self::with_capacity(batch, stream);
+        slots.free = (0..batch).collect();
+        slots
     }
 
     pub fn batch(&self) -> usize {
-        self.slots.len()
+        self.prefill.len()
     }
 
     /// Number of occupied slots.
@@ -142,6 +211,40 @@ impl SlotArray {
     /// Current total token load of the microbatch (the T_j of §3.3).
     pub fn token_load(&self) -> u64 {
         self.token_load
+    }
+
+    /// Register `slot`'s completion `steps` steps from now (clamped to
+    /// >= 1: a degenerate decode-0 request still takes one step to
+    /// surface, matching the pre-SoA `age >= decode` check).
+    fn schedule_in(&mut self, slot: usize, steps: u64) {
+        let steps = steps.max(1);
+        self.complete_at[slot] = self.clock + steps;
+        let idx = (steps - 1) as usize;
+        if self.calendar.len() <= idx {
+            self.calendar.resize_with(idx + 1, Vec::new);
+        }
+        let bucket = &mut self.calendar[idx];
+        // First push into a fresh bucket: reuse a fired bucket's buffer
+        // instead of allocating (dropping the old zero-capacity Vec is
+        // free).
+        if bucket.capacity() == 0 {
+            if let Some(recycled) = self.spare_buckets.pop() {
+                *bucket = recycled;
+            }
+        }
+        bucket.push(slot as u32);
+    }
+
+    /// Occupy `slot` with a fresh age-0 request admitted at `now`.
+    fn admit_into(&mut self, slot: usize, lengths: RequestLengths, now: f64) {
+        self.prefill[slot] = lengths.prefill;
+        self.decode[slot] = lengths.decode;
+        self.ids[slot] = self.next_id;
+        self.next_id += 1;
+        self.admit_times[slot] = now;
+        self.token_load += lengths.prefill;
+        self.live += 1;
+        self.schedule_in(slot, lengths.decode);
     }
 
     /// Advance every live slot by one decode step at simulation time
@@ -155,71 +258,91 @@ impl SlotArray {
     /// when `arrival.try_admit(now)` grants a request; otherwise it goes
     /// idle until [`Self::fill_empty`] revives it.
     ///
-    /// Token-load bookkeeping per slot: a continuing request's load grows
-    /// by exactly 1; a completed slot swaps `P_old + D_old - 1` for the
-    /// fresh request's `P_new + 0` (or for 0 when the slot goes idle).
+    /// Cost: O(1) for the arithmetic load update (`+= live`) plus
+    /// O(c log c) for the `c` slots whose calendar bucket fires this
+    /// step. Token-load bookkeeping: every live slot (completing or not)
+    /// first gains +1; a completing slot then swaps out
+    /// `P_old + D_old = old_load + 1` and (on refill) swaps in the fresh
+    /// request's `P_new` — identical arithmetic to the per-slot AoS walk.
     pub fn step_admission(
         &mut self,
         now: f64,
         arrival: &mut dyn ArrivalProcess,
         completions: &mut Vec<Completion>,
     ) {
-        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
-            let Some(req) = slot.as_mut() else { continue };
-            let old_load = req.token_load();
-            if req.step() {
-                completions.push(Completion {
-                    finish_time: now,
-                    admit_time: *admit,
-                    prefill: req.lengths.prefill,
-                    decode_len: req.lengths.decode,
-                });
-                if arrival.try_admit(now).is_some() {
-                    let lengths = self.stream.next_lengths();
-                    *req = ActiveRequest::admit(self.next_id, lengths);
-                    self.next_id += 1;
-                    *admit = now;
-                    self.token_load = self.token_load - old_load + req.token_load();
-                } else {
-                    *slot = None;
-                    self.live -= 1;
-                    self.token_load -= old_load;
-                }
+        self.clock += 1;
+        self.token_load += self.live as u64;
+        let Some(mut fired) = self.calendar.pop_front() else { return };
+        // Completions fire in slot-index order (the AoS scan order), so
+        // the completion stream and the refill draws from the length
+        // stream are byte-identical to the pre-SoA engine.
+        fired.sort_unstable();
+        for &s32 in &fired {
+            let s = s32 as usize;
+            completions.push(Completion {
+                finish_time: now,
+                admit_time: self.admit_times[s],
+                prefill: self.prefill[s],
+                decode_len: self.decode[s],
+            });
+            self.token_load -= self.prefill[s] + self.decode[s].max(1);
+            self.live -= 1;
+            if arrival.try_admit(now).is_some() {
+                let lengths = self.stream.next_lengths();
+                self.admit_into(s, lengths, now);
             } else {
-                self.token_load += 1;
+                self.complete_at[s] = IDLE;
+                self.free.insert(s);
             }
+        }
+        // Recycle the fired bucket's buffer (bounded pool; empty buckets
+        // own no allocation and are dropped for free).
+        if fired.capacity() > 0 && self.spare_buckets.len() < 32 {
+            fired.clear();
+            self.spare_buckets.push(fired);
         }
     }
 
     /// Admit queued arrivals into idle slots at time `now`. No-op under
-    /// the closed loop (no slot is ever idle). Stops at the first refusal:
+    /// the closed loop (no slot is ever idle). Walks the idle free-list
+    /// in ascending slot order and stops at the first refusal:
     /// `try_admit` returning `None` means no arrival is available at
     /// `now`, so later idle slots cannot be filled either.
     pub fn fill_empty(&mut self, now: f64, arrival: &mut dyn ArrivalProcess) {
-        if self.live == self.slots.len() {
-            return;
-        }
-        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
-            if slot.is_some() {
-                continue;
-            }
+        while let Some(&slot) = self.free.iter().next() {
             if arrival.try_admit(now).is_none() {
                 return;
             }
+            self.free.remove(&slot);
             let lengths = self.stream.next_lengths();
-            let req = ActiveRequest::admit(self.next_id, lengths);
-            self.next_id += 1;
-            self.token_load += req.token_load();
-            *slot = Some(req);
-            *admit = now;
-            self.live += 1;
+            self.admit_into(slot, lengths, now);
         }
+    }
+
+    /// Recompute `(token_load, live)` from scratch by walking every slot
+    /// — the O(B) rescan the incremental aggregates replace. Exposed
+    /// (hidden) for the cross-crate invariant tests
+    /// (`tests/proptest_invariants.rs`); not part of the stable API.
+    #[doc(hidden)]
+    pub fn debug_direct_totals(&self) -> (u64, usize) {
+        let mut token_load = 0u64;
+        let mut live = 0usize;
+        for s in 0..self.batch() {
+            if self.complete_at[s] == IDLE {
+                continue;
+            }
+            let remaining = self.complete_at[s] - self.clock;
+            let age = self.decode[s].max(1) - remaining;
+            token_load += self.prefill[s] + age;
+            live += 1;
+        }
+        (token_load, live)
     }
 
     /// Recompute the token load from scratch (testing invariant).
     #[cfg(test)]
     fn token_load_direct(&self) -> u64 {
-        self.slots.iter().flatten().map(|s| s.token_load()).sum()
+        self.debug_direct_totals().0
     }
 }
 
@@ -315,10 +438,29 @@ mod tests {
         for s in 0..500 {
             slots.step(s as f64, &mut completions);
         }
-        let mut ids: Vec<u64> = slots.slots.iter().flatten().map(|s| s.id).collect();
+        let mut ids: Vec<u64> = (0..slots.batch())
+            .filter(|&s| slots.complete_at[s] != IDLE)
+            .map(|s| slots.ids[s])
+            .collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 8);
+    }
+
+    #[test]
+    fn calendar_holds_each_live_slot_exactly_once() {
+        let mut slots = SlotArray::new(16, gen(6));
+        let mut completions = Vec::new();
+        for s in 0..300 {
+            slots.step(s as f64, &mut completions);
+            let scheduled: usize = slots.calendar.iter().map(|b| b.len()).sum();
+            assert_eq!(scheduled, slots.live(), "step {s}");
+            let mut seen: Vec<u32> =
+                slots.calendar.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), slots.live(), "step {s}: duplicate calendar entry");
+        }
     }
 
     /// A denying arrival process: admits nothing, ever.
@@ -360,6 +502,7 @@ mod tests {
         slots.fill_empty(4.0, &mut ClosedLoopReplenish);
         assert_eq!(slots.live(), 2);
         assert_eq!(slots.token_load(), 10); // two fresh P=5, age-0 requests
+        assert_eq!(slots.debug_direct_totals(), (10, 2));
     }
 
     #[test]
@@ -379,5 +522,6 @@ mod tests {
         assert_eq!(slots.live(), 0);
         assert_eq!(slots.token_load(), 0);
         assert_eq!(slots.batch(), 4);
+        assert_eq!(slots.debug_direct_totals(), (0, 0));
     }
 }

@@ -22,6 +22,13 @@
 //! `RequestGenerator::fork` uses inside a cell), and a session is a pure
 //! function of its configuration — so a parallel run is bitwise
 //! identical to [`run_grid_serial`], which the determinism tests assert.
+//!
+//! **Scheduling.** Cells are *submitted* to the pool longest first (LPT
+//! by the `B × bundles × requests` cost proxy), so a single heavyweight
+//! cell — a B = 2048 fleet cell, now cheap enough to sweep thanks to the
+//! SoA slot engine — starts early instead of setting the wall-clock
+//! tail. Results are reassembled by cell index, so only execution order
+//! changes, never output.
 
 use crate::analysis::cycle_time::OperatingPoint;
 use crate::config::experiment::ExperimentConfig;
@@ -507,6 +514,25 @@ fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
     jobs
 }
 
+/// Longest-processing-time-first submission order over the jobs, by the
+/// cost proxy `B × bundles × requests` (requests = the cell's completion
+/// target). LPT scheduling keeps one late heavyweight cell (a B = 2048
+/// fleet cell, say) from being picked up last and setting the
+/// wall-clock tail of the whole sweep. Ties break to the lower job
+/// index, so the order is deterministic. Only *execution* order changes:
+/// results are reassembled by cell index, so parallel output stays
+/// byte-identical to [`run_grid_serial`].
+fn lpt_order(jobs: &[CellJob], opts: &SimOptions) -> Vec<usize> {
+    let cost = |j: &CellJob| -> u128 {
+        let requests =
+            opts.max_completions.unwrap_or(j.cfg.requests_per_instance * j.r);
+        j.batch as u128 * j.fleet.bundles as u128 * requests as u128
+    };
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| cost(&jobs[b]).cmp(&cost(&jobs[a])).then(a.cmp(&b)));
+    order
+}
+
 /// Assemble cells + group summaries from per-job results (in job order).
 fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> SweepResults {
     // Theory columns are cheap and deterministic: compute serially.
@@ -617,15 +643,25 @@ pub fn run_grid(
     let n_threads =
         if threads == 0 { default_threads(jobs.len()) } else { threads.min(jobs.len()).max(1) };
     let pool = ThreadPool::new(n_threads);
-    let work: Vec<(ExperimentConfig, Scenario, ArrivalSpec, FleetSpec, usize)> = jobs
+    // Submit longest cells first (LPT); carry each job's index so the
+    // results can be reassembled into canonical grid order.
+    let order = lpt_order(&jobs, &opts);
+    let work: Vec<(usize, ExperimentConfig, Scenario, ArrivalSpec, FleetSpec, usize)> = order
         .iter()
-        .map(|j| {
-            (j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.fleet, j.r)
+        .map(|&i| {
+            let j = &jobs[i];
+            (i, j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.fleet, j.r)
         })
         .collect();
-    let results = pool.map(work, move |(cfg, scenario, arrival, fleet, r)| {
-        run_cell(&cfg, &scenario, arrival, fleet, r, opts)
+    let permuted = pool.map(work, move |(i, cfg, scenario, arrival, fleet, r)| {
+        (i, run_cell(&cfg, &scenario, arrival, fleet, r, opts))
     });
+    let mut slots: Vec<Option<CellResult>> = (0..jobs.len()).map(|_| None).collect();
+    for (i, res) in permuted {
+        slots[i] = Some(res);
+    }
+    let results: Vec<CellResult> =
+        slots.into_iter().map(|r| r.expect("every grid cell ran")).collect();
     Ok(assemble(grid, &jobs, results))
 }
 
@@ -872,6 +908,77 @@ mod tests {
             crate::coordinator::router::Policy::RoundRobin,
         )]);
         assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+    }
+
+    #[test]
+    fn lpt_order_is_a_cost_sorted_permutation() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 10;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat").unwrap(),
+            vec![1, 2],
+            vec![8, 2048],
+        )
+        .with_fleets(vec![
+            FleetSpec::single(),
+            FleetSpec::new(4, crate::coordinator::router::Policy::JoinShortestQueue),
+        ]);
+        let jobs = build_jobs(&base, &grid);
+        let opts = SimOptions::default();
+        let order = lpt_order(&jobs, &opts);
+        // A permutation of all job indices.
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..jobs.len()).collect::<Vec<_>>());
+        // Non-increasing cost along the submission order.
+        let cost = |i: usize| -> u128 {
+            let j = &jobs[i];
+            let requests =
+                opts.max_completions.unwrap_or(j.cfg.requests_per_instance * j.r);
+            j.batch as u128 * j.fleet.bundles as u128 * requests as u128
+        };
+        for w in order.windows(2) {
+            assert!(cost(w[0]) >= cost(w[1]), "LPT order violated: {w:?}");
+        }
+        // The heaviest shape (B=2048, 4 bundles, r=2) is submitted first.
+        assert_eq!(jobs[order[0]].batch, 2048);
+        assert_eq!(jobs[order[0]].fleet.bundles, 4);
+        assert_eq!(jobs[order[0]].r, 2);
+        // Equal-cost ties keep grid order (deterministic submission).
+        let tied: Vec<usize> =
+            order.iter().copied().filter(|&i| cost(i) == cost(order[0])).collect();
+        for w in tied.windows(2) {
+            assert!(w[0] < w[1], "tie-break must preserve job order: {tied:?}");
+        }
+    }
+
+    #[test]
+    fn lpt_parallel_matches_serial_with_large_batch_cells() {
+        // Heterogeneous B axis incl. the new B=2048 point: submission is
+        // LPT-reordered, output must stay bitwise identical to serial.
+        let mut base = tiny_base();
+        base.requests_per_instance = 15;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat,deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8, 2048],
+        );
+        let par = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(par.cells.len(), 8);
+        // Canonical (grid) cell order despite LPT submission.
+        assert_eq!(par.cells[0].metrics.batch, 8);
+        assert_eq!(par.cells[2].metrics.batch, 2048);
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.metrics.batch, b.metrics.batch);
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(
+                a.metrics.delivered_throughput_per_instance.to_bits(),
+                b.metrics.delivered_throughput_per_instance.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -14,6 +14,8 @@
 
 use crate::stats::rng::Pcg64;
 
+pub mod reference;
+
 /// A seeded random generator of values of type `T`, with an optional
 /// simplification order used for shrinking.
 pub struct Gen<T> {

@@ -1,0 +1,807 @@
+//! Frozen pre-SoA reference implementations — the byte-identity oracle
+//! for the structure-of-arrays slot engine.
+//!
+//! When the simulator's innermost loop moved from
+//! `Vec<Option<ActiveRequest>>` (touch every slot every step) to the
+//! SoA completion-calendar engine in [`crate::sim::slots`], the old
+//! engine was kept *here*, verbatim modulo naming, at three layers:
+//!
+//! * [`ReferenceSlotArray`] — the array-of-structs slot storage with the
+//!   full O(B) per-step walk (the PR 3 state of `sim/slots.rs`).
+//! * [`ReferenceSession`] — the session engine loop over it (linear
+//!   first-min lane scan, which is event-identical to the production
+//!   heap; asserted by `tests/integration_session.rs` since PR 2).
+//! * [`run_reference_cluster`] — the lockstep fleet loop over reference
+//!   sessions (shared Poisson stream, per-bundle inboxes, policy
+//!   routing; no autoscaling — the cluster byte-identity tests run
+//!   single-epoch bundles).
+//!
+//! Uses: the golden comparisons in `tests/integration_session.rs` /
+//! `tests/integration_cluster.rs` (completions CSV + metrics JSON must
+//! match byte-for-byte, closed and open loop), the SoA-vs-AoS invariant
+//! property in `tests/proptest_invariants.rs`, and the before/after
+//! baseline in `benches/hotpath.rs` (slot-steps/sec, AoS vs SoA).
+//!
+//! Do **not** improve this code: its value is that it never changes.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::coordinator::load::LoadSnapshot;
+use crate::coordinator::router::{Policy, Router};
+use crate::sim::cluster::{bundle_seed, ClusterArrival};
+use crate::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
+use crate::sim::session::{
+    ArrivalProcess, ArrivalStats, ClosedLoopReplenish, LengthSource, LengthStream,
+    OpenLoopPoisson, SyntheticSource,
+};
+use crate::sim::slots::Completion;
+use crate::workload::generator::RequestGenerator;
+use crate::workload::request::ActiveRequest;
+
+// ------------------------------------------------------------- slot array
+
+/// Frozen AoS slot storage: `Vec<Option<ActiveRequest>>`, every slot
+/// touched every step. Byte-identical semantics to the production
+/// [`crate::sim::slots::SlotArray`] (which the tests assert), at the
+/// pre-SoA cost.
+pub struct ReferenceSlotArray {
+    /// `None` = idle slot (only reachable under open-loop admission).
+    slots: Vec<Option<ActiveRequest>>,
+    stream: Box<dyn LengthStream>,
+    token_load: u64,
+    next_id: u64,
+    admit_times: Vec<f64>,
+    live: usize,
+}
+
+impl ReferenceSlotArray {
+    pub fn new(batch: usize, gen: RequestGenerator) -> Self {
+        Self::from_stream(batch, Box::new(gen))
+    }
+
+    pub fn from_stream(batch: usize, mut stream: Box<dyn LengthStream>) -> Self {
+        assert!(batch >= 1);
+        let mut slots = Vec::with_capacity(batch);
+        let mut token_load = 0u64;
+        for i in 0..batch {
+            let lengths = stream.next_lengths();
+            let req = ActiveRequest::admit(i as u64, lengths);
+            token_load += req.token_load();
+            slots.push(Some(req));
+        }
+        let admit_times = vec![0.0; batch];
+        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+    }
+
+    pub fn new_stationary(batch: usize, gen: RequestGenerator, seed: u64) -> Self {
+        Self::stationary_from_stream(batch, Box::new(gen), seed)
+    }
+
+    pub fn stationary_from_stream(
+        batch: usize,
+        mut stream: Box<dyn LengthStream>,
+        seed: u64,
+    ) -> Self {
+        assert!(batch >= 1);
+        use crate::stats::rng::Pcg64;
+        let mut rng = Pcg64::new(seed ^ 0x57A7);
+        let pool: Vec<_> =
+            (0..(8 * batch).max(4096)).map(|_| stream.next_lengths()).collect();
+        let mut cum: Vec<u64> = Vec::with_capacity(pool.len());
+        let mut acc = 0u64;
+        for q in &pool {
+            acc += q.decode;
+            cum.push(acc);
+        }
+        let mut slots = Vec::with_capacity(batch);
+        let mut token_load = 0u64;
+        for i in 0..batch {
+            let x = rng.next_below(acc);
+            let idx = cum.partition_point(|&c| c <= x);
+            let lengths = pool[idx];
+            let age = rng.next_below(lengths.decode);
+            let req = ActiveRequest { id: i as u64, lengths, age };
+            token_load += req.token_load();
+            slots.push(Some(req));
+        }
+        let admit_times = vec![0.0; batch];
+        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+    }
+
+    pub fn empty_from_stream(batch: usize, stream: Box<dyn LengthStream>) -> Self {
+        assert!(batch >= 1);
+        Self {
+            slots: vec![None; batch],
+            stream,
+            token_load: 0,
+            next_id: 0,
+            admit_times: vec![0.0; batch],
+            live: 0,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn token_load(&self) -> u64 {
+        self.token_load
+    }
+
+    pub fn step(&mut self, now: f64, completions: &mut Vec<Completion>) {
+        self.step_admission(now, &mut ClosedLoopReplenish, completions);
+    }
+
+    /// The O(B) walk the SoA engine replaced: every slot is visited; a
+    /// continuing request's load grows by 1; a completed slot swaps
+    /// `P_old + D_old - 1` for the fresh request's `P_new + 0` (or for 0
+    /// when the slot goes idle).
+    pub fn step_admission(
+        &mut self,
+        now: f64,
+        arrival: &mut dyn ArrivalProcess,
+        completions: &mut Vec<Completion>,
+    ) {
+        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
+            let Some(req) = slot.as_mut() else { continue };
+            let old_load = req.token_load();
+            if req.step() {
+                completions.push(Completion {
+                    finish_time: now,
+                    admit_time: *admit,
+                    prefill: req.lengths.prefill,
+                    decode_len: req.lengths.decode,
+                });
+                if arrival.try_admit(now).is_some() {
+                    let lengths = self.stream.next_lengths();
+                    *req = ActiveRequest::admit(self.next_id, lengths);
+                    self.next_id += 1;
+                    *admit = now;
+                    self.token_load = self.token_load - old_load + req.token_load();
+                } else {
+                    *slot = None;
+                    self.live -= 1;
+                    self.token_load -= old_load;
+                }
+            } else {
+                self.token_load += 1;
+            }
+        }
+    }
+
+    /// The O(B) idle scan the SoA free-list replaced.
+    pub fn fill_empty(&mut self, now: f64, arrival: &mut dyn ArrivalProcess) {
+        if self.live == self.slots.len() {
+            return;
+        }
+        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
+            if slot.is_some() {
+                continue;
+            }
+            if arrival.try_admit(now).is_none() {
+                return;
+            }
+            let lengths = self.stream.next_lengths();
+            let req = ActiveRequest::admit(self.next_id, lengths);
+            self.next_id += 1;
+            self.token_load += req.token_load();
+            *slot = Some(req);
+            *admit = now;
+            self.live += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- session
+
+struct RefLane {
+    workers: Vec<ReferenceSlotArray>,
+    ready_at: f64,
+}
+
+/// Frozen session engine over [`ReferenceSlotArray`]: the stepped
+/// `rA-1F` bundle loop (Attention barrier -> A2F -> shared FFN -> F2A)
+/// with the linear first-min lane scan, lane/worker-rescan aggregates,
+/// and its **own frozen metric accumulators** (inline busy-time sums,
+/// warm-window delivered rate, idle shares) — deliberately *not* the
+/// production `MetricsCollector`, so the byte-identity golden tests pin
+/// the metric arithmetic too, not just the event schedule.
+pub struct ReferenceSession {
+    cfg: ExperimentConfig,
+    r: usize,
+    b: usize,
+    target: usize,
+    arrival: Box<dyn ArrivalProcess>,
+    lanes: Vec<RefLane>,
+    worker_free: Vec<f64>,
+    ffn_free: f64,
+    t_ffn: f64,
+    tc_half: f64,
+    // Frozen inline metric accumulators (the pre-session-API engine's).
+    busy_attention: Vec<f64>,
+    busy_ffn: f64,
+    sum_barrier_load: f64,
+    sum_mean_load: f64,
+    n_steps: u64,
+    step_times: Vec<f64>,
+    completions: Vec<Completion>,
+    last_finish: f64,
+}
+
+impl ReferenceSession {
+    /// Assemble a session exactly as `Simulation::build` does (same lane
+    /// construction order, same warm-start seeds, same default synthetic
+    /// source). Panics instead of returning errors — it is an oracle,
+    /// not an API.
+    pub fn build(
+        cfg: &ExperimentConfig,
+        r: usize,
+        batches_in_flight: usize,
+        warm_start: bool,
+        target_completions: usize,
+        arrival: Box<dyn ArrivalProcess>,
+        source: Option<Box<dyn LengthSource>>,
+    ) -> Self {
+        assert!(r >= 1 && batches_in_flight >= 1 && target_completions >= 1);
+        let b = cfg.topology.batch_per_worker;
+        assert!(b >= 1);
+        let m = batches_in_flight;
+        let mut source: Box<dyn LengthSource> =
+            source.unwrap_or_else(|| Box::new(SyntheticSource::from_config(cfg)));
+        let initial_fill = arrival.initial_fill();
+        let lanes: Vec<RefLane> = (0..m)
+            .map(|g| RefLane {
+                workers: (0..r)
+                    .map(|j| {
+                        let stream = source.stream(g, j, m, r);
+                        if !initial_fill {
+                            ReferenceSlotArray::empty_from_stream(b, stream)
+                        } else if warm_start {
+                            ReferenceSlotArray::stationary_from_stream(
+                                b,
+                                stream,
+                                cfg.seed ^ (g * 131 + j) as u64,
+                            )
+                        } else {
+                            ReferenceSlotArray::from_stream(b, stream)
+                        }
+                    })
+                    .collect(),
+                ready_at: 0.0,
+            })
+            .collect();
+        let agg = (r * b) as f64;
+        Self {
+            worker_free: vec![0.0; r],
+            ffn_free: 0.0,
+            t_ffn: cfg.hardware.t_ffn(agg),
+            tc_half: cfg.hardware.t_comm(agg) / 2.0,
+            busy_attention: vec![0.0; r],
+            busy_ffn: 0.0,
+            sum_barrier_load: 0.0,
+            sum_mean_load: 0.0,
+            n_steps: 0,
+            step_times: Vec::new(),
+            completions: Vec::with_capacity(target_completions + 64),
+            last_finish: 0.0,
+            b,
+            cfg: cfg.clone(),
+            r,
+            target: target_completions,
+            arrival,
+            lanes,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completions.len() >= self.target
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completions.len()
+    }
+
+    pub fn last_finish(&self) -> f64 {
+        self.last_finish
+    }
+
+    /// Earliest lane ready time (ties to the lowest lane index) — the
+    /// pre-heap linear scan.
+    fn pick_lane(&self) -> usize {
+        (0..self.lanes.len())
+            .min_by(|&a, &b| {
+                self.lanes[a].ready_at.partial_cmp(&self.lanes[b].ready_at).unwrap()
+            })
+            .expect("session has >= 1 lane")
+    }
+
+    pub fn next_ready(&self) -> f64 {
+        self.lanes[self.pick_lane()].ready_at
+    }
+
+    /// The pre-SoA bundle load signal: a full lane × worker rescan.
+    pub fn token_load(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.workers.iter())
+            .map(|w| w.token_load())
+            .sum()
+    }
+
+    pub fn live_slots(&self) -> usize {
+        self.lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.lanes.len() * self.r * self.b
+    }
+
+    /// One full Attention -> A2F -> FFN -> F2A lane step (the exact
+    /// event arithmetic of the pre-redesign engine loop, inline metric
+    /// accumulation included).
+    pub fn step(&mut self) -> f64 {
+        let hw = self.cfg.hardware;
+        let r = self.r;
+        let g = self.pick_lane();
+        let ready = self.lanes[g].ready_at;
+
+        self.arrival.advance_to(ready);
+        for j in 0..r {
+            self.lanes[g].workers[j].fill_empty(ready, &mut *self.arrival);
+        }
+
+        let mut att_barrier: f64 = 0.0;
+        let mut max_load = 0u64;
+        let mut sum_load = 0u64;
+        for j in 0..r {
+            let load = self.lanes[g].workers[j].token_load();
+            max_load = max_load.max(load);
+            sum_load += load;
+            let t_a = hw.t_attention(load as f64);
+            let start = self.worker_free[j].max(ready);
+            let end = start + t_a;
+            self.worker_free[j] = end;
+            self.busy_attention[j] += t_a;
+            att_barrier = att_barrier.max(end);
+        }
+        self.sum_barrier_load += max_load as f64;
+        self.sum_mean_load += sum_load as f64 / r as f64;
+        self.n_steps += 1;
+
+        let a2f_done = att_barrier + self.tc_half;
+        let ffn_start = a2f_done.max(self.ffn_free);
+        let ffn_done = ffn_start + self.t_ffn;
+        self.ffn_free = ffn_done;
+        self.busy_ffn += self.t_ffn;
+
+        let f2a_done = ffn_done + self.tc_half;
+        self.step_times.push(f2a_done);
+
+        for j in 0..r {
+            self.lanes[g].workers[j].step_admission(
+                f2a_done,
+                &mut *self.arrival,
+                &mut self.completions,
+            );
+        }
+        self.last_finish = f2a_done;
+
+        self.lanes[g].ready_at = f2a_done;
+        f2a_done
+    }
+
+    /// Finalize into `(metrics, completions, arrival_stats)` — the
+    /// pre-redesign engine's inline metric arithmetic, verbatim
+    /// (warm-window interval-counted delivered rate, busy-time idle
+    /// shares, barrier-load means).
+    pub fn finish(mut self) -> (SimMetrics, Vec<Completion>, ArrivalStats) {
+        self.completions
+            .sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
+        self.completions.truncate(self.target);
+        self.arrival.advance_to(self.last_finish);
+        let arrival = self.arrival.stats(self.last_finish);
+
+        let total_time = self.last_finish;
+        let (throughput, _t80) =
+            stable_throughput(&self.completions, self.cfg.stable_fraction, self.r + 1);
+        let delivered = {
+            let skip = self.step_times.len() / 4;
+            let warm_steps = (self.step_times.len().saturating_sub(skip + 1)) as f64;
+            let warm_time = total_time - self.step_times.get(skip).copied().unwrap_or(0.0);
+            if warm_time > 0.0 && warm_steps > 0.0 {
+                warm_steps * (self.r * self.b) as f64 / warm_time / (self.r + 1) as f64
+            } else {
+                f64::NAN
+            }
+        };
+        let idle_attention =
+            1.0 - self.busy_attention.iter().sum::<f64>() / (self.r as f64 * total_time);
+        let idle_ffn = 1.0 - self.busy_ffn / total_time;
+        let metrics = SimMetrics {
+            r: self.r,
+            batch: self.b,
+            throughput_per_instance: throughput,
+            delivered_throughput_per_instance: delivered,
+            tpot: mean_tpot(&self.completions),
+            idle_attention: idle_attention.max(0.0),
+            idle_ffn: idle_ffn.max(0.0),
+            total_time,
+            completed: self.completions.len(),
+            mean_barrier_load: self.sum_barrier_load / self.n_steps as f64,
+            mean_worker_load: self.sum_mean_load / self.n_steps as f64,
+        };
+        (metrics, self.completions, arrival)
+    }
+
+    pub fn run(mut self) -> (SimMetrics, Vec<Completion>, ArrivalStats) {
+        while !self.is_done() {
+            self.step();
+        }
+        self.finish()
+    }
+}
+
+// ---------------------------------------------------------------- cluster
+
+struct RefInbox {
+    queue: VecDeque<f64>,
+    capacity: usize,
+    admitted: u64,
+    wait_sum: f64,
+}
+
+/// Frozen copy of the cluster's per-bundle inbox arrival proxy (epoch
+/// offset is always 0: the reference cluster runs single-epoch bundles).
+struct RefInboxArrival {
+    inbox: Rc<RefCell<RefInbox>>,
+}
+
+impl ArrivalProcess for RefInboxArrival {
+    fn try_admit(&mut self, now: f64) -> Option<f64> {
+        let mut inbox = self.inbox.borrow_mut();
+        match inbox.queue.front() {
+            Some(&arrived) if arrived <= now => {
+                inbox.queue.pop_front();
+                inbox.admitted += 1;
+                inbox.wait_sum += now - arrived;
+                Some(arrived.max(0.0))
+            }
+            _ => None,
+        }
+    }
+
+    fn initial_fill(&self) -> bool {
+        false
+    }
+
+    fn stats(&self, _total_time: f64) -> ArrivalStats {
+        let inbox = self.inbox.borrow();
+        ArrivalStats {
+            kind: "cluster-routed",
+            lambda: 0.0,
+            offered: 0,
+            admitted: inbox.admitted,
+            rejected: 0,
+            mean_queue_wait: if inbox.admitted > 0 {
+                inbox.wait_sum / inbox.admitted as f64
+            } else {
+                0.0
+            },
+            mean_queue_len: 0.0,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cluster-routed"
+    }
+}
+
+/// Frozen copy of the cluster-wide Poisson generator (same seed xor and
+/// exponential-gap construction as the production `SharedPoisson`).
+struct RefSharedPoisson {
+    lambda: f64,
+    rng: crate::stats::rng::Pcg64,
+    next_arrival: f64,
+    offered: u64,
+    rejected: u64,
+    queue_integral: f64,
+    last_t: f64,
+}
+
+impl RefSharedPoisson {
+    fn new(lambda: f64, seed: u64) -> Self {
+        let mut rng = crate::stats::rng::Pcg64::new(seed ^ 0xC1_057E_12);
+        let first_gap = -rng.next_f64_open().ln() / lambda;
+        Self {
+            lambda,
+            rng,
+            next_arrival: first_gap,
+            offered: 0,
+            rejected: 0,
+            queue_integral: 0.0,
+            last_t: 0.0,
+        }
+    }
+
+    fn sample_gap(&mut self) -> f64 {
+        -self.rng.next_f64_open().ln() / self.lambda
+    }
+}
+
+/// One bundle's share of a reference-cluster run.
+pub struct ReferenceBundleOutput {
+    pub metrics: SimMetrics,
+    pub arrival: ArrivalStats,
+    pub completions: Vec<Completion>,
+    pub total_time: f64,
+}
+
+/// Output of [`run_reference_cluster`], mirroring
+/// [`crate::sim::cluster::ClusterOutput`] for the no-autoscale case.
+pub struct ReferenceClusterOutput {
+    pub bundles: Vec<ReferenceBundleOutput>,
+    pub aggregate: SimMetrics,
+    pub arrival: ArrivalStats,
+    pub load_imbalance: f64,
+}
+
+/// Generate and route shared arrivals up to global time `now` — the
+/// exact accumulation order of `ClusterSimulation::drain_arrivals`
+/// (queue-length integral updated per arrival, routing on per-bundle
+/// load snapshots at arrival time).
+#[allow(clippy::too_many_arguments)]
+fn drain_arrivals(
+    shared: &mut RefSharedPoisson,
+    router: &mut Router,
+    inboxes: &[Option<Rc<RefCell<RefInbox>>>],
+    sessions: &[Option<ReferenceSession>],
+    done: &[bool],
+    now: f64,
+) {
+    loop {
+        let queued_total: usize =
+            inboxes.iter().flatten().map(|ib| ib.borrow().queue.len()).sum();
+        if shared.next_arrival > now {
+            if now > shared.last_t {
+                shared.queue_integral += queued_total as f64 * (now - shared.last_t);
+                shared.last_t = now;
+            }
+            return;
+        }
+        let t = shared.next_arrival;
+        shared.queue_integral += queued_total as f64 * (t - shared.last_t);
+        shared.last_t = t;
+        shared.offered += 1;
+
+        let active: Vec<usize> = (0..done.len()).filter(|&i| !done[i]).collect();
+        if active.is_empty() {
+            shared.rejected += 1;
+        } else {
+            let loads: Vec<LoadSnapshot> = active
+                .iter()
+                .map(|&i| {
+                    let s = sessions[i].as_ref().unwrap();
+                    LoadSnapshot {
+                        queued: inboxes[i].as_ref().unwrap().borrow().queue.len(),
+                        token_load: s.token_load(),
+                        live_slots: s.live_slots(),
+                        free_slots: s.total_slots() - s.live_slots(),
+                        kv_headroom: u64::MAX,
+                    }
+                })
+                .collect();
+            let dst = active[router.route(&loads)];
+            let inbox = inboxes[dst].as_ref().unwrap();
+            let mut ib = inbox.borrow_mut();
+            if ib.queue.len() < ib.capacity {
+                ib.queue.push_back(t);
+            } else {
+                shared.rejected += 1;
+            }
+        }
+        let gap = shared.sample_gap();
+        shared.next_arrival = t + gap;
+    }
+}
+
+/// Run a homogeneous fleet of single-epoch reference bundles in lockstep
+/// virtual time — the pre-SoA `ClusterSimulation::run` for the
+/// no-autoscale case (same bundle seeds, same routing and inbox
+/// accounting, same aggregate arithmetic).
+#[allow(clippy::too_many_arguments)]
+pub fn run_reference_cluster(
+    cfg: &ExperimentConfig,
+    r: usize,
+    bundles: usize,
+    policy: Policy,
+    arrival: ClusterArrival,
+    batches_in_flight: usize,
+    warm_start: bool,
+    completions_per_bundle: usize,
+) -> ReferenceClusterOutput {
+    assert!(bundles >= 1 && completions_per_bundle >= 1);
+    let mut router = Router::new(policy);
+    let mut shared = match arrival {
+        ClusterArrival::Open { lambda, .. } if bundles > 1 => {
+            Some(RefSharedPoisson::new(lambda, cfg.seed))
+        }
+        _ => None,
+    };
+
+    let mut inboxes: Vec<Option<Rc<RefCell<RefInbox>>>> = Vec::with_capacity(bundles);
+    let mut sessions: Vec<Option<ReferenceSession>> = Vec::with_capacity(bundles);
+    for i in 0..bundles {
+        let seed = bundle_seed(cfg.seed, i);
+        let bcfg = cfg.with_seed(seed);
+        let inbox = match arrival {
+            ClusterArrival::Open { queue_capacity, .. } if bundles > 1 => {
+                Some(Rc::new(RefCell::new(RefInbox {
+                    queue: VecDeque::new(),
+                    capacity: queue_capacity,
+                    admitted: 0,
+                    wait_sum: 0.0,
+                })))
+            }
+            _ => None,
+        };
+        let bundle_arrival: Box<dyn ArrivalProcess> = match (arrival, &inbox) {
+            (ClusterArrival::Open { .. }, Some(ib)) => {
+                Box::new(RefInboxArrival { inbox: ib.clone() })
+            }
+            (ClusterArrival::Open { lambda, queue_capacity }, None) => Box::new(
+                OpenLoopPoisson::new(lambda, queue_capacity, bcfg.seed)
+                    .expect("reference cluster arrival parameters validated by caller"),
+            ),
+            (ClusterArrival::Closed, _) => Box::new(ClosedLoopReplenish),
+        };
+        sessions.push(Some(ReferenceSession::build(
+            &bcfg,
+            r,
+            batches_in_flight,
+            warm_start,
+            completions_per_bundle,
+            bundle_arrival,
+            None,
+        )));
+        inboxes.push(inbox);
+    }
+
+    let mut done = vec![false; bundles];
+    let mut outputs: Vec<Option<ReferenceBundleOutput>> =
+        (0..bundles).map(|_| None).collect();
+    let mut spread_sum = 0.0f64;
+    let mut spread_samples = 0u64;
+
+    loop {
+        // Earliest-starting active bundle; strict < keeps ties on the
+        // lowest bundle index.
+        let mut pick: Option<(f64, usize)> = None;
+        for (g, is_done) in done.iter().enumerate() {
+            if *is_done {
+                continue;
+            }
+            let t = sessions[g].as_ref().unwrap().next_ready();
+            let better = match pick {
+                Some((best, _)) => t < best,
+                None => true,
+            };
+            if better {
+                pick = Some((t, g));
+            }
+        }
+        let Some((global_ready, g)) = pick else { break };
+
+        if let Some(shared) = shared.as_mut() {
+            drain_arrivals(shared, &mut router, &inboxes, &sessions, &done, global_ready);
+        }
+        // Cross-bundle spread sample (the load_imbalance diagnostic).
+        if bundles >= 2 {
+            let loads: Vec<u64> = sessions
+                .iter()
+                .zip(&done)
+                .filter(|(_, d)| !**d)
+                .map(|(s, _)| s.as_ref().unwrap().token_load())
+                .collect();
+            if loads.len() >= 2 {
+                let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+                if mean > 0.0 {
+                    let max = *loads.iter().max().unwrap() as f64;
+                    spread_sum += max / mean - 1.0;
+                    spread_samples += 1;
+                }
+            }
+        }
+
+        sessions[g].as_mut().unwrap().step();
+        if sessions[g].as_ref().unwrap().is_done() {
+            let session = sessions[g].take().unwrap();
+            let total_time = session.last_finish();
+            let (metrics, completions, arrival_stats) = session.finish();
+            if let (Some(shared), Some(inbox)) = (shared.as_mut(), &inboxes[g]) {
+                let mut ib = inbox.borrow_mut();
+                shared.rejected += ib.queue.len() as u64;
+                ib.queue.clear();
+            }
+            outputs[g] = Some(ReferenceBundleOutput {
+                metrics,
+                arrival: arrival_stats,
+                completions,
+                total_time,
+            });
+            done[g] = true;
+        }
+    }
+
+    let bundle_outputs: Vec<ReferenceBundleOutput> =
+        outputs.into_iter().map(|o| o.expect("every bundle ran to target")).collect();
+    let n = bundle_outputs.len();
+    let total_time = bundle_outputs.iter().map(|b| b.total_time).fold(0.0, f64::max);
+    let aggregate = if n == 1 {
+        let mut m = bundle_outputs[0].metrics.clone();
+        m.completed = bundle_outputs[0].completions.len();
+        m.total_time = bundle_outputs[0].total_time;
+        m
+    } else {
+        let mean = |f: &dyn Fn(&SimMetrics) -> f64| {
+            bundle_outputs.iter().map(|b| f(&b.metrics)).sum::<f64>() / n as f64
+        };
+        SimMetrics {
+            r,
+            batch: cfg.topology.batch_per_worker,
+            throughput_per_instance: mean(&|m| m.throughput_per_instance),
+            delivered_throughput_per_instance: mean(&|m| {
+                m.delivered_throughput_per_instance
+            }),
+            tpot: mean(&|m| m.tpot),
+            idle_attention: mean(&|m| m.idle_attention),
+            idle_ffn: mean(&|m| m.idle_ffn),
+            total_time,
+            completed: bundle_outputs.iter().map(|b| b.completions.len()).sum(),
+            mean_barrier_load: mean(&|m| m.mean_barrier_load),
+            mean_worker_load: mean(&|m| m.mean_worker_load),
+        }
+    };
+
+    let arrival_stats = match (arrival, shared) {
+        (ClusterArrival::Closed, _) => ArrivalStats::closed(),
+        (ClusterArrival::Open { .. }, None) => bundle_outputs[0].arrival,
+        (ClusterArrival::Open { lambda, .. }, Some(shared)) => {
+            let admitted: u64 = bundle_outputs.iter().map(|b| b.arrival.admitted).sum();
+            let wait_sum: f64 = bundle_outputs
+                .iter()
+                .map(|b| b.arrival.mean_queue_wait * b.arrival.admitted as f64)
+                .sum();
+            ArrivalStats {
+                kind: "open-poisson",
+                lambda,
+                offered: shared.offered,
+                admitted,
+                rejected: shared.rejected,
+                mean_queue_wait: if admitted > 0 { wait_sum / admitted as f64 } else { 0.0 },
+                mean_queue_len: if total_time > 0.0 {
+                    shared.queue_integral / total_time
+                } else {
+                    0.0
+                },
+            }
+        }
+    };
+
+    ReferenceClusterOutput {
+        bundles: bundle_outputs,
+        aggregate,
+        arrival: arrival_stats,
+        load_imbalance: if spread_samples > 0 {
+            spread_sum / spread_samples as f64
+        } else {
+            0.0
+        },
+    }
+}

@@ -12,6 +12,12 @@
 //!    autoscaler (A.6 estimator over the completion stream + Eq. 12)
 //!    converges to within ±1 of `r_star_g_on_grid` on at least 6 of the
 //!    8 synthetic registry scenarios (fixed seeds).
+//! 4. **SoA byte-identity at fleet scale**: a 4-bundle JSQ cluster —
+//!    closed loop and routed open loop — reproduces the frozen pre-SoA
+//!    AoS engine ([`afd::testkit::reference::run_reference_cluster`])
+//!    byte-for-byte across the full synthetic registry: per-bundle
+//!    completions CSV and metrics JSON, the aggregate metrics JSON, the
+//!    cluster arrival accounting, and the load-imbalance diagnostic.
 
 use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::r_star_g_on_grid;
@@ -19,9 +25,11 @@ use afd::config::experiment::ExperimentConfig;
 use afd::coordinator::router::Policy;
 use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
 use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+use afd::sim::engine::BATCHES_IN_FLIGHT;
 use afd::sim::session::Simulation;
 use afd::sweep::grid::open_loop_rate;
 use afd::sweep::scenarios;
+use afd::testkit::reference::run_reference_cluster;
 
 #[test]
 fn one_bundle_round_robin_cluster_is_byte_identical_on_every_registry_scenario() {
@@ -66,6 +74,97 @@ fn one_bundle_round_robin_cluster_is_byte_identical_on_every_registry_scenario()
             "{}: per-bundle metrics diverged",
             scenario.name
         );
+    }
+}
+
+#[test]
+fn four_bundle_jsq_cluster_is_byte_identical_to_frozen_aos_engine_on_every_scenario() {
+    // The cluster's only dependence on slot-engine internals runs
+    // through `Simulation`, but routing feeds back: an arrival's
+    // destination depends on the per-bundle load snapshots, so any SoA
+    // divergence (load accounting, completion order, refill draws)
+    // would cascade into different routing and different outputs. The
+    // frozen AoS cluster therefore pins the whole fleet pipeline,
+    // closed and open loop.
+    for scenario in scenarios::registry() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = scenario.spec.clone();
+        cfg.topology.batch_per_worker = 8;
+        let r = 2;
+        let bundles = 4;
+        let target = 60;
+        for arrival in [
+            ClusterArrival::Closed,
+            ClusterArrival::Open { lambda: 0.4, queue_capacity: 64 },
+        ] {
+            let out = ClusterSimulation::builder(&cfg, r)
+                .bundles(bundles)
+                .policy(Policy::JoinShortestQueue)
+                .arrival(arrival)
+                .completions_per_bundle(Some(target))
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let reference = run_reference_cluster(
+                &cfg,
+                r,
+                bundles,
+                Policy::JoinShortestQueue,
+                arrival,
+                BATCHES_IN_FLIGHT,
+                true,
+                target,
+            );
+
+            assert_eq!(out.bundles.len(), reference.bundles.len());
+            for (b, rb) in out.bundles.iter().zip(&reference.bundles) {
+                assert_eq!(
+                    completions_to_csv_string(&b.completions),
+                    completions_to_csv_string(&rb.completions),
+                    "{} / {arrival:?}: bundle {} completions CSV diverged",
+                    scenario.name,
+                    b.bundle
+                );
+                assert_eq!(
+                    sim_metrics_to_json(&b.metrics).to_string_pretty(),
+                    sim_metrics_to_json(&rb.metrics).to_string_pretty(),
+                    "{} / {arrival:?}: bundle {} metrics JSON diverged",
+                    scenario.name,
+                    b.bundle
+                );
+                assert_eq!(
+                    b.arrival, rb.arrival,
+                    "{} / {arrival:?}: bundle {} arrival stats diverged",
+                    scenario.name,
+                    b.bundle
+                );
+                assert_eq!(
+                    b.total_time.to_bits(),
+                    rb.total_time.to_bits(),
+                    "{} / {arrival:?}: bundle {} total time diverged",
+                    scenario.name,
+                    b.bundle
+                );
+            }
+            assert_eq!(
+                sim_metrics_to_json(&out.aggregate).to_string_pretty(),
+                sim_metrics_to_json(&reference.aggregate).to_string_pretty(),
+                "{} / {arrival:?}: aggregate metrics JSON diverged",
+                scenario.name
+            );
+            assert_eq!(
+                out.arrival, reference.arrival,
+                "{} / {arrival:?}: cluster arrival stats diverged",
+                scenario.name
+            );
+            assert_eq!(
+                out.load_imbalance.to_bits(),
+                reference.load_imbalance.to_bits(),
+                "{} / {arrival:?}: load imbalance diverged",
+                scenario.name
+            );
+        }
     }
 }
 

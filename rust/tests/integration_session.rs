@@ -3,9 +3,14 @@
 //! 1. **Byte-identity regression**: the closed-loop session (and the
 //!    deprecated `simulate()` shim over it) must reproduce the
 //!    pre-redesign engine *byte for byte* — completions CSV and metrics
-//!    JSON — across the full synthetic scenario registry. The reference
-//!    below is a frozen copy of the legacy engine loop (linear lane
-//!    min-scan, inline accumulators) built only on public APIs.
+//!    JSON — across the full synthetic scenario registry. The oracle is
+//!    [`afd::testkit::reference`]: the frozen AoS
+//!    `Vec<Option<ActiveRequest>>` slot engine under the frozen
+//!    linear-min-scan session loop (the PR 3 state, predating both the
+//!    BinaryHeap lane scheduling and the SoA completion-calendar slot
+//!    storage). The same oracle covers the **open loop**: Poisson
+//!    admission with idle slots and `fill_empty` revivals must also be
+//!    byte-identical across the registry.
 //! 2. **Open-loop Poisson**: Little's-law consistency on the admission
 //!    queue (`L_q ≈ λ_admitted · W_q`), determinism of the completion
 //!    stream under a fixed seed, and rejection accounting under a tiny
@@ -18,133 +23,30 @@
 
 use afd::config::experiment::ExperimentConfig;
 use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
-use afd::sim::engine::{simulate, SimOptions};
-use afd::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
-use afd::sim::session::{OpenLoopPoisson, Simulation, TraceReplay};
-use afd::sim::slots::{Completion, SlotArray};
-use afd::workload::generator::RequestGenerator;
+use afd::sim::engine::{simulate, SimOptions, BATCHES_IN_FLIGHT};
+use afd::sim::metrics::SimMetrics;
+use afd::sim::session::{ClosedLoopReplenish, OpenLoopPoisson, Simulation, TraceReplay};
+use afd::sim::slots::Completion;
+use afd::testkit::reference::ReferenceSession;
 use afd::workload::trace::ProductionCorpus;
 
-/// Frozen copy of the pre-redesign `simulate()` (PR 1 state): the
-/// legacy closed-loop engine with the O(lanes) linear min-scan and
-/// inline metric accumulators. Kept verbatim (modulo visibility) as the
-/// regression oracle for the session redesign.
+/// The pre-redesign `simulate()` oracle: frozen AoS slots + frozen
+/// linear-min-scan engine loop (see `testkit::reference`).
 fn reference_simulate(
     cfg: &ExperimentConfig,
     r: usize,
     batches_in_flight: usize,
 ) -> (SimMetrics, Vec<Completion>) {
-    struct BatchLane {
-        workers: Vec<SlotArray>,
-        ready_at: f64,
-    }
-
-    let hw = &cfg.hardware;
-    let b = cfg.topology.batch_per_worker;
-    let target_completions = cfg.requests_per_instance * r;
-
-    let n_lanes = batches_in_flight.max(1);
-    let mut root = RequestGenerator::new(cfg.workload.clone(), cfg.seed);
-    let mut lanes: Vec<BatchLane> = (0..n_lanes)
-        .map(|g| BatchLane {
-            workers: (0..r)
-                .map(|j| {
-                    let gen = root.fork((g * 1024 + j) as u64);
-                    SlotArray::new_stationary(b, gen, cfg.seed ^ (g * 131 + j) as u64)
-                })
-                .collect(),
-            ready_at: 0.0,
-        })
-        .collect();
-
-    let mut worker_free = vec![0.0f64; r];
-    let mut ffn_free = 0.0f64;
-    let mut busy_attention = vec![0.0f64; r];
-    let mut busy_ffn = 0.0f64;
-    let mut sum_barrier_load = 0.0f64;
-    let mut sum_mean_load = 0.0f64;
-    let mut n_steps = 0u64;
-
-    let mut completions: Vec<Completion> = Vec::with_capacity(target_completions + 64);
-    let mut step_times: Vec<f64> = Vec::new();
-
-    let agg = (r * b) as f64;
-    let t_ffn = hw.t_ffn(agg);
-    let tc_half = hw.t_comm(agg) / 2.0;
-
-    let mut last_finish = 0.0f64;
-    while completions.len() < target_completions {
-        let g = (0..n_lanes)
-            .min_by(|&a, &b| lanes[a].ready_at.partial_cmp(&lanes[b].ready_at).unwrap())
-            .unwrap();
-        let ready = lanes[g].ready_at;
-
-        let mut att_barrier: f64 = 0.0;
-        let mut max_load = 0u64;
-        let mut sum_load = 0u64;
-        for j in 0..r {
-            let load = lanes[g].workers[j].token_load();
-            max_load = max_load.max(load);
-            sum_load += load;
-            let t_a = hw.t_attention(load as f64);
-            let start = worker_free[j].max(ready);
-            let end = start + t_a;
-            worker_free[j] = end;
-            busy_attention[j] += t_a;
-            att_barrier = att_barrier.max(end);
-        }
-        sum_barrier_load += max_load as f64;
-        sum_mean_load += sum_load as f64 / r as f64;
-        n_steps += 1;
-
-        let a2f_done = att_barrier + tc_half;
-        let ffn_start = a2f_done.max(ffn_free);
-        let ffn_done = ffn_start + t_ffn;
-        ffn_free = ffn_done;
-        busy_ffn += t_ffn;
-
-        let f2a_done = ffn_done + tc_half;
-        lanes[g].ready_at = f2a_done;
-        step_times.push(f2a_done);
-
-        for j in 0..r {
-            lanes[g].workers[j].step(f2a_done, &mut completions);
-        }
-        last_finish = f2a_done;
-    }
-
-    completions.sort_by(|a, b| a.finish_time.partial_cmp(&b.finish_time).unwrap());
-    completions.truncate(target_completions);
-
-    let total_time = last_finish;
-    let (throughput, _t80) = stable_throughput(&completions, cfg.stable_fraction, r + 1);
-    let delivered = {
-        let skip = step_times.len() / 4;
-        let warm_steps = (step_times.len().saturating_sub(skip + 1)) as f64;
-        let warm_time = total_time - step_times.get(skip).copied().unwrap_or(0.0);
-        if warm_time > 0.0 && warm_steps > 0.0 {
-            warm_steps * (r * b) as f64 / warm_time / (r + 1) as f64
-        } else {
-            f64::NAN
-        }
-    };
-    let idle_attention =
-        1.0 - busy_attention.iter().sum::<f64>() / (r as f64 * total_time);
-    let idle_ffn = 1.0 - busy_ffn / total_time;
-
-    let metrics = SimMetrics {
+    let (metrics, completions, _arrival) = ReferenceSession::build(
+        cfg,
         r,
-        batch: b,
-        throughput_per_instance: throughput,
-        delivered_throughput_per_instance: delivered,
-        tpot: mean_tpot(&completions),
-        idle_attention: idle_attention.max(0.0),
-        idle_ffn: idle_ffn.max(0.0),
-        total_time,
-        completed: completions.len(),
-        mean_barrier_load: sum_barrier_load / n_steps as f64,
-        mean_worker_load: sum_mean_load / n_steps as f64,
-    };
+        batches_in_flight,
+        true,
+        cfg.requests_per_instance * r,
+        Box::new(ClosedLoopReplenish),
+        None,
+    )
+    .run();
     (metrics, completions)
 }
 
@@ -172,6 +74,60 @@ fn closed_loop_session_is_byte_identical_to_legacy_engine_on_every_scenario() {
             sim_metrics_to_json(&out.metrics).to_string_pretty(),
             sim_metrics_to_json(&ref_metrics).to_string_pretty(),
             "{}: metrics JSON diverged from the legacy engine",
+            scenario.name
+        );
+    }
+}
+
+#[test]
+fn open_loop_session_is_byte_identical_to_frozen_aos_engine_on_every_scenario() {
+    // The open loop exercises the slot-engine paths the closed loop
+    // never reaches: denied refills idling slots, the idle free-list,
+    // and fill_empty revivals. The SoA engine must reproduce the frozen
+    // AoS oracle byte-for-byte there too — completions CSV, metrics
+    // JSON, and the arrival accounting.
+    for scenario in afd::sweep::scenarios::registry() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = scenario.spec.clone();
+        cfg.topology.batch_per_worker = 16;
+        let r = 2;
+        let target = 250;
+        // Modest rate + small queue: slots regularly go idle and revive.
+        let lambda = 0.2;
+        let queue = 32;
+
+        let out = Simulation::builder(&cfg, r)
+            .arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap())
+            .max_completions(Some(target))
+            .build()
+            .unwrap()
+            .run();
+        let (ref_metrics, ref_completions, ref_arrival) = ReferenceSession::build(
+            &cfg,
+            r,
+            BATCHES_IN_FLIGHT,
+            true,
+            target,
+            Box::new(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap()),
+            None,
+        )
+        .run();
+
+        assert_eq!(
+            completions_to_csv_string(&out.completions),
+            completions_to_csv_string(&ref_completions),
+            "{}: open-loop completions CSV diverged from the frozen AoS engine",
+            scenario.name
+        );
+        assert_eq!(
+            sim_metrics_to_json(&out.metrics).to_string_pretty(),
+            sim_metrics_to_json(&ref_metrics).to_string_pretty(),
+            "{}: open-loop metrics JSON diverged from the frozen AoS engine",
+            scenario.name
+        );
+        assert_eq!(
+            out.arrival, ref_arrival,
+            "{}: open-loop arrival stats diverged",
             scenario.name
         );
     }

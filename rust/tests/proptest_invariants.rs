@@ -4,16 +4,77 @@
 
 use afd::analysis::cycle_time::OperatingPoint;
 use afd::config::hardware::HardwareParams;
+use afd::config::workload::WorkloadSpec;
 use afd::coordinator::batcher::Batcher;
 use afd::coordinator::kv::{KvSlotManager, SlotState};
 use afd::coordinator::request_state::ServingRequest;
 use afd::coordinator::load::{BundleLoad, LoadSnapshot};
 use afd::coordinator::router::{Policy, Router};
+use afd::sim::session::{LengthStream, OpenLoopPoisson};
+use afd::sim::slots::SlotArray;
+use afd::stats::distributions::LengthDist;
 use afd::stats::rng::Pcg64;
+use afd::testkit::reference::ReferenceSlotArray;
 use afd::testkit::{forall, Gen};
+use afd::workload::generator::RequestGenerator;
 use afd::workload::request::RequestLengths;
 use afd::workload::stationary::StationaryLoad;
 use afd::workload::trace::Trace;
+
+/// The open-loop extension of the slot engine's
+/// `incremental_load_matches_direct_rescan` unit invariant (which is
+/// closed-loop only): under `OpenLoopPoisson` admission with a tiny
+/// queue — so refusals idle slots and `fill_empty` revives them — the
+/// SoA engine's cached `token_load`/`live` must match a direct O(B)
+/// rescan at every step, and the whole trajectory (aggregates *and*
+/// completion stream) must match the frozen AoS reference driven by an
+/// identically-seeded arrival process.
+#[test]
+fn prop_soa_cached_aggregates_match_rescan_and_aos_under_open_loop() {
+    forall(
+        "SoA open-loop cache == rescan == AoS reference",
+        40,
+        Gen::triple(
+            Gen::usize_range(1, 48),
+            Gen::u64_range(0, u64::MAX / 2),
+            Gen::f64_log_range(1e-3, 3.0),
+        ),
+        |&(batch, seed, lambda)| {
+            // Short lifetimes so 300 steps see many completions, idle
+            // transitions, and revivals.
+            let spec = WorkloadSpec::independent(
+                LengthDist::geometric_with_mean(8.0),
+                LengthDist::geometric_with_mean(5.0),
+            );
+            let stream = |tag: u64| -> Box<dyn LengthStream> {
+                Box::new(RequestGenerator::new(spec.clone(), seed ^ tag))
+            };
+            let mut soa = SlotArray::empty_from_stream(batch, stream(0));
+            let mut aos = ReferenceSlotArray::empty_from_stream(batch, stream(0));
+            let mut arr_soa = OpenLoopPoisson::new(lambda, 4, seed).unwrap();
+            let mut arr_aos = OpenLoopPoisson::new(lambda, 4, seed).unwrap();
+            let mut soa_completions = Vec::new();
+            let mut aos_completions = Vec::new();
+            for step in 1..=300u64 {
+                let now = step as f64;
+                // The engine's call pattern: revive idle slots at the
+                // lane-ready time, then advance at the delivery time.
+                soa.fill_empty(now, &mut arr_soa);
+                aos.fill_empty(now, &mut arr_aos);
+                soa.step_admission(now + 0.5, &mut arr_soa, &mut soa_completions);
+                aos.step_admission(now + 0.5, &mut arr_aos, &mut aos_completions);
+                let (tl, lv) = soa.debug_direct_totals();
+                if soa.token_load() != tl || soa.live() != lv {
+                    return false;
+                }
+                if soa.token_load() != aos.token_load() || soa.live() != aos.live() {
+                    return false;
+                }
+            }
+            soa_completions == aos_completions
+        },
+    );
+}
 
 #[test]
 fn prop_router_never_out_of_range() {

@@ -39,13 +39,19 @@ EXPECTED_HEADER = [
     "mean_queue_wait", "mean_queue_len",
     "bundles", "policy", "bundle",
     "imbalance", "idle_share", "realized_vs_eq1", "converged_r",
+    "cost_model",
 ]
 
 INT_COLS = {"r", "batch", "r_star_g", "sim_opt_r", "completed",
             "offered", "admitted", "rejected", "bundles", "converged_r"}
 # `bundle` is "agg" on aggregate rows and the bundle index on per-bundle
 # rows of fleet cells, so it stays a string.
-STR_COLS = {"scenario", "seed", "arrival", "policy", "bundle"}
+STR_COLS = {"scenario", "seed", "arrival", "policy", "bundle", "cost_model"}
+
+# Cost-model families emitted by rust/src/latency/cost.rs::CostSpec.
+# The CSV value is the parameterized *label* (e.g. "moe:0.15:2",
+# "blended:0.25"); the family is the part before the first ":".
+KNOWN_COST_MODELS = {"linear", "roofline", "moe", "blended"}
 
 
 def load_rows(path: str) -> list[dict]:
@@ -104,7 +110,7 @@ def groups_of(rows: list[dict]) -> dict[tuple, list[dict]]:
         if row["bundle"] != "agg":
             continue
         key = (row["scenario"], row["arrival"], row["batch"],
-               row["bundles"], row["policy"])
+               row["bundles"], row["policy"], row["cost_model"])
         out.setdefault(key, []).append(row)
     for cells in out.values():
         cells.sort(key=lambda c: c["r"])
@@ -119,12 +125,26 @@ def check(rows: list[dict]) -> None:
     grouped = groups_of(rows)
     if not grouped:
         raise SystemExit("error: no aggregate (bundle == 'agg') rows found")
-    for (scenario, arrival, batch, bundles, policy), cells in grouped.items():
+    # Cost-model column: every row names a known pricing surface, and the
+    # linearized theory columns stay positive finite under all of them.
+    for row in rows:
+        family = row["cost_model"].split(":", 1)[0]
+        if family not in KNOWN_COST_MODELS:
+            raise SystemExit(
+                f"error: unknown cost_model {row['cost_model']!r} "
+                f"(expected a family in {sorted(KNOWN_COST_MODELS)})"
+            )
+        if not (row["theory_thr_g"] > 0.0 and row["theory_thr_mf"] > 0.0):
+            raise SystemExit(
+                f"error: non-positive linearized theory columns for "
+                f"cost_model {row['cost_model']!r} at ({row['scenario']}, r={row['r']})"
+            )
+    for (scenario, arrival, batch, bundles, policy, cost), cells in grouped.items():
         rs = [c["r"] for c in cells]
         if len(set(rs)) != len(rs):
             raise SystemExit(
                 f"error: duplicate r values in group "
-                f"({scenario}, {arrival}, B={batch}, {bundles}x{policy}): {rs}"
+                f"({scenario}, {arrival}, B={batch}, {bundles}x{policy}, {cost}): {rs}"
             )
         for c in cells:
             if c["arrival"] == "open-poisson" and c["lambda"] <= 0.0:
@@ -148,7 +168,8 @@ def check(rows: list[dict]) -> None:
     print(
         f"ok: {len(rows)} rows ({n_bundle_rows} per-bundle) in {len(grouped)} group(s); "
         f"arrivals: {sorted({r['arrival'] for r in rows})}; "
-        f"fleets: {sorted({(r['bundles'], r['policy']) for r in rows})}"
+        f"fleets: {sorted({(r['bundles'], r['policy']) for r in rows})}; "
+        f"cost models: {sorted({r['cost_model'] for r in rows})}"
     )
 
 
@@ -162,9 +183,12 @@ def plot(rows: list[dict], out_dir: str) -> None:
     written = []
 
     # Fig. 3 style: throughput vs r per group, theory overlaid.
-    for (scenario, arrival, batch, bundles, policy), cells in grouped.items():
+    for (scenario, arrival, batch, bundles, policy, cost), cells in grouped.items():
         fleet = "" if bundles == 1 else f", {bundles}x {policy}"
         fleet_slug = "" if bundles == 1 else f"_{bundles}x{slug(policy)}"
+        if cost != "linear":
+            fleet = f"{fleet}, {cost}"
+            fleet_slug = f"{fleet_slug}_{slug(cost)}"
         rs = [c["r"] for c in cells]
         fig, ax = plt.subplots(figsize=(6.0, 4.0))
         ax.plot(rs, [c["sim_delivered"] for c in cells],
@@ -226,8 +250,10 @@ def plot(rows: list[dict], out_dir: str) -> None:
 
     # Fig. 4 style: theory vs simulation optima across groups.
     labels, theory, sim = [], [], []
-    for (scenario, arrival, batch, bundles, policy), cells in sorted(grouped.items()):
+    for (scenario, arrival, batch, bundles, policy, cost), cells in sorted(grouped.items()):
         fleet = "" if bundles == 1 else f", {bundles}x{policy}"
+        if cost != "linear":
+            fleet = f"{fleet}, {cost}"
         labels.append(f"{scenario}\n{arrival}, B={batch}{fleet}")
         theory.append(cells[0]["r_star_g"])
         sim.append(cells[0]["sim_opt_r"])

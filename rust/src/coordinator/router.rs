@@ -21,6 +21,15 @@
 //! * [`Policy::LeastTokenLoad`] — smallest current token load (the
 //!   universal-balancing-principle analogue; strongest variance
 //!   reduction).
+//! * [`Policy::KvHeadroom`] — most remaining KV capacity: diverts
+//!   arrivals away from capacity-constrained units that queue-based
+//!   policies would still feed (a bundle can have the shortest queue
+//!   precisely *because* its KV pool is nearly full and admission has
+//!   stalled). Units without a hard KV bound all report `u64::MAX`
+//!   headroom, so the policy degrades to JSQ's (queued, token-load)
+//!   tie-break there.
+
+use std::cmp::Reverse;
 
 use crate::coordinator::load::BundleLoad;
 use crate::error::{AfdError, Result};
@@ -31,6 +40,7 @@ pub enum Policy {
     RoundRobin,
     JoinShortestQueue,
     LeastTokenLoad,
+    KvHeadroom,
 }
 
 impl Policy {
@@ -39,6 +49,7 @@ impl Policy {
             Policy::RoundRobin => "round-robin",
             Policy::JoinShortestQueue => "jsq",
             Policy::LeastTokenLoad => "least-token-load",
+            Policy::KvHeadroom => "kv-headroom",
         }
     }
 
@@ -48,8 +59,9 @@ impl Policy {
             "rr" | "round-robin" => Ok(Policy::RoundRobin),
             "jsq" | "join-shortest-queue" => Ok(Policy::JoinShortestQueue),
             "ltl" | "least-token-load" => Ok(Policy::LeastTokenLoad),
+            "kv" | "kv-headroom" => Ok(Policy::KvHeadroom),
             other => Err(AfdError::config(format!(
-                "unknown routing policy {other:?}; expected rr|jsq|ltl"
+                "unknown routing policy {other:?}; expected rr|jsq|ltl|kv"
             ))),
         }
     }
@@ -92,6 +104,20 @@ impl Router {
                 (0..units.len())
                     .min_by_key(|&i| {
                         (units[i].token_load() + 1000 * units[i].queued() as u64, i)
+                    })
+                    .unwrap()
+            }
+            Policy::KvHeadroom => {
+                // Most KV headroom wins (least-headroom-avoiding);
+                // unbounded units tie and fall back to the JSQ ordering.
+                (0..units.len())
+                    .min_by_key(|&i| {
+                        (
+                            Reverse(units[i].kv_headroom()),
+                            units[i].queued(),
+                            units[i].token_load(),
+                            i,
+                        )
                     })
                     .unwrap()
             }
@@ -176,9 +202,50 @@ mod tests {
         assert_eq!(Policy::RoundRobin.name(), "round-robin");
         assert_eq!(Policy::JoinShortestQueue.name(), "jsq");
         assert_eq!(Policy::LeastTokenLoad.name(), "least-token-load");
+        assert_eq!(Policy::KvHeadroom.name(), "kv-headroom");
         assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
         assert_eq!(Policy::parse("jsq").unwrap(), Policy::JoinShortestQueue);
         assert_eq!(Policy::parse("least-token-load").unwrap(), Policy::LeastTokenLoad);
+        assert_eq!(Policy::parse("kv").unwrap(), Policy::KvHeadroom);
+        assert_eq!(Policy::parse("kv-headroom").unwrap(), Policy::KvHeadroom);
         assert!(Policy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn kv_headroom_diverts_from_capacity_constrained_units_where_jsq_does_not() {
+        // Bundle 0 is KV-starved: admission stalled, so its queue is the
+        // *shortest* — JSQ keeps feeding it. KvHeadroom reads the actual
+        // remaining capacity and diverts to bundle 1.
+        let units = vec![
+            LoadSnapshot {
+                queued: 1,
+                token_load: 400,
+                live_slots: 8,
+                free_slots: 0,
+                kv_headroom: 12,
+            },
+            LoadSnapshot {
+                queued: 3,
+                token_load: 900,
+                live_slots: 5,
+                free_slots: 3,
+                kv_headroom: 50_000,
+            },
+        ];
+        let jsq = Router::new(Policy::JoinShortestQueue).route(&units);
+        let kv = Router::new(Policy::KvHeadroom).route(&units);
+        assert_eq!(jsq, 0, "JSQ feeds the stalled (short-queue) bundle");
+        assert_eq!(kv, 1, "KvHeadroom diverts to the bundle with capacity");
+    }
+
+    #[test]
+    fn kv_headroom_falls_back_to_jsq_ordering_on_unbounded_units() {
+        // All-simulator fleets report unbounded headroom: the policy must
+        // still be load-aware, not degenerate to index 0.
+        let mut r = Router::new(Policy::KvHeadroom);
+        assert_eq!(r.route(&loads(&[(3, 0), (1, 999), (2, 0)])), 1);
+        assert_eq!(r.route(&loads(&[(1, 50), (1, 10)])), 1);
+        // Exact ties resolve to the lowest index (deterministic).
+        assert_eq!(r.route(&loads(&[(2, 7), (2, 7)])), 0);
     }
 }

@@ -1,0 +1,784 @@
+//! Pluggable phase-cost models — the hardware surface of the engine.
+//!
+//! The paper's §3.1 timing is linear: `t(x) = alpha x + beta` for each of
+//! the Attention / FFN / communication phases, and until this module the
+//! simulator had those lines *fused in*: `Simulation::step()` read
+//! `cfg.hardware` directly and cached a fixed `t_F(rB)` at build time, so
+//! every bundle in every simulation shared one linear surface. Real AFD
+//! deployments diverge from that surface in exactly the ways related work
+//! documents: MoE FFN time depends on expert/batch *imbalance*, not just
+//! `rB` ("Revealing the Challenges of Attention-FFN Disaggregation for
+//! Modern MoE Models and Hardware Systems"), and attention and FFN
+//! increasingly run on *different hardware classes* ("Efficient
+//! Heterogeneous Large Language Model Decoding with Model-Attention
+//! Disaggregation").
+//!
+//! [`CostModel`] is the object-safe seam those scenarios plug into. The
+//! engine prices every phase through the trait; the analysis layer keeps
+//! computing `r*_G` because every model can [`CostModel::linearized`]
+//! itself around an operating point, handing back the [`PhaseModels`]
+//! (equivalently, the six [`HardwareParams`] coefficients) that Eq. 8–12
+//! consume.
+//!
+//! Shipped implementations:
+//!
+//! * [`LinearCost`] — wraps [`PhaseModels`]; **byte-identical** to the
+//!   pre-redesign engine (same float expressions, same evaluation order;
+//!   asserted by the session/cluster goldens in
+//!   `tests/integration_session.rs` / `tests/integration_cluster.rs`).
+//! * [`RooflineCost`] — first-principles hardware profile via
+//!   [`crate::latency::roofline::derive_slopes`]: bandwidth-bound linear
+//!   attention, and an FFN that pays `max(compute, weight-load)` — flat
+//!   below the roofline saturation batch, linear above it.
+//! * [`MoeCost`] — FFN time inflated by a sampled expert-imbalance factor
+//!   (two-point hot-expert law) with *declared moments*, so the
+//!   linearization (and with it every theory column) stays meaningful.
+//! * [`BlendedCost`] — convex combination of two models, for ablating
+//!   how far the optimum moves between cost surfaces.
+//!
+//! [`CostSpec`] is the `Clone + Copy` configuration-level description
+//! (CLI selectors, sweep axes, per-bundle cluster specs) that
+//! [`CostSpec::build`]s the trait object next to the engine that uses it.
+
+use std::cell::Cell;
+
+use crate::config::hardware::HardwareParams;
+use crate::error::{AfdError, Result};
+use crate::latency::model::{LinearLatency, PhaseModels};
+use crate::latency::roofline::{
+    derive_slopes, ffn_saturation_batch, ArchitectureSpec, HardwareProfile,
+};
+
+/// The operating point a nonlinear cost model is linearized around: the
+/// engine's nominal per-step driving variables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostPoint {
+    /// Nominal per-worker token load `B * theta` (the mean of §3.3's
+    /// `T_j`).
+    pub token_load: f64,
+    /// Aggregated batch `r * B` (the FFN/comm driving variable).
+    pub agg_batch: f64,
+}
+
+impl CostPoint {
+    pub fn new(token_load: f64, agg_batch: f64) -> Self {
+        Self { token_load, agg_batch }
+    }
+
+    /// The nominal operating point of an `(r, B)` bundle under stationary
+    /// per-slot load `theta`.
+    pub fn nominal(r: usize, batch: usize, theta: f64) -> Self {
+        Self { token_load: batch as f64 * theta, agg_batch: (r * batch) as f64 }
+    }
+}
+
+/// Object-safe phase-pricing surface the engine steps through.
+///
+/// Implementations may keep interior sampling state (e.g. [`MoeCost`]'s
+/// imbalance draws); the engine calls [`CostModel::ffn`] exactly once per
+/// lane-step, so per-call draws are per-step draws. All three phase
+/// methods must be non-decreasing in their driving variable *under
+/// coupled sampling* (same internal draw sequence — the monotonicity
+/// property `tests/proptest_invariants.rs` checks for every shipped
+/// model).
+pub trait CostModel {
+    /// Attention latency for a worker at `token_load` KV tokens across
+    /// `live` occupied slots. The linear models ignore `live`; occupancy-
+    /// sensitive models (paged-KV fragmentation, per-slot launch
+    /// overheads) can use it.
+    fn attention(&self, token_load: f64, live: usize) -> f64;
+
+    /// FFN latency for aggregated batch `agg_batch` (the paper's `rB`).
+    fn ffn(&self, agg_batch: f64) -> f64;
+
+    /// A<->F round-trip communication latency for `agg_batch`.
+    fn comm(&self, agg_batch: f64) -> f64;
+
+    /// Local linearization around `at`: the `t = alpha x + beta` surface
+    /// whose slopes the provisioning analysis (`r*_mf` / `r*_G`)
+    /// consumes. Must be *exact* at the operating point
+    /// (`linearized(at).ffn.eval(at.agg_batch) == ffn(at.agg_batch)` in
+    /// expectation) and must have strictly positive attention/FFN slopes
+    /// so [`HardwareParams::validate`] accepts the result. For
+    /// [`LinearCost`] this returns the wrapped models verbatim,
+    /// independent of `at`.
+    fn linearized(&self, at: CostPoint) -> PhaseModels;
+
+    /// Stable identifier ("linear" / "roofline" / "moe" / "blended").
+    fn name(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------- LinearCost
+
+/// The paper's §3.1 linear surface — today's engine, behind the trait.
+///
+/// Byte-identity contract: `attention`/`ffn`/`comm` evaluate the *same*
+/// float expression (`alpha.mul_add`-free `alpha * x + beta`) on the same
+/// coefficients as [`HardwareParams::t_attention`] etc., so a session
+/// priced through `LinearCost::from_hardware(&cfg.hardware)` reproduces
+/// the pre-redesign engine bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearCost {
+    models: PhaseModels,
+}
+
+impl LinearCost {
+    pub fn new(models: PhaseModels) -> Self {
+        Self { models }
+    }
+
+    pub fn from_hardware(hw: &HardwareParams) -> Self {
+        Self { models: PhaseModels::from_hardware(hw) }
+    }
+
+    pub fn models(&self) -> PhaseModels {
+        self.models
+    }
+}
+
+impl From<HardwareParams> for LinearCost {
+    fn from(hw: HardwareParams) -> Self {
+        Self::from_hardware(&hw)
+    }
+}
+
+impl CostModel for LinearCost {
+    fn attention(&self, token_load: f64, _live: usize) -> f64 {
+        self.models.attention.eval(token_load)
+    }
+
+    fn ffn(&self, agg_batch: f64) -> f64 {
+        self.models.ffn.eval(agg_batch)
+    }
+
+    fn comm(&self, agg_batch: f64) -> f64 {
+        self.models.comm.eval(agg_batch)
+    }
+
+    fn linearized(&self, _at: CostPoint) -> PhaseModels {
+        self.models
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+// ----------------------------------------------------------- RooflineCost
+
+/// First-principles roofline surface (Appendix B slopes).
+///
+/// * Attention stays bandwidth-bound linear (Eq. 19).
+/// * The FFN pays `beta_F + max(alpha_F n, W)` where `W` is the
+///   weight-load floor: below the roofline saturation batch the step is
+///   memory-bound on reading expert weights (time independent of `n`),
+///   above it compute-bound linear — the `max(flops/peak, bytes/bw)`
+///   roofline shape, continuous at the saturation batch.
+/// * Communication stays linear in `n` (Eq. 31).
+///
+/// Slopes come from [`derive_slopes`] in seconds and are rescaled into
+/// the engine's "cycles" unit so that the attention slope matches the
+/// calibrated `hw.alpha_a` — roofline and linear sessions then live on
+/// comparable clocks and differ only in *shape*, not unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RooflineCost {
+    attention: LinearLatency,
+    ffn_slope: f64,
+    ffn_beta: f64,
+    /// Weight-load floor `W` (cycles): `ffn(n) = ffn_beta + max(ffn_slope
+    /// * n, W)`.
+    ffn_floor: f64,
+    comm: LinearLatency,
+    /// Aggregated batch where compute overtakes the weight-load floor.
+    saturation_batch: f64,
+}
+
+impl RooflineCost {
+    /// Derive from an explicit hardware profile + architecture, using the
+    /// calibrated `hw` for the fixed overheads (betas) and the time-unit
+    /// anchor (attention slope).
+    pub fn from_profile(
+        profile: &HardwareProfile,
+        arch: &ArchitectureSpec,
+        hw: &HardwareParams,
+    ) -> Self {
+        let slopes = derive_slopes(profile, arch);
+        // Anchor the time unit: seconds -> cycles so alpha_A matches the
+        // calibrated coefficient exactly.
+        let scale = hw.alpha_a / slopes.alpha_a;
+        let ffn_slope = slopes.alpha_f * scale;
+        let comm_slope = slopes.alpha_c * scale;
+        // Weight bytes per expert: three H x d_expert matrices, INT8.
+        let weight_bytes = 3.0 * arch.hidden * arch.d_expert;
+        let saturation_batch = ffn_saturation_batch(profile, arch, weight_bytes).max(1.0);
+        Self {
+            attention: LinearLatency::new(hw.alpha_a, hw.beta_a),
+            ffn_slope,
+            ffn_beta: hw.beta_f,
+            // Continuity at the ridge: compute time equals the floor
+            // exactly at the saturation batch.
+            ffn_floor: ffn_slope * saturation_batch,
+            comm: LinearLatency::new(comm_slope, hw.beta_c),
+            saturation_batch,
+        }
+    }
+
+    /// The canonical 910C-class profile
+    /// ([`HardwareProfile::npu_910c_class`], the same constants the
+    /// roofline consistency tests use) on the DeepSeek-V3 architecture,
+    /// anchored to `hw`.
+    pub fn npu_910c_class(hw: &HardwareParams) -> Self {
+        Self::from_profile(
+            &HardwareProfile::npu_910c_class(),
+            &ArchitectureSpec::deepseek_v3(),
+            hw,
+        )
+    }
+
+    /// Aggregated batch at which the FFN leaves the weight-load floor.
+    pub fn saturation_batch(&self) -> f64 {
+        self.saturation_batch
+    }
+}
+
+impl CostModel for RooflineCost {
+    fn attention(&self, token_load: f64, _live: usize) -> f64 {
+        self.attention.eval(token_load)
+    }
+
+    fn ffn(&self, agg_batch: f64) -> f64 {
+        self.ffn_beta + (self.ffn_slope * agg_batch).max(self.ffn_floor)
+    }
+
+    fn comm(&self, agg_batch: f64) -> f64 {
+        self.comm.eval(agg_batch)
+    }
+
+    fn linearized(&self, at: CostPoint) -> PhaseModels {
+        // Tangent above the ridge; below it, a slope-preserving secant
+        // through the operating point (slope 0 would be rejected by
+        // HardwareParams::validate and would make r*_G degenerate).
+        let ffn = if self.ffn_slope * at.agg_batch >= self.ffn_floor {
+            LinearLatency::new(self.ffn_slope, self.ffn_beta)
+        } else {
+            LinearLatency::new(
+                self.ffn_slope,
+                self.ffn_beta + self.ffn_floor - self.ffn_slope * at.agg_batch,
+            )
+        };
+        PhaseModels { attention: self.attention, ffn, comm: self.comm }
+    }
+
+    fn name(&self) -> &'static str {
+        "roofline"
+    }
+}
+
+// ---------------------------------------------------------------- MoeCost
+
+/// MoE expert-imbalance cost: the FFN time of a step is the linear base
+/// inflated by a sampled hot-expert factor.
+///
+/// Model: with probability `hot_prob` a step hits an expert hotspot and
+/// the FFN pays `hot_factor` times its balanced cost (one overloaded
+/// expert serializes the layer); otherwise the balanced linear cost. The
+/// draw is per-FFN-invocation (the engine calls [`CostModel::ffn`] once
+/// per lane-step) from an interior SplitMix64 stream, so sessions stay
+/// deterministic per seed.
+///
+/// **Declared moments.** `E[factor] = 1 + hot_prob (hot_factor - 1)`
+/// ([`MoeCost::mean_factor`]); [`CostModel::linearized`] scales the FFN
+/// line by exactly that mean, so theory columns price the *expected*
+/// surface and `r*_G` stays a meaningful comparison target for the
+/// jittered simulation.
+pub struct MoeCost {
+    base: PhaseModels,
+    hot_prob: f64,
+    hot_factor: f64,
+    /// SplitMix64 state behind `&self` (the trait surface is immutable;
+    /// the engine owns the model, so no sharing).
+    state: Cell<u64>,
+}
+
+/// Shared range checks for MoE imbalance parameters (`MoeCost::new` and
+/// `CostSpec::validate` must agree, or a validated spec could panic at
+/// build time).
+fn validate_moe_params(hot_prob: f64, hot_factor: f64) -> Result<()> {
+    if !(0.0..=1.0).contains(&hot_prob) || !hot_prob.is_finite() {
+        return Err(AfdError::config(format!(
+            "moe hot_prob must be in [0, 1], got {hot_prob}"
+        )));
+    }
+    if !(hot_factor >= 1.0 && hot_factor.is_finite()) {
+        return Err(AfdError::config(format!(
+            "moe hot_factor must be >= 1 and finite, got {hot_factor}"
+        )));
+    }
+    Ok(())
+}
+
+impl MoeCost {
+    /// `hot_prob` in [0, 1]; `hot_factor >= 1`.
+    pub fn new(base: PhaseModels, hot_prob: f64, hot_factor: f64, seed: u64) -> Result<Self> {
+        validate_moe_params(hot_prob, hot_factor)?;
+        Ok(Self { base, hot_prob, hot_factor, state: Cell::new(seed ^ 0x9E37_79B9_7F4A_7C15) })
+    }
+
+    /// Expected FFN inflation factor.
+    pub fn mean_factor(&self) -> f64 {
+        1.0 + self.hot_prob * (self.hot_factor - 1.0)
+    }
+
+    /// One SplitMix64 output, advancing the interior state.
+    fn next_u64(&self) -> u64 {
+        let mut z = self.state.get().wrapping_add(0x9E37_79B9_7F4A_7C15);
+        self.state.set(z);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// The step's sampled inflation factor.
+    fn draw_factor(&self) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.hot_prob {
+            self.hot_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+impl CostModel for MoeCost {
+    fn attention(&self, token_load: f64, _live: usize) -> f64 {
+        self.base.attention.eval(token_load)
+    }
+
+    fn ffn(&self, agg_batch: f64) -> f64 {
+        self.draw_factor() * self.base.ffn.eval(agg_batch)
+    }
+
+    fn comm(&self, agg_batch: f64) -> f64 {
+        self.base.comm.eval(agg_batch)
+    }
+
+    fn linearized(&self, _at: CostPoint) -> PhaseModels {
+        let m = self.mean_factor();
+        PhaseModels {
+            attention: self.base.attention,
+            ffn: LinearLatency::new(self.base.ffn.alpha * m, self.base.ffn.beta * m),
+            comm: self.base.comm,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "moe"
+    }
+}
+
+// ------------------------------------------------------------ BlendedCost
+
+/// Convex blend of two cost models, `weight` on `a` (ablation harness:
+/// interpolate between surfaces and watch the optimum move).
+pub struct BlendedCost {
+    a: Box<dyn CostModel>,
+    b: Box<dyn CostModel>,
+    weight: f64,
+}
+
+impl BlendedCost {
+    /// `weight` in [0, 1]: 1 is pure `a`, 0 pure `b`.
+    pub fn new(a: Box<dyn CostModel>, b: Box<dyn CostModel>, weight: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&weight) || !weight.is_finite() {
+            return Err(AfdError::config(format!(
+                "blend weight must be in [0, 1], got {weight}"
+            )));
+        }
+        Ok(Self { a, b, weight })
+    }
+
+    fn mix(&self, x: f64, y: f64) -> f64 {
+        self.weight * x + (1.0 - self.weight) * y
+    }
+}
+
+impl CostModel for BlendedCost {
+    fn attention(&self, token_load: f64, live: usize) -> f64 {
+        self.mix(self.a.attention(token_load, live), self.b.attention(token_load, live))
+    }
+
+    fn ffn(&self, agg_batch: f64) -> f64 {
+        self.mix(self.a.ffn(agg_batch), self.b.ffn(agg_batch))
+    }
+
+    fn comm(&self, agg_batch: f64) -> f64 {
+        self.mix(self.a.comm(agg_batch), self.b.comm(agg_batch))
+    }
+
+    fn linearized(&self, at: CostPoint) -> PhaseModels {
+        let la = self.a.linearized(at);
+        let lb = self.b.linearized(at);
+        let blend = |x: LinearLatency, y: LinearLatency| {
+            LinearLatency::new(self.mix(x.alpha, y.alpha), self.mix(x.beta, y.beta))
+        };
+        PhaseModels {
+            attention: blend(la.attention, lb.attention),
+            ffn: blend(la.ffn, lb.ffn),
+            comm: blend(la.comm, lb.comm),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "blended"
+    }
+}
+
+// --------------------------------------------------------------- CostSpec
+
+/// Configuration-level description of a cost model: `Copy` data that
+/// travels through CLI flags, sweep axes, and per-bundle cluster specs,
+/// and [`CostSpec::build`]s the trait object where the engine needs it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CostSpec {
+    /// The paper's calibrated linear surface (`cfg.hardware`) —
+    /// byte-identical to the pre-redesign engine.
+    #[default]
+    Linear,
+    /// First-principles 910C-class roofline on DeepSeek-V3, anchored to
+    /// the config's calibrated attention slope and betas.
+    Roofline,
+    /// MoE hot-expert inflation over the linear base.
+    Moe { hot_prob: f64, hot_factor: f64 },
+    /// Convex blend of linear and roofline at `weight` on linear.
+    Blended { weight: f64 },
+}
+
+impl CostSpec {
+    /// Default MoE parameters: ~15% of steps hit a 2x hotspot (mean
+    /// inflation 1.15 — the order of the stalls the AFD-for-MoE
+    /// measurement papers report).
+    pub fn moe_default() -> Self {
+        CostSpec::Moe { hot_prob: 0.15, hot_factor: 2.0 }
+    }
+
+    /// Coarse model family ("linear" / "roofline" / "moe" / "blended").
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostSpec::Linear => "linear",
+            CostSpec::Roofline => "roofline",
+            CostSpec::Moe { .. } => "moe",
+            CostSpec::Blended { .. } => "blended",
+        }
+    }
+
+    /// Parameterized identifier — the coarse name for parameter-free
+    /// models, `name:params` otherwise (`moe:0.15:2`, `blended:0.25`).
+    /// This is the CSV/JSON `cost_model` value and the sweep-grid group
+    /// key, so one grid can ablate several parameterizations of the
+    /// same family (`--cost blended:0.25,blended:0.75`). Round-trips
+    /// through [`CostSpec::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            CostSpec::Linear => "linear".into(),
+            CostSpec::Roofline => "roofline".into(),
+            CostSpec::Moe { hot_prob, hot_factor } => format!("moe:{hot_prob}:{hot_factor}"),
+            CostSpec::Blended { weight } => format!("blended:{weight}"),
+        }
+    }
+
+    /// Parse a CLI selector: `linear` | `roofline` | `moe` |
+    /// `moe:<hot_prob>:<hot_factor>` | `blended` | `blended:<weight>`.
+    pub fn parse(selector: &str) -> Result<CostSpec> {
+        let sel = selector.trim();
+        let mut parts = sel.split(':');
+        let head = parts.next().unwrap_or_default();
+        let rest: Vec<&str> = parts.collect();
+        let parse_f64 = |s: &str, what: &str| -> Result<f64> {
+            s.trim().parse::<f64>().map_err(|_| {
+                AfdError::config(format!("cost model {sel:?}: {what} {s:?} is not a number"))
+            })
+        };
+        let spec = match (head, rest.as_slice()) {
+            ("linear", []) => CostSpec::Linear,
+            ("roofline", []) => CostSpec::Roofline,
+            ("moe", []) => CostSpec::moe_default(),
+            ("moe", [p, f]) => CostSpec::Moe {
+                hot_prob: parse_f64(p, "hot_prob")?,
+                hot_factor: parse_f64(f, "hot_factor")?,
+            },
+            ("blended", []) => CostSpec::Blended { weight: 0.5 },
+            ("blended", [w]) => CostSpec::Blended { weight: parse_f64(w, "weight")? },
+            _ => {
+                return Err(AfdError::config(format!(
+                    "unknown cost model {sel:?}; expected \
+                     linear|roofline|moe[:p:f]|blended[:w]"
+                )));
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            CostSpec::Linear | CostSpec::Roofline => Ok(()),
+            CostSpec::Moe { hot_prob, hot_factor } => {
+                validate_moe_params(hot_prob, hot_factor)
+            }
+            CostSpec::Blended { weight } => {
+                if (0.0..=1.0).contains(&weight) && weight.is_finite() {
+                    Ok(())
+                } else {
+                    Err(AfdError::config(format!(
+                        "blend weight must be in [0, 1], got {weight}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Build the model against calibrated hardware. `seed` drives
+    /// stochastic models (MoE imbalance draws); deterministic models
+    /// ignore it.
+    pub fn build(&self, hw: &HardwareParams, seed: u64) -> Box<dyn CostModel> {
+        match *self {
+            CostSpec::Linear => Box::new(LinearCost::from_hardware(hw)),
+            CostSpec::Roofline => Box::new(RooflineCost::npu_910c_class(hw)),
+            CostSpec::Moe { hot_prob, hot_factor } => Box::new(
+                MoeCost::new(PhaseModels::from_hardware(hw), hot_prob, hot_factor, seed)
+                    .expect("validated spec"),
+            ),
+            CostSpec::Blended { weight } => Box::new(
+                BlendedCost::new(
+                    Box::new(LinearCost::from_hardware(hw)),
+                    Box::new(RooflineCost::npu_910c_class(hw)),
+                    weight,
+                )
+                .expect("validated spec"),
+            ),
+        }
+    }
+
+    /// Linearized [`HardwareParams`] at `at` — the theory-column path:
+    /// build (seed-independent linearization), linearize, convert.
+    pub fn linearized_hardware(&self, hw: &HardwareParams, at: CostPoint) -> HardwareParams {
+        self.build(hw, 0).linearized(at).to_hardware()
+    }
+
+    /// Every shipped spec, for registry-style tests and ablations.
+    pub fn all() -> Vec<CostSpec> {
+        vec![
+            CostSpec::Linear,
+            CostSpec::Roofline,
+            CostSpec::moe_default(),
+            CostSpec::Blended { weight: 0.5 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HardwareParams {
+        HardwareParams::paper_table3()
+    }
+
+    #[test]
+    fn linear_cost_matches_hardware_bit_for_bit() {
+        let hw = hw();
+        let cost = LinearCost::from_hardware(&hw);
+        for x in [0.0, 1.0, 153_344.0, 2048.0, 1e7] {
+            assert_eq!(cost.attention(x, 7).to_bits(), hw.t_attention(x).to_bits());
+            assert_eq!(cost.ffn(x).to_bits(), hw.t_ffn(x).to_bits());
+            assert_eq!(cost.comm(x).to_bits(), hw.t_comm(x).to_bits());
+        }
+        assert_eq!(cost.name(), "linear");
+    }
+
+    #[test]
+    fn linear_cost_linearization_roundtrips_hardware_exactly() {
+        let hw = hw();
+        let cost = LinearCost::from_hardware(&hw);
+        for at in [CostPoint::new(0.0, 0.0), CostPoint::nominal(8, 256, 599.0)] {
+            let back = cost.linearized(at).to_hardware();
+            assert_eq!(back, hw, "linearization must be the identity for LinearCost");
+        }
+    }
+
+    #[test]
+    fn roofline_ffn_has_weight_load_floor_then_linear_growth() {
+        let cost = RooflineCost::npu_910c_class(&hw());
+        let sat = cost.saturation_batch();
+        assert!(sat > 1.0, "saturation batch {sat}");
+        // Flat (floor-bound) below saturation.
+        let lo = cost.ffn(sat / 4.0);
+        let lo2 = cost.ffn(sat / 2.0);
+        assert_eq!(lo.to_bits(), lo2.to_bits(), "below the ridge the FFN is weight-bound");
+        // Linear above.
+        let hi = cost.ffn(2.0 * sat);
+        let hi2 = cost.ffn(4.0 * sat);
+        assert!(hi2 > hi && hi > lo);
+        // Continuity at the ridge.
+        let eps = 1e-6 * sat;
+        assert!((cost.ffn(sat - eps) - cost.ffn(sat + eps)).abs() < 1e-6 * cost.ffn(sat));
+    }
+
+    #[test]
+    fn roofline_linearization_is_exact_at_the_operating_point_and_validates() {
+        let cost = RooflineCost::npu_910c_class(&hw());
+        let sat = cost.saturation_batch();
+        for agg in [sat / 3.0, sat, 3.0 * sat] {
+            let at = CostPoint::new(256.0 * 599.0, agg);
+            let lin = cost.linearized(at);
+            assert!(
+                (lin.ffn.eval(agg) - cost.ffn(agg)).abs() < 1e-9 * cost.ffn(agg),
+                "agg {agg}: linearization not exact"
+            );
+            lin.to_hardware().validate().unwrap();
+        }
+        // The attention surface is anchored to the calibrated slope.
+        let lin = cost.linearized(CostPoint::new(1000.0, 2048.0));
+        assert_eq!(lin.attention.alpha.to_bits(), hw().alpha_a.to_bits());
+    }
+
+    #[test]
+    fn moe_cost_inflates_ffn_with_declared_mean() {
+        let base = PhaseModels::from_hardware(&hw());
+        let moe = MoeCost::new(base, 0.25, 3.0, 42).unwrap();
+        assert!((moe.mean_factor() - 1.5).abs() < 1e-12);
+        // Empirical mean factor over many draws approaches the declared
+        // moment (SplitMix64 is well-distributed).
+        let n = 20_000;
+        let base_ffn = base.ffn.eval(2048.0);
+        let mean = (0..n).map(|_| moe.ffn(2048.0)).sum::<f64>() / n as f64 / base_ffn;
+        assert!((mean / moe.mean_factor() - 1.0).abs() < 0.05, "empirical {mean}");
+        // Every draw is either balanced or the hot factor.
+        let y = moe.ffn(2048.0);
+        assert!(
+            (y - base_ffn).abs() < 1e-9 || (y - 3.0 * base_ffn).abs() < 1e-9,
+            "unexpected factor: {}",
+            y / base_ffn
+        );
+        // Linearized FFN carries the mean inflation; attention untouched.
+        let lin = moe.linearized(CostPoint::new(0.0, 0.0));
+        assert_eq!(lin.attention, base.attention);
+        assert!((lin.ffn.alpha / base.ffn.alpha - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moe_cost_is_deterministic_per_seed() {
+        let base = PhaseModels::from_hardware(&hw());
+        let draws = |seed: u64| {
+            let moe = MoeCost::new(base, 0.3, 2.0, seed).unwrap();
+            (0..64).map(|_| moe.ffn(512.0).to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(draws(7), draws(7));
+        assert_ne!(draws(7), draws(8));
+    }
+
+    #[test]
+    fn moe_cost_rejects_bad_parameters() {
+        let base = PhaseModels::from_hardware(&hw());
+        assert!(MoeCost::new(base, -0.1, 2.0, 1).is_err());
+        assert!(MoeCost::new(base, 1.5, 2.0, 1).is_err());
+        assert!(MoeCost::new(base, 0.5, 0.5, 1).is_err());
+        assert!(MoeCost::new(base, 0.5, f64::NAN, 1).is_err());
+    }
+
+    #[test]
+    fn blended_cost_interpolates_between_endpoints() {
+        let hw = hw();
+        let lin = LinearCost::from_hardware(&hw);
+        let roof = RooflineCost::npu_910c_class(&hw);
+        let blend = BlendedCost::new(
+            Box::new(lin),
+            Box::new(roof),
+            0.25,
+        )
+        .unwrap();
+        let n = 2048.0;
+        let want = 0.25 * lin.ffn(n) + 0.75 * roof.ffn(n);
+        assert!((blend.ffn(n) - want).abs() < 1e-9);
+        // Weight 1 degenerates to the first model.
+        let pure = BlendedCost::new(
+            Box::new(LinearCost::from_hardware(&hw)),
+            Box::new(RooflineCost::npu_910c_class(&hw)),
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(pure.ffn(n).to_bits(), lin.ffn(n).to_bits());
+        assert!(BlendedCost::new(
+            Box::new(LinearCost::from_hardware(&hw)),
+            Box::new(RooflineCost::npu_910c_class(&hw)),
+            1.5,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cost_spec_parse_build_and_names() {
+        assert_eq!(CostSpec::parse("linear").unwrap(), CostSpec::Linear);
+        assert_eq!(CostSpec::parse(" roofline ").unwrap(), CostSpec::Roofline);
+        assert_eq!(CostSpec::parse("moe").unwrap(), CostSpec::moe_default());
+        assert_eq!(
+            CostSpec::parse("moe:0.2:4").unwrap(),
+            CostSpec::Moe { hot_prob: 0.2, hot_factor: 4.0 }
+        );
+        assert_eq!(
+            CostSpec::parse("blended:0.75").unwrap(),
+            CostSpec::Blended { weight: 0.75 }
+        );
+        assert!(CostSpec::parse("bogus").is_err());
+        assert!(CostSpec::parse("moe:2:1").is_err());
+        assert!(CostSpec::parse("moe:0.2").is_err());
+        assert!(CostSpec::parse("blended:7").is_err());
+        let hw = hw();
+        for spec in CostSpec::all() {
+            spec.validate().unwrap();
+            let model = spec.build(&hw, 11);
+            assert_eq!(model.name(), spec.name());
+            assert!(model.ffn(1024.0) > 0.0);
+            assert!(model.attention(1000.0, 4) > 0.0);
+            assert!(model.comm(1024.0) >= 0.0);
+            model
+                .linearized(CostPoint::nominal(8, 256, 599.0))
+                .to_hardware()
+                .validate()
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn cost_spec_labels_are_parameterized_and_roundtrip_through_parse() {
+        assert_eq!(CostSpec::Linear.label(), "linear");
+        assert_eq!(CostSpec::Roofline.label(), "roofline");
+        assert_eq!(CostSpec::moe_default().label(), "moe:0.15:2");
+        assert_eq!(CostSpec::Blended { weight: 0.25 }.label(), "blended:0.25");
+        // Distinct parameterizations of one family get distinct labels
+        // (the sweep grid keys on this), and labels re-parse to the
+        // same spec.
+        for spec in [
+            CostSpec::Linear,
+            CostSpec::Roofline,
+            CostSpec::moe_default(),
+            CostSpec::Moe { hot_prob: 0.3, hot_factor: 4.0 },
+            CostSpec::Blended { weight: 0.25 },
+            CostSpec::Blended { weight: 0.75 },
+        ] {
+            assert_eq!(CostSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        assert_ne!(
+            CostSpec::Blended { weight: 0.25 }.label(),
+            CostSpec::Blended { weight: 0.75 }.label()
+        );
+    }
+
+    #[test]
+    fn linearized_hardware_is_identity_for_linear_spec() {
+        let hw = hw();
+        let back = CostSpec::Linear
+            .linearized_hardware(&hw, CostPoint::nominal(4, 64, 120.0));
+        assert_eq!(back, hw);
+    }
+}

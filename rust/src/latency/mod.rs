@@ -1,11 +1,15 @@
 //! Latency layer: linear phase models (§3.1), trace calibration
-//! (Appendix B regression), and the first-principles roofline derivation
-//! (Appendix B symbolic formulas).
+//! (Appendix B regression), the first-principles roofline derivation
+//! (Appendix B symbolic formulas), and the pluggable [`cost::CostModel`]
+//! surface the simulation engine prices phases through (linear /
+//! roofline / MoE-imbalance / blended).
 
 pub mod calibration;
+pub mod cost;
 pub mod model;
 pub mod roofline;
 
 pub use calibration::{calibrate, calibrate_hardware, Calibrated, Sample};
+pub use cost::{BlendedCost, CostModel, CostPoint, CostSpec, LinearCost, MoeCost, RooflineCost};
 pub use model::{LinearLatency, PhaseModels};
 pub use roofline::{derive_slopes, ArchitectureSpec, DerivedSlopes, HardwareProfile};

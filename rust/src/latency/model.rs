@@ -59,6 +59,23 @@ impl PhaseModels {
         }
     }
 
+    /// The six [`crate::config::hardware::HardwareParams`] coefficients
+    /// of this surface — the inverse of [`PhaseModels::from_hardware`],
+    /// exact (same floats, no arithmetic). This is how nonlinear
+    /// [`crate::latency::cost::CostModel`]s hand their local
+    /// linearization to the provisioning analysis, which consumes
+    /// hardware only through `HardwareParams`.
+    pub fn to_hardware(&self) -> crate::config::hardware::HardwareParams {
+        crate::config::hardware::HardwareParams {
+            alpha_a: self.attention.alpha,
+            beta_a: self.attention.beta,
+            alpha_f: self.ffn.alpha,
+            beta_f: self.ffn.beta,
+            alpha_c: self.comm.alpha,
+            beta_c: self.comm.beta,
+        }
+    }
+
     /// Whether communication can be hidden by pipelining across the whole
     /// sweep: the paper's operating condition `t_A, t_F > 2 t_C`.
     pub fn comm_hidden(&self, token_load: f64, agg_batch: f64) -> bool {

@@ -30,6 +30,21 @@ pub struct HardwareProfile {
     pub beta_net: f64,
 }
 
+impl HardwareProfile {
+    /// A plausible 910C-class accelerator (public ballpark figures) —
+    /// the single source of these constants for the roofline
+    /// consistency tests and [`crate::latency::cost::RooflineCost`].
+    pub fn npu_910c_class() -> Self {
+        Self {
+            pi_peak: 512e12,  // 512 TFLOPS INT8-class
+            beta_hbm: 1.6e12, // 1.6 TB/s
+            eta_mem: 0.7,
+            eta_compute: 0.45,
+            beta_net: 150e9, // 150 GB/s effective
+        }
+    }
+}
+
 /// Model architecture constants (paper B.1, DeepSeek-V3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ArchitectureSpec {
@@ -142,15 +157,9 @@ pub fn ffn_saturation_batch(hw: &HardwareProfile, arch: &ArchitectureSpec, weigh
 mod tests {
     use super::*;
 
-    /// A plausible 910C-class accelerator (public ballpark figures).
+    /// A plausible 910C-class accelerator (shared canonical constants).
     fn plausible_npu() -> HardwareProfile {
-        HardwareProfile {
-            pi_peak: 512e12,   // 512 TFLOPS INT8-class
-            beta_hbm: 1.6e12,  // 1.6 TB/s
-            eta_mem: 0.7,
-            eta_compute: 0.45,
-            beta_net: 150e9, // 150 GB/s effective
-        }
+        HardwareProfile::npu_910c_class()
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //!   I/O, the nonparametric estimator of the stationary per-slot load
 //!   (paper Eq. 15–16), and the closed-form moments of Lemma 4.1.
 //! * [`latency`] — linear latency models `t = alpha * x + beta` (paper
-//!   §3.1), calibration by regression (Appendix B / Table 3), and the
-//!   first-principles roofline derivation (Appendix B).
+//!   §3.1), calibration by regression (Appendix B / Table 3), the
+//!   first-principles roofline derivation (Appendix B), and the
+//!   pluggable `latency::cost::CostModel` surface (linear / roofline /
+//!   MoE expert-imbalance / blended) the simulator prices phases
+//!   through, each linearizable back into the analysis layer.
 //! * [`analysis`] — the paper's analytical contribution: mean-field cycle
 //!   time & Theorem 4.4 candidates, the Gaussian barrier of Theorem 4.3,
 //!   the Gaussian cycle time Eq. (9), and the provisioning rules

@@ -5,9 +5,10 @@
 //!   simulate    run one simulation session (aliases: sim; supports
 //!               --trace replay and --arrival open|closed)
 //!   cluster     simulate a fleet of N rA-1F bundles sharing one request
-//!               stream (routing policies, online autoscaling)
+//!               stream (routing policies, online autoscaling,
+//!               heterogeneous per-bundle r:batch:cost specs)
 //!   sweep       parallel multi-scenario
-//!               (scenario x arrival x fleet x r x B) sweep
+//!               (scenario x arrival x fleet x cost x r x B) sweep
 //!   estimate    estimate (theta, nu^2) from a trace CSV
 //!   serve       run the real PJRT serving engine on the demo model
 //!   gen-trace   generate a synthetic production-like trace CSV
@@ -58,9 +59,9 @@ fn run(args: &Args) -> Result<()> {
                 "{}",
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
-                    .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed)")
-                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale)")
-                    .entry("sweep", "parallel (scenario x arrival x fleet x r x B) sweep with theory-vs-sim columns")
+                    .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed, --cost linear|roofline|moe)")
+                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale, --bundle-specs r:b:cost,...)")
+                    .entry("sweep", "parallel (scenario x arrival x fleet x cost x r x B) sweep with theory-vs-sim columns")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
@@ -112,13 +113,17 @@ fn provision(args: &Args) -> Result<()> {
 ///   --arrival closed|open  arrival process (default closed)
 ///   --lambda X           open-loop arrival rate in requests/cycle
 ///   --queue N            open-loop admission-queue capacity (default 4096)
+///   --cost MODEL         phase-cost model: linear|roofline|moe[:p:f]|
+///                        blended[:w] (default linear)
 ///   --completions-csv P  write the completion records as CSV
 fn cmd_simulate(args: &Args) -> Result<()> {
+    use afd::latency::cost::CostSpec;
     let mut cfg = load_config(args)?;
     cfg.requests_per_instance = args.get_usize("requests", cfg.requests_per_instance)?;
     cfg.topology.batch_per_worker = args.get_usize("batch", cfg.topology.batch_per_worker)?;
     let r = args.get_usize("r", 8)?;
-    let mut builder = Simulation::builder(&cfg, r);
+    let cost = CostSpec::parse(&args.get_str("cost", "linear"))?;
+    let mut builder = Simulation::builder(&cfg, r).cost_spec(cost);
     if let Some(path) = args.get("trace") {
         let trace = Trace::load_csv(path)?;
         println!("replaying {} requests from {path} (sharded per lane x worker)", trace.len());
@@ -144,7 +149,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     let out = builder.build()?.run();
     let m = &out.metrics;
-    println!("r = {r}, B = {}", m.batch);
+    println!("r = {r}, B = {}, cost model = {}", m.batch, cost.name());
     println!("throughput/instance = {:.6} tokens/cycle", m.throughput_per_instance);
     println!("TPOT = {:.3} cycles", m.tpot);
     println!("idle: attention {:.2}%, ffn {:.2}%", 100.0 * m.idle_attention, 100.0 * m.idle_ffn);
@@ -174,11 +179,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///
 /// Options:
 ///   --bundles N          fleet size (default 2)
-///   --policy rr|jsq|ltl  routing policy (default jsq)
+///   --policy rr|jsq|ltl|kv  routing policy (default jsq)
 ///   --r N                fan-in per bundle (default 8)
 ///   --requests N         completions per bundle (default
 ///                        requests_per_instance x r)
 ///   --batch B            per-worker microbatch size
+///   --cost MODEL         phase-cost model shared by every bundle:
+///                        linear|roofline|moe[:p:f]|blended[:w]
+///   --bundle-specs S     heterogeneous fleet: comma-separated
+///                        r:batch[:cost] triplets, one per bundle
+///                        (e.g. 8:256:linear,4:128:roofline); overrides
+///                        --bundles/--r/--cost
 ///   --arrival closed|open  arrival regime (default closed)
 ///   --lambda X           cluster-wide open-loop rate (requests/cycle)
 ///   --queue N            per-bundle inbox capacity (default 4096)
@@ -189,7 +200,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     use afd::analysis::provisioning::r_star_g_on_grid;
     use afd::coordinator::router::Policy;
-    use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+    use afd::latency::cost::{CostPoint, CostSpec};
+    use afd::sim::cluster::{AutoscaleConfig, BundleSpec, ClusterArrival, ClusterSimulation};
     use afd::workload::estimator::estimate_stationary;
 
     let mut cfg = load_config(args)?;
@@ -197,9 +209,28 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let r = args.get_usize("r", 8)?;
     let bundles = args.get_usize("bundles", 2)?;
     let policy = Policy::parse(&args.get_str("policy", "jsq"))?;
+    let cost = CostSpec::parse(&args.get_str("cost", "linear"))?;
     let feasible: Vec<usize> = args.get_list_usize("feasible", &(1..=16).collect::<Vec<_>>())?;
 
-    let mut builder = ClusterSimulation::builder(&cfg, r).bundles(bundles).policy(policy);
+    let mut builder =
+        ClusterSimulation::builder(&cfg, r).bundles(bundles).policy(policy).cost(cost);
+    let hetero_specs: Option<Vec<BundleSpec>> = match args.get("bundle-specs") {
+        Some(sel) => {
+            let specs: Vec<BundleSpec> = sel
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(BundleSpec::parse)
+                .collect::<Result<_>>()?;
+            if specs.is_empty() {
+                return Err(afd::AfdError::config(
+                    "--bundle-specs requires at least one r:batch[:cost] triplet",
+                ));
+            }
+            builder = builder.bundle_specs(specs.clone());
+            Some(specs)
+        }
+        None => None,
+    };
     if let Some(n) = args.get("requests") {
         let n: usize = n.parse().map_err(|_| {
             afd::AfdError::config(format!("--requests: expected integer, got {n:?}"))
@@ -233,16 +264,32 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         });
     }
 
-    println!(
-        "simulating {bundles} x {r}A-1F bundle(s), policy {}, B = {}",
-        policy.name(),
-        cfg.topology.batch_per_worker
-    );
+    match &hetero_specs {
+        Some(specs) => {
+            let shapes: Vec<String> = specs
+                .iter()
+                .map(|s| format!("{}A-1F/B{}/{}", s.r, s.batch, s.cost.name()))
+                .collect();
+            println!(
+                "simulating heterogeneous fleet [{}], policy {}",
+                shapes.join(", "),
+                policy.name()
+            );
+        }
+        None => println!(
+            "simulating {bundles} x {r}A-1F bundle(s), policy {}, B = {}, cost model {}",
+            policy.name(),
+            cfg.topology.batch_per_worker,
+            cost.name()
+        ),
+    }
     let out = builder.build()?.run()?;
 
     let mut t = Table::new(&[
         "bundle",
         "final r",
+        "B",
+        "cost",
         "delivered/inst",
         "TPOT",
         "idle_A",
@@ -258,6 +305,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         t.row(&[
             b.bundle.to_string(),
             b.final_r.to_string(),
+            b.batch.to_string(),
+            b.cost.name().to_string(),
             sig(m.delivered_throughput_per_instance, 5),
             sig(m.tpot, 5),
             format!("{:.1}%", 100.0 * m.idle_attention),
@@ -300,36 +349,56 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
     }
 
-    // Theory comparison: the offline rule on the completion stream's
-    // estimated moments vs the fleet's realized operating points.
-    let all: Vec<afd::workload::request::RequestLengths> = out
-        .bundles
-        .iter()
-        .flat_map(|b| b.completions.iter())
-        .map(|c| afd::workload::request::RequestLengths::new(c.prefill, c.decode_len.max(1)))
-        .collect();
-    if !all.is_empty() {
-        let trace = Trace::new(all);
-        if let Ok(load) = estimate_stationary(&trace) {
-            let opt = r_star_g_on_grid(
-                &cfg.hardware,
-                load,
-                cfg.topology.batch_per_worker,
-                &feasible,
-            )?;
-            let theory = afd::analysis::cycle_time::OperatingPoint::new(
-                cfg.hardware,
-                load,
-                cfg.topology.batch_per_worker,
-            )
-            .throughput_gaussian(r);
-            println!(
-                "theory (observed moments): r*_G = {} (Thr_G {:.5}); realized/Eq.1 at r={r}: {:.2}",
-                opt.r_star,
-                opt.throughput,
-                agg.delivered_throughput_per_instance / theory
-            );
+    // Theory comparison, per bundle: each bundle's cost model is
+    // linearized (CostModel::linearized) around its own estimated
+    // operating point, so heterogeneous bundles get heterogeneous
+    // theory columns — r*_G from local slopes even off the linear
+    // surface.
+    let mut theory_rows = Vec::new();
+    for b in &out.bundles {
+        let lens: Vec<afd::workload::request::RequestLengths> = b
+            .completions
+            .iter()
+            .map(|c| {
+                afd::workload::request::RequestLengths::new(c.prefill, c.decode_len.max(1))
+            })
+            .collect();
+        if lens.is_empty() {
+            continue;
         }
+        let Ok(load) = estimate_stationary(&Trace::new(lens)) else { continue };
+        let lin_hw = b.cost.linearized_hardware(
+            &cfg.hardware,
+            CostPoint::nominal(b.final_r, b.batch, load.theta),
+        );
+        let op = afd::analysis::cycle_time::OperatingPoint::new(lin_hw, load, b.batch);
+        let theory = op.throughput_gaussian(b.final_r);
+        let opt = r_star_g_on_grid(&lin_hw, load, b.batch, &feasible)?;
+        theory_rows.push([
+            b.bundle.to_string(),
+            b.cost.name().to_string(),
+            sig(load.theta, 4),
+            opt.r_star.to_string(),
+            sig(opt.throughput, 5),
+            sig(theory, 5),
+            format!("{:.2}", b.metrics.delivered_throughput_per_instance / theory),
+        ]);
+    }
+    if !theory_rows.is_empty() {
+        let mut t = Table::new(&[
+            "bundle",
+            "cost",
+            "theta-hat",
+            "r*_G (lin)",
+            "Thr_G @ r*_G",
+            "Thr_G @ final r",
+            "realized/theory",
+        ])
+        .with_title("Per-bundle theory (linearized cost models, observed moments)");
+        for row in &theory_rows {
+            t.row(row);
+        }
+        t.print();
     }
     Ok(())
 }
@@ -343,7 +412,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 ///                               `config` sweeps the config's [workload]
 ///   --arrival closed|open|both  arrival-process axis (default closed)
 ///   --bundles 1,2,4             fleet-size axis (default 1)
-///   --policy rr,jsq,ltl         routing-policy axis (default rr)
+///   --policy rr,jsq,ltl,kv      routing-policy axis (default rr)
+///   --cost linear,roofline,moe  cost-model axis (default linear); theory
+///                               columns come from each model's
+///                               linearization
 ///   --rho X                     open-loop utilization target (default 0.85)
 ///   --lambda X                  open-loop absolute rate override (req/cycle)
 ///   --queue N                   open-loop queue capacity (default 4096)
@@ -357,6 +429,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 ///   --list                      print the scenario registry and exit
 fn cmd_sweep(args: &Args) -> Result<()> {
     use afd::coordinator::router::Policy;
+    use afd::latency::cost::CostSpec;
     use afd::sim::engine::SimOptions;
     use afd::sweep::emit;
     use afd::sweep::grid::{run_grid, run_grid_serial, ArrivalSpec, FleetSpec, SweepGrid};
@@ -429,19 +502,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             fleets.push(FleetSpec::new(n, p));
         }
     }
+    let cost_models: Vec<CostSpec> = args
+        .get_str("cost", "linear")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(CostSpec::parse)
+        .collect::<Result<_>>()?;
     let grid = SweepGrid::new(
         selected,
         args.get_list_usize("ratios", &cfg.ratio_sweep)?,
         args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
     )
     .with_arrivals(arrivals)
-    .with_fleets(fleets);
+    .with_fleets(fleets)
+    .with_costs(cost_models);
     let threads = args.get_usize("threads", 0)?;
     println!(
-        "sweeping {} scenario(s) x {} arrival(s) x {} fleet(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
+        "sweeping {} scenario(s) x {} arrival(s) x {} fleet(s) x {} cost model(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
         grid.scenarios.len(),
         grid.arrivals.len(),
         grid.fleets.len(),
+        grid.cost_models.len(),
         grid.ratios.len(),
         grid.batches.len(),
         grid.cell_count(),

@@ -22,6 +22,13 @@
 //!   their routed inbox full are rejected and counted. The closed loop
 //!   ([`ClusterArrival::Closed`]) keeps every bundle saturated
 //!   independently (the paper's capacity question, N at a time).
+//! * **Heterogeneous fleets.** Each bundle carries its own
+//!   [`BundleSpec`] — fan-in `r`, microbatch `B`, and phase-cost model
+//!   ([`crate::latency::cost::CostSpec`]) — so one cluster can mix
+//!   hardware generations and MoE/roofline cost surfaces
+//!   ([`ClusterSimulationBuilder::bundle_specs`]); uniform fleets are
+//!   just N copies of one spec. Per-bundle theory columns come from each
+//!   cost model's `linearized()` hook.
 //! * **Lockstep virtual time.** The cluster always advances the bundle
 //!   whose next lane-step starts earliest in global time (ties to the
 //!   lowest bundle index), so arrivals are routed against the load state
@@ -51,6 +58,7 @@ use crate::coordinator::autoscale::{Autoscaler, Reconfiguration};
 use crate::coordinator::load::LoadSnapshot;
 use crate::coordinator::router::{Policy, Router};
 use crate::error::{AfdError, Result};
+use crate::latency::cost::CostSpec;
 use crate::sim::engine::BATCHES_IN_FLIGHT;
 use crate::sim::metrics::SimMetrics;
 use crate::sim::session::{
@@ -86,6 +94,68 @@ impl ClusterArrival {
             }
         }
         Ok(())
+    }
+}
+
+/// Per-bundle shape of a (possibly heterogeneous) fleet: fan-in,
+/// per-worker microbatch, and the phase-cost surface the bundle's
+/// engine prices steps through. One cluster can mix bundles of
+/// different `r`, `B`, and hardware class (e.g. a linear-calibrated
+/// generation next to a roofline-profiled one) — the ROADMAP's
+/// heterogeneous-fleet item — while routed arrivals still flow over the
+/// same engine-agnostic [`crate::coordinator::load::BundleLoad`]
+/// snapshots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BundleSpec {
+    /// Attention fan-in of this bundle.
+    pub r: usize,
+    /// Per-worker microbatch size of this bundle.
+    pub batch: usize,
+    /// Phase-cost model of this bundle's hardware.
+    pub cost: CostSpec,
+}
+
+impl BundleSpec {
+    pub fn new(r: usize, batch: usize, cost: CostSpec) -> Self {
+        Self { r, batch, cost }
+    }
+
+    /// Parse a CLI triplet `r:batch[:cost]` (cost defaults to linear).
+    pub fn parse(selector: &str) -> Result<Self> {
+        let parts: Vec<&str> = selector.trim().split(':').collect();
+        if parts.len() < 2 {
+            return Err(AfdError::config(format!(
+                "bundle spec {selector:?}: expected r:batch[:cost]"
+            )));
+        }
+        let parse_usize = |s: &str, what: &str| -> Result<usize> {
+            s.trim().parse::<usize>().map_err(|_| {
+                AfdError::config(format!(
+                    "bundle spec {selector:?}: {what} {s:?} is not an integer"
+                ))
+            })
+        };
+        let spec = Self {
+            r: parse_usize(parts[0], "r")?,
+            batch: parse_usize(parts[1], "batch")?,
+            cost: if parts.len() > 2 {
+                CostSpec::parse(&parts[2..].join(":"))?
+            } else {
+                CostSpec::Linear
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.r == 0 {
+            return Err(AfdError::config("bundle spec: fan-in r must be >= 1"));
+        }
+        if self.batch == 0 {
+            return Err(AfdError::config("bundle spec: batch must be >= 1"));
+        }
+        self.cost.validate()
     }
 }
 
@@ -214,6 +284,9 @@ impl SharedPoisson {
 struct Bundle {
     index: usize,
     seed: u64,
+    /// Static shape of this bundle (r may be reconfigured by the
+    /// autoscaler; `spec.r` is the *initial* fan-in).
+    spec: BundleSpec,
     /// `None` only transiently while an epoch is being finalized.
     sim: Option<Simulation>,
     inbox: Option<Rc<RefCell<Inbox>>>,
@@ -239,6 +312,12 @@ pub struct BundleOutput {
     /// Fan-in the bundle ended on (== the configured r unless the
     /// autoscaler reconfigured it).
     pub final_r: usize,
+    /// Per-worker microbatch of this bundle.
+    pub batch: usize,
+    /// The bundle's phase-cost model (its hardware class). Rebuild via
+    /// [`CostSpec::build`] and linearize to derive per-bundle theory
+    /// columns for heterogeneous fleets.
+    pub cost: CostSpec,
     /// Metrics of the bundle's final epoch (the converged operating
     /// point under autoscaling; the whole run otherwise).
     pub metrics: SimMetrics,
@@ -288,12 +367,31 @@ pub struct ClusterSimulationBuilder {
     warm_start: bool,
     completions_per_bundle: Option<usize>,
     source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
+    cost: CostSpec,
+    specs: Option<Vec<BundleSpec>>,
 }
 
 impl ClusterSimulationBuilder {
     /// Number of `rA-1F` bundles in the fleet.
     pub fn bundles(mut self, n: usize) -> Self {
         self.bundles = n;
+        self
+    }
+
+    /// Phase-cost model shared by every bundle (default
+    /// [`CostSpec::Linear`] — the pre-cost-model engine, byte for
+    /// byte). Overridden per bundle by [`Self::bundle_specs`].
+    pub fn cost(mut self, cost: CostSpec) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Explicit per-bundle shapes: a *heterogeneous* fleet mixing
+    /// fan-ins, microbatches, and cost models in one cluster. Supersedes
+    /// [`Self::bundles`]/[`Self::cost`] and the builder's uniform `r`
+    /// (the fleet size becomes `specs.len()`).
+    pub fn bundle_specs(mut self, specs: Vec<BundleSpec>) -> Self {
+        self.specs = Some(specs);
         self
     }
 
@@ -359,17 +457,36 @@ impl ClusterSimulationBuilder {
             warm_start,
             completions_per_bundle,
             source_factory,
+            cost,
+            specs,
         } = self;
-        if bundles == 0 {
-            return Err(AfdError::config("cluster needs >= 1 bundle"));
-        }
+        // Resolve the fleet shape: explicit heterogeneous specs, or a
+        // homogeneous fleet of the builder's (r, config batch, cost).
+        let specs: Vec<BundleSpec> = match specs {
+            Some(s) => {
+                if s.is_empty() {
+                    return Err(AfdError::config("bundle_specs must be non-empty"));
+                }
+                for spec in &s {
+                    spec.validate()?;
+                }
+                s
+            }
+            None => {
+                if bundles == 0 {
+                    return Err(AfdError::config("cluster needs >= 1 bundle"));
+                }
+                let spec = BundleSpec::new(r, cfg.topology.batch_per_worker, cost);
+                // Same gate as the heterogeneous branch: invalid cost
+                // parameters are config errors, never build panics.
+                spec.validate()?;
+                vec![spec; bundles]
+            }
+        };
+        let bundles = specs.len();
         arrival.validate()?;
         if let Some(a) = &autoscale {
             a.validate()?;
-        }
-        let target = completions_per_bundle.unwrap_or(cfg.requests_per_instance * r);
-        if target == 0 {
-            return Err(AfdError::config("per-bundle completion target must be >= 1"));
         }
 
         let mut cluster = ClusterSimulation {
@@ -397,7 +514,12 @@ impl ClusterSimulationBuilder {
             }
         }
 
-        for i in 0..bundles {
+        for (i, &spec) in specs.iter().enumerate() {
+            let target =
+                completions_per_bundle.unwrap_or(cluster.cfg.requests_per_instance * spec.r);
+            if target == 0 {
+                return Err(AfdError::config("per-bundle completion target must be >= 1"));
+            }
             let seed = bundle_seed(cluster.cfg.seed, i);
             let inbox = match (&cluster.arrival, bundles) {
                 (ClusterArrival::Open { queue_capacity, .. }, n) if n > 1 => {
@@ -413,8 +535,8 @@ impl ClusterSimulationBuilder {
             let autoscaler = cluster.autoscale.as_ref().map(|a| {
                 Autoscaler::new(
                     cluster.cfg.hardware,
-                    cluster.cfg.topology.batch_per_worker,
-                    r,
+                    spec.batch,
+                    spec.r,
                     a.feasible.clone(),
                     a.window,
                 )
@@ -422,13 +544,14 @@ impl ClusterSimulationBuilder {
             let mut bundle = Bundle {
                 index: i,
                 seed,
+                spec,
                 sim: None,
                 inbox,
                 base_time: 0.0,
                 epoch: 0,
                 produced: 0,
                 target,
-                current_r: r,
+                current_r: spec.r,
                 autoscaler,
                 reconfigurations: Vec::new(),
                 last_metrics: None,
@@ -496,6 +619,8 @@ impl ClusterSimulation {
             warm_start: true,
             completions_per_bundle: None,
             source_factory: None,
+            cost: CostSpec::Linear,
+            specs: None,
         }
     }
 
@@ -511,8 +636,12 @@ impl ClusterSimulation {
         }
         .max(1);
         let seed = epoch_seed(bundle.seed, bundle.epoch);
-        let cfg = self.cfg.with_seed(seed);
+        // Per-bundle shape: the bundle's own microbatch and cost model
+        // (identical to the shared config for homogeneous fleets, so the
+        // pre-heterogeneity byte-identity contract is untouched).
+        let cfg = self.cfg.with_batch(bundle.spec.batch).with_seed(seed);
         let mut builder = Simulation::builder(&cfg, bundle.current_r)
+            .cost_spec(bundle.spec.cost)
             .batches_in_flight(self.batches_in_flight)
             .warm_start(self.warm_start)
             .max_completions(Some(epoch_target));
@@ -713,6 +842,8 @@ impl ClusterSimulation {
             .map(|b| BundleOutput {
                 bundle: b.index,
                 final_r: b.current_r,
+                batch: b.spec.batch,
+                cost: b.spec.cost,
                 metrics: b.last_metrics.expect("every bundle ran >= 1 epoch"),
                 arrival: b.last_arrival.expect("every bundle ran >= 1 epoch"),
                 completions: b.completions,
@@ -985,6 +1116,114 @@ mod tests {
                 window: 4,
                 epoch_completions: 500
             })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn homogeneous_bundle_specs_are_byte_identical_to_uniform_builder() {
+        let cfg = small_cfg();
+        let uniform = ClusterSimulation::builder(&cfg, 2)
+            .bundles(2)
+            .policy(Policy::JoinShortestQueue)
+            .arrival(ClusterArrival::Open { lambda: 0.2, queue_capacity: 64 })
+            .completions_per_bundle(Some(100))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let spec = BundleSpec::new(2, cfg.topology.batch_per_worker, CostSpec::Linear);
+        let explicit = ClusterSimulation::builder(&cfg, 2)
+            .bundle_specs(vec![spec, spec])
+            .policy(Policy::JoinShortestQueue)
+            .arrival(ClusterArrival::Open { lambda: 0.2, queue_capacity: 64 })
+            .completions_per_bundle(Some(100))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(uniform.bundles.len(), explicit.bundles.len());
+        for (a, b) in uniform.bundles.iter().zip(&explicit.bundles) {
+            assert_eq!(a.completions, b.completions);
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(b.batch, cfg.topology.batch_per_worker);
+            assert_eq!(b.cost, CostSpec::Linear);
+        }
+        assert_eq!(uniform.arrival, explicit.arrival);
+        assert_eq!(
+            uniform.load_imbalance.to_bits(),
+            explicit.load_imbalance.to_bits()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_fleet_mixes_r_batch_and_cost_models() {
+        let cfg = small_cfg();
+        let specs = vec![
+            BundleSpec::new(2, 8, CostSpec::Linear),
+            BundleSpec::new(4, 16, CostSpec::Roofline),
+            BundleSpec::new(3, 8, CostSpec::moe_default()),
+        ];
+        let out = ClusterSimulation::builder(&cfg, 2)
+            .bundle_specs(specs.clone())
+            .policy(Policy::LeastTokenLoad)
+            .arrival(ClusterArrival::Open { lambda: 0.3, queue_capacity: 128 })
+            .completions_per_bundle(Some(80))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.bundles.len(), 3);
+        for (b, spec) in out.bundles.iter().zip(&specs) {
+            assert_eq!(b.final_r, spec.r);
+            assert_eq!(b.batch, spec.batch);
+            assert_eq!(b.cost, spec.cost);
+            assert_eq!(b.completions.len(), 80, "bundle {}", b.bundle);
+            assert_eq!(b.metrics.batch, spec.batch);
+            assert_eq!(b.metrics.r, spec.r);
+        }
+        // Exact conservation still holds across heterogeneous bundles.
+        let a = out.arrival;
+        assert_eq!(a.offered, a.admitted + a.rejected, "{a:?}");
+        // Determinism of the heterogeneous path.
+        let again = ClusterSimulation::builder(&cfg, 2)
+            .bundle_specs(specs)
+            .policy(Policy::LeastTokenLoad)
+            .arrival(ClusterArrival::Open { lambda: 0.3, queue_capacity: 128 })
+            .completions_per_bundle(Some(80))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        for (x, y) in out.bundles.iter().zip(&again.bundles) {
+            assert_eq!(x.completions, y.completions);
+        }
+    }
+
+    #[test]
+    fn bundle_spec_parse_and_validation() {
+        let s = BundleSpec::parse("8:256").unwrap();
+        assert_eq!(s, BundleSpec::new(8, 256, CostSpec::Linear));
+        let s = BundleSpec::parse(" 4:128:roofline ").unwrap();
+        assert_eq!(s, BundleSpec::new(4, 128, CostSpec::Roofline));
+        let s = BundleSpec::parse("2:64:moe:0.2:3").unwrap();
+        assert_eq!(
+            s,
+            BundleSpec::new(2, 64, CostSpec::Moe { hot_prob: 0.2, hot_factor: 3.0 })
+        );
+        assert!(BundleSpec::parse("8").is_err());
+        assert!(BundleSpec::parse("0:64").is_err());
+        assert!(BundleSpec::parse("2:0").is_err());
+        assert!(BundleSpec::parse("2:64:bogus").is_err());
+        let cfg = small_cfg();
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .bundle_specs(vec![])
+            .build()
+            .is_err());
+        // Invalid uniform cost parameters are config errors on the
+        // homogeneous path too, not build panics.
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .cost(CostSpec::Moe { hot_prob: 2.0, hot_factor: 2.0 })
             .build()
             .is_err());
     }

@@ -29,7 +29,8 @@ pub mod slots;
 
 pub use batch::{BatchState, StepRecord};
 pub use cluster::{
-    AutoscaleConfig, BundleOutput, ClusterArrival, ClusterOutput, ClusterSimulation,
+    AutoscaleConfig, BundleOutput, BundleSpec, ClusterArrival, ClusterOutput,
+    ClusterSimulation,
 };
 pub use engine::{simulate, simulate_coupled, sweep_ratios, SimOptions, SimOutput};
 pub use metrics::SimMetrics;

@@ -18,6 +18,13 @@
 //!   per-(lane, worker) fork hierarchy; [`TraceReplay`] replays a
 //!   [`Trace`] (e.g. a [`ProductionCorpus`] analogue) with deterministic
 //!   per-(lane, worker) sharding.
+//! * [`crate::latency::cost::CostModel`] — *what the phases cost*.
+//!   The engine prices Attention/FFN/comm through this object-safe
+//!   surface instead of reading `cfg.hardware` directly: the default
+//!   [`LinearCost`] reproduces the §3.1 linear timing bit for bit, while
+//!   roofline hardware profiles, MoE expert-imbalance jitter, and blends
+//!   plug in via [`SimulationBuilder::cost_model`] /
+//!   [`SimulationBuilder::cost_spec`].
 //! * [`SimObserver`] — step/completion/idle hooks. Metrics collection is
 //!   itself an observer ([`MetricsCollector`]), so nothing about
 //!   measurement is welded into the engine loop; [`StepRecorder`]
@@ -59,6 +66,7 @@ use std::sync::Arc;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::error::{AfdError, Result};
+use crate::latency::cost::{CostModel, CostSpec, LinearCost};
 use crate::sim::batch::StepRecord;
 use crate::sim::engine::{SimOptions, SimOutput, BATCHES_IN_FLIGHT};
 use crate::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
@@ -641,6 +649,8 @@ pub struct SimulationBuilder {
     arrival: Box<dyn ArrivalProcess>,
     source: Option<Box<dyn LengthSource>>,
     observers: Vec<Box<dyn SimObserver>>,
+    cost: Option<Box<dyn CostModel>>,
+    cost_spec: Option<CostSpec>,
     batches_in_flight: usize,
     warm_start: bool,
     max_completions: Option<usize>,
@@ -651,6 +661,34 @@ impl SimulationBuilder {
     /// Replace the arrival process (default [`ClosedLoopReplenish`]).
     pub fn arrival(mut self, arrival: impl ArrivalProcess + 'static) -> Self {
         self.arrival = Box::new(arrival);
+        self
+    }
+
+    /// Replace the phase-cost model (default
+    /// [`LinearCost::from_hardware`] over the config's hardware — the
+    /// pre-redesign engine, byte for byte).
+    pub fn cost_model(mut self, cost: impl CostModel + 'static) -> Self {
+        self.cost = Some(Box::new(cost));
+        self.cost_spec = None;
+        self
+    }
+
+    /// Boxed variant of [`Self::cost_model`] (for callers holding a
+    /// `Box<dyn CostModel>` already, e.g. a [`CostSpec`] factory).
+    pub fn cost_model_boxed(mut self, cost: Box<dyn CostModel>) -> Self {
+        self.cost = Some(cost);
+        self.cost_spec = None;
+        self
+    }
+
+    /// Build the cost model from a [`CostSpec`] against the config's
+    /// hardware; stochastic models (MoE) are seeded from the config seed
+    /// so sessions stay deterministic. Resolution (and parameter
+    /// validation) is deferred to [`Self::build`], which reports invalid
+    /// specs as config errors like every other builder misuse.
+    pub fn cost_spec(mut self, spec: CostSpec) -> Self {
+        self.cost_spec = Some(spec);
+        self.cost = None;
         self
     }
 
@@ -705,6 +743,8 @@ impl SimulationBuilder {
             arrival,
             source,
             observers,
+            cost,
+            cost_spec,
             batches_in_flight,
             warm_start,
             max_completions,
@@ -756,12 +796,24 @@ impl SimulationBuilder {
         let agg_token_load =
             lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.token_load()).sum();
         let agg_live = lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.live()).sum();
+        // Resolve the cost surface: an explicit model, a validated spec
+        // (deferred so bad parameters are config errors, not panics), or
+        // the default — the config's calibrated linear hardware, with
+        // identical float expressions to the pre-cost-model engine.
+        let cost = match (cost, cost_spec) {
+            (Some(model), _) => model,
+            (None, Some(spec)) => {
+                spec.validate()?;
+                spec.build(&cfg.hardware, cfg.seed ^ 0xC057_5EED)
+            }
+            (None, None) => Box::new(LinearCost::from_hardware(&cfg.hardware)),
+        };
         Ok(Simulation {
             metrics: MetricsCollector::new(r),
             worker_free: vec![0.0; r],
             ffn_free: 0.0,
-            t_ffn: cfg.hardware.t_ffn(agg),
-            tc_half: cfg.hardware.t_comm(agg) / 2.0,
+            agg,
+            cost,
             // Lane scheduling: earliest-ready lane from a binary heap,
             // O(log m) per step (the ROADMAP hot-path item). Ties (only
             // the all-zero start) break to the lowest lane index, exactly
@@ -805,8 +857,14 @@ pub struct Simulation {
     metrics: MetricsCollector,
     worker_free: Vec<f64>,
     ffn_free: f64,
-    t_ffn: f64,
-    tc_half: f64,
+    /// Aggregated batch `r * B` (the FFN/comm driving variable; constant
+    /// for a session — the *time* it prices to may not be, so phases are
+    /// priced through `cost` every step).
+    agg: f64,
+    /// The phase-pricing surface. [`LinearCost`] reproduces the
+    /// pre-cost-model engine bit for bit; nonlinear/stochastic models
+    /// (roofline, MoE imbalance) re-price every step.
+    cost: Box<dyn CostModel>,
     heap: BinaryHeap<Reverse<LaneKey>>,
     completions: Vec<Completion>,
     steps_log: Vec<StepRecord>,
@@ -827,6 +885,8 @@ impl Simulation {
             arrival: Box::new(ClosedLoopReplenish),
             source: None,
             observers: Vec::new(),
+            cost: None,
+            cost_spec: None,
             batches_in_flight: BATCHES_IN_FLIGHT,
             warm_start: true,
             max_completions: None,
@@ -902,6 +962,21 @@ impl Simulation {
         self.lanes.len() * self.r * self.b
     }
 
+    /// Name of the phase-cost model pricing this session ("linear"
+    /// unless the builder installed another [`CostModel`]).
+    pub fn cost_name(&self) -> &'static str {
+        self.cost.name()
+    }
+
+    /// Linearize this session's cost model around `at` (theory-column
+    /// hook: `r*_G` from local slopes even under nonlinear pricing).
+    pub fn linearized_cost(
+        &self,
+        at: crate::latency::cost::CostPoint,
+    ) -> crate::latency::PhaseModels {
+        self.cost.linearized(at)
+    }
+
     /// Run `op` on worker (g, j) and fold its token-load/occupancy
     /// delta into the cached bundle aggregates. Every mutation of a
     /// worker's [`SlotArray`] must go through here — a mutation outside
@@ -925,7 +1000,6 @@ impl Simulation {
     /// time. [`Simulation::run`] is exactly this in a loop, so stepped
     /// (cluster) and monolithic drives produce identical event schedules.
     pub fn step(&mut self) -> f64 {
-        let hw = self.cfg.hardware;
         let r = self.r;
         let Reverse(LaneKey { ready_at: ready, lane: g }) =
             self.heap.pop().expect("one heap entry per lane");
@@ -938,16 +1012,26 @@ impl Simulation {
             self.mutate_worker(g, j, |w, arrival, _| w.fill_empty(ready, arrival));
         }
 
+        // Price the step's FFN/comm phases through the cost model. For
+        // `LinearCost` these are the same float expressions on the same
+        // `agg = r * B` every step, so the values are bit-identical to
+        // the engine that cached them at build time; stochastic models
+        // (MoE imbalance) legitimately vary per step.
+        let t_ffn = self.cost.ffn(self.agg);
+        let tc_half = self.cost.comm(self.agg) / 2.0;
+
         // --- Attention phase (per-worker start, barrier end) ---
         let mut att_barrier: f64 = 0.0;
         let mut att_start_min = f64::INFINITY;
         let mut max_load = 0u64;
         let mut sum_load = 0u64;
         for j in 0..r {
-            let load = self.lanes[g].workers[j].token_load();
+            let worker = &self.lanes[g].workers[j];
+            let load = worker.token_load();
+            let live = worker.live();
             max_load = max_load.max(load);
             sum_load += load;
-            let t_a = hw.t_attention(load as f64);
+            let t_a = self.cost.attention(load as f64, live);
             let start = self.worker_free[j].max(ready);
             if start > self.worker_free[j] {
                 for o in &mut self.observers {
@@ -965,7 +1049,7 @@ impl Simulation {
         }
 
         // --- A2F transfer ---
-        let a2f_done = att_barrier + self.tc_half;
+        let a2f_done = att_barrier + tc_half;
 
         // --- FFN phase (shared server; waits if busy) ---
         let ffn_start = a2f_done.max(self.ffn_free);
@@ -974,15 +1058,15 @@ impl Simulation {
                 o.on_idle(Resource::Ffn, self.ffn_free, ffn_start);
             }
         }
-        let ffn_done = ffn_start + self.t_ffn;
+        let ffn_done = ffn_start + t_ffn;
         self.ffn_free = ffn_done;
-        self.metrics.on_ffn(ffn_start, self.t_ffn);
+        self.metrics.on_ffn(ffn_start, t_ffn);
         for o in &mut self.observers {
-            o.on_ffn(ffn_start, self.t_ffn);
+            o.on_ffn(ffn_start, t_ffn);
         }
 
         // --- F2A transfer; batch ready for its next step ---
-        let f2a_done = ffn_done + self.tc_half;
+        let f2a_done = ffn_done + tc_half;
         self.lanes[g].steps += 1;
 
         // Slots advance: the step's tokens are delivered at f2a_done.
@@ -1074,6 +1158,18 @@ impl crate::coordinator::load::BundleLoad for Simulation {
 
     fn free_slots(&self) -> usize {
         self.total_slots() - Simulation::live_slots(self)
+    }
+
+    /// The simulator has no per-token KV bound; its hard capacity
+    /// resource is decode *slots*. Report remaining slot capacity (in
+    /// requests) rather than the unbounded default, so
+    /// [`crate::coordinator::router::Policy::KvHeadroom`] is a real
+    /// signal on simulated fleets — it diverts arrivals toward bundles
+    /// with admission capacity left (heterogeneous fleets mixing bundle
+    /// sizes make this differ from JSQ) instead of degenerating to the
+    /// all-`u64::MAX` tie-break.
+    fn kv_headroom(&self) -> u64 {
+        self.free_slots() as u64
     }
 }
 
@@ -1343,6 +1439,139 @@ mod tests {
             }
         }
         assert!(saw_partial, "open loop never exercised partial occupancy");
+    }
+
+    #[test]
+    fn explicit_linear_cost_is_byte_identical_to_default() {
+        let cfg = small_cfg();
+        let default = Simulation::builder(&cfg, 2).build().unwrap().run();
+        let explicit = Simulation::builder(&cfg, 2)
+            .cost_model(LinearCost::from_hardware(&cfg.hardware))
+            .build()
+            .unwrap()
+            .run();
+        let via_spec = Simulation::builder(&cfg, 2)
+            .cost_spec(CostSpec::Linear)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(default.completions, explicit.completions);
+        assert_eq!(default.completions, via_spec.completions);
+        assert_eq!(
+            default.metrics.total_time.to_bits(),
+            explicit.metrics.total_time.to_bits()
+        );
+        assert_eq!(
+            default.metrics.total_time.to_bits(),
+            via_spec.metrics.total_time.to_bits()
+        );
+    }
+
+    #[test]
+    fn nonlinear_cost_models_run_to_target_and_change_the_schedule() {
+        let cfg = small_cfg();
+        let run = |spec: CostSpec| {
+            Simulation::builder(&cfg, 2)
+                .cost_spec(spec)
+                .max_completions(Some(200))
+                .build()
+                .unwrap()
+                .run()
+        };
+        let linear = run(CostSpec::Linear);
+        for spec in [CostSpec::Roofline, CostSpec::moe_default(), CostSpec::Blended { weight: 0.5 }]
+        {
+            let out = run(spec);
+            assert_eq!(out.completions.len(), 200, "{spec:?}");
+            assert!(out.metrics.total_time > 0.0, "{spec:?}");
+            assert!(out.metrics.throughput_per_instance > 0.0, "{spec:?}");
+            // The same request stream is consumed (closed loop, same
+            // seed), but the schedule is priced differently.
+            assert_ne!(
+                out.metrics.total_time.to_bits(),
+                linear.metrics.total_time.to_bits(),
+                "{spec:?} priced a schedule identical to linear"
+            );
+        }
+        // MoE inflates FFN time only: the run takes longer than linear.
+        let moe = run(CostSpec::moe_default());
+        assert!(moe.metrics.total_time > linear.metrics.total_time);
+    }
+
+    #[test]
+    fn moe_cost_sessions_are_deterministic_per_seed() {
+        let cfg = small_cfg();
+        let run = || {
+            Simulation::builder(&cfg, 2)
+                .cost_spec(CostSpec::moe_default())
+                .max_completions(Some(150))
+                .build()
+                .unwrap()
+                .run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+    }
+
+    #[test]
+    fn invalid_cost_spec_is_a_config_error_not_a_panic() {
+        let cfg = small_cfg();
+        let err = Simulation::builder(&cfg, 2)
+            .cost_spec(CostSpec::Moe { hot_prob: 2.0, hot_factor: 2.0 })
+            .build()
+            .err()
+            .expect("invalid moe parameters must be rejected");
+        assert!(err.to_string().contains("hot_prob"), "{err}");
+        assert!(Simulation::builder(&cfg, 2)
+            .cost_spec(CostSpec::Blended { weight: -1.0 })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn session_exposes_cost_name_and_linearization() {
+        let cfg = small_cfg();
+        let sim = Simulation::builder(&cfg, 2).build().unwrap();
+        assert_eq!(sim.cost_name(), "linear");
+        let lin = sim.linearized_cost(crate::latency::cost::CostPoint::nominal(2, 16, 69.0));
+        assert_eq!(lin.to_hardware(), cfg.hardware);
+        let roof = Simulation::builder(&cfg, 2)
+            .cost_spec(CostSpec::Roofline)
+            .build()
+            .unwrap();
+        assert_eq!(roof.cost_name(), "roofline");
+    }
+
+    #[test]
+    fn bundle_load_reports_slot_headroom_for_kv_routing() {
+        use crate::coordinator::load::{BundleLoad, LoadSnapshot};
+        use crate::coordinator::router::{Policy, Router};
+        let cfg = small_cfg();
+        // Closed loop: fully occupied, zero headroom.
+        let full = Simulation::builder(&cfg, 2).build().unwrap();
+        assert_eq!(BundleLoad::kv_headroom(&full), 0);
+        // Open loop: starts empty, headroom == total slots; admitting
+        // requests drains it.
+        let mut empty = Simulation::builder(&cfg, 2)
+            .arrival(OpenLoopPoisson::new(0.05, 64, cfg.seed).unwrap())
+            .max_completions(Some(50))
+            .build()
+            .unwrap();
+        assert_eq!(BundleLoad::kv_headroom(&empty), empty.total_slots() as u64);
+        for _ in 0..50 {
+            empty.step();
+        }
+        assert_eq!(
+            BundleLoad::kv_headroom(&empty),
+            (empty.total_slots() - empty.live_slots()) as u64
+        );
+        // KvHeadroom routing therefore prefers the bundle with
+        // admission capacity left, where JSQ (queued-first) would tie
+        // and fall through to token load.
+        let snaps = [LoadSnapshot::of(&full), LoadSnapshot::of(&empty)];
+        assert_eq!(Router::new(Policy::KvHeadroom).route(&snaps), 1);
     }
 
     #[test]

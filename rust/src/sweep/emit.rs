@@ -11,8 +11,10 @@
 //! `admitted`, `rejected`, `mean_queue_wait`, `mean_queue_len`); the
 //! fleet axis appends `bundles`, `policy`, `bundle` (`agg` on aggregate
 //! rows, the bundle index on per-bundle rows), `imbalance`,
-//! `idle_share`, `realized_vs_eq1`, and `converged_r` — keeping the
-//! legacy column prefix stable for existing plotting scripts.
+//! `idle_share`, `realized_vs_eq1`, and `converged_r`; the cost-model
+//! axis appends `cost_model` (with the theory columns computed from the
+//! model's linearization) — keeping the legacy column prefix stable for
+//! existing plotting scripts.
 
 use std::path::Path;
 
@@ -26,7 +28,7 @@ use crate::util::tablefmt::{sig, Table};
 
 /// CSV header (kept stable; downstream plotting scripts key on names —
 /// `python/plot_sweep.py --check` validates this exact schema).
-pub const CSV_HEADER: [&str; 32] = [
+pub const CSV_HEADER: [&str; 33] = [
     "scenario",
     "r",
     "batch",
@@ -59,6 +61,7 @@ pub const CSV_HEADER: [&str; 32] = [
     "idle_share",
     "realized_vs_eq1",
     "converged_r",
+    "cost_model",
 ];
 
 fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
@@ -70,6 +73,7 @@ fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
                 && g.arrival == cell.arrival.kind
                 && g.bundles == cell.cluster.bundles
                 && g.policy == cell.cluster.policy
+                && g.cost == cell.cost
         })
         .expect("every cell belongs to a group")
 }
@@ -122,6 +126,7 @@ fn push_row(
         format!("{:.6}", c.idle_share),
         format!("{:.6}", realized_vs_eq1),
         converged_r.to_string(),
+        cell.cost.clone(),
     ]);
 }
 
@@ -183,6 +188,7 @@ fn cell_to_json(cell: &SweepCell) -> Json {
     let c = &cell.cluster;
     Json::obj()
         .set("scenario", Json::Str(cell.scenario.clone()))
+        .set("cost_model", Json::Str(cell.cost.clone()))
         .set("r", Json::Num(m.r as f64))
         .set("batch", Json::Num(m.batch as f64))
         // String, not Num: the SplitMix64-derived seeds use the full u64
@@ -239,6 +245,7 @@ fn group_to_json(g: &GroupSummary) -> Json {
         .set("arrival", Json::Str(g.arrival.clone()))
         .set("bundles", Json::Num(g.bundles as f64))
         .set("policy", Json::Str(g.policy.clone()))
+        .set("cost_model", Json::Str(g.cost.clone()))
         .set("batch", Json::Num(g.batch as f64))
         .set("theta", Json::Num(g.load.theta))
         .set("r_star_g", Json::Num(g.r_star_g as f64))
@@ -275,6 +282,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
         "scenario",
         "arrival",
         "fleet",
+        "cost",
         "B",
         "theta",
         "r*_G (theory)",
@@ -289,6 +297,7 @@ pub fn summary_table(res: &SweepResults) -> Table {
             g.scenario.clone(),
             g.arrival.clone(),
             format!("{}x {}", g.bundles, g.policy),
+            g.cost.clone(),
             g.batch.to_string(),
             sig(g.load.theta, 4),
             g.r_star_g.to_string(),
@@ -307,6 +316,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
         "scenario",
         "arrival",
         "fleet",
+        "cost",
         "r",
         "B",
         "sim Thr/inst",
@@ -326,6 +336,7 @@ pub fn cells_table(res: &SweepResults) -> Table {
             c.scenario.clone(),
             c.arrival.kind.to_string(),
             format!("{}x {}", c.cluster.bundles, c.cluster.policy),
+            c.cost.clone(),
             m.r.to_string(),
             m.batch.to_string(),
             sig(m.throughput_per_instance, 5),
@@ -462,6 +473,43 @@ mod tests {
         assert!(j.contains("\"cluster\""));
         assert!(j.contains("\"per_bundle\""));
         assert!(j.contains("\"imbalance\""));
+    }
+
+    #[test]
+    fn cost_model_axis_emits_cost_column_and_linearized_theory() {
+        use crate::latency::cost::CostSpec;
+        let mut base = ExperimentConfig::default();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_costs(vec![CostSpec::Linear, CostSpec::Roofline]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        let t = to_csv_table(&res);
+        assert_eq!(t.rows.len(), 4);
+        let col = t.col("cost_model").unwrap();
+        let costs: Vec<&str> = t.rows.iter().map(|r| r[col].as_str()).collect();
+        assert_eq!(costs, vec!["linear", "linear", "roofline", "roofline"]);
+        // Theory columns differ across the surfaces at the same (r, B).
+        let thr_g = t.column_f64("theory_thr_g").unwrap();
+        assert!(thr_g.iter().all(|&x| x > 0.0));
+        assert_ne!(thr_g[0], thr_g[2]);
+        // JSON carries the cost model on cells and groups.
+        let j = to_json(&res);
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        let cells = back.field("cells").unwrap().as_arr().unwrap();
+        assert_eq!(
+            cells[0].field("cost_model").unwrap().as_str().unwrap(),
+            "linear"
+        );
+        let groups = back.field("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            groups[1].field("cost_model").unwrap().as_str().unwrap(),
+            "roofline"
+        );
     }
 
     #[test]

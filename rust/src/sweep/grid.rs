@@ -1,4 +1,4 @@
-//! Parallel (scenario × arrival × fleet × r × B) grid runner.
+//! Parallel (scenario × arrival × fleet × cost × r × B) grid runner.
 //!
 //! Every cell of the cross-product is one independent cluster simulation
 //! ([`crate::sim::cluster::ClusterSimulation`]; a 1-bundle fleet is
@@ -15,7 +15,12 @@
 //! ([`FleetSpec`]): how many `rA-1F` bundles share the stream and which
 //! routing policy splits it. Scenario length sources follow
 //! [`crate::sweep::scenarios::SourceSpec`]: synthetic sampling or
-//! deterministic trace replay.
+//! deterministic trace replay. The *cost-model* axis
+//! ([`crate::latency::cost::CostSpec`]) sweeps the phase-pricing
+//! surface itself — calibrated linear, first-principles roofline, MoE
+//! expert-imbalance, or blends — with theory columns derived from each
+//! model's linearization so the theory-vs-sim gap stays comparable
+//! across surfaces.
 //!
 //! **Determinism.** Each cell derives its own seed from the experiment
 //! seed and its grid coordinates (SplitMix64 chain, the same hierarchy
@@ -34,6 +39,7 @@ use crate::analysis::cycle_time::OperatingPoint;
 use crate::config::experiment::ExperimentConfig;
 use crate::coordinator::router::Policy;
 use crate::error::Result;
+use crate::latency::cost::{CostPoint, CostSpec};
 use crate::sim::cluster::{ClusterArrival, ClusterSimulation};
 use crate::sim::engine::SimOptions;
 use crate::sim::metrics::SimMetrics;
@@ -136,6 +142,11 @@ pub struct SweepGrid {
     /// Fleet shapes (default: one bundle, round robin — the legacy
     /// single-bundle sweep).
     pub fleets: Vec<FleetSpec>,
+    /// Phase-cost models (default: the calibrated linear surface only —
+    /// the pre-cost-model sweep). Theory columns for nonlinear models
+    /// come from each model's `linearized()` hook at the cell's nominal
+    /// operating point.
+    pub cost_models: Vec<CostSpec>,
     /// Fan-in values (paper's r axis).
     pub ratios: Vec<usize>,
     /// Per-worker microbatch sizes (paper's B axis).
@@ -149,6 +160,7 @@ impl SweepGrid {
             scenarios,
             arrivals: vec![ArrivalSpec::Closed],
             fleets: vec![FleetSpec::single()],
+            cost_models: vec![CostSpec::Linear],
             ratios,
             batches,
         }
@@ -166,6 +178,12 @@ impl SweepGrid {
         self
     }
 
+    /// Replace the cost-model axis.
+    pub fn with_costs(mut self, cost_models: Vec<CostSpec>) -> Self {
+        self.cost_models = cost_models;
+        self
+    }
+
     /// Grid over the config's ratio sweep and batch at the registry
     /// scenarios.
     pub fn from_config(scenarios: Vec<Scenario>, cfg: &ExperimentConfig) -> Self {
@@ -176,6 +194,7 @@ impl SweepGrid {
         self.scenarios.len()
             * self.arrivals.len()
             * self.fleets.len()
+            * self.cost_models.len()
             * self.ratios.len()
             * self.batches.len()
     }
@@ -242,6 +261,26 @@ impl SweepGrid {
                 )));
             }
         }
+        if self.cost_models.is_empty() {
+            return Err(crate::error::AfdError::config("sweep grid needs >= 1 cost model"));
+        }
+        for c in &self.cost_models {
+            c.validate()?;
+        }
+        // Cost models are keyed by their parameterized *label* in group
+        // summaries and CSV rows, so distinct parameterizations of one
+        // family (blended:0.25 vs blended:0.75) may share a grid.
+        let mut cost_labels: Vec<String> =
+            self.cost_models.iter().map(|c| c.label()).collect();
+        cost_labels.sort_unstable();
+        for w in cost_labels.windows(2) {
+            if w[0] == w[1] {
+                return Err(crate::error::AfdError::config(format!(
+                    "cost model {:?} appears more than once in the sweep grid",
+                    w[0]
+                )));
+            }
+        }
         for s in &self.scenarios {
             s.spec.validate()?;
         }
@@ -283,6 +322,8 @@ pub struct ClusterCellStats {
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     pub scenario: String,
+    /// Phase-cost model name of this cell ("linear" / "roofline" / ...).
+    pub cost: String,
     /// Declared stationary moments of the scenario (theory inputs).
     pub load: StationaryLoad,
     /// The cell seed actually used (recorded for reproduction).
@@ -314,6 +355,10 @@ pub struct GroupSummary {
     pub bundles: usize,
     /// Routing policy name of this group.
     pub policy: String,
+    /// Phase-cost model name of this group. Theory columns (`r*_G`,
+    /// `theory_peak`) are computed from the model's linearization, so
+    /// the theory-vs-sim gap stays meaningful off the linear surface.
+    pub cost: String,
     pub batch: usize,
     pub load: StationaryLoad,
     /// Barrier-aware theory argmax `r*_G` over the swept ratios (Eq. 12).
@@ -331,7 +376,8 @@ pub struct GroupSummary {
 }
 
 /// Full sweep output: cells in canonical grid order (scenario-major,
-/// then arrival, then batch, then ratio) plus per-group summaries.
+/// then arrival, fleet, cost model, batch, ratio) plus per-group
+/// summaries.
 #[derive(Debug, Clone)]
 pub struct SweepResults {
     pub cells: Vec<SweepCell>,
@@ -341,11 +387,16 @@ pub struct SweepResults {
 /// Derive the per-cell seed: a SplitMix64 chain over the experiment seed
 /// and the cell coordinates. Stable across runs, platforms, and thread
 /// schedules; distinct per cell so scenarios don't share request
-/// streams. The arrival process and fleet shape deliberately do not
-/// enter the chain: closed/open and 1-bundle/N-bundle cells at the same
-/// coordinates share bundle-0 length streams, isolating the
-/// arrival-process and routing effects (bundles past the first fork via
-/// [`crate::sim::cluster::bundle_seed`]).
+/// streams. The arrival process, fleet shape, and cost model
+/// deliberately do not enter the chain: closed/open, 1-bundle/N-bundle,
+/// and linear/roofline/MoE cells at the same coordinates share bundle-0
+/// length streams, isolating the arrival-process, routing, and
+/// cost-surface effects (bundles past the first fork via
+/// [`crate::sim::cluster::bundle_seed`]). Note that under rho-based
+/// open arrivals the *rate* still differs per cost model — rho is a
+/// utilization of the cell's own (linearized) capacity — so only
+/// explicit-lambda open specs share identical arrival processes across
+/// the cost axis.
 pub fn cell_seed(base: u64, scenario_idx: usize, batch: usize, r: usize) -> u64 {
     let mut sm = SplitMix64::new(
         base ^ (scenario_idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -404,6 +455,7 @@ fn run_cell(
     scenario: &Scenario,
     arrival: ArrivalSpec,
     fleet: FleetSpec,
+    cost: CostSpec,
     r: usize,
     opts: SimOptions,
 ) -> CellResult {
@@ -411,6 +463,7 @@ fn run_cell(
     let mut builder = ClusterSimulation::builder(cfg, r)
         .bundles(fleet.bundles)
         .policy(fleet.policy)
+        .cost(cost)
         .batches_in_flight(opts.batches_in_flight)
         .warm_start(opts.warm_start)
         .completions_per_bundle(opts.max_completions)
@@ -453,6 +506,7 @@ struct CellJob {
     scenario_idx: usize,
     arrival: ArrivalSpec,
     fleet: FleetSpec,
+    cost: CostSpec,
     batch: usize,
     r: usize,
     cfg: ExperimentConfig,
@@ -476,36 +530,59 @@ fn build_jobs(base: &ExperimentConfig, grid: &SweepGrid) -> Vec<CellJob> {
     for (si, scenario) in grid.scenarios.iter().enumerate() {
         for &arrival in &grid.arrivals {
             for &fleet in &grid.fleets {
-                for &batch in &grid.batches {
-                    for &r in &grid.ratios {
-                        let arrival = match arrival {
-                            ArrivalSpec::Open { rho, lambda: None, queue_capacity } => {
-                                let (load, mean_decode) = scenario_moments[si]
-                                    .expect("moments computed when needed");
-                                let rate = open_loop_rate(
-                                    base.hardware,
-                                    load,
-                                    batch,
-                                    r,
-                                    rho,
-                                    mean_decode,
-                                );
-                                // Guard against degenerate theory output;
-                                // validation catches the user-facing cases.
-                                let rate =
-                                    if rate.is_finite() && rate > 0.0 { rate } else { 1e-6 };
-                                ArrivalSpec::Open { rho, lambda: Some(rate), queue_capacity }
-                            }
-                            other => other,
-                        };
-                        jobs.push(CellJob {
-                            scenario_idx: si,
-                            arrival,
-                            fleet,
-                            batch,
-                            r,
-                            cfg: cell_config(base, scenario, si, batch, r),
-                        });
+                for &cost in &grid.cost_models {
+                    for &batch in &grid.batches {
+                        for &r in &grid.ratios {
+                            let arrival = match arrival {
+                                ArrivalSpec::Open { rho, lambda: None, queue_capacity } => {
+                                    let (load, mean_decode) = scenario_moments[si]
+                                        .expect("moments computed when needed");
+                                    // rho is a utilization of *this
+                                    // cell's* capacity: price it on the
+                                    // cell's cost model (linearized at
+                                    // the nominal point), not the base
+                                    // linear surface — a moe/roofline
+                                    // cell's capacity differs, and a
+                                    // shared linear-priced lambda would
+                                    // silently break the rho contract.
+                                    // Identity for the linear model.
+                                    let rate = open_loop_rate(
+                                        cost.linearized_hardware(
+                                            &base.hardware,
+                                            CostPoint::nominal(r, batch, load.theta),
+                                        ),
+                                        load,
+                                        batch,
+                                        r,
+                                        rho,
+                                        mean_decode,
+                                    );
+                                    // Guard against degenerate theory
+                                    // output; validation catches the
+                                    // user-facing cases.
+                                    let rate = if rate.is_finite() && rate > 0.0 {
+                                        rate
+                                    } else {
+                                        1e-6
+                                    };
+                                    ArrivalSpec::Open {
+                                        rho,
+                                        lambda: Some(rate),
+                                        queue_capacity,
+                                    }
+                                }
+                                other => other,
+                            };
+                            jobs.push(CellJob {
+                                scenario_idx: si,
+                                arrival,
+                                fleet,
+                                cost,
+                                batch,
+                                r,
+                                cfg: cell_config(base, scenario, si, batch, r),
+                            });
+                        }
                     }
                 }
             }
@@ -544,9 +621,16 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> Swe
     let mut cells = Vec::with_capacity(jobs.len());
     for (job, res) in jobs.iter().zip(results) {
         let load = loads[job.scenario_idx];
-        // Hardware is shared across the grid (the base config's); cell
-        // configs only vary workload, batch, and seed.
-        let op = OperatingPoint::new(job.cfg.hardware, load, job.batch);
+        // Theory columns price the cell's *cost model*, linearized at
+        // the cell's nominal operating point (B·theta, r·B). For the
+        // linear model the linearization is the identity on
+        // `cfg.hardware`, reproducing the pre-cost-model theory columns
+        // bit for bit.
+        let lin_hw = job.cost.linearized_hardware(
+            &job.cfg.hardware,
+            CostPoint::nominal(job.r, job.batch, load.theta),
+        );
+        let op = OperatingPoint::new(lin_hw, load, job.batch);
         let theory_g = op.throughput_gaussian(job.r);
         let mut converged = res.converged_r.clone();
         converged.sort_unstable();
@@ -565,6 +649,7 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> Swe
         };
         cells.push(SweepCell {
             scenario: grid.scenarios[job.scenario_idx].name.to_string(),
+            cost: job.cost.label(),
             load,
             seed: job.cfg.seed,
             theory_mf: op.throughput_mean_field(job.r as f64),
@@ -576,52 +661,62 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> Swe
         });
     }
 
-    // Group summaries per (scenario, arrival, fleet, batch), in grid
-    // order.
+    // Group summaries per (scenario, arrival, fleet, cost, batch), in
+    // grid order.
     let mut groups = Vec::with_capacity(
-        grid.scenarios.len() * grid.arrivals.len() * grid.fleets.len() * grid.batches.len(),
+        grid.scenarios.len()
+            * grid.arrivals.len()
+            * grid.fleets.len()
+            * grid.cost_models.len()
+            * grid.batches.len(),
     );
     let rn = grid.ratios.len();
     for (si, scenario) in grid.scenarios.iter().enumerate() {
         for (ai, arrival) in grid.arrivals.iter().enumerate() {
             for (fi, fleet) in grid.fleets.iter().enumerate() {
-                for (bi, &batch) in grid.batches.iter().enumerate() {
-                    let start = (((si * grid.arrivals.len() + ai) * grid.fleets.len() + fi)
-                        * grid.batches.len()
-                        + bi)
-                        * rn;
-                    let slice = &cells[start..start + rn];
-                    let (mut r_star_g, mut theory_peak) =
-                        (slice[0].metrics.r, slice[0].theory_g);
-                    let (mut sim_opt_r, mut sim_peak) = (
-                        slice[0].metrics.r,
-                        slice[0].metrics.delivered_throughput_per_instance,
-                    );
-                    for c in &slice[1..] {
-                        if c.theory_g > theory_peak {
-                            theory_peak = c.theory_g;
-                            r_star_g = c.metrics.r;
+                for (ci, cost) in grid.cost_models.iter().enumerate() {
+                    for (bi, &batch) in grid.batches.iter().enumerate() {
+                        let start = ((((si * grid.arrivals.len() + ai) * grid.fleets.len()
+                            + fi)
+                            * grid.cost_models.len()
+                            + ci)
+                            * grid.batches.len()
+                            + bi)
+                            * rn;
+                        let slice = &cells[start..start + rn];
+                        let (mut r_star_g, mut theory_peak) =
+                            (slice[0].metrics.r, slice[0].theory_g);
+                        let (mut sim_opt_r, mut sim_peak) = (
+                            slice[0].metrics.r,
+                            slice[0].metrics.delivered_throughput_per_instance,
+                        );
+                        for c in &slice[1..] {
+                            if c.theory_g > theory_peak {
+                                theory_peak = c.theory_g;
+                                r_star_g = c.metrics.r;
+                            }
+                            let d = c.metrics.delivered_throughput_per_instance;
+                            if d > sim_peak {
+                                sim_peak = d;
+                                sim_opt_r = c.metrics.r;
+                            }
                         }
-                        let d = c.metrics.delivered_throughput_per_instance;
-                        if d > sim_peak {
-                            sim_peak = d;
-                            sim_opt_r = c.metrics.r;
-                        }
+                        groups.push(GroupSummary {
+                            scenario: scenario.name.to_string(),
+                            arrival: arrival.kind().to_string(),
+                            bundles: fleet.bundles,
+                            policy: fleet.policy.name().to_string(),
+                            cost: cost.label(),
+                            batch,
+                            load: loads[si],
+                            r_star_g,
+                            theory_peak,
+                            sim_opt_r,
+                            sim_peak,
+                            ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs()
+                                / sim_opt_r as f64,
+                        });
                     }
-                    groups.push(GroupSummary {
-                        scenario: scenario.name.to_string(),
-                        arrival: arrival.kind().to_string(),
-                        bundles: fleet.bundles,
-                        policy: fleet.policy.name().to_string(),
-                        batch,
-                        load: loads[si],
-                        r_star_g,
-                        theory_peak,
-                        sim_opt_r,
-                        sim_peak,
-                        ratio_gap: (r_star_g as f64 - sim_opt_r as f64).abs()
-                            / sim_opt_r as f64,
-                    });
                 }
             }
         }
@@ -646,15 +741,24 @@ pub fn run_grid(
     // Submit longest cells first (LPT); carry each job's index so the
     // results can be reassembled into canonical grid order.
     let order = lpt_order(&jobs, &opts);
-    let work: Vec<(usize, ExperimentConfig, Scenario, ArrivalSpec, FleetSpec, usize)> = order
+    type Work = (usize, ExperimentConfig, Scenario, ArrivalSpec, FleetSpec, CostSpec, usize);
+    let work: Vec<Work> = order
         .iter()
         .map(|&i| {
             let j = &jobs[i];
-            (i, j.cfg.clone(), grid.scenarios[j.scenario_idx].clone(), j.arrival, j.fleet, j.r)
+            (
+                i,
+                j.cfg.clone(),
+                grid.scenarios[j.scenario_idx].clone(),
+                j.arrival,
+                j.fleet,
+                j.cost,
+                j.r,
+            )
         })
         .collect();
-    let permuted = pool.map(work, move |(i, cfg, scenario, arrival, fleet, r)| {
-        (i, run_cell(&cfg, &scenario, arrival, fleet, r, opts))
+    let permuted = pool.map(work, move |(i, cfg, scenario, arrival, fleet, cost, r)| {
+        (i, run_cell(&cfg, &scenario, arrival, fleet, cost, r, opts))
     });
     let mut slots: Vec<Option<CellResult>> = (0..jobs.len()).map(|_| None).collect();
     for (i, res) in permuted {
@@ -678,7 +782,15 @@ pub fn run_grid_serial(
     let results: Vec<CellResult> = jobs
         .iter()
         .map(|j| {
-            run_cell(&j.cfg, &grid.scenarios[j.scenario_idx], j.arrival, j.fleet, j.r, opts)
+            run_cell(
+                &j.cfg,
+                &grid.scenarios[j.scenario_idx],
+                j.arrival,
+                j.fleet,
+                j.cost,
+                j.r,
+                opts,
+            )
         })
         .collect();
     Ok(assemble(grid, &jobs, results))
@@ -979,6 +1091,105 @@ mod tests {
                 b.metrics.delivered_throughput_per_instance.to_bits()
             );
         }
+    }
+
+    #[test]
+    fn cost_model_axis_sweeps_distinct_surfaces_with_linearized_theory() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 60;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_costs(vec![CostSpec::Linear, CostSpec::Roofline, CostSpec::moe_default()]);
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 6);
+        assert_eq!(res.groups.len(), 3);
+        // Canonical order: cost-major over (batch, ratio); labels are
+        // parameterized.
+        assert_eq!(res.cells[0].cost, "linear");
+        assert_eq!(res.cells[2].cost, "roofline");
+        assert_eq!(res.cells[4].cost, "moe:0.15:2");
+        assert_eq!(res.groups[0].cost, "linear");
+        assert_eq!(res.groups[1].cost, "roofline");
+        assert_eq!(res.groups[2].cost, "moe:0.15:2");
+        // Linear theory columns match the pre-cost-model path exactly.
+        let load = grid.scenarios[0].expected_load();
+        let op = OperatingPoint::new(base.hardware, load, 8);
+        assert_eq!(res.cells[0].theory_g.to_bits(), op.throughput_gaussian(1).to_bits());
+        // Nonlinear surfaces price different schedules AND different
+        // theory (linearized) columns at the same coordinates.
+        for (lin, other) in [(0, 2), (0, 4)] {
+            assert_eq!(res.cells[lin].seed, res.cells[other].seed, "shared cell seed");
+            assert_ne!(
+                res.cells[lin].metrics.total_time.to_bits(),
+                res.cells[other].metrics.total_time.to_bits(),
+                "cost model {} priced the linear schedule",
+                res.cells[other].cost
+            );
+            assert_ne!(
+                res.cells[lin].theory_g.to_bits(),
+                res.cells[other].theory_g.to_bits()
+            );
+            assert!(res.cells[other].theory_g > 0.0);
+            assert!(res.cells[other].theory_g.is_finite());
+        }
+    }
+
+    #[test]
+    fn cost_axis_parallel_matches_serial() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::open(0.8, 64)])
+        .with_costs(vec![CostSpec::Linear, CostSpec::moe_default()]);
+        let par = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(par.cells.len(), 4);
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(a.theory_g.to_bits(), b.theory_g.to_bits());
+            assert_eq!(a.arrival, b.arrival);
+        }
+    }
+
+    #[test]
+    fn duplicate_or_empty_cost_models_rejected_but_parameterizations_coexist() {
+        let base = tiny_base();
+        let g = tiny_grid().with_costs(vec![]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let g = tiny_grid().with_costs(vec![CostSpec::Linear, CostSpec::Linear]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        // Identical parameterizations collide on the label...
+        let g = tiny_grid().with_costs(vec![CostSpec::moe_default(), CostSpec::moe_default()]);
+        assert!(g.validate().is_err());
+        // ...but distinct parameterizations of one family are a valid
+        // ablation axis (distinct labels key distinct groups/rows).
+        let mut base2 = tiny_base();
+        base2.requests_per_instance = 30;
+        let g = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1],
+            vec![8],
+        )
+        .with_costs(vec![
+            CostSpec::Blended { weight: 0.25 },
+            CostSpec::Blended { weight: 0.75 },
+        ]);
+        let res = run_grid_serial(&base2, &g, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 2);
+        assert_eq!(res.cells[0].cost, "blended:0.25");
+        assert_eq!(res.cells[1].cost, "blended:0.75");
+        assert_ne!(
+            res.cells[0].metrics.total_time.to_bits(),
+            res.cells[1].metrics.total_time.to_bits()
+        );
     }
 
     #[test]

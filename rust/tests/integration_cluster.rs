@@ -168,6 +168,155 @@ fn four_bundle_jsq_cluster_is_byte_identical_to_frozen_aos_engine_on_every_scena
     }
 }
 
+#[test]
+fn explicit_linear_cost_four_bundle_jsq_cluster_matches_frozen_aos_engine() {
+    // The cluster-level LinearCost golden: a 4-bundle JSQ fleet with the
+    // cost model installed explicitly — uniformly via `.cost(...)` AND
+    // per bundle via homogeneous `bundle_specs` — reproduces the frozen
+    // pre-redesign AoS cluster byte for byte, closed and routed open
+    // loop.
+    use afd::latency::cost::CostSpec;
+    use afd::sim::cluster::BundleSpec;
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology.batch_per_worker = 8;
+    let (r, bundles, target) = (2, 4, 60);
+    for arrival in [
+        ClusterArrival::Closed,
+        ClusterArrival::Open { lambda: 0.4, queue_capacity: 64 },
+    ] {
+        let reference = run_reference_cluster(
+            &cfg,
+            r,
+            bundles,
+            Policy::JoinShortestQueue,
+            arrival,
+            BATCHES_IN_FLIGHT,
+            true,
+            target,
+        );
+        let spec = BundleSpec::new(r, cfg.topology.batch_per_worker, CostSpec::Linear);
+        let variants: [afd::sim::cluster::ClusterSimulation; 2] = [
+            ClusterSimulation::builder(&cfg, r)
+                .bundles(bundles)
+                .policy(Policy::JoinShortestQueue)
+                .cost(CostSpec::Linear)
+                .arrival(arrival)
+                .completions_per_bundle(Some(target))
+                .build()
+                .unwrap(),
+            ClusterSimulation::builder(&cfg, r)
+                .bundle_specs(vec![spec; bundles])
+                .policy(Policy::JoinShortestQueue)
+                .arrival(arrival)
+                .completions_per_bundle(Some(target))
+                .build()
+                .unwrap(),
+        ];
+        for (vi, sim) in variants.into_iter().enumerate() {
+            let out = sim.run().unwrap();
+            assert_eq!(out.bundles.len(), reference.bundles.len());
+            for (b, rb) in out.bundles.iter().zip(&reference.bundles) {
+                assert_eq!(
+                    completions_to_csv_string(&b.completions),
+                    completions_to_csv_string(&rb.completions),
+                    "variant {vi} / {arrival:?}: bundle {} completions CSV diverged",
+                    b.bundle
+                );
+                assert_eq!(
+                    sim_metrics_to_json(&b.metrics).to_string_pretty(),
+                    sim_metrics_to_json(&rb.metrics).to_string_pretty(),
+                    "variant {vi} / {arrival:?}: bundle {} metrics JSON diverged",
+                    b.bundle
+                );
+                assert_eq!(b.arrival, rb.arrival, "variant {vi} / {arrival:?}");
+            }
+            assert_eq!(
+                sim_metrics_to_json(&out.aggregate).to_string_pretty(),
+                sim_metrics_to_json(&reference.aggregate).to_string_pretty(),
+                "variant {vi} / {arrival:?}: aggregate metrics JSON diverged"
+            );
+            assert_eq!(out.arrival, reference.arrival, "variant {vi} / {arrival:?}");
+            assert_eq!(
+                out.load_imbalance.to_bits(),
+                reference.load_imbalance.to_bits(),
+                "variant {vi} / {arrival:?}: load imbalance diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_cluster_with_mixed_cost_models_completes_with_per_bundle_theory() {
+    // The acceptance scenario: one cluster mixing per-bundle r, B, and
+    // cost models runs end to end, and each bundle's theory column is
+    // derivable from its cost model's linearization.
+    use afd::latency::cost::{CostPoint, CostSpec};
+    use afd::sim::cluster::BundleSpec;
+    use afd::workload::estimator::estimate_stationary;
+    use afd::workload::request::RequestLengths;
+    use afd::workload::trace::Trace;
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload = afd::config::workload::WorkloadSpec::independent(
+        afd::stats::distributions::LengthDist::geometric_with_mean(30.0),
+        afd::stats::distributions::LengthDist::geometric_with_mean(40.0),
+    );
+    let specs = vec![
+        BundleSpec::new(2, 8, CostSpec::Linear),
+        BundleSpec::new(4, 16, CostSpec::Roofline),
+        BundleSpec::new(3, 8, CostSpec::moe_default()),
+        BundleSpec::new(2, 16, CostSpec::Blended { weight: 0.5 }),
+    ];
+    let out = ClusterSimulation::builder(&cfg, 2)
+        .bundle_specs(specs.clone())
+        .policy(Policy::JoinShortestQueue)
+        .arrival(ClusterArrival::Open { lambda: 0.5, queue_capacity: 256 })
+        .completions_per_bundle(Some(150))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert_eq!(out.bundles.len(), specs.len());
+    let a = out.arrival;
+    assert_eq!(a.offered, a.admitted + a.rejected, "conservation: {a:?}");
+    for (b, spec) in out.bundles.iter().zip(&specs) {
+        assert_eq!(b.final_r, spec.r);
+        assert_eq!(b.batch, spec.batch);
+        assert_eq!(b.cost, spec.cost);
+        assert_eq!(b.completions.len(), 150, "bundle {}", b.bundle);
+        assert!(b.metrics.delivered_throughput_per_instance > 0.0);
+
+        // Per-bundle theory via the linearized cost model: estimate the
+        // bundle's realized moments, linearize its surface there, and
+        // price Thr_G — finite, positive, and validation-clean for
+        // every shipped model.
+        let lens: Vec<RequestLengths> = b
+            .completions
+            .iter()
+            .map(|c| RequestLengths::new(c.prefill, c.decode_len.max(1)))
+            .collect();
+        let load = estimate_stationary(&Trace::new(lens)).unwrap();
+        let lin_hw = b.cost.linearized_hardware(
+            &cfg.hardware,
+            CostPoint::nominal(b.final_r, b.batch, load.theta),
+        );
+        lin_hw.validate().unwrap();
+        let thr_g = OperatingPoint::new(lin_hw, load, b.batch)
+            .throughput_gaussian(b.final_r);
+        assert!(
+            thr_g.is_finite() && thr_g > 0.0,
+            "bundle {} ({}): degenerate linearized theory {thr_g}",
+            b.bundle,
+            b.cost.name()
+        );
+        let r_star = r_star_g_on_grid(&lin_hw, load, b.batch, &(1..=8).collect::<Vec<_>>())
+            .unwrap()
+            .r_star;
+        assert!((1..=8).contains(&r_star), "bundle {}", b.bundle);
+    }
+}
+
 /// Fleet config used by the JSQ capacity test: a scaled-down geometric
 /// workload in the paper's cost regime.
 fn fleet_cfg(batch: usize) -> ExperimentConfig {

@@ -134,6 +134,77 @@ fn open_loop_session_is_byte_identical_to_frozen_aos_engine_on_every_scenario() 
 }
 
 #[test]
+fn explicit_linear_cost_is_byte_identical_to_frozen_engine_on_every_scenario() {
+    // The CostModel redesign golden: a session priced through an
+    // *explicitly installed* `LinearCost` (the trait-object path, not
+    // the builder default) must reproduce the pre-redesign engine byte
+    // for byte — completions CSV and metrics JSON — across the full
+    // synthetic registry, closed AND open loop.
+    use afd::latency::cost::{CostSpec, LinearCost};
+    for scenario in afd::sweep::scenarios::registry() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload = scenario.spec.clone();
+        cfg.topology.batch_per_worker = 16;
+        cfg.requests_per_instance = 120;
+        let r = 2;
+
+        // Closed loop vs the frozen oracle.
+        let (ref_metrics, ref_completions) =
+            reference_simulate(&cfg, r, BATCHES_IN_FLIGHT);
+        let out = Simulation::builder(&cfg, r)
+            .cost_model(LinearCost::from_hardware(&cfg.hardware))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(
+            completions_to_csv_string(&out.completions),
+            completions_to_csv_string(&ref_completions),
+            "{}: closed-loop LinearCost completions CSV diverged",
+            scenario.name
+        );
+        assert_eq!(
+            sim_metrics_to_json(&out.metrics).to_string_pretty(),
+            sim_metrics_to_json(&ref_metrics).to_string_pretty(),
+            "{}: closed-loop LinearCost metrics JSON diverged",
+            scenario.name
+        );
+
+        // Open loop vs the frozen oracle, through the CostSpec path.
+        let (lambda, queue, target) = (0.2, 32, 200);
+        let out = Simulation::builder(&cfg, r)
+            .cost_spec(CostSpec::Linear)
+            .arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap())
+            .max_completions(Some(target))
+            .build()
+            .unwrap()
+            .run();
+        let (ref_metrics, ref_completions, ref_arrival) = ReferenceSession::build(
+            &cfg,
+            r,
+            BATCHES_IN_FLIGHT,
+            true,
+            target,
+            Box::new(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap()),
+            None,
+        )
+        .run();
+        assert_eq!(
+            completions_to_csv_string(&out.completions),
+            completions_to_csv_string(&ref_completions),
+            "{}: open-loop LinearCost completions CSV diverged",
+            scenario.name
+        );
+        assert_eq!(
+            sim_metrics_to_json(&out.metrics).to_string_pretty(),
+            sim_metrics_to_json(&ref_metrics).to_string_pretty(),
+            "{}: open-loop LinearCost metrics JSON diverged",
+            scenario.name
+        );
+        assert_eq!(out.arrival, ref_arrival, "{}", scenario.name);
+    }
+}
+
+#[test]
 fn heap_lane_scheduling_matches_linear_scan_at_deep_pipelining() {
     // The BinaryHeap replacement for the O(lanes) min-scan must produce
     // the identical event schedule; stress it well past the default

@@ -76,6 +76,59 @@ fn prop_soa_cached_aggregates_match_rescan_and_aos_under_open_loop() {
     );
 }
 
+/// Every shipped [`afd::latency::cost::CostModel`] is non-decreasing in
+/// its driving variable — attention in token load, FFN and comm in the
+/// aggregated batch — under *coupled* sampling: stochastic models (MoE
+/// imbalance) are rebuilt from the same seed for both evaluations so
+/// each draw sequence is identical and the comparison is between the
+/// same realized surface at two loads (the monotone-coupling form of
+/// stochastic monotonicity). The linearization must stay exact at the
+/// operating point (deterministic models) and validation-clean.
+#[test]
+fn prop_cost_models_are_monotone_and_linearize_cleanly() {
+    use afd::latency::cost::{CostPoint, CostSpec};
+    forall(
+        "cost models monotone under coupled draws",
+        150,
+        Gen::triple(
+            Gen::f64_log_range(1.0, 1e7),
+            Gen::f64_log_range(1.0, 1e7),
+            Gen::u64_range(0, u64::MAX / 2),
+        ),
+        |&(x, y, seed)| {
+            let hw = HardwareParams::paper_table3();
+            let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+            CostSpec::all().iter().all(|spec| {
+                // Coupled evaluation: a fresh model per point, same seed.
+                let eval = |v: f64| {
+                    let m = spec.build(&hw, seed);
+                    (m.attention(v, 1), m.ffn(v), m.comm(v))
+                };
+                let (a_lo, f_lo, c_lo) = eval(lo);
+                let (a_hi, f_hi, c_hi) = eval(hi);
+                if !(a_lo <= a_hi && f_lo <= f_hi && c_lo <= c_hi) {
+                    return false;
+                }
+                // Linearization validates and, for deterministic models,
+                // is exact at the operating point.
+                let at = CostPoint::new(lo, hi);
+                let m = spec.build(&hw, seed);
+                let lin = m.linearized(at);
+                if lin.to_hardware().validate().is_err() {
+                    return false;
+                }
+                match spec {
+                    CostSpec::Moe { .. } => true,
+                    _ => {
+                        let want = m.ffn(at.agg_batch);
+                        (lin.ffn.eval(at.agg_batch) - want).abs() <= 1e-9 * want.abs().max(1.0)
+                    }
+                }
+            })
+        },
+    );
+}
+
 #[test]
 fn prop_router_never_out_of_range() {
     forall(
@@ -83,14 +136,15 @@ fn prop_router_never_out_of_range() {
         300,
         Gen::triple(
             Gen::usize_range(1, 12),
-            Gen::u64_range(0, 2),
+            Gen::u64_range(0, 3),
             Gen::u64_range(0, u64::MAX / 2),
         ),
         |&(workers, policy_pick, seed)| {
-            let policy = match policy_pick {
+            let policy = match policy_pick % 4 {
                 0 => Policy::RoundRobin,
                 1 => Policy::JoinShortestQueue,
-                _ => Policy::LeastTokenLoad,
+                2 => Policy::LeastTokenLoad,
+                _ => Policy::KvHeadroom,
             };
             let mut rng = Pcg64::new(seed);
             let mut router = Router::new(policy);

@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""Schema gate for ``afd lint --json`` reports (schema version 1).
+
+``cargo run --release -- lint --json bench_out/lint.json`` emits::
+
+    {"version": 1, "root": str, "files_scanned": int,
+     "findings": [{"file": str, "line": int, "rule": str, "family": str,
+                   "message": str, "snippet": str, "allowed": bool,
+                   "baselined": bool}, ...],
+     "summary": {"total": int, "allowed": int, "baselined": int,
+                 "unbaselined": int, "exceeded_pairs": int,
+                 "slack_pairs": int},
+     "passed": bool}
+
+CI validates the shape here before uploading the report as the lint
+artifact. Deliberately *not* validated: finding counts — the linter's own
+exit code (via the baseline ratchet) is the gate; this script only keeps
+the machine-readable contract honest.
+
+Usage:
+    python3 python/check_lint_json.py bench_out/lint.json
+    python3 python/check_lint_json.py --selftest   # validator edge cases
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+TOP_REQUIRED = {
+    "version": int,
+    "root": str,
+    "files_scanned": int,
+    "findings": list,
+    "summary": dict,
+    "passed": bool,
+}
+
+FINDING_REQUIRED = {
+    "file": str,
+    "line": int,
+    "rule": str,
+    "family": str,
+    "message": str,
+    "snippet": str,
+    "allowed": bool,
+    "baselined": bool,
+}
+
+SUMMARY_REQUIRED = {
+    "total": int,
+    "allowed": int,
+    "baselined": int,
+    "unbaselined": int,
+    "exceeded_pairs": int,
+    "slack_pairs": int,
+}
+
+FAMILIES = ("determinism", "panic", "meta", "consistency")
+
+
+def _typecheck(obj: dict, spec: dict, where: str, errors: list[str]) -> None:
+    for key, expected in spec.items():
+        if key not in obj:
+            errors.append(f"{where}: missing key {key!r}")
+            continue
+        value = obj[key]
+        # bool is an int subclass; only accept it where bool is expected.
+        if expected is not bool and isinstance(value, bool):
+            errors.append(f"{where}.{key}: expected {expected.__name__}, got bool")
+        elif not isinstance(value, expected):
+            errors.append(
+                f"{where}.{key}: expected {expected.__name__}, "
+                f"got {type(value).__name__}"
+            )
+    extra = set(obj) - set(spec)
+    if extra:
+        errors.append(f"{where}: unknown key(s) {sorted(extra)}")
+
+
+def validate(report: object) -> list[str]:
+    """Return a list of schema violations (empty == valid)."""
+    errors: list[str] = []
+    if not isinstance(report, dict):
+        return [f"top level must be a JSON object, got {type(report).__name__}"]
+    spec = dict(TOP_REQUIRED)
+    spec.pop("summary")
+    _typecheck({k: v for k, v in report.items() if k != "summary"}, spec, "report", errors)
+    if report.get("version") != 1:
+        errors.append(f"report.version: expected 1, got {report.get('version')!r}")
+    summary = report.get("summary")
+    if not isinstance(summary, dict):
+        errors.append("report.summary: must be an object")
+        summary = {}
+    else:
+        _typecheck(summary, SUMMARY_REQUIRED, "summary", errors)
+    findings = report.get("findings")
+    if not isinstance(findings, list):
+        return errors + ["report.findings: must be an array"]
+    for i, f in enumerate(findings):
+        where = f"findings[{i}]"
+        if not isinstance(f, dict):
+            errors.append(f"{where}: must be an object, got {type(f).__name__}")
+            continue
+        _typecheck(f, FINDING_REQUIRED, where, errors)
+        if isinstance(f.get("line"), int) and not isinstance(f.get("line"), bool):
+            if f["line"] < 1:
+                errors.append(f"{where}.line: must be >= 1, got {f['line']!r}")
+        if isinstance(f.get("family"), str) and f["family"] not in FAMILIES:
+            errors.append(f"{where}.family: unknown family {f['family']!r}")
+        if isinstance(f.get("rule"), str) and not f["rule"]:
+            errors.append(f"{where}.rule: must be non-empty")
+    # Internal consistency: the summary must agree with the findings list.
+    if isinstance(summary, dict) and all(
+        isinstance(summary.get(k), int) and not isinstance(summary.get(k), bool)
+        for k in ("total", "allowed", "baselined", "unbaselined")
+    ):
+        if summary["total"] != len(findings):
+            errors.append(
+                f"summary.total: {summary['total']} != {len(findings)} findings"
+            )
+        split = summary["allowed"] + summary["baselined"] + summary["unbaselined"]
+        if split != summary["total"]:
+            errors.append(
+                "summary: allowed + baselined + unbaselined = "
+                f"{split} != total {summary['total']}"
+            )
+    if isinstance(report.get("passed"), bool) and isinstance(summary, dict):
+        exceeded = summary.get("exceeded_pairs")
+        if isinstance(exceeded, int) and not isinstance(exceeded, bool):
+            if report["passed"] != (exceeded == 0):
+                errors.append(
+                    f"report.passed: {report['passed']} inconsistent with "
+                    f"exceeded_pairs = {exceeded}"
+                )
+    return errors
+
+
+def _ok_report() -> dict:
+    return {
+        "version": 1,
+        "root": ".",
+        "files_scanned": 3,
+        "findings": [
+            {
+                "file": "rust/src/util/pool.rs",
+                "line": 46,
+                "rule": "panic-expect",
+                "family": "panic",
+                "message": "m",
+                "snippet": ".expect(...)",
+                "allowed": False,
+                "baselined": True,
+            }
+        ],
+        "summary": {
+            "total": 1,
+            "allowed": 0,
+            "baselined": 1,
+            "unbaselined": 0,
+            "exceeded_pairs": 0,
+            "slack_pairs": 0,
+        },
+        "passed": True,
+    }
+
+
+def selftest() -> int:
+    """Exercise the validator's edge cases (run by CI before the real
+    artifact check, so a regression in ``validate`` cannot ship silently
+    on the happy path)."""
+
+    def mutated(**kw: object) -> dict:
+        r = _ok_report()
+        r.update(kw)
+        return r
+
+    bad_finding = dict(_ok_report()["findings"][0], line=0)
+    bad_family = dict(_ok_report()["findings"][0], family="vibes")
+    cases = [
+        (_ok_report(), True, "well-formed report accepted"),
+        (mutated(findings=[], summary=dict(_ok_report()["summary"], total=0, baselined=0)),
+         True, "empty findings list accepted (clean repo)"),
+        ([], False, "non-object top level rejected"),
+        (mutated(version=2), False, "wrong schema version rejected"),
+        (mutated(passed="yes"), False, "non-bool passed rejected"),
+        (mutated(files_scanned=True), False, "bool-typed count rejected"),
+        (mutated(findings=[bad_finding]), False, "line < 1 rejected"),
+        (mutated(findings=[bad_family]), False, "unknown family rejected"),
+        (mutated(findings=["oops"]), False, "non-object finding rejected"),
+        (mutated(summary=dict(_ok_report()["summary"], total=9)), False,
+         "summary/findings count mismatch rejected"),
+        (mutated(summary=dict(_ok_report()["summary"], allowed=5)), False,
+         "summary split mismatch rejected"),
+        (mutated(passed=False), False, "passed inconsistent with exceeded_pairs rejected"),
+        (mutated(extra_key=1), False, "unknown top-level key rejected"),
+        ({k: v for k, v in _ok_report().items() if k != "summary"}, False,
+         "missing summary rejected"),
+    ]
+    failures = 0
+    for report, want_valid, label in cases:
+        got_valid = not validate(report)
+        status = "ok" if got_valid == want_valid else "FAIL"
+        if got_valid != want_valid:
+            failures += 1
+        print(f"check_lint_json selftest: {status} — {label}")
+    if failures:
+        print(f"check_lint_json selftest: {failures} case(s) failed", file=sys.stderr)
+        return 1
+    print(f"check_lint_json selftest: OK — {len(cases)} cases")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2 or argv[1] in ("-h", "--help"):
+        print(__doc__)
+        return 2
+    if argv[1] == "--selftest":
+        return selftest()
+    path = argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"check_lint_json: cannot read {path}: {exc}", file=sys.stderr)
+        return 1
+    errors = validate(report)
+    if errors:
+        for e in errors:
+            print(f"check_lint_json: {e}", file=sys.stderr)
+        return 1
+    s = report["summary"]
+    print(
+        f"check_lint_json: OK — {report['files_scanned']} file(s), "
+        f"{s['total']} finding(s): {s['allowed']} allowed, "
+        f"{s['baselined']} baselined, {s['unbaselined']} above baseline, "
+        f"passed={report['passed']}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

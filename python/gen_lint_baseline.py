@@ -1,0 +1,395 @@
+#!/usr/bin/env python3
+"""Bootstrap/audit mirror of ``afd lint`` (``rust/src/lint/``).
+
+The Rust implementation is the authoritative linter; this script is a
+line-for-line transliteration of its lexer + per-file rules kept for two
+jobs:
+
+1. **Baseline bootstrap** in toolchain-less environments: regenerate
+   ``lint-baseline.json`` (``--write``) when ``cargo run -- lint
+   --update-baseline`` cannot be executed. The two implementations follow
+   the same spec (one finding per (line, rule); identical blanking and
+   test-region logic), so counts agree.
+2. **CI cross-check**: ``--list`` prints every finding so a divergence
+   between the mirrors shows up as a reviewable diff.
+
+Usage:
+    python3 python/gen_lint_baseline.py [--root DIR] --list
+    python3 python/gen_lint_baseline.py [--root DIR] --write   # lint-baseline.json
+    python3 python/gen_lint_baseline.py [--root DIR] --check   # exit 1 on findings
+                                                               # not in baseline
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+# Rule ids — must match rust/src/lint/rules.rs.
+DET_RULES = ("det-unordered-collection", "det-wall-clock", "det-thread-spawn", "det-env-read")
+PANIC_RULES = ("panic-unwrap", "panic-expect", "panic-macro", "panic-slice-index", "unsafe-no-safety")
+META_RULES = ("lint-malformed-allow",)
+CONSISTENCY_RULES = ("cargo-target-missing", "cargo-target-unlisted", "use-unresolved", "brace-unbalanced")
+ALL_RULES = DET_RULES + PANIC_RULES + META_RULES + CONSISTENCY_RULES
+
+WALL_CLOCK_PATTERNS = ("Instant::now", "SystemTime")
+THREAD_PATTERNS = ("thread::spawn", "thread::Builder", "thread::scope")
+ENV_PATTERNS = ("env::var", "env::args", "env::vars", "available_parallelism")
+PANIC_MACROS = ("panic!(", "unreachable!(", "todo!(", "unimplemented!(")
+
+INDEX_RE = re.compile(r"[A-Za-z0-9_)\]]\[")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+USE_RE = re.compile(r"^\s*(?:pub\s+)?use\s+(crate|afd)::([A-Za-z0-9_:]+)")
+
+
+class Lexer:
+    """Blank strings/comments; collect per-line comment text."""
+
+    def __init__(self) -> None:
+        self.block_depth = 0
+        self.in_string = False
+        self.raw_hashes: int | None = None
+
+    def feed(self, line: str) -> tuple[str, str]:
+        code: list[str] = []
+        comment: list[str] = []
+        chars = list(line)
+        i = 0
+        n = len(chars)
+        while i < n:
+            if self.block_depth > 0:
+                if line.startswith("/*", i):
+                    self.block_depth += 1
+                    code.append(" ")
+                    code.append(" ")
+                    i += 2
+                elif line.startswith("*/", i):
+                    self.block_depth -= 1
+                    code.append(" ")
+                    code.append(" ")
+                    i += 2
+                else:
+                    comment.append(chars[i])
+                    code.append(" ")
+                    i += 1
+                continue
+            if self.raw_hashes is not None:
+                close = '"' + "#" * self.raw_hashes
+                if line.startswith(close, i):
+                    for _ in close:
+                        code.append(" ")
+                    i += len(close)
+                    self.raw_hashes = None
+                else:
+                    code.append(" ")
+                    i += 1
+                continue
+            if self.in_string:
+                if chars[i] == "\\":
+                    code.append(" ")
+                    if i + 1 < n:
+                        code.append(" ")
+                    i += 2
+                elif chars[i] == '"':
+                    self.in_string = False
+                    code.append(" ")
+                    i += 1
+                else:
+                    code.append(" ")
+                    i += 1
+                continue
+            c = chars[i]
+            if c == "/" and line.startswith("//", i):
+                comment.extend(chars[i + 2 :])
+                while i < n:
+                    code.append(" ")
+                    i += 1
+                break
+            if c == "/" and line.startswith("/*", i):
+                self.block_depth = 1
+                code.append(" ")
+                code.append(" ")
+                i += 2
+                continue
+            if c == '"':
+                self.in_string = True
+                code.append(" ")
+                i += 1
+                continue
+            # Raw string start: r"..." / r#"..."# / br#"..."# — the `r`
+            # must not continue an identifier.
+            if c in ("r", "b"):
+                prev_ident = i > 0 and (chars[i - 1].isalnum() or chars[i - 1] == "_")
+                j = i
+                if c == "b" and j + 1 < n and chars[j + 1] == "r":
+                    j += 1
+                if not prev_ident and chars[j] == "r" if j < n else False:
+                    k = j + 1
+                    hashes = 0
+                    while k < n and chars[k] == "#":
+                        hashes += 1
+                        k += 1
+                    if k < n and chars[k] == '"':
+                        self.raw_hashes = hashes
+                        while i <= k:
+                            code.append(" ")
+                            i += 1
+                        continue
+                code.append(c)
+                i += 1
+                continue
+            if c == "'":
+                # Char literal vs lifetime/label.
+                if i + 1 < n and chars[i + 1] == "\\":
+                    j = i + 2
+                    while j < n and chars[j] != "'":
+                        j += 1
+                    while i <= min(j, n - 1):
+                        code.append(" ")
+                        i += 1
+                    continue
+                if i + 2 < n and chars[i + 2] == "'":
+                    code.extend("   ")
+                    i += 3
+                    continue
+                code.append(c)
+                i += 1
+                continue
+            code.append(c)
+            i += 1
+        return "".join(code), "".join(comment)
+
+
+def lex_file(text: str) -> tuple[list[str], list[str]]:
+    lexer = Lexer()
+    code_lines: list[str] = []
+    comment_lines: list[str] = []
+    for line in text.split("\n"):
+        code, comment = lexer.feed(line)
+        code_lines.append(code)
+        comment_lines.append(comment)
+    return code_lines, comment_lines
+
+
+def test_regions(code_lines: list[str]) -> list[bool]:
+    """Lines covered by a ``#[cfg(test)]`` item (attr line inclusive)."""
+    in_test = [False] * len(code_lines)
+    depth = 0
+    pending = False
+    region_exit: int | None = None
+    for idx, code in enumerate(code_lines):
+        if "#[cfg(test)]" in code:
+            pending = True
+        starts_region = pending and "{" in code
+        if starts_region:
+            region_exit = depth
+            pending = False
+        if pending or starts_region or region_exit is not None:
+            in_test[idx] = True
+        depth += code.count("{") - code.count("}")
+        if region_exit is not None and depth <= region_exit:
+            region_exit = None
+    return in_test
+
+
+def parse_annotations(comment_lines: list[str], code_lines: list[str]):
+    """Return (file_allows, line_allows, malformed) from afd-lint comments.
+
+    Grammar: ``afd-lint: allow(rule[,rule...]) reason`` (same-line or the
+    next code line when standalone) and ``afd-lint: allow-file(rule[,...])
+    reason``.
+    """
+    file_allows: set[str] = set()
+    line_allows: dict[str, set[int]] = {}
+    malformed: list[tuple[int, str]] = []
+    known = set(ALL_RULES)
+    for idx, comment in enumerate(comment_lines):
+        pos = comment.find("afd-lint:")
+        if pos < 0:
+            continue
+        rest = comment[pos + len("afd-lint:") :].strip()
+        is_file = rest.startswith("allow-file(")
+        is_line = not is_file and rest.startswith("allow(")
+        if not (is_file or is_line):
+            malformed.append((idx, f"unknown afd-lint directive {rest[:40]!r}"))
+            continue
+        open_paren = rest.find("(")
+        close = rest.find(")")
+        if close < open_paren:
+            malformed.append((idx, "unclosed allow(...) rule list"))
+            continue
+        rules = [r.strip() for r in rest[open_paren + 1 : close].split(",") if r.strip()]
+        reason = rest[close + 1 :].strip().lstrip("—-:").strip()
+        bad = [r for r in rules if r not in known]
+        if not rules or bad:
+            malformed.append((idx, f"unknown rule(s) {bad or '(empty)'} in allow"))
+            continue
+        if not reason:
+            malformed.append((idx, "allow annotation requires a reason"))
+            continue
+        if is_file:
+            file_allows.update(rules)
+            continue
+        # Standalone comment lines annotate the next code-bearing line.
+        target = idx
+        if not code_lines[idx].strip():
+            for j in range(idx + 1, len(code_lines)):
+                if code_lines[j].strip():
+                    target = j
+                    break
+        for r in rules:
+            line_allows.setdefault(r, set()).add(target)
+    return file_allows, line_allows, malformed
+
+
+def slice_index_hit(code: str) -> bool:
+    for m in INDEX_RE.finditer(code):
+        start = m.start()
+        # Walk back over the identifier to find what precedes it.
+        j = start
+        while j >= 0 and (code[j].isalnum() or code[j] == "_"):
+            j -= 1
+        if j >= 0 and code[j] in "!#":
+            continue  # macro invocation (vec![...]) or attribute
+        return True
+    return False
+
+
+def scan_file(relpath: str, text: str):
+    """Per-file rules. Returns (findings, malformed-annotation findings).
+
+    Each finding is (relpath, 1-based line, rule, allowed: bool).
+    """
+    code_lines, comment_lines = lex_file(text)
+    in_test = test_regions(code_lines)
+    file_allows, line_allows, malformed = parse_annotations(comment_lines, code_lines)
+
+    findings = []
+
+    def emit(idx: int, rule: str) -> None:
+        allowed = rule in file_allows or idx in line_allows.get(rule, set())
+        findings.append((relpath, idx + 1, rule, allowed))
+
+    for idx, code in enumerate(code_lines):
+        if in_test[idx]:
+            continue
+        if "HashMap" in code or "HashSet" in code:
+            emit(idx, "det-unordered-collection")
+        if any(p in code for p in WALL_CLOCK_PATTERNS):
+            emit(idx, "det-wall-clock")
+        if any(p in code for p in THREAD_PATTERNS):
+            emit(idx, "det-thread-spawn")
+        if any(p in code for p in ENV_PATTERNS):
+            emit(idx, "det-env-read")
+        if ".unwrap()" in code:
+            emit(idx, "panic-unwrap")
+        if ".expect(" in code:
+            emit(idx, "panic-expect")
+        if any(p in code for p in PANIC_MACROS):
+            emit(idx, "panic-macro")
+        if slice_index_hit(code):
+            emit(idx, "panic-slice-index")
+        if UNSAFE_RE.search(code):
+            # Compliant when the same line, or the contiguous block of
+            # comment-only lines directly above, contains `SAFETY:`.
+            documented = "SAFETY:" in comment_lines[idx]
+            j = idx - 1
+            while not documented and j >= 0 and not code_lines[j].strip() and comment_lines[j]:
+                documented = "SAFETY:" in comment_lines[j]
+                j -= 1
+            if not documented:
+                emit(idx, "unsafe-no-safety")
+    for idx, _msg in malformed:
+        emit(idx, "lint-malformed-allow")
+    return findings
+
+
+def walk_rs(root: str, sub: str) -> list[str]:
+    out = []
+    base = os.path.join(root, sub)
+    if not os.path.isdir(base):
+        return out
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames.sort()
+        if "lint_fixtures" in dirpath:
+            continue
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                out.append(os.path.relpath(os.path.join(dirpath, f), root))
+    return sorted(out)
+
+
+def repo_findings(root: str):
+    findings = []
+    for rel in walk_rs(root, os.path.join("rust", "src")):
+        with open(os.path.join(root, rel)) as f:
+            findings.extend(scan_file(rel.replace(os.sep, "/"), f.read()))
+    return findings
+
+
+def counts_of(findings) -> dict[str, dict[str, int]]:
+    counts: dict[str, dict[str, int]] = {}
+    for relpath, _line, rule, allowed in findings:
+        if allowed:
+            continue
+        counts.setdefault(relpath, {})
+        counts[relpath][rule] = counts[relpath].get(rule, 0) + 1
+    return counts
+
+
+def main(argv: list[str]) -> int:
+    root = "."
+    if "--root" in argv:
+        root = argv[argv.index("--root") + 1]
+    findings = repo_findings(root)
+    counts = counts_of(findings)
+    if "--list" in argv:
+        for relpath, line, rule, allowed in findings:
+            mark = " (allowed)" if allowed else ""
+            print(f"{relpath}:{line}: {rule}{mark}")
+        total = sum(1 for f in findings if not f[3])
+        print(f"-- {total} unallowed finding(s), {len(findings)} total")
+        return 0
+    baseline = {
+        "version": 1,
+        "note": (
+            "Violation ratchet for `afd lint`: per-(file, rule) counts may "
+            "only decrease. Regenerate with `afd lint --update-baseline` "
+            "(or python3 python/gen_lint_baseline.py --write offline)."
+        ),
+        "counts": {k: dict(sorted(v.items())) for k, v in sorted(counts.items())},
+    }
+    path = os.path.join(root, "lint-baseline.json")
+    if "--write" in argv:
+        with open(path, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        total = sum(sum(v.values()) for v in counts.values())
+        print(f"wrote {path}: {total} baselined finding(s) in {len(counts)} file(s)")
+        return 0
+    if "--check" in argv:
+        try:
+            with open(path) as f:
+                committed = json.load(f)["counts"]
+        except (OSError, KeyError, json.JSONDecodeError) as exc:
+            print(f"gen_lint_baseline: cannot read {path}: {exc}", file=sys.stderr)
+            return 1
+        bad = 0
+        for relpath, per_rule in counts.items():
+            for rule, n in per_rule.items():
+                b = committed.get(relpath, {}).get(rule, 0)
+                if n > b:
+                    print(f"{relpath}: {rule}: {n} finding(s) exceed baseline {b}", file=sys.stderr)
+                    bad += 1
+        if bad:
+            return 1
+        print("gen_lint_baseline: clean (no findings above baseline)")
+        return 0
+    print(__doc__)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -4,6 +4,9 @@
 //! and a minimum wall-clock budget are met, and reports mean/p50/p99 with
 //! outlier-robust statistics. Benches are plain binaries with
 //! `harness = false`; `cargo bench` runs them directly.
+//!
+//! afd-lint: allow-file(det-wall-clock) wall-clock-only module — timing
+//! benches is its entire purpose; nothing here feeds simulation state
 
 use std::time::Instant;
 

@@ -6,7 +6,7 @@
 //! (Fig. 1). Tracks every request's lifecycle via
 //! [`crate::coordinator::request_state`].
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::coordinator::kv::KvSlotManager;
 use crate::coordinator::load::LoadSnapshot;
@@ -28,9 +28,14 @@ pub struct Batcher {
     router: Router,
     worker_queues: Vec<VecDeque<u64>>,
     pub kv: Vec<KvSlotManager>,
-    requests: HashMap<u64, TrackedRequest>,
-    /// (worker, slot) -> request id for live slots.
-    slot_owner: HashMap<(usize, usize), u64>,
+    /// Ordered: iteration order (and therefore anything derived from a
+    /// walk over tracked requests) is the request-id order, never the
+    /// hasher's — the coordinator sits inside the deterministic core.
+    requests: BTreeMap<u64, TrackedRequest>,
+    /// (worker, slot) -> request id for live slots. Ordered for the same
+    /// reason: `step_worker` probes per slot index, but a BTreeMap keeps
+    /// any future iteration schedule-independent by construction.
+    slot_owner: BTreeMap<(usize, usize), u64>,
     completed: Vec<u64>,
 }
 
@@ -40,8 +45,8 @@ impl Batcher {
             router: Router::new(policy),
             worker_queues: vec![VecDeque::new(); workers],
             kv: (0..workers).map(|_| KvSlotManager::new(slots_per_worker, kv_capacity)).collect(),
-            requests: HashMap::new(),
-            slot_owner: HashMap::new(),
+            requests: BTreeMap::new(),
+            slot_owner: BTreeMap::new(),
             completed: Vec::new(),
         }
     }

@@ -51,6 +51,9 @@
 //!   table of the paper's evaluation section.
 //! * [`testkit`] — a small property-testing framework used by the test
 //!   suite (the environment is offline; no proptest).
+//! * [`lint`] — `afd lint`: a zero-dependency determinism & safety
+//!   static-analysis pass over the crate's own sources, with a committed
+//!   count-based violation ratchet (`lint-baseline.json`).
 //!
 //! Python (JAX + Pallas) exists only on the build path; see `DESIGN.md`.
 
@@ -68,5 +71,6 @@ pub mod runtime;
 pub mod server;
 pub mod bench_support;
 pub mod testkit;
+pub mod lint;
 
 pub use error::{AfdError, Result};

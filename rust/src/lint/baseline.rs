@@ -1,0 +1,278 @@
+//! The violation ratchet: a committed map of per-(file, rule) finding
+//! counts that may only decrease.
+//!
+//! Counts — not line numbers — make the baseline robust to unrelated
+//! edits shifting code around: a file can be reformatted freely, but
+//! adding an (N+1)-th `.unwrap()` to a file baselined at N fails the
+//! lint. Pairs below budget are reported as slack so the baseline can be
+//! tightened with `--update-baseline`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{AfdError, Result};
+use crate::util::json::Json;
+
+use super::Finding;
+
+/// Text stored in the baseline's `note` field (matches the Python
+/// mirror byte-for-byte so either tool regenerates an identical file).
+const NOTE: &str = "Violation ratchet for `afd lint`: per-(file, rule) counts may \
+only decrease. Regenerate with `afd lint --update-baseline` \
+(or python3 python/gen_lint_baseline.py --write offline).";
+
+/// file -> rule -> budgeted count.
+#[derive(Debug, Default, Clone)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+/// One (file, rule) pair whose current count differs from its budget.
+#[derive(Debug, Clone)]
+pub struct RatchetDelta {
+    pub file: String,
+    pub rule: String,
+    pub current: usize,
+    pub budget: usize,
+}
+
+/// Result of comparing current findings against the baseline.
+#[derive(Debug, Default)]
+pub struct Ratchet {
+    /// Pairs over budget — these fail the lint.
+    pub exceeded: Vec<RatchetDelta>,
+    /// Pairs under budget — candidates for tightening.
+    pub slack: Vec<RatchetDelta>,
+}
+
+/// Per-(file, rule) counts of unallowed findings.
+pub fn counts_of(findings: &[Finding]) -> BTreeMap<String, BTreeMap<String, usize>> {
+    let mut counts: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for f in findings {
+        if f.allowed {
+            continue;
+        }
+        *counts.entry(f.file.clone()).or_default().entry(f.rule.to_string()).or_insert(0) += 1;
+    }
+    counts
+}
+
+impl Baseline {
+    /// Load a committed baseline; a missing file is an empty baseline
+    /// (everything current is then over budget — the fixture-mode
+    /// default).
+    pub fn load(path: &Path) -> Result<Baseline> {
+        if !path.is_file() {
+            return Ok(Baseline::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| AfdError::config(format!("cannot read {}: {e}", path.display())))?;
+        let j = Json::parse(&text)
+            .map_err(|e| AfdError::config(format!("{}: {e}", path.display())))?;
+        let obj = j
+            .field("counts")?
+            .as_obj()
+            .ok_or_else(|| AfdError::config(format!("{}: counts must be an object", path.display())))?;
+        let mut counts = BTreeMap::new();
+        for (file, per_rule) in obj {
+            let per_rule = per_rule.as_obj().ok_or_else(|| {
+                AfdError::config(format!("{}: counts[{file:?}] must be an object", path.display()))
+            })?;
+            let mut rules = BTreeMap::new();
+            for (rule, n) in per_rule {
+                let n = n.as_usize().ok_or_else(|| {
+                    AfdError::config(format!(
+                        "{}: counts[{file:?}][{rule:?}] must be a non-negative integer",
+                        path.display()
+                    ))
+                })?;
+                rules.insert(rule.clone(), n);
+            }
+            counts.insert(file.clone(), rules);
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Build a baseline that exactly budgets the given findings.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        Baseline { counts: counts_of(findings) }
+    }
+
+    fn budget(&self, file: &str, rule: &str) -> usize {
+        self.counts.get(file).and_then(|m| m.get(rule)).copied().unwrap_or(0)
+    }
+
+    /// Compare findings against the baseline; mark findings in
+    /// within-budget pairs as `baselined`. Findings in exceeded pairs all
+    /// stay un-baselined so the report shows every candidate line.
+    pub fn apply(&self, findings: &mut [Finding]) -> Ratchet {
+        let current = counts_of(findings);
+        let mut ratchet = Ratchet::default();
+        for (file, per_rule) in &current {
+            for (rule, n) in per_rule {
+                let b = self.budget(file, rule);
+                if *n > b {
+                    ratchet.exceeded.push(RatchetDelta {
+                        file: file.clone(),
+                        rule: rule.clone(),
+                        current: *n,
+                        budget: b,
+                    });
+                }
+            }
+        }
+        // Slack: budgeted pairs whose current count dropped (possibly to
+        // zero, in which case `current` has no entry at all).
+        for (file, per_rule) in &self.counts {
+            for (rule, b) in per_rule {
+                let n = current.get(file).and_then(|m| m.get(rule)).copied().unwrap_or(0);
+                if n < *b {
+                    ratchet.slack.push(RatchetDelta {
+                        file: file.clone(),
+                        rule: rule.clone(),
+                        current: n,
+                        budget: *b,
+                    });
+                }
+            }
+        }
+        let exceeded: std::collections::BTreeSet<(String, String)> = ratchet
+            .exceeded
+            .iter()
+            .map(|d| (d.file.clone(), d.rule.clone()))
+            .collect();
+        for f in findings.iter_mut() {
+            if f.allowed {
+                continue;
+            }
+            f.baselined = !exceeded.contains(&(f.file.clone(), f.rule.to_string()));
+        }
+        ratchet
+    }
+
+    /// Serialize in the committed format.
+    pub fn to_json(&self) -> Json {
+        let mut counts = Json::obj();
+        for (file, per_rule) in &self.counts {
+            let mut rules = Json::obj();
+            for (rule, n) in per_rule {
+                rules = rules.set(rule, Json::Num(*n as f64));
+            }
+            counts = counts.set(file, rules);
+        }
+        Json::obj()
+            .set("version", Json::Num(1.0))
+            .set("note", Json::Str(NOTE.to_string()))
+            .set("counts", counts)
+    }
+
+    /// Write the baseline file (trailing newline, like the mirror).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .map_err(|e| AfdError::config(format!("cannot write {}: {e}", path.display())))
+    }
+
+    /// Total budgeted findings.
+    pub fn total(&self) -> usize {
+        self.counts.values().map(|m| m.values().sum::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(file: &str, line: usize, rule: &'static str, allowed: bool) -> Finding {
+        Finding {
+            file: file.to_string(),
+            line,
+            rule,
+            message: String::new(),
+            snippet: String::new(),
+            allowed,
+            baselined: false,
+        }
+    }
+
+    #[test]
+    fn counts_skip_allowed() {
+        let fs = vec![
+            finding("a.rs", 1, "panic-unwrap", false),
+            finding("a.rs", 2, "panic-unwrap", false),
+            finding("a.rs", 3, "panic-unwrap", true),
+        ];
+        let c = counts_of(&fs);
+        assert_eq!(c.get("a.rs").and_then(|m| m.get("panic-unwrap")), Some(&2));
+    }
+
+    #[test]
+    fn ratchet_passes_at_budget_fails_above() {
+        let base = Baseline::from_findings(&[
+            finding("a.rs", 1, "panic-unwrap", false),
+            finding("a.rs", 2, "panic-unwrap", false),
+        ]);
+        let mut same = vec![
+            finding("a.rs", 5, "panic-unwrap", false),
+            finding("a.rs", 9, "panic-unwrap", false),
+        ];
+        let r = base.apply(&mut same);
+        assert!(r.exceeded.is_empty());
+        assert!(same.iter().all(|f| f.baselined));
+
+        let mut more = vec![
+            finding("a.rs", 1, "panic-unwrap", false),
+            finding("a.rs", 2, "panic-unwrap", false),
+            finding("a.rs", 3, "panic-unwrap", false),
+        ];
+        let r = base.apply(&mut more);
+        assert_eq!(r.exceeded.len(), 1);
+        assert_eq!(r.exceeded.first().map(|d| (d.current, d.budget)), Some((3, 2)));
+        assert!(more.iter().all(|f| !f.baselined));
+    }
+
+    #[test]
+    fn slack_reported_when_counts_drop() {
+        let base = Baseline::from_findings(&[
+            finding("a.rs", 1, "panic-unwrap", false),
+            finding("a.rs", 2, "panic-unwrap", false),
+            finding("b.rs", 1, "panic-macro", false),
+        ]);
+        let mut fewer = vec![finding("a.rs", 1, "panic-unwrap", false)];
+        let r = base.apply(&mut fewer);
+        assert!(r.exceeded.is_empty());
+        assert_eq!(r.slack.len(), 2);
+        assert!(r.slack.iter().any(|d| d.file == "b.rs" && d.current == 0));
+    }
+
+    #[test]
+    fn new_rule_in_old_file_fails() {
+        let base = Baseline::from_findings(&[finding("a.rs", 1, "panic-unwrap", false)]);
+        let mut f = vec![finding("a.rs", 1, "panic-macro", false)];
+        let r = base.apply(&mut f);
+        assert_eq!(r.exceeded.len(), 1);
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let base = Baseline::from_findings(&[
+            finding("a.rs", 1, "panic-unwrap", false),
+            finding("b.rs", 2, "det-wall-clock", false),
+        ]);
+        let dir = std::env::temp_dir().join("afd_lint_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lint-baseline.json");
+        base.write(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        assert_eq!(loaded.counts, base.counts);
+        assert_eq!(loaded.total(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/afd-lint-baseline.json")).unwrap();
+        assert_eq!(b.total(), 0);
+    }
+}

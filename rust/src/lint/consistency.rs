@@ -1,0 +1,273 @@
+//! Project-consistency rules: Cargo.toml target declarations vs the
+//! files on disk, `use crate::`/`use afd::` path resolution against the
+//! module tree, and per-file delimiter balance.
+//!
+//! These rules expect **zero** findings on a healthy checkout — they are
+//! not baselined away; any hit is a real wiring error (a test added to
+//! disk but not to Cargo.toml with auto-discovery off, a module renamed
+//! under a stale import, a merge that dropped a brace).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::lexer::SourceFile;
+use super::rules::message_of;
+use super::Finding;
+
+fn finding(file: &str, line: usize, rule: &'static str, message: String, snippet: &str) -> Finding {
+    let snippet: String = snippet.trim().chars().take(120).collect();
+    Finding { file: file.to_string(), line, rule, message, snippet, allowed: false, baselined: false }
+}
+
+/// Directories whose top-level `*.rs` files cargo would auto-discover as
+/// targets; with `autotests = false` etc., every one must be declared.
+const TARGET_DIRS: &[&str] = &["rust/tests", "rust/benches", "examples"];
+
+/// Cargo.toml sections that declare a path-bearing target.
+const TARGET_SECTIONS: &[&str] = &["lib", "bin", "test", "bench", "example"];
+
+/// Check declared Cargo.toml targets against the filesystem, both ways.
+pub fn check_cargo_targets(root: &Path, manifest_text: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut declared: BTreeSet<String> = BTreeSet::new();
+    let mut section = String::new();
+    for (idx, raw) in manifest_text.split('\n').enumerate() {
+        let line = raw.trim();
+        if line.starts_with('[') {
+            section = line.trim_matches(['[', ']']).to_string();
+            continue;
+        }
+        if !TARGET_SECTIONS.contains(&section.as_str()) {
+            continue;
+        }
+        let Some(rest) = line.strip_prefix("path") else { continue };
+        let Some(value) = rest.trim_start().strip_prefix('=') else { continue };
+        let path = value.trim().trim_matches('"').to_string();
+        if path.is_empty() {
+            continue;
+        }
+        if !root.join(&path).is_file() {
+            findings.push(finding(
+                "Cargo.toml",
+                idx + 1,
+                "cargo-target-missing",
+                format!("{}: {path} does not exist", message_of("cargo-target-missing")),
+                raw,
+            ));
+        }
+        declared.insert(path);
+    }
+    for dir in TARGET_DIRS {
+        let base = root.join(dir);
+        let Ok(entries) = std::fs::read_dir(&base) else { continue };
+        let mut names: Vec<String> = entries
+            .flatten()
+            .filter(|e| e.path().is_file())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".rs"))
+            .collect();
+        names.sort();
+        for name in names {
+            let rel = format!("{dir}/{name}");
+            if !declared.contains(&rel) {
+                findings.push(finding(
+                    &rel,
+                    1,
+                    "cargo-target-unlisted",
+                    format!("{}: add a [[{}]] entry for {rel}", message_of("cargo-target-unlisted"), section_for(dir)),
+                    "",
+                ));
+            }
+        }
+    }
+    findings
+}
+
+fn section_for(dir: &str) -> &'static str {
+    if dir.ends_with("benches") {
+        "bench"
+    } else if dir.ends_with("examples") {
+        "example"
+    } else {
+        "test"
+    }
+}
+
+/// Resolve `use crate::..` / `use afd::..` paths in one file against the
+/// module tree rooted at `src_root` (`rust/src`). Module files and
+/// `mod.rs` directories resolve; a segment starting with an uppercase
+/// letter is an item (type/trait re-export) and ends resolution.
+pub fn check_use_paths(src_root: &Path, file: &SourceFile) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        let trimmed = code.trim_start();
+        let after_pub = trimmed.strip_prefix("pub ").map(str::trim_start).unwrap_or(trimmed);
+        let Some(after_use) = after_pub.strip_prefix("use ") else { continue };
+        let after_use = after_use.trim_start();
+        let body = after_use
+            .strip_prefix("crate::")
+            .or_else(|| after_use.strip_prefix("afd::"));
+        let Some(body) = body else { continue };
+        let path_part: String = body
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_' || *c == ':')
+            .collect();
+        let segments: Vec<&str> =
+            path_part.split("::").filter(|s| !s.is_empty()).collect();
+        if segments.is_empty() {
+            continue; // `use crate::{..}` grouped import — skip
+        }
+        let mut cur = src_root.to_path_buf();
+        let mut resolved = false;
+        let mut dangling_dir = true;
+        for seg in &segments {
+            if seg.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false) {
+                // An item name (lib.rs re-export like `afd::AfdError`, or
+                // a type after a resolved module): path checking ends.
+                resolved = true;
+                break;
+            }
+            if cur.join(format!("{seg}.rs")).is_file() {
+                resolved = true;
+                dangling_dir = false;
+                break;
+            }
+            let as_dir = cur.join(seg);
+            if as_dir.is_dir() {
+                cur = as_dir;
+                continue;
+            }
+            resolved = false;
+            dangling_dir = false;
+            break;
+        }
+        if !resolved && dangling_dir {
+            // Every segment was a directory: fine iff it is a module dir.
+            resolved = cur.join("mod.rs").is_file();
+        }
+        if !resolved {
+            findings.push(finding(
+                &file.path,
+                idx + 1,
+                "use-unresolved",
+                format!("{}: `{path_part}`", message_of("use-unresolved")),
+                file.raw.get(idx).map(|s| s.as_str()).unwrap_or(""),
+            ));
+        }
+    }
+    findings
+}
+
+/// Delimiter accounting over the blanked code view. Emits at most one
+/// finding per file: the first line where a delimiter count goes
+/// negative, or the last line when the file ends unbalanced.
+pub fn check_braces(file: &SourceFile) -> Vec<Finding> {
+    let pairs = [('{', '}'), ('(', ')'), ('[', ']')];
+    let mut counts = [0i64; 3];
+    for (idx, code) in file.code.iter().enumerate() {
+        for ch in code.chars() {
+            for (k, (open, close)) in pairs.iter().enumerate() {
+                let Some(slot) = counts.get_mut(k) else { continue };
+                if ch == *open {
+                    *slot += 1;
+                } else if ch == *close {
+                    *slot -= 1;
+                    if *slot < 0 {
+                        return vec![finding(
+                            &file.path,
+                            idx + 1,
+                            "brace-unbalanced",
+                            format!("{}: extra `{close}`", message_of("brace-unbalanced")),
+                            file.raw.get(idx).map(|s| s.as_str()).unwrap_or(""),
+                        )];
+                    }
+                }
+            }
+        }
+    }
+    for (k, (open, _close)) in pairs.iter().enumerate() {
+        if counts.get(k).copied().unwrap_or(0) != 0 {
+            let last = file.lines().max(1);
+            return vec![finding(
+                &file.path,
+                last,
+                "brace-unbalanced",
+                format!("{}: unclosed `{open}` at end of file", message_of("brace-unbalanced")),
+                "",
+            )];
+        }
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(text: &str) -> SourceFile {
+        SourceFile::parse("x.rs", text)
+    }
+
+    #[test]
+    fn balanced_file_is_clean() {
+        assert!(check_braces(&src("fn f(a: &[u8]) -> usize { a.len() }")).is_empty());
+    }
+
+    #[test]
+    fn extra_close_is_flagged_at_line() {
+        let f = check_braces(&src("fn f() { }\n}\n"));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.first().map(|x| x.line), Some(2));
+        assert_eq!(f.first().map(|x| x.rule), Some("brace-unbalanced"));
+    }
+
+    #[test]
+    fn unclosed_open_is_flagged_at_eof() {
+        let f = check_braces(&src("fn f() {\nlet a = 1;\n"));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.first().map(|x| x.rule), Some("brace-unbalanced"));
+    }
+
+    #[test]
+    fn braces_in_strings_and_chars_do_not_count() {
+        assert!(check_braces(&src("let a = \"}}}\";\nlet b = '}';\nfn f() {}")).is_empty());
+    }
+
+    #[test]
+    fn use_resolution_against_real_tree() {
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let src_root = manifest_dir.join("rust").join("src");
+        let ok = src(
+            "use crate::util::json::Json;\nuse afd::sim::session::OpenLoopPoisson;\nuse afd::AfdError;\nuse crate::sim;\nuse std::collections::BTreeMap;",
+        );
+        assert!(check_use_paths(&src_root, &ok).is_empty());
+        let bad = src("use crate::no_such_module::Thing;");
+        let f = check_use_paths(&src_root, &bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.first().map(|x| x.rule), Some("use-unresolved"));
+    }
+
+    #[test]
+    fn cargo_targets_cross_checked() {
+        let dir = std::env::temp_dir().join("afd_lint_cargo_test");
+        let tests = dir.join("rust").join("tests");
+        std::fs::create_dir_all(&tests).unwrap();
+        std::fs::write(tests.join("declared.rs"), "fn main() {}").unwrap();
+        std::fs::write(tests.join("stray.rs"), "fn main() {}").unwrap();
+        let manifest = "[package]\nname = \"x\"\n\n[[test]]\nname = \"declared\"\npath = \"rust/tests/declared.rs\"\n\n[[test]]\nname = \"ghost\"\npath = \"rust/tests/ghost.rs\"\n";
+        let f = check_cargo_targets(&dir, manifest);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert_eq!(rules, ["cargo-target-missing", "cargo-target-unlisted"]);
+        assert!(f.iter().any(|x| x.message.contains("rust/tests/ghost.rs")));
+        assert!(f.iter().any(|x| x.file == "rust/tests/stray.rs"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_is_clean() {
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read_to_string(manifest_dir.join("Cargo.toml")).unwrap();
+        let f = check_cargo_targets(manifest_dir, &text);
+        assert!(f.is_empty(), "Cargo.toml target findings: {:?}", f.iter().map(|x| &x.message).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,311 @@
+//! Line-oriented Rust source scanner for the lint pass.
+//!
+//! Produces, per line, a *code view* (string/char-literal contents and
+//! comments blanked with spaces, byte-for-byte positions preserved) and a
+//! *comment view* (the text of comments on that line), plus a map of
+//! lines covered by `#[cfg(test)]` items. This is deliberately not a full
+//! parser: rules match on the blanked code text, so a token inside a
+//! string literal or comment can never fire a rule, and brace accounting
+//! survives raw strings, char literals (`'{'`), and lifetimes (`'a`).
+//!
+//! The scanner is mirrored line-for-line by
+//! `python/gen_lint_baseline.py`, which regenerates the committed
+//! baseline in environments without a Rust toolchain — any behavior
+//! change here must be made there too, or the two will disagree on
+//! counts.
+
+/// A lexed source file.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Raw lines, for snippets.
+    pub raw: Vec<String>,
+    /// Code view: strings/chars/comments blanked with spaces.
+    pub code: Vec<String>,
+    /// Comment view: comment text found on each line.
+    pub comments: Vec<String>,
+    /// Lines covered by a `#[cfg(test)]` item (attribute line inclusive).
+    pub in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let mut lexer = Lexer::default();
+        let mut raw = Vec::new();
+        let mut code = Vec::new();
+        let mut comments = Vec::new();
+        for line in text.split('\n') {
+            let (c, m) = lexer.feed(line);
+            raw.push(line.to_string());
+            code.push(c);
+            comments.push(m);
+        }
+        let in_test = test_regions(&code);
+        SourceFile { path: path.to_string(), raw, code, comments, in_test }
+    }
+
+    pub fn lines(&self) -> usize {
+        self.raw.len()
+    }
+}
+
+/// Multi-line lexer state: block-comment nesting, an open `"` string, or
+/// an open raw string with its `#` count.
+#[derive(Default)]
+struct Lexer {
+    block_depth: usize,
+    in_string: bool,
+    raw_hashes: Option<usize>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl Lexer {
+    /// Consume one line; return (code view, comment text).
+    fn feed(&mut self, line: &str) -> (String, String) {
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut code = String::with_capacity(n);
+        let mut comment = String::new();
+        let at = |i: usize| chars.get(i).copied();
+        let mut i = 0usize;
+        while i < n {
+            if self.block_depth > 0 {
+                if at(i) == Some('/') && at(i + 1) == Some('*') {
+                    self.block_depth += 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else if at(i) == Some('*') && at(i + 1) == Some('/') {
+                    self.block_depth -= 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    if let Some(c) = at(i) {
+                        comment.push(c);
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if let Some(hashes) = self.raw_hashes {
+                // Close at `"` followed by `hashes` × `#`.
+                let closes = at(i) == Some('"')
+                    && (1..=hashes).all(|k| at(i + k) == Some('#'));
+                if closes {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes;
+                    self.raw_hashes = None;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if self.in_string {
+                match at(i) {
+                    Some('\\') => {
+                        code.push(' ');
+                        if i + 1 < n {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    }
+                    Some('"') => {
+                        self.in_string = false;
+                        code.push(' ');
+                        i += 1;
+                    }
+                    _ => {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            let Some(c) = at(i) else { break };
+            if c == '/' && at(i + 1) == Some('/') {
+                for k in (i + 2)..n {
+                    if let Some(cc) = at(k) {
+                        comment.push(cc);
+                    }
+                }
+                while i < n {
+                    code.push(' ');
+                    i += 1;
+                }
+                break;
+            }
+            if c == '/' && at(i + 1) == Some('*') {
+                self.block_depth = 1;
+                code.push_str("  ");
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                self.in_string = true;
+                code.push(' ');
+                i += 1;
+                continue;
+            }
+            if c == 'r' || c == 'b' {
+                // Raw string start (`r"`, `r#"`, `br#"`), unless the
+                // leading letter continues an identifier.
+                let prev_ident = i > 0 && at(i - 1).map(is_ident).unwrap_or(false);
+                let mut j = i;
+                if c == 'b' && at(j + 1) == Some('r') {
+                    j += 1;
+                }
+                if !prev_ident && at(j) == Some('r') {
+                    let mut k = j + 1;
+                    let mut hashes = 0usize;
+                    while at(k) == Some('#') {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if at(k) == Some('"') {
+                        self.raw_hashes = Some(hashes);
+                        while i <= k {
+                            code.push(' ');
+                            i += 1;
+                        }
+                        continue;
+                    }
+                }
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // Char literal vs lifetime/label.
+                if at(i + 1) == Some('\\') {
+                    let mut j = i + 2;
+                    while j < n && at(j) != Some('\'') {
+                        j += 1;
+                    }
+                    let end = j.min(n.saturating_sub(1));
+                    while i <= end {
+                        code.push(' ');
+                        i += 1;
+                    }
+                    continue;
+                }
+                if i + 2 < n && at(i + 2) == Some('\'') {
+                    code.push_str("   ");
+                    i += 3;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        (code, comment)
+    }
+}
+
+/// Mark lines covered by `#[cfg(test)]` items: from the attribute line
+/// through the closing brace of the next `{`-opening item.
+fn test_regions(code_lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code_lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region_exit: Option<i64> = None;
+    for (idx, code) in code_lines.iter().enumerate() {
+        if code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let starts_region = pending && code.contains('{');
+        if starts_region {
+            region_exit = Some(depth);
+            pending = false;
+        }
+        if pending || starts_region || region_exit.is_some() {
+            if let Some(flag) = in_test.get_mut(idx) {
+                *flag = true;
+            }
+        }
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        depth += opens - closes;
+        if let Some(exit) = region_exit {
+            if depth <= exit {
+                region_exit = None;
+            }
+        }
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        SourceFile::parse("t.rs", text).code
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let c = code_of("let x = \"HashMap\"; // Instant::now\nlet y = 1;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(!c[0].contains("Instant"));
+        assert!(c[0].contains("let x ="));
+        assert_eq!(c[1], "let y = 1;");
+    }
+
+    #[test]
+    fn comment_text_is_collected() {
+        let s = SourceFile::parse("t.rs", "let a = 1; // afd-lint: allow(x) y\n//! doc");
+        assert!(s.comments[0].contains("afd-lint: allow(x) y"));
+        assert!(s.comments[1].contains("doc"));
+    }
+
+    #[test]
+    fn raw_strings_span_lines_and_hide_braces() {
+        let text = "let j = r#\"{\"a\" 1}\n}}}{{\"#;\nlet k = 2;";
+        let c = code_of(text);
+        assert!(!c[0].contains('{'));
+        assert!(!c[1].contains('}'));
+        assert_eq!(c[2], "let k = 2;");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let c = code_of("match c { '{' => 1, '\\'' => 2, _ => 3 }");
+        // The literal braces are blanked; the structural ones survive.
+        assert_eq!(c[0].matches('{').count(), 1);
+        assert_eq!(c[0].matches('}').count(), 1);
+        let c = code_of("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(c[0].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let c = code_of("a /* one /* two */ still */ b\n/* open\nunsafe { }\n*/ c");
+        assert!(c[0].starts_with("a "));
+        assert!(c[0].ends_with(" b"));
+        assert!(!c[2].contains("unsafe"));
+        assert!(c[3].contains('c'));
+    }
+
+    #[test]
+    fn multiline_plain_string() {
+        let c = code_of("let s = \"line one\nline .unwrap() two\";\nlet t = 3;");
+        assert!(!c[1].contains("unwrap"));
+        assert_eq!(c[2], "let t = 3;");
+    }
+
+    #[test]
+    fn cfg_test_region_detected() {
+        let text = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}";
+        let s = SourceFile::parse("t.rs", text);
+        assert_eq!(s.in_test, vec![false, true, true, true, true, false]);
+    }
+}

@@ -1,0 +1,308 @@
+//! `afd lint` — a zero-dependency determinism & safety static-analysis
+//! pass over the crate's own sources.
+//!
+//! The simulator's headline guarantee is bitwise reproducibility: same
+//! seed, same results, at any thread count, on any host. That guarantee
+//! is easy to break silently — one `HashMap` iteration feeding a
+//! tie-break, one `Instant::now()` leaking into virtual time — so this
+//! module enforces it mechanically. Three rule families:
+//!
+//! * **determinism** — unordered collections, wall-clock reads, raw
+//!   thread primitives, and environment reads anywhere in the crate;
+//!   legitimate uses (the real-engine timing path, `util::pool` as the
+//!   sanctioned parallelism substrate) carry allow-annotations stating
+//!   *why* they are exempt.
+//! * **panic surface** — `.unwrap()` / `.expect(` / panic-family macros /
+//!   slice indexing in library (non-test) code, and `unsafe` blocks
+//!   without a `SAFETY:` comment.
+//! * **consistency** — Cargo.toml target declarations vs the files on
+//!   disk (auto-discovery is off), `use crate::`/`use afd::` resolution
+//!   against the module tree, and delimiter balance.
+//!
+//! Suppression is explicit and audited: inline `afd-lint` comments —
+//! `allow(rule) reason` on or above the offending line, or
+//! `allow-file(rule) reason` in module docs (a reason is mandatory) —
+//! plus a committed
+//! count-based baseline (`lint-baseline.json`) whose per-(file, rule)
+//! budgets may only decrease — see [`baseline`].
+//!
+//! `python/gen_lint_baseline.py` is a line-for-line mirror of the lexer
+//! and per-file rules for toolchain-less environments; the Rust
+//! implementation is authoritative.
+
+pub mod baseline;
+pub mod consistency;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{AfdError, Result};
+
+use baseline::{Baseline, Ratchet};
+use lexer::SourceFile;
+
+/// Rule families, for grouping in reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Determinism,
+    Panic,
+    Meta,
+    Consistency,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Determinism => "determinism",
+            Family::Panic => "panic",
+            Family::Meta => "meta",
+            Family::Consistency => "consistency",
+        }
+    }
+}
+
+/// One lint finding. At most one per (line, rule) — the invariant the
+/// count-based baseline depends on.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id from [`rules::RULES`].
+    pub rule: &'static str,
+    pub message: String,
+    /// Trimmed source line (first 120 chars).
+    pub snippet: String,
+    /// Suppressed by an `afd-lint` allow annotation.
+    pub allowed: bool,
+    /// Covered by the committed baseline budget.
+    pub baselined: bool,
+}
+
+/// Where and what to lint.
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Repository root (the directory holding `Cargo.toml`).
+    pub root: PathBuf,
+    /// Explicit files/directories to lint instead of the repository
+    /// (fixture mode: per-file rules only, empty default baseline).
+    pub paths: Vec<PathBuf>,
+    /// Baseline override; defaults to `<root>/lint-baseline.json` in
+    /// repository mode and to an empty baseline in fixture mode.
+    pub baseline: Option<PathBuf>,
+}
+
+impl LintOptions {
+    pub fn repo(root: impl Into<PathBuf>) -> LintOptions {
+        LintOptions { root: root.into(), paths: Vec::new(), baseline: None }
+    }
+
+    /// The baseline file to ratchet against, if any.
+    pub fn baseline_path(&self) -> Option<PathBuf> {
+        match &self.baseline {
+            Some(p) => Some(p.clone()),
+            None if self.paths.is_empty() => Some(self.root.join("lint-baseline.json")),
+            None => None,
+        }
+    }
+}
+
+/// The outcome of a lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: String,
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub ratchet: Ratchet,
+}
+
+impl LintReport {
+    pub fn total(&self) -> usize {
+        self.findings.len()
+    }
+
+    pub fn allowed(&self) -> usize {
+        self.findings.iter().filter(|f| f.allowed).count()
+    }
+
+    pub fn baselined(&self) -> usize {
+        self.findings.iter().filter(|f| !f.allowed && f.baselined).count()
+    }
+
+    /// Actionable findings: neither allowed nor within baseline budget.
+    pub fn unbaselined(&self) -> usize {
+        self.findings.iter().filter(|f| !f.allowed && !f.baselined).count()
+    }
+
+    /// True when nothing exceeds the baseline — the CI gate.
+    pub fn passed(&self) -> bool {
+        self.ratchet.exceeded.is_empty()
+    }
+}
+
+/// Auxiliary target directories checked for consistency (use paths,
+/// braces) but exempt from per-file rules (test code panics freely).
+const AUX_DIRS: &[&str] = &["rust/tests", "rust/benches", "examples"];
+
+/// Run the linter. Repository mode (no explicit paths): per-file rules
+/// over `rust/src`, consistency rules over the whole project, ratchet
+/// against the committed baseline. Fixture mode (explicit paths):
+/// per-file + brace/use rules over exactly those files, empty default
+/// baseline.
+pub fn run(opts: &LintOptions) -> Result<LintReport> {
+    let mut findings = Vec::new();
+    let files_scanned;
+    let src_root = opts.root.join("rust").join("src");
+    if opts.paths.is_empty() {
+        let mut lexed = Vec::new();
+        for path in walk_rs(&src_root)? {
+            lexed.push(lex(&opts.root, &path)?);
+        }
+        if lexed.is_empty() {
+            return Err(AfdError::config(format!(
+                "lint: no Rust sources under {} (is --root the repo root?)",
+                src_root.display()
+            )));
+        }
+        for sf in &lexed {
+            findings.extend(rules::scan_source(sf));
+        }
+        let manifest_path = opts.root.join("Cargo.toml");
+        let manifest = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            AfdError::config(format!("lint: cannot read {}: {e}", manifest_path.display()))
+        })?;
+        findings.extend(consistency::check_cargo_targets(&opts.root, &manifest));
+        let mut aux = Vec::new();
+        for dir in AUX_DIRS {
+            for path in walk_rs(&opts.root.join(dir))? {
+                aux.push(lex(&opts.root, &path)?);
+            }
+        }
+        for sf in lexed.iter().chain(aux.iter()) {
+            findings.extend(consistency::check_use_paths(&src_root, sf));
+            findings.extend(consistency::check_braces(sf));
+        }
+        files_scanned = lexed.len() + aux.len();
+    } else {
+        let mut files = Vec::new();
+        for p in &opts.paths {
+            let full = if p.is_absolute() { p.clone() } else { opts.root.join(p) };
+            if full.is_file() {
+                files.push(full);
+            } else if full.is_dir() {
+                files.extend(walk_rs_any(&full)?);
+            } else {
+                return Err(AfdError::config(format!("lint: no such path {}", full.display())));
+            }
+        }
+        for path in &files {
+            let sf = lex(&opts.root, path)?;
+            findings.extend(rules::scan_source(&sf));
+            if src_root.is_dir() {
+                findings.extend(consistency::check_use_paths(&src_root, &sf));
+            }
+            findings.extend(consistency::check_braces(&sf));
+        }
+        files_scanned = files.len();
+    }
+    let base = match opts.baseline_path() {
+        Some(p) => Baseline::load(&p)?,
+        None => Baseline::default(),
+    };
+    let ratchet = base.apply(&mut findings);
+    Ok(LintReport {
+        root: opts.root.display().to_string(),
+        files_scanned,
+        findings,
+        ratchet,
+    })
+}
+
+/// Deterministic recursive `*.rs` walk, skipping lint fixture corpora.
+/// A missing directory yields an empty list (benches/examples are
+/// optional).
+fn walk_rs(base: &Path) -> Result<Vec<PathBuf>> {
+    walk_impl(base, true)
+}
+
+/// Like [`walk_rs`] but including fixture directories — used when the
+/// fixtures themselves are the lint target.
+fn walk_rs_any(base: &Path) -> Result<Vec<PathBuf>> {
+    walk_impl(base, false)
+}
+
+fn walk_impl(base: &Path, skip_fixtures: bool) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !base.is_dir() {
+        return Ok(out);
+    }
+    let mut stack = vec![base.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        if skip_fixtures && dir.file_name().map(|n| n == "lint_fixtures").unwrap_or(false) {
+            continue;
+        }
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| AfdError::config(format!("lint: cannot list {}: {e}", dir.display())))?;
+        let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+        paths.sort();
+        for p in paths {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Read and lex one file; the `SourceFile` path is root-relative with
+/// forward slashes so findings and baseline keys are host-independent.
+fn lex(root: &Path, path: &Path) -> Result<SourceFile> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| AfdError::config(format!("lint: cannot read {}: {e}", path.display())))?;
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let rel: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().to_string())
+        .collect();
+    Ok(SourceFile::parse(&rel.join("/"), &text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_mode_errors_outside_a_repo() {
+        let opts = LintOptions::repo("/nonexistent-afd-root");
+        assert!(run(&opts).is_err());
+    }
+
+    #[test]
+    fn fixture_mode_defaults_to_empty_baseline() {
+        let opts = LintOptions {
+            root: PathBuf::from("."),
+            paths: vec![PathBuf::from("x")],
+            baseline: None,
+        };
+        assert!(opts.baseline_path().is_none());
+        assert!(LintOptions::repo(".").baseline_path().is_some());
+    }
+
+    #[test]
+    fn walk_is_sorted_and_missing_dir_is_empty() {
+        assert!(walk_rs(Path::new("/no/such/dir")).unwrap().is_empty());
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = walk_rs(&manifest_dir.join("rust").join("src")).unwrap();
+        assert!(files.len() > 10);
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+        assert!(files.iter().all(|p| !p.to_string_lossy().contains("lint_fixtures")));
+    }
+}

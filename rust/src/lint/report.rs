@@ -1,0 +1,163 @@
+//! Text and JSON rendering of a lint run.
+//!
+//! The JSON shape is a stable contract validated by
+//! `python/check_lint_json.py` and consumed by CI; bump `version` on any
+//! breaking change.
+
+use crate::util::json::Json;
+
+use super::rules::family_of;
+use super::LintReport;
+
+/// Machine-readable report (schema version 1).
+pub fn to_json(report: &LintReport) -> Json {
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj()
+                .set("file", Json::Str(f.file.clone()))
+                .set("line", Json::Num(f.line as f64))
+                .set("rule", Json::Str(f.rule.to_string()))
+                .set("family", Json::Str(family_of(f.rule).name().to_string()))
+                .set("message", Json::Str(f.message.clone()))
+                .set("snippet", Json::Str(f.snippet.clone()))
+                .set("allowed", Json::Bool(f.allowed))
+                .set("baselined", Json::Bool(f.baselined))
+        })
+        .collect();
+    let exceeded: Vec<Json> = report
+        .ratchet
+        .exceeded
+        .iter()
+        .map(|d| {
+            Json::obj()
+                .set("file", Json::Str(d.file.clone()))
+                .set("rule", Json::Str(d.rule.clone()))
+                .set("current", Json::Num(d.current as f64))
+                .set("budget", Json::Num(d.budget as f64))
+        })
+        .collect();
+    let summary = Json::obj()
+        .set("total", Json::Num(report.total() as f64))
+        .set("allowed", Json::Num(report.allowed() as f64))
+        .set("baselined", Json::Num(report.baselined() as f64))
+        .set("unbaselined", Json::Num(report.unbaselined() as f64))
+        .set("exceeded_pairs", Json::Num(report.ratchet.exceeded.len() as f64))
+        .set("slack_pairs", Json::Num(report.ratchet.slack.len() as f64));
+    Json::obj()
+        .set("version", Json::Num(1.0))
+        .set("root", Json::Str(report.root.clone()))
+        .set("files_scanned", Json::Num(report.files_scanned as f64))
+        .set("findings", Json::Arr(findings))
+        .set("summary", summary)
+        .set("passed", Json::Bool(report.passed()))
+}
+
+/// Human-readable report. By default only actionable findings (not
+/// allowed, not covered by the baseline) are listed; `show_all` lists
+/// everything with `(allowed)` / `(baselined)` markers.
+pub fn render_text(report: &LintReport, show_all: bool) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        let mark = if f.allowed {
+            " (allowed)"
+        } else if f.baselined {
+            " (baselined)"
+        } else {
+            ""
+        };
+        if !show_all && !mark.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("{}:{}: {} {}{}\n", f.file, f.line, f.rule, f.message, mark));
+        if !f.snippet.is_empty() {
+            out.push_str(&format!("    | {}\n", f.snippet));
+        }
+    }
+    for d in &report.ratchet.exceeded {
+        out.push_str(&format!(
+            "ratchet: {}: {}: {} finding(s) exceed baseline budget {}\n",
+            d.file, d.rule, d.current, d.budget
+        ));
+    }
+    if !report.ratchet.slack.is_empty() {
+        out.push_str(&format!(
+            "ratchet: {} pair(s) below budget — tighten with --update-baseline\n",
+            report.ratchet.slack.len()
+        ));
+    }
+    let verdict = if report.passed() { "PASS" } else { "FAIL" };
+    out.push_str(&format!(
+        "lint: {verdict} — {} file(s), {} finding(s): {} allowed, {} baselined, {} above baseline\n",
+        report.files_scanned,
+        report.total(),
+        report.allowed(),
+        report.baselined(),
+        report.unbaselined(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baseline::Ratchet;
+    use super::super::Finding;
+    use super::*;
+
+    fn report() -> LintReport {
+        LintReport {
+            root: ".".to_string(),
+            files_scanned: 2,
+            findings: vec![
+                Finding {
+                    file: "a.rs".into(),
+                    line: 3,
+                    rule: "panic-unwrap",
+                    message: "m".into(),
+                    snippet: "x.unwrap()".into(),
+                    allowed: false,
+                    baselined: true,
+                },
+                Finding {
+                    file: "b.rs".into(),
+                    line: 7,
+                    rule: "det-wall-clock",
+                    message: "m".into(),
+                    snippet: "Instant::now()".into(),
+                    allowed: true,
+                    baselined: false,
+                },
+            ],
+            ratchet: Ratchet::default(),
+        }
+    }
+
+    #[test]
+    fn json_has_contract_fields() {
+        let j = to_json(&report());
+        assert_eq!(j.get("version").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("files_scanned").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("passed"), Some(&Json::Bool(true)));
+        let findings = j.get("findings").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(findings.len(), 2);
+        let f0 = findings.first().unwrap();
+        assert_eq!(f0.get("rule").and_then(|v| v.as_str()), Some("panic-unwrap"));
+        assert_eq!(f0.get("family").and_then(|v| v.as_str()), Some("panic"));
+        let s = j.get("summary").unwrap();
+        assert_eq!(s.get("total").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(s.get("allowed").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(s.get("unbaselined").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn text_hides_handled_findings_by_default() {
+        let r = report();
+        let quiet = render_text(&r, false);
+        assert!(!quiet.contains("a.rs:3"));
+        assert!(quiet.contains("PASS"));
+        let loud = render_text(&r, true);
+        assert!(loud.contains("a.rs:3") && loud.contains("(baselined)"));
+        assert!(loud.contains("b.rs:7") && loud.contains("(allowed)"));
+    }
+}

@@ -1,0 +1,437 @@
+//! Rule table, allow-annotation parsing, and the per-file scanner.
+//!
+//! One finding is emitted per (line, rule) at most — the invariant the
+//! count-based baseline ratchet depends on, and the invariant shared with
+//! the Python mirror (`python/gen_lint_baseline.py`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::SourceFile;
+use super::{Family, Finding};
+
+/// A lint rule: stable id, family, and the message findings carry.
+pub struct Rule {
+    pub id: &'static str,
+    pub family: Family,
+    pub message: &'static str,
+}
+
+/// Every rule the linter knows. Ids are stable: they appear in baselines
+/// and allow-annotations, and must match the Python mirror.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "det-unordered-collection",
+        family: Family::Determinism,
+        message: "HashMap/HashSet iteration order is hasher-dependent; use BTreeMap/BTreeSet",
+    },
+    Rule {
+        id: "det-wall-clock",
+        family: Family::Determinism,
+        message: "wall-clock read (Instant::now/SystemTime) outside sanctioned timing modules",
+    },
+    Rule {
+        id: "det-thread-spawn",
+        family: Family::Determinism,
+        message: "raw thread primitive; deterministic code must go through util::pool",
+    },
+    Rule {
+        id: "det-env-read",
+        family: Family::Determinism,
+        message: "environment-dependent behavior (env::var/env::args/available_parallelism)",
+    },
+    Rule {
+        id: "panic-unwrap",
+        family: Family::Panic,
+        message: ".unwrap() in library code; return Result or document via allow",
+    },
+    Rule {
+        id: "panic-expect",
+        family: Family::Panic,
+        message: ".expect(..) in library code; return Result or document via allow",
+    },
+    Rule {
+        id: "panic-macro",
+        family: Family::Panic,
+        message: "panic!/unreachable!/todo!/unimplemented! in library code",
+    },
+    Rule {
+        id: "panic-slice-index",
+        family: Family::Panic,
+        message: "slice/array index can panic; prefer .get() or iterators",
+    },
+    Rule {
+        id: "unsafe-no-safety",
+        family: Family::Panic,
+        message: "unsafe without a `SAFETY:` comment on or directly above the line",
+    },
+    Rule {
+        id: "lint-malformed-allow",
+        family: Family::Meta,
+        message: "malformed afd-lint allow annotation",
+    },
+    Rule {
+        id: "cargo-target-missing",
+        family: Family::Consistency,
+        message: "Cargo.toml declares a target whose path does not exist",
+    },
+    Rule {
+        id: "cargo-target-unlisted",
+        family: Family::Consistency,
+        message: "target file on disk is not declared in Cargo.toml (auto-discovery is off)",
+    },
+    Rule {
+        id: "use-unresolved",
+        family: Family::Consistency,
+        message: "use path does not resolve to a module under rust/src",
+    },
+    Rule {
+        id: "brace-unbalanced",
+        family: Family::Consistency,
+        message: "unbalanced braces/brackets/parens in code view",
+    },
+];
+
+/// Family for a rule id (meta for unknown ids, which never occur in
+/// emitted findings).
+pub fn family_of(id: &str) -> Family {
+    RULES.iter().find(|r| r.id == id).map(|r| r.family).unwrap_or(Family::Meta)
+}
+
+/// Canonical message for a rule id.
+pub fn message_of(id: &str) -> &'static str {
+    RULES.iter().find(|r| r.id == id).map(|r| r.message).unwrap_or("unknown rule")
+}
+
+const WALL_CLOCK_PATTERNS: &[&str] = &["Instant::now", "SystemTime"];
+const THREAD_PATTERNS: &[&str] = &["thread::spawn", "thread::Builder", "thread::scope"];
+const ENV_PATTERNS: &[&str] = &["env::var", "env::args", "env::vars", "available_parallelism"];
+const PANIC_MACROS: &[&str] = &["panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Parsed `afd-lint` annotations for one file.
+#[derive(Default)]
+pub struct Annotations {
+    /// Rules allowed for the whole file (`allow-file`).
+    pub file_allows: BTreeSet<String>,
+    /// rule -> 0-based lines with a same-line or preceding-line allow.
+    pub line_allows: BTreeMap<String, BTreeSet<usize>>,
+    /// (0-based line, detail) for malformed annotations.
+    pub malformed: Vec<(usize, String)>,
+}
+
+/// Parse `afd-lint` comments: `allow(rule[,rule...]) reason` and
+/// `allow-file(rule[,...]) reason` after the marker. A standalone
+/// comment line (no code) annotates the next code-bearing line.
+pub fn parse_annotations(src: &SourceFile) -> Annotations {
+    let known: BTreeSet<&str> = RULES.iter().map(|r| r.id).collect();
+    let mut ann = Annotations::default();
+    for (idx, comment) in src.comments.iter().enumerate() {
+        let Some(pos) = comment.find("afd-lint:") else { continue };
+        let rest = comment.get(pos + "afd-lint:".len()..).unwrap_or("").trim();
+        let is_file = rest.starts_with("allow-file(");
+        let is_line = !is_file && rest.starts_with("allow(");
+        if !(is_file || is_line) {
+            let head: String = rest.chars().take(40).collect();
+            ann.malformed.push((idx, format!("unknown afd-lint directive {head:?}")));
+            continue;
+        }
+        let open = rest.find('(').unwrap_or(0);
+        let close = rest.find(')').unwrap_or(0);
+        if close < open {
+            ann.malformed.push((idx, "unclosed allow(...) rule list".to_string()));
+            continue;
+        }
+        let rules: Vec<String> = rest
+            .get(open + 1..close)
+            .unwrap_or("")
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let reason = rest
+            .get(close + 1..)
+            .unwrap_or("")
+            .trim()
+            .trim_start_matches(['\u{2014}', '-', ':'])
+            .trim();
+        let bad: Vec<&String> = rules.iter().filter(|r| !known.contains(r.as_str())).collect();
+        if rules.is_empty() || !bad.is_empty() {
+            ann.malformed.push((idx, format!("unknown rule(s) {bad:?} in allow")));
+            continue;
+        }
+        if reason.is_empty() {
+            ann.malformed.push((idx, "allow annotation requires a reason".to_string()));
+            continue;
+        }
+        if is_file {
+            for r in rules {
+                ann.file_allows.insert(r);
+            }
+            continue;
+        }
+        let mut target = idx;
+        let code_here = src.code.get(idx).map(|c| !c.trim().is_empty()).unwrap_or(false);
+        if !code_here {
+            for (j, code) in src.code.iter().enumerate().skip(idx + 1) {
+                if !code.trim().is_empty() {
+                    target = j;
+                    break;
+                }
+            }
+        }
+        for r in rules {
+            ann.line_allows.entry(r).or_default().insert(target);
+        }
+    }
+    ann
+}
+
+/// True when the blanked code line contains an indexing expression
+/// (`ident[`, `)[`, `][`) that is not a macro invocation or attribute.
+pub fn slice_index_hit(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    for i in 1..chars.len() {
+        if chars.get(i) != Some(&'[') {
+            continue;
+        }
+        let prev = chars.get(i - 1).copied().unwrap_or(' ');
+        let in_class =
+            prev.is_ascii_alphanumeric() || prev == '_' || prev == ')' || prev == ']';
+        if !in_class {
+            continue;
+        }
+        // Walk back over the identifier to find what precedes it.
+        let mut j = i as i64 - 1;
+        while j >= 0 {
+            let c = chars.get(j as usize).copied().unwrap_or(' ');
+            if c.is_alphanumeric() || c == '_' {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if j >= 0 {
+            let c = chars.get(j as usize).copied().unwrap_or(' ');
+            if c == '!' || c == '#' {
+                continue; // macro invocation (vec![..]) or attribute
+            }
+        }
+        return true;
+    }
+    false
+}
+
+/// True when `unsafe` appears as a standalone word in the code view.
+fn unsafe_hit(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let needle: Vec<char> = "unsafe".chars().collect();
+    let mut i = 0usize;
+    while i + needle.len() <= chars.len() {
+        let matches = needle
+            .iter()
+            .enumerate()
+            .all(|(k, c)| chars.get(i + k) == Some(c));
+        if matches {
+            let before_ok = i == 0
+                || chars
+                    .get(i - 1)
+                    .map(|c| !(c.is_alphanumeric() || *c == '_'))
+                    .unwrap_or(true);
+            let after_ok = chars
+                .get(i + needle.len())
+                .map(|c| !(c.is_alphanumeric() || *c == '_'))
+                .unwrap_or(true);
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+fn contains_any(code: &str, patterns: &[&str]) -> bool {
+    patterns.iter().any(|p| code.contains(p))
+}
+
+/// Run every per-file rule over one lexed source file. Test regions
+/// (`#[cfg(test)]`) are exempt from all rules except malformed
+/// annotations. One finding per (line, rule).
+pub fn scan_source(src: &SourceFile) -> Vec<Finding> {
+    let ann = parse_annotations(src);
+    let mut findings = Vec::new();
+    let mut emit = |idx: usize, rule: &'static str, message: String| {
+        let allowed = ann.file_allows.contains(rule)
+            || ann.line_allows.get(rule).map(|s| s.contains(&idx)).unwrap_or(false);
+        let snippet = src.raw.get(idx).map(|r| r.trim()).unwrap_or("");
+        let snippet: String = snippet.chars().take(120).collect();
+        findings.push(Finding {
+            file: src.path.clone(),
+            line: idx + 1,
+            rule,
+            message,
+            snippet,
+            allowed,
+            baselined: false,
+        });
+    };
+    for (idx, code) in src.code.iter().enumerate() {
+        if src.in_test.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        if code.contains("HashMap") || code.contains("HashSet") {
+            emit(idx, "det-unordered-collection", message_of("det-unordered-collection").into());
+        }
+        if contains_any(code, WALL_CLOCK_PATTERNS) {
+            emit(idx, "det-wall-clock", message_of("det-wall-clock").into());
+        }
+        if contains_any(code, THREAD_PATTERNS) {
+            emit(idx, "det-thread-spawn", message_of("det-thread-spawn").into());
+        }
+        if contains_any(code, ENV_PATTERNS) {
+            emit(idx, "det-env-read", message_of("det-env-read").into());
+        }
+        if code.contains(".unwrap()") {
+            emit(idx, "panic-unwrap", message_of("panic-unwrap").into());
+        }
+        if code.contains(".expect(") {
+            emit(idx, "panic-expect", message_of("panic-expect").into());
+        }
+        if contains_any(code, PANIC_MACROS) {
+            emit(idx, "panic-macro", message_of("panic-macro").into());
+        }
+        if slice_index_hit(code) {
+            emit(idx, "panic-slice-index", message_of("panic-slice-index").into());
+        }
+        if unsafe_hit(code) {
+            // Compliant when the same line, or the contiguous block of
+            // comment-only lines directly above, contains `SAFETY:`.
+            let mut documented = src
+                .comments
+                .get(idx)
+                .map(|c| c.contains("SAFETY:"))
+                .unwrap_or(false);
+            let mut j = idx as i64 - 1;
+            while !documented && j >= 0 {
+                let code_blank = src
+                    .code
+                    .get(j as usize)
+                    .map(|c| c.trim().is_empty())
+                    .unwrap_or(false);
+                let comment = src.comments.get(j as usize).map(|c| c.as_str()).unwrap_or("");
+                if !(code_blank && !comment.is_empty()) {
+                    break;
+                }
+                documented = comment.contains("SAFETY:");
+                j -= 1;
+            }
+            if !documented {
+                emit(idx, "unsafe-no-safety", message_of("unsafe-no-safety").into());
+            }
+        }
+    }
+    for (idx, detail) in &ann.malformed {
+        emit(*idx, "lint-malformed-allow", detail.clone());
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(text: &str) -> Vec<Finding> {
+        scan_source(&SourceFile::parse("t.rs", text))
+    }
+
+    fn rules_fired(text: &str) -> Vec<&'static str> {
+        scan(text).iter().filter(|f| !f.allowed).map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn each_det_rule_fires() {
+        assert_eq!(rules_fired("use std::collections::HashMap;"), ["det-unordered-collection"]);
+        assert_eq!(rules_fired("let t = Instant::now();"), ["det-wall-clock"]);
+        assert_eq!(rules_fired("std::thread::spawn(|| {});"), ["det-thread-spawn"]);
+        assert_eq!(rules_fired("let v = std::env::var(\"X\");"), ["det-env-read"]);
+    }
+
+    #[test]
+    fn each_panic_rule_fires() {
+        assert_eq!(rules_fired("let x = y.unwrap();"), ["panic-unwrap"]);
+        assert_eq!(rules_fired("let x = y.expect(\"m\");"), ["panic-expect"]);
+        assert_eq!(rules_fired("panic!(\"boom\");"), ["panic-macro"]);
+        assert_eq!(rules_fired("let x = v[0];"), ["panic-slice-index"]);
+        assert_eq!(rules_fired("unsafe { transmute(x) }"), ["unsafe-no-safety"]);
+    }
+
+    #[test]
+    fn safety_comment_suppresses_unsafe() {
+        assert!(rules_fired("// SAFETY: bounds checked above\nunsafe { f() }").is_empty());
+        assert!(rules_fired("unsafe { f() } // SAFETY: same line").is_empty());
+        // Multi-line contiguous comment block above.
+        assert!(rules_fired("// SAFETY: the cast is a same-allocation\n// view over initialized bytes\nunsafe { f() }").is_empty());
+        // A code line between comment and unsafe breaks contiguity.
+        assert_eq!(
+            rules_fired("// SAFETY: stale\nlet a = 1;\nunsafe { f() }"),
+            ["unsafe-no-safety"]
+        );
+    }
+
+    #[test]
+    fn macros_and_attributes_are_not_indexing() {
+        assert!(rules_fired("let v = vec![1, 2, 3];").is_empty());
+        assert!(rules_fired("#[derive(Debug)]").is_empty());
+        assert_eq!(rules_fired("f(a)[1];"), ["panic-slice-index"]);
+        assert_eq!(rules_fired("m[0][1];"), ["panic-slice-index"]);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_fire() {
+        assert!(rules_fired("let s = \"call .unwrap() and panic!(now)\";").is_empty());
+        assert!(rules_fired("// HashMap would be wrong here").is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let text = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); v[0]; }\n}";
+        assert!(rules_fired(text).is_empty());
+    }
+
+    #[test]
+    fn same_line_allow_suppresses() {
+        let f = scan("let x = y.unwrap(); // afd-lint: allow(panic-unwrap) startup only");
+        assert_eq!(f.len(), 1);
+        assert!(f.iter().all(|x| x.allowed));
+    }
+
+    #[test]
+    fn standalone_allow_targets_next_code_line() {
+        let text = "// afd-lint: allow(det-env-read) argv is the input surface\nlet a = std::env::args();";
+        let f = scan(text);
+        assert_eq!(f.len(), 1);
+        assert!(f.iter().all(|x| x.allowed));
+    }
+
+    #[test]
+    fn allow_file_suppresses_everywhere() {
+        let text = "//! afd-lint: allow-file(det-wall-clock) timing module\nlet a = Instant::now();\nlet b = Instant::now();";
+        let f = scan(text);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|x| x.allowed));
+    }
+
+    #[test]
+    fn malformed_allows_are_reported() {
+        assert_eq!(rules_fired("// afd-lint: allow(no-such-rule) why"), ["lint-malformed-allow"]);
+        assert_eq!(rules_fired("// afd-lint: allow(panic-unwrap)"), ["lint-malformed-allow"]);
+        assert_eq!(rules_fired("// afd-lint: frobnicate(x) y"), ["lint-malformed-allow"]);
+    }
+
+    #[test]
+    fn one_finding_per_line_per_rule() {
+        let f = scan("let a = v[0] + v[1] + v[2];");
+        assert_eq!(f.len(), 1);
+        let f = scan("let a = x.unwrap() + y.unwrap();");
+        assert_eq!(f.len(), 1);
+    }
+}

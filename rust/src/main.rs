@@ -13,6 +13,8 @@
 //!   serve       run the real PJRT serving engine on the demo model
 //!   gen-trace   generate a synthetic production-like trace CSV
 //!   regimes     print the operating-regime map for the configuration
+//!   lint        determinism & safety static analysis over the crate's
+//!               own sources, ratcheted against lint-baseline.json
 
 use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::{recommend_from_load, recommend_from_trace};
@@ -54,6 +56,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("gen-trace") => cmd_gen_trace(args),
         Some("regimes") => cmd_regimes(args),
+        Some("lint") => cmd_lint(args),
         _ => {
             print!(
                 "{}",
@@ -66,6 +69,7 @@ fn run(args: &Args) -> Result<()> {
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
                     .entry("regimes", "print attention/comm/ffn regime boundaries")
+                    .entry("lint", "static analysis: determinism, panic surface, project consistency (--json, --update-baseline)")
                     .render()
             );
             Ok(())
@@ -596,6 +600,66 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
     let out = args.get_str("out", "trace.csv");
     synthetic_production_trace(corpus, n, seed).save_csv(&out)?;
     println!("wrote {n} requests ({}) to {out}", corpus.name());
+    Ok(())
+}
+
+/// `afd lint`: determinism & safety static analysis over the crate's own
+/// sources (see `rust/src/lint/`).
+///
+/// Options:
+///   --root DIR           repository root (default ".")
+///   --paths a,b,c        lint exactly these files/dirs instead of the
+///                        repository (fixture mode: empty default
+///                        baseline, so every finding fails)
+///   --baseline PATH      ratchet file override
+///                        (default <root>/lint-baseline.json)
+///   --update-baseline    rewrite the baseline to current counts and exit
+///   --json PATH|-        write the machine-readable report
+///   --all                list allowed and baselined findings too
+///
+/// Exits nonzero when any (file, rule) count exceeds its baseline budget.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use afd::lint::{baseline::Baseline, report, run, LintOptions};
+    use std::path::PathBuf;
+    let mut opts = LintOptions::repo(args.get_str("root", "."));
+    if let Some(paths) = args.get("paths") {
+        opts.paths = paths
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(PathBuf::from)
+            .collect();
+    }
+    if let Some(b) = args.get("baseline") {
+        opts.baseline = Some(PathBuf::from(b));
+    }
+    let rep = run(&opts)?;
+    if args.has_flag("update-baseline") {
+        let path = opts.baseline_path().unwrap_or_else(|| PathBuf::from("lint-baseline.json"));
+        let base = Baseline::from_findings(&rep.findings);
+        base.write(&path)?;
+        println!("wrote {}: {} baselined finding(s)", path.display(), base.total());
+        return Ok(());
+    }
+    if let Some(path) = args.get("json") {
+        let mut text = report::to_json(&rep).to_string_pretty();
+        text.push('\n');
+        if path == "-" {
+            print!("{text}");
+        } else {
+            std::fs::write(path, text)
+                .map_err(|e| afd::AfdError::config(format!("cannot write {path}: {e}")))?;
+            println!("wrote {path}");
+        }
+    }
+    print!("{}", report::render_text(&rep, args.has_flag("all")));
+    if !rep.passed() {
+        return Err(afd::AfdError::config(format!(
+            "lint: {} finding(s) above baseline across {} (file, rule) pair(s)",
+            rep.unbaselined(),
+            rep.ratchet.exceeded.len()
+        )));
+    }
     Ok(())
 }
 

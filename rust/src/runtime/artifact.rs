@@ -191,6 +191,8 @@ impl Manifest {
 
 /// Default artifacts directory: `$AFD_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
+    // afd-lint: allow(det-env-read) AFD_ARTIFACTS relocates compiled
+    // artifacts on disk; it cannot change what they compute
     std::env::var("AFD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 

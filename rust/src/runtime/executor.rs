@@ -15,7 +15,7 @@
 //! (the runtime hot-path optimization recorded in EXPERIMENTS.md §Perf).
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 
 // In dependency-free offline builds this resolves to the gated stub; with
@@ -213,10 +213,19 @@ fn literal_to_tensor(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
 }
 
 fn bytes_of_f32(v: &[f32]) -> &[u8] {
+    // SAFETY: the pointer and length describe exactly the memory of `v`:
+    // `size_of_val(v)` is the slice's total byte width (never a hardcoded
+    // element size, so a dtype change cannot desynchronize it), every byte
+    // of an `f32` is initialized, `u8` has alignment 1 so any source
+    // alignment is valid, and the borrow of `v` pins the allocation for
+    // the returned lifetime. `as_ptr` on an empty slice is still non-null
+    // and aligned, which `from_raw_parts` with len 0 requires.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
 fn bytes_of_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: as in `bytes_of_f32` — same-allocation view, exact byte
+    // length via `size_of_val`, align-1 target type, lifetime tied to `v`.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
@@ -227,13 +236,15 @@ fn bytes_of_i32(v: &[i32]) -> &[u8] {
 pub struct LocalRuntime {
     manifest: Manifest,
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    // BTreeMap (not HashMap): probed by name only, but the ordered map
+    // keeps e.g. a future preload/eviction walk deterministic for free.
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
 }
 
 impl LocalRuntime {
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { manifest, client, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { manifest, client, cache: RefCell::new(BTreeMap::new()) })
     }
 
     pub fn manifest(&self) -> &Manifest {

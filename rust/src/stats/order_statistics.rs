@@ -17,7 +17,7 @@
 //! large `r`, `kappa_r ~ sqrt(2 log r)` (used as a sanity cross-check and
 //! in the asymptotic overhead discussion of §4.2).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
 
 use super::gaussian::{normal_cdf, normal_pdf};
@@ -45,10 +45,15 @@ pub fn max_normal_pdf(r: usize, m: f64) -> f64 {
     r as f64 * normal_pdf(m) * normal_cdf(m).powi(r as i32 - 1)
 }
 
-static KAPPA_CACHE: OnceLock<Mutex<HashMap<usize, f64>>> = OnceLock::new();
+// Ordered map: the cache is only ever probed by key (`get`/`insert` in
+// `expected_max_std_normal`), so iteration order can't leak today — but a
+// BTreeMap removes the hazard class outright, and the value stored for a
+// key is identical regardless of computation order (quadrature is a pure
+// function of `r`), so concurrent first-fills stay deterministic.
+static KAPPA_CACHE: OnceLock<Mutex<BTreeMap<usize, f64>>> = OnceLock::new();
 
-fn kappa_cache() -> &'static Mutex<HashMap<usize, f64>> {
-    KAPPA_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn kappa_cache() -> &'static Mutex<BTreeMap<usize, f64>> {
+    KAPPA_CACHE.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 /// `kappa_r = E[max(Z_1..Z_r)]` for i.i.d. standard normals (Eq. 5).

@@ -41,6 +41,7 @@ impl Args {
 
     /// Parse the process arguments.
     pub fn parse() -> Args {
+        // afd-lint: allow(det-env-read) argv is the CLI's input surface
         Self::parse_from(std::env::args())
     }
 

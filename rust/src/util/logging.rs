@@ -2,6 +2,9 @@
 //! in the offline build environment) with wall-clock offsets.
 //!
 //! Controlled by `AFD_LOG` (error|warn|info|debug, default `info`).
+//!
+//! afd-lint: allow-file(det-wall-clock) log-line timestamps are
+//! diagnostics on stderr; they never enter simulation outputs
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -43,6 +46,7 @@ fn emit(level: u8, label: &str, msg: &str) {
 /// Install the logger (idempotent). Level from `AFD_LOG` env var.
 pub fn init() {
     start();
+    // afd-lint: allow(det-env-read) AFD_LOG selects stderr verbosity only
     let level = match std::env::var("AFD_LOG").as_deref() {
         Ok("error") => ERROR,
         Ok("warn") => WARN,

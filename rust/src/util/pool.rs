@@ -3,6 +3,10 @@
 //! Tokio is unavailable offline; the serving engine pins one OS thread per
 //! AFD instance anyway (an Attention worker is a device in the paper's
 //! model), so a plain pool + channels is the honest architecture.
+//!
+//! afd-lint: allow-file(det-thread-spawn) this module IS the sanctioned
+//! parallelism substrate — determinism is the caller's contract (seeded
+//! per-item jobs; `map` restores input order by index)
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -92,6 +96,9 @@ impl ThreadPool {
 /// Worker count for parallel sweeps: the machine's logical cores, capped
 /// by the job count, minimum one.
 pub fn default_threads(jobs: usize) -> usize {
+    // afd-lint: allow(det-env-read) the worker count shapes scheduling
+    // only; results are reassembled by index, so outputs are identical
+    // at any parallelism degree
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     cores.min(jobs.max(1))
 }
@@ -207,6 +214,35 @@ mod tests {
         let empty: Vec<u64> = vec![];
         assert!(pool.map(empty, |x| x).is_empty());
         assert_eq!(pool.map(vec![7u64], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn pool_map_is_schedule_independent() {
+        // Adversarial completion orders: per-item sleeps force results to
+        // arrive out of submission order (reverse-duration makes the
+        // first-submitted item finish last), yet `map` must restore input
+        // order by index at every pool size. This is the contract the
+        // sweep grid's determinism rests on.
+        let items: Vec<u64> = (0..48).collect();
+        let expected: Vec<u64> = items.iter().map(|x| x * x + 7).collect();
+        for threads in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            for pattern in 0..3u64 {
+                let out = pool.map(items.clone(), move |x| {
+                    let delay_us = match pattern {
+                        // Reverse duration: earliest submission, latest finish.
+                        0 => (48 - x) * 20,
+                        // Alternating: odd items stall, even items race ahead.
+                        1 => (x % 2) * 600,
+                        // Pseudorandom mix (fixed multiplier, not wall clock).
+                        _ => (x.wrapping_mul(2654435761) >> 16) % 700,
+                    };
+                    std::thread::sleep(std::time::Duration::from_micros(delay_us));
+                    x * x + 7
+                });
+                assert_eq!(out, expected, "threads={threads} pattern={pattern}");
+            }
+        }
     }
 
     #[test]

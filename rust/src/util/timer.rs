@@ -1,4 +1,7 @@
 //! Timing helpers shared by the bench harness and the serving metrics.
+//!
+//! afd-lint: allow-file(det-wall-clock) wall-clock-only module — the
+//! stopwatch exists to time real execution, never simulation virtual time
 
 use std::time::{Duration, Instant};
 

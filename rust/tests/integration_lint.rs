@@ -1,0 +1,199 @@
+//! End-to-end tests of `afd lint`: the fixture corpus makes every rule
+//! fire, allow annotations and the baseline ratchet suppress correctly,
+//! and — the real gate — the repository itself lints clean.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use afd::lint::baseline::Baseline;
+use afd::lint::{report, rules, run, LintOptions, LintReport};
+use afd::util::json::Json;
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixtures() -> PathBuf {
+    manifest_dir().join("rust").join("tests").join("lint_fixtures")
+}
+
+/// Fixture mode: explicit paths, empty default baseline.
+fn fixture_report() -> LintReport {
+    let opts =
+        LintOptions { root: manifest_dir(), paths: vec![fixtures()], baseline: None };
+    run(&opts).expect("fixture lint run")
+}
+
+#[test]
+fn rule_registry_is_sane() {
+    let ids: BTreeSet<&str> = rules::RULES.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), rules::RULES.len(), "duplicate rule ids");
+    assert_eq!(rules::RULES.len(), 14);
+    for r in rules::RULES {
+        assert!(r.id.is_ascii() && !r.id.contains(' '));
+        assert!(!r.message.is_empty());
+    }
+}
+
+#[test]
+fn every_rule_fires_on_the_fixture_corpus() {
+    let rep = fixture_report();
+    let fired: BTreeSet<&str> =
+        rep.findings.iter().filter(|f| !f.allowed).map(|f| f.rule).collect();
+    let expected = [
+        "det-unordered-collection",
+        "det-wall-clock",
+        "det-thread-spawn",
+        "det-env-read",
+        "panic-unwrap",
+        "panic-expect",
+        "panic-macro",
+        "panic-slice-index",
+        "unsafe-no-safety",
+        "lint-malformed-allow",
+        "use-unresolved",
+        "brace-unbalanced",
+    ];
+    for rule in expected {
+        assert!(fired.contains(rule), "rule {rule} did not fire on the fixture corpus");
+    }
+    // Empty default baseline in fixture mode: the seeded violations fail
+    // the run — this is the property CI's seeded-violation check rests on.
+    assert!(!rep.passed());
+    assert!(rep.unbaselined() > 0);
+}
+
+#[test]
+fn allowed_fixture_is_fully_suppressed() {
+    let rep = fixture_report();
+    let in_allowed: Vec<_> =
+        rep.findings.iter().filter(|f| f.file.ends_with("allowed_ok.rs")).collect();
+    assert!(!in_allowed.is_empty(), "allow fixtures should still be reported as findings");
+    let bad: Vec<_> = in_allowed.iter().filter(|f| !f.allowed).collect();
+    assert!(
+        bad.is_empty(),
+        "unallowed findings in allowed_ok.rs: {:?}",
+        bad.iter().map(|f| (f.line, f.rule)).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn clean_fixture_has_zero_findings() {
+    let rep = fixture_report();
+    let in_clean: Vec<_> =
+        rep.findings.iter().filter(|f| f.file.ends_with("clean.rs")).collect();
+    assert!(
+        in_clean.is_empty(),
+        "clean.rs findings: {:?}",
+        in_clean.iter().map(|f| (f.line, f.rule)).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn ratchet_baselines_the_corpus_then_passes() {
+    let dir = std::env::temp_dir().join("afd_lint_ratchet_it");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let bpath = dir.join("corpus-baseline.json");
+    let first = fixture_report();
+    assert!(!first.passed());
+    Baseline::from_findings(&first.findings).write(&bpath).expect("write baseline");
+    let opts = LintOptions {
+        root: manifest_dir(),
+        paths: vec![fixtures()],
+        baseline: Some(bpath.clone()),
+    };
+    let second = run(&opts).expect("baselined lint run");
+    assert!(second.passed(), "exceeded: {:?}", second.ratchet.exceeded);
+    assert_eq!(second.unbaselined(), 0);
+    assert!(second.findings.iter().filter(|f| !f.allowed).all(|f| f.baselined));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn json_report_matches_the_contract() {
+    let rep = fixture_report();
+    let j = report::to_json(&rep);
+    assert_eq!(j.get("version").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(j.get("passed"), Some(&Json::Bool(false)));
+    assert_eq!(
+        j.get("files_scanned").and_then(|v| v.as_usize()),
+        Some(rep.files_scanned)
+    );
+    let findings = j.get("findings").and_then(|v| v.as_arr()).expect("findings array");
+    assert_eq!(findings.len(), rep.total());
+    for f in findings {
+        let keys =
+            ["file", "line", "rule", "family", "message", "snippet", "allowed", "baselined"];
+        for key in keys {
+            assert!(f.get(key).is_some(), "finding missing key {key}");
+        }
+    }
+    let summary = j.get("summary").expect("summary");
+    let total = summary.get("total").and_then(|v| v.as_usize()).expect("total");
+    let allowed = summary.get("allowed").and_then(|v| v.as_usize()).expect("allowed");
+    let baselined = summary.get("baselined").and_then(|v| v.as_usize()).expect("baselined");
+    let unbaselined =
+        summary.get("unbaselined").and_then(|v| v.as_usize()).expect("unbaselined");
+    assert_eq!(total, allowed + baselined + unbaselined);
+    // Round-trips through the hand-rolled JSON parser.
+    let parsed = Json::parse(&report::to_json(&rep).to_string_pretty()).expect("reparse");
+    assert_eq!(parsed.get("version").and_then(|v| v.as_usize()), Some(1));
+}
+
+/// The acceptance gate: the repository lints clean against its committed
+/// baseline, and the consistency family is at zero outright (those rules
+/// are never baselined away).
+#[test]
+fn repository_lints_clean_against_committed_baseline() {
+    let rep = run(&LintOptions::repo(manifest_dir())).expect("repo lint run");
+    assert!(rep.files_scanned > 50, "suspiciously few files: {}", rep.files_scanned);
+    assert!(
+        rep.passed(),
+        "lint above baseline: {:?}",
+        rep.ratchet
+            .exceeded
+            .iter()
+            .map(|d| format!("{}:{} {}>{}", d.file, d.rule, d.current, d.budget))
+            .collect::<Vec<_>>()
+    );
+    assert_eq!(rep.unbaselined(), 0);
+    let consistency: Vec<_> = rep
+        .findings
+        .iter()
+        .filter(|f| {
+            matches!(
+                f.rule,
+                "cargo-target-missing"
+                    | "cargo-target-unlisted"
+                    | "use-unresolved"
+                    | "brace-unbalanced"
+            )
+        })
+        .collect();
+    assert!(
+        consistency.is_empty(),
+        "consistency findings: {:?}",
+        consistency.iter().map(|f| (&f.file, f.line, f.rule)).collect::<Vec<_>>()
+    );
+    // Every allow annotation in the tree is well-formed.
+    assert!(rep.findings.iter().all(|f| f.rule != "lint-malformed-allow"));
+}
+
+/// The committed baseline matches what `--update-baseline` would write
+/// today — i.e. it is neither stale (slack) nor optimistic (exceeded).
+/// Slack is a warning in the CLI but a hard failure here so the ratchet
+/// actually tightens as the panic surface shrinks.
+#[test]
+fn committed_baseline_is_tight() {
+    let rep = run(&LintOptions::repo(manifest_dir())).expect("repo lint run");
+    assert!(rep.passed());
+    assert!(
+        rep.ratchet.slack.is_empty(),
+        "baseline has slack — regenerate with `afd lint --update-baseline`: {:?}",
+        rep.ratchet
+            .slack
+            .iter()
+            .map(|d| format!("{}:{} {}<{}", d.file, d.rule, d.current, d.budget))
+            .collect::<Vec<_>>()
+    );
+}

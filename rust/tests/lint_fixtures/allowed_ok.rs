@@ -1,0 +1,40 @@
+//! Lint fixture: every pattern is properly suppressed — an allow
+//! annotation with a reason, a SAFETY comment, or a test region. The
+//! linter must report zero unallowed findings here.
+//!
+//! afd-lint: allow-file(det-wall-clock) fixture exercising file-level allows
+
+pub fn timed() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn also_timed() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn startup(x: Option<u32>) -> u32 {
+    x.unwrap() // afd-lint: allow(panic-unwrap) fixture same-line allow
+}
+
+pub fn first(v: &[u32]) -> u32 {
+    // afd-lint: allow(panic-slice-index) fixture standalone allow
+    v[0]
+}
+
+pub fn documented(p: *const u32) -> u32 {
+    // SAFETY: fixture — caller guarantees p is valid and aligned.
+    unsafe { *p }
+}
+
+pub fn in_strings() -> &'static str {
+    "HashMap Instant::now .unwrap() panic!(these are just words)"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_panics_freely() {
+        let v = vec![1, 2, 3];
+        assert_eq!(v[0], *v.first().unwrap());
+    }
+}

@@ -1,0 +1,6 @@
+//! Lint fixture: delimiter imbalance (an extra closing brace).
+
+pub fn f() -> u32 {
+    1
+}
+}

@@ -1,0 +1,7 @@
+//! Lint fixture: an import that resolves nowhere in the module tree.
+
+use crate::no_such_module::Thing;
+
+pub fn g() -> Option<Thing> {
+    None
+}

@@ -1,0 +1,18 @@
+//! Lint fixture: a clean file — zero findings of any kind. Patterns
+//! inside strings, comments, and raw strings must not fire.
+
+use std::collections::BTreeMap;
+
+/// Neither `HashMap` nor `.unwrap()` in this doc comment counts.
+pub fn h(m: &BTreeMap<u32, u32>, k: u32) -> Option<u32> {
+    m.get(&k).copied()
+}
+
+pub fn raw() -> &'static str {
+    r#"thread::spawn and v[0] and SystemTime inside a raw string"#
+}
+
+pub fn lifetimes<'a>(s: &'a str) -> &'a str {
+    let _brace = '{';
+    s
+}

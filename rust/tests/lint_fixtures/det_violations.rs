@@ -1,0 +1,22 @@
+//! Lint fixture: every determinism rule fires exactly once.
+//! This file is corpus data for `integration_lint.rs`; it is never
+//! compiled (the lint walk skips `lint_fixtures`, and it is not a Cargo
+//! target).
+
+use std::collections::HashMap;
+
+pub fn wall_clock() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn spawn_raw() {
+    std::thread::spawn(|| {});
+}
+
+pub fn env_read() -> Option<String> {
+    std::env::var("AFD_FIXTURE").ok()
+}
+
+pub fn unordered() -> HashMap<u32, u32> {
+    HashMap::new()
+}

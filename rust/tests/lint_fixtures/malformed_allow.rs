@@ -1,0 +1,10 @@
+//! Lint fixture: malformed allow annotations are themselves findings.
+
+// afd-lint: allow(no-such-rule) reason given but the rule is unknown
+pub fn a() {}
+
+// afd-lint: allow(panic-unwrap)
+pub fn b() {}
+
+// afd-lint: frobnicate(panic-unwrap) not a directive
+pub fn c() {}

@@ -1,0 +1,21 @@
+//! Lint fixture: every panic-surface rule fires. Corpus data only.
+
+pub fn unwraps(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn expects(x: Option<u32>) -> u32 {
+    x.expect("fixture")
+}
+
+pub fn panics() {
+    panic!("fixture");
+}
+
+pub fn indexes(v: &[u32]) -> u32 {
+    v[0]
+}
+
+pub fn undocumented_unsafe(p: *const u32) -> u32 {
+    unsafe { *p }
+}

@@ -1,0 +1,316 @@
+#!/usr/bin/env python3
+"""Toolchain-free validator for AFD ingress journals.
+
+Mirrors the binary grammar of ``rust/src/ingress/store.rs`` so CI can
+audit a journal without the Rust toolchain::
+
+    file   := magic record*            magic = b"AFDJRNL1"
+    record := len:u32le payload crc:u32le     crc = FNV-1a(payload)
+    payload:= seq:u64le tag:u8 fields         seq = 1, 2, 3, ... (no gaps)
+    f64    := u64le bit pattern
+
+Tags: 0 Header (key/value pairs; must be the first record), 1 Admit,
+2 Reject, 3 Complete, 4 Drop.
+
+Checks, in order:
+
+1. magic and per-record framing (length bound, checksum, full payload
+   consumption, strictly sequential ``seq``); anything after the first
+   framing failure is a *torn tail* — reported as a note, not an error
+   (the Rust side truncates and regenerates it on recovery);
+2. the first record is a Header and no later record is;
+3. admit ids are unique and >= 1 (0 is the reserved pre-loaded id);
+4. every Complete/Drop refers to a previously admitted id (Complete of
+   id 0 is the pre-loaded-slot exception);
+5. every journaled time is finite.
+
+Usage:
+    python3 python/check_journal.py <journal.afd | journal-dir>
+    python3 python/check_journal.py --selftest
+
+Exit status: 0 when the journal (or selftest) passes, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import struct
+import sys
+
+MAGIC = b"AFDJRNL1"
+JOURNAL_FILE = "journal.afd"
+MAX_RECORD = 1 << 20
+TAG_NAMES = {0: "Header", 1: "Admit", 2: "Reject", 3: "Complete", 4: "Drop"}
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0x811C9DC5
+    for b in data:
+        h = ((h ^ b) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def f64(bits: int) -> float:
+    return struct.unpack("<d", struct.pack("<Q", bits))[0]
+
+
+class Tear(Exception):
+    """Framing/grammar damage: everything from here on is discarded."""
+
+
+def parse_payload(payload: bytes):
+    """Decode one checksummed payload into (seq, tag, fields)."""
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        if off + n > len(payload):
+            raise Tear("payload truncated")
+        chunk = payload[off : off + n]
+        off += n
+        return chunk
+
+    def u16() -> int:
+        return struct.unpack("<H", take(2))[0]
+
+    def u32() -> int:
+        return struct.unpack("<I", take(4))[0]
+
+    def u64() -> int:
+        return struct.unpack("<Q", take(8))[0]
+
+    seq = u64()
+    tag = take(1)[0]
+    if tag == 0:
+        n = u32()
+        if n > MAX_RECORD:
+            raise Tear("oversized header entry count")
+        entries = []
+        for _ in range(n):
+            k = take(u16()).decode("utf-8", errors="strict")
+            v = take(u16()).decode("utf-8", errors="strict")
+            entries.append((k, v))
+        fields = {"entries": entries}
+    elif tag == 1:
+        fields = {"id": u64(), "bundle": u32(), "at": f64(u64())}
+    elif tag == 2:
+        fields = {"bundle": u32(), "at": f64(u64())}
+    elif tag == 3:
+        fields = {
+            "id": u64(),
+            "bundle": u32(),
+            "finish": f64(u64()),
+            "admit": f64(u64()),
+            "prefill": u64(),
+            "decode": u64(),
+        }
+    elif tag == 4:
+        fields = {"id": u64(), "bundle": u32(), "at": f64(u64())}
+    else:
+        raise Tear(f"unknown tag {tag}")
+    if off != len(payload):
+        raise Tear("trailing bytes inside checksummed payload")
+    return seq, tag, fields
+
+
+def parse_records(body: bytes):
+    """Return (records, torn_note). Stops at the first tear, like the
+    Rust decoder: the valid prefix is trusted, the rest is discarded."""
+    records = []
+    off = 0
+    next_seq = 1
+    while True:
+        if off == len(body):
+            return records, None
+        if off + 4 > len(body):
+            return records, f"torn tail: {len(body) - off} trailing byte(s)"
+        (length,) = struct.unpack("<I", body[off : off + 4])
+        if length == 0 or length > MAX_RECORD:
+            return records, f"torn tail: bad record length {length} at offset {off}"
+        end = off + 4 + length + 4
+        if end > len(body):
+            return records, f"torn tail: truncated record at offset {off}"
+        payload = body[off + 4 : off + 4 + length]
+        (crc,) = struct.unpack("<I", body[off + 4 + length : end])
+        if crc != fnv1a(payload):
+            return records, f"torn tail: checksum mismatch at offset {off}"
+        try:
+            seq, tag, fields = parse_payload(payload)
+        except Tear as t:
+            return records, f"torn tail: {t} at offset {off}"
+        if seq != next_seq:
+            return records, f"torn tail: sequence {seq} where {next_seq} expected"
+        records.append((seq, tag, fields))
+        next_seq += 1
+        off = end
+
+
+def validate(records) -> list:
+    """Semantic checks over the valid prefix. Returns error strings."""
+    errors = []
+    if not records:
+        errors.append("journal has no intact records (nothing to recover)")
+        return errors
+    if records[0][1] != 0:
+        errors.append(
+            f"first record is {TAG_NAMES.get(records[0][1], '?')}, not a Header"
+        )
+    admitted = set()
+    closed = set()
+    for seq, tag, fields in records:
+        name = TAG_NAMES.get(tag, "?")
+        if tag == 0 and seq != 1:
+            errors.append(f"seq {seq}: Header after the first record")
+            continue
+        for key in ("at", "finish", "admit"):
+            if key in fields and not math.isfinite(fields[key]):
+                errors.append(f"seq {seq}: non-finite {key} in {name}")
+        if tag == 1:
+            rid = fields["id"]
+            if rid == 0:
+                errors.append(f"seq {seq}: Admit with reserved id 0")
+            elif rid in admitted:
+                errors.append(f"seq {seq}: double Admit of id {rid}")
+            else:
+                admitted.add(rid)
+        elif tag in (3, 4):
+            rid = fields["id"]
+            if tag == 3 and rid == 0:
+                continue  # pre-loaded slot: completes without an Admit
+            if rid not in admitted:
+                errors.append(f"seq {seq}: {name} of never-admitted id {rid}")
+            elif rid in closed:
+                errors.append(f"seq {seq}: {name} of already-terminal id {rid}")
+            else:
+                closed.add(rid)
+    return errors
+
+
+def check_file(path: str) -> int:
+    if os.path.isdir(path):
+        path = os.path.join(path, JOURNAL_FILE)
+    try:
+        with open(path, "rb") as fh:
+            data = fh.read()
+    except OSError as e:
+        print(f"FAIL {path}: {e}")
+        return 1
+    if not data.startswith(MAGIC):
+        print(f"FAIL {path}: bad magic (not an AFD journal)")
+        return 1
+    records, torn = parse_records(data[len(MAGIC) :])
+    errors = validate(records)
+    tags = {}
+    for _, tag, _ in records:
+        tags[TAG_NAMES.get(tag, "?")] = tags.get(TAG_NAMES.get(tag, "?"), 0) + 1
+    summary = ", ".join(f"{n} {k}" for k, n in sorted(tags.items())) or "empty"
+    for err in errors:
+        print(f"  error: {err}")
+    if torn:
+        print(f"  note: {torn} (recovery regenerates it)")
+    status = "FAIL" if errors else "OK"
+    print(f"{status} {path}: {len(records)} record(s) ({summary})")
+    return 1 if errors else 0
+
+
+# ------------------------------------------------------------- selftest
+
+
+def enc_str(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<H", len(b)) + b
+
+
+def record(seq: int, tag: int, body: bytes) -> bytes:
+    payload = struct.pack("<QB", seq, tag) + body
+    return struct.pack("<I", len(payload)) + payload + struct.pack("<I", fnv1a(payload))
+
+
+def header(seq: int, entries) -> bytes:
+    body = struct.pack("<I", len(entries))
+    for k, v in entries:
+        body += enc_str(k) + enc_str(v)
+    return record(seq, 0, body)
+
+
+def admit(seq: int, rid: int, bundle: int, at: float) -> bytes:
+    return record(seq, 1, struct.pack("<QI", rid, bundle) + struct.pack("<d", at))
+
+
+def complete(seq: int, rid: int, bundle: int, fin: float, adm: float) -> bytes:
+    return record(
+        seq,
+        3,
+        struct.pack("<QI", rid, bundle) + struct.pack("<dd", fin, adm) + struct.pack("<QQ", 8, 4),
+    )
+
+
+def selftest() -> int:
+    good = MAGIC + header(1, [("version", "1"), ("seed", "7")]) + admit(2, 1, 0, 0.5) + complete(3, 1, 0, 9.5, 0.5)
+
+    def run(data: bytes):
+        if not data.startswith(MAGIC):
+            return None, None, ["bad magic"]
+        records, torn = parse_records(data[len(MAGIC) :])
+        return records, torn, validate(records)
+
+    cases = []
+    r, torn, errs = run(good)
+    cases.append(("valid journal passes", not errs and torn is None and len(r) == 3))
+
+    r, torn, errs = run(good[:-3])
+    cases.append(("torn tail tolerated", not errs and torn is not None and len(r) == 2))
+
+    _, _, errs = run(b"NOTAJRNL" + good[len(MAGIC) :])
+    cases.append(("bad magic rejected", bool(errs)))
+
+    mid_corrupt = bytearray(good)
+    mid_corrupt[len(MAGIC) + len(header(1, [("version", "1"), ("seed", "7")])) + 6] ^= 0xFF
+    r, torn, errs = run(bytes(mid_corrupt))
+    cases.append(("mid-file corruption tears", torn is not None and len(r) == 1))
+
+    dbl = MAGIC + header(1, [("version", "1")]) + admit(2, 1, 0, 0.5) + admit(3, 1, 0, 0.7)
+    _, _, errs = run(dbl)
+    cases.append(("double admit fails", any("double Admit" in e for e in errs)))
+
+    ghost = MAGIC + header(1, [("version", "1")]) + complete(2, 9, 0, 1.0, 0.5)
+    _, _, errs = run(ghost)
+    cases.append(("complete of unknown id fails", any("never-admitted" in e for e in errs)))
+
+    headless = MAGIC + admit(1, 1, 0, 0.5)
+    _, _, errs = run(headless)
+    cases.append(("headerless journal fails", any("not a Header" in e for e in errs)))
+
+    _, _, errs = run(MAGIC)
+    cases.append(("empty journal fails", any("no intact records" in e for e in errs)))
+
+    gap = MAGIC + header(1, [("version", "1")]) + admit(3, 1, 0, 0.5)
+    r, torn, _ = run(gap)
+    cases.append(("sequence gap tears", torn is not None and len(r) == 1))
+
+    preloaded = MAGIC + header(1, [("version", "1")]) + complete(2, 0, 0, 1.0, 0.0)
+    _, _, errs = run(preloaded)
+    cases.append(("pre-loaded id 0 completion allowed", not errs))
+
+    failed = [name for name, ok in cases if not ok]
+    for name, ok in cases:
+        print(f"  {'ok' if ok else 'FAIL'}: {name}")
+    if failed:
+        print(f"selftest: {len(failed)}/{len(cases)} case(s) FAILED")
+        return 1
+    print(f"selftest: all {len(cases)} cases passed")
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) == 1 and argv[0] == "--selftest":
+        return selftest()
+    if len(argv) != 1:
+        print(__doc__)
+        return 1
+    return check_file(argv[0])
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -148,6 +148,56 @@ fn main() {
         }
     }
 
+    println!("\n== ingress dispatcher overhead (MemStore vs plain, B = 512) ==");
+    {
+        // The zero-cost-default guard for the ingress subsystem: a
+        // MemStore-backed dispatcher journals only lifecycle transitions
+        // (admit/complete), never per-step work, so bolting it onto a
+        // closed-loop session must cost < 5% of the hot path. The same
+        // in-process before/after pairing as the SoA guard keeps the
+        // ratio noise-robust; AFD_FAST prints but does not enforce.
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 512;
+        cfg.requests_per_instance = if fast { 60 } else { 200 };
+        let r = 4;
+        let slot_steps = (cfg.requests_per_instance * r) as f64 * 500.0;
+        let plain_cfg = cfg.clone();
+        let plain = bench_with_setup(
+            "plain sim r=4 B=512",
+            cfg_fast,
+            || Simulation::builder(&plain_cfg, r).build().unwrap(),
+            |sim| sim.run().metrics.completed,
+        );
+        let ingress_cfg = cfg.clone();
+        let tracked = bench_with_setup(
+            "ingress(mem) sim r=4 B=512",
+            cfg_fast,
+            || {
+                Simulation::builder(&ingress_cfg, r)
+                    .ingress(afd::ingress::Ingress::in_memory())
+                    .build()
+                    .unwrap()
+            },
+            |sim| sim.run().metrics.completed,
+        );
+        let overhead = tracked.mean_secs / plain.mean_secs - 1.0;
+        println!(
+            "{}\n{}\n  -> ingress overhead {:.2}% (guard: < 5%)",
+            plain.summary(),
+            tracked.summary(),
+            100.0 * overhead
+        );
+        record(&mut records, &plain, slot_steps);
+        record(&mut records, &tracked, slot_steps);
+        if !fast && overhead > 0.05 {
+            eprintln!(
+                "hotpath: MemStore ingress overhead {:.2}% at B=512 exceeds the 5% guard",
+                100.0 * overhead
+            );
+            std::process::exit(1);
+        }
+    }
+
     println!("\n== lane scheduling (BinaryHeap vs legacy linear min-scan) ==");
     {
         // Bench guard for the heap replacement of the O(lanes) ready-time

@@ -85,7 +85,9 @@ impl Batcher {
         }
         let worker = self.router.route(&self.loads());
         self.worker_queues[worker].push_back(request.id);
-        self.requests.insert(request.id, TrackedRequest::new(request));
+        let mut tracked = TrackedRequest::new(request);
+        tracked.enqueue()?;
+        self.requests.insert(request.id, tracked);
         Ok(worker)
     }
 

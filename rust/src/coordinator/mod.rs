@@ -1,7 +1,9 @@
 //! The L3 coordination layer: everything between the request API and the
 //! PJRT runtime.
 //!
-//! * [`request_state`] — request lifecycle state machine.
+//! * [`request_state`] — re-export shim of the request lifecycle state
+//!   machine, whose canonical home is [`crate::ingress::lifecycle`]
+//!   (transition-validated, sticky terminals, journaled phases).
 //! * [`load`] — the engine-agnostic [`load::BundleLoad`] observability
 //!   trait (queued backlog, token load, slot occupancy, KV headroom)
 //!   every policy decision consumes; implemented by the real engine's

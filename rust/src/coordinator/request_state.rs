@@ -1,134 +1,12 @@
-//! Serving-request lifecycle state machine.
-//!
-//! `Queued -> Decoding -> Completed`. (Prefill is instantaneous in the
-//! decode-bundle model: AFD serves the decode phase; prefill happens on a
-//! separate pool under PD disaggregation, so a request arrives here with
-//! its prompt KV conceptually materialized — represented by its prefill
-//! length contributing to the slot's token load.)
+//! Re-export shim: the request lifecycle state machine moved to
+//! [`crate::ingress::lifecycle`], which owns the canonical
+//! `Received -> Queued -> Admitted -> Decoding{n} -> Completed |
+//! Rejected` machine (transition-validated, sticky terminals — the old
+//! thin enum here had no `Rejected` state and silently overwrote
+//! `Completed` on out-of-order updates). Existing
+//! `coordinator::request_state::*` paths keep working through this
+//! module.
 
-use crate::error::{AfdError, Result};
-
-/// A request as seen by the serving coordinator.
-#[derive(Debug, Clone, PartialEq)]
-pub struct ServingRequest {
-    pub id: u64,
-    /// First input token id (drives the real model's decode loop).
-    pub seed_token: i32,
-    /// Prefill (prompt) length in tokens — the KV the request arrives with.
-    pub prefill: u64,
-    /// Decode budget: the request completes after this many output tokens.
-    pub decode_budget: u64,
-    /// Arrival wall-clock (seconds since engine start).
-    pub arrival: f64,
-}
-
-/// Lifecycle state.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum RequestState {
-    Queued,
-    /// Being decoded in `slot` of `worker`.
-    Decoding { worker: usize, slot: usize, produced: u64, admitted_at: f64 },
-    Completed { produced: u64, admitted_at: f64, finished_at: f64 },
-}
-
-/// Tracked request: static info + dynamic state.
-#[derive(Debug, Clone, PartialEq)]
-pub struct TrackedRequest {
-    pub request: ServingRequest,
-    pub state: RequestState,
-}
-
-impl TrackedRequest {
-    pub fn new(request: ServingRequest) -> Self {
-        Self { request, state: RequestState::Queued }
-    }
-
-    /// Transition: admit to a worker slot.
-    pub fn admit(&mut self, worker: usize, slot: usize, now: f64) -> Result<()> {
-        match self.state {
-            RequestState::Queued => {
-                self.state =
-                    RequestState::Decoding { worker, slot, produced: 0, admitted_at: now };
-                Ok(())
-            }
-            _ => Err(AfdError::Coordinator(format!(
-                "request {} cannot be admitted from state {:?}",
-                self.request.id, self.state
-            ))),
-        }
-    }
-
-    /// Transition: one output token produced. Returns `true` when the
-    /// request just completed.
-    pub fn produce_token(&mut self, now: f64) -> Result<bool> {
-        match &mut self.state {
-            RequestState::Decoding { produced, admitted_at, .. } => {
-                *produced += 1;
-                if *produced >= self.request.decode_budget {
-                    let (p, a) = (*produced, *admitted_at);
-                    self.state =
-                        RequestState::Completed { produced: p, admitted_at: a, finished_at: now };
-                    Ok(true)
-                } else {
-                    Ok(false)
-                }
-            }
-            _ => Err(AfdError::Coordinator(format!(
-                "request {} cannot produce a token from state {:?}",
-                self.request.id, self.state
-            ))),
-        }
-    }
-
-    /// TPOT for a completed request.
-    pub fn tpot(&self) -> Option<f64> {
-        match self.state {
-            RequestState::Completed { produced, admitted_at, finished_at } => {
-                Some((finished_at - admitted_at) / produced as f64)
-            }
-            _ => None,
-        }
-    }
-
-    pub fn is_completed(&self) -> bool {
-        matches!(self.state, RequestState::Completed { .. })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn req(decode_budget: u64) -> ServingRequest {
-        ServingRequest { id: 1, seed_token: 5, prefill: 10, decode_budget, arrival: 0.0 }
-    }
-
-    #[test]
-    fn full_lifecycle() {
-        let mut t = TrackedRequest::new(req(2));
-        assert_eq!(t.state, RequestState::Queued);
-        t.admit(0, 3, 1.0).unwrap();
-        assert!(!t.produce_token(2.0).unwrap());
-        assert!(t.produce_token(3.0).unwrap());
-        assert!(t.is_completed());
-        assert!((t.tpot().unwrap() - 1.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn illegal_transitions_rejected() {
-        let mut t = TrackedRequest::new(req(1));
-        assert!(t.produce_token(0.0).is_err()); // not yet admitted
-        t.admit(0, 0, 0.0).unwrap();
-        assert!(t.admit(1, 1, 0.0).is_err()); // double admit
-        assert!(t.produce_token(1.0).unwrap());
-        assert!(t.produce_token(2.0).is_err()); // already complete
-    }
-
-    #[test]
-    fn tpot_none_until_complete() {
-        let mut t = TrackedRequest::new(req(5));
-        assert!(t.tpot().is_none());
-        t.admit(0, 0, 0.0).unwrap();
-        assert!(t.tpot().is_none());
-    }
-}
+pub use crate::ingress::lifecycle::{
+    allowed, Phase, RequestState, ServingRequest, TrackedRequest,
+};

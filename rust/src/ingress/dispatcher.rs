@@ -1,0 +1,512 @@
+//! The bounded-admission dispatcher: wraps any
+//! [`ArrivalProcess`](crate::sim::session::ArrivalProcess) and journals
+//! every admit / reject / complete through a [`StateStore`].
+//!
+//! One shared [`Ingress`] core (behind an [`IngressHandle`]) serves a
+//! whole fleet: every bundle's arrival wrapper and completion observer
+//! tag their events with the bundle index and shift local times by the
+//! bundle's epoch offset, so request ids are **cluster-unique** and the
+//! fleet journal is replayable as one global event stream.
+//!
+//! The wrappers are pure pass-throughs for engine-visible behavior
+//! (`try_admit` results, `initial_fill`, `stats`, `name` all delegate),
+//! which is what keeps a `MemStore`-attached session byte-identical to
+//! a bare one — the dispatcher observes transitions, it never perturbs
+//! them. Journal I/O errors cannot surface through the arrival trait,
+//! so they *poison* the core instead; [`Ingress::ensure_healthy`] turns
+//! the poison into an [`AfdError`] at the next checkpoint / finish.
+//!
+//! In **replay mode** (crash recovery) the core verifies each
+//! regenerated event against the journaled prefix instead of appending
+//! it; the first divergence poisons the run — a changed config or
+//! binary cannot silently "recover" into a different trajectory.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::error::{AfdError, Result};
+use crate::ingress::store::{JournalEvent, MemStore, StateStore};
+use crate::sim::session::{ArrivalProcess, ArrivalStats, SimObserver};
+use crate::sim::slots::Completion;
+
+/// Shared handle to one dispatcher core (session builders, cluster
+/// builders, observers, and the caller all hold clones).
+pub type IngressHandle = Rc<RefCell<Ingress>>;
+
+enum Mode {
+    /// Append every event to the store.
+    Live,
+    /// Verify regenerated events against a journaled prefix, then go
+    /// live. `events` excludes the header record.
+    Replay { events: Vec<JournalEvent>, next: usize },
+}
+
+/// Backpressure and lifecycle counters of a dispatcher core.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IngressStats {
+    /// Backend name (`"mem"` / `"journal"`).
+    pub store: &'static str,
+    /// High-water journal sequence number.
+    pub seq: u64,
+    /// Requests admitted through the dispatcher.
+    pub admitted: u64,
+    /// Arrivals shed at admission (queue full).
+    pub rejected: u64,
+    /// Tracked requests that completed.
+    pub completed: u64,
+    /// Completions of pre-loaded slots (closed-loop initial fill /
+    /// warm start) that never passed through admission.
+    pub preloaded: u64,
+    /// In-flight requests discarded at epoch rebuilds.
+    pub dropped: u64,
+    /// Requests currently admitted and not yet terminal.
+    pub inflight: usize,
+    /// Arrivals offered but neither admitted nor rejected yet (the
+    /// visible queue depth, summed over bundles).
+    pub queue_depth: u64,
+}
+
+/// The dispatcher core: id allocation, admit→complete matching,
+/// counters, and the journaling mode machine.
+pub struct Ingress {
+    store: Box<dyn StateStore>,
+    mode: Mode,
+    /// Next request id; ids start at 1 (0 marks pre-loaded slots).
+    next_id: u64,
+    /// (bundle, global-admit-time bits) -> admitted ids, FIFO. The
+    /// engine stamps a slot's `admit_time` with the `try_admit` call
+    /// time, so completions can be matched back to admissions exactly;
+    /// same-instant admits match in completion order (documented — the
+    /// association among equal-time admits is positional).
+    admit_index: BTreeMap<(u32, u64), Vec<u64>>,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    preloaded: u64,
+    dropped: u64,
+    /// Latest (offered, admitted, rejected) absolutes per bundle, from
+    /// the wrapped arrival's own stats — the queue-depth source.
+    arrival_seen: BTreeMap<u32, (u64, u64, u64)>,
+    poisoned: Option<String>,
+}
+
+impl Ingress {
+    fn new(store: Box<dyn StateStore>, mode: Mode) -> Self {
+        Self {
+            store,
+            mode,
+            next_id: 1,
+            admit_index: BTreeMap::new(),
+            admitted: 0,
+            rejected: 0,
+            completed: 0,
+            preloaded: 0,
+            dropped: 0,
+            arrival_seen: BTreeMap::new(),
+            poisoned: None,
+        }
+    }
+
+    /// A live core over any backend.
+    pub fn with_store(store: Box<dyn StateStore>) -> IngressHandle {
+        Rc::new(RefCell::new(Self::new(store, Mode::Live)))
+    }
+
+    /// The zero-cost default: a live core over a [`MemStore`].
+    pub fn in_memory() -> IngressHandle {
+        Self::with_store(Box::new(MemStore::new()))
+    }
+
+    /// A recovering core: `events` is the journaled post-header prefix
+    /// the re-executed run must regenerate verbatim before going live.
+    /// The store must already reflect those events (a
+    /// [`crate::ingress::store::JournalStore`] opened on the journal).
+    pub fn replaying(store: Box<dyn StateStore>, events: Vec<JournalEvent>) -> IngressHandle {
+        let mode = if events.is_empty() { Mode::Live } else { Mode::Replay { events, next: 0 } };
+        Rc::new(RefCell::new(Self::new(store, mode)))
+    }
+
+    /// Write the self-describing header record (fresh journals only;
+    /// must be the first record).
+    pub fn put_header(&mut self, entries: Vec<(String, String)>) -> Result<u64> {
+        self.store.put(&JournalEvent::Header { entries })
+    }
+
+    /// Record one event: verify against the journal in replay mode,
+    /// append in live mode. Errors poison the core (the arrival trait
+    /// cannot carry them).
+    fn record(&mut self, ev: JournalEvent) {
+        if self.poisoned.is_some() {
+            return;
+        }
+        if let Mode::Replay { events, next } = &self.mode {
+            if *next >= events.len() {
+                self.mode = Mode::Live;
+            }
+        }
+        match &mut self.mode {
+            Mode::Live => {
+                if let Err(e) = self.store.put(&ev) {
+                    self.poisoned = Some(format!("journal append failed: {e}"));
+                }
+            }
+            Mode::Replay { events, next } => match events.get(*next) {
+                Some(want) if *want == ev => *next += 1,
+                Some(want) => {
+                    self.poisoned = Some(format!(
+                        "crash-recovery replay diverged at journaled event {}: \
+                         journal has {want:?}, re-execution produced {ev:?} \
+                         (config, seed, or binary changed since the journal was written?)",
+                        *next + 1
+                    ));
+                }
+                None => {}
+            },
+        }
+    }
+
+    pub(crate) fn on_admit(&mut self, bundle: u32, at: f64) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.admitted += 1;
+        self.admit_index.entry((bundle, at.to_bits())).or_default().push(id);
+        self.record(JournalEvent::Admit { id, bundle, at });
+    }
+
+    pub(crate) fn on_reject(&mut self, bundle: u32, at: f64) {
+        self.rejected += 1;
+        self.record(JournalEvent::Reject { bundle, at });
+    }
+
+    pub(crate) fn on_complete(&mut self, bundle: u32, offset: f64, c: &Completion) {
+        let admit = offset + c.admit_time;
+        let finish = offset + c.finish_time;
+        let key = (bundle, admit.to_bits());
+        let mut id = 0u64;
+        let mut emptied = false;
+        if let Some(q) = self.admit_index.get_mut(&key) {
+            if !q.is_empty() {
+                id = q.remove(0);
+            }
+            emptied = q.is_empty();
+        }
+        if emptied {
+            self.admit_index.remove(&key);
+        }
+        if id == 0 {
+            self.preloaded += 1;
+        } else {
+            self.completed += 1;
+        }
+        self.record(JournalEvent::Complete {
+            id,
+            bundle,
+            finish,
+            admit,
+            prefill: c.prefill,
+            decode: c.decode_len,
+        });
+    }
+
+    pub(crate) fn note_arrival_counts(
+        &mut self,
+        bundle: u32,
+        offered: u64,
+        admitted: u64,
+        rejected: u64,
+    ) {
+        self.arrival_seen.insert(bundle, (offered, admitted, rejected));
+    }
+
+    /// Discard every in-flight request of `bundle` at an epoch rebuild
+    /// (its slots restart, so they can never complete). Deterministic:
+    /// ids drain in admit-time order, FIFO within equal times — the
+    /// same order live and under replay.
+    pub fn on_epoch_end(&mut self, bundle: u32, at: f64) {
+        let stale: Vec<u64> = self
+            .admit_index
+            .iter()
+            .filter(|((b, _), _)| *b == bundle)
+            .flat_map(|(_, ids)| ids.iter().copied())
+            .collect();
+        self.admit_index.retain(|(b, _), _| *b != bundle);
+        for id in stale {
+            self.dropped += 1;
+            self.record(JournalEvent::Drop { id, bundle, at });
+        }
+    }
+
+    /// Surface a poisoned core as the error it swallowed.
+    pub fn ensure_healthy(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(msg) => Err(AfdError::Sim(msg.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// After a recovered run finishes, the journaled prefix must be
+    /// fully consumed — a leftover tail means the re-execution was
+    /// *shorter* than the journal, i.e. it did not reproduce the
+    /// original trajectory.
+    pub fn finish_replay_check(&self) -> Result<()> {
+        self.ensure_healthy()?;
+        if let Mode::Replay { events, next } = &self.mode {
+            if *next < events.len() {
+                return Err(AfdError::Sim(format!(
+                    "crash recovery finished with {} journaled event(s) never regenerated \
+                     (run spec mismatch?)",
+                    events.len() - next
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush the store (fsync for journals); errors include any
+    /// poison accumulated since the last checkpoint.
+    pub fn checkpoint(&mut self) -> Result<u64> {
+        self.ensure_healthy()?;
+        self.store.checkpoint()
+    }
+
+    /// In-flight snapshot of the backing store.
+    pub fn scan_inflight(&self) -> Vec<crate::ingress::store::InflightRecord> {
+        self.store.scan_inflight()
+    }
+
+    pub fn stats(&self) -> IngressStats {
+        let queue_depth = self
+            .arrival_seen
+            .values()
+            .map(|&(offered, admitted, rejected)| {
+                offered.saturating_sub(admitted).saturating_sub(rejected)
+            })
+            .sum();
+        IngressStats {
+            store: self.store.name(),
+            seq: self.store.high_water(),
+            admitted: self.admitted,
+            rejected: self.rejected,
+            completed: self.completed,
+            preloaded: self.preloaded,
+            dropped: self.dropped,
+            inflight: self.store.scan_inflight().len(),
+            queue_depth,
+        }
+    }
+}
+
+// ------------------------------------------------------------- wrappers
+
+/// [`ArrivalProcess`] wrapper: delegates every engine-visible decision
+/// to the inner process and journals the transitions it observes.
+pub struct IngressArrival {
+    inner: Box<dyn ArrivalProcess>,
+    core: IngressHandle,
+    bundle: u32,
+    offset: f64,
+    /// Cached (offered, admitted, rejected) absolutes — sync work only
+    /// happens when the inner process's counters actually moved.
+    last_counts: (u64, u64, u64),
+}
+
+impl IngressArrival {
+    pub fn new(
+        core: IngressHandle,
+        inner: Box<dyn ArrivalProcess>,
+        bundle: u32,
+        offset: f64,
+    ) -> Self {
+        Self { inner, core, bundle, offset, last_counts: (0, 0, 0) }
+    }
+
+    fn sync(&mut self, now: f64) {
+        let s = self.inner.stats(now);
+        if (s.offered, s.admitted, s.rejected) == self.last_counts {
+            return;
+        }
+        let mut core = self.core.borrow_mut();
+        let (_, _, last_rejected) = self.last_counts;
+        for _ in last_rejected..s.rejected {
+            core.on_reject(self.bundle, self.offset + now);
+        }
+        core.note_arrival_counts(self.bundle, s.offered, s.admitted, s.rejected);
+        self.last_counts = (s.offered, s.admitted, s.rejected);
+    }
+}
+
+impl ArrivalProcess for IngressArrival {
+    fn advance_to(&mut self, now: f64) {
+        self.inner.advance_to(now);
+        self.sync(now);
+    }
+
+    fn try_admit(&mut self, now: f64) -> Option<f64> {
+        let got = self.inner.try_admit(now);
+        if got.is_some() {
+            self.core.borrow_mut().on_admit(self.bundle, self.offset + now);
+        }
+        self.sync(now);
+        got
+    }
+
+    fn initial_fill(&self) -> bool {
+        self.inner.initial_fill()
+    }
+
+    fn stats(&self, total_time: f64) -> ArrivalStats {
+        self.inner.stats(total_time)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+/// [`SimObserver`] feeding the engine's completion batches into the
+/// core (stamped into cluster-global time by the bundle offset).
+pub struct IngressObserver {
+    core: IngressHandle,
+    bundle: u32,
+    offset: f64,
+}
+
+impl IngressObserver {
+    pub fn new(core: IngressHandle, bundle: u32, offset: f64) -> Self {
+        Self { core, bundle, offset }
+    }
+}
+
+impl SimObserver for IngressObserver {
+    fn on_completions(&mut self, _now: f64, completions: &[Completion]) {
+        let mut core = self.core.borrow_mut();
+        for c in completions {
+            core.on_complete(self.bundle, self.offset, c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingress::lifecycle::Phase;
+
+    fn completion(finish: f64, admit: f64) -> Completion {
+        Completion { finish_time: finish, admit_time: admit, prefill: 8, decode_len: 4 }
+    }
+
+    #[test]
+    fn admit_complete_matching_assigns_cluster_unique_ids() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.on_admit(1, 1.0); // same time, different bundle
+            c.on_admit(0, 2.0);
+            c.on_complete(0, 0.0, &completion(5.0, 2.0));
+            c.on_complete(1, 0.0, &completion(6.0, 1.0));
+            c.on_complete(0, 0.0, &completion(7.0, 1.0));
+        }
+        let c = core.borrow();
+        let s = c.stats();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.preloaded, 0);
+        c.ensure_healthy().unwrap();
+    }
+
+    #[test]
+    fn preloaded_completions_do_not_touch_the_table() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            // Closed-loop initial fill: completions with no prior admit.
+            c.on_complete(0, 0.0, &completion(3.0, 0.0));
+            c.on_complete(0, 0.0, &completion(4.0, 0.0));
+        }
+        let s = core.borrow().stats();
+        assert_eq!(s.preloaded, 2);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.inflight, 0);
+    }
+
+    #[test]
+    fn epoch_end_drops_only_that_bundles_inflight() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.on_admit(1, 1.5);
+            c.on_admit(0, 2.0);
+            c.on_epoch_end(0, 9.0);
+        }
+        let c = core.borrow();
+        let s = c.stats();
+        assert_eq!(s.dropped, 2);
+        let inflight = c.scan_inflight();
+        assert_eq!(inflight.len(), 1);
+        assert_eq!(inflight.first().unwrap().bundle, 1);
+        assert_eq!(inflight.first().unwrap().phase, Phase::Admitted);
+        c.ensure_healthy().unwrap();
+    }
+
+    #[test]
+    fn replay_verifies_and_goes_live() {
+        // Record a live prefix...
+        let live = Ingress::in_memory();
+        {
+            let mut c = live.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.on_admit(0, 2.0);
+        }
+        let events = vec![
+            JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 },
+            JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 },
+        ];
+        // ...then replay it plus one extra live event.
+        let rec = Ingress::replaying(Box::new(MemStore::new()), events);
+        {
+            let mut c = rec.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.finish_replay_check().unwrap_err(); // one event left
+            c.on_admit(0, 2.0);
+            c.finish_replay_check().unwrap();
+            c.on_admit(0, 3.0); // live from here
+            c.ensure_healthy().unwrap();
+        }
+        assert_eq!(rec.borrow().stats().admitted, 3);
+    }
+
+    #[test]
+    fn replay_divergence_poisons() {
+        let events = vec![JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }];
+        let core = Ingress::replaying(Box::new(MemStore::new()), events);
+        core.borrow_mut().on_admit(0, 99.0); // wrong time
+        assert!(core.borrow().ensure_healthy().is_err());
+        assert!(core.borrow_mut().checkpoint().is_err());
+    }
+
+    #[test]
+    fn store_errors_poison_instead_of_panicking() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.on_admit(0, 1.0);
+            // Force a lifecycle violation through the store: a second
+            // admit of id 1 can only happen if the id allocator broke;
+            // emulate it by replaying a bogus journal tail live.
+            c.record(JournalEvent::Admit { id: 1, bundle: 0, at: 2.0 });
+        }
+        assert!(core.borrow().ensure_healthy().is_err());
+    }
+
+    #[test]
+    fn queue_depth_from_arrival_counts() {
+        let core = Ingress::in_memory();
+        core.borrow_mut().note_arrival_counts(0, 10, 6, 1);
+        core.borrow_mut().note_arrival_counts(1, 4, 4, 0);
+        assert_eq!(core.borrow().stats().queue_depth, 3);
+    }
+}

@@ -1,0 +1,334 @@
+//! The request lifecycle state machine.
+//!
+//! Canonical home of [`ServingRequest`] and [`TrackedRequest`] (absorbed
+//! from the old `coordinator/request_state.rs`, which now re-exports
+//! from here). The lifecycle is
+//!
+//! ```text
+//! Received -> Queued -> Admitted -> Decoding{n} -> Completed
+//!     \          \                                    |
+//!      \          +-> Rejected                        | (terminal)
+//!       +-----------> Rejected                        v
+//! ```
+//!
+//! Every transition is validated against [`allowed`]; an illegal one is
+//! an [`AfdError::Coordinator`], never a panic, and the terminal states
+//! (`Completed`, `Rejected`) are sticky — an out-of-order update can no
+//! longer silently overwrite a finished request (the bug the old thin
+//! enum permitted). The same [`Phase`] codes are what
+//! [`crate::ingress::store`] journals to disk, so the durable record
+//! and the in-memory machine can never disagree about what states
+//! exist.
+
+use crate::error::{AfdError, Result};
+
+/// One inference request as seen by the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingRequest {
+    pub id: u64,
+    /// First input token (stands in for the tokenized prompt).
+    pub seed_token: i32,
+    /// Prompt length in tokens.
+    pub prefill: u64,
+    /// Decode budget: tokens to generate before completion.
+    pub decode_budget: u64,
+    /// Arrival time (cycles for the simulator, seconds for the engine).
+    pub arrival: f64,
+}
+
+/// Compact phase code: the journaled on-disk representation of a
+/// lifecycle state. Values are part of the journal format — append
+/// only, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Received = 0,
+    Queued = 1,
+    Admitted = 2,
+    Decoding = 3,
+    Completed = 4,
+    Rejected = 5,
+}
+
+impl Phase {
+    pub fn from_u8(v: u8) -> Option<Phase> {
+        match v {
+            0 => Some(Phase::Received),
+            1 => Some(Phase::Queued),
+            2 => Some(Phase::Admitted),
+            3 => Some(Phase::Decoding),
+            4 => Some(Phase::Completed),
+            5 => Some(Phase::Rejected),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Received => "received",
+            Phase::Queued => "queued",
+            Phase::Admitted => "admitted",
+            Phase::Decoding => "decoding",
+            Phase::Completed => "completed",
+            Phase::Rejected => "rejected",
+        }
+    }
+
+    /// Terminal phases are sticky: nothing transitions out of them.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Phase::Completed | Phase::Rejected)
+    }
+}
+
+/// Is `from -> to` a legal lifecycle edge?
+///
+/// `Decoding -> Decoding` is legal (one edge per produced token) and
+/// `Admitted -> Completed` covers a decode budget of one token. This
+/// is the single source of truth — the tracked machine *and* the
+/// durable stores validate against it.
+pub fn allowed(from: Phase, to: Phase) -> bool {
+    match from {
+        Phase::Received => matches!(to, Phase::Queued | Phase::Rejected),
+        Phase::Queued => matches!(to, Phase::Admitted | Phase::Rejected),
+        Phase::Admitted => matches!(to, Phase::Decoding | Phase::Completed),
+        Phase::Decoding => matches!(to, Phase::Decoding | Phase::Completed),
+        Phase::Completed | Phase::Rejected => false,
+    }
+}
+
+/// Lifecycle state of a tracked request, with per-state payloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RequestState {
+    /// Seen by the front-end, not yet enqueued for placement.
+    Received,
+    /// In the admission queue, waiting for a slot.
+    Queued,
+    /// Placed into (worker, slot); no tokens produced yet.
+    Admitted { worker: usize, slot: usize, admitted_at: f64 },
+    /// Actively decoding; `produced` tokens emitted so far.
+    Decoding { worker: usize, slot: usize, produced: u64, admitted_at: f64 },
+    /// Terminal: the full decode budget was produced.
+    Completed { produced: u64, admitted_at: f64, finished_at: f64 },
+    /// Terminal: shed at admission (queue full / infeasible / dropped).
+    Rejected { at: f64 },
+}
+
+impl RequestState {
+    pub fn phase(&self) -> Phase {
+        match self {
+            RequestState::Received => Phase::Received,
+            RequestState::Queued => Phase::Queued,
+            RequestState::Admitted { .. } => Phase::Admitted,
+            RequestState::Decoding { .. } => Phase::Decoding,
+            RequestState::Completed { .. } => Phase::Completed,
+            RequestState::Rejected { .. } => Phase::Rejected,
+        }
+    }
+}
+
+/// A request plus its validated lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrackedRequest {
+    pub request: ServingRequest,
+    pub state: RequestState,
+}
+
+impl TrackedRequest {
+    /// A freshly received request (state `Received`).
+    pub fn new(request: ServingRequest) -> Self {
+        Self { request, state: RequestState::Received }
+    }
+
+    fn illegal(&self, to: Phase) -> AfdError {
+        AfdError::Coordinator(format!(
+            "request {}: illegal transition {} -> {}",
+            self.request.id,
+            self.state.phase().name(),
+            to.name()
+        ))
+    }
+
+    fn check(&self, to: Phase) -> Result<()> {
+        if allowed(self.state.phase(), to) {
+            Ok(())
+        } else {
+            Err(self.illegal(to))
+        }
+    }
+
+    /// `Received -> Queued`: accepted into the admission queue.
+    pub fn enqueue(&mut self) -> Result<()> {
+        self.check(Phase::Queued)?;
+        self.state = RequestState::Queued;
+        Ok(())
+    }
+
+    /// `Queued -> Admitted`: placed into (worker, slot) at `now`.
+    pub fn admit(&mut self, worker: usize, slot: usize, now: f64) -> Result<()> {
+        self.check(Phase::Admitted)?;
+        self.state = RequestState::Admitted { worker, slot, admitted_at: now };
+        Ok(())
+    }
+
+    /// `{Received, Queued} -> Rejected`: shed before placement.
+    pub fn reject(&mut self, now: f64) -> Result<()> {
+        self.check(Phase::Rejected)?;
+        self.state = RequestState::Rejected { at: now };
+        Ok(())
+    }
+
+    /// Record one produced token at `now`. Returns `true` when the
+    /// decode budget is exhausted (the request is now `Completed`).
+    pub fn produce_token(&mut self, now: f64) -> Result<bool> {
+        let (worker, slot, produced, admitted_at) = match self.state {
+            RequestState::Admitted { worker, slot, admitted_at } => (worker, slot, 0, admitted_at),
+            RequestState::Decoding { worker, slot, produced, admitted_at } => {
+                (worker, slot, produced, admitted_at)
+            }
+            _ => return Err(self.illegal(Phase::Decoding)),
+        };
+        let produced = produced + 1;
+        if produced >= self.request.decode_budget {
+            self.state = RequestState::Completed { produced, admitted_at, finished_at: now };
+            Ok(true)
+        } else {
+            self.state = RequestState::Decoding { worker, slot, produced, admitted_at };
+            Ok(false)
+        }
+    }
+
+    /// Time-per-output-token; `None` until completed.
+    pub fn tpot(&self) -> Option<f64> {
+        match self.state {
+            RequestState::Completed { produced, admitted_at, finished_at } if produced > 0 => {
+                Some((finished_at - admitted_at) / produced as f64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self.state, RequestState::Completed { .. })
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.state.phase().is_terminal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, decode_budget: u64) -> ServingRequest {
+        ServingRequest { id, seed_token: 1, prefill: 8, decode_budget, arrival: 0.0 }
+    }
+
+    #[test]
+    fn full_lifecycle() {
+        let mut t = TrackedRequest::new(req(1, 2));
+        assert_eq!(t.state.phase(), Phase::Received);
+        t.enqueue().unwrap();
+        t.admit(0, 3, 10.0).unwrap();
+        assert_eq!(t.state.phase(), Phase::Admitted);
+        assert!(!t.produce_token(11.0).unwrap());
+        assert_eq!(t.state.phase(), Phase::Decoding);
+        assert!(t.produce_token(12.0).unwrap());
+        assert!(t.is_completed());
+        assert!((t.tpot().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_of_one_completes_from_admitted() {
+        let mut t = TrackedRequest::new(req(2, 1));
+        t.enqueue().unwrap();
+        t.admit(0, 0, 1.0).unwrap();
+        assert!(t.produce_token(2.0).unwrap());
+        assert!(t.is_completed());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut t = TrackedRequest::new(req(3, 2));
+        // Cannot admit or decode before enqueueing.
+        assert!(t.admit(0, 0, 0.0).is_err());
+        assert!(t.produce_token(0.0).is_err());
+        t.enqueue().unwrap();
+        // Cannot enqueue twice or decode before admission.
+        assert!(t.enqueue().is_err());
+        assert!(t.produce_token(0.0).is_err());
+    }
+
+    #[test]
+    fn terminal_states_are_sticky() {
+        let mut t = TrackedRequest::new(req(4, 1));
+        t.enqueue().unwrap();
+        t.admit(0, 0, 0.0).unwrap();
+        t.produce_token(1.0).unwrap();
+        let done = t;
+        // The old enum silently overwrote Completed; now every
+        // out-of-order update errors and leaves the state untouched.
+        assert!(t.admit(1, 1, 2.0).is_err());
+        assert!(t.produce_token(2.0).is_err());
+        assert!(t.enqueue().is_err());
+        assert!(t.reject(2.0).is_err());
+        assert_eq!(t, done);
+
+        let mut r = TrackedRequest::new(req(5, 1));
+        r.reject(0.5).unwrap();
+        assert!(r.enqueue().is_err());
+        assert!(r.admit(0, 0, 1.0).is_err());
+        assert_eq!(r.state, RequestState::Rejected { at: 0.5 });
+    }
+
+    #[test]
+    fn reject_from_queue() {
+        let mut t = TrackedRequest::new(req(6, 4));
+        t.enqueue().unwrap();
+        t.reject(3.0).unwrap();
+        assert!(t.is_terminal());
+        assert!(!t.is_completed());
+        assert!(t.tpot().is_none());
+    }
+
+    #[test]
+    fn tpot_none_until_complete() {
+        let mut t = TrackedRequest::new(req(7, 3));
+        assert!(t.tpot().is_none());
+        t.enqueue().unwrap();
+        t.admit(0, 0, 0.0).unwrap();
+        t.produce_token(1.0).unwrap();
+        assert!(t.tpot().is_none());
+    }
+
+    #[test]
+    fn phase_codes_round_trip() {
+        for v in 0u8..6 {
+            let p = Phase::from_u8(v).unwrap();
+            assert_eq!(p as u8, v);
+        }
+        assert!(Phase::from_u8(6).is_none());
+        assert!(Phase::Completed.is_terminal());
+        assert!(Phase::Rejected.is_terminal());
+        assert!(!Phase::Decoding.is_terminal());
+    }
+
+    #[test]
+    fn allowed_edges_match_diagram() {
+        use Phase::*;
+        let legal = [
+            (Received, Queued),
+            (Received, Rejected),
+            (Queued, Admitted),
+            (Queued, Rejected),
+            (Admitted, Decoding),
+            (Admitted, Completed),
+            (Decoding, Decoding),
+            (Decoding, Completed),
+        ];
+        for a in [Received, Queued, Admitted, Decoding, Completed, Rejected] {
+            for b in [Received, Queued, Admitted, Decoding, Completed, Rejected] {
+                assert_eq!(allowed(a, b), legal.contains(&(a, b)), "{a:?} -> {b:?}");
+            }
+        }
+    }
+}

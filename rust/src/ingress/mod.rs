@@ -1,0 +1,41 @@
+//! `ingress/` — the persistent request-lifecycle subsystem.
+//!
+//! The simulator's arrival side used to be a pure in-memory construct:
+//! `OpenLoopPoisson` fed slots directly and no request identity
+//! survived a process death. This subsystem gives the serving stack a
+//! real front door, modeled on production serving front-ends:
+//!
+//! * [`lifecycle`] — the transition-validated request state machine
+//!   (`Received → Queued → Admitted → Decoding{n} → Completed |
+//!   Rejected`; illegal transitions are errors, terminals are sticky).
+//!   Canonical home of `ServingRequest`/`TrackedRequest`
+//!   (`coordinator::request_state` re-exports from here).
+//! * [`store`] — the object-safe [`store::StateStore`] trait with two
+//!   backends: [`store::MemStore`] (BTreeMap, the zero-cost default)
+//!   and [`store::JournalStore`] (append-only length-prefixed record
+//!   log with checksums, a monotone sequence number, an fsync-batching
+//!   knob, and torn-tail tolerance on open).
+//! * [`dispatcher`] — the bounded-admission [`dispatcher::Ingress`]
+//!   core plus the wrappers that attach it to any session or fleet:
+//!   `IngressArrival` (journals admits/rejects around an inner
+//!   `ArrivalProcess` without perturbing it) and `IngressObserver`
+//!   (journals completions). One core serves N bundles with
+//!   cluster-unique request ids.
+//! * [`recovery`] — deterministic crash recovery: rebuild the run from
+//!   the journal's self-describing header and re-execute it in
+//!   replay-verify mode, producing completions CSV and metrics JSON
+//!   byte-identical to an uninterrupted run.
+//!
+//! Attach with `Simulation::builder(..).ingress(core)` or
+//! `ClusterSimulation::builder(..).ingress(core)`; drive end-to-end
+//! (including kill/recover) with `afd ingress`.
+
+pub mod dispatcher;
+pub mod lifecycle;
+pub mod recovery;
+pub mod store;
+
+pub use dispatcher::{Ingress, IngressArrival, IngressHandle, IngressObserver, IngressStats};
+pub use lifecycle::{Phase, RequestState, ServingRequest, TrackedRequest};
+pub use recovery::{run_fresh, run_recover, Artifacts, RunSpec};
+pub use store::{JournalStore, MemStore, StateStore};

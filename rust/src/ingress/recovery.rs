@@ -1,0 +1,440 @@
+//! Crash recovery: re-execute a journaled run to byte-identical output.
+//!
+//! The journal's first record is a self-describing [`RunSpec`] header —
+//! everything needed to rebuild the simulation (seed, shape, arrival
+//! regime, routing policy, cost model, autoscaling). Recovery is
+//! *event-sourcing replay*: [`run_recover`] opens the journal (torn
+//! tail truncated), reconstructs the spec, and re-executes the run from
+//! step 0 with the dispatcher in replay mode — every regenerated
+//! admit/reject/complete/drop is verified against the journaled prefix,
+//! and the first divergence aborts the run instead of silently
+//! producing a different trajectory. Once the prefix is consumed the
+//! dispatcher flips live and appends, so a recovered run's journal,
+//! completions CSV, and metrics JSON are byte-identical to an
+//! uninterrupted run's (asserted by `tests/integration_ingress.rs` and
+//! the CI `ingress-smoke` job).
+//!
+//! Re-execution (not state snapshotting) is what makes this exact: the
+//! engine's virtual-time schedule depends on float accumulations that a
+//! snapshot would have to capture bit-perfectly; replaying from the
+//! seed reproduces them by construction, at the cost of re-simulating
+//! the pre-crash prefix — the classic event-sourcing trade.
+
+use std::path::Path;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::coordinator::router::Policy;
+use crate::error::{AfdError, Result};
+use crate::ingress::dispatcher::{Ingress, IngressHandle, IngressStats};
+use crate::ingress::store::{JournalEvent, JournalStore, StateStore};
+use crate::latency::cost::CostSpec;
+use crate::server::metrics_export::{
+    arrival_stats_to_json, completions_to_csv_string, sim_metrics_to_json,
+};
+use crate::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+use crate::sim::session::{OpenLoopPoisson, Simulation};
+use crate::util::json::Json;
+
+/// Arrival regime of a journaled run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    Closed,
+    Open { lambda: f64, queue: usize },
+}
+
+/// Autoscaling shape of a journaled run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleSpec {
+    pub feasible: Vec<usize>,
+    pub window: usize,
+    pub epoch: usize,
+}
+
+/// Everything needed to rebuild a run from its journal header: the
+/// config source plus the overrides the CLI applied to it. Times are
+/// stored as `f64::to_bits` decimals so the header round-trips floats
+/// exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Config file the run loaded, if any (`None` = built-in default).
+    pub config_path: Option<String>,
+    pub seed: u64,
+    pub r: usize,
+    pub batch: usize,
+    /// `requests_per_instance` override (completion target scale).
+    pub requests: usize,
+    pub arrival: ArrivalSpec,
+    pub bundles: usize,
+    /// Routing policy selector (`rr`/`jsq`/`ltl`/...), re-parsed by
+    /// [`Policy::parse`] at rebuild time.
+    pub policy: String,
+    /// Cost-model selector, re-parsed by [`CostSpec::parse`].
+    pub cost: String,
+    pub autoscale: Option<AutoscaleSpec>,
+}
+
+const HEADER_VERSION: &str = "1";
+
+impl RunSpec {
+    /// Serialize to journal-header entries (deterministic order).
+    pub fn to_entries(&self) -> Vec<(String, String)> {
+        let mut e: Vec<(String, String)> =
+            vec![("version".into(), HEADER_VERSION.into())];
+        if let Some(p) = &self.config_path {
+            e.push(("config".into(), p.clone()));
+        }
+        e.push(("seed".into(), self.seed.to_string()));
+        e.push(("r".into(), self.r.to_string()));
+        e.push(("batch".into(), self.batch.to_string()));
+        e.push(("requests".into(), self.requests.to_string()));
+        match self.arrival {
+            ArrivalSpec::Closed => e.push(("arrival".into(), "closed".into())),
+            ArrivalSpec::Open { lambda, queue } => {
+                e.push(("arrival".into(), "open".into()));
+                e.push(("lambda_bits".into(), lambda.to_bits().to_string()));
+                e.push(("queue".into(), queue.to_string()));
+            }
+        }
+        e.push(("bundles".into(), self.bundles.to_string()));
+        e.push(("policy".into(), self.policy.clone()));
+        e.push(("cost".into(), self.cost.clone()));
+        if let Some(a) = &self.autoscale {
+            let feasible: Vec<String> = a.feasible.iter().map(|r| r.to_string()).collect();
+            e.push(("autoscale_feasible".into(), feasible.join(",")));
+            e.push(("autoscale_window".into(), a.window.to_string()));
+            e.push(("autoscale_epoch".into(), a.epoch.to_string()));
+        }
+        e
+    }
+
+    /// Rebuild from header entries (the inverse of [`Self::to_entries`]).
+    pub fn from_entries(entries: &[(String, String)]) -> Result<Self> {
+        let get = |key: &str| -> Option<&str> {
+            entries.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+        };
+        let bad = |what: &str| AfdError::Sim(format!("journal header: bad or missing {what}"));
+        let get_u64 = |key: &str| -> Result<u64> {
+            get(key).and_then(|v| v.parse::<u64>().ok()).ok_or_else(|| bad(key))
+        };
+        let get_usize = |key: &str| -> Result<usize> {
+            get(key).and_then(|v| v.parse::<usize>().ok()).ok_or_else(|| bad(key))
+        };
+        match get("version") {
+            Some(HEADER_VERSION) => {}
+            other => {
+                return Err(AfdError::Sim(format!(
+                    "journal header: unsupported version {other:?} (want {HEADER_VERSION:?})"
+                )))
+            }
+        }
+        let arrival = match get("arrival") {
+            Some("closed") => ArrivalSpec::Closed,
+            Some("open") => ArrivalSpec::Open {
+                lambda: f64::from_bits(get_u64("lambda_bits")?),
+                queue: get_usize("queue")?,
+            },
+            _ => return Err(bad("arrival")),
+        };
+        let autoscale = match get("autoscale_feasible") {
+            None => None,
+            Some(csv) => {
+                let feasible: Vec<usize> = csv
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>().map_err(|_| bad("autoscale_feasible")))
+                    .collect::<Result<_>>()?;
+                Some(AutoscaleSpec {
+                    feasible,
+                    window: get_usize("autoscale_window")?,
+                    epoch: get_usize("autoscale_epoch")?,
+                })
+            }
+        };
+        Ok(Self {
+            config_path: get("config").map(str::to_string),
+            seed: get_u64("seed")?,
+            r: get_usize("r")?,
+            batch: get_usize("batch")?,
+            requests: get_usize("requests")?,
+            arrival,
+            bundles: get_usize("bundles")?,
+            policy: get("policy").ok_or_else(|| bad("policy"))?.to_string(),
+            cost: get("cost").ok_or_else(|| bad("cost"))?.to_string(),
+            autoscale,
+        })
+    }
+}
+
+/// Byte-stable output artifacts of a completed run — what the
+/// crash-recovery contract compares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifacts {
+    pub completions_csv: String,
+    pub metrics_json: String,
+}
+
+/// Dispatcher counters as JSON (part of the metrics artifact, so the
+/// recovered run must reproduce the *accounting*, not just the
+/// completion schedule).
+pub fn ingress_stats_to_json(s: &IngressStats) -> Json {
+    Json::obj()
+        .set("store", Json::Str(s.store.to_string()))
+        .set("seq", Json::Num(s.seq as f64))
+        .set("admitted", Json::Num(s.admitted as f64))
+        .set("rejected", Json::Num(s.rejected as f64))
+        .set("completed", Json::Num(s.completed as f64))
+        .set("preloaded", Json::Num(s.preloaded as f64))
+        .set("dropped", Json::Num(s.dropped as f64))
+        .set("inflight", Json::Num(s.inflight as f64))
+        .set("queue_depth", Json::Num(s.queue_depth as f64))
+}
+
+fn load_config(spec: &RunSpec) -> Result<ExperimentConfig> {
+    let base = match &spec.config_path {
+        Some(p) => ExperimentConfig::from_file(p)?,
+        None => ExperimentConfig::default(),
+    };
+    Ok(base.with_seed(spec.seed).with_batch(spec.batch).with_requests(spec.requests))
+}
+
+/// Execute `spec` against an already-constructed dispatcher core
+/// (live for fresh runs, replaying for recovery). `kill_at` simulates a
+/// crash: after that many engine steps the journal is checkpointed and
+/// the run abandoned (`Ok(None)`), exactly as if the process died with
+/// a synced journal.
+pub fn execute(
+    spec: &RunSpec,
+    core: &IngressHandle,
+    kill_at: Option<u64>,
+) -> Result<Option<Artifacts>> {
+    if spec.bundles == 1 && spec.autoscale.is_none() {
+        execute_session(spec, core, kill_at)
+    } else {
+        execute_cluster(spec, core, kill_at)
+    }
+}
+
+fn execute_session(
+    spec: &RunSpec,
+    core: &IngressHandle,
+    kill_at: Option<u64>,
+) -> Result<Option<Artifacts>> {
+    let cfg = load_config(spec)?;
+    let mut builder = Simulation::builder(&cfg, spec.r)
+        .cost_spec(CostSpec::parse(&spec.cost)?)
+        .ingress(core.clone());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed)?);
+    }
+    let mut sim = builder.build()?;
+    let mut steps: u64 = 0;
+    while !sim.is_done() {
+        sim.step();
+        steps += 1;
+        core.borrow().ensure_healthy()?;
+        if Some(steps) == kill_at {
+            core.borrow_mut().checkpoint()?;
+            return Ok(None);
+        }
+    }
+    core.borrow().finish_replay_check()?;
+    let out = sim.finish();
+    let stats = {
+        let mut c = core.borrow_mut();
+        c.checkpoint()?;
+        c.stats()
+    };
+    let json = Json::obj()
+        .set("metrics", sim_metrics_to_json(&out.metrics))
+        .set("arrival", arrival_stats_to_json(&out.arrival))
+        .set("ingress", ingress_stats_to_json(&stats))
+        .to_string_pretty();
+    Ok(Some(Artifacts {
+        completions_csv: completions_to_csv_string(&out.completions),
+        metrics_json: json,
+    }))
+}
+
+fn execute_cluster(
+    spec: &RunSpec,
+    core: &IngressHandle,
+    kill_at: Option<u64>,
+) -> Result<Option<Artifacts>> {
+    let cfg = load_config(spec)?;
+    let mut builder = ClusterSimulation::builder(&cfg, spec.r)
+        .bundles(spec.bundles)
+        .policy(Policy::parse(&spec.policy)?)
+        .cost(CostSpec::parse(&spec.cost)?)
+        .ingress(core.clone());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
+    }
+    if let Some(a) = &spec.autoscale {
+        builder = builder.autoscale(AutoscaleConfig {
+            feasible: a.feasible.clone(),
+            window: a.window,
+            epoch_completions: a.epoch,
+        });
+    }
+    let mut sim = builder.build()?;
+    let mut steps: u64 = 0;
+    while sim.step_once()? {
+        steps += 1;
+        core.borrow().ensure_healthy()?;
+        if Some(steps) == kill_at {
+            core.borrow_mut().checkpoint()?;
+            return Ok(None);
+        }
+    }
+    core.borrow().finish_replay_check()?;
+    let out = sim.finish();
+    let stats = {
+        let mut c = core.borrow_mut();
+        c.checkpoint()?;
+        c.stats()
+    };
+    // Fleet completions CSV: bundle-tagged, in bundle-major order (the
+    // per-bundle streams are already finish-time sorted), with the same
+    // shortest-round-trip float formatting as the session CSV.
+    let mut csv = String::from("bundle,finish_time,admit_time,decode_len\n");
+    for b in &out.bundles {
+        for c in &b.completions {
+            csv.push_str(&format!(
+                "{},{},{},{}\n",
+                b.bundle, c.finish_time, c.admit_time, c.decode_len
+            ));
+        }
+    }
+    let json = Json::obj()
+        .set("aggregate", sim_metrics_to_json(&out.aggregate))
+        .set("arrival", arrival_stats_to_json(&out.arrival))
+        .set("ingress", ingress_stats_to_json(&stats))
+        .to_string_pretty();
+    Ok(Some(Artifacts { completions_csv: csv, metrics_json: json }))
+}
+
+/// Run `spec` fresh over `store`, writing the header first. `kill_at`
+/// simulates a crash after that many steps (see [`execute`]).
+pub fn run_fresh(
+    spec: &RunSpec,
+    store: Box<dyn StateStore>,
+    kill_at: Option<u64>,
+) -> Result<Option<Artifacts>> {
+    let core = Ingress::with_store(store);
+    core.borrow_mut().put_header(spec.to_entries())?;
+    execute(spec, &core, kill_at)
+}
+
+/// Recover a crashed run from its journal directory: open the journal
+/// (truncating any torn tail), rebuild the [`RunSpec`] from the header,
+/// and re-execute in replay-verify mode. `kill_at` allows crashing the
+/// *recovery* as well (counted from step 0 of the re-execution), so
+/// multi-crash chains recover recoveries.
+pub fn run_recover(
+    dir: impl AsRef<Path>,
+    fsync_every: usize,
+    kill_at: Option<u64>,
+) -> Result<Option<Artifacts>> {
+    let (store, events) = JournalStore::open(dir, fsync_every)?;
+    let mut it = events.into_iter();
+    let spec = match it.next() {
+        Some(JournalEvent::Header { entries }) => RunSpec::from_entries(&entries)?,
+        Some(other) => {
+            return Err(AfdError::Sim(format!(
+                "journal does not start with a header record (found {other:?})"
+            )))
+        }
+        None => {
+            return Err(AfdError::Sim(
+                "journal is empty — nothing to recover (no header record survived)".into(),
+            ))
+        }
+    };
+    let rest: Vec<JournalEvent> = it.collect();
+    let core = Ingress::replaying(Box::new(store), rest);
+    execute(&spec, &core, kill_at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> RunSpec {
+        RunSpec {
+            config_path: None,
+            seed: 42,
+            r: 2,
+            batch: 8,
+            requests: 30,
+            arrival: ArrivalSpec::Open { lambda: 0.05, queue: 64 },
+            bundles: 4,
+            policy: "jsq".into(),
+            cost: "linear".into(),
+            autoscale: Some(AutoscaleSpec { feasible: vec![1, 2, 4], window: 32, epoch: 16 }),
+        }
+    }
+
+    #[test]
+    fn header_round_trips_exactly() {
+        let s = spec();
+        assert_eq!(RunSpec::from_entries(&s.to_entries()).unwrap(), s);
+        let closed = RunSpec {
+            arrival: ArrivalSpec::Closed,
+            autoscale: None,
+            config_path: Some("cfg.toml".into()),
+            ..s
+        };
+        assert_eq!(RunSpec::from_entries(&closed.to_entries()).unwrap(), closed);
+    }
+
+    #[test]
+    fn lambda_round_trips_bitwise() {
+        let s = RunSpec {
+            arrival: ArrivalSpec::Open { lambda: 0.1 + 0.2, queue: 7 },
+            ..spec()
+        };
+        let back = RunSpec::from_entries(&s.to_entries()).unwrap();
+        match (s.arrival, back.arrival) {
+            (ArrivalSpec::Open { lambda: a, .. }, ArrivalSpec::Open { lambda: b, .. }) => {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            _ => panic!("arrival kind changed in round trip"),
+        }
+    }
+
+    #[test]
+    fn malformed_headers_are_errors() {
+        let mut e = spec().to_entries();
+        e.retain(|(k, _)| k != "seed");
+        assert!(RunSpec::from_entries(&e).is_err());
+
+        let mut e = spec().to_entries();
+        for (k, v) in &mut e {
+            if k == "version" {
+                *v = "99".into();
+            }
+        }
+        assert!(RunSpec::from_entries(&e).is_err());
+
+        let mut e = spec().to_entries();
+        for (k, v) in &mut e {
+            if k == "arrival" {
+                *v = "bogus".into();
+            }
+        }
+        assert!(RunSpec::from_entries(&e).is_err());
+    }
+
+    #[test]
+    fn recover_refuses_headerless_journals() {
+        let dir = std::env::temp_dir().join("afd_recovery_headerless");
+        std::fs::remove_dir_all(&dir).ok();
+        // A valid journal whose first record is not a header.
+        let mut store = JournalStore::create(&dir, 1).unwrap();
+        store.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+        store.checkpoint().unwrap();
+        drop(store);
+        let err = run_recover(&dir, 1, None).unwrap_err();
+        assert!(err.to_string().contains("header"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

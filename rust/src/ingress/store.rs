@@ -1,0 +1,736 @@
+//! Durable request-state stores: the [`StateStore`] trait and its two
+//! backends.
+//!
+//! * [`MemStore`] — a `BTreeMap` in-flight table plus a sequence
+//!   counter. The zero-cost default: attaching it to a session changes
+//!   no output bytes and adds only counter/table bookkeeping at
+//!   admit/complete transitions (never per step).
+//! * [`JournalStore`] — an append-only record log on local disk,
+//!   hand-rolled like `util::csvio` (zero dependencies). Records are
+//!   length-prefixed, checksummed, and carry a monotone sequence
+//!   number; replay tolerates a torn tail (a partially written final
+//!   record is dropped, never panics). An fsync batching knob trades
+//!   durability granularity for write throughput.
+//!
+//! ## Journal format
+//!
+//! ```text
+//! file   := magic record*            magic = b"AFDJRNL1"
+//! record := len:u32le payload crc:u32le     crc = FNV-1a(payload)
+//! payload:= seq:u64le tag:u8 fields         seq = 1, 2, 3, ... (no gaps)
+//! f64    := to_bits() as u64le              (bit-exact round trip)
+//! ```
+//!
+//! Tags: 0 Header (self-describing run spec, key/value pairs; always
+//! the first record), 1 Admit, 2 Reject, 3 Complete, 4 Drop (in-flight
+//! request discarded at an epoch rebuild). `python/check_journal.py`
+//! validates the same grammar toolchain-free.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Seek, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{AfdError, Result};
+use crate::ingress::lifecycle::{allowed, Phase};
+
+/// Leading file magic; bump the trailing digit on format changes.
+pub const MAGIC: &[u8; 8] = b"AFDJRNL1";
+
+/// Journal file name inside a `--journal <dir>` directory.
+pub const JOURNAL_FILE: &str = "journal.afd";
+
+/// Upper bound on one record's payload (corrupt-length guard).
+pub const MAX_RECORD: usize = 1 << 20;
+
+/// One durable lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    /// Self-describing run spec (key/value pairs); first record of
+    /// every journal so recovery needs nothing but the directory.
+    Header { entries: Vec<(String, String)> },
+    /// Request `id` admitted into bundle `bundle` at global time `at`.
+    Admit { id: u64, bundle: u32, at: f64 },
+    /// One arrival shed by bundle `bundle`'s admission queue at `at`.
+    Reject { bundle: u32, at: f64 },
+    /// Request `id` finished decoding. `id == 0` marks a pre-loaded
+    /// slot (closed-loop initial fill) that was never admitted through
+    /// the dispatcher.
+    Complete { id: u64, bundle: u32, finish: f64, admit: f64, prefill: u64, decode: u64 },
+    /// In-flight request discarded when its bundle rebuilt at an epoch
+    /// boundary (slots restart; see ROADMAP graceful-drain follow-up).
+    Drop { id: u64, bundle: u32, at: f64 },
+}
+
+impl JournalEvent {
+    pub fn tag(&self) -> u8 {
+        match self {
+            JournalEvent::Header { .. } => 0,
+            JournalEvent::Admit { .. } => 1,
+            JournalEvent::Reject { .. } => 2,
+            JournalEvent::Complete { .. } => 3,
+            JournalEvent::Drop { .. } => 4,
+        }
+    }
+}
+
+/// One in-flight (admitted, not yet terminal) request in a store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InflightRecord {
+    pub id: u64,
+    pub bundle: u32,
+    pub phase: Phase,
+    /// Global time of the last transition.
+    pub since: f64,
+}
+
+/// Object-safe durable-state interface shared by every backend.
+pub trait StateStore {
+    fn name(&self) -> &'static str;
+    /// Durably record `ev`, driving the in-flight table through the
+    /// validated lifecycle. Returns the record's sequence number.
+    fn put(&mut self, ev: &JournalEvent) -> Result<u64>;
+    /// Validated phase transition of one tracked id (terminal phases
+    /// remove the record).
+    fn transition(&mut self, id: u64, to: Phase, at: f64) -> Result<()>;
+    /// Snapshot of every in-flight record, in id order.
+    fn scan_inflight(&self) -> Vec<InflightRecord>;
+    /// Flush durable state (fsync for the journal, no-op in memory).
+    /// Returns the high-water sequence number.
+    fn checkpoint(&mut self) -> Result<u64>;
+    /// Highest sequence number recorded so far (0 when empty).
+    fn high_water(&self) -> u64;
+}
+
+// ---------------------------------------------------------------- table
+
+/// The in-flight table both backends share: validated transitions over
+/// a `BTreeMap` (id order — deterministic scans by construction).
+#[derive(Debug, Default)]
+struct InflightTable {
+    map: BTreeMap<u64, InflightRecord>,
+}
+
+impl InflightTable {
+    fn apply(&mut self, ev: &JournalEvent) -> Result<()> {
+        match ev {
+            JournalEvent::Header { .. } | JournalEvent::Reject { .. } => Ok(()),
+            JournalEvent::Admit { id, bundle, at } => {
+                if *id == 0 {
+                    return Err(AfdError::Coordinator("admit with reserved id 0".into()));
+                }
+                if self.map.contains_key(id) {
+                    return Err(AfdError::Coordinator(format!("double admit of request {id}")));
+                }
+                self.map.insert(
+                    *id,
+                    InflightRecord { id: *id, bundle: *bundle, phase: Phase::Admitted, since: *at },
+                );
+                Ok(())
+            }
+            JournalEvent::Complete { id, finish, .. } => {
+                if *id == 0 {
+                    return Ok(()); // pre-loaded slot, never tracked
+                }
+                self.transition(*id, Phase::Completed, *finish)
+            }
+            JournalEvent::Drop { id, at, .. } => self.transition(*id, Phase::Rejected, *at),
+        }
+    }
+
+    fn transition(&mut self, id: u64, to: Phase, at: f64) -> Result<()> {
+        let rec = self.map.get_mut(&id).ok_or_else(|| {
+            AfdError::Coordinator(format!("transition of untracked request {id} to {}", to.name()))
+        })?;
+        if !allowed(rec.phase, to) {
+            return Err(AfdError::Coordinator(format!(
+                "request {id}: illegal transition {} -> {}",
+                rec.phase.name(),
+                to.name()
+            )));
+        }
+        if to.is_terminal() {
+            self.map.remove(&id);
+        } else {
+            rec.phase = to;
+            rec.since = at;
+        }
+        Ok(())
+    }
+
+    fn scan(&self) -> Vec<InflightRecord> {
+        self.map.values().copied().collect()
+    }
+}
+
+// ------------------------------------------------------------- MemStore
+
+/// In-memory backend: nothing survives the process, everything else is
+/// identical to the journal (same table, same validation).
+#[derive(Debug, Default)]
+pub struct MemStore {
+    seq: u64,
+    table: InflightTable,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StateStore for MemStore {
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+
+    fn put(&mut self, ev: &JournalEvent) -> Result<u64> {
+        self.table.apply(ev)?;
+        self.seq += 1;
+        Ok(self.seq)
+    }
+
+    fn transition(&mut self, id: u64, to: Phase, at: f64) -> Result<()> {
+        self.table.transition(id, to, at)
+    }
+
+    fn scan_inflight(&self) -> Vec<InflightRecord> {
+        self.table.scan()
+    }
+
+    fn checkpoint(&mut self) -> Result<u64> {
+        Ok(self.seq)
+    }
+
+    fn high_water(&self) -> u64 {
+        self.seq
+    }
+}
+
+// -------------------------------------------------------- binary codec
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(16_777_619);
+    }
+    h
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    put_u16(out, n as u16);
+    out.extend_from_slice(bytes.get(..n).unwrap_or_default());
+}
+
+/// Encode one record (length prefix + payload + checksum). Public so
+/// tests and tools can assemble or corrupt journals byte by byte.
+pub fn encode_record(seq: u64, ev: &JournalEvent) -> Vec<u8> {
+    let mut p = Vec::with_capacity(64);
+    put_u64(&mut p, seq);
+    p.push(ev.tag());
+    match ev {
+        JournalEvent::Header { entries } => {
+            put_u32(&mut p, entries.len() as u32);
+            for (k, v) in entries {
+                put_str(&mut p, k);
+                put_str(&mut p, v);
+            }
+        }
+        JournalEvent::Admit { id, bundle, at } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *bundle);
+            put_f64(&mut p, *at);
+        }
+        JournalEvent::Reject { bundle, at } => {
+            put_u32(&mut p, *bundle);
+            put_f64(&mut p, *at);
+        }
+        JournalEvent::Complete { id, bundle, finish, admit, prefill, decode } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *bundle);
+            put_f64(&mut p, *finish);
+            put_f64(&mut p, *admit);
+            put_u64(&mut p, *prefill);
+            put_u64(&mut p, *decode);
+        }
+        JournalEvent::Drop { id, bundle, at } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *bundle);
+            put_f64(&mut p, *at);
+        }
+    }
+    let mut rec = Vec::with_capacity(p.len() + 8);
+    put_u32(&mut rec, p.len() as u32);
+    rec.extend_from_slice(&p);
+    put_u32(&mut rec, fnv1a(&p));
+    rec
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.buf.get(self.off..self.off.checked_add(n)?)?;
+        self.off += n;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        self.take(1).and_then(|s| s.first().copied())
+    }
+
+    fn u16(&mut self) -> Option<u16> {
+        let a: [u8; 2] = self.take(2)?.try_into().ok()?;
+        Some(u16::from_le_bytes(a))
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        let a: [u8; 4] = self.take(4)?.try_into().ok()?;
+        Some(u32::from_le_bytes(a))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        let a: [u8; 8] = self.take(8)?.try_into().ok()?;
+        Some(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    fn string(&mut self) -> Option<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Option<(u64, JournalEvent)> {
+    let mut c = Cursor { buf: payload, off: 0 };
+    let seq = c.u64()?;
+    let ev = match c.u8()? {
+        0 => {
+            let n = c.u32()? as usize;
+            if n > MAX_RECORD {
+                return None;
+            }
+            let mut entries = Vec::with_capacity(n.min(256));
+            for _ in 0..n {
+                let k = c.string()?;
+                let v = c.string()?;
+                entries.push((k, v));
+            }
+            JournalEvent::Header { entries }
+        }
+        1 => JournalEvent::Admit { id: c.u64()?, bundle: c.u32()?, at: c.f64()? },
+        2 => JournalEvent::Reject { bundle: c.u32()?, at: c.f64()? },
+        3 => JournalEvent::Complete {
+            id: c.u64()?,
+            bundle: c.u32()?,
+            finish: c.f64()?,
+            admit: c.f64()?,
+            prefill: c.u64()?,
+            decode: c.u64()?,
+        },
+        4 => JournalEvent::Drop { id: c.u64()?, bundle: c.u32()?, at: c.f64()? },
+        _ => return None,
+    };
+    if c.off != payload.len() {
+        return None; // trailing garbage inside a checksummed payload
+    }
+    Some((seq, ev))
+}
+
+/// Decode records from `bytes` (the region after the magic). Stops at
+/// the first short, corrupt, or out-of-sequence record — the torn-tail
+/// contract: everything before the tear is trusted, everything at and
+/// after it is discarded. Returns the records plus the byte length of
+/// the valid prefix.
+pub fn decode_records(bytes: &[u8]) -> (Vec<(u64, JournalEvent)>, usize) {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    let mut next_seq = 1u64;
+    loop {
+        let Some(len_bytes) = bytes.get(off..off + 4) else { break };
+        let Ok(len_arr) = <[u8; 4]>::try_from(len_bytes) else { break };
+        let len = u32::from_le_bytes(len_arr) as usize;
+        if len == 0 || len > MAX_RECORD {
+            break;
+        }
+        let Some(payload) = bytes.get(off + 4..off + 4 + len) else { break };
+        let Some(crc_bytes) = bytes.get(off + 4 + len..off + 8 + len) else { break };
+        let Ok(crc_arr) = <[u8; 4]>::try_from(crc_bytes) else { break };
+        if u32::from_le_bytes(crc_arr) != fnv1a(payload) {
+            break;
+        }
+        let Some((seq, ev)) = decode_payload(payload) else { break };
+        if seq != next_seq {
+            break; // gap or replayed sequence number: treat as a tear
+        }
+        next_seq += 1;
+        out.push((seq, ev));
+        off += 8 + len;
+    }
+    (out, off)
+}
+
+/// Read every valid record of a journal file (torn-tail tolerant).
+pub fn read_journal(path: impl AsRef<Path>) -> Result<Vec<(u64, JournalEvent)>> {
+    let mut bytes = Vec::new();
+    fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+    let body = bytes.strip_prefix(MAGIC.as_slice()).ok_or_else(|| {
+        AfdError::Coordinator(format!("{}: not an AFD journal (bad magic)", path.as_ref().display()))
+    })?;
+    Ok(decode_records(body).0)
+}
+
+// ---------------------------------------------------------- JournalStore
+
+/// Append-only on-disk backend. Writes are buffered and pushed to the
+/// OS (plus fsync) every `fsync_every` records and at every
+/// [`StateStore::checkpoint`]; a crash between syncs loses at most the
+/// buffered tail, which recovery regenerates deterministically.
+pub struct JournalStore {
+    path: PathBuf,
+    file: fs::File,
+    table: InflightTable,
+    seq: u64,
+    pending: Vec<u8>,
+    records_since_sync: usize,
+    fsync_every: usize,
+}
+
+impl JournalStore {
+    /// Default records-per-fsync batch.
+    pub const DEFAULT_FSYNC_EVERY: usize = 64;
+
+    /// Path of the journal file inside `dir`.
+    pub fn journal_path(dir: impl AsRef<Path>) -> PathBuf {
+        dir.as_ref().join(JOURNAL_FILE)
+    }
+
+    /// Create a fresh journal in `dir` (errors if one already exists —
+    /// resume an existing journal with [`JournalStore::open`]).
+    pub fn create(dir: impl AsRef<Path>, fsync_every: usize) -> Result<Self> {
+        fs::create_dir_all(dir.as_ref())?;
+        let path = Self::journal_path(dir.as_ref());
+        if path.exists() {
+            return Err(AfdError::Coordinator(format!(
+                "{}: journal already exists (use --recover, or a fresh --journal dir)",
+                path.display()
+            )));
+        }
+        let mut file = fs::OpenOptions::new().create_new(true).write(true).open(&path)?;
+        file.write_all(MAGIC)?;
+        file.sync_all()?;
+        Ok(Self {
+            path,
+            file,
+            table: InflightTable::default(),
+            seq: 0,
+            pending: Vec::new(),
+            records_since_sync: 0,
+            fsync_every: fsync_every.max(1),
+        })
+    }
+
+    /// Open an existing journal, replaying it into the in-flight table
+    /// with torn-tail tolerance: the file is truncated back to its last
+    /// valid record so appends continue from a clean prefix. Returns
+    /// the store plus every replayed event in sequence order.
+    pub fn open(dir: impl AsRef<Path>, fsync_every: usize) -> Result<(Self, Vec<JournalEvent>)> {
+        let path = Self::journal_path(dir.as_ref());
+        let mut file = fs::OpenOptions::new().read(true).write(true).open(&path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let body = bytes.strip_prefix(MAGIC.as_slice()).ok_or_else(|| {
+            AfdError::Coordinator(format!("{}: not an AFD journal (bad magic)", path.display()))
+        })?;
+        let (records, consumed) = decode_records(body);
+        let valid_len = (MAGIC.len() + consumed) as u64;
+        file.set_len(valid_len)?;
+        file.seek(std::io::SeekFrom::Start(valid_len))?;
+        let mut table = InflightTable::default();
+        let mut events = Vec::with_capacity(records.len());
+        let mut seq = 0u64;
+        for (s, ev) in records {
+            table.apply(&ev)?;
+            seq = s;
+            events.push(ev);
+        }
+        Ok((
+            Self {
+                path,
+                file,
+                table,
+                seq,
+                pending: Vec::new(),
+                records_since_sync: 0,
+                fsync_every: fsync_every.max(1),
+            },
+            events,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    fn flush_sync(&mut self) -> Result<()> {
+        if !self.pending.is_empty() {
+            self.file.write_all(&self.pending)?;
+            self.pending.clear();
+        }
+        self.file.sync_all()?;
+        self.records_since_sync = 0;
+        Ok(())
+    }
+}
+
+impl StateStore for JournalStore {
+    fn name(&self) -> &'static str {
+        "journal"
+    }
+
+    fn put(&mut self, ev: &JournalEvent) -> Result<u64> {
+        self.table.apply(ev)?;
+        self.seq += 1;
+        self.pending.extend_from_slice(&encode_record(self.seq, ev));
+        self.records_since_sync += 1;
+        if self.records_since_sync >= self.fsync_every {
+            self.flush_sync()?;
+        }
+        Ok(self.seq)
+    }
+
+    fn transition(&mut self, id: u64, to: Phase, at: f64) -> Result<()> {
+        self.table.transition(id, to, at)
+    }
+
+    fn scan_inflight(&self) -> Vec<InflightRecord> {
+        self.table.scan()
+    }
+
+    fn checkpoint(&mut self) -> Result<u64> {
+        self.flush_sync()?;
+        Ok(self.seq)
+    }
+
+    fn high_water(&self) -> u64 {
+        self.seq
+    }
+}
+
+impl Drop for JournalStore {
+    fn drop(&mut self) {
+        // Best effort: push any buffered tail to the OS. A failure here
+        // just means a longer (still recoverable) torn tail.
+        if !self.pending.is_empty() {
+            let _ = self.file.write_all(&self.pending);
+        }
+        let _ = self.file.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("afd_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::Header {
+                entries: vec![("seed".into(), "7".into()), ("r".into(), "2".into())],
+            },
+            JournalEvent::Admit { id: 1, bundle: 0, at: 0.5 },
+            JournalEvent::Admit { id: 2, bundle: 1, at: 0.75 },
+            JournalEvent::Reject { bundle: 0, at: 1.0 },
+            JournalEvent::Complete { id: 1, bundle: 0, finish: 9.5, admit: 0.5, prefill: 8, decode: 4 },
+            JournalEvent::Drop { id: 2, bundle: 1, at: 10.0 },
+        ]
+    }
+
+    #[test]
+    fn codec_round_trips_every_tag() {
+        for (i, ev) in sample_events().iter().enumerate() {
+            let rec = encode_record(i as u64 + 1, ev);
+            let (got, consumed) = decode_records(&rec);
+            // Single-record buffers decode iff the seq starts at 1.
+            if i == 0 {
+                assert_eq!(consumed, rec.len());
+                assert_eq!(got, vec![(1, ev.clone())]);
+            }
+        }
+        let mut buf = Vec::new();
+        for (i, ev) in sample_events().iter().enumerate() {
+            buf.extend_from_slice(&encode_record(i as u64 + 1, ev));
+        }
+        let (got, consumed) = decode_records(&buf);
+        assert_eq!(consumed, buf.len());
+        assert_eq!(got.len(), sample_events().len());
+        for ((seq, ev), (i, want)) in got.iter().zip(sample_events().iter().enumerate()) {
+            assert_eq!(*seq, i as u64 + 1);
+            assert_eq!(ev, want);
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_corrupt_checksum_and_seq_gap() {
+        let a = encode_record(1, &JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 });
+        let b = encode_record(2, &JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 });
+        // Corrupt one payload byte of b.
+        let mut buf = a.clone();
+        let mut bad = b.clone();
+        let k = bad.len() - 6;
+        bad[k] ^= 0xFF;
+        buf.extend_from_slice(&bad);
+        let (got, consumed) = decode_records(&buf);
+        assert_eq!(got.len(), 1);
+        assert_eq!(consumed, a.len());
+        // Sequence gap: 1 then 3.
+        let mut buf = a.clone();
+        buf.extend_from_slice(&encode_record(3, &JournalEvent::Admit { id: 3, bundle: 0, at: 3.0 }));
+        let (got, _) = decode_records(&buf);
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn mem_store_tracks_and_validates() {
+        let mut s = MemStore::new();
+        s.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+        s.put(&JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 }).unwrap();
+        assert_eq!(s.scan_inflight().len(), 2);
+        // Double admit is an error, not a panic or an overwrite.
+        assert!(s.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 3.0 }).is_err());
+        s.transition(1, Phase::Decoding, 4.0).unwrap();
+        assert_eq!(s.scan_inflight().first().unwrap().phase, Phase::Decoding);
+        s.put(&JournalEvent::Complete { id: 1, bundle: 0, finish: 5.0, admit: 1.0, prefill: 4, decode: 2 })
+            .unwrap();
+        assert_eq!(s.scan_inflight().len(), 1);
+        // Completing an untracked id errors; id 0 (pre-loaded) is a no-op.
+        assert!(s
+            .put(&JournalEvent::Complete { id: 9, bundle: 0, finish: 5.0, admit: 1.0, prefill: 4, decode: 2 })
+            .is_err());
+        s.put(&JournalEvent::Complete { id: 0, bundle: 0, finish: 5.0, admit: 0.0, prefill: 4, decode: 2 })
+            .unwrap();
+        assert_eq!(s.checkpoint().unwrap(), 5);
+    }
+
+    #[test]
+    fn journal_round_trips_through_disk() {
+        let dir = tmpdir("roundtrip");
+        {
+            let mut s = JournalStore::create(&dir, 2).unwrap();
+            for ev in sample_events() {
+                s.put(&ev).unwrap();
+            }
+            s.checkpoint().unwrap();
+        }
+        let (s, events) = JournalStore::open(&dir, 64).unwrap();
+        assert_eq!(events, sample_events());
+        assert_eq!(s.seq(), 6);
+        assert!(s.scan_inflight().is_empty()); // 1 completed, 2 dropped
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber() {
+        let dir = tmpdir("clobber");
+        let s = JournalStore::create(&dir, 1).unwrap();
+        drop(s);
+        assert!(JournalStore::create(&dir, 1).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_tolerated_at_every_offset() {
+        let dir = tmpdir("torn");
+        {
+            let mut s = JournalStore::create(&dir, 1).unwrap();
+            for ev in sample_events() {
+                s.put(&ev).unwrap();
+            }
+            s.checkpoint().unwrap();
+        }
+        let path = JournalStore::journal_path(&dir);
+        let full = fs::read(&path).unwrap();
+        let last = encode_record(6, sample_events().last().unwrap());
+        let tail_start = full.len() - last.len();
+        for cut in tail_start..full.len() {
+            let trunc_dir = tmpdir("torn_cut");
+            fs::create_dir_all(&trunc_dir).unwrap();
+            fs::write(JournalStore::journal_path(&trunc_dir), &full[..cut]).unwrap();
+            let (s, events) = JournalStore::open(&trunc_dir, 1).unwrap();
+            assert_eq!(events.len(), 5, "cut at {cut}");
+            // The tail record was Drop{2}; without it, 2 is in flight.
+            assert_eq!(s.scan_inflight().len(), 1);
+            assert_eq!(s.seq(), 5);
+            let _ = fs::remove_dir_all(&trunc_dir);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_truncates_tear_then_appends_cleanly() {
+        let dir = tmpdir("truncate_append");
+        {
+            let mut s = JournalStore::create(&dir, 1).unwrap();
+            s.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+            s.put(&JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 }).unwrap();
+            s.checkpoint().unwrap();
+        }
+        let path = JournalStore::journal_path(&dir);
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 3]).unwrap(); // tear record 2
+        {
+            let (mut s, events) = JournalStore::open(&dir, 1).unwrap();
+            assert_eq!(events.len(), 1);
+            s.put(&JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 }).unwrap();
+            s.checkpoint().unwrap();
+        }
+        let records = read_journal(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records.last().unwrap().0, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_journal_rejects_bad_magic() {
+        let dir = tmpdir("magic");
+        fs::create_dir_all(&dir).unwrap();
+        let path = JournalStore::journal_path(&dir);
+        fs::write(&path, b"NOTAJRNL").unwrap();
+        assert!(read_journal(&path).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

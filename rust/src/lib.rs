@@ -37,6 +37,13 @@
 //!   deterministic (scenario × arrival × fleet × r × B) grid runner on
 //!   the crate thread pool, and CSV/JSON emission with
 //!   theory-vs-simulation gap, queueing/rejection, and fleet columns.
+//! * [`ingress`] — the persistent request-lifecycle subsystem: a
+//!   transition-validated state machine (`Received → … → Completed |
+//!   Rejected`), pluggable durable state stores (in-memory / append-only
+//!   journal with torn-tail tolerance), a bounded-admission dispatcher
+//!   that journals every admit/reject/complete across sessions and
+//!   fleets, and deterministic crash recovery that replays a half-run
+//!   simulation to byte-identical outputs.
 //! * [`coordinator`] — the engine-agnostic coordination layer: the
 //!   `BundleLoad` observability trait shared by the real engine and the
 //!   simulator, routing policies over it, continuous batching
@@ -66,6 +73,7 @@ pub mod latency;
 pub mod analysis;
 pub mod sim;
 pub mod sweep;
+pub mod ingress;
 pub mod coordinator;
 pub mod runtime;
 pub mod server;

@@ -57,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         Some("gen-trace") => cmd_gen_trace(args),
         Some("regimes") => cmd_regimes(args),
         Some("lint") => cmd_lint(args),
+        Some("ingress") => cmd_ingress(args),
         _ => {
             print!(
                 "{}",
@@ -70,6 +71,7 @@ fn run(args: &Args) -> Result<()> {
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
                     .entry("regimes", "print attention/comm/ffn regime boundaries")
                     .entry("lint", "static analysis: determinism, panic surface, project consistency (--json, --update-baseline)")
+                    .entry("ingress", "journaled run with crash recovery (--journal <dir>, --recover, --kill-at N)")
                     .render()
             );
             Ok(())
@@ -659,6 +661,123 @@ fn cmd_lint(args: &Args) -> Result<()> {
             rep.unbaselined(),
             rep.ratchet.exceeded.len()
         )));
+    }
+    Ok(())
+}
+
+/// `afd ingress`: run a simulation through the persistent ingress
+/// subsystem, journaling every request-lifecycle transition to a durable
+/// store, with deterministic crash recovery.
+///
+/// Options:
+///   --journal DIR        journal directory (required; created on a
+///                        fresh run, reopened by --recover)
+///   --recover            recover a crashed run from --journal: replay-
+///                        verify the journaled prefix, then finish live
+///   --kill-at N          simulate a crash after N engine steps
+///                        (checkpoint + abandon; 0 = run to completion)
+///   --fsync-every N      checkpoint cadence in journal records (default 64)
+///   --r N                fan-in (default 8)
+///   --batch B            per-worker microbatch size
+///   --requests N         completions per Attention instance
+///   --seed S             RNG seed override
+///   --arrival closed|open  arrival regime (default closed)
+///   --lambda X           open-loop arrival rate (requests/cycle)
+///   --queue N            admission-queue capacity (default 4096)
+///   --bundles N          fleet size (1 = single session; default 1)
+///   --policy rr|jsq|ltl  routing policy for fleets (default jsq)
+///   --cost MODEL         phase-cost model (default linear)
+///   --autoscale          enable per-bundle autoscaling (with --feasible,
+///                        --window, --epoch as in `afd cluster`)
+///   --csv PATH           write the completions CSV artifact
+///   --json PATH          write the metrics JSON artifact
+fn cmd_ingress(args: &Args) -> Result<()> {
+    use afd::ingress::recovery::{run_fresh, run_recover, ArrivalSpec, AutoscaleSpec, RunSpec};
+    use afd::ingress::store::JournalStore;
+
+    let dir = args
+        .get("journal")
+        .ok_or_else(|| afd::AfdError::config("ingress requires --journal <dir>"))?
+        .to_string();
+    let fsync_every = args.get_usize("fsync-every", JournalStore::DEFAULT_FSYNC_EVERY)?;
+    let kill_at = match args.get_u64("kill-at", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+
+    let artifacts = if args.has_flag("recover") {
+        println!("recovering from journal {dir} (replay-verify, then live)");
+        run_recover(&dir, fsync_every, kill_at)?
+    } else {
+        let cfg = load_config(args)?;
+        let arrival = match args.get_str("arrival", "closed").as_str() {
+            "closed" => ArrivalSpec::Closed,
+            "open" => {
+                let lambda = args.get_f64("lambda", 0.0)?;
+                if lambda <= 0.0 {
+                    return Err(afd::AfdError::config(
+                        "--arrival open requires --lambda <requests/cycle> (> 0)",
+                    ));
+                }
+                ArrivalSpec::Open { lambda, queue: args.get_usize("queue", 4096)? }
+            }
+            other => {
+                return Err(afd::AfdError::config(format!(
+                    "unknown arrival regime {other:?}; expected closed|open"
+                )));
+            }
+        };
+        let autoscale = if args.has_flag("autoscale") {
+            Some(AutoscaleSpec {
+                feasible: args.get_list_usize("feasible", &(1..=16).collect::<Vec<_>>())?,
+                window: args.get_usize("window", 2000)?,
+                epoch: args.get_usize("epoch", 1500)?,
+            })
+        } else {
+            None
+        };
+        let spec = RunSpec {
+            config_path: args.get("config").map(str::to_string),
+            seed: args.get_u64("seed", cfg.seed)?,
+            r: args.get_usize("r", 8)?,
+            batch: args.get_usize("batch", cfg.topology.batch_per_worker)?,
+            requests: args.get_usize("requests", cfg.requests_per_instance)?,
+            arrival,
+            bundles: args.get_usize("bundles", 1)?,
+            policy: args.get_str("policy", "jsq"),
+            cost: args.get_str("cost", "linear"),
+            autoscale,
+        };
+        println!(
+            "journaling {} x {}A-1F to {dir} (fsync every {fsync_every} records)",
+            spec.bundles, spec.r
+        );
+        let store = JournalStore::create(&dir, fsync_every)?;
+        run_fresh(&spec, Box::new(store), kill_at)?
+    };
+
+    match artifacts {
+        None => {
+            let at = kill_at.map(|n| n.to_string()).unwrap_or_default();
+            println!("killed at step {at}: journal checkpointed, run abandoned");
+            println!("resume with: afd ingress --journal {dir} --recover");
+        }
+        Some(a) => {
+            println!("run complete: journal {dir} is final");
+            if let Some(path) = args.get("csv") {
+                std::fs::write(path, &a.completions_csv)
+                    .map_err(|e| afd::AfdError::config(format!("cannot write {path}: {e}")))?;
+                println!("wrote {path}");
+            }
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, &a.metrics_json)
+                    .map_err(|e| afd::AfdError::config(format!("cannot write {path}: {e}")))?;
+                println!("wrote {path}");
+            } else {
+                print!("{}", a.metrics_json);
+                println!();
+            }
+        }
     }
     Ok(())
 }

@@ -23,7 +23,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::request_state::ServingRequest;
+use crate::ingress::lifecycle::ServingRequest;
 use crate::coordinator::router::Policy;
 use crate::coordinator::scheduler::StepBarrier;
 use crate::error::{AfdError, Result};

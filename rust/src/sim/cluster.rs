@@ -369,6 +369,7 @@ pub struct ClusterSimulationBuilder {
     source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
     cost: CostSpec,
     specs: Option<Vec<BundleSpec>>,
+    ingress: Option<crate::ingress::dispatcher::IngressHandle>,
 }
 
 impl ClusterSimulationBuilder {
@@ -432,6 +433,18 @@ impl ClusterSimulationBuilder {
         self
     }
 
+    /// Attach one ingress dispatcher to the whole fleet: every bundle's
+    /// admits/rejects/completions are journaled through `core` with the
+    /// bundle index and cluster-global timestamps, so request ids are
+    /// cluster-unique and one journal replays the fleet. Requests still
+    /// in flight when a bundle's epoch is rebuilt are journaled as
+    /// dropped (the rebuild destroys their slots). Pure observation:
+    /// routing, admission, and outputs are unchanged.
+    pub fn ingress(mut self, core: crate::ingress::dispatcher::IngressHandle) -> Self {
+        self.ingress = Some(core);
+        self
+    }
+
     /// Length-source factory, called once per (bundle, epoch) with the
     /// derived seed — how sweep scenarios plug their synthetic or
     /// trace-replay sources into every bundle.
@@ -459,6 +472,7 @@ impl ClusterSimulationBuilder {
             source_factory,
             cost,
             specs,
+            ingress,
         } = self;
         // Resolve the fleet shape: explicit heterogeneous specs, or a
         // homogeneous fleet of the builder's (r, config batch, cost).
@@ -499,6 +513,7 @@ impl ClusterSimulationBuilder {
             batches_in_flight,
             warm_start,
             source_factory,
+            ingress,
             shared: None,
             bundles: Vec::with_capacity(bundles),
             spread_sum: 0.0,
@@ -600,6 +615,7 @@ pub struct ClusterSimulation {
     batches_in_flight: usize,
     warm_start: bool,
     source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
+    ingress: Option<crate::ingress::dispatcher::IngressHandle>,
     shared: Option<SharedPoisson>,
     bundles: Vec<Bundle>,
     spread_sum: f64,
@@ -621,6 +637,7 @@ impl ClusterSimulation {
             source_factory: None,
             cost: CostSpec::Linear,
             specs: None,
+            ingress: None,
         }
     }
 
@@ -648,6 +665,10 @@ impl ClusterSimulation {
         if let Some(factory) = &self.source_factory {
             builder = builder.length_source(factory(seed));
         }
+        if let Some(core) = &self.ingress {
+            builder =
+                builder.ingress_tagged(core.clone(), bundle.index as u32, bundle.base_time);
+        }
         if let ClusterArrival::Open { lambda, queue_capacity } = self.arrival {
             match &bundle.inbox {
                 // Routed bundle: admissions come from the cluster inbox.
@@ -666,11 +687,6 @@ impl ClusterSimulation {
             }
         }
         builder.build()
-    }
-
-    /// Global time at which bundle `g`'s next lane-step begins.
-    fn global_ready(&self, g: usize) -> f64 {
-        self.bundles[g].base_time + self.bundles[g].sim.as_ref().unwrap().next_ready()
     }
 
     /// Generate and route shared arrivals up to global time `now`.
@@ -796,40 +812,69 @@ impl ClusterSimulation {
                 ib.queue.clear();
             }
         } else {
+            // The rebuild destroys the epoch's slot arrays, so requests
+            // still in flight can never complete: journal them as
+            // dropped at the boundary, *before* any next-epoch events.
+            if let Some(core) = &self.ingress {
+                core.borrow_mut()
+                    .on_epoch_end(self.bundles[g].index as u32, self.bundles[g].base_time);
+            }
             let next = self.build_epoch_sim(&self.bundles[g])?;
             self.bundles[g].sim = Some(next);
+        }
+        // Epoch boundaries are the fleet's durability points: flush and
+        // fsync the journal (and surface any poison) before stepping on.
+        if let Some(core) = &self.ingress {
+            core.borrow_mut().checkpoint()?;
         }
         Ok(())
     }
 
-    /// Run every bundle to its completion target.
-    pub fn run(mut self) -> Result<ClusterOutput> {
-        loop {
-            // Earliest-starting active bundle in global time; strict <
-            // keeps ties on the lowest bundle index.
-            let mut pick: Option<(f64, usize)> = None;
-            for g in 0..self.bundles.len() {
-                if self.bundles[g].done {
-                    continue;
-                }
-                let t = self.global_ready(g);
-                let better = match pick {
-                    Some((best, _)) => t < best,
-                    None => true,
-                };
-                if better {
-                    pick = Some((t, g));
-                }
+    /// Advance the fleet by one lane-step of the earliest-starting
+    /// active bundle, finalizing its epoch if it completed. Returns
+    /// `false` once every bundle has reached its target — the stepped
+    /// surface crash-recovery drives so a run can be cut (and resumed)
+    /// at any step boundary.
+    pub fn step_once(&mut self) -> Result<bool> {
+        // Earliest-starting active bundle in global time; strict <
+        // keeps ties on the lowest bundle index.
+        let mut pick: Option<(f64, usize)> = None;
+        for (g, b) in self.bundles.iter().enumerate() {
+            if b.done {
+                continue;
             }
-            let Some((global_ready, g)) = pick else { break };
-
-            self.drain_arrivals(global_ready);
-            self.record_spread();
-            self.bundles[g].sim.as_mut().unwrap().step();
-            if self.bundles[g].sim.as_ref().unwrap().is_done() {
-                self.finish_epoch(g)?;
+            let t = b.base_time + b.sim.as_ref().unwrap().next_ready();
+            let better = match pick {
+                Some((best, _)) => t < best,
+                None => true,
+            };
+            if better {
+                pick = Some((t, g));
             }
         }
+        let Some((global_ready, g)) = pick else { return Ok(false) };
+
+        self.drain_arrivals(global_ready);
+        self.record_spread();
+        let epoch_done = {
+            let sim = self.bundles[g].sim.as_mut().unwrap();
+            sim.step();
+            sim.is_done()
+        };
+        if epoch_done {
+            self.finish_epoch(g)?;
+        }
+        Ok(true)
+    }
+
+    /// Finalize a (possibly partially) stepped cluster into its output.
+    pub fn finish(self) -> ClusterOutput {
+        self.assemble()
+    }
+
+    /// Run every bundle to its completion target.
+    pub fn run(mut self) -> Result<ClusterOutput> {
+        while self.step_once()? {}
         Ok(self.assemble())
     }
 

@@ -655,6 +655,10 @@ pub struct SimulationBuilder {
     warm_start: bool,
     max_completions: Option<usize>,
     record_steps: bool,
+    /// Optional ingress attachment: (dispatcher core, bundle tag,
+    /// global-time offset). `None` (the default) leaves the session
+    /// bit-for-bit identical to the pre-ingress engine.
+    ingress: Option<(crate::ingress::dispatcher::IngressHandle, u32, f64)>,
 }
 
 impl SimulationBuilder {
@@ -734,6 +738,30 @@ impl SimulationBuilder {
         self
     }
 
+    /// Attach an ingress dispatcher: the session's arrival process is
+    /// wrapped so every admit/reject is journaled through `core`'s
+    /// [`crate::ingress::store::StateStore`], and an observer feeds it
+    /// completions. Pure observation — admissions, schedules, and
+    /// outputs are unchanged (with the in-memory store the session is
+    /// byte-identical to an unattached one).
+    pub fn ingress(self, core: crate::ingress::dispatcher::IngressHandle) -> Self {
+        self.ingress_tagged(core, 0, 0.0)
+    }
+
+    /// Fleet variant of [`Self::ingress`]: tag this session's events
+    /// with `bundle` and shift its local times by `offset` onto the
+    /// cluster-global clock ([`crate::sim::cluster::ClusterSimulation`]
+    /// installs one per bundle epoch).
+    pub(crate) fn ingress_tagged(
+        mut self,
+        core: crate::ingress::dispatcher::IngressHandle,
+        bundle: u32,
+        offset: f64,
+    ) -> Self {
+        self.ingress = Some((core, bundle, offset));
+        self
+    }
+
     /// Validate and assemble the session (builds every lane's slot
     /// arrays, consuming the length source).
     pub fn build(self) -> Result<Simulation> {
@@ -749,6 +777,7 @@ impl SimulationBuilder {
             warm_start,
             max_completions,
             record_steps,
+            ingress,
         } = self;
         if r == 0 {
             return Err(AfdError::config("fan-in r must be >= 1"));
@@ -807,6 +836,26 @@ impl SimulationBuilder {
                 spec.build(&cfg.hardware, cfg.seed ^ 0xC057_5EED)
             }
             (None, None) => Box::new(LinearCost::from_hardware(&cfg.hardware)),
+        };
+        // Ingress attachment: wrap the arrival process (journaled
+        // admits/rejects, decisions pure pass-through) and append a
+        // completion observer. `None` leaves both untouched.
+        let (arrival, observers) = match ingress {
+            Some((core, bundle, offset)) => {
+                let mut observers = observers;
+                observers.push(Box::new(crate::ingress::dispatcher::IngressObserver::new(
+                    core.clone(),
+                    bundle,
+                    offset,
+                )));
+                let wrapped: Box<dyn ArrivalProcess> = Box::new(
+                    crate::ingress::dispatcher::IngressArrival::new(
+                        core, arrival, bundle, offset,
+                    ),
+                );
+                (wrapped, observers)
+            }
+            None => (arrival, observers),
         };
         Ok(Simulation {
             metrics: MetricsCollector::new(r),
@@ -891,6 +940,7 @@ impl Simulation {
             warm_start: true,
             max_completions: None,
             record_steps: false,
+            ingress: None,
         }
     }
 

@@ -1,0 +1,341 @@
+//! Integration over the `ingress` subsystem: the crash-recovery
+//! contract end to end.
+//!
+//! 1. **Kill/recover byte-identity (session)**: an open-loop session
+//!    journaled to disk, killed after N engine steps, and recovered
+//!    must produce completions CSV, metrics JSON, *and* a final journal
+//!    byte-identical to an uninterrupted run — for kills early, mid,
+//!    and one step before the end, plus a multi-crash chain (the
+//!    recovery itself killed and re-recovered).
+//! 2. **Kill/recover byte-identity (fleet)**: same contract on a
+//!    4-bundle routed cluster sharing one open-loop stream, and on an
+//!    autoscaled bundle killed mid-epoch (so recovery replays across an
+//!    epoch rebuild and its journaled in-flight drops).
+//! 3. **Torn tail**: truncating the journal at *every byte offset* of
+//!    its last record never panics and never changes the recovered
+//!    artifacts — the damaged tail is dropped and regenerated.
+//! 4. **Accounting**: dispatcher counters are conservative
+//!    (admitted = completed + dropped + in-flight) and agree with the
+//!    arrival process's own tallies.
+//! 5. **Zero-perturbation default**: attaching a `MemStore`-backed
+//!    dispatcher to a closed-loop session changes no output bytes
+//!    relative to a plain run (the existing goldens stay frozen).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use afd::config::experiment::ExperimentConfig;
+use afd::coordinator::router::Policy;
+use afd::ingress::recovery::{
+    run_fresh, run_recover, ArrivalSpec, Artifacts, AutoscaleSpec, RunSpec,
+};
+use afd::ingress::store::{encode_record, read_journal, JournalStore};
+use afd::ingress::Ingress;
+use afd::latency::cost::CostSpec;
+use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
+use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
+use afd::sim::session::{OpenLoopPoisson, Simulation};
+
+const FSYNC: usize = 8;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("afd_ingress_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fresh(dir: &Path, spec: &RunSpec, kill_at: Option<u64>) -> Option<Artifacts> {
+    let store = JournalStore::create(dir, FSYNC).unwrap();
+    run_fresh(spec, Box::new(store), kill_at).unwrap()
+}
+
+fn session_spec() -> RunSpec {
+    RunSpec {
+        config_path: None,
+        seed: 20260808,
+        r: 2,
+        batch: 8,
+        requests: 40,
+        arrival: ArrivalSpec::Open { lambda: 0.2, queue: 32 },
+        bundles: 1,
+        policy: "jsq".into(),
+        cost: "linear".into(),
+        autoscale: None,
+    }
+}
+
+fn spec_config(spec: &RunSpec) -> ExperimentConfig {
+    ExperimentConfig::default()
+        .with_seed(spec.seed)
+        .with_batch(spec.batch)
+        .with_requests(spec.requests)
+}
+
+/// Engine steps of the uninterrupted session run (the ingress wrapper
+/// is pure observation, so the step count matches a plain run).
+fn session_steps(spec: &RunSpec) -> u64 {
+    let cfg = spec_config(spec);
+    let mut builder = Simulation::builder(&cfg, spec.r).cost_spec(CostSpec::parse(&spec.cost).unwrap());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap());
+    }
+    let mut sim = builder.build().unwrap();
+    let mut steps = 0u64;
+    while !sim.is_done() {
+        sim.step();
+        steps += 1;
+    }
+    steps
+}
+
+fn cluster_steps(spec: &RunSpec) -> u64 {
+    let cfg = spec_config(spec);
+    let mut builder = ClusterSimulation::builder(&cfg, spec.r)
+        .bundles(spec.bundles)
+        .policy(Policy::parse(&spec.policy).unwrap())
+        .cost(CostSpec::parse(&spec.cost).unwrap());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
+    }
+    if let Some(a) = &spec.autoscale {
+        builder = builder.autoscale(AutoscaleConfig {
+            feasible: a.feasible.clone(),
+            window: a.window,
+            epoch_completions: a.epoch,
+        });
+    }
+    let mut sim = builder.build().unwrap();
+    let mut steps = 0u64;
+    while sim.step_once().unwrap() {
+        steps += 1;
+    }
+    steps
+}
+
+/// Kill a journaled run of `spec` at each of `kills`, recover it, and
+/// require artifacts and final journal byte-identical to `full` (the
+/// uninterrupted run whose journal lives in `base`).
+fn assert_recovery_identity(tag: &str, spec: &RunSpec, kills: &[u64], full: &Artifacts, base: &Path) {
+    let base_journal = fs::read(JournalStore::journal_path(base)).unwrap();
+    for &kill in kills {
+        let dir = tmpdir(&format!("{tag}_kill{kill}"));
+        let killed = fresh(&dir, spec, Some(kill));
+        assert!(killed.is_none(), "{tag}: run survived kill at step {kill}");
+        let rec = run_recover(&dir, FSYNC, None).unwrap().expect("recovery completes");
+        assert_eq!(rec.completions_csv, full.completions_csv, "{tag}: CSV diverged, kill {kill}");
+        assert_eq!(rec.metrics_json, full.metrics_json, "{tag}: JSON diverged, kill {kill}");
+        assert_eq!(
+            fs::read(JournalStore::journal_path(&dir)).unwrap(),
+            base_journal,
+            "{tag}: final journal diverged, kill {kill}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn session_kill_recover_is_byte_identical() {
+    let spec = session_spec();
+    let steps = session_steps(&spec);
+    assert!(steps > 8, "session too short to exercise kills ({steps} steps)");
+    let base = tmpdir("session_base");
+    let full = fresh(&base, &spec, None).expect("uninterrupted run completes");
+    let kills = [1, 2, steps / 3, steps / 2, steps - 1];
+    assert_recovery_identity("session", &spec, &kills, &full, &base);
+
+    // Recovering an already-complete journal is idempotent: the whole
+    // run replays in verify mode and the artifacts come out identical.
+    let again = run_recover(&base, FSYNC, None).unwrap().expect("re-recovery completes");
+    assert_eq!(again, full);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn multi_crash_chain_recovers_recoveries() {
+    let spec = session_spec();
+    let steps = session_steps(&spec);
+    let base = tmpdir("chain_base");
+    let full = fresh(&base, &spec, None).expect("uninterrupted run completes");
+
+    let dir = tmpdir("chain");
+    assert!(fresh(&dir, &spec, Some(steps / 4)).is_none());
+    // First recovery dies too — later than the first crash, so it has
+    // gone live and appended new records before dying.
+    assert!(run_recover(&dir, FSYNC, Some(steps / 2)).unwrap().is_none());
+    let rec = run_recover(&dir, FSYNC, None).unwrap().expect("second recovery completes");
+    assert_eq!(rec, full);
+    assert_eq!(
+        fs::read(JournalStore::journal_path(&dir)).unwrap(),
+        fs::read(JournalStore::journal_path(&base)).unwrap()
+    );
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn routed_fleet_kill_recover_is_byte_identical() {
+    let spec = RunSpec {
+        seed: 7,
+        requests: 10,
+        arrival: ArrivalSpec::Open { lambda: 0.4, queue: 64 },
+        bundles: 4,
+        ..session_spec()
+    };
+    let steps = cluster_steps(&spec);
+    assert!(steps > 8, "fleet run too short ({steps} steps)");
+    let base = tmpdir("fleet_base");
+    let full = fresh(&base, &spec, None).expect("uninterrupted fleet run completes");
+    assert!(full.completions_csv.starts_with("bundle,finish_time,admit_time,decode_len\n"));
+    let kills = [1, steps / 3, steps / 2, steps - 1];
+    assert_recovery_identity("fleet", &spec, &kills, &full, &base);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn autoscaled_bundle_recovers_across_epoch_rebuilds() {
+    // Small epochs force several rebuilds, so mid-run kills land inside
+    // later epochs and recovery must replay journaled in-flight drops.
+    let spec = RunSpec {
+        seed: 11,
+        requests: 12,
+        arrival: ArrivalSpec::Closed,
+        autoscale: Some(AutoscaleSpec { feasible: vec![1, 2], window: 16, epoch: 8 }),
+        ..session_spec()
+    };
+    let steps = cluster_steps(&spec);
+    assert!(steps > 8, "autoscaled run too short ({steps} steps)");
+    let base = tmpdir("auto_base");
+    let full = fresh(&base, &spec, None).expect("uninterrupted autoscaled run completes");
+    let kills = [steps / 2, 3 * steps / 4, steps - 1];
+    assert_recovery_identity("autoscale", &spec, &kills, &full, &base);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn torn_tail_at_every_byte_offset_recovers_identically() {
+    let spec = session_spec();
+    let steps = session_steps(&spec);
+    let base = tmpdir("torn_base");
+    let full = fresh(&base, &spec, None).expect("uninterrupted run completes");
+
+    // Crash mid-run, then damage the synced journal: cut at every byte
+    // offset inside its last record (simulating a tear the fsync batch
+    // did not cover).
+    let crash = tmpdir("torn_crash");
+    assert!(fresh(&crash, &spec, Some(steps / 2)).is_none());
+    let path = JournalStore::journal_path(&crash);
+    let bytes = fs::read(&path).unwrap();
+    let records = read_journal(&path).unwrap();
+    let (last_seq, last_ev) = records.last().unwrap().clone();
+    let tail_len = encode_record(last_seq, &last_ev).len();
+    assert!(bytes.len() > tail_len);
+    for cut in (bytes.len() - tail_len)..bytes.len() {
+        let dir = tmpdir("torn_cut");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(JournalStore::journal_path(&dir), &bytes[..cut]).unwrap();
+        let rec = run_recover(&dir, FSYNC, None)
+            .unwrap()
+            .unwrap_or_else(|| panic!("recovery after cut at {cut} did not complete"));
+        assert_eq!(rec, full, "artifacts diverged after cut at {cut}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+    let _ = fs::remove_dir_all(&crash);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn dispatcher_counters_are_conservative() {
+    // Open-loop session: every arrival either becomes an admit or a
+    // reject, every admit either completes or stays in flight.
+    let spec = session_spec();
+    let cfg = spec_config(&spec);
+    let core = Ingress::in_memory();
+    let ArrivalSpec::Open { lambda, queue } = spec.arrival else { unreachable!() };
+    let out = Simulation::builder(&cfg, spec.r)
+        .ingress(core.clone())
+        .arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    let s = core.borrow().stats();
+    assert_eq!(s.admitted, out.arrival.admitted, "dispatcher vs arrival admit tally");
+    assert_eq!(s.rejected, out.arrival.rejected, "dispatcher vs arrival reject tally");
+    assert_eq!(s.completed + s.preloaded, out.completions.len() as u64);
+    assert_eq!(s.admitted, s.completed + s.dropped + s.inflight, "conservation");
+    assert_eq!(s.dropped, 0, "sessions never rebuild, so nothing is dropped");
+
+    // Autoscaled bundle: epoch rebuilds journal drops, and the balance
+    // must still close.
+    let spec = RunSpec {
+        requests: 12,
+        arrival: ArrivalSpec::Closed,
+        autoscale: Some(AutoscaleSpec { feasible: vec![1, 2], window: 16, epoch: 8 }),
+        ..session_spec()
+    };
+    let cfg = spec_config(&spec);
+    let core = Ingress::in_memory();
+    let auto = spec.autoscale.clone().unwrap();
+    ClusterSimulation::builder(&cfg, spec.r)
+        .bundles(1)
+        .policy(Policy::parse(&spec.policy).unwrap())
+        .cost(CostSpec::parse(&spec.cost).unwrap())
+        .autoscale(AutoscaleConfig {
+            feasible: auto.feasible,
+            window: auto.window,
+            epoch_completions: auto.epoch,
+        })
+        .ingress(core.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let s = core.borrow().stats();
+    assert_eq!(s.admitted, s.completed + s.dropped + s.inflight, "autoscale conservation");
+    assert_eq!(s.inflight, core.borrow().scan_inflight().len() as u64);
+}
+
+#[test]
+fn mem_store_attachment_changes_no_output_bytes() {
+    // The acceptance bar for making ingress the default: a MemStore
+    // dispatcher bolted onto a closed-loop session must leave the
+    // existing golden outputs bitwise unchanged.
+    let mut cfg = ExperimentConfig::default();
+    cfg.requests_per_instance = 60;
+    cfg.topology.batch_per_worker = 16;
+    let plain = Simulation::builder(&cfg, 2).build().unwrap().run();
+    let tracked = Simulation::builder(&cfg, 2)
+        .ingress(Ingress::in_memory())
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(
+        completions_to_csv_string(&plain.completions),
+        completions_to_csv_string(&tracked.completions)
+    );
+    assert_eq!(
+        sim_metrics_to_json(&plain.metrics).to_string_pretty(),
+        sim_metrics_to_json(&tracked.metrics).to_string_pretty()
+    );
+
+    // Same bar for the open loop (admission decisions must be taken by
+    // the inner process, the wrapper only observing them).
+    let open_plain = Simulation::builder(&cfg, 2)
+        .arrival(OpenLoopPoisson::new(0.2, 32, cfg.seed).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    let open_tracked = Simulation::builder(&cfg, 2)
+        .ingress(Ingress::in_memory())
+        .arrival(OpenLoopPoisson::new(0.2, 32, cfg.seed).unwrap())
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(
+        completions_to_csv_string(&open_plain.completions),
+        completions_to_csv_string(&open_tracked.completions)
+    );
+    assert_eq!(
+        sim_metrics_to_json(&open_plain.metrics).to_string_pretty(),
+        sim_metrics_to_json(&open_tracked.metrics).to_string_pretty()
+    );
+}

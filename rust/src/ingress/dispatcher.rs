@@ -58,10 +58,11 @@ pub struct IngressStats {
     /// Completions of pre-loaded slots (closed-loop initial fill /
     /// warm start) that never passed through admission.
     pub preloaded: u64,
-    /// In-flight requests discarded at epoch rebuilds.
+    /// In-flight requests discarded at epoch rebuilds / bundle
+    /// shutdown.
     pub dropped: u64,
     /// Requests currently admitted and not yet terminal.
-    pub inflight: usize,
+    pub inflight: u64,
     /// Arrivals offered but neither admitted nor rejected yet (the
     /// visible queue depth, summed over bundles).
     pub queue_depth: u64,
@@ -85,6 +86,10 @@ pub struct Ingress {
     completed: u64,
     preloaded: u64,
     dropped: u64,
+    /// How many completions may legally miss the admit index (id 0):
+    /// the number of pre-loaded slots granted by the engine builders.
+    /// One more is a matching failure, not a pre-loaded slot.
+    preload_budget: u64,
     /// Latest (offered, admitted, rejected) absolutes per bundle, from
     /// the wrapped arrival's own stats — the queue-depth source.
     arrival_seen: BTreeMap<u32, (u64, u64, u64)>,
@@ -103,6 +108,7 @@ impl Ingress {
             completed: 0,
             preloaded: 0,
             dropped: 0,
+            preload_budget: 0,
             arrival_seen: BTreeMap::new(),
             poisoned: None,
         }
@@ -131,6 +137,17 @@ impl Ingress {
     /// must be the first record).
     pub fn put_header(&mut self, entries: Vec<(String, String)>) -> Result<u64> {
         self.store.put(&JournalEvent::Header { entries })
+    }
+
+    /// Raise the pre-loaded completion budget by `n`. The engine
+    /// builders call this once per build with the number of
+    /// initially-filled slots (closed-loop initial fill / warm start)
+    /// — exactly how many completions may legally miss the admit
+    /// index. Any id-0 match beyond the budget poisons the core: a
+    /// real completion whose admit time failed to match is an
+    /// accounting error, not a pre-loaded slot.
+    pub fn grant_preload(&mut self, n: u64) {
+        self.preload_budget += n;
     }
 
     /// Record one event: verify against the journal in replay mode,
@@ -196,6 +213,14 @@ impl Ingress {
         }
         if id == 0 {
             self.preloaded += 1;
+            if self.preloaded > self.preload_budget && self.poisoned.is_none() {
+                self.poisoned = Some(format!(
+                    "completion on bundle {bundle} (admit {admit}, finish {finish}) matched no \
+                     journaled admission and the pre-loaded budget ({}) is exhausted — \
+                     admit/complete time matching broke",
+                    self.preload_budget
+                ));
+            }
         } else {
             self.completed += 1;
         }
@@ -220,7 +245,8 @@ impl Ingress {
     }
 
     /// Discard every in-flight request of `bundle` at an epoch rebuild
-    /// (its slots restart, so they can never complete). Deterministic:
+    /// or bundle shutdown (its slots restart or vanish, so they can
+    /// never complete). Deterministic:
     /// ids drain in admit-time order, FIFO within equal times — the
     /// same order live and under replay.
     pub fn on_epoch_end(&mut self, bundle: u32, at: f64) {
@@ -291,7 +317,7 @@ impl Ingress {
             completed: self.completed,
             preloaded: self.preloaded,
             dropped: self.dropped,
-            inflight: self.store.scan_inflight().len(),
+            inflight: self.store.scan_inflight().len() as u64,
             queue_depth,
         }
     }
@@ -422,7 +448,9 @@ mod tests {
         let core = Ingress::in_memory();
         {
             let mut c = core.borrow_mut();
-            // Closed-loop initial fill: completions with no prior admit.
+            // Closed-loop initial fill: completions with no prior admit,
+            // covered by the budget the builder grants.
+            c.grant_preload(2);
             c.on_complete(0, 0.0, &completion(3.0, 0.0));
             c.on_complete(0, 0.0, &completion(4.0, 0.0));
         }
@@ -430,6 +458,23 @@ mod tests {
         assert_eq!(s.preloaded, 2);
         assert_eq!(s.completed, 0);
         assert_eq!(s.inflight, 0);
+        core.borrow().ensure_healthy().unwrap();
+    }
+
+    #[test]
+    fn unmatched_completion_beyond_preload_budget_poisons() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.grant_preload(1);
+            c.on_complete(0, 0.0, &completion(3.0, 0.0)); // budgeted
+            c.ensure_healthy().unwrap();
+            // Second unmatched completion: matching failure, detected
+            // instead of silently miscounted as pre-loaded.
+            c.on_complete(0, 0.0, &completion(4.0, 1.0));
+        }
+        assert!(core.borrow().ensure_healthy().is_err());
+        assert_eq!(core.borrow().stats().preloaded, 2);
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //! from here). The lifecycle is
 //!
 //! ```text
-//! Received -> Queued -> Admitted -> Decoding{n} -> Completed
-//!     \          \                                    |
-//!      \          +-> Rejected                        | (terminal)
-//!       +-----------> Rejected                        v
+//! Received -> Queued -> Admitted -> Decoding{n} -> Completed (terminal)
+//!     |          |          |            |
+//!     +----------+----------+------------+------> Rejected  (terminal)
 //! ```
+//!
+//! Every non-terminal state can reach `Rejected`: from `Received` /
+//! `Queued` it is an admission shed, from `Admitted` / `Decoding` it is
+//! a *drop* — in-flight work discarded when its bundle rebuilds at an
+//! epoch boundary or shuts down (the journal's `Drop` record).
 //!
 //! Every transition is validated against [`allowed`]; an illegal one is
 //! an [`AfdError::Coordinator`], never a panic, and the terminal states
@@ -81,16 +85,18 @@ impl Phase {
 
 /// Is `from -> to` a legal lifecycle edge?
 ///
-/// `Decoding -> Decoding` is legal (one edge per produced token) and
-/// `Admitted -> Completed` covers a decode budget of one token. This
-/// is the single source of truth — the tracked machine *and* the
-/// durable stores validate against it.
+/// `Decoding -> Decoding` is legal (one edge per produced token),
+/// `Admitted -> Completed` covers a decode budget of one token, and
+/// `Admitted / Decoding -> Rejected` is the drop edge (in-flight work
+/// discarded at an epoch rebuild or bundle shutdown). This is the
+/// single source of truth — the tracked machine *and* the durable
+/// stores validate against it.
 pub fn allowed(from: Phase, to: Phase) -> bool {
     match from {
         Phase::Received => matches!(to, Phase::Queued | Phase::Rejected),
         Phase::Queued => matches!(to, Phase::Admitted | Phase::Rejected),
-        Phase::Admitted => matches!(to, Phase::Decoding | Phase::Completed),
-        Phase::Decoding => matches!(to, Phase::Decoding | Phase::Completed),
+        Phase::Admitted => matches!(to, Phase::Decoding | Phase::Completed | Phase::Rejected),
+        Phase::Decoding => matches!(to, Phase::Decoding | Phase::Completed | Phase::Rejected),
         Phase::Completed | Phase::Rejected => false,
     }
 }
@@ -169,7 +175,9 @@ impl TrackedRequest {
         Ok(())
     }
 
-    /// `{Received, Queued} -> Rejected`: shed before placement.
+    /// Any non-terminal state `-> Rejected`: shed before placement
+    /// (`Received` / `Queued`), or dropped in flight at an epoch
+    /// rebuild / bundle shutdown (`Admitted` / `Decoding`).
     pub fn reject(&mut self, now: f64) -> Result<()> {
         self.check(Phase::Rejected)?;
         self.state = RequestState::Rejected { at: now };
@@ -291,6 +299,26 @@ mod tests {
     }
 
     #[test]
+    fn in_flight_requests_can_be_dropped() {
+        // The epoch-rebuild / shutdown drop path: Admitted and Decoding
+        // both reach Rejected (and stay sticky there).
+        let mut a = TrackedRequest::new(req(8, 4));
+        a.enqueue().unwrap();
+        a.admit(0, 0, 1.0).unwrap();
+        a.reject(2.0).unwrap();
+        assert!(a.is_terminal());
+        assert!(!a.is_completed());
+
+        let mut d = TrackedRequest::new(req(9, 4));
+        d.enqueue().unwrap();
+        d.admit(0, 0, 1.0).unwrap();
+        d.produce_token(2.0).unwrap();
+        d.reject(3.0).unwrap();
+        assert_eq!(d.state, RequestState::Rejected { at: 3.0 });
+        assert!(d.produce_token(4.0).is_err());
+    }
+
+    #[test]
     fn tpot_none_until_complete() {
         let mut t = TrackedRequest::new(req(7, 3));
         assert!(t.tpot().is_none());
@@ -322,8 +350,10 @@ mod tests {
             (Queued, Rejected),
             (Admitted, Decoding),
             (Admitted, Completed),
+            (Admitted, Rejected),
             (Decoding, Decoding),
             (Decoding, Completed),
+            (Decoding, Rejected),
         ];
         for a in [Received, Queued, Admitted, Decoding, Completed, Rejected] {
             for b in [Received, Queued, Admitted, Decoding, Completed, Rejected] {

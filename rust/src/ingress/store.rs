@@ -23,8 +23,12 @@
 //!
 //! Tags: 0 Header (self-describing run spec, key/value pairs; always
 //! the first record), 1 Admit, 2 Reject, 3 Complete, 4 Drop (in-flight
-//! request discarded at an epoch rebuild). `python/check_journal.py`
-//! validates the same grammar toolchain-free.
+//! request discarded at an epoch rebuild or bundle shutdown).
+//! Encoding is fallible rather than lossy: a string longer than the
+//! u16 length prefix or a payload past [`MAX_RECORD`] is an error, not
+//! a silent truncation the decoder would later reject as a torn tail.
+//! `python/check_journal.py` validates the same grammar
+//! toolchain-free.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -58,7 +62,8 @@ pub enum JournalEvent {
     /// the dispatcher.
     Complete { id: u64, bundle: u32, finish: f64, admit: f64, prefill: u64, decode: u64 },
     /// In-flight request discarded when its bundle rebuilt at an epoch
-    /// boundary (slots restart; see ROADMAP graceful-drain follow-up).
+    /// boundary or shut down at its completion target (slots restart
+    /// or vanish; see ROADMAP graceful-drain follow-up).
     Drop { id: u64, bundle: u32, at: f64 },
 }
 
@@ -234,16 +239,25 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     put_u64(out, v.to_bits());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
     let bytes = s.as_bytes();
-    let n = bytes.len().min(u16::MAX as usize);
-    put_u16(out, n as u16);
-    out.extend_from_slice(bytes.get(..n).unwrap_or_default());
+    if bytes.len() > u16::MAX as usize {
+        return Err(AfdError::Coordinator(format!(
+            "journal string field of {} bytes exceeds the u16 length prefix",
+            bytes.len()
+        )));
+    }
+    put_u16(out, bytes.len() as u16);
+    out.extend_from_slice(bytes);
+    Ok(())
 }
 
 /// Encode one record (length prefix + payload + checksum). Public so
 /// tests and tools can assemble or corrupt journals byte by byte.
-pub fn encode_record(seq: u64, ev: &JournalEvent) -> Vec<u8> {
+/// Errors on an oversized string or payload instead of truncating —
+/// a lossy write would either round-trip modified (a confusing
+/// replay-divergence at recovery) or be undecodable.
+pub fn encode_record(seq: u64, ev: &JournalEvent) -> Result<Vec<u8>> {
     let mut p = Vec::with_capacity(64);
     put_u64(&mut p, seq);
     p.push(ev.tag());
@@ -251,8 +265,8 @@ pub fn encode_record(seq: u64, ev: &JournalEvent) -> Vec<u8> {
         JournalEvent::Header { entries } => {
             put_u32(&mut p, entries.len() as u32);
             for (k, v) in entries {
-                put_str(&mut p, k);
-                put_str(&mut p, v);
+                put_str(&mut p, k)?;
+                put_str(&mut p, v)?;
             }
         }
         JournalEvent::Admit { id, bundle, at } => {
@@ -278,11 +292,17 @@ pub fn encode_record(seq: u64, ev: &JournalEvent) -> Vec<u8> {
             put_f64(&mut p, *at);
         }
     }
+    if p.len() > MAX_RECORD {
+        return Err(AfdError::Coordinator(format!(
+            "journal record payload of {} bytes exceeds MAX_RECORD ({MAX_RECORD})",
+            p.len()
+        )));
+    }
     let mut rec = Vec::with_capacity(p.len() + 8);
     put_u32(&mut rec, p.len() as u32);
     rec.extend_from_slice(&p);
     put_u32(&mut rec, fnv1a(&p));
-    rec
+    Ok(rec)
 }
 
 struct Cursor<'a> {
@@ -518,9 +538,12 @@ impl StateStore for JournalStore {
     }
 
     fn put(&mut self, ev: &JournalEvent) -> Result<u64> {
+        // Encode before applying: an unencodable event must leave the
+        // in-flight table untouched, or memory and disk would diverge.
+        let rec = encode_record(self.seq + 1, ev)?;
         self.table.apply(ev)?;
         self.seq += 1;
-        self.pending.extend_from_slice(&encode_record(self.seq, ev));
+        self.pending.extend_from_slice(&rec);
         self.records_since_sync += 1;
         if self.records_since_sync >= self.fsync_every {
             self.flush_sync()?;
@@ -583,7 +606,7 @@ mod tests {
     #[test]
     fn codec_round_trips_every_tag() {
         for (i, ev) in sample_events().iter().enumerate() {
-            let rec = encode_record(i as u64 + 1, ev);
+            let rec = encode_record(i as u64 + 1, ev).unwrap();
             let (got, consumed) = decode_records(&rec);
             // Single-record buffers decode iff the seq starts at 1.
             if i == 0 {
@@ -593,7 +616,7 @@ mod tests {
         }
         let mut buf = Vec::new();
         for (i, ev) in sample_events().iter().enumerate() {
-            buf.extend_from_slice(&encode_record(i as u64 + 1, ev));
+            buf.extend_from_slice(&encode_record(i as u64 + 1, ev).unwrap());
         }
         let (got, consumed) = decode_records(&buf);
         assert_eq!(consumed, buf.len());
@@ -606,8 +629,8 @@ mod tests {
 
     #[test]
     fn decode_stops_at_corrupt_checksum_and_seq_gap() {
-        let a = encode_record(1, &JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 });
-        let b = encode_record(2, &JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 });
+        let a = encode_record(1, &JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+        let b = encode_record(2, &JournalEvent::Admit { id: 2, bundle: 0, at: 2.0 }).unwrap();
         // Corrupt one payload byte of b.
         let mut buf = a.clone();
         let mut bad = b.clone();
@@ -619,7 +642,9 @@ mod tests {
         assert_eq!(consumed, a.len());
         // Sequence gap: 1 then 3.
         let mut buf = a.clone();
-        buf.extend_from_slice(&encode_record(3, &JournalEvent::Admit { id: 3, bundle: 0, at: 3.0 }));
+        buf.extend_from_slice(
+            &encode_record(3, &JournalEvent::Admit { id: 3, bundle: 0, at: 3.0 }).unwrap(),
+        );
         let (got, _) = decode_records(&buf);
         assert_eq!(got.len(), 1);
     }
@@ -684,7 +709,7 @@ mod tests {
         }
         let path = JournalStore::journal_path(&dir);
         let full = fs::read(&path).unwrap();
-        let last = encode_record(6, sample_events().last().unwrap());
+        let last = encode_record(6, sample_events().last().unwrap()).unwrap();
         let tail_start = full.len() - last.len();
         for cut in tail_start..full.len() {
             let trunc_dir = tmpdir("torn_cut");
@@ -721,6 +746,37 @@ mod tests {
         let records = read_journal(&path).unwrap();
         assert_eq!(records.len(), 2);
         assert_eq!(records.last().unwrap().0, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_fields_refuse_to_encode() {
+        // A string past the u16 length prefix must be an error, never a
+        // silent truncation the decoder would misread.
+        let long = "x".repeat(u16::MAX as usize + 1);
+        let ev = JournalEvent::Header { entries: vec![("k".into(), long)] };
+        assert!(encode_record(1, &ev).is_err());
+
+        // A payload past MAX_RECORD (many max-size strings) likewise.
+        let big = "y".repeat(u16::MAX as usize);
+        let entries: Vec<(String, String)> =
+            (0..9).map(|_| (big.clone(), big.clone())).collect();
+        assert!(encode_record(1, &JournalEvent::Header { entries }).is_err());
+
+        // The durable store surfaces the error and stays usable: the
+        // failed put journals nothing, and a valid event still appends.
+        let dir = tmpdir("oversize");
+        let mut s = JournalStore::create(&dir, 1).unwrap();
+        let long = "z".repeat(u16::MAX as usize + 1);
+        assert!(s
+            .put(&JournalEvent::Header { entries: vec![("k".into(), long)] })
+            .is_err());
+        assert_eq!(s.seq(), 0);
+        s.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+        s.checkpoint().unwrap();
+        let records = read_journal(s.path()).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].0, 1);
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -798,17 +798,35 @@ impl ClusterSimulation {
         }
         if self.bundles[g].produced >= self.bundles[g].target {
             self.bundles[g].done = true;
-            // A finished bundle stops consuming: whatever its inbox
-            // still holds can never be admitted. Count those arrivals
-            // as rejected (dropped at bundle shutdown) and clear the
-            // queue so it stops inflating the queue-length integral —
-            // conservation stays offered == admitted + rejected +
-            // still-queued-at-active-bundles.
+            let bundle_ix = self.bundles[g].index as u32;
+            let shutdown_at = self.bundles[g].base_time;
+            // Shutdown is a terminal epoch end: the slot arrays are
+            // gone, so still-admitted in-flight requests can never
+            // complete. Journal them as dropped — exactly like a
+            // rebuild — so the durable table drains and the final
+            // inflight accounting is honest.
+            if let Some(core) = &self.ingress {
+                core.borrow_mut().on_epoch_end(bundle_ix, shutdown_at);
+            }
+            // A finished bundle also stops consuming: whatever its
+            // inbox still holds can never be admitted. Count those
+            // arrivals as rejected (dropped at bundle shutdown) and
+            // clear the queue so it stops inflating the queue-length
+            // integral — conservation stays offered == admitted +
+            // rejected + still-queued-at-active-bundles — journaling
+            // each one so the journal's reject tally matches the
+            // arrival stats'.
             if let (Some(shared), Some(inbox)) =
                 (self.shared.as_mut(), &self.bundles[g].inbox)
             {
                 let mut ib = inbox.borrow_mut();
                 shared.rejected += ib.queue.len() as u64;
+                if let Some(core) = &self.ingress {
+                    let mut c = core.borrow_mut();
+                    for _ in 0..ib.queue.len() {
+                        c.on_reject(bundle_ix, shutdown_at);
+                    }
+                }
                 ib.queue.clear();
             }
         } else {

@@ -842,6 +842,15 @@ impl SimulationBuilder {
         // completion observer. `None` leaves both untouched.
         let (arrival, observers) = match ingress {
             Some((core, bundle, offset)) => {
+                // Closed-loop initial fill / warm start: every slot of
+                // every lane starts occupied, so exactly m*r*b
+                // completions may legally miss the admit index. Grant
+                // them up front — any unmatched completion beyond the
+                // budget poisons the core instead of being silently
+                // miscounted as pre-loaded.
+                if initial_fill {
+                    core.borrow_mut().grant_preload((m * r * b) as u64);
+                }
                 let mut observers = observers;
                 observers.push(Box::new(crate::ingress::dispatcher::IngressObserver::new(
                     core.clone(),

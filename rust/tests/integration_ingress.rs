@@ -227,7 +227,7 @@ fn torn_tail_at_every_byte_offset_recovers_identically() {
     let bytes = fs::read(&path).unwrap();
     let records = read_journal(&path).unwrap();
     let (last_seq, last_ev) = records.last().unwrap().clone();
-    let tail_len = encode_record(last_seq, &last_ev).len();
+    let tail_len = encode_record(last_seq, &last_ev).unwrap().len();
     assert!(bytes.len() > tail_len);
     for cut in (bytes.len() - tail_len)..bytes.len() {
         let dir = tmpdir("torn_cut");
@@ -292,6 +292,9 @@ fn dispatcher_counters_are_conservative() {
     let s = core.borrow().stats();
     assert_eq!(s.admitted, s.completed + s.dropped + s.inflight, "autoscale conservation");
     assert_eq!(s.inflight, core.borrow().scan_inflight().len() as u64);
+    // Bundle shutdown journals its in-flight drops, so the durable
+    // table drains: a finished fleet leaves nothing admitted forever.
+    assert_eq!(s.inflight, 0, "shutdown drains the durable in-flight table");
 }
 
 #[test]

@@ -1,10 +1,18 @@
 #!/usr/bin/env python3
 """Schema gate for the hotpath bench's ``--json`` perf records.
 
-``cargo bench --bench hotpath -- --json bench_out/hotpath.json`` emits an
-array of records::
+``cargo bench --bench hotpath -- --json bench_out/BENCH_hotpath.json``
+emits an array of records::
 
     [{"bench": str, "iters": int, "ns_per_iter": num, "slot_steps_per_sec": num}, ...]
+
+Fleet-scaling records (the parallel shard engine's serial-vs-parallel
+sweep) additionally carry the fleet shape and must carry both keys::
+
+    {..., "bundles": int > 0, "threads": int >= 0}
+
+where ``threads`` 0 marks the serial cluster engine and >= 1 the
+parallel engine at that worker count.
 
 CI validates the schema here and uploads the file as the perf-history
 artifact (``BENCH_*.json`` trajectory). Deliberately *not* validated:
@@ -28,6 +36,14 @@ REQUIRED = {
     "slot_steps_per_sec": (int, float),
 }
 
+# Extra keys on fleet-scaling records; a record carrying either must
+# carry both. "threads" may be 0 (the serial cluster engine row).
+FLEET = {
+    "bundles": int,
+    "threads": int,
+}
+NON_NEGATIVE = {"threads"}
+
 
 def validate(records: object) -> list[str]:
     """Return a list of schema violations (empty == valid)."""
@@ -42,7 +58,9 @@ def validate(records: object) -> list[str]:
         if not isinstance(rec, dict):
             errors.append(f"{where}: must be an object, got {type(rec).__name__}")
             continue
-        for key, expected in REQUIRED.items():
+        is_fleet = any(key in rec for key in FLEET)
+        schema = {**REQUIRED, **FLEET} if is_fleet else REQUIRED
+        for key, expected in schema.items():
             if key not in rec:
                 errors.append(f"{where}: missing key {key!r}")
                 continue
@@ -53,9 +71,16 @@ def validate(records: object) -> list[str]:
                     f"{where}.{key}: expected {expected}, got {value!r}"
                 )
                 continue
-            if key != "bench" and value <= 0:
+            if key == "bench":
+                continue
+            if key in NON_NEGATIVE:
+                if value < 0:
+                    errors.append(
+                        f"{where}.{key}: must be >= 0, got {value!r}"
+                    )
+            elif value <= 0:
                 errors.append(f"{where}.{key}: must be positive, got {value!r}")
-        extra = set(rec) - set(REQUIRED)
+        extra = set(rec) - set(schema)
         if extra:
             errors.append(f"{where}: unknown key(s) {sorted(extra)}")
         name = rec.get("bench")
@@ -80,8 +105,23 @@ def selftest() -> int:
             "slot_steps_per_sec": 2.0e6,
         }
     ]
+    fleet = {
+        "bench": "fleet parallel bundles=64 threads=8",
+        "iters": 5,
+        "ns_per_iter": 2.5e7,
+        "slot_steps_per_sec": 4.0e7,
+        "bundles": 64,
+        "threads": 8,
+    }
     cases = [
         (ok, True, "well-formed record accepted"),
+        ([fleet], True, "well-formed fleet record accepted"),
+        ([{**fleet, "threads": 0}], True, "fleet serial row (threads 0) accepted"),
+        ([{k: v for k, v in fleet.items() if k != "threads"}], False,
+         "fleet record missing threads rejected"),
+        ([{**fleet, "bundles": 0}], False, "zero-bundle fleet record rejected"),
+        ([{**fleet, "threads": -1}], False, "negative threads rejected"),
+        ([{**fleet, "bundles": 64.0}], False, "float bundles rejected"),
         ([], False, "empty array rejected"),
         ({"not": "a list"}, False, "non-array top level rejected"),
         (["not a dict"], False, "non-object record rejected"),

@@ -10,8 +10,9 @@
 //!                serving engine's per-step cost (if artifacts are built)
 //!
 //! `--json <path>` additionally writes the simulator measurements as an
-//! array of `{bench, iters, ns_per_iter, slot_steps_per_sec}` records —
-//! the machine-readable perf trajectory CI uploads as an artifact
+//! array of `{bench, iters, ns_per_iter, slot_steps_per_sec}` records
+//! (fleet-scaling rows add `bundles` and `threads`) — the
+//! machine-readable perf trajectory CI uploads as an artifact
 //! (validated by `python/check_bench_json.py`).
 
 use afd::bench_support::harness::{bench, bench_with_setup, BenchConfig, BenchResult};
@@ -35,6 +36,27 @@ fn record(records: &mut Vec<Json>, res: &BenchResult, slot_steps: f64) {
             .set("iters", Json::Num(res.iters as f64))
             .set("ns_per_iter", Json::Num(res.mean_secs * 1e9))
             .set("slot_steps_per_sec", Json::Num(res.throughput(slot_steps))),
+    );
+}
+
+/// One fleet-scaling record: the base perf record plus the fleet shape
+/// (`threads` 0 marks the serial cluster engine; >= 1 the parallel
+/// shard engine at that worker count).
+fn record_fleet(
+    records: &mut Vec<Json>,
+    res: &BenchResult,
+    slot_steps: f64,
+    bundles: usize,
+    threads: usize,
+) {
+    records.push(
+        Json::obj()
+            .set("bench", Json::Str(res.name.clone()))
+            .set("iters", Json::Num(res.iters as f64))
+            .set("ns_per_iter", Json::Num(res.mean_secs * 1e9))
+            .set("slot_steps_per_sec", Json::Num(res.throughput(slot_steps)))
+            .set("bundles", Json::Num(bundles as f64))
+            .set("threads", Json::Num(threads as f64)),
     );
 }
 
@@ -195,6 +217,76 @@ fn main() {
                 100.0 * overhead
             );
             std::process::exit(1);
+        }
+    }
+
+    println!("\n== fleet scaling (parallel shard engine vs serial cluster) ==");
+    {
+        // The perf case for the parallel fleet engine: steps/sec as the
+        // bundle count grows, serial cluster vs sharded workers. The
+        // parallel engine is bitwise-identical to serial at any thread
+        // count (pinned by tests/integration_fleet.rs), so this section
+        // measures pure wall-clock. Small per-bundle shape so the fleet
+        // axis, not the per-bundle batch, dominates. Closed loop: no
+        // routing barriers, the shard engine's best case; thread counts
+        // past the machine's cores just measure oversubscription.
+        use afd::sim::cluster::ClusterSimulation;
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 32;
+        let r = 2;
+        let per_bundle = if fast { 8 } else { 30 };
+        for &bundles in &[1usize, 8, 64, 512] {
+            let slot_steps = (bundles * per_bundle) as f64 * 500.0;
+            let serial_cfg = cfg.clone();
+            let serial =
+                bench(&format!("fleet serial bundles={bundles}"), cfg_fast, || {
+                    ClusterSimulation::builder(&serial_cfg, r)
+                        .bundles(bundles)
+                        .completions_per_bundle(Some(per_bundle))
+                        .build()
+                        .unwrap()
+                        .run()
+                        .unwrap()
+                        .aggregate
+                        .completed
+                });
+            println!(
+                "{}  -> {:.2}M slot-steps/sec",
+                serial.summary(),
+                serial.throughput(slot_steps) / 1e6
+            );
+            record_fleet(&mut records, &serial, slot_steps, bundles, 0);
+            let mut at_max_threads = serial.mean_secs;
+            for &t in &[1usize, 2, 4, 8] {
+                let par_cfg = cfg.clone();
+                let res = bench(
+                    &format!("fleet parallel bundles={bundles} threads={t}"),
+                    cfg_fast,
+                    || {
+                        ClusterSimulation::builder(&par_cfg, r)
+                            .bundles(bundles)
+                            .completions_per_bundle(Some(per_bundle))
+                            .run_parallel(t)
+                            .unwrap()
+                            .aggregate
+                            .completed
+                    },
+                );
+                println!(
+                    "{}  -> {:.2}M slot-steps/sec",
+                    res.summary(),
+                    res.throughput(slot_steps) / 1e6
+                );
+                record_fleet(&mut records, &res, slot_steps, bundles, t);
+                at_max_threads = res.mean_secs;
+            }
+            if bundles >= 64 {
+                println!(
+                    "  -> fleet speedup at {bundles} bundles: {:.2}x \
+                     (8 threads vs serial engine)",
+                    serial.mean_secs / at_max_threads
+                );
+            }
         }
     }
 

@@ -244,6 +244,32 @@ impl Ingress {
         self.arrival_seen.insert(bundle, (offered, admitted, rejected));
     }
 
+    /// Apply one recorded lifecycle event to the live core — the replay
+    /// half of the parallel fleet engine's ingress protocol. Workers
+    /// record [`IngressEvent`]s through a buffering [`IngressSink`]
+    /// instead of touching the shared core; the coordinator replays the
+    /// merged stream here in deterministic virtual-time order, so id
+    /// assignment, admit/complete matching, and journal bytes are
+    /// independent of worker interleaving.
+    pub fn apply_event(&mut self, ev: &IngressEvent) -> Result<()> {
+        match *ev {
+            IngressEvent::Admit { bundle, at } => self.on_admit(bundle, at),
+            IngressEvent::Reject { bundle, at } => self.on_reject(bundle, at),
+            IngressEvent::Counts { bundle, offered, admitted, rejected } => {
+                self.note_arrival_counts(bundle, offered, admitted, rejected)
+            }
+            IngressEvent::Complete { bundle, offset, completion } => {
+                self.on_complete(bundle, offset, &completion)
+            }
+            IngressEvent::EpochEnd { bundle, at } => self.on_epoch_end(bundle, at),
+            IngressEvent::GrantPreload { n } => self.grant_preload(n),
+            IngressEvent::Checkpoint => {
+                self.checkpoint()?;
+            }
+        }
+        Ok(())
+    }
+
     /// Discard every in-flight request of `bundle` at an epoch rebuild
     /// or bundle shutdown (its slots restart or vanish, so they can
     /// never complete). Deterministic:
@@ -325,11 +351,89 @@ impl Ingress {
 
 // ------------------------------------------------------------- wrappers
 
+/// One lifecycle transition as a plain-data record. The live path calls
+/// the core directly; the parallel fleet engine's workers *record* these
+/// (they own no handle to the shared core) and the coordinator replays
+/// them through [`Ingress::apply_event`] in merged virtual-time order.
+/// `Complete` carries the raw [`Completion`] plus the bundle's epoch
+/// offset so replay runs the exact same admit-time matching arithmetic
+/// as the live path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IngressEvent {
+    Admit { bundle: u32, at: f64 },
+    Reject { bundle: u32, at: f64 },
+    Counts { bundle: u32, offered: u64, admitted: u64, rejected: u64 },
+    Complete { bundle: u32, offset: f64, completion: Completion },
+    EpochEnd { bundle: u32, at: f64 },
+    GrantPreload { n: u64 },
+    Checkpoint,
+}
+
+/// A worker-local event buffer (drained into step records after every
+/// engine step, shipped to the coordinator as POD).
+pub type IngressEventBuf = Rc<RefCell<Vec<IngressEvent>>>;
+
+/// Where the wrappers send observed transitions: the live core, or a
+/// recording buffer. Both receive the *same calls in the same order*
+/// from [`IngressArrival`] / [`IngressObserver`], which is what makes
+/// record-then-replay byte-identical to the live path.
+pub trait IngressSink {
+    fn admit(&self, bundle: u32, at: f64);
+    fn reject(&self, bundle: u32, at: f64);
+    fn counts(&self, bundle: u32, offered: u64, admitted: u64, rejected: u64);
+    fn complete(&self, bundle: u32, offset: f64, c: &Completion);
+    fn grant_preload(&self, n: u64);
+}
+
+impl IngressSink for IngressHandle {
+    fn admit(&self, bundle: u32, at: f64) {
+        self.borrow_mut().on_admit(bundle, at);
+    }
+
+    fn reject(&self, bundle: u32, at: f64) {
+        self.borrow_mut().on_reject(bundle, at);
+    }
+
+    fn counts(&self, bundle: u32, offered: u64, admitted: u64, rejected: u64) {
+        self.borrow_mut().note_arrival_counts(bundle, offered, admitted, rejected);
+    }
+
+    fn complete(&self, bundle: u32, offset: f64, c: &Completion) {
+        self.borrow_mut().on_complete(bundle, offset, c);
+    }
+
+    fn grant_preload(&self, n: u64) {
+        self.borrow_mut().grant_preload(n);
+    }
+}
+
+impl IngressSink for IngressEventBuf {
+    fn admit(&self, bundle: u32, at: f64) {
+        self.borrow_mut().push(IngressEvent::Admit { bundle, at });
+    }
+
+    fn reject(&self, bundle: u32, at: f64) {
+        self.borrow_mut().push(IngressEvent::Reject { bundle, at });
+    }
+
+    fn counts(&self, bundle: u32, offered: u64, admitted: u64, rejected: u64) {
+        self.borrow_mut().push(IngressEvent::Counts { bundle, offered, admitted, rejected });
+    }
+
+    fn complete(&self, bundle: u32, offset: f64, c: &Completion) {
+        self.borrow_mut().push(IngressEvent::Complete { bundle, offset, completion: *c });
+    }
+
+    fn grant_preload(&self, n: u64) {
+        self.borrow_mut().push(IngressEvent::GrantPreload { n });
+    }
+}
+
 /// [`ArrivalProcess`] wrapper: delegates every engine-visible decision
 /// to the inner process and journals the transitions it observes.
 pub struct IngressArrival {
     inner: Box<dyn ArrivalProcess>,
-    core: IngressHandle,
+    sink: Box<dyn IngressSink>,
     bundle: u32,
     offset: f64,
     /// Cached (offered, admitted, rejected) absolutes — sync work only
@@ -344,7 +448,18 @@ impl IngressArrival {
         bundle: u32,
         offset: f64,
     ) -> Self {
-        Self { inner, core, bundle, offset, last_counts: (0, 0, 0) }
+        Self::with_sink(Box::new(core), inner, bundle, offset)
+    }
+
+    /// Recording/live-agnostic constructor (the fleet workers pass an
+    /// event buffer instead of the shared core).
+    pub fn with_sink(
+        sink: Box<dyn IngressSink>,
+        inner: Box<dyn ArrivalProcess>,
+        bundle: u32,
+        offset: f64,
+    ) -> Self {
+        Self { inner, sink, bundle, offset, last_counts: (0, 0, 0) }
     }
 
     fn sync(&mut self, now: f64) {
@@ -352,12 +467,11 @@ impl IngressArrival {
         if (s.offered, s.admitted, s.rejected) == self.last_counts {
             return;
         }
-        let mut core = self.core.borrow_mut();
         let (_, _, last_rejected) = self.last_counts;
         for _ in last_rejected..s.rejected {
-            core.on_reject(self.bundle, self.offset + now);
+            self.sink.reject(self.bundle, self.offset + now);
         }
-        core.note_arrival_counts(self.bundle, s.offered, s.admitted, s.rejected);
+        self.sink.counts(self.bundle, s.offered, s.admitted, s.rejected);
         self.last_counts = (s.offered, s.admitted, s.rejected);
     }
 }
@@ -371,7 +485,7 @@ impl ArrivalProcess for IngressArrival {
     fn try_admit(&mut self, now: f64) -> Option<f64> {
         let got = self.inner.try_admit(now);
         if got.is_some() {
-            self.core.borrow_mut().on_admit(self.bundle, self.offset + now);
+            self.sink.admit(self.bundle, self.offset + now);
         }
         self.sync(now);
         got
@@ -393,22 +507,26 @@ impl ArrivalProcess for IngressArrival {
 /// [`SimObserver`] feeding the engine's completion batches into the
 /// core (stamped into cluster-global time by the bundle offset).
 pub struct IngressObserver {
-    core: IngressHandle,
+    sink: Box<dyn IngressSink>,
     bundle: u32,
     offset: f64,
 }
 
 impl IngressObserver {
     pub fn new(core: IngressHandle, bundle: u32, offset: f64) -> Self {
-        Self { core, bundle, offset }
+        Self::with_sink(Box::new(core), bundle, offset)
+    }
+
+    /// Recording/live-agnostic constructor (see [`IngressArrival::with_sink`]).
+    pub fn with_sink(sink: Box<dyn IngressSink>, bundle: u32, offset: f64) -> Self {
+        Self { sink, bundle, offset }
     }
 }
 
 impl SimObserver for IngressObserver {
     fn on_completions(&mut self, _now: f64, completions: &[Completion]) {
-        let mut core = self.core.borrow_mut();
         for c in completions {
-            core.on_complete(self.bundle, self.offset, c);
+            self.sink.complete(self.bundle, self.offset, c);
         }
     }
 }

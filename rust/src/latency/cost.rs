@@ -88,6 +88,22 @@ pub trait CostModel {
     /// overheads) can use it.
     fn attention(&self, token_load: f64, live: usize) -> f64;
 
+    /// Batched attention pricing: `out[j] = attention(loads[j],
+    /// lives[j])` for the `r` workers of one lane-step, through a single
+    /// virtual call. The engine's hot loop uses this with reused scratch
+    /// buffers so models can price the whole array without per-worker
+    /// dynamic dispatch — [`LinearCost`] overrides it with a
+    /// devirtualized loop the compiler can auto-vectorize. Overrides
+    /// MUST be element-wise bitwise-identical to the scalar method (the
+    /// engine's byte-identity contract rides on it; asserted for every
+    /// shipped model by `attention_batch_matches_scalar_bitwise`).
+    fn attention_batch(&self, loads: &[f64], lives: &[usize], out: &mut [f64]) {
+        debug_assert!(loads.len() == lives.len() && loads.len() == out.len());
+        for ((o, &load), &live) in out.iter_mut().zip(loads).zip(lives) {
+            *o = self.attention(load, live);
+        }
+    }
+
     /// FFN latency for aggregated batch `agg_batch` (the paper's `rB`).
     fn ffn(&self, agg_batch: f64) -> f64;
 
@@ -145,6 +161,16 @@ impl From<HardwareParams> for LinearCost {
 impl CostModel for LinearCost {
     fn attention(&self, token_load: f64, _live: usize) -> f64 {
         self.models.attention.eval(token_load)
+    }
+
+    fn attention_batch(&self, loads: &[f64], lives: &[usize], out: &mut [f64]) {
+        // One virtual call for the whole lane: the inlined `alpha * x +
+        // beta` runs as a tight array pass (auto-vectorizable), and the
+        // per-element float expression is exactly the scalar method's.
+        debug_assert!(loads.len() == lives.len() && loads.len() == out.len());
+        for (o, &load) in out.iter_mut().zip(loads) {
+            *o = self.models.attention.eval(load);
+        }
     }
 
     fn ffn(&self, agg_batch: f64) -> f64 {
@@ -772,6 +798,29 @@ mod tests {
             CostSpec::Blended { weight: 0.25 }.label(),
             CostSpec::Blended { weight: 0.75 }.label()
         );
+    }
+
+    #[test]
+    fn attention_batch_matches_scalar_bitwise() {
+        // The engine's hot loop prices attention through the batched
+        // entry point; every shipped model must agree with the scalar
+        // method bit for bit or parallel == serial byte-identity breaks.
+        let hw = hw();
+        let loads = [0.0, 17.0, 599.0, 153_344.0, 2.5e6, 31.0, 1e7, 42.0];
+        let lives = [0usize, 1, 7, 16, 64, 3, 128, 9];
+        for spec in CostSpec::all() {
+            let model = spec.build(&hw, 23);
+            let mut out = [0.0f64; 8];
+            model.attention_batch(&loads, &lives, &mut out);
+            for j in 0..loads.len() {
+                assert_eq!(
+                    out[j].to_bits(),
+                    model.attention(loads[j], lives[j]).to_bits(),
+                    "{} worker {j}",
+                    spec.label()
+                );
+            }
+        }
     }
 
     #[test]

@@ -64,7 +64,7 @@ fn run(args: &Args) -> Result<()> {
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
                     .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed, --cost linear|roofline|moe)")
-                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale, --bundle-specs r:b:cost,...)")
+                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale, --bundle-specs r:b:cost,..., --threads)")
                     .entry("sweep", "parallel (scenario x arrival x fleet x cost x r x B) sweep with theory-vs-sim columns")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
@@ -203,6 +203,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///   --feasible a,b,...   autoscaler candidate fan-ins (default 1..16)
 ///   --window N           autoscaler estimator window (default 2000)
 ///   --epoch N            completions per autoscale epoch (default 1500)
+///   --threads N          shard bundles across N worker threads with the
+///                        deterministic virtual-time merge (default 1 =
+///                        serial engine; output is bitwise identical at
+///                        any thread count)
 fn cmd_cluster(args: &Args) -> Result<()> {
     use afd::analysis::provisioning::r_star_g_on_grid;
     use afd::coordinator::router::Policy;
@@ -269,6 +273,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             epoch_completions: args.get_usize("epoch", 1500)?,
         });
     }
+    let threads = args.get_usize("threads", 1)?;
 
     match &hetero_specs {
         Some(specs) => {
@@ -289,7 +294,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             cost.name()
         ),
     }
-    let out = builder.build()?.run()?;
+    // The parallel fleet engine is bitwise-identical to the serial
+    // path at any thread count; <= 1 keeps the legacy serial engine.
+    let out = if threads > 1 {
+        builder.run_parallel(threads)?
+    } else {
+        builder.build()?.run()?
+    };
 
     let mut t = Table::new(&[
         "bundle",
@@ -429,6 +440,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 ///   --batches 256,...           per-worker batch grid (default config B)
 ///   --requests N                completions per Attention instance
 ///   --threads N                 pool workers (default: one per core)
+///   --fleet-threads N           shard each multi-bundle cell across N
+///                               workers (parallel fleet engine; bitwise-
+///                               identical outputs, default 1)
 ///   --serial                    run the serial reference instead
 ///   --cells                     also print the per-cell table
 ///   --csv PATH / --json PATH    write per-cell results
@@ -534,10 +548,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         grid.cell_count(),
         if args.has_flag("serial") { "serial reference".to_string() } else { format!("{} threads", if threads == 0 { afd::util::pool::default_threads(grid.cell_count()) } else { threads }) },
     );
+    let opts = SimOptions {
+        fleet_threads: args.get_usize("fleet-threads", 1)?,
+        ..SimOptions::default()
+    };
     let res = if args.has_flag("serial") {
-        run_grid_serial(&cfg, &grid, SimOptions::default())?
+        run_grid_serial(&cfg, &grid, opts)?
     } else {
-        run_grid(&cfg, &grid, SimOptions::default(), threads)?
+        run_grid(&cfg, &grid, opts, threads)?
     };
     emit::summary_table(&res).print();
     if args.has_flag("cells") {

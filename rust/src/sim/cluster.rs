@@ -52,12 +52,14 @@
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::coordinator::autoscale::{Autoscaler, Reconfiguration};
 use crate::coordinator::load::LoadSnapshot;
 use crate::coordinator::router::{Policy, Router};
 use crate::error::{AfdError, Result};
+use crate::ingress::dispatcher::{IngressEvent, IngressEventBuf, IngressHandle};
 use crate::latency::cost::CostSpec;
 use crate::sim::engine::BATCHES_IN_FLIGHT;
 use crate::sim::metrics::SimMetrics;
@@ -189,22 +191,28 @@ impl AutoscaleConfig {
     }
 }
 
+/// Length-source factory, called once per (bundle, epoch) with the
+/// derived seed. `Send + Sync` behind an `Arc` so the parallel fleet
+/// engine can hand the *same* factory to every shard worker — identical
+/// construction is half of the parallel == serial bitwise contract.
+pub(crate) type SourceFactory = Arc<dyn Fn(u64) -> Box<dyn LengthSource> + Send + Sync>;
+
 /// Per-bundle admission inbox shared between the cluster router (pushes)
 /// and the bundle's arrival proxy (pops).
-struct Inbox {
+pub(crate) struct Inbox {
     /// Global arrival times, FIFO.
-    queue: VecDeque<f64>,
-    capacity: usize,
-    admitted: u64,
-    wait_sum: f64,
+    pub(crate) queue: VecDeque<f64>,
+    pub(crate) capacity: usize,
+    pub(crate) admitted: u64,
+    pub(crate) wait_sum: f64,
 }
 
 /// The arrival process a routed bundle runs under: grants admissions
 /// from the bundle's inbox. `offset` maps the bundle's local virtual
 /// time (each epoch restarts at 0) onto the cluster's global clock.
-struct InboxArrival {
-    inbox: Rc<RefCell<Inbox>>,
-    offset: f64,
+pub(crate) struct InboxArrival {
+    pub(crate) inbox: Rc<RefCell<Inbox>>,
+    pub(crate) offset: f64,
 }
 
 impl ArrivalProcess for InboxArrival {
@@ -250,18 +258,18 @@ impl ArrivalProcess for InboxArrival {
 
 /// The cluster-wide Poisson generator (same exponential-gap construction
 /// as [`OpenLoopPoisson`], lifted above the bundles).
-struct SharedPoisson {
-    lambda: f64,
-    rng: crate::stats::rng::Pcg64,
-    next_arrival: f64,
-    offered: u64,
-    rejected: u64,
-    queue_integral: f64,
-    last_t: f64,
+pub(crate) struct SharedPoisson {
+    pub(crate) lambda: f64,
+    pub(crate) rng: crate::stats::rng::Pcg64,
+    pub(crate) next_arrival: f64,
+    pub(crate) offered: u64,
+    pub(crate) rejected: u64,
+    pub(crate) queue_integral: f64,
+    pub(crate) last_t: f64,
 }
 
 impl SharedPoisson {
-    fn new(lambda: f64, seed: u64) -> Self {
+    pub(crate) fn new(lambda: f64, seed: u64) -> Self {
         let mut rng = crate::stats::rng::Pcg64::new(seed ^ 0xC1_057E_12);
         let first_gap = -rng.next_f64_open().ln() / lambda;
         Self {
@@ -275,34 +283,34 @@ impl SharedPoisson {
         }
     }
 
-    fn sample_gap(&mut self) -> f64 {
+    pub(crate) fn sample_gap(&mut self) -> f64 {
         -self.rng.next_f64_open().ln() / self.lambda
     }
 }
 
 /// One bundle's cluster-side state.
-struct Bundle {
-    index: usize,
-    seed: u64,
+pub(crate) struct Bundle {
+    pub(crate) index: usize,
+    pub(crate) seed: u64,
     /// Static shape of this bundle (r may be reconfigured by the
     /// autoscaler; `spec.r` is the *initial* fan-in).
-    spec: BundleSpec,
+    pub(crate) spec: BundleSpec,
     /// `None` only transiently while an epoch is being finalized.
-    sim: Option<Simulation>,
-    inbox: Option<Rc<RefCell<Inbox>>>,
+    pub(crate) sim: Option<Simulation>,
+    pub(crate) inbox: Option<Rc<RefCell<Inbox>>>,
     /// Global time at which the current epoch's local t = 0 sits.
-    base_time: f64,
-    epoch: usize,
-    produced: usize,
-    target: usize,
-    current_r: usize,
-    autoscaler: Option<Autoscaler>,
-    reconfigurations: Vec<Reconfiguration>,
-    last_metrics: Option<SimMetrics>,
-    last_arrival: Option<ArrivalStats>,
+    pub(crate) base_time: f64,
+    pub(crate) epoch: usize,
+    pub(crate) produced: usize,
+    pub(crate) target: usize,
+    pub(crate) current_r: usize,
+    pub(crate) autoscaler: Option<Autoscaler>,
+    pub(crate) reconfigurations: Vec<Reconfiguration>,
+    pub(crate) last_metrics: Option<SimMetrics>,
+    pub(crate) last_arrival: Option<ArrivalStats>,
     /// Accumulated completions in global time.
-    completions: Vec<Completion>,
-    done: bool,
+    pub(crate) completions: Vec<Completion>,
+    pub(crate) done: bool,
 }
 
 /// Output of one bundle over the whole cluster run.
@@ -366,10 +374,10 @@ pub struct ClusterSimulationBuilder {
     batches_in_flight: usize,
     warm_start: bool,
     completions_per_bundle: Option<usize>,
-    source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
+    source_factory: Option<SourceFactory>,
     cost: CostSpec,
     specs: Option<Vec<BundleSpec>>,
-    ingress: Option<crate::ingress::dispatcher::IngressHandle>,
+    ingress: Option<IngressHandle>,
 }
 
 impl ClusterSimulationBuilder {
@@ -440,25 +448,33 @@ impl ClusterSimulationBuilder {
     /// in flight when a bundle's epoch is rebuilt are journaled as
     /// dropped (the rebuild destroys their slots). Pure observation:
     /// routing, admission, and outputs are unchanged.
-    pub fn ingress(mut self, core: crate::ingress::dispatcher::IngressHandle) -> Self {
+    pub fn ingress(mut self, core: IngressHandle) -> Self {
         self.ingress = Some(core);
         self
     }
 
     /// Length-source factory, called once per (bundle, epoch) with the
     /// derived seed — how sweep scenarios plug their synthetic or
-    /// trace-replay sources into every bundle.
+    /// trace-replay sources into every bundle. `Send + Sync` so the
+    /// parallel fleet engine ([`Self::run_parallel`]) can share it
+    /// across shard workers.
     pub fn source_factory(
         mut self,
-        factory: impl Fn(u64) -> Box<dyn LengthSource> + 'static,
+        factory: impl Fn(u64) -> Box<dyn LengthSource> + Send + Sync + 'static,
     ) -> Self {
-        self.source_factory = Some(Box::new(factory));
+        self.source_factory = Some(Arc::new(factory));
         self
     }
 
-    /// Validate and assemble the cluster (builds every bundle's first
-    /// epoch).
-    pub fn build(self) -> Result<ClusterSimulation> {
+    /// Validate the builder and split it into the `Send` fleet
+    /// description the parallel engine ships to shard workers plus the
+    /// coordinator-side pieces (routing policy, the aggregate `r`
+    /// column, and the live ingress handle, which is deliberately *not*
+    /// `Send` — workers record [`IngressEvent`]s instead and the
+    /// coordinator replays them centrally).
+    pub(crate) fn into_fleet_parts(
+        self,
+    ) -> Result<(FleetSpec, Policy, usize, Option<IngressHandle>)> {
         let ClusterSimulationBuilder {
             cfg,
             r,
@@ -497,87 +513,403 @@ impl ClusterSimulationBuilder {
                 vec![spec; bundles]
             }
         };
-        let bundles = specs.len();
         arrival.validate()?;
         if let Some(a) = &autoscale {
             a.validate()?;
         }
-
-        let mut cluster = ClusterSimulation {
+        let mut targets = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let target = completions_per_bundle.unwrap_or(cfg.requests_per_instance * spec.r);
+            if target == 0 {
+                return Err(AfdError::config("per-bundle completion target must be >= 1"));
+            }
+            targets.push(target);
+        }
+        let fleet = FleetSpec {
             cfg,
-            r,
-            policy,
-            router: Router::new(policy),
+            specs,
+            targets,
             arrival,
             autoscale,
             batches_in_flight,
             warm_start,
             source_factory,
-            ingress,
-            shared: None,
-            bundles: Vec::with_capacity(bundles),
-            spread_sum: 0.0,
-            spread_samples: 0,
+            ingress_attached: ingress.is_some(),
         };
+        Ok((fleet, policy, r, ingress))
+    }
 
-        // The shared generator exists only when N > 1 routes a stream;
-        // a 1-bundle cluster hands the Poisson process straight to its
-        // bundle and stays byte-identical to the single-bundle session.
-        if let ClusterArrival::Open { lambda, .. } = cluster.arrival {
-            if bundles > 1 {
-                cluster.shared = Some(SharedPoisson::new(lambda, cluster.cfg.seed));
+    /// Validate and assemble the cluster (builds every bundle's first
+    /// epoch).
+    pub fn build(self) -> Result<ClusterSimulation> {
+        let (fleet, policy, r, ingress) = self.into_fleet_parts()?;
+        ClusterSimulation::from_parts(fleet, policy, r, ingress)
+    }
+
+    /// Run the fleet on `threads` shard workers with the deterministic
+    /// virtual-time merge — byte-identical output to
+    /// `self.build()?.run()?` at any thread count. `threads <= 1` (or a
+    /// fleet too small to shard) falls back to the serial engine.
+    pub fn run_parallel(self, threads: usize) -> Result<ClusterOutput> {
+        crate::sim::fleet::run_fleet(self, threads)
+    }
+}
+
+/// Everything a shard worker needs to build and advance its bundles:
+/// the validated, `Send + Sync` core of a [`ClusterSimulationBuilder`].
+/// Workers construct per-bundle [`Simulation`]s *in-thread* from this
+/// (the engines themselves are single-threaded `Rc`/`RefCell` machinery
+/// and never cross threads).
+#[derive(Clone)]
+pub(crate) struct FleetSpec {
+    pub(crate) cfg: ExperimentConfig,
+    pub(crate) specs: Vec<BundleSpec>,
+    /// Per-bundle completion targets (same order as `specs`).
+    pub(crate) targets: Vec<usize>,
+    pub(crate) arrival: ClusterArrival,
+    pub(crate) autoscale: Option<AutoscaleConfig>,
+    pub(crate) batches_in_flight: usize,
+    pub(crate) warm_start: bool,
+    pub(crate) source_factory: Option<SourceFactory>,
+    /// Whether a live ingress dispatcher is attached on the coordinator
+    /// side; workers then record [`IngressEvent`]s for central replay.
+    pub(crate) ingress_attached: bool,
+}
+
+/// How a bundle's epoch engines hook into ingress journaling:
+/// not at all, directly into the live dispatcher (serial engine), or
+/// into an event buffer a shard worker drains per step so the
+/// coordinator can replay the calls in merged global-event order —
+/// which is what keeps journal bytes independent of the thread count.
+pub(crate) enum IngressAttach<'a> {
+    Off,
+    Live(&'a IngressHandle),
+    Record(&'a IngressEventBuf),
+}
+
+/// The borrowed environment shared by every epoch build/finish call —
+/// one struct so the serial engine and the shard workers run the *same*
+/// functions over the same inputs (bitwise equality by construction,
+/// not by mirrored copies that can drift).
+pub(crate) struct EpochEnv<'a> {
+    pub(crate) cfg: &'a ExperimentConfig,
+    pub(crate) arrival: ClusterArrival,
+    pub(crate) autoscale: Option<&'a AutoscaleConfig>,
+    pub(crate) batches_in_flight: usize,
+    pub(crate) warm_start: bool,
+    pub(crate) source_factory: Option<&'a SourceFactory>,
+    pub(crate) ingress: IngressAttach<'a>,
+}
+
+/// Build one epoch's engine for `bundle` at its current fan-in.
+pub(crate) fn build_epoch_sim(env: &EpochEnv<'_>, bundle: &Bundle) -> Result<Simulation> {
+    let epoch_target = match env.autoscale {
+        Some(a) => a.epoch_completions.min(bundle.target - bundle.produced),
+        None => bundle.target,
+    }
+    .max(1);
+    let seed = epoch_seed(bundle.seed, bundle.epoch);
+    // Per-bundle shape: the bundle's own microbatch and cost model
+    // (identical to the shared config for homogeneous fleets, so the
+    // pre-heterogeneity byte-identity contract is untouched).
+    let cfg = env.cfg.with_batch(bundle.spec.batch).with_seed(seed);
+    let mut builder = Simulation::builder(&cfg, bundle.current_r)
+        .cost_spec(bundle.spec.cost)
+        .batches_in_flight(env.batches_in_flight)
+        .warm_start(env.warm_start)
+        .max_completions(Some(epoch_target));
+    if let Some(factory) = env.source_factory {
+        builder = builder.length_source(factory(seed));
+    }
+    match env.ingress {
+        IngressAttach::Off => {}
+        IngressAttach::Live(core) => {
+            builder = builder.ingress_tagged(core.clone(), bundle.index as u32, bundle.base_time);
+        }
+        IngressAttach::Record(buf) => {
+            builder =
+                builder.ingress_recorder(buf.clone(), bundle.index as u32, bundle.base_time);
+        }
+    }
+    if let ClusterArrival::Open { lambda, queue_capacity } = env.arrival {
+        match &bundle.inbox {
+            // Routed bundle: admissions come from the cluster inbox.
+            Some(inbox) => {
+                builder = builder.arrival(InboxArrival {
+                    inbox: inbox.clone(),
+                    offset: bundle.base_time,
+                });
+            }
+            // 1-bundle cluster: the Poisson stream feeds the bundle
+            // directly — byte-identical to `afd sim --arrival open`.
+            None => {
+                builder =
+                    builder.arrival(OpenLoopPoisson::new(lambda, queue_capacity, cfg.seed)?);
             }
         }
+    }
+    builder.build()
+}
 
-        for (i, &spec) in specs.iter().enumerate() {
-            let target =
-                completions_per_bundle.unwrap_or(cluster.cfg.requests_per_instance * spec.r);
-            if target == 0 {
-                return Err(AfdError::config("per-bundle completion target must be >= 1"));
-            }
-            let seed = bundle_seed(cluster.cfg.seed, i);
-            let inbox = match (&cluster.arrival, bundles) {
-                (ClusterArrival::Open { queue_capacity, .. }, n) if n > 1 => {
-                    Some(Rc::new(RefCell::new(Inbox {
-                        queue: VecDeque::new(),
-                        capacity: *queue_capacity,
-                        admitted: 0,
-                        wait_sum: 0.0,
-                    })))
+/// Construct bundle `index` of a fleet of `fleet_size` and build its
+/// first epoch.
+pub(crate) fn make_bundle(
+    env: &EpochEnv<'_>,
+    index: usize,
+    spec: BundleSpec,
+    target: usize,
+    fleet_size: usize,
+) -> Result<Bundle> {
+    let seed = bundle_seed(env.cfg.seed, index);
+    let inbox = match (env.arrival, fleet_size) {
+        (ClusterArrival::Open { queue_capacity, .. }, n) if n > 1 => {
+            Some(Rc::new(RefCell::new(Inbox {
+                queue: VecDeque::new(),
+                capacity: queue_capacity,
+                admitted: 0,
+                wait_sum: 0.0,
+            })))
+        }
+        _ => None,
+    };
+    let autoscaler = env.autoscale.map(|a| {
+        Autoscaler::new(env.cfg.hardware, spec.batch, spec.r, a.feasible.clone(), a.window)
+    });
+    let mut bundle = Bundle {
+        index,
+        seed,
+        spec,
+        sim: None,
+        inbox,
+        base_time: 0.0,
+        epoch: 0,
+        produced: 0,
+        target,
+        current_r: spec.r,
+        autoscaler,
+        reconfigurations: Vec::new(),
+        last_metrics: None,
+        last_arrival: None,
+        completions: Vec::with_capacity(target + 64),
+        done: false,
+    };
+    bundle.sim = Some(build_epoch_sim(env, &bundle)?);
+    Ok(bundle)
+}
+
+/// Finalize `bundle`'s epoch: harvest completions, feed the autoscaler,
+/// and rebuild at the (possibly new) fan-in unless the bundle reached
+/// its target. Returns the number of arrivals stranded in the bundle's
+/// inbox when it shut down (0 unless this epoch end finished the
+/// bundle); the caller charges them to the shared stream's rejected
+/// count — the coordinator-side state this function must not touch.
+pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Result<u64> {
+    let sim = bundle.sim.take().expect("epoch sim present");
+    let epoch_time = sim.last_finish();
+    let out = sim.finish();
+    bundle.produced += out.completions.len();
+    let base = bundle.base_time;
+    bundle.completions.extend(out.completions.iter().map(|c| Completion {
+        finish_time: base + c.finish_time,
+        admit_time: base + c.admit_time,
+        ..*c
+    }));
+    if let Some(autoscaler) = &mut bundle.autoscaler {
+        for c in &out.completions {
+            autoscaler.observe(RequestLengths::new(c.prefill, c.decode_len.max(1)));
+        }
+        if let Some(rec) = autoscaler.evaluate()? {
+            bundle.reconfigurations.push(rec);
+            bundle.current_r = rec.to_r;
+        }
+    }
+    bundle.last_metrics = Some(out.metrics);
+    bundle.last_arrival = Some(out.arrival);
+    bundle.base_time += epoch_time;
+    bundle.epoch += 1;
+
+    let mut stranded = 0u64;
+    if bundle.produced >= bundle.target {
+        bundle.done = true;
+        let bundle_ix = bundle.index as u32;
+        let shutdown_at = bundle.base_time;
+        // Shutdown is a terminal epoch end: the slot arrays are
+        // gone, so still-admitted in-flight requests can never
+        // complete. Journal them as dropped — exactly like a
+        // rebuild — so the durable table drains and the final
+        // inflight accounting is honest.
+        match env.ingress {
+            IngressAttach::Off => {}
+            IngressAttach::Live(core) => core.borrow_mut().on_epoch_end(bundle_ix, shutdown_at),
+            IngressAttach::Record(buf) => buf
+                .borrow_mut()
+                .push(IngressEvent::EpochEnd { bundle: bundle_ix, at: shutdown_at }),
+        }
+        // A finished bundle also stops consuming: whatever its
+        // inbox still holds can never be admitted. Count those
+        // arrivals as rejected (dropped at bundle shutdown) and
+        // clear the queue so it stops inflating the queue-length
+        // integral — conservation stays offered == admitted +
+        // rejected + still-queued-at-active-bundles — journaling
+        // each one so the journal's reject tally matches the
+        // arrival stats'.
+        if let Some(inbox) = &bundle.inbox {
+            let mut ib = inbox.borrow_mut();
+            stranded = ib.queue.len() as u64;
+            match env.ingress {
+                IngressAttach::Off => {}
+                IngressAttach::Live(core) => {
+                    let mut c = core.borrow_mut();
+                    for _ in 0..ib.queue.len() {
+                        c.on_reject(bundle_ix, shutdown_at);
+                    }
                 }
-                _ => None,
-            };
-            let autoscaler = cluster.autoscale.as_ref().map(|a| {
-                Autoscaler::new(
-                    cluster.cfg.hardware,
-                    spec.batch,
-                    spec.r,
-                    a.feasible.clone(),
-                    a.window,
-                )
-            });
-            let mut bundle = Bundle {
-                index: i,
-                seed,
-                spec,
-                sim: None,
-                inbox,
-                base_time: 0.0,
-                epoch: 0,
-                produced: 0,
-                target,
-                current_r: spec.r,
-                autoscaler,
-                reconfigurations: Vec::new(),
-                last_metrics: None,
-                last_arrival: None,
-                completions: Vec::with_capacity(target + 64),
-                done: false,
-            };
-            bundle.sim = Some(cluster.build_epoch_sim(&bundle)?);
-            cluster.bundles.push(bundle);
+                IngressAttach::Record(buf) => {
+                    let mut b = buf.borrow_mut();
+                    for _ in 0..ib.queue.len() {
+                        b.push(IngressEvent::Reject { bundle: bundle_ix, at: shutdown_at });
+                    }
+                }
+            }
+            ib.queue.clear();
         }
-        Ok(cluster)
+    } else {
+        // Drain semantics at the rebuild boundary: `Simulation::finish`
+        // above already harvested every *completed* request, but the
+        // rebuild below constructs fresh slot arrays, so any request
+        // admitted-but-unfinished in the old epoch is destroyed with
+        // its slot — it is neither carried over nor re-queued. Those
+        // in-flight requests are journaled as dropped here, *before*
+        // any next-epoch events, so the durable inflight table drains
+        // at every boundary (admitted == completed + dropped +
+        // live-inflight stays an invariant; the conservation unit test
+        // pins it). A graceful drain — running the old epoch until its
+        // slots empty before rebuilding — is the ROADMAP follow-up.
+        match env.ingress {
+            IngressAttach::Off => {}
+            IngressAttach::Live(core) => {
+                core.borrow_mut().on_epoch_end(bundle.index as u32, bundle.base_time)
+            }
+            IngressAttach::Record(buf) => buf.borrow_mut().push(IngressEvent::EpochEnd {
+                bundle: bundle.index as u32,
+                at: bundle.base_time,
+            }),
+        }
+        let next = build_epoch_sim(env, bundle)?;
+        bundle.sim = Some(next);
+    }
+    // Epoch boundaries are the fleet's durability points: flush and
+    // fsync the journal (and surface any poison) before stepping on.
+    match env.ingress {
+        IngressAttach::Off => {}
+        IngressAttach::Live(core) => {
+            core.borrow_mut().checkpoint()?;
+        }
+        IngressAttach::Record(buf) => buf.borrow_mut().push(IngressEvent::Checkpoint),
+    }
+    Ok(stranded)
+}
+
+/// Fold a finished [`Bundle`] into its output record.
+pub(crate) fn bundle_output(b: Bundle) -> BundleOutput {
+    BundleOutput {
+        bundle: b.index,
+        final_r: b.current_r,
+        batch: b.spec.batch,
+        cost: b.spec.cost,
+        metrics: b.last_metrics.expect("every bundle ran >= 1 epoch"),
+        arrival: b.last_arrival.expect("every bundle ran >= 1 epoch"),
+        completions: b.completions,
+        reconfigurations: b.reconfigurations,
+        total_time: b.base_time,
+    }
+}
+
+/// Assemble per-bundle outputs plus the coordinator-side accumulators
+/// into the final [`ClusterOutput`]. Shared by the serial engine's
+/// `finish`/`run` and the parallel fleet engine, so aggregate floats
+/// are computed by one code path regardless of how the fleet ran.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble_output(
+    policy: Policy,
+    r: usize,
+    default_batch: usize,
+    arrival: ClusterArrival,
+    shared: Option<SharedPoisson>,
+    spread_sum: f64,
+    spread_samples: u64,
+    bundle_outputs: Vec<BundleOutput>,
+) -> ClusterOutput {
+    let n = bundle_outputs.len();
+    let total_time = bundle_outputs.iter().map(|b| b.total_time).fold(0.0, f64::max);
+    // Aggregate semantics: rates/idle shares describe the final
+    // (converged) epoch per bundle; `completed` and `total_time`
+    // cover the whole run. Without autoscaling the two windows
+    // coincide, so a 1-bundle cluster's aggregate is the session's
+    // metrics verbatim (bit-for-bit — the byte-identity contract).
+    let aggregate = if n == 1 {
+        let mut m = bundle_outputs[0].metrics.clone();
+        m.completed = bundle_outputs[0].completions.len();
+        m.total_time = bundle_outputs[0].total_time;
+        m
+    } else {
+        let mean = |f: &dyn Fn(&SimMetrics) -> f64| {
+            bundle_outputs.iter().map(|b| f(&b.metrics)).sum::<f64>() / n as f64
+        };
+        SimMetrics {
+            r,
+            batch: default_batch,
+            throughput_per_instance: mean(&|m| m.throughput_per_instance),
+            delivered_throughput_per_instance: mean(&|m| {
+                m.delivered_throughput_per_instance
+            }),
+            tpot: mean(&|m| m.tpot),
+            idle_attention: mean(&|m| m.idle_attention),
+            idle_ffn: mean(&|m| m.idle_ffn),
+            total_time,
+            completed: bundle_outputs.iter().map(|b| b.completions.len()).sum(),
+            mean_barrier_load: mean(&|m| m.mean_barrier_load),
+            mean_worker_load: mean(&|m| m.mean_worker_load),
+        }
+    };
+
+    let arrival = match (arrival, shared) {
+        (ClusterArrival::Closed, _) => ArrivalStats::closed(),
+        // 1-bundle open cluster: the bundle ran the Poisson process
+        // itself; its stats are the cluster stats.
+        (ClusterArrival::Open { .. }, None) => bundle_outputs[0].arrival,
+        (ClusterArrival::Open { lambda, .. }, Some(shared)) => {
+            let admitted: u64 = bundle_outputs.iter().map(|b| b.arrival.admitted).sum();
+            let wait_sum: f64 = bundle_outputs
+                .iter()
+                .map(|b| b.arrival.mean_queue_wait * b.arrival.admitted as f64)
+                .sum();
+            ArrivalStats {
+                kind: "open-poisson",
+                lambda,
+                offered: shared.offered,
+                admitted,
+                rejected: shared.rejected,
+                mean_queue_wait: if admitted > 0 { wait_sum / admitted as f64 } else { 0.0 },
+                mean_queue_len: if total_time > 0.0 {
+                    shared.queue_integral / total_time
+                } else {
+                    0.0
+                },
+            }
+        }
+    };
+
+    ClusterOutput {
+        policy,
+        bundles: bundle_outputs,
+        aggregate,
+        arrival,
+        load_imbalance: if spread_samples > 0 {
+            spread_sum / spread_samples as f64
+        } else {
+            0.0
+        },
     }
 }
 
@@ -595,7 +927,7 @@ pub fn bundle_seed(base: u64, bundle: usize) -> u64 {
 /// Per-(bundle, epoch) seed: epoch 0 keeps the bundle seed; autoscaling
 /// epochs chain forward so rebuilt bundles never replay the same
 /// synthetic stream.
-fn epoch_seed(bundle_seed: u64, epoch: usize) -> u64 {
+pub(crate) fn epoch_seed(bundle_seed: u64, epoch: usize) -> u64 {
     if epoch == 0 {
         bundle_seed
     } else {
@@ -614,8 +946,8 @@ pub struct ClusterSimulation {
     autoscale: Option<AutoscaleConfig>,
     batches_in_flight: usize,
     warm_start: bool,
-    source_factory: Option<Box<dyn Fn(u64) -> Box<dyn LengthSource>>>,
-    ingress: Option<crate::ingress::dispatcher::IngressHandle>,
+    source_factory: Option<SourceFactory>,
+    ingress: Option<IngressHandle>,
     shared: Option<SharedPoisson>,
     bundles: Vec<Bundle>,
     spread_sum: f64,
@@ -645,48 +977,70 @@ impl ClusterSimulation {
         self.bundles.len()
     }
 
-    /// Build one epoch's engine for `bundle` at its current fan-in.
-    fn build_epoch_sim(&self, bundle: &Bundle) -> Result<Simulation> {
-        let epoch_target = match &self.autoscale {
-            Some(a) => a.epoch_completions.min(bundle.target - bundle.produced),
-            None => bundle.target,
-        }
-        .max(1);
-        let seed = epoch_seed(bundle.seed, bundle.epoch);
-        // Per-bundle shape: the bundle's own microbatch and cost model
-        // (identical to the shared config for homogeneous fleets, so the
-        // pre-heterogeneity byte-identity contract is untouched).
-        let cfg = self.cfg.with_batch(bundle.spec.batch).with_seed(seed);
-        let mut builder = Simulation::builder(&cfg, bundle.current_r)
-            .cost_spec(bundle.spec.cost)
-            .batches_in_flight(self.batches_in_flight)
-            .warm_start(self.warm_start)
-            .max_completions(Some(epoch_target));
-        if let Some(factory) = &self.source_factory {
-            builder = builder.length_source(factory(seed));
-        }
-        if let Some(core) = &self.ingress {
-            builder =
-                builder.ingress_tagged(core.clone(), bundle.index as u32, bundle.base_time);
-        }
-        if let ClusterArrival::Open { lambda, queue_capacity } = self.arrival {
-            match &bundle.inbox {
-                // Routed bundle: admissions come from the cluster inbox.
-                Some(inbox) => {
-                    builder = builder.arrival(InboxArrival {
-                        inbox: inbox.clone(),
-                        offset: bundle.base_time,
-                    });
-                }
-                // 1-bundle cluster: the Poisson stream feeds the bundle
-                // directly — byte-identical to `afd sim --arrival open`.
-                None => {
-                    builder =
-                        builder.arrival(OpenLoopPoisson::new(lambda, queue_capacity, cfg.seed)?);
-                }
+    /// Assemble a (validated) fleet description into the serial engine:
+    /// builds every bundle's first epoch with the ingress dispatcher —
+    /// if any — attached live.
+    pub(crate) fn from_parts(
+        fleet: FleetSpec,
+        policy: Policy,
+        r: usize,
+        ingress: Option<IngressHandle>,
+    ) -> Result<ClusterSimulation> {
+        let FleetSpec {
+            cfg,
+            specs,
+            targets,
+            arrival,
+            autoscale,
+            batches_in_flight,
+            warm_start,
+            source_factory,
+            ingress_attached: _,
+        } = fleet;
+        let n = specs.len();
+        let mut bundles = Vec::with_capacity(n);
+        {
+            let env = EpochEnv {
+                cfg: &cfg,
+                arrival,
+                autoscale: autoscale.as_ref(),
+                batches_in_flight,
+                warm_start,
+                source_factory: source_factory.as_ref(),
+                ingress: match &ingress {
+                    Some(core) => IngressAttach::Live(core),
+                    None => IngressAttach::Off,
+                },
+            };
+            for (i, &spec) in specs.iter().enumerate() {
+                bundles.push(make_bundle(&env, i, spec, targets[i], n)?);
             }
         }
-        builder.build()
+        // The shared generator exists only when N > 1 routes a stream;
+        // a 1-bundle cluster hands the Poisson process straight to its
+        // bundle and stays byte-identical to the single-bundle session.
+        let shared = match arrival {
+            ClusterArrival::Open { lambda, .. } if n > 1 => {
+                Some(SharedPoisson::new(lambda, cfg.seed))
+            }
+            _ => None,
+        };
+        Ok(ClusterSimulation {
+            cfg,
+            r,
+            policy,
+            router: Router::new(policy),
+            arrival,
+            autoscale,
+            batches_in_flight,
+            warm_start,
+            source_factory,
+            ingress,
+            shared,
+            bundles,
+            spread_sum: 0.0,
+            spread_samples: 0,
+        })
     }
 
     /// Generate and route shared arrivals up to global time `now`.
@@ -770,80 +1124,25 @@ impl ClusterSimulation {
     /// autoscaler, and rebuild at the (possibly new) fan-in unless the
     /// bundle reached its target.
     fn finish_epoch(&mut self, g: usize) -> Result<()> {
-        {
-            let bundle = &mut self.bundles[g];
-            let sim = bundle.sim.take().expect("epoch sim present");
-            let epoch_time = sim.last_finish();
-            let out = sim.finish();
-            bundle.produced += out.completions.len();
-            let base = bundle.base_time;
-            bundle.completions.extend(out.completions.iter().map(|c| Completion {
-                finish_time: base + c.finish_time,
-                admit_time: base + c.admit_time,
-                ..*c
-            }));
-            if let Some(autoscaler) = &mut bundle.autoscaler {
-                for c in &out.completions {
-                    autoscaler.observe(RequestLengths::new(c.prefill, c.decode_len.max(1)));
-                }
-                if let Some(rec) = autoscaler.evaluate()? {
-                    bundle.reconfigurations.push(rec);
-                    bundle.current_r = rec.to_r;
-                }
+        let env = EpochEnv {
+            cfg: &self.cfg,
+            arrival: self.arrival,
+            autoscale: self.autoscale.as_ref(),
+            batches_in_flight: self.batches_in_flight,
+            warm_start: self.warm_start,
+            source_factory: self.source_factory.as_ref(),
+            ingress: match &self.ingress {
+                Some(core) => IngressAttach::Live(core),
+                None => IngressAttach::Off,
+            },
+        };
+        let stranded = finish_epoch_impl(&env, &mut self.bundles[g])?;
+        // Arrivals stranded in a shut-down bundle's inbox are charged to
+        // the shared stream (the bundle side already journaled them).
+        if stranded > 0 {
+            if let Some(shared) = self.shared.as_mut() {
+                shared.rejected += stranded;
             }
-            bundle.last_metrics = Some(out.metrics);
-            bundle.last_arrival = Some(out.arrival);
-            bundle.base_time += epoch_time;
-            bundle.epoch += 1;
-        }
-        if self.bundles[g].produced >= self.bundles[g].target {
-            self.bundles[g].done = true;
-            let bundle_ix = self.bundles[g].index as u32;
-            let shutdown_at = self.bundles[g].base_time;
-            // Shutdown is a terminal epoch end: the slot arrays are
-            // gone, so still-admitted in-flight requests can never
-            // complete. Journal them as dropped — exactly like a
-            // rebuild — so the durable table drains and the final
-            // inflight accounting is honest.
-            if let Some(core) = &self.ingress {
-                core.borrow_mut().on_epoch_end(bundle_ix, shutdown_at);
-            }
-            // A finished bundle also stops consuming: whatever its
-            // inbox still holds can never be admitted. Count those
-            // arrivals as rejected (dropped at bundle shutdown) and
-            // clear the queue so it stops inflating the queue-length
-            // integral — conservation stays offered == admitted +
-            // rejected + still-queued-at-active-bundles — journaling
-            // each one so the journal's reject tally matches the
-            // arrival stats'.
-            if let (Some(shared), Some(inbox)) =
-                (self.shared.as_mut(), &self.bundles[g].inbox)
-            {
-                let mut ib = inbox.borrow_mut();
-                shared.rejected += ib.queue.len() as u64;
-                if let Some(core) = &self.ingress {
-                    let mut c = core.borrow_mut();
-                    for _ in 0..ib.queue.len() {
-                        c.on_reject(bundle_ix, shutdown_at);
-                    }
-                }
-                ib.queue.clear();
-            }
-        } else {
-            // The rebuild destroys the epoch's slot arrays, so requests
-            // still in flight can never complete: journal them as
-            // dropped at the boundary, *before* any next-epoch events.
-            if let Some(core) = &self.ingress {
-                core.borrow_mut()
-                    .on_epoch_end(self.bundles[g].index as u32, self.bundles[g].base_time);
-            }
-            let next = self.build_epoch_sim(&self.bundles[g])?;
-            self.bundles[g].sim = Some(next);
-        }
-        // Epoch boundaries are the fleet's durability points: flush and
-        // fsync the journal (and surface any poison) before stepping on.
-        if let Some(core) = &self.ingress {
-            core.borrow_mut().checkpoint()?;
         }
         Ok(())
     }
@@ -897,96 +1196,28 @@ impl ClusterSimulation {
     }
 
     fn assemble(self) -> ClusterOutput {
-        let n = self.bundles.len();
-        let shared = self.shared;
-        let bundle_outputs: Vec<BundleOutput> = self
-            .bundles
-            .into_iter()
-            .map(|b| BundleOutput {
-                bundle: b.index,
-                final_r: b.current_r,
-                batch: b.spec.batch,
-                cost: b.spec.cost,
-                metrics: b.last_metrics.expect("every bundle ran >= 1 epoch"),
-                arrival: b.last_arrival.expect("every bundle ran >= 1 epoch"),
-                completions: b.completions,
-                reconfigurations: b.reconfigurations,
-                total_time: b.base_time,
-            })
-            .collect();
-
-        let total_time =
-            bundle_outputs.iter().map(|b| b.total_time).fold(0.0, f64::max);
-        // Aggregate semantics: rates/idle shares describe the final
-        // (converged) epoch per bundle; `completed` and `total_time`
-        // cover the whole run. Without autoscaling the two windows
-        // coincide, so a 1-bundle cluster's aggregate is the session's
-        // metrics verbatim (bit-for-bit — the byte-identity contract).
-        let aggregate = if n == 1 {
-            let mut m = bundle_outputs[0].metrics.clone();
-            m.completed = bundle_outputs[0].completions.len();
-            m.total_time = bundle_outputs[0].total_time;
-            m
-        } else {
-            let mean = |f: &dyn Fn(&SimMetrics) -> f64| {
-                bundle_outputs.iter().map(|b| f(&b.metrics)).sum::<f64>() / n as f64
-            };
-            SimMetrics {
-                r: self.r,
-                batch: self.cfg.topology.batch_per_worker,
-                throughput_per_instance: mean(&|m| m.throughput_per_instance),
-                delivered_throughput_per_instance: mean(&|m| {
-                    m.delivered_throughput_per_instance
-                }),
-                tpot: mean(&|m| m.tpot),
-                idle_attention: mean(&|m| m.idle_attention),
-                idle_ffn: mean(&|m| m.idle_ffn),
-                total_time,
-                completed: bundle_outputs.iter().map(|b| b.completions.len()).sum(),
-                mean_barrier_load: mean(&|m| m.mean_barrier_load),
-                mean_worker_load: mean(&|m| m.mean_worker_load),
-            }
-        };
-
-        let arrival = match (self.arrival, shared) {
-            (ClusterArrival::Closed, _) => ArrivalStats::closed(),
-            // 1-bundle open cluster: the bundle ran the Poisson process
-            // itself; its stats are the cluster stats.
-            (ClusterArrival::Open { .. }, None) => bundle_outputs[0].arrival,
-            (ClusterArrival::Open { lambda, .. }, Some(shared)) => {
-                let admitted: u64 =
-                    bundle_outputs.iter().map(|b| b.arrival.admitted).sum();
-                let wait_sum: f64 = bundle_outputs
-                    .iter()
-                    .map(|b| b.arrival.mean_queue_wait * b.arrival.admitted as f64)
-                    .sum();
-                ArrivalStats {
-                    kind: "open-poisson",
-                    lambda,
-                    offered: shared.offered,
-                    admitted,
-                    rejected: shared.rejected,
-                    mean_queue_wait: if admitted > 0 { wait_sum / admitted as f64 } else { 0.0 },
-                    mean_queue_len: if total_time > 0.0 {
-                        shared.queue_integral / total_time
-                    } else {
-                        0.0
-                    },
-                }
-            }
-        };
-
-        ClusterOutput {
-            policy: self.policy,
-            bundles: bundle_outputs,
-            aggregate,
+        let ClusterSimulation {
+            cfg,
+            r,
+            policy,
             arrival,
-            load_imbalance: if self.spread_samples > 0 {
-                self.spread_sum / self.spread_samples as f64
-            } else {
-                0.0
-            },
-        }
+            shared,
+            bundles,
+            spread_sum,
+            spread_samples,
+            ..
+        } = self;
+        let bundle_outputs: Vec<BundleOutput> = bundles.into_iter().map(bundle_output).collect();
+        assemble_output(
+            policy,
+            r,
+            cfg.topology.batch_per_worker,
+            arrival,
+            shared,
+            spread_sum,
+            spread_samples,
+            bundle_outputs,
+        )
     }
 }
 
@@ -1289,6 +1520,44 @@ mod tests {
             .cost(CostSpec::Moe { hot_prob: 2.0, hot_factor: 2.0 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn epoch_rebuild_conserves_request_accounting() {
+        // Satellite of the drain-semantics contract documented at the
+        // rebuild site in `finish_epoch_impl`: every admitted request
+        // is eventually completed or journaled as dropped at an epoch
+        // boundary — none leak into the next epoch's fresh slot arrays,
+        // and the durable inflight table is empty once the bundle shuts
+        // down.
+        use crate::ingress::dispatcher::Ingress;
+        let cfg = small_cfg();
+        let core = Ingress::in_memory();
+        let out = ClusterSimulation::builder(&cfg, 2)
+            // feasible = {2} pins r: epochs rebuild without reconfiguring.
+            .autoscale(AutoscaleConfig {
+                feasible: vec![2],
+                window: 16,
+                epoch_completions: 40,
+            })
+            .completions_per_bundle(Some(120))
+            .ingress(core.clone())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.bundles[0].completions.len(), 120);
+        let s = core.borrow().stats();
+        // 3 epochs of 40: at least the first two boundaries rebuilt the
+        // slot arrays and dropped their in-flight requests.
+        assert!(s.dropped > 0, "{s:?}");
+        // Terminal epoch end drained the table completely.
+        assert_eq!(s.inflight, 0, "{s:?}");
+        // Counter conservation: admitted requests either completed or
+        // were dropped at a boundary; every harvested completion was an
+        // admitted or a pre-loaded slot.
+        assert_eq!(s.admitted, s.completed + s.dropped, "{s:?}");
+        assert_eq!(s.completed + s.preloaded, 120, "{s:?}");
     }
 
     #[test]

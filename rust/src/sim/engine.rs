@@ -56,6 +56,12 @@ pub struct SimOptions {
     /// that the renewal analysis assumes away; set false to study
     /// transients.
     pub warm_start: bool,
+    /// Shard each multi-bundle fleet cell across this many worker
+    /// threads ([`crate::sim::fleet::run_fleet`]; bitwise-identical
+    /// outputs at any value). Default 1 = serial per-cell engine —
+    /// sweeps usually parallelize *across* cells instead; raise this
+    /// for grids with few cells but large fleets.
+    pub fleet_threads: usize,
 }
 
 impl Default for SimOptions {
@@ -65,6 +71,7 @@ impl Default for SimOptions {
             max_completions: None,
             batches_in_flight: BATCHES_IN_FLIGHT,
             warm_start: true,
+            fleet_threads: 1,
         }
     }
 }

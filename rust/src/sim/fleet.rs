@@ -1,0 +1,686 @@
+//! Parallel fleet engine: bundles sharded across worker threads, merged
+//! in virtual time — **bitwise identical** to the serial
+//! [`crate::sim::cluster::ClusterSimulation`] at any thread count.
+//!
+//! The serial engine advances the fleet one lane-step at a time, always
+//! picking the bundle whose next event starts earliest in global time.
+//! That loop is embarrassingly sequential, yet almost all of its work is
+//! per-bundle: a bundle's own slot arrays, RNG streams, cost model, and
+//! epoch machinery never touch another bundle. The only cross-bundle
+//! couplings are
+//!
+//! 1. **shared-stream routing** (open fleets): each arrival is routed
+//!    over every bundle's load snapshot *at its arrival time*,
+//! 2. **the imbalance diagnostic**: `record_spread` samples all live
+//!    bundles' token loads *before every event*, and
+//! 3. **ingress journaling**: one dispatcher assigns cluster-unique
+//!    request ids in global event order.
+//!
+//! The parallel engine exploits exactly that split:
+//!
+//! * **Shard workers** ([`crate::util::pool::ShardPool`]) own disjoint
+//!   subsets of bundles (bundle `i` lives on worker `i mod T` for its
+//!   whole life — engines are single-threaded `Rc`/`RefCell` machinery
+//!   and never cross threads; they are *built* in-thread from the
+//!   `Send` [`FleetSpec`]). Between barriers each worker advances its
+//!   bundles independently through every event with pick time strictly
+//!   below a coordinator-chosen horizon, recording one POD
+//!   [`StepEvent`] per lane-step.
+//! * **Arrival-gap barriers** make routing exact, not approximate: the
+//!   window horizon never extends past the next *unrouted* shared
+//!   arrival, so no arrival ever lands inside a window. At each barrier
+//!   the coordinator computes `t_next` (the fleet-wide minimum next
+//!   event time) and routes every pending arrival `<= t_next` over the
+//!   workers' post-window load snapshots. Those snapshots equal the
+//!   serial engine's state at its routing point because no event exists
+//!   in between — the serial `drain_arrivals` would have routed against
+//!   the very same state, with the very same [`Router`] and
+//!   [`SharedPoisson`] RNG sequence.
+//! * **The virtual-time merge** replays cross-bundle bookkeeping in
+//!   serial event order: per-bundle event queues (already time-ordered)
+//!   are k-way merged by `(time, bundle index)` with ties to the lowest
+//!   bundle — the serial pick rule — and for each merged event the
+//!   coordinator replays the queue-length integral update, the spread
+//!   sample, and the bundle's recorded ingress events (through
+//!   [`crate::ingress::dispatcher::Ingress::apply_event`], so request
+//!   ids and journal bytes are assigned in an order independent of
+//!   worker interleaving). Every float operation on coordinator state
+//!   runs in the serial sequence; worker-side floats never depended on
+//!   other bundles in the first place.
+//!
+//! The window span between barriers adapts deterministically (halving
+//! when a window floods events, doubling when it starves) so closed
+//! fleets — which have no arrivals to gate on — stream large windows
+//! while bounding merge memory. The span only moves *where* barriers
+//! fall, never what is computed: the equality argument above holds for
+//! any window partition, which is also why thread count cannot change a
+//! single output bit. `tests/integration_fleet.rs` pins that contract
+//! across thread counts, routing policies, autoscaling, heterogeneous
+//! fleets, and attached ingress journals.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::coordinator::load::LoadSnapshot;
+use crate::coordinator::router::Router;
+use crate::error::{AfdError, Result};
+use crate::ingress::dispatcher::{IngressEvent, IngressEventBuf};
+use crate::sim::cluster::{
+    assemble_output, bundle_output, finish_epoch_impl, make_bundle, Bundle, BundleOutput,
+    ClusterArrival, ClusterOutput, ClusterSimulation, ClusterSimulationBuilder, EpochEnv,
+    FleetSpec, IngressAttach, SharedPoisson,
+};
+use crate::util::pool::ShardPool;
+
+/// Window-span adaptation bounds: halve above the flood mark, double
+/// below the starve mark. Deterministic, and irrelevant to outputs —
+/// the span only places barriers.
+const FLOOD_EVENTS: usize = 16_384;
+const STARVE_EVENTS: usize = 4_096;
+const INITIAL_SPAN: f64 = 1e-6;
+
+/// One lane-step (or epoch-finalizing lane-step) of one bundle, as the
+/// coordinator sees it: enough to replay every cross-bundle effect in
+/// merged order.
+struct StepEvent {
+    /// Global pick time (`base_time + next_ready` when the step was
+    /// chosen) — the serial engine's event key.
+    time: f64,
+    bundle: usize,
+    /// Bundle token load *after* the step (post-rebuild if the step
+    /// closed an epoch) — the spread replay's input for later events.
+    load_after: u64,
+    done_after: bool,
+    /// Bundle inbox length after the step (admissions pop, shutdown
+    /// clears) — the queue-integral replay's input.
+    queue_len_after: u32,
+    /// Arrivals stranded in the inbox if this step shut the bundle
+    /// down; charged to the shared stream's rejected count at replay.
+    stranded: u64,
+    /// Ingress events recorded during this step, in call order.
+    ingress: Vec<IngressEvent>,
+}
+
+/// Post-window view of one bundle: what the coordinator needs to pick
+/// `t_next` and to route arrivals.
+struct BundleStatus {
+    bundle: usize,
+    /// Global time of the bundle's next event; +inf once done.
+    next_time: f64,
+    done: bool,
+    /// Load snapshot of the bundle's engine (`queued` is overridden by
+    /// the coordinator's mirrored inbox length at routing time, exactly
+    /// like the serial `drain_arrivals`).
+    snapshot: LoadSnapshot,
+}
+
+enum FleetCmd {
+    /// Report initial statuses and build-time ingress preludes.
+    Hello,
+    /// Push routed arrivals into owned inboxes, then advance every
+    /// owned bundle through all events with pick time < `horizon`.
+    Advance { horizon: f64, pushes: Vec<(usize, f64)> },
+    /// Finalize owned bundles into outputs.
+    Finish,
+}
+
+enum FleetRep {
+    Hello {
+        statuses: Vec<BundleStatus>,
+        /// Per-bundle ingress events recorded while *building* the
+        /// first epoch (preload grants), replayed in bundle order
+        /// before any stepping — matching the serial build order.
+        preludes: Vec<(usize, Vec<IngressEvent>)>,
+    },
+    Window { events: Vec<StepEvent>, statuses: Vec<BundleStatus> },
+    Finished(Vec<BundleOutput>),
+    Error(String),
+}
+
+/// The borrowed epoch environment of a shard worker (recording ingress
+/// into its buffer instead of a live core).
+fn worker_env<'a>(fleet: &'a FleetSpec, buf: &'a Option<IngressEventBuf>) -> EpochEnv<'a> {
+    EpochEnv {
+        cfg: &fleet.cfg,
+        arrival: fleet.arrival,
+        autoscale: fleet.autoscale.as_ref(),
+        batches_in_flight: fleet.batches_in_flight,
+        warm_start: fleet.warm_start,
+        source_factory: fleet.source_factory.as_ref(),
+        ingress: match buf {
+            Some(buf) => IngressAttach::Record(buf),
+            None => IngressAttach::Off,
+        },
+    }
+}
+
+/// One shard worker's owned state: its bundles (with their non-`Send`
+/// engines, built in-thread) and its ingress recording buffer.
+struct WorkerState {
+    fleet: FleetSpec,
+    bundles: Vec<Bundle>,
+    buf: Option<IngressEventBuf>,
+    /// Build-time ingress events per bundle, handed over on `Hello`.
+    preludes: Option<Vec<(usize, Vec<IngressEvent>)>>,
+    /// A build or advance error; reported on the next command and
+    /// sticky thereafter.
+    err: Option<String>,
+}
+
+impl WorkerState {
+    fn build(w: usize, fleet: FleetSpec, threads: usize) -> Self {
+        let buf: Option<IngressEventBuf> = if fleet.ingress_attached {
+            Some(Rc::new(RefCell::new(Vec::new())))
+        } else {
+            None
+        };
+        let n = fleet.specs.len();
+        let mut bundles = Vec::new();
+        let mut preludes = Vec::new();
+        let mut err = None;
+        {
+            let env = worker_env(&fleet, &buf);
+            for i in (w..n).step_by(threads) {
+                match make_bundle(&env, i, fleet.specs[i], fleet.targets[i], n) {
+                    Ok(b) => {
+                        let pe = match &buf {
+                            Some(buf) => std::mem::take(&mut *buf.borrow_mut()),
+                            None => Vec::new(),
+                        };
+                        preludes.push((i, pe));
+                        bundles.push(b);
+                    }
+                    Err(e) => {
+                        err = Some(e.to_string());
+                        break;
+                    }
+                }
+            }
+        }
+        Self { fleet, bundles, buf, preludes: Some(preludes), err }
+    }
+
+    fn statuses(&self) -> Vec<BundleStatus> {
+        self.bundles
+            .iter()
+            .map(|b| BundleStatus {
+                bundle: b.index,
+                next_time: if b.done {
+                    f64::INFINITY
+                } else {
+                    b.base_time + b.sim.as_ref().expect("active bundle has a sim").next_ready()
+                },
+                done: b.done,
+                snapshot: if b.done {
+                    LoadSnapshot::default()
+                } else {
+                    LoadSnapshot::of(b.sim.as_ref().expect("active bundle has a sim"))
+                },
+            })
+            .collect()
+    }
+
+    /// Advance every owned bundle through all events with pick time
+    /// strictly below `horizon` — the same strict `<` as the serial
+    /// pick, so an event *at* the horizon waits for the next window.
+    fn advance(&mut self, horizon: f64, pushes: Vec<(usize, f64)>) -> Result<Vec<StepEvent>> {
+        for (ix, t) in pushes {
+            let b = self
+                .bundles
+                .iter_mut()
+                .find(|b| b.index == ix)
+                .ok_or_else(|| AfdError::config("arrival pushed to unowned bundle"))?;
+            b.inbox
+                .as_ref()
+                .ok_or_else(|| AfdError::config("arrival pushed to inbox-less bundle"))?
+                .borrow_mut()
+                .queue
+                .push_back(t);
+        }
+        let env = worker_env(&self.fleet, &self.buf);
+        let mut events = Vec::new();
+        for b in &mut self.bundles {
+            while !b.done {
+                let next =
+                    b.base_time + b.sim.as_ref().expect("active bundle has a sim").next_ready();
+                if !(next < horizon) {
+                    break;
+                }
+                let epoch_done = {
+                    let sim = b.sim.as_mut().expect("active bundle has a sim");
+                    sim.step();
+                    sim.is_done()
+                };
+                let stranded = if epoch_done { finish_epoch_impl(&env, b)? } else { 0 };
+                let ingress = match &self.buf {
+                    Some(buf) => std::mem::take(&mut *buf.borrow_mut()),
+                    None => Vec::new(),
+                };
+                events.push(StepEvent {
+                    time: next,
+                    bundle: b.index,
+                    load_after: b.sim.as_ref().map(|s| s.token_load()).unwrap_or(0),
+                    done_after: b.done,
+                    queue_len_after: b
+                        .inbox
+                        .as_ref()
+                        .map(|ib| ib.borrow().queue.len() as u32)
+                        .unwrap_or(0),
+                    stranded,
+                    ingress,
+                });
+            }
+        }
+        Ok(events)
+    }
+
+    fn handle(&mut self, cmd: FleetCmd) -> FleetRep {
+        if let Some(e) = &self.err {
+            return FleetRep::Error(e.clone());
+        }
+        match cmd {
+            FleetCmd::Hello => FleetRep::Hello {
+                statuses: self.statuses(),
+                preludes: self.preludes.take().unwrap_or_default(),
+            },
+            FleetCmd::Advance { horizon, pushes } => match self.advance(horizon, pushes) {
+                Ok(events) => FleetRep::Window { events, statuses: self.statuses() },
+                Err(e) => {
+                    self.err = Some(e.to_string());
+                    FleetRep::Error(e.to_string())
+                }
+            },
+            FleetCmd::Finish => {
+                let bundles = std::mem::take(&mut self.bundles);
+                FleetRep::Finished(bundles.into_iter().map(bundle_output).collect())
+            }
+        }
+    }
+}
+
+/// The coordinator's mirror of one bundle's routing-relevant state,
+/// maintained by applying merged events — always equal to what the
+/// serial engine would observe at the same point in event order.
+#[derive(Clone, Copy)]
+struct Mirror {
+    token_load: u64,
+    done: bool,
+    inbox_len: usize,
+    snapshot: LoadSnapshot,
+    next_time: f64,
+}
+
+/// Run the fleet described by `builder` on `threads` shard workers.
+/// Byte-identical to `builder.build()?.run()?`; falls back to exactly
+/// that serial path when `threads <= 1` or the fleet has fewer than two
+/// bundles.
+pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<ClusterOutput> {
+    let (fleet, policy, r, ingress) = builder.into_fleet_parts()?;
+    let n = fleet.specs.len();
+    let t = threads.min(n);
+    if t <= 1 || n < 2 {
+        return ClusterSimulation::from_parts(fleet, policy, r, ingress)?.run();
+    }
+
+    // Coordinator-side copies of what the workers consume.
+    let default_batch = fleet.cfg.topology.batch_per_worker;
+    let arrival = fleet.arrival;
+    let seed = fleet.cfg.seed;
+    let queue_capacity = match arrival {
+        ClusterArrival::Open { queue_capacity, .. } => queue_capacity,
+        ClusterArrival::Closed => 0,
+    };
+    // Same construction condition and RNG stream as the serial engine.
+    let mut shared = match arrival {
+        ClusterArrival::Open { lambda, .. } => Some(SharedPoisson::new(lambda, seed)),
+        ClusterArrival::Closed => None,
+    };
+    let mut router = Router::new(policy);
+    let mut spread_sum = 0.0f64;
+    let mut spread_samples = 0u64;
+
+    let worker_fleet = fleet.clone();
+    let pool: ShardPool<FleetCmd, FleetRep> = ShardPool::new(
+        t,
+        move |w| WorkerState::build(w, worker_fleet.clone(), t),
+        |_, state: &mut WorkerState, cmd| Some(state.handle(cmd)),
+    );
+    let recv = |pool: &ShardPool<FleetCmd, FleetRep>| -> Result<FleetRep> {
+        match pool.recv() {
+            Some((_, rep)) => Ok(rep),
+            None => Err(AfdError::config("fleet worker exited unexpectedly")),
+        }
+    };
+
+    // --- Hello: initial statuses + build-order ingress preludes ---
+    let mut mirror: Vec<Mirror> = vec![
+        Mirror {
+            token_load: 0,
+            done: false,
+            inbox_len: 0,
+            snapshot: LoadSnapshot::default(),
+            next_time: f64::INFINITY,
+        };
+        n
+    ];
+    let mut preludes: Vec<(usize, Vec<IngressEvent>)> = Vec::with_capacity(n);
+    for w in 0..t {
+        pool.send(w, FleetCmd::Hello);
+    }
+    for _ in 0..t {
+        match recv(&pool)? {
+            FleetRep::Hello { statuses, preludes: pe } => {
+                for s in statuses {
+                    let m = &mut mirror[s.bundle];
+                    m.token_load = s.snapshot.token_load;
+                    m.done = s.done;
+                    m.snapshot = s.snapshot;
+                    m.next_time = s.next_time;
+                }
+                preludes.extend(pe);
+            }
+            FleetRep::Error(e) => return Err(AfdError::config(e)),
+            _ => return Err(AfdError::config("fleet worker protocol violation")),
+        }
+    }
+    // Replay build-time ingress events in bundle order — the serial
+    // builder constructs (and preload-grants) bundles 0..n in order.
+    if let Some(core) = &ingress {
+        preludes.sort_by_key(|(b, _)| *b);
+        for (_, events) in &preludes {
+            for ev in events {
+                core.borrow_mut().apply_event(ev)?;
+            }
+        }
+    }
+
+    // --- Barrier loop ---
+    let mut span = INITIAL_SPAN;
+    let mut queues: Vec<VecDeque<StepEvent>> = (0..n).map(|_| VecDeque::new()).collect();
+    loop {
+        // Fleet-wide next event (the serial pick): strict `<` keeps
+        // ties on the lowest bundle index.
+        let mut t_next = f64::INFINITY;
+        for m in &mirror {
+            if !m.done && m.next_time < t_next {
+                t_next = m.next_time;
+            }
+        }
+        if t_next == f64::INFINITY {
+            break; // every bundle reached its target
+        }
+
+        // Route every pending shared arrival <= t_next — the exact
+        // serial `drain_arrivals` loop body over mirrored inbox lengths
+        // and post-window load snapshots (provably the serial engine's
+        // state at its routing point: no event exists in between).
+        let mut pushes: Vec<Vec<(usize, f64)>> = (0..t).map(|_| Vec::new()).collect();
+        if let Some(shared) = shared.as_mut() {
+            while shared.next_arrival <= t_next {
+                let ta = shared.next_arrival;
+                let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
+                shared.queue_integral += queued_total as f64 * (ta - shared.last_t);
+                shared.last_t = ta;
+                shared.offered += 1;
+                let active: Vec<usize> =
+                    (0..n).filter(|&i| !mirror[i].done).collect();
+                if active.is_empty() {
+                    shared.rejected += 1;
+                } else {
+                    let loads: Vec<LoadSnapshot> = active
+                        .iter()
+                        .map(|&i| LoadSnapshot {
+                            queued: mirror[i].inbox_len,
+                            ..mirror[i].snapshot
+                        })
+                        .collect();
+                    let dst = active[router.route(&loads)];
+                    if mirror[dst].inbox_len < queue_capacity {
+                        mirror[dst].inbox_len += 1;
+                        pushes[dst % t].push((dst, ta));
+                    } else {
+                        shared.rejected += 1;
+                    }
+                }
+                let gap = shared.sample_gap();
+                shared.next_arrival = ta + gap;
+            }
+        }
+
+        // The horizon never crosses the next unrouted arrival, so no
+        // arrival lands inside the window; it always clears t_next, so
+        // every window makes progress.
+        let mut horizon = t_next + span;
+        if let Some(shared) = &shared {
+            horizon = horizon.min(shared.next_arrival);
+        }
+        for (w, p) in pushes.into_iter().enumerate() {
+            pool.send(w, FleetCmd::Advance { horizon, pushes: p });
+        }
+        let mut window_events = 0usize;
+        for _ in 0..t {
+            match recv(&pool)? {
+                FleetRep::Window { events, statuses } => {
+                    window_events += events.len();
+                    for ev in events {
+                        queues[ev.bundle].push_back(ev);
+                    }
+                    for s in statuses {
+                        mirror[s.bundle].snapshot = s.snapshot;
+                        mirror[s.bundle].next_time = s.next_time;
+                    }
+                }
+                FleetRep::Error(e) => return Err(AfdError::config(e)),
+                _ => return Err(AfdError::config("fleet worker protocol violation")),
+            }
+        }
+
+        // K-way merge of per-bundle event queues in (time, bundle)
+        // order — the serial engine's event order — replaying the
+        // queue-length integral, the spread sample, and ingress.
+        loop {
+            let mut best: Option<(f64, usize)> = None;
+            for (b, q) in queues.iter().enumerate() {
+                if let Some(front) = q.front() {
+                    let better = match best {
+                        Some((bt, _)) => front.time < bt,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((front.time, b));
+                    }
+                }
+            }
+            let Some((_, b)) = best else { break };
+            let ev = queues[b].pop_front().expect("front checked above");
+
+            // (a) Serial `drain_arrivals(now)` called before this event
+            // found no arrival <= now (all were routed at the barrier),
+            // so only its final queue-integral update runs.
+            if let Some(shared) = shared.as_mut() {
+                let now = ev.time;
+                if shared.next_arrival > now && now > shared.last_t {
+                    let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
+                    shared.queue_integral += queued_total as f64 * (now - shared.last_t);
+                    shared.last_t = now;
+                }
+            }
+            // (b) Serial `record_spread` over pre-event loads.
+            if n >= 2 {
+                let loads: Vec<u64> = mirror
+                    .iter()
+                    .filter(|m| !m.done)
+                    .map(|m| m.token_load)
+                    .collect();
+                if loads.len() >= 2 {
+                    let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+                    if mean > 0.0 {
+                        let max = *loads.iter().max().expect("non-empty") as f64;
+                        spread_sum += max / mean - 1.0;
+                        spread_samples += 1;
+                    }
+                }
+            }
+            // (c) Apply the event: mirrored bundle state, stranded
+            // rejects, and the bundle's ingress calls in recorded order.
+            {
+                let m = &mut mirror[ev.bundle];
+                m.token_load = ev.load_after;
+                m.done = ev.done_after;
+                m.inbox_len = ev.queue_len_after as usize;
+            }
+            if ev.stranded > 0 {
+                if let Some(shared) = shared.as_mut() {
+                    shared.rejected += ev.stranded;
+                }
+            }
+            if let Some(core) = &ingress {
+                for ie in &ev.ingress {
+                    core.borrow_mut().apply_event(ie)?;
+                }
+            }
+        }
+
+        // Deterministic span adaptation: bound merge memory on flooded
+        // windows, stream longer ones when starved. Outputs don't
+        // depend on it (any window partition merges identically).
+        if window_events > FLOOD_EVENTS {
+            span *= 0.5;
+        } else if window_events < STARVE_EVENTS {
+            span = (span * 2.0).min(1e18);
+        }
+    }
+
+    // --- Finish: collect per-bundle outputs in index order ---
+    for w in 0..t {
+        pool.send(w, FleetCmd::Finish);
+    }
+    let mut outputs: Vec<Option<BundleOutput>> = (0..n).map(|_| None).collect();
+    for _ in 0..t {
+        match recv(&pool)? {
+            FleetRep::Finished(outs) => {
+                for o in outs {
+                    let slot = o.bundle;
+                    outputs[slot] = Some(o);
+                }
+            }
+            FleetRep::Error(e) => return Err(AfdError::config(e)),
+            _ => return Err(AfdError::config("fleet worker protocol violation")),
+        }
+    }
+    let bundle_outputs: Vec<BundleOutput> = outputs
+        .into_iter()
+        .map(|o| o.ok_or_else(|| AfdError::config("fleet worker dropped a bundle output")))
+        .collect::<Result<_>>()?;
+
+    Ok(assemble_output(
+        policy,
+        r,
+        default_batch,
+        arrival,
+        shared,
+        spread_sum,
+        spread_samples,
+        bundle_outputs,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::WorkloadSpec;
+    use crate::coordinator::router::Policy;
+    use crate::sim::cluster::AutoscaleConfig;
+    use crate::stats::distributions::LengthDist;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 16;
+        cfg.requests_per_instance = 150;
+        cfg.workload = WorkloadSpec::independent(
+            LengthDist::geometric_with_mean(20.0),
+            LengthDist::geometric_with_mean(50.0),
+        );
+        cfg
+    }
+
+    fn builder(cfg: &ExperimentConfig) -> ClusterSimulationBuilder {
+        ClusterSimulation::builder(cfg, 2)
+            .bundles(3)
+            .completions_per_bundle(Some(60))
+    }
+
+    fn assert_outputs_identical(a: &ClusterOutput, b: &ClusterOutput) {
+        assert_eq!(a.bundles.len(), b.bundles.len());
+        for (x, y) in a.bundles.iter().zip(&b.bundles) {
+            assert_eq!(x.completions, y.completions, "bundle {}", x.bundle);
+            assert_eq!(x.metrics.total_time.to_bits(), y.metrics.total_time.to_bits());
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.final_r, y.final_r);
+            assert_eq!(x.total_time.to_bits(), y.total_time.to_bits());
+        }
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.load_imbalance.to_bits(), b.load_imbalance.to_bits());
+        assert_eq!(
+            a.aggregate.delivered_throughput_per_instance.to_bits(),
+            b.aggregate.delivered_throughput_per_instance.to_bits()
+        );
+        assert_eq!(a.aggregate.completed, b.aggregate.completed);
+    }
+
+    #[test]
+    fn closed_fleet_parallel_matches_serial_bitwise() {
+        let cfg = small_cfg();
+        let serial = builder(&cfg).build().unwrap().run().unwrap();
+        for threads in [2, 3, 8] {
+            let parallel = run_fleet(builder(&cfg), threads).unwrap();
+            assert_outputs_identical(&serial, &parallel);
+        }
+    }
+
+    #[test]
+    fn open_fleet_parallel_matches_serial_bitwise() {
+        let cfg = small_cfg();
+        let mk = || {
+            builder(&cfg)
+                .policy(Policy::JoinShortestQueue)
+                .arrival(ClusterArrival::Open { lambda: 0.25, queue_capacity: 64 })
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        let parallel = run_fleet(mk(), 2).unwrap();
+        assert_outputs_identical(&serial, &parallel);
+    }
+
+    #[test]
+    fn autoscaled_fleet_parallel_matches_serial_bitwise() {
+        let cfg = small_cfg();
+        let mk = || {
+            builder(&cfg).autoscale(AutoscaleConfig {
+                feasible: vec![1, 2, 4],
+                window: 16,
+                epoch_completions: 25,
+            })
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        let parallel = run_fleet(mk(), 3).unwrap();
+        assert_outputs_identical(&serial, &parallel);
+    }
+
+    #[test]
+    fn single_bundle_or_single_thread_falls_back_to_serial() {
+        let cfg = small_cfg();
+        let one = ClusterSimulation::builder(&cfg, 2).completions_per_bundle(Some(40));
+        let serial =
+            ClusterSimulation::builder(&cfg, 2).completions_per_bundle(Some(40)).build()
+                .unwrap()
+                .run()
+                .unwrap();
+        let via_fleet = run_fleet(one, 8).unwrap();
+        assert_outputs_identical(&serial, &via_fleet);
+        let t1 = run_fleet(builder(&cfg), 1).unwrap();
+        let st = builder(&cfg).build().unwrap().run().unwrap();
+        assert_outputs_identical(&st, &t1);
+    }
+}

@@ -18,11 +18,16 @@
 //!   lockstep virtual time, one shared arrival stream split across
 //!   bundles by the coordinator's routing policies, and online
 //!   per-bundle autoscaling from observed completions.
+//! * [`fleet`] — the parallel fleet engine: bundles sharded across
+//!   worker threads between arrival-gap barriers, re-merged in virtual
+//!   time — bitwise identical to the serial cluster at any thread
+//!   count.
 //! * [`metrics`] — stable 80% throughput, TPOT, idle ratios (§5.2).
 
 pub mod batch;
 pub mod cluster;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod session;
 pub mod slots;
@@ -33,6 +38,7 @@ pub use cluster::{
     ClusterSimulation,
 };
 pub use engine::{simulate, simulate_coupled, sweep_ratios, SimOptions, SimOutput};
+pub use fleet::run_fleet;
 pub use metrics::SimMetrics;
 pub use session::{
     ArrivalProcess, ArrivalStats, ClosedLoopReplenish, LengthSource, LengthStream,

@@ -655,10 +655,29 @@ pub struct SimulationBuilder {
     warm_start: bool,
     max_completions: Option<usize>,
     record_steps: bool,
-    /// Optional ingress attachment: (dispatcher core, bundle tag,
-    /// global-time offset). `None` (the default) leaves the session
-    /// bit-for-bit identical to the pre-ingress engine.
-    ingress: Option<(crate::ingress::dispatcher::IngressHandle, u32, f64)>,
+    /// Optional ingress attachment: (wiring, bundle tag, global-time
+    /// offset). `None` (the default) leaves the session bit-for-bit
+    /// identical to the pre-ingress engine.
+    ingress: Option<(IngressWiring, u32, f64)>,
+}
+
+/// How a session's ingress wrappers reach the dispatcher: directly into
+/// the live core, or into an event buffer (the parallel fleet engine's
+/// shard workers record; the coordinator replays centrally so journal
+/// bytes are independent of worker interleaving). Both receive the same
+/// wrapper calls in the same order.
+enum IngressWiring {
+    Live(crate::ingress::dispatcher::IngressHandle),
+    Record(crate::ingress::dispatcher::IngressEventBuf),
+}
+
+impl IngressWiring {
+    fn sink(&self) -> Box<dyn crate::ingress::dispatcher::IngressSink> {
+        match self {
+            IngressWiring::Live(core) => Box::new(core.clone()),
+            IngressWiring::Record(buf) => Box::new(buf.clone()),
+        }
+    }
 }
 
 impl SimulationBuilder {
@@ -758,7 +777,23 @@ impl SimulationBuilder {
         bundle: u32,
         offset: f64,
     ) -> Self {
-        self.ingress = Some((core, bundle, offset));
+        self.ingress = Some((IngressWiring::Live(core), bundle, offset));
+        self
+    }
+
+    /// Recording variant of [`Self::ingress_tagged`]: the session's
+    /// wrappers push [`crate::ingress::dispatcher::IngressEvent`]s into
+    /// `buf` instead of calling a live core — how a fleet shard worker
+    /// journals without holding the (thread-local) dispatcher. The
+    /// coordinator drains the buffer per step and replays it through
+    /// [`crate::ingress::dispatcher::Ingress::apply_event`].
+    pub(crate) fn ingress_recorder(
+        mut self,
+        buf: crate::ingress::dispatcher::IngressEventBuf,
+        bundle: u32,
+        offset: f64,
+    ) -> Self {
+        self.ingress = Some((IngressWiring::Record(buf), bundle, offset));
         self
     }
 
@@ -841,25 +876,32 @@ impl SimulationBuilder {
         // admits/rejects, decisions pure pass-through) and append a
         // completion observer. `None` leaves both untouched.
         let (arrival, observers) = match ingress {
-            Some((core, bundle, offset)) => {
+            Some((wiring, bundle, offset)) => {
                 // Closed-loop initial fill / warm start: every slot of
                 // every lane starts occupied, so exactly m*r*b
                 // completions may legally miss the admit index. Grant
                 // them up front — any unmatched completion beyond the
                 // budget poisons the core instead of being silently
-                // miscounted as pre-loaded.
+                // miscounted as pre-loaded. Flows through the sink so a
+                // recording session journals the grant at the same
+                // position in its event stream as a live one.
                 if initial_fill {
-                    core.borrow_mut().grant_preload((m * r * b) as u64);
+                    wiring.sink().grant_preload((m * r * b) as u64);
                 }
                 let mut observers = observers;
-                observers.push(Box::new(crate::ingress::dispatcher::IngressObserver::new(
-                    core.clone(),
-                    bundle,
-                    offset,
-                )));
+                observers.push(Box::new(
+                    crate::ingress::dispatcher::IngressObserver::with_sink(
+                        wiring.sink(),
+                        bundle,
+                        offset,
+                    ),
+                ));
                 let wrapped: Box<dyn ArrivalProcess> = Box::new(
-                    crate::ingress::dispatcher::IngressArrival::new(
-                        core, arrival, bundle, offset,
+                    crate::ingress::dispatcher::IngressArrival::with_sink(
+                        wiring.sink(),
+                        arrival,
+                        bundle,
+                        offset,
                     ),
                 );
                 (wrapped, observers)
@@ -890,6 +932,9 @@ impl SimulationBuilder {
             observers,
             agg_token_load,
             agg_live,
+            scratch_load: vec![0.0; r],
+            scratch_live: vec![0; r],
+            scratch_att: vec![0.0; r],
         })
     }
 }
@@ -933,6 +978,12 @@ pub struct Simulation {
     agg_token_load: u64,
     /// Cached Σ occupied slots over every lane × worker.
     agg_live: usize,
+    /// Reused per-step scratch for the batched attention pricing pass
+    /// (one allocation at build, length `r`): worker token loads,
+    /// occupancies, and the priced latencies.
+    scratch_load: Vec<f64>,
+    scratch_live: Vec<usize>,
+    scratch_att: Vec<f64>,
 }
 
 impl Simulation {
@@ -1080,17 +1131,31 @@ impl Simulation {
         let tc_half = self.cost.comm(self.agg) / 2.0;
 
         // --- Attention phase (per-worker start, barrier end) ---
-        let mut att_barrier: f64 = 0.0;
-        let mut att_start_min = f64::INFINITY;
+        // Split into gather -> batch-price -> consume so the pricing
+        // runs as one chunked array pass (a single virtual call; for
+        // LinearCost a devirtualized, auto-vectorizable loop) instead
+        // of r dynamic dispatches per step. `attention_batch` is
+        // element-wise bitwise-identical to the scalar method, so the
+        // schedule is unchanged bit for bit.
         let mut max_load = 0u64;
         let mut sum_load = 0u64;
         for j in 0..r {
             let worker = &self.lanes[g].workers[j];
             let load = worker.token_load();
-            let live = worker.live();
             max_load = max_load.max(load);
             sum_load += load;
-            let t_a = self.cost.attention(load as f64, live);
+            self.scratch_load[j] = load as f64;
+            self.scratch_live[j] = worker.live();
+        }
+        self.cost.attention_batch(
+            &self.scratch_load[..r],
+            &self.scratch_live[..r],
+            &mut self.scratch_att[..r],
+        );
+        let mut att_barrier: f64 = 0.0;
+        let mut att_start_min = f64::INFINITY;
+        for j in 0..r {
+            let t_a = self.scratch_att[j];
             let start = self.worker_free[j].max(ready);
             if start > self.worker_free[j] {
                 for o in &mut self.observers {

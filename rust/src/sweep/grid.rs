@@ -475,11 +475,20 @@ fn run_cell(
             queue_capacity,
         });
     }
-    let out = builder
-        .build()
-        .expect("grid cells validated")
-        .run()
-        .expect("grid cells run without autoscaling errors");
+    // fleet_threads > 1 shards the cell's bundles across the parallel
+    // fleet engine — bitwise-identical output, so sweep artifacts don't
+    // depend on the knob.
+    let out = if opts.fleet_threads > 1 && fleet.bundles > 1 {
+        builder
+            .run_parallel(opts.fleet_threads)
+            .expect("grid cells run without autoscaling errors")
+    } else {
+        builder
+            .build()
+            .expect("grid cells validated")
+            .run()
+            .expect("grid cells run without autoscaling errors")
+    };
     let per_bundle = if out.bundles.len() > 1 {
         out.bundles
             .iter()

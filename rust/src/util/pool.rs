@@ -134,6 +134,94 @@ pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(items: &[T], threads: us
     out.into_iter().map(|x| x.expect("par_map slot filled")).collect()
 }
 
+/// A pool of long-lived *stateful* shard workers.
+///
+/// [`ThreadPool::map`] ships each item to whatever worker is free — fine
+/// for independent jobs, useless when each worker must *own* mutable,
+/// non-`Send` state across many rounds (the parallel fleet engine's
+/// bundles hold `Rc`/`RefCell` session internals that must never cross a
+/// thread). `ShardPool` fixes the ownership: each worker builds its own
+/// state **in-thread** via the `init` closure, and thereafter only plain
+/// `Send` command/reply values cross the channel. Worker `w` processes
+/// its commands strictly FIFO; the caller addresses workers by index, so
+/// work placement — and therefore any determinism contract layered on
+/// top — is entirely the caller's.
+pub struct ShardPool<C: Send + 'static, R: Send + 'static> {
+    senders: Vec<Sender<C>>,
+    replies: Receiver<(usize, R)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<C: Send + 'static, R: Send + 'static> ShardPool<C, R> {
+    /// Spawn `n` workers (n >= 1). Worker `w` first runs `init(w)` on
+    /// its own thread (the state may be non-`Send`), then serves
+    /// commands with `handle`; returning `Some(reply)` sends the reply
+    /// back tagged with the worker index, `None` stays silent.
+    pub fn new<S, I, F>(n: usize, init: I, handle: F) -> Self
+    where
+        S: 'static,
+        I: Fn(usize) -> S + Send + Sync + 'static,
+        F: Fn(usize, &mut S, C) -> Option<R> + Send + Sync + 'static,
+    {
+        assert!(n >= 1, "shard pool needs at least one worker");
+        let init = Arc::new(init);
+        let handle = Arc::new(handle);
+        let (reply_tx, replies) = channel::<(usize, R)>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx): (Sender<C>, Receiver<C>) = channel();
+            senders.push(tx);
+            let init = init.clone();
+            let handle = handle.clone();
+            let reply_tx = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("afd-shard-{w}"))
+                    .spawn(move || {
+                        let mut state = init(w);
+                        while let Ok(cmd) = rx.recv() {
+                            if let Some(reply) = handle(w, &mut state, cmd) {
+                                if reply_tx.send((w, reply)).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn shard worker"),
+            );
+        }
+        Self { senders, replies, handles }
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send one command to worker `worker` (FIFO per worker). A send to
+    /// a worker that already exited (reply channel gone) is dropped —
+    /// the caller will observe the missing reply via [`Self::recv`].
+    pub fn send(&self, worker: usize, cmd: C) {
+        let _ = self.senders[worker].send(cmd);
+    }
+
+    /// Block for the next reply from any worker; `None` once every
+    /// worker has exited.
+    pub fn recv(&self) -> Option<(usize, R)> {
+        self.replies.recv().ok()
+    }
+}
+
+impl<C: Send + 'static, R: Send + 'static> Drop for ShardPool<C, R> {
+    fn drop(&mut self) {
+        // Closing the command channels ends each worker's recv loop.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Reusable N-party synchronization barrier (condvar-based).
 ///
 /// Models the paper's synchronized Attention phase: all `r` workers must
@@ -264,6 +352,42 @@ mod tests {
         assert_eq!(par_map(&[1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
         let empty: Vec<i32> = vec![];
         assert!(par_map(&empty, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn shard_pool_workers_own_non_send_state_across_rounds() {
+        // Each worker owns an Rc<RefCell<..>> accumulator (non-Send) built
+        // in-thread; only plain integers cross the channel. State must
+        // persist across commands (FIFO per worker).
+        let pool: ShardPool<u64, u64> = ShardPool::new(
+            3,
+            |w| std::rc::Rc::new(std::cell::RefCell::new(w as u64 * 1000)),
+            |_, acc, add| {
+                *acc.borrow_mut() += add;
+                Some(*acc.borrow())
+            },
+        );
+        assert_eq!(pool.size(), 3);
+        for round in 1..=4u64 {
+            for w in 0..3 {
+                pool.send(w, round);
+            }
+            let mut got: Vec<(usize, u64)> = (0..3).map(|_| pool.recv().unwrap()).collect();
+            got.sort_unstable();
+            let sum: u64 = (1..=round).sum();
+            assert_eq!(got, (0..3).map(|w| (w, w as u64 * 1000 + sum)).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn shard_pool_silent_replies_and_shutdown() {
+        let pool: ShardPool<u64, u64> =
+            ShardPool::new(2, |_| 0u64, |_, s, x| if x == 0 { *s += 1; None } else { Some(*s + x) });
+        pool.send(0, 0); // silent
+        pool.send(0, 0); // silent
+        pool.send(0, 10);
+        assert_eq!(pool.recv(), Some((0, 12)));
+        drop(pool); // Drop joins workers; must not hang.
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Integration over the parallel fleet engine: the parallel == serial
+//! **bitwise** contract at cluster scale.
+//!
+//! 1. **Thread-count invariance**: a fleet run sharded over {1, 2, 3, 8}
+//!    workers produces completions, metrics, arrival statistics, and
+//!    imbalance diagnostics bit-identical to the serial engine — closed
+//!    loop, open loop under every routing policy, autoscaled, and
+//!    heterogeneous fleets.
+//! 2. **Artifact bytes**: the exported completions CSV and metrics JSON
+//!    of a parallel run are byte-identical to the serial run's.
+//! 3. **Ingress journal invariance**: with a journaled dispatcher
+//!    attached, the on-disk journal bytes are identical across thread
+//!    counts (the coordinator replays worker-recorded ingress events in
+//!    merged virtual-time order, so request ids never depend on worker
+//!    interleaving) — and a crash-recovered serial journal matches a
+//!    parallel run's journal byte for byte.
+//! 4. **Dispatcher counters**: MemStore-backed ingress stats agree
+//!    between serial and parallel runs at every thread count.
+
+use std::fs;
+use std::path::PathBuf;
+
+use afd::config::experiment::ExperimentConfig;
+use afd::config::workload::WorkloadSpec;
+use afd::coordinator::router::Policy;
+use afd::ingress::recovery::{run_fresh, run_recover, ArrivalSpec, RunSpec};
+use afd::ingress::store::JournalStore;
+use afd::ingress::Ingress;
+use afd::latency::cost::CostSpec;
+use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
+use afd::sim::cluster::{
+    AutoscaleConfig, BundleSpec, ClusterArrival, ClusterOutput, ClusterSimulation,
+    ClusterSimulationBuilder,
+};
+use afd::stats::distributions::LengthDist;
+
+const FSYNC: usize = 8;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("afd_fleet_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.topology.batch_per_worker = 16;
+    cfg.requests_per_instance = 150;
+    cfg.workload = WorkloadSpec::independent(
+        LengthDist::geometric_with_mean(20.0),
+        LengthDist::geometric_with_mean(50.0),
+    );
+    cfg
+}
+
+/// Bitwise output equality: every float compared by bit pattern, every
+/// completion record exactly, across bundles and aggregates.
+fn assert_identical(tag: &str, serial: &ClusterOutput, parallel: &ClusterOutput) {
+    assert_eq!(serial.bundles.len(), parallel.bundles.len(), "{tag}: fleet size");
+    for (s, p) in serial.bundles.iter().zip(&parallel.bundles) {
+        assert_eq!(s.bundle, p.bundle, "{tag}: bundle order");
+        assert_eq!(s.completions, p.completions, "{tag}: bundle {} completions", s.bundle);
+        assert_eq!(s.final_r, p.final_r, "{tag}: bundle {} final r", s.bundle);
+        assert_eq!(
+            s.metrics.total_time.to_bits(),
+            p.metrics.total_time.to_bits(),
+            "{tag}: bundle {} total_time",
+            s.bundle
+        );
+        assert_eq!(s.arrival, p.arrival, "{tag}: bundle {} arrival stats", s.bundle);
+        assert_eq!(
+            s.total_time.to_bits(),
+            p.total_time.to_bits(),
+            "{tag}: bundle {} global span",
+            s.bundle
+        );
+        // Exported artifacts, byte for byte.
+        assert_eq!(
+            completions_to_csv_string(&s.completions),
+            completions_to_csv_string(&p.completions),
+            "{tag}: bundle {} CSV bytes",
+            s.bundle
+        );
+    }
+    assert_eq!(serial.arrival, parallel.arrival, "{tag}: cluster arrival stats");
+    assert_eq!(
+        serial.load_imbalance.to_bits(),
+        parallel.load_imbalance.to_bits(),
+        "{tag}: load imbalance"
+    );
+    assert_eq!(
+        sim_metrics_to_json(&serial.aggregate).to_string_pretty(),
+        sim_metrics_to_json(&parallel.aggregate).to_string_pretty(),
+        "{tag}: aggregate metrics JSON bytes"
+    );
+}
+
+#[test]
+fn closed_fleet_bitwise_across_thread_counts() {
+    let cfg = small_cfg();
+    let mk = || {
+        ClusterSimulation::builder(&cfg, 2).bundles(5).completions_per_bundle(Some(80))
+    };
+    let serial = mk().build().unwrap().run().unwrap();
+    for threads in [1usize, 2, 3, 8] {
+        let parallel = mk().run_parallel(threads).unwrap();
+        assert_identical(&format!("closed t={threads}"), &serial, &parallel);
+    }
+}
+
+#[test]
+fn open_fleet_bitwise_for_every_policy() {
+    let cfg = small_cfg();
+    for policy in [
+        Policy::RoundRobin,
+        Policy::JoinShortestQueue,
+        Policy::LeastTokenLoad,
+        Policy::KvHeadroom,
+    ] {
+        let mk = || {
+            ClusterSimulation::builder(&cfg, 2)
+                .bundles(4)
+                .policy(policy)
+                .completions_per_bundle(Some(60))
+                .arrival(ClusterArrival::Open { lambda: 0.3, queue_capacity: 48 })
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        for threads in [2usize, 3, 8] {
+            let parallel = mk().run_parallel(threads).unwrap();
+            assert_identical(
+                &format!("open {} t={threads}", policy.name()),
+                &serial,
+                &parallel,
+            );
+        }
+    }
+}
+
+#[test]
+fn autoscaled_open_fleet_bitwise() {
+    let cfg = small_cfg();
+    let mk = || {
+        ClusterSimulation::builder(&cfg, 2)
+            .bundles(3)
+            .policy(Policy::JoinShortestQueue)
+            .completions_per_bundle(Some(120))
+            .arrival(ClusterArrival::Open { lambda: 0.3, queue_capacity: 64 })
+            .autoscale(AutoscaleConfig {
+                feasible: vec![1, 2, 4],
+                window: 16,
+                epoch_completions: 30,
+            })
+    };
+    let serial = mk().build().unwrap().run().unwrap();
+    for threads in [2usize, 3] {
+        let parallel = mk().run_parallel(threads).unwrap();
+        assert_identical(&format!("autoscale t={threads}"), &serial, &parallel);
+    }
+}
+
+#[test]
+fn heterogeneous_fleet_bitwise() {
+    let cfg = small_cfg();
+    let specs = vec![
+        BundleSpec::new(2, 16, CostSpec::Linear),
+        BundleSpec::new(4, 8, CostSpec::Roofline),
+        BundleSpec::new(1, 32, CostSpec::Linear),
+    ];
+    let mk = || {
+        ClusterSimulation::builder(&cfg, 2)
+            .bundle_specs(specs.clone())
+            .policy(Policy::LeastTokenLoad)
+            .completions_per_bundle(Some(60))
+            .arrival(ClusterArrival::Open { lambda: 0.25, queue_capacity: 32 })
+    };
+    let serial = mk().build().unwrap().run().unwrap();
+    for threads in [2usize, 3] {
+        let parallel = mk().run_parallel(threads).unwrap();
+        assert_identical(&format!("hetero t={threads}"), &serial, &parallel);
+    }
+}
+
+/// The journaled-cluster RunSpec shared by the ingress tests below —
+/// the same shape `ingress::recovery` executes serially.
+fn journal_spec() -> RunSpec {
+    RunSpec {
+        config_path: None,
+        seed: 20260808,
+        r: 2,
+        batch: 8,
+        requests: 40,
+        arrival: ArrivalSpec::Open { lambda: 0.2, queue: 32 },
+        bundles: 4,
+        policy: "jsq".into(),
+        cost: "linear".into(),
+        autoscale: None,
+    }
+}
+
+/// Build the cluster described by `journal_spec` (mirrors
+/// `ingress::recovery::execute_cluster`'s builder).
+fn journal_builder(spec: &RunSpec) -> ClusterSimulationBuilder {
+    let cfg = ExperimentConfig::default()
+        .with_seed(spec.seed)
+        .with_batch(spec.batch)
+        .with_requests(spec.requests);
+    let mut builder = ClusterSimulation::builder(&cfg, spec.r)
+        .bundles(spec.bundles)
+        .policy(Policy::parse(&spec.policy).unwrap())
+        .cost(CostSpec::parse(&spec.cost).unwrap());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
+    }
+    builder
+}
+
+/// Run the journaled fleet in parallel and return the final journal
+/// bytes (same header + final checkpoint as the serial recovery path).
+fn parallel_journal(spec: &RunSpec, threads: usize, tag: &str) -> (Vec<u8>, ClusterOutput) {
+    let dir = tmpdir(tag);
+    let out = {
+        let store = JournalStore::create(&dir, FSYNC).unwrap();
+        let core = Ingress::with_store(Box::new(store));
+        core.borrow_mut().put_header(spec.to_entries()).unwrap();
+        let out = journal_builder(spec).ingress(core.clone()).run_parallel(threads).unwrap();
+        core.borrow_mut().checkpoint().unwrap();
+        out
+    };
+    let bytes = fs::read(JournalStore::journal_path(&dir)).unwrap();
+    let _ = fs::remove_dir_all(&dir);
+    (bytes, out)
+}
+
+#[test]
+fn ingress_journal_bytes_invariant_across_thread_counts() {
+    let spec = journal_spec();
+
+    // Serial reference: the recovery subsystem's own journaled run.
+    let base = tmpdir("journal_serial");
+    let store = JournalStore::create(&base, FSYNC).unwrap();
+    let serial_artifacts = run_fresh(&spec, Box::new(store), None).unwrap().unwrap();
+    let serial_journal = fs::read(JournalStore::journal_path(&base)).unwrap();
+
+    for threads in [2usize, 3, 8] {
+        let (bytes, out) = parallel_journal(&spec, threads, &format!("journal_t{threads}"));
+        assert_eq!(
+            bytes, serial_journal,
+            "journal bytes diverged at {threads} threads"
+        );
+        // The parallel run's bundle-tagged CSV matches the serial
+        // artifact byte for byte (same format as execute_cluster).
+        let mut csv = String::from("bundle,finish_time,admit_time,decode_len\n");
+        for b in &out.bundles {
+            for c in &b.completions {
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    b.bundle, c.finish_time, c.admit_time, c.decode_len
+                ));
+            }
+        }
+        assert_eq!(
+            csv, serial_artifacts.completions_csv,
+            "completions CSV diverged at {threads} threads"
+        );
+    }
+
+    // Crash-recovery composes with the parallel contract: a serial run
+    // killed mid-flight and recovered ends with the same journal bytes
+    // as any parallel run.
+    let crash = tmpdir("journal_crash");
+    let store = JournalStore::create(&crash, FSYNC).unwrap();
+    assert!(run_fresh(&spec, Box::new(store), Some(200)).unwrap().is_none());
+    let recovered = run_recover(&crash, FSYNC, None).unwrap().unwrap();
+    assert_eq!(recovered.completions_csv, serial_artifacts.completions_csv);
+    assert_eq!(
+        fs::read(JournalStore::journal_path(&crash)).unwrap(),
+        serial_journal,
+        "recovered journal diverged from the serial reference"
+    );
+    let _ = fs::remove_dir_all(&crash);
+    let _ = fs::remove_dir_all(&base);
+}
+
+#[test]
+fn ingress_counters_agree_between_serial_and_parallel() {
+    let spec = journal_spec();
+    let serial_stats = {
+        let core = Ingress::in_memory();
+        let _ = journal_builder(&spec).ingress(core.clone()).build().unwrap().run().unwrap();
+        let mut c = core.borrow_mut();
+        c.checkpoint().unwrap();
+        c.stats()
+    };
+    assert!(serial_stats.admitted > 0, "journal spec admits requests");
+    assert_eq!(serial_stats.inflight, 0, "run drains in-flight requests");
+    for threads in [2usize, 3, 8] {
+        let parallel_stats = {
+            let core = Ingress::in_memory();
+            let _ = journal_builder(&spec).ingress(core.clone()).run_parallel(threads).unwrap();
+            let mut c = core.borrow_mut();
+            c.checkpoint().unwrap();
+            c.stats()
+        };
+        assert_eq!(
+            serial_stats, parallel_stats,
+            "ingress counters diverged at {threads} threads"
+        );
+    }
+}

@@ -14,6 +14,16 @@ sweep) additionally carry the fleet shape and must carry both keys::
 where ``threads`` 0 marks the serial cluster engine and >= 1 the
 parallel engine at that worker count.
 
+Dense open-loop fleet records (the window-batched arrival-routing
+sweep) additionally carry the stream rate and barrier counters, and a
+record carrying any of them must carry all of them plus the fleet keys::
+
+    {..., "lambda": num > 0, "barriers": int >= 0, "arrivals": int > 0}
+
+with ``barriers < arrivals`` — one barrier per arrival is the
+degenerate regime window batching exists to avoid, so a dense record
+violating it is a perf regression, not noise.
+
 CI validates the schema here and uploads the file as the perf-history
 artifact (``BENCH_*.json`` trajectory). Deliberately *not* validated:
 absolute timings — CI runners are noisy, so perf numbers inform but never
@@ -21,7 +31,12 @@ gate.
 
 Usage:
     python3 python/check_bench_json.py bench_out/hotpath.json
+    python3 python/check_bench_json.py --require-dense bench_out/hotpath.json
     python3 python/check_bench_json.py --selftest   # validator edge cases
+
+``--require-dense`` additionally fails if the file contains no dense
+open-loop record at all (CI uses it so the dense sweep cannot silently
+drop out of the bench binary).
 """
 
 from __future__ import annotations
@@ -42,10 +57,20 @@ FLEET = {
     "bundles": int,
     "threads": int,
 }
-NON_NEGATIVE = {"threads"}
+# Extra keys on dense open-loop fleet records; a record carrying any
+# must carry all of them plus the FLEET keys. "barriers" may be 0 only
+# in the vacuous sense (it never is on a real run with arrivals > 0,
+# since barriers < arrivals is checked separately and arrivals must be
+# positive — but the type gate alone should not invent a lower bound).
+DENSE = {
+    "lambda": (int, float),
+    "barriers": int,
+    "arrivals": int,
+}
+NON_NEGATIVE = {"threads", "barriers"}
 
 
-def validate(records: object) -> list[str]:
+def validate(records: object, require_dense: bool = False) -> list[str]:
     """Return a list of schema violations (empty == valid)."""
     errors: list[str] = []
     if not isinstance(records, list):
@@ -53,13 +78,20 @@ def validate(records: object) -> list[str]:
     if not records:
         errors.append("no bench records emitted (empty array)")
     names: set[str] = set()
+    dense_seen = 0
     for i, rec in enumerate(records):
         where = f"record[{i}]"
         if not isinstance(rec, dict):
             errors.append(f"{where}: must be an object, got {type(rec).__name__}")
             continue
-        is_fleet = any(key in rec for key in FLEET)
-        schema = {**REQUIRED, **FLEET} if is_fleet else REQUIRED
+        is_dense = any(key in rec for key in DENSE)
+        is_fleet = is_dense or any(key in rec for key in FLEET)
+        schema = dict(REQUIRED)
+        if is_fleet:
+            schema.update(FLEET)
+        if is_dense:
+            schema.update(DENSE)
+            dense_seen += 1
         for key, expected in schema.items():
             if key not in rec:
                 errors.append(f"{where}: missing key {key!r}")
@@ -83,6 +115,17 @@ def validate(records: object) -> list[str]:
         extra = set(rec) - set(schema)
         if extra:
             errors.append(f"{where}: unknown key(s) {sorted(extra)}")
+        if is_dense:
+            barriers, arrivals = rec.get("barriers"), rec.get("arrivals")
+            well_typed = all(
+                isinstance(v, int) and not isinstance(v, bool)
+                for v in (barriers, arrivals)
+            )
+            if well_typed and barriers >= arrivals:
+                errors.append(
+                    f"{where}: barriers ({barriers}) must be < arrivals "
+                    f"({arrivals}) — window batching did not engage"
+                )
         name = rec.get("bench")
         if isinstance(name, str):
             if not name:
@@ -90,6 +133,11 @@ def validate(records: object) -> list[str]:
             elif name in names:
                 errors.append(f"{where}.bench: duplicate name {name!r}")
             names.add(name)
+    if require_dense and not dense_seen:
+        errors.append(
+            "no dense open-loop fleet record found (--require-dense): the "
+            "window-batched sweep dropped out of the bench output"
+        )
     return errors
 
 
@@ -113,9 +161,32 @@ def selftest() -> int:
         "bundles": 64,
         "threads": 8,
     }
+    dense = {
+        "bench": "dense fleet parallel bundles=64 threads=8",
+        "iters": 5,
+        "ns_per_iter": 2.5e7,
+        "slot_steps_per_sec": 4.0e7,
+        "bundles": 64,
+        "threads": 8,
+        "lambda": 3.2,
+        "barriers": 120,
+        "arrivals": 1900,
+    }
     cases = [
         (ok, True, "well-formed record accepted"),
         ([fleet], True, "well-formed fleet record accepted"),
+        ([dense], True, "well-formed dense record accepted"),
+        ([{k: v for k, v in dense.items() if k != "arrivals"}], False,
+         "dense record missing arrivals rejected"),
+        ([{k: v for k, v in dense.items() if k != "bundles"}], False,
+         "dense record missing fleet keys rejected"),
+        ([{**dense, "barriers": 1900}], False,
+         "dense record with barriers == arrivals rejected"),
+        ([{**dense, "barriers": 5000}], False,
+         "dense record with barriers > arrivals rejected"),
+        ([{**dense, "barriers": 120.0}], False, "float barriers rejected"),
+        ([{**dense, "arrivals": 0}], False, "zero arrivals rejected"),
+        ([{**dense, "lambda": 0}], False, "non-positive lambda rejected"),
         ([{**fleet, "threads": 0}], True, "fleet serial row (threads 0) accepted"),
         ([{k: v for k, v in fleet.items() if k != "threads"}], False,
          "fleet record missing threads rejected"),
@@ -134,6 +205,12 @@ def selftest() -> int:
         ([{k: v for k, v in ok[0].items() if k != "bench"}], False,
          "missing key rejected"),
     ]
+    # require_dense: same validator, stricter presence rule.
+    dense_cases = [
+        ([dense], True, "--require-dense passes with a dense record"),
+        ([fleet], False, "--require-dense fails without a dense record"),
+        (ok, False, "--require-dense fails on plain records only"),
+    ]
     failures = 0
     for records, want_valid, label in cases:
         got_valid = not validate(records)
@@ -141,6 +218,13 @@ def selftest() -> int:
         if got_valid != want_valid:
             failures += 1
         print(f"check_bench_json selftest: {status} — {label}")
+    for records, want_valid, label in dense_cases:
+        got_valid = not validate(records, require_dense=True)
+        status = "ok" if got_valid == want_valid else "FAIL"
+        if got_valid != want_valid:
+            failures += 1
+        print(f"check_bench_json selftest: {status} — {label}")
+    cases += dense_cases
     if failures:
         print(f"check_bench_json selftest: {failures} case(s) failed", file=sys.stderr)
         return 1
@@ -149,19 +233,22 @@ def selftest() -> int:
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 2 or argv[1] in ("-h", "--help"):
+    args = argv[1:]
+    require_dense = "--require-dense" in args
+    args = [a for a in args if a != "--require-dense"]
+    if len(args) != 1 or args[0] in ("-h", "--help"):
         print(__doc__)
         return 2
-    if argv[1] == "--selftest":
+    if args[0] == "--selftest":
         return selftest()
-    path = argv[1]
+    path = args[0]
     try:
         with open(path) as f:
             records = json.load(f)
     except (OSError, json.JSONDecodeError) as exc:
         print(f"check_bench_json: cannot read {path}: {exc}", file=sys.stderr)
         return 1
-    errors = validate(records)
+    errors = validate(records, require_dense=require_dense)
     if errors:
         for e in errors:
             print(f"check_bench_json: {e}", file=sys.stderr)

@@ -11,9 +11,11 @@
 //!
 //! `--json <path>` additionally writes the simulator measurements as an
 //! array of `{bench, iters, ns_per_iter, slot_steps_per_sec}` records
-//! (fleet-scaling rows add `bundles` and `threads`) — the
-//! machine-readable perf trajectory CI uploads as an artifact
-//! (validated by `python/check_bench_json.py`).
+//! (fleet-scaling rows add `bundles` and `threads`; dense open-loop
+//! rows further add `lambda`, `barriers`, and `arrivals`, with
+//! `barriers < arrivals` enforced) — the machine-readable perf
+//! trajectory CI uploads as an artifact (validated by
+//! `python/check_bench_json.py`).
 
 use afd::bench_support::harness::{bench, bench_with_setup, BenchConfig, BenchResult};
 use afd::config::experiment::ExperimentConfig;
@@ -57,6 +59,36 @@ fn record_fleet(
             .set("slot_steps_per_sec", Json::Num(res.throughput(slot_steps)))
             .set("bundles", Json::Num(bundles as f64))
             .set("threads", Json::Num(threads as f64)),
+    );
+}
+
+/// One dense-lambda fleet record: the fleet record plus the open-loop
+/// rate and the run's barrier/arrival counters. `barriers < arrivals`
+/// is the structural proof that window batching engaged (one barrier
+/// per arrival is the degenerate serial-at-the-coordinator regime);
+/// `check_bench_json.py` rejects records where it fails.
+#[allow(clippy::too_many_arguments)]
+fn record_dense(
+    records: &mut Vec<Json>,
+    res: &BenchResult,
+    slot_steps: f64,
+    bundles: usize,
+    threads: usize,
+    lambda: f64,
+    barriers: u64,
+    arrivals: u64,
+) {
+    records.push(
+        Json::obj()
+            .set("bench", Json::Str(res.name.clone()))
+            .set("iters", Json::Num(res.iters as f64))
+            .set("ns_per_iter", Json::Num(res.mean_secs * 1e9))
+            .set("slot_steps_per_sec", Json::Num(res.throughput(slot_steps)))
+            .set("bundles", Json::Num(bundles as f64))
+            .set("threads", Json::Num(threads as f64))
+            .set("lambda", Json::Num(lambda))
+            .set("barriers", Json::Num(barriers as f64))
+            .set("arrivals", Json::Num(arrivals as f64)),
     );
 }
 
@@ -286,6 +318,110 @@ fn main() {
                      (8 threads vs serial engine)",
                     serial.mean_secs / at_max_threads
                 );
+            }
+        }
+    }
+
+    println!("\n== dense open-loop fleet (window-batched arrival routing) ==");
+    {
+        // The PR 9 perf case: an open-loop stream dense enough that
+        // per-arrival barriers would serialize the shard engine at the
+        // coordinator. Window batching routes many arrivals per barrier
+        // (the `barriers/arrivals` ratio printed below, and recorded per
+        // row, must stay < 1), so threads keep scaling. Outputs stay
+        // bitwise-identical to the serial engine at every thread count
+        // (pinned by tests/integration_fleet.rs); this section measures
+        // wall-clock and barrier cadence only. lambda grows with the
+        // fleet so every size runs at the same per-bundle pressure, and
+        // the queue capacity stays >= 2*r*batch so the inbox-sufficiency
+        // guard rarely trips.
+        use afd::coordinator::router::Policy;
+        use afd::sim::cluster::{ClusterArrival, ClusterSimulation, FleetCounters};
+        use std::cell::Cell;
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology.batch_per_worker = 32;
+        let r = 2;
+        let per_bundle = if fast { 8 } else { 30 };
+        let bundle_axis: &[usize] = if fast { &[64] } else { &[64, 512] };
+        let thread_axis: &[usize] = if fast { &[2, 8] } else { &[1, 2, 4, 8] };
+        for &bundles in bundle_axis {
+            let lambda = 0.05 * bundles as f64;
+            let slot_steps = (bundles * per_bundle) as f64 * 500.0;
+            let serial_cfg = cfg.clone();
+            let serial = bench(
+                &format!("dense fleet serial bundles={bundles}"),
+                cfg_fast,
+                || {
+                    ClusterSimulation::builder(&serial_cfg, r)
+                        .bundles(bundles)
+                        .policy(Policy::JoinShortestQueue)
+                        .arrival(ClusterArrival::Open { lambda, queue_capacity: 256 })
+                        .completions_per_bundle(Some(per_bundle))
+                        .build()
+                        .unwrap()
+                        .run()
+                        .unwrap()
+                        .aggregate
+                        .completed
+                },
+            );
+            println!(
+                "{}  -> {:.2}M slot-steps/sec",
+                serial.summary(),
+                serial.throughput(slot_steps) / 1e6
+            );
+            record_fleet(&mut records, &serial, slot_steps, bundles, 0);
+            for &t in thread_axis {
+                let par_cfg = cfg.clone();
+                let counters: Cell<Option<FleetCounters>> = Cell::new(None);
+                let res = bench(
+                    &format!("dense fleet parallel bundles={bundles} threads={t}"),
+                    cfg_fast,
+                    || {
+                        let out = ClusterSimulation::builder(&par_cfg, r)
+                            .bundles(bundles)
+                            .policy(Policy::JoinShortestQueue)
+                            .arrival(ClusterArrival::Open {
+                                lambda,
+                                queue_capacity: 256,
+                            })
+                            .completions_per_bundle(Some(per_bundle))
+                            .run_parallel(t)
+                            .unwrap();
+                        counters.set(out.fleet);
+                        out.aggregate.completed
+                    },
+                );
+                println!(
+                    "{}  -> {:.2}M slot-steps/sec",
+                    res.summary(),
+                    res.throughput(slot_steps) / 1e6
+                );
+                match counters.get() {
+                    Some(f) if f.arrivals > 0 => {
+                        println!(
+                            "  -> {} barriers / {} arrivals \
+                             ({:.3} barriers per arrival, {} shrinks)",
+                            f.barriers,
+                            f.arrivals,
+                            f.barriers as f64 / f.arrivals as f64,
+                            f.window_shrinks
+                        );
+                        record_dense(
+                            &mut records,
+                            &res,
+                            slot_steps,
+                            bundles,
+                            t,
+                            lambda,
+                            f.barriers,
+                            f.arrivals,
+                        );
+                    }
+                    // t == 1 falls back to the serial engine (no fleet
+                    // counters) — record the plain fleet row instead.
+                    _ => record_fleet(&mut records, &res, slot_steps, bundles, t),
+                }
             }
         }
     }

@@ -207,6 +207,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///                        deterministic virtual-time merge (default 1 =
 ///                        serial engine; output is bitwise identical at
 ///                        any thread count)
+///   --window-span X      initial barrier-window span (virtual-time
+///                        cycles) of the parallel fleet engine; adapts
+///                        from there (halve/double), bitwise-irrelevant
+///                        to outputs
 fn cmd_cluster(args: &Args) -> Result<()> {
     use afd::analysis::provisioning::r_star_g_on_grid;
     use afd::coordinator::router::Policy;
@@ -274,6 +278,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         });
     }
     let threads = args.get_usize("threads", 1)?;
+    if args.get("window-span").is_some() {
+        let span = args.get_f64("window-span", 0.0)?;
+        builder =
+            builder.window_tuning(afd::sim::fleet::WindowTuning::with_initial(span));
+    }
 
     match &hetero_specs {
         Some(specs) => {
@@ -352,6 +361,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!(
             "queues: mean wait {:.2} cycles, mean total length {:.2}",
             a.mean_queue_wait, a.mean_queue_len
+        );
+    }
+    if let Some(f) = &out.fleet {
+        let per_barrier = if f.barriers > 0 {
+            f.arrivals as f64 / f.barriers as f64
+        } else {
+            0.0
+        };
+        println!(
+            "fleet engine: {} barriers, {} arrivals ({:.2} arrivals/barrier), {} window shrinks",
+            f.barriers, f.arrivals, per_barrier, f.window_shrinks
+        );
+        println!(
+            "window span (cycles): min {:.3e}, max {:.3e}, final {:.3e}",
+            f.span_min, f.span_max, f.span_final
         );
     }
     for b in &out.bundles {
@@ -443,6 +467,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 ///   --fleet-threads N           shard each multi-bundle cell across N
 ///                               workers (parallel fleet engine; bitwise-
 ///                               identical outputs, default 1)
+///   --window-span X             initial fleet barrier-window span in
+///                               cycles (adaptive; outputs unchanged)
 ///   --serial                    run the serial reference instead
 ///   --cells                     also print the per-cell table
 ///   --csv PATH / --json PATH    write per-cell results
@@ -548,10 +574,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         grid.cell_count(),
         if args.has_flag("serial") { "serial reference".to_string() } else { format!("{} threads", if threads == 0 { afd::util::pool::default_threads(grid.cell_count()) } else { threads }) },
     );
-    let opts = SimOptions {
+    let mut opts = SimOptions {
         fleet_threads: args.get_usize("fleet-threads", 1)?,
         ..SimOptions::default()
     };
+    if args.get("window-span").is_some() {
+        let span = args.get_f64("window-span", 0.0)?;
+        opts.window = afd::sim::fleet::WindowTuning::with_initial(span);
+    }
     let res = if args.has_flag("serial") {
         run_grid_serial(&cfg, &grid, opts)?
     } else {

@@ -62,6 +62,7 @@ use crate::error::{AfdError, Result};
 use crate::ingress::dispatcher::{IngressEvent, IngressEventBuf, IngressHandle};
 use crate::latency::cost::CostSpec;
 use crate::sim::engine::BATCHES_IN_FLIGHT;
+use crate::sim::fleet::WindowTuning;
 use crate::sim::metrics::SimMetrics;
 use crate::sim::session::{
     ArrivalProcess, ArrivalStats, LengthSource, OpenLoopPoisson, Simulation,
@@ -266,6 +267,11 @@ pub(crate) struct SharedPoisson {
     pub(crate) rejected: u64,
     pub(crate) queue_integral: f64,
     pub(crate) last_t: f64,
+    /// Gaps pre-drawn by [`Self::pre_draw`], consumed FIFO by
+    /// [`Self::sample_gap`]. The RNG stream order is identical whether
+    /// gaps are drawn lazily or batched per window, so pre-drawing can
+    /// never change an output bit.
+    pub(crate) pending_gaps: VecDeque<f64>,
 }
 
 impl SharedPoisson {
@@ -280,11 +286,32 @@ impl SharedPoisson {
             rejected: 0,
             queue_integral: 0.0,
             last_t: 0.0,
+            pending_gaps: VecDeque::new(),
+        }
+    }
+
+    /// Materialize every exponential gap needed to cover arrivals up to
+    /// time `until` (exclusive of the first arrival strictly past it).
+    /// The parallel fleet engine calls this once per barrier window so
+    /// the whole batch of arrivals it routes is drawn from the RNG in
+    /// one pass. `until` must be finite.
+    pub(crate) fn pre_draw(&mut self, until: f64) {
+        let mut t = self.next_arrival;
+        for g in &self.pending_gaps {
+            t += *g;
+        }
+        while t <= until {
+            let gap = -self.rng.next_f64_open().ln() / self.lambda;
+            t += gap;
+            self.pending_gaps.push_back(gap);
         }
     }
 
     pub(crate) fn sample_gap(&mut self) -> f64 {
-        -self.rng.next_f64_open().ln() / self.lambda
+        match self.pending_gaps.pop_front() {
+            Some(gap) => gap,
+            None => -self.rng.next_f64_open().ln() / self.lambda,
+        }
     }
 }
 
@@ -339,6 +366,32 @@ pub struct BundleOutput {
     pub total_time: f64,
 }
 
+/// Coordinator-side counters of one parallel fleet run: how many
+/// barrier windows the run took, how many shared-stream arrivals were
+/// routed through them, and the adaptive span trajectory. Purely
+/// observational — none of these numbers feed back into the simulation
+/// (outputs are bitwise-identical at any thread count and any span),
+/// but `barriers < arrivals` is the structural proof that window
+/// batching engaged instead of degenerating to one barrier per arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetCounters {
+    /// Barrier rounds (coordinator/worker exchanges) over the run.
+    pub barriers: u64,
+    /// Shared-stream arrivals offered over the run (0 for closed
+    /// fleets, which route nothing).
+    pub arrivals: u64,
+    /// Windows cut short because a worker hit the admission horizon
+    /// with a provably insufficient inbox (the validate-or-shrink
+    /// path); each one halves the span.
+    pub window_shrinks: u64,
+    /// Smallest window span the adaptation ever settled on.
+    pub span_min: f64,
+    /// Largest window span the adaptation ever settled on.
+    pub span_max: f64,
+    /// Span in effect when the fleet finished.
+    pub span_final: f64,
+}
+
 /// Full cluster output.
 #[derive(Debug, Clone)]
 pub struct ClusterOutput {
@@ -354,6 +407,10 @@ pub struct ClusterOutput {
     /// `E[max_b T_b / mean_b T_b] - 1` sampled at every cluster step
     /// (0 for a single bundle).
     pub load_imbalance: f64,
+    /// Barrier/span accounting of the parallel fleet engine; `None`
+    /// when the run took the serial path. Never part of emitted
+    /// artifacts (CSV/JSON stay bitwise thread-count-independent).
+    pub fleet: Option<FleetCounters>,
 }
 
 impl ClusterOutput {
@@ -378,6 +435,7 @@ pub struct ClusterSimulationBuilder {
     cost: CostSpec,
     specs: Option<Vec<BundleSpec>>,
     ingress: Option<IngressHandle>,
+    window: WindowTuning,
 }
 
 impl ClusterSimulationBuilder {
@@ -453,6 +511,16 @@ impl ClusterSimulationBuilder {
         self
     }
 
+    /// Barrier-window span tunables for [`Self::run_parallel`]'s
+    /// adaptive window (initial/min/max span between fleet barriers).
+    /// Outputs are bitwise-independent of the tuning — the span only
+    /// moves *where* barriers fall, never what is computed — so this is
+    /// a pure throughput knob; see [`WindowTuning`].
+    pub fn window_tuning(mut self, window: WindowTuning) -> Self {
+        self.window = window;
+        self
+    }
+
     /// Length-source factory, called once per (bundle, epoch) with the
     /// derived seed — how sweep scenarios plug their synthetic or
     /// trace-replay sources into every bundle. `Send + Sync` so the
@@ -489,6 +557,7 @@ impl ClusterSimulationBuilder {
             cost,
             specs,
             ingress,
+            window,
         } = self;
         // Resolve the fleet shape: explicit heterogeneous specs, or a
         // homogeneous fleet of the builder's (r, config batch, cost).
@@ -517,6 +586,7 @@ impl ClusterSimulationBuilder {
         if let Some(a) = &autoscale {
             a.validate()?;
         }
+        window.validate()?;
         let mut targets = Vec::with_capacity(specs.len());
         for spec in &specs {
             let target = completions_per_bundle.unwrap_or(cfg.requests_per_instance * spec.r);
@@ -535,6 +605,7 @@ impl ClusterSimulationBuilder {
             warm_start,
             source_factory,
             ingress_attached: ingress.is_some(),
+            window,
         };
         Ok((fleet, policy, r, ingress))
     }
@@ -574,6 +645,9 @@ pub(crate) struct FleetSpec {
     /// Whether a live ingress dispatcher is attached on the coordinator
     /// side; workers then record [`IngressEvent`]s for central replay.
     pub(crate) ingress_attached: bool,
+    /// Barrier-window span tunables (coordinator-only; shard workers
+    /// carry but ignore them).
+    pub(crate) window: WindowTuning,
 }
 
 /// How a bundle's epoch engines hook into ingress journaling:
@@ -838,6 +912,7 @@ pub(crate) fn assemble_output(
     shared: Option<SharedPoisson>,
     spread_sum: f64,
     spread_samples: u64,
+    fleet: Option<FleetCounters>,
     bundle_outputs: Vec<BundleOutput>,
 ) -> ClusterOutput {
     let n = bundle_outputs.len();
@@ -910,6 +985,7 @@ pub(crate) fn assemble_output(
         } else {
             0.0
         },
+        fleet,
     }
 }
 
@@ -970,6 +1046,7 @@ impl ClusterSimulation {
             cost: CostSpec::Linear,
             specs: None,
             ingress: None,
+            window: WindowTuning::default(),
         }
     }
 
@@ -996,6 +1073,7 @@ impl ClusterSimulation {
             warm_start,
             source_factory,
             ingress_attached: _,
+            window: _,
         } = fleet;
         let n = specs.len();
         let mut bundles = Vec::with_capacity(n);
@@ -1216,6 +1294,7 @@ impl ClusterSimulation {
             shared,
             spread_sum,
             spread_samples,
+            None,
             bundle_outputs,
         )
     }

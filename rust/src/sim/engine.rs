@@ -62,6 +62,10 @@ pub struct SimOptions {
     /// sweeps usually parallelize *across* cells instead; raise this
     /// for grids with few cells but large fleets.
     pub fleet_threads: usize,
+    /// Barrier-window span tunables for the parallel fleet engine
+    /// ([`crate::sim::fleet::WindowTuning`]). Ignored by serial runs;
+    /// bitwise-irrelevant to outputs either way (a pure perf knob).
+    pub window: crate::sim::fleet::WindowTuning,
 }
 
 impl Default for SimOptions {
@@ -72,6 +76,7 @@ impl Default for SimOptions {
             batches_in_flight: BATCHES_IN_FLIGHT,
             warm_start: true,
             fleet_threads: 1,
+            window: crate::sim::fleet::WindowTuning::default(),
         }
     }
 }

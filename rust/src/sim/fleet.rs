@@ -26,37 +26,49 @@
 //!   bundles independently through every event with pick time strictly
 //!   below a coordinator-chosen horizon, recording one POD
 //!   [`StepEvent`] per lane-step.
-//! * **Arrival-gap barriers** make routing exact, not approximate: the
-//!   window horizon never extends past the next *unrouted* shared
-//!   arrival, so no arrival ever lands inside a window. At each barrier
-//!   the coordinator computes `t_next` (the fleet-wide minimum next
-//!   event time) and routes every pending arrival `<= t_next` over the
-//!   workers' post-window load snapshots. Those snapshots equal the
-//!   serial engine's state at its routing point because no event exists
-//!   in between — the serial `drain_arrivals` would have routed against
-//!   the very same state, with the very same [`Router`] and
-//!   [`SharedPoisson`] RNG sequence.
+//! * **Window-batched arrival routing** makes dense open-loop streams
+//!   scale: a barrier window spans *many* shared arrivals, not one. At
+//!   each barrier the coordinator computes `t_next` (the fleet-wide
+//!   minimum next event time), pre-draws the window's whole exponential
+//!   gap sequence from [`SharedPoisson`] in one RNG pass, and routes the
+//!   batch centrally *during the merge replay*: each arrival is priced
+//!   against mirror [`LoadSnapshot`]s advanced to that arrival's place
+//!   in the merged `(time, bundle)` event order — the exact state the
+//!   serial `drain_arrivals` would have routed against. Routed arrivals
+//!   are delivered to workers as per-bundle inbox schedules before the
+//!   next window runs.
+//! * **Validate-or-shrink** keeps the batch exact, not approximate: a
+//!   worker may step past the first *unrouted* arrival (the admission
+//!   horizon) only while its inbox provably holds every entry the step
+//!   could pop (a lane-step admits at most `2·r·B` requests, all from
+//!   the delivered FIFO prefix). Otherwise it stops *before* the unsafe
+//!   event and reports hungry; the coordinator halves the span and the
+//!   next window re-covers the remainder with more arrivals routed —
+//!   validation always happens before execution, so nothing is ever
+//!   rolled back and parallel == serial stays bitwise.
 //! * **The virtual-time merge** replays cross-bundle bookkeeping in
 //!   serial event order: per-bundle event queues (already time-ordered)
 //!   are k-way merged by `(time, bundle index)` with ties to the lowest
 //!   bundle — the serial pick rule — and for each merged event the
-//!   coordinator replays the queue-length integral update, the spread
-//!   sample, and the bundle's recorded ingress events (through
+//!   coordinator replays the serial `drain_arrivals` (routing + the
+//!   queue-length integral), the spread sample, and the bundle's
+//!   recorded ingress events (through
 //!   [`crate::ingress::dispatcher::Ingress::apply_event`], so request
 //!   ids and journal bytes are assigned in an order independent of
 //!   worker interleaving). Every float operation on coordinator state
 //!   runs in the serial sequence; worker-side floats never depended on
 //!   other bundles in the first place.
 //!
-//! The window span between barriers adapts deterministically (halving
-//! when a window floods events, doubling when it starves) so closed
-//! fleets — which have no arrivals to gate on — stream large windows
-//! while bounding merge memory. The span only moves *where* barriers
-//! fall, never what is computed: the equality argument above holds for
-//! any window partition, which is also why thread count cannot change a
-//! single output bit. `tests/integration_fleet.rs` pins that contract
-//! across thread counts, routing policies, autoscaling, heterogeneous
-//! fleets, and attached ingress journals.
+//! The window span between barriers adapts deterministically (see
+//! [`WindowTuning`]) and `--window-span` tunes its starting point. The
+//! span only moves *where* barriers fall, never what is computed: the
+//! equality argument above holds for any window partition, which is why
+//! neither the thread count nor the tuning can change a single output
+//! bit. `tests/integration_fleet.rs` pins that contract across thread
+//! counts, routing policies, autoscaling, heterogeneous fleets, dense
+//! open-loop streams, and attached ingress journals;
+//! [`FleetCounters`] (`barriers`, `arrivals`, `window_shrinks`, span
+//! trajectory) reports how the run was partitioned.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -69,16 +81,83 @@ use crate::ingress::dispatcher::{IngressEvent, IngressEventBuf};
 use crate::sim::cluster::{
     assemble_output, bundle_output, finish_epoch_impl, make_bundle, Bundle, BundleOutput,
     ClusterArrival, ClusterOutput, ClusterSimulation, ClusterSimulationBuilder, EpochEnv,
-    FleetSpec, IngressAttach, SharedPoisson,
+    FleetCounters, FleetSpec, IngressAttach, SharedPoisson,
 };
 use crate::util::pool::ShardPool;
 
-/// Window-span adaptation bounds: halve above the flood mark, double
-/// below the starve mark. Deterministic, and irrelevant to outputs —
-/// the span only places barriers.
+/// Window-span adaptation marks. The halve/double policy, in priority
+/// order, applied once per window:
+///
+/// 1. **hungry** (a worker stopped at the admission horizon with an
+///    insufficient inbox): halve the span and count a `window_shrink` —
+///    the window outran the routed-arrival supply;
+/// 2. **flooded** (more than [`FLOOD_EVENTS`] merged events): halve, to
+///    bound coordinator merge memory;
+/// 3. **starved** (fewer than [`STARVE_EVENTS`] merged events): double,
+///    to amortize barrier latency over more work.
+///
+/// The result is clamped to `[min_span, max_span]` of the run's
+/// [`WindowTuning`], so the span can never collapse to zero — and
+/// forward progress never depends on it anyway: the fleet-wide frontier
+/// event is always forced to execute (`force_t`), even when the span
+/// underflows f64 resolution at large virtual times. Deterministic, and
+/// irrelevant to outputs — the span only places barriers.
 const FLOOD_EVENTS: usize = 16_384;
 const STARVE_EVENTS: usize = 4_096;
-const INITIAL_SPAN: f64 = 1e-6;
+
+/// Tunables of the adaptive barrier-window span (virtual-time units).
+/// See the module doc and the policy note on [`FLOOD_EVENTS`]; the
+/// defaults serve dense and sparse streams alike because the span
+/// adapts from `initial_span` within `[min_span, max_span]`.
+///
+/// Outputs are **bitwise-independent** of every field — tuning trades
+/// barrier frequency (coordinator latency) against merge-buffer memory
+/// and wasted hungry stops, nothing else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowTuning {
+    /// Span of the first window.
+    pub initial_span: f64,
+    /// Lower clamp for the adaptation (must be > 0).
+    pub min_span: f64,
+    /// Upper clamp for the adaptation.
+    pub max_span: f64,
+}
+
+impl Default for WindowTuning {
+    fn default() -> Self {
+        Self { initial_span: 1e-6, min_span: 1e-12, max_span: 1e18 }
+    }
+}
+
+impl WindowTuning {
+    /// A tuning whose windows all start at `span` (bounds untouched
+    /// beyond keeping the invariant `min <= initial <= max`).
+    pub fn with_initial(span: f64) -> Self {
+        let d = Self::default();
+        Self {
+            initial_span: span,
+            min_span: d.min_span.min(span),
+            max_span: d.max_span.max(span),
+        }
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        let ok = self.min_span.is_finite()
+            && self.initial_span.is_finite()
+            && self.max_span.is_finite()
+            && self.min_span > 0.0
+            && self.min_span <= self.initial_span
+            && self.initial_span <= self.max_span;
+        if !ok {
+            return Err(AfdError::config(format!(
+                "window tuning must satisfy 0 < min_span <= initial_span <= max_span, \
+                 all finite; got min {} initial {} max {}",
+                self.min_span, self.initial_span, self.max_span
+            )));
+        }
+        Ok(())
+    }
+}
 
 /// One lane-step (or epoch-finalizing lane-step) of one bundle, as the
 /// coordinator sees it: enough to replay every cross-bundle effect in
@@ -88,52 +167,81 @@ struct StepEvent {
     /// chosen) — the serial engine's event key.
     time: f64,
     bundle: usize,
-    /// Bundle token load *after* the step (post-rebuild if the step
-    /// closed an epoch) — the spread replay's input for later events.
-    load_after: u64,
     done_after: bool,
-    /// Bundle inbox length after the step (admissions pop, shutdown
-    /// clears) — the queue-integral replay's input.
-    queue_len_after: u32,
-    /// Arrivals stranded in the inbox if this step shut the bundle
-    /// down; charged to the shared stream's rejected count at replay.
+    /// Inbox entries this step *admitted* (popped), excluding entries
+    /// cleared as stranded at a terminal epoch end — the mirror's
+    /// inbox-length delta.
+    inbox_pops: u32,
+    /// Arrivals the worker saw stranded in the inbox if this step shut
+    /// the bundle down. The coordinator's mirror may know of more (the
+    /// arrivals it routed but had not yet delivered); the replay
+    /// charges the mirror count and splices the difference into the
+    /// recorded ingress stream.
     stranded: u64,
+    /// Routing-relevant load snapshot *after* the step (post-rebuild if
+    /// the step closed an epoch; default once done) — what later
+    /// arrivals in the merge are priced against.
+    snapshot_after: LoadSnapshot,
     /// Ingress events recorded during this step, in call order.
     ingress: Vec<IngressEvent>,
 }
 
-/// Post-window view of one bundle: what the coordinator needs to pick
-/// `t_next` and to route arrivals.
-struct BundleStatus {
+/// Initial view of one bundle, reported once on `Hello`.
+struct BundleInit {
     bundle: usize,
-    /// Global time of the bundle's next event; +inf once done.
+    /// Global time of the bundle's first event; +inf if born done.
     next_time: f64,
-    done: bool,
-    /// Load snapshot of the bundle's engine (`queued` is overridden by
-    /// the coordinator's mirrored inbox length at routing time, exactly
-    /// like the serial `drain_arrivals`).
     snapshot: LoadSnapshot,
 }
 
+/// Post-window view of one bundle: where its frontier stands and
+/// whether the window stopped it hungry.
+struct BundleStatus {
+    bundle: usize,
+    /// Global time of the bundle's next *unexecuted* event; +inf once
+    /// done. Worker truth — used only to pick `t_next`, never to update
+    /// mirrors (those evolve exclusively through replayed events).
+    next_time: f64,
+    /// The bundle stopped at the admission horizon with an inbox too
+    /// short to guarantee the next step's pops — the coordinator halves
+    /// the span.
+    hungry: bool,
+}
+
 enum FleetCmd {
-    /// Report initial statuses and build-time ingress preludes.
+    /// Report initial bundle views and build-time ingress preludes.
     Hello,
     /// Push routed arrivals into owned inboxes, then advance every
-    /// owned bundle through all events with pick time < `horizon`.
-    Advance { horizon: f64, pushes: Vec<(usize, f64)> },
+    /// owned bundle through all events with pick time < `horizon` (or
+    /// <= `force_t` — the fleet frontier always runs), stopping before
+    /// any event at/past `admit_horizon` whose inbox can't guarantee
+    /// its pops. Scratch vectors travel with the command and return
+    /// with the reply, so steady-state windows allocate nothing.
+    Advance {
+        horizon: f64,
+        force_t: f64,
+        admit_horizon: f64,
+        pushes: Vec<(usize, f64)>,
+        events_scratch: Vec<StepEvent>,
+    },
     /// Finalize owned bundles into outputs.
     Finish,
 }
 
 enum FleetRep {
     Hello {
-        statuses: Vec<BundleStatus>,
+        inits: Vec<BundleInit>,
         /// Per-bundle ingress events recorded while *building* the
         /// first epoch (preload grants), replayed in bundle order
         /// before any stepping — matching the serial build order.
         preludes: Vec<(usize, Vec<IngressEvent>)>,
     },
-    Window { events: Vec<StepEvent>, statuses: Vec<BundleStatus> },
+    Window {
+        events: Vec<StepEvent>,
+        statuses: Vec<BundleStatus>,
+        /// The drained `pushes` buffer, returned for reuse.
+        pushes_scratch: Vec<(usize, f64)>,
+    },
     Finished(Vec<BundleOutput>),
     Error(String),
 }
@@ -201,17 +309,16 @@ impl WorkerState {
         Self { fleet, bundles, buf, preludes: Some(preludes), err }
     }
 
-    fn statuses(&self) -> Vec<BundleStatus> {
+    fn inits(&self) -> Vec<BundleInit> {
         self.bundles
             .iter()
-            .map(|b| BundleStatus {
+            .map(|b| BundleInit {
                 bundle: b.index,
                 next_time: if b.done {
                     f64::INFINITY
                 } else {
                     b.base_time + b.sim.as_ref().expect("active bundle has a sim").next_ready()
                 },
-                done: b.done,
                 snapshot: if b.done {
                     LoadSnapshot::default()
                 } else {
@@ -221,11 +328,19 @@ impl WorkerState {
             .collect()
     }
 
-    /// Advance every owned bundle through all events with pick time
-    /// strictly below `horizon` — the same strict `<` as the serial
-    /// pick, so an event *at* the horizon waits for the next window.
-    fn advance(&mut self, horizon: f64, pushes: Vec<(usize, f64)>) -> Result<Vec<StepEvent>> {
-        for (ix, t) in pushes {
+    /// Advance every owned bundle through the window (see
+    /// [`FleetCmd::Advance`]), appending one [`StepEvent`] per
+    /// lane-step to `events` and returning per-bundle frontier
+    /// statuses.
+    fn advance(
+        &mut self,
+        horizon: f64,
+        force_t: f64,
+        admit_horizon: f64,
+        pushes: &mut Vec<(usize, f64)>,
+        events: &mut Vec<StepEvent>,
+    ) -> Result<Vec<BundleStatus>> {
+        for (ix, t) in pushes.drain(..) {
             let b = self
                 .bundles
                 .iter_mut()
@@ -239,20 +354,50 @@ impl WorkerState {
                 .push_back(t);
         }
         let env = worker_env(&self.fleet, &self.buf);
-        let mut events = Vec::new();
+        let mut statuses = Vec::with_capacity(self.bundles.len());
         for b in &mut self.bundles {
+            let mut hungry = false;
             while !b.done {
-                let next =
-                    b.base_time + b.sim.as_ref().expect("active bundle has a sim").next_ready();
-                if !(next < horizon) {
+                let sim = b.sim.as_ref().expect("active bundle has a sim");
+                let next = b.base_time + sim.next_ready();
+                // Same strict `<` as the serial pick; `next <= force_t`
+                // additionally forces the fleet-wide frontier event so
+                // every window commits at least one step even when
+                // `span` underflows f64 resolution at the frontier
+                // (`t_next + span == t_next`).
+                if !(next < horizon || next <= force_t) {
                     break;
                 }
+                // Validate-or-shrink, the validation half: an event at
+                // or past the first unrouted arrival may touch inbox
+                // entries the coordinator has not routed yet. Running
+                // it is safe only when the inbox provably holds every
+                // entry the step could pop — a lane-step admits at most
+                // 2·r·B requests (<= r·B refills of freed slots plus
+                // <= r·B completion-triggered admissions), all taken
+                // from the delivered FIFO prefix. Forced events never
+                // trip this: everything <= force_t precedes the
+                // admission horizon by construction.
+                if next >= admit_horizon {
+                    let enough = match &b.inbox {
+                        Some(ib) => {
+                            ib.borrow().queue.len() >= 2 * sim.r() * sim.batch_per_worker()
+                        }
+                        None => true,
+                    };
+                    if !enough {
+                        hungry = true;
+                        break;
+                    }
+                }
+                let len_before = b.inbox.as_ref().map_or(0, |ib| ib.borrow().queue.len());
                 let epoch_done = {
                     let sim = b.sim.as_mut().expect("active bundle has a sim");
                     sim.step();
                     sim.is_done()
                 };
                 let stranded = if epoch_done { finish_epoch_impl(&env, b)? } else { 0 };
+                let len_after = b.inbox.as_ref().map_or(0, |ib| ib.borrow().queue.len());
                 let ingress = match &self.buf {
                     Some(buf) => std::mem::take(&mut *buf.borrow_mut()),
                     None => Vec::new(),
@@ -260,19 +405,27 @@ impl WorkerState {
                 events.push(StepEvent {
                     time: next,
                     bundle: b.index,
-                    load_after: b.sim.as_ref().map(|s| s.token_load()).unwrap_or(0),
                     done_after: b.done,
-                    queue_len_after: b
-                        .inbox
-                        .as_ref()
-                        .map(|ib| ib.borrow().queue.len() as u32)
-                        .unwrap_or(0),
+                    inbox_pops: (len_before - len_after - stranded as usize) as u32,
                     stranded,
+                    snapshot_after: match b.sim.as_ref() {
+                        Some(sim) => LoadSnapshot::of(sim),
+                        None => LoadSnapshot::default(),
+                    },
                     ingress,
                 });
             }
+            statuses.push(BundleStatus {
+                bundle: b.index,
+                next_time: if b.done {
+                    f64::INFINITY
+                } else {
+                    b.base_time + b.sim.as_ref().expect("active bundle has a sim").next_ready()
+                },
+                hungry,
+            });
         }
-        Ok(events)
+        Ok(statuses)
     }
 
     fn handle(&mut self, cmd: FleetCmd) -> FleetRep {
@@ -281,16 +434,27 @@ impl WorkerState {
         }
         match cmd {
             FleetCmd::Hello => FleetRep::Hello {
-                statuses: self.statuses(),
+                inits: self.inits(),
                 preludes: self.preludes.take().unwrap_or_default(),
             },
-            FleetCmd::Advance { horizon, pushes } => match self.advance(horizon, pushes) {
-                Ok(events) => FleetRep::Window { events, statuses: self.statuses() },
-                Err(e) => {
-                    self.err = Some(e.to_string());
-                    FleetRep::Error(e.to_string())
+            FleetCmd::Advance {
+                horizon,
+                force_t,
+                admit_horizon,
+                mut pushes,
+                events_scratch: mut events,
+            } => {
+                events.clear();
+                match self.advance(horizon, force_t, admit_horizon, &mut pushes, &mut events) {
+                    Ok(statuses) => {
+                        FleetRep::Window { events, statuses, pushes_scratch: pushes }
+                    }
+                    Err(e) => {
+                        self.err = Some(e.to_string());
+                        FleetRep::Error(e.to_string())
+                    }
                 }
-            },
+            }
             FleetCmd::Finish => {
                 let bundles = std::mem::take(&mut self.bundles);
                 FleetRep::Finished(bundles.into_iter().map(bundle_output).collect())
@@ -300,21 +464,82 @@ impl WorkerState {
 }
 
 /// The coordinator's mirror of one bundle's routing-relevant state,
-/// maintained by applying merged events — always equal to what the
-/// serial engine would observe at the same point in event order.
+/// maintained *exclusively* by applying merged events — always equal to
+/// what the serial engine would observe at the same point in event
+/// order (worker statuses never touch it: they are post-window truth,
+/// not mid-replay truth).
 #[derive(Clone, Copy)]
 struct Mirror {
-    token_load: u64,
     done: bool,
+    /// Serial-truth inbox length: routed arrivals increment it, replayed
+    /// pops decrement it, terminal shutdown zeroes it. May exceed the
+    /// worker's physical queue by the routed-but-undelivered tail.
     inbox_len: usize,
     snapshot: LoadSnapshot,
-    next_time: f64,
+}
+
+/// The serial `drain_arrivals` loop body over mirrored state: route
+/// every pending shared arrival `<= now` against the mirrors, then —
+/// iff `tail` — the trailing queue-integral update to `now` itself.
+///
+/// Barrier-time batch routing calls this with `tail = false` (the
+/// serial engine performs that trailing update inside the *frontier
+/// event's* own drain, which this engine replays at the next barrier —
+/// same single float op, same `queued_total`, because no event or
+/// arrival lands in between). Replay-time calls pass `tail = true`.
+#[allow(clippy::too_many_arguments)]
+fn drain_mirrored(
+    shared: &mut SharedPoisson,
+    mirror: &mut [Mirror],
+    router: &mut Router,
+    pending: &mut [Vec<(usize, f64)>],
+    active: &mut Vec<usize>,
+    loads: &mut Vec<LoadSnapshot>,
+    queue_capacity: usize,
+    threads: usize,
+    now: f64,
+    tail: bool,
+) {
+    loop {
+        let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
+        if shared.next_arrival > now {
+            if tail && now > shared.last_t {
+                shared.queue_integral += queued_total as f64 * (now - shared.last_t);
+                shared.last_t = now;
+            }
+            return;
+        }
+        let ta = shared.next_arrival;
+        shared.queue_integral += queued_total as f64 * (ta - shared.last_t);
+        shared.last_t = ta;
+        shared.offered += 1;
+        active.clear();
+        active.extend((0..mirror.len()).filter(|&i| !mirror[i].done));
+        if active.is_empty() {
+            shared.rejected += 1;
+        } else {
+            loads.clear();
+            loads.extend(active.iter().map(|&i| LoadSnapshot {
+                queued: mirror[i].inbox_len,
+                ..mirror[i].snapshot
+            }));
+            let dst = active[router.route(loads)];
+            if mirror[dst].inbox_len < queue_capacity {
+                mirror[dst].inbox_len += 1;
+                pending[dst % threads].push((dst, ta));
+            } else {
+                shared.rejected += 1;
+            }
+        }
+        let gap = shared.sample_gap();
+        shared.next_arrival = ta + gap;
+    }
 }
 
 /// Run the fleet described by `builder` on `threads` shard workers.
 /// Byte-identical to `builder.build()?.run()?`; falls back to exactly
 /// that serial path when `threads <= 1` or the fleet has fewer than two
-/// bundles.
+/// bundles (the output then carries no [`FleetCounters`]).
 pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<ClusterOutput> {
     let (fleet, policy, r, ingress) = builder.into_fleet_parts()?;
     let n = fleet.specs.len();
@@ -324,6 +549,7 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
     }
 
     // Coordinator-side copies of what the workers consume.
+    let tuning = fleet.window;
     let default_batch = fleet.cfg.topology.batch_per_worker;
     let arrival = fleet.arrival;
     let seed = fleet.cfg.seed;
@@ -346,42 +572,30 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
         move |w| WorkerState::build(w, worker_fleet.clone(), t),
         |_, state: &mut WorkerState, cmd| Some(state.handle(cmd)),
     );
-    let recv = |pool: &ShardPool<FleetCmd, FleetRep>| -> Result<FleetRep> {
-        match pool.recv() {
-            Some((_, rep)) => Ok(rep),
-            None => Err(AfdError::config("fleet worker exited unexpectedly")),
-        }
-    };
 
-    // --- Hello: initial statuses + build-order ingress preludes ---
-    let mut mirror: Vec<Mirror> = vec![
-        Mirror {
-            token_load: 0,
-            done: false,
-            inbox_len: 0,
-            snapshot: LoadSnapshot::default(),
-            next_time: f64::INFINITY,
-        };
-        n
-    ];
+    // --- Hello: initial bundle views + build-order ingress preludes ---
+    let mut mirror: Vec<Mirror> =
+        vec![Mirror { done: false, inbox_len: 0, snapshot: LoadSnapshot::default() }; n];
+    // Worker-truth next unexecuted event time per bundle; feeds only the
+    // `t_next` pick (mirrors evolve through replayed events alone).
+    let mut frontier: Vec<f64> = vec![f64::INFINITY; n];
     let mut preludes: Vec<(usize, Vec<IngressEvent>)> = Vec::with_capacity(n);
     for w in 0..t {
         pool.send(w, FleetCmd::Hello);
     }
     for _ in 0..t {
-        match recv(&pool)? {
-            FleetRep::Hello { statuses, preludes: pe } => {
-                for s in statuses {
-                    let m = &mut mirror[s.bundle];
-                    m.token_load = s.snapshot.token_load;
-                    m.done = s.done;
-                    m.snapshot = s.snapshot;
-                    m.next_time = s.next_time;
+        match pool.recv() {
+            Some((_, FleetRep::Hello { inits, preludes: pe })) => {
+                for s in inits {
+                    mirror[s.bundle].snapshot = s.snapshot;
+                    mirror[s.bundle].done = s.next_time == f64::INFINITY;
+                    frontier[s.bundle] = s.next_time;
                 }
                 preludes.extend(pe);
             }
-            FleetRep::Error(e) => return Err(AfdError::config(e)),
-            _ => return Err(AfdError::config("fleet worker protocol violation")),
+            Some((_, FleetRep::Error(e))) => return Err(AfdError::config(e)),
+            Some(_) => return Err(AfdError::config("fleet worker protocol violation")),
+            None => return Err(AfdError::config("fleet worker exited unexpectedly")),
         }
     }
     // Replay build-time ingress events in bundle order — the serial
@@ -396,89 +610,49 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
     }
 
     // --- Barrier loop ---
-    let mut span = INITIAL_SPAN;
+    let mut span = tuning.initial_span;
+    let mut counters = FleetCounters {
+        barriers: 0,
+        arrivals: 0,
+        window_shrinks: 0,
+        span_min: span,
+        span_max: span,
+        span_final: span,
+    };
     let mut queues: Vec<VecDeque<StepEvent>> = (0..n).map(|_| VecDeque::new()).collect();
+    // Recycled per-window scratch: inbox schedules (per worker), event
+    // logs (round-tripped through the Advance/Window protocol), and the
+    // routing/spread working vectors — steady-state windows allocate
+    // nothing on the merge path.
+    let mut pending_pushes: Vec<Vec<(usize, f64)>> = (0..t).map(|_| Vec::new()).collect();
+    let mut event_scratch: Vec<Vec<StepEvent>> = (0..t).map(|_| Vec::new()).collect();
+    let mut route_active: Vec<usize> = Vec::with_capacity(n);
+    let mut route_loads: Vec<LoadSnapshot> = Vec::with_capacity(n);
+    let mut spread_loads: Vec<u64> = Vec::with_capacity(n);
     loop {
-        // Fleet-wide next event (the serial pick): strict `<` keeps
-        // ties on the lowest bundle index.
+        // Fleet-wide frontier (the serial pick): strict `<` keeps ties
+        // on the lowest bundle index.
         let mut t_next = f64::INFINITY;
-        for m in &mirror {
-            if !m.done && m.next_time < t_next {
-                t_next = m.next_time;
+        let mut b_min = n;
+        for (b, &ft) in frontier.iter().enumerate() {
+            if ft < t_next {
+                t_next = ft;
+                b_min = b;
             }
         }
-        if t_next == f64::INFINITY {
-            break; // every bundle reached its target
-        }
-
-        // Route every pending shared arrival <= t_next — the exact
-        // serial `drain_arrivals` loop body over mirrored inbox lengths
-        // and post-window load snapshots (provably the serial engine's
-        // state at its routing point: no event exists in between).
-        let mut pushes: Vec<Vec<(usize, f64)>> = (0..t).map(|_| Vec::new()).collect();
-        if let Some(shared) = shared.as_mut() {
-            while shared.next_arrival <= t_next {
-                let ta = shared.next_arrival;
-                let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
-                shared.queue_integral += queued_total as f64 * (ta - shared.last_t);
-                shared.last_t = ta;
-                shared.offered += 1;
-                let active: Vec<usize> =
-                    (0..n).filter(|&i| !mirror[i].done).collect();
-                if active.is_empty() {
-                    shared.rejected += 1;
-                } else {
-                    let loads: Vec<LoadSnapshot> = active
-                        .iter()
-                        .map(|&i| LoadSnapshot {
-                            queued: mirror[i].inbox_len,
-                            ..mirror[i].snapshot
-                        })
-                        .collect();
-                    let dst = active[router.route(&loads)];
-                    if mirror[dst].inbox_len < queue_capacity {
-                        mirror[dst].inbox_len += 1;
-                        pushes[dst % t].push((dst, ta));
-                    } else {
-                        shared.rejected += 1;
-                    }
-                }
-                let gap = shared.sample_gap();
-                shared.next_arrival = ta + gap;
+        // Pre-draw the whole window's exponential gap sequence in one
+        // RNG pass — every arrival routed below (replay and barrier
+        // routing alike) is <= t_next, so this covers them all.
+        if t_next < f64::INFINITY {
+            if let Some(shared) = shared.as_mut() {
+                shared.pre_draw(t_next);
             }
         }
 
-        // The horizon never crosses the next unrouted arrival, so no
-        // arrival lands inside the window; it always clears t_next, so
-        // every window makes progress.
-        let mut horizon = t_next + span;
-        if let Some(shared) = &shared {
-            horizon = horizon.min(shared.next_arrival);
-        }
-        for (w, p) in pushes.into_iter().enumerate() {
-            pool.send(w, FleetCmd::Advance { horizon, pushes: p });
-        }
-        let mut window_events = 0usize;
-        for _ in 0..t {
-            match recv(&pool)? {
-                FleetRep::Window { events, statuses } => {
-                    window_events += events.len();
-                    for ev in events {
-                        queues[ev.bundle].push_back(ev);
-                    }
-                    for s in statuses {
-                        mirror[s.bundle].snapshot = s.snapshot;
-                        mirror[s.bundle].next_time = s.next_time;
-                    }
-                }
-                FleetRep::Error(e) => return Err(AfdError::config(e)),
-                _ => return Err(AfdError::config("fleet worker protocol violation")),
-            }
-        }
-
-        // K-way merge of per-bundle event queues in (time, bundle)
-        // order — the serial engine's event order — replaying the
-        // queue-length integral, the spread sample, and ingress.
+        // Replay every recorded event the serial engine would execute
+        // before the frontier pick `(t_next, b_min)`, routing arrivals
+        // as it goes — each arrival priced against mirrors advanced to
+        // exactly its place in serial event order.
         loop {
             let mut best: Option<(f64, usize)> = None;
             for (b, q) in queues.iter().enumerate() {
@@ -492,48 +666,86 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
                     }
                 }
             }
-            let Some((_, b)) = best else { break };
-            let ev = queues[b].pop_front().expect("front checked above");
+            let Some((et, b)) = best else { break };
+            if !(et < t_next || (et == t_next && b < b_min)) {
+                break;
+            }
+            let mut ev = queues[b].pop_front().expect("front checked above");
 
-            // (a) Serial `drain_arrivals(now)` called before this event
-            // found no arrival <= now (all were routed at the barrier),
-            // so only its final queue-integral update runs.
+            // (a) Serial `drain_arrivals(ev.time)`: route every arrival
+            // <= the pick time, then the trailing integral update.
             if let Some(shared) = shared.as_mut() {
-                let now = ev.time;
-                if shared.next_arrival > now && now > shared.last_t {
-                    let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
-                    shared.queue_integral += queued_total as f64 * (now - shared.last_t);
-                    shared.last_t = now;
-                }
+                drain_mirrored(
+                    shared,
+                    &mut mirror,
+                    &mut router,
+                    &mut pending_pushes,
+                    &mut route_active,
+                    &mut route_loads,
+                    queue_capacity,
+                    t,
+                    ev.time,
+                    true,
+                );
             }
             // (b) Serial `record_spread` over pre-event loads.
-            if n >= 2 {
-                let loads: Vec<u64> = mirror
-                    .iter()
-                    .filter(|m| !m.done)
-                    .map(|m| m.token_load)
-                    .collect();
-                if loads.len() >= 2 {
-                    let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
-                    if mean > 0.0 {
-                        let max = *loads.iter().max().expect("non-empty") as f64;
-                        spread_sum += max / mean - 1.0;
-                        spread_samples += 1;
-                    }
+            spread_loads.clear();
+            spread_loads.extend(mirror.iter().filter(|m| !m.done).map(|m| m.snapshot.token_load));
+            if spread_loads.len() >= 2 {
+                let mean = spread_loads.iter().sum::<u64>() as f64 / spread_loads.len() as f64;
+                if mean > 0.0 {
+                    let max = *spread_loads.iter().max().expect("non-empty") as f64;
+                    spread_sum += max / mean - 1.0;
+                    spread_samples += 1;
                 }
             }
             // (c) Apply the event: mirrored bundle state, stranded
             // rejects, and the bundle's ingress calls in recorded order.
-            {
-                let m = &mut mirror[ev.bundle];
-                m.token_load = ev.load_after;
-                m.done = ev.done_after;
-                m.inbox_len = ev.queue_len_after as usize;
-            }
-            if ev.stranded > 0 {
-                if let Some(shared) = shared.as_mut() {
-                    shared.rejected += ev.stranded;
+            let pops = ev.inbox_pops as usize;
+            if ev.done_after {
+                // Terminal epoch end: the serial engine strands *every*
+                // inbox entry present at shutdown — including arrivals
+                // this coordinator routed but never delivered, which the
+                // worker's own stranded count missed. Charge the serial
+                // (mirror) count, splice the missing Reject records into
+                // the recorded ingress stream at the journaled shutdown
+                // time (before the trailing Checkpoint), and drop the
+                // undelivered pushes — the serial inbox they were bound
+                // for no longer exists.
+                let serial_stranded = (mirror[ev.bundle].inbox_len - pops) as u64;
+                if serial_stranded > 0 {
+                    if let Some(shared) = shared.as_mut() {
+                        shared.rejected += serial_stranded;
+                    }
                 }
+                let extras = serial_stranded - ev.stranded;
+                if extras > 0 && !ev.ingress.is_empty() {
+                    let at = ev
+                        .ingress
+                        .iter()
+                        .rev()
+                        .find_map(|ie| match ie {
+                            IngressEvent::EpochEnd { at, .. } => Some(*at),
+                            _ => None,
+                        })
+                        .unwrap_or(ev.time);
+                    // finish_epoch_impl records ... EpochEnd, Reject×k,
+                    // Checkpoint — splice ahead of the Checkpoint.
+                    let ins = ev.ingress.len() - 1;
+                    for _ in 0..extras {
+                        ev.ingress
+                            .insert(ins, IngressEvent::Reject { bundle: ev.bundle as u32, at });
+                    }
+                }
+                pending_pushes[ev.bundle % t].retain(|&(dst, _)| dst != ev.bundle);
+                let m = &mut mirror[ev.bundle];
+                m.done = true;
+                m.inbox_len = 0;
+                m.snapshot = ev.snapshot_after;
+            } else {
+                let m = &mut mirror[ev.bundle];
+                m.inbox_len -= pops;
+                m.snapshot = ev.snapshot_after;
             }
             if let Some(core) = &ingress {
                 for ie in &ev.ingress {
@@ -541,16 +753,84 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
                 }
             }
         }
+        if t_next == f64::INFINITY {
+            break; // every bundle reached its target; replay fully drained
+        }
 
-        // Deterministic span adaptation: bound merge memory on flooded
-        // windows, stream longer ones when starved. Outputs don't
-        // depend on it (any window partition merges identically).
-        if window_events > FLOOD_EVENTS {
+        // Batch-route the remaining arrivals <= t_next over the mirrors
+        // (now advanced past every event < the frontier — the serial
+        // engine's exact routing state). The trailing integral update
+        // belongs to the frontier event's drain, replayed next barrier.
+        if let Some(shared) = shared.as_mut() {
+            drain_mirrored(
+                shared,
+                &mut mirror,
+                &mut router,
+                &mut pending_pushes,
+                &mut route_active,
+                &mut route_loads,
+                queue_capacity,
+                t,
+                t_next,
+                false,
+            );
+        }
+        // First still-unrouted arrival: workers must validate any event
+        // at or past it against their delivered inbox.
+        let admit_horizon = match &shared {
+            Some(s) => s.next_arrival,
+            None => f64::INFINITY,
+        };
+        let horizon = t_next + span;
+        for w in 0..t {
+            let pushes = std::mem::take(&mut pending_pushes[w]);
+            let events_scratch = std::mem::take(&mut event_scratch[w]);
+            pool.send(
+                w,
+                FleetCmd::Advance { horizon, force_t: t_next, admit_horizon, pushes, events_scratch },
+            );
+        }
+        counters.barriers += 1;
+        let mut window_events = 0usize;
+        let mut any_hungry = false;
+        for _ in 0..t {
+            match pool.recv() {
+                Some((w, FleetRep::Window { mut events, statuses, pushes_scratch })) => {
+                    window_events += events.len();
+                    for ev in events.drain(..) {
+                        queues[ev.bundle].push_back(ev);
+                    }
+                    event_scratch[w] = events;
+                    pending_pushes[w] = pushes_scratch;
+                    for s in statuses {
+                        frontier[s.bundle] = s.next_time;
+                        any_hungry |= s.hungry;
+                    }
+                }
+                Some((_, FleetRep::Error(e))) => return Err(AfdError::config(e)),
+                Some(_) => return Err(AfdError::config("fleet worker protocol violation")),
+                None => return Err(AfdError::config("fleet worker exited unexpectedly")),
+            }
+        }
+
+        // Span adaptation — policy documented on FLOOD_EVENTS above.
+        if any_hungry {
+            counters.window_shrinks += 1;
+            span *= 0.5;
+        } else if window_events > FLOOD_EVENTS {
             span *= 0.5;
         } else if window_events < STARVE_EVENTS {
-            span = (span * 2.0).min(1e18);
+            span *= 2.0;
         }
+        span = span.clamp(tuning.min_span, tuning.max_span);
+        counters.span_min = counters.span_min.min(span);
+        counters.span_max = counters.span_max.max(span);
     }
+    counters.span_final = span;
+    counters.arrivals = match &shared {
+        Some(s) => s.offered,
+        None => 0,
+    };
 
     // --- Finish: collect per-bundle outputs in index order ---
     for w in 0..t {
@@ -558,15 +838,16 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
     }
     let mut outputs: Vec<Option<BundleOutput>> = (0..n).map(|_| None).collect();
     for _ in 0..t {
-        match recv(&pool)? {
-            FleetRep::Finished(outs) => {
+        match pool.recv() {
+            Some((_, FleetRep::Finished(outs))) => {
                 for o in outs {
                     let slot = o.bundle;
                     outputs[slot] = Some(o);
                 }
             }
-            FleetRep::Error(e) => return Err(AfdError::config(e)),
-            _ => return Err(AfdError::config("fleet worker protocol violation")),
+            Some((_, FleetRep::Error(e))) => return Err(AfdError::config(e)),
+            Some(_) => return Err(AfdError::config("fleet worker protocol violation")),
+            None => return Err(AfdError::config("fleet worker exited unexpectedly")),
         }
     }
     let bundle_outputs: Vec<BundleOutput> = outputs
@@ -582,6 +863,7 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
         shared,
         spread_sum,
         spread_samples,
+        Some(counters),
         bundle_outputs,
     ))
 }
@@ -654,6 +936,73 @@ mod tests {
     }
 
     #[test]
+    fn dense_open_fleet_batches_many_arrivals_per_barrier() {
+        let cfg = small_cfg();
+        let mk = || {
+            builder(&cfg)
+                .policy(Policy::LeastTokenLoad)
+                .arrival(ClusterArrival::Open { lambda: 4.0, queue_capacity: 96 })
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        let parallel = run_fleet(mk(), 3).unwrap();
+        assert_outputs_identical(&serial, &parallel);
+        let counters = parallel.fleet.expect("parallel path reports counters");
+        assert!(counters.barriers >= 1);
+        assert_eq!(counters.arrivals, parallel.arrival.offered);
+        assert!(
+            counters.barriers < counters.arrivals,
+            "window batching must beat one barrier per arrival: {} barriers, {} arrivals",
+            counters.barriers,
+            counters.arrivals
+        );
+        assert!(counters.span_min > 0.0);
+        assert!(counters.span_min <= counters.span_final);
+        assert!(counters.span_final <= counters.span_max);
+    }
+
+    #[test]
+    fn window_tuning_never_changes_outputs() {
+        let cfg = small_cfg();
+        let mk = |w: WindowTuning| {
+            builder(&cfg)
+                .policy(Policy::JoinShortestQueue)
+                .arrival(ClusterArrival::Open { lambda: 1.0, queue_capacity: 80 })
+                .window_tuning(w)
+        };
+        let serial = builder(&cfg)
+            .policy(Policy::JoinShortestQueue)
+            .arrival(ClusterArrival::Open { lambda: 1.0, queue_capacity: 80 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        // A span pinned to the float floor (forcing the frontier-only
+        // path), the default, and a span vastly beyond the run length —
+        // all bitwise the same run.
+        let tunings = [
+            WindowTuning { initial_span: 1e-12, min_span: 1e-12, max_span: 1e-12 },
+            WindowTuning::default(),
+            WindowTuning { initial_span: 1e9, min_span: 1e-12, max_span: 1e15 },
+        ];
+        for w in tunings {
+            let parallel = run_fleet(mk(w), 3).unwrap();
+            assert_outputs_identical(&serial, &parallel);
+        }
+    }
+
+    #[test]
+    fn window_tuning_validation_rejects_bad_spans() {
+        let cfg = small_cfg();
+        for w in [
+            WindowTuning { initial_span: 1e-6, min_span: 0.0, max_span: 1.0 },
+            WindowTuning { initial_span: 1e-9, min_span: 1e-6, max_span: 1.0 },
+            WindowTuning { initial_span: f64::INFINITY, min_span: 1e-6, max_span: f64::INFINITY },
+        ] {
+            assert!(run_fleet(builder(&cfg).window_tuning(w), 2).is_err());
+        }
+    }
+
+    #[test]
     fn autoscaled_fleet_parallel_matches_serial_bitwise() {
         let cfg = small_cfg();
         let mk = || {
@@ -679,8 +1028,10 @@ mod tests {
                 .unwrap();
         let via_fleet = run_fleet(one, 8).unwrap();
         assert_outputs_identical(&serial, &via_fleet);
+        assert!(via_fleet.fleet.is_none(), "serial fallback carries no fleet counters");
         let t1 = run_fleet(builder(&cfg), 1).unwrap();
         let st = builder(&cfg).build().unwrap().run().unwrap();
         assert_outputs_identical(&st, &t1);
+        assert!(t1.fleet.is_none());
     }
 }

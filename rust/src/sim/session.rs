@@ -291,6 +291,16 @@ pub trait ArrivalProcess {
     /// a call with `now` earlier than a previous call is a no-op.
     fn advance_to(&mut self, _now: f64) {}
 
+    /// Materialize (buffer) every random draw needed to cover arrivals
+    /// up to time `until`, without yet committing any arrival. Callers
+    /// that batch work per time window (the parallel fleet engine's
+    /// barrier windows) use this to pull a whole gap sequence from the
+    /// RNG in one pass; implementations must consume the buffer in FIFO
+    /// order so the RNG stream — and therefore every output bit — is
+    /// identical whether or not pre-drawing happened. Default: no-op
+    /// (processes with no randomness, or none worth batching).
+    fn pre_draw(&mut self, _until: f64) {}
+
     /// Grant one admission at time `now`, returning the admitted
     /// request's arrival time, or `None` when no arrival is available.
     fn try_admit(&mut self, now: f64) -> Option<f64>;
@@ -361,6 +371,9 @@ pub struct OpenLoopPoisson {
     wait_sum: f64,
     queue_integral: f64,
     last_t: f64,
+    /// Gaps pre-drawn by [`ArrivalProcess::pre_draw`], consumed FIFO by
+    /// `sample_gap` — the RNG stream order is unchanged by batching.
+    pending_gaps: VecDeque<f64>,
 }
 
 impl OpenLoopPoisson {
@@ -388,6 +401,7 @@ impl OpenLoopPoisson {
             wait_sum: 0.0,
             queue_integral: 0.0,
             last_t: 0.0,
+            pending_gaps: VecDeque::new(),
         })
     }
 
@@ -396,12 +410,19 @@ impl OpenLoopPoisson {
     }
 
     fn sample_gap(&mut self) -> f64 {
-        -self.rng.next_f64_open().ln() / self.lambda
+        match self.pending_gaps.pop_front() {
+            Some(gap) => gap,
+            None => -self.rng.next_f64_open().ln() / self.lambda,
+        }
     }
 }
 
 impl ArrivalProcess for OpenLoopPoisson {
     fn advance_to(&mut self, now: f64) {
+        // Batch the window's RNG draws up front; `sample_gap` then pops
+        // the very gaps this pass drew, in the same order, so the
+        // arrival sequence is bit-for-bit the lazy one.
+        self.pre_draw(now);
         while self.next_arrival <= now {
             let t = self.next_arrival;
             self.queue_integral += self.queue.len() as f64 * (t - self.last_t);
@@ -418,6 +439,18 @@ impl ArrivalProcess for OpenLoopPoisson {
         if now > self.last_t {
             self.queue_integral += self.queue.len() as f64 * (now - self.last_t);
             self.last_t = now;
+        }
+    }
+
+    fn pre_draw(&mut self, until: f64) {
+        let mut t = self.next_arrival;
+        for g in &self.pending_gaps {
+            t += *g;
+        }
+        while t <= until {
+            let gap = -self.rng.next_f64_open().ln() / self.lambda;
+            t += gap;
+            self.pending_gaps.push_back(gap);
         }
     }
 

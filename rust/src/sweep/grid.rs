@@ -467,6 +467,7 @@ fn run_cell(
         .batches_in_flight(opts.batches_in_flight)
         .warm_start(opts.warm_start)
         .completions_per_bundle(opts.max_completions)
+        .window_tuning(opts.window)
         .source_factory(move |seed| scenario.make_source(seed));
     if let ArrivalSpec::Open { lambda, queue_capacity, .. } = arrival {
         let rate = lambda.expect("build_jobs resolves open-loop rates");

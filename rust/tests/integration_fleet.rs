@@ -16,6 +16,11 @@
 //!    parallel run's journal byte for byte.
 //! 4. **Dispatcher counters**: MemStore-backed ingress stats agree
 //!    between serial and parallel runs at every thread count.
+//! 5. **Dense open-loop streams**: at arrival rates high enough that
+//!    many shared arrivals land inside one barrier window, the
+//!    window-batched routing path still reproduces the serial engine
+//!    bitwise — and its counters prove batching engaged (strictly fewer
+//!    barriers than arrivals).
 
 use std::fs;
 use std::path::PathBuf;
@@ -180,6 +185,95 @@ fn heterogeneous_fleet_bitwise() {
     }
 }
 
+/// Dense open-loop stream: lambda high enough that a barrier window
+/// spans many shared arrivals (the regime PR 9's window batching
+/// targets), across every routing policy and thread count. Beyond the
+/// bitwise contract, the fleet counters must show batching actually
+/// engaged: strictly fewer barriers than arrivals, and an adaptive span
+/// that never collapsed to zero.
+#[test]
+fn dense_open_fleet_bitwise_for_every_policy() {
+    let cfg = small_cfg();
+    for policy in [
+        Policy::RoundRobin,
+        Policy::JoinShortestQueue,
+        Policy::LeastTokenLoad,
+        Policy::KvHeadroom,
+    ] {
+        let mk = || {
+            ClusterSimulation::builder(&cfg, 2)
+                .bundles(5)
+                .policy(policy)
+                .completions_per_bundle(Some(70))
+                .arrival(ClusterArrival::Open { lambda: 3.0, queue_capacity: 96 })
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        assert!(serial.fleet.is_none(), "serial runs carry no fleet counters");
+        for threads in [1usize, 2, 3, 8] {
+            let parallel = mk().run_parallel(threads).unwrap();
+            assert_identical(
+                &format!("dense {} t={threads}", policy.name()),
+                &serial,
+                &parallel,
+            );
+            if threads > 1 {
+                let f = parallel.fleet.expect("parallel runs report fleet counters");
+                assert!(f.barriers >= 1, "dense {}: at least one barrier", policy.name());
+                assert_eq!(
+                    f.arrivals, serial.arrival.offered,
+                    "dense {}: counter matches the offered-arrival count",
+                    policy.name()
+                );
+                assert!(
+                    f.barriers < f.arrivals,
+                    "dense {} t={threads}: window batching must route many \
+                     arrivals per barrier ({} barriers vs {} arrivals)",
+                    policy.name(),
+                    f.barriers,
+                    f.arrivals
+                );
+                assert!(
+                    f.span_min > 0.0 && f.span_min <= f.span_final && f.span_final <= f.span_max,
+                    "dense {}: adaptive span stayed ordered and positive",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Dense stream composed with autoscaling: epoch restarts interleave
+/// with batched routing windows, and the merge still replays them in
+/// serial order at every thread count.
+#[test]
+fn dense_autoscaled_fleet_bitwise() {
+    let cfg = small_cfg();
+    let mk = || {
+        ClusterSimulation::builder(&cfg, 2)
+            .bundles(4)
+            .policy(Policy::JoinShortestQueue)
+            .completions_per_bundle(Some(90))
+            .arrival(ClusterArrival::Open { lambda: 2.5, queue_capacity: 80 })
+            .autoscale(AutoscaleConfig {
+                feasible: vec![1, 2, 4],
+                window: 16,
+                epoch_completions: 30,
+            })
+    };
+    let serial = mk().build().unwrap().run().unwrap();
+    for threads in [2usize, 3] {
+        let parallel = mk().run_parallel(threads).unwrap();
+        assert_identical(&format!("dense autoscale t={threads}"), &serial, &parallel);
+        let f = parallel.fleet.expect("parallel runs report fleet counters");
+        assert!(
+            f.barriers < f.arrivals,
+            "dense autoscale t={threads}: batching engaged ({} vs {})",
+            f.barriers,
+            f.arrivals
+        );
+    }
+}
+
 /// The journaled-cluster RunSpec shared by the ingress tests below —
 /// the same shape `ingress::recovery` executes serially.
 fn journal_spec() -> RunSpec {
@@ -278,6 +372,61 @@ fn ingress_journal_bytes_invariant_across_thread_counts() {
         "recovered journal diverged from the serial reference"
     );
     let _ = fs::remove_dir_all(&crash);
+    let _ = fs::remove_dir_all(&base);
+}
+
+/// Journal bytes stay thread-invariant under a *dense* stream too: the
+/// batched routing windows replay worker-recorded ingress events in
+/// merged virtual-time order, so request ids and journal framing never
+/// see the window structure.
+#[test]
+fn dense_ingress_journal_bytes_invariant_across_thread_counts() {
+    let spec = RunSpec {
+        config_path: None,
+        seed: 20260809,
+        r: 2,
+        batch: 8,
+        requests: 60,
+        arrival: ArrivalSpec::Open { lambda: 1.5, queue: 48 },
+        bundles: 4,
+        policy: "ltl".into(),
+        cost: "linear".into(),
+        autoscale: None,
+    };
+
+    let base = tmpdir("dense_journal_serial");
+    let store = JournalStore::create(&base, FSYNC).unwrap();
+    let serial_artifacts = run_fresh(&spec, Box::new(store), None).unwrap().unwrap();
+    let serial_journal = fs::read(JournalStore::journal_path(&base)).unwrap();
+
+    for threads in [2usize, 3, 8] {
+        let (bytes, out) =
+            parallel_journal(&spec, threads, &format!("dense_journal_t{threads}"));
+        assert_eq!(
+            bytes, serial_journal,
+            "dense journal bytes diverged at {threads} threads"
+        );
+        let f = out.fleet.expect("parallel runs report fleet counters");
+        assert!(
+            f.barriers < f.arrivals,
+            "dense journal t={threads}: batching engaged ({} vs {})",
+            f.barriers,
+            f.arrivals
+        );
+        let mut csv = String::from("bundle,finish_time,admit_time,decode_len\n");
+        for b in &out.bundles {
+            for c in &b.completions {
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    b.bundle, c.finish_time, c.admit_time, c.decode_len
+                ));
+            }
+        }
+        assert_eq!(
+            csv, serial_artifacts.completions_csv,
+            "dense completions CSV diverged at {threads} threads"
+        );
+    }
     let _ = fs::remove_dir_all(&base);
 }
 

@@ -436,3 +436,61 @@ fn prop_barrier_overhead_monotone_in_r() {
         },
     );
 }
+
+/// The fleet engine's window-batched arrival routing (PR 9) holds its
+/// two structural invariants at *any* initial window span, including
+/// adversarial ones (spans far below the mean arrival gap force the
+/// adaptive doubling path; spans far above it force validate-or-shrink
+/// to halve until the inbox-sufficiency guard passes):
+///
+///   1. No arrival ever lands inside a committed window — observable as
+///      bitwise equality with the serial engine (completions, arrival
+///      stats, imbalance) for every sampled (seed, lambda, span).
+///   2. Validate-or-shrink converges: the adaptive span is clamped at a
+///      positive floor, so the recorded minimum is never zero and the
+///      run always terminates.
+#[test]
+fn prop_fleet_window_batching_bitwise_at_any_span() {
+    use afd::sim::cluster::{ClusterArrival, ClusterSimulation};
+    use afd::sim::fleet::WindowTuning;
+    use afd::config::experiment::ExperimentConfig;
+
+    forall(
+        "fleet window batching bitwise",
+        25,
+        Gen::triple(
+            Gen::u64_range(0, u64::MAX / 2),
+            Gen::f64_log_range(0.05, 5.0),
+            Gen::f64_log_range(1e-9, 1e3),
+        ),
+        |&(seed, lambda, span)| {
+            let mut cfg = ExperimentConfig::default().with_seed(seed);
+            cfg.topology.batch_per_worker = 8;
+            cfg.requests_per_instance = 60;
+            let mk = || {
+                ClusterSimulation::builder(&cfg, 2)
+                    .bundles(3)
+                    .policy(Policy::JoinShortestQueue)
+                    .completions_per_bundle(Some(30))
+                    .arrival(ClusterArrival::Open { lambda, queue_capacity: 40 })
+            };
+            let serial = mk().build().unwrap().run().unwrap();
+            let parallel = mk()
+                .window_tuning(WindowTuning::with_initial(span))
+                .run_parallel(3)
+                .unwrap();
+            for (s, p) in serial.bundles.iter().zip(&parallel.bundles) {
+                if s.completions != p.completions || s.arrival != p.arrival {
+                    return false;
+                }
+            }
+            if serial.arrival != parallel.arrival
+                || serial.load_imbalance.to_bits() != parallel.load_imbalance.to_bits()
+            {
+                return false;
+            }
+            let f = parallel.fleet.expect("parallel run reports fleet counters");
+            f.barriers >= 1 && f.span_min > 0.0 && f.span_final > 0.0
+        },
+    );
+}

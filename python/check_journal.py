@@ -10,7 +10,9 @@ audit a journal without the Rust toolchain::
     f64    := u64le bit pattern
 
 Tags: 0 Header (key/value pairs; must be the first record), 1 Admit,
-2 Reject, 3 Complete, 4 Drop.
+2 Reject, 3 Complete, 4 Drop, 5 Handoff (an in-flight request carried
+across an epoch rebuild: its admit key moves from the old epoch's clock
+to the new one's; the id stays admitted).
 
 Checks, in order:
 
@@ -20,8 +22,8 @@ Checks, in order:
    (the Rust side truncates and regenerates it on recovery);
 2. the first record is a Header and no later record is;
 3. admit ids are unique and >= 1 (0 is the reserved pre-loaded id);
-4. every Complete/Drop refers to a previously admitted id (Complete of
-   id 0 is the pre-loaded-slot exception);
+4. every Complete/Drop/Handoff refers to a previously admitted,
+   still-open id (Complete of id 0 is the pre-loaded-slot exception);
 5. every journaled time is finite.
 
 Usage:
@@ -41,7 +43,8 @@ import sys
 MAGIC = b"AFDJRNL1"
 JOURNAL_FILE = "journal.afd"
 MAX_RECORD = 1 << 20
-TAG_NAMES = {0: "Header", 1: "Admit", 2: "Reject", 3: "Complete", 4: "Drop"}
+TAG_NAMES = {0: "Header", 1: "Admit", 2: "Reject", 3: "Complete", 4: "Drop",
+             5: "Handoff"}
 
 
 def fnv1a(data: bytes) -> int:
@@ -107,6 +110,8 @@ def parse_payload(payload: bytes):
         }
     elif tag == 4:
         fields = {"id": u64(), "bundle": u32(), "at": f64(u64())}
+    elif tag == 5:
+        fields = {"id": u64(), "bundle": u32(), "from": f64(u64()), "to": f64(u64())}
     else:
         raise Tear(f"unknown tag {tag}")
     if off != len(payload):
@@ -156,14 +161,14 @@ def validate(records) -> list:
         errors.append(
             f"first record is {TAG_NAMES.get(records[0][1], '?')}, not a Header"
         )
-    admitted = set()
+    admitted = {}  # id -> bundle of the Admit (updated by Handoff moves)
     closed = set()
     for seq, tag, fields in records:
         name = TAG_NAMES.get(tag, "?")
         if tag == 0 and seq != 1:
             errors.append(f"seq {seq}: Header after the first record")
             continue
-        for key in ("at", "finish", "admit"):
+        for key in ("at", "finish", "admit", "from", "to"):
             if key in fields and not math.isfinite(fields[key]):
                 errors.append(f"seq {seq}: non-finite {key} in {name}")
         if tag == 1:
@@ -173,7 +178,7 @@ def validate(records) -> list:
             elif rid in admitted:
                 errors.append(f"seq {seq}: double Admit of id {rid}")
             else:
-                admitted.add(rid)
+                admitted[rid] = fields["bundle"]
         elif tag in (3, 4):
             rid = fields["id"]
             if tag == 3 and rid == 0:
@@ -184,6 +189,18 @@ def validate(records) -> list:
                 errors.append(f"seq {seq}: {name} of already-terminal id {rid}")
             else:
                 closed.add(rid)
+        elif tag == 5:
+            rid = fields["id"]
+            if rid not in admitted:
+                errors.append(f"seq {seq}: Handoff of never-admitted id {rid}")
+            elif rid in closed:
+                errors.append(f"seq {seq}: Handoff of already-terminal id {rid}")
+            elif admitted[rid] != fields["bundle"]:
+                errors.append(
+                    f"seq {seq}: Handoff of id {rid} on bundle "
+                    f"{fields['bundle']} but it was admitted to bundle "
+                    f"{admitted[rid]}"
+                )
     return errors
 
 
@@ -246,6 +263,10 @@ def complete(seq: int, rid: int, bundle: int, fin: float, adm: float) -> bytes:
     )
 
 
+def handoff(seq: int, rid: int, bundle: int, frm: float, to: float) -> bytes:
+    return record(seq, 5, struct.pack("<QI", rid, bundle) + struct.pack("<dd", frm, to))
+
+
 def selftest() -> int:
     good = MAGIC + header(1, [("version", "1"), ("seed", "7")]) + admit(2, 1, 0, 0.5) + complete(3, 1, 0, 9.5, 0.5)
 
@@ -292,6 +313,51 @@ def selftest() -> int:
     preloaded = MAGIC + header(1, [("version", "1")]) + complete(2, 0, 0, 1.0, 0.0)
     _, _, errs = run(preloaded)
     cases.append(("pre-loaded id 0 completion allowed", not errs))
+
+    warm = (
+        MAGIC
+        + header(1, [("version", "1")])
+        + admit(2, 1, 0, 0.5)
+        + handoff(3, 1, 0, 0.5, 2.5)
+        + complete(4, 1, 0, 9.5, 2.5)
+    )
+    r, torn, errs = run(warm)
+    cases.append(
+        ("handoff between admit and complete passes",
+         not errs and torn is None and len(r) == 4)
+    )
+
+    ghost_h = MAGIC + header(1, [("version", "1")]) + handoff(2, 7, 0, 0.5, 2.5)
+    _, _, errs = run(ghost_h)
+    cases.append(
+        ("handoff of unknown id fails",
+         any("Handoff of never-admitted" in e for e in errs))
+    )
+
+    late_h = (
+        MAGIC
+        + header(1, [("version", "1")])
+        + admit(2, 1, 0, 0.5)
+        + complete(3, 1, 0, 9.5, 0.5)
+        + handoff(4, 1, 0, 9.5, 12.0)
+    )
+    _, _, errs = run(late_h)
+    cases.append(
+        ("handoff after terminal fails",
+         any("Handoff of already-terminal" in e for e in errs))
+    )
+
+    moved_h = (
+        MAGIC
+        + header(1, [("version", "1")])
+        + admit(2, 1, 0, 0.5)
+        + handoff(3, 1, 2, 0.5, 2.5)
+    )
+    _, _, errs = run(moved_h)
+    cases.append(
+        ("handoff on the wrong bundle fails",
+         any("admitted to bundle" in e for e in errs))
+    )
 
     failed = [name for name, ok in cases if not ok]
     for name, ok in cases:

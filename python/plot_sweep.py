@@ -14,10 +14,13 @@ Reads the per-cell CSV written by `afd sweep --csv bench_out/sweep.csv`
 
 `--check` validates the CSV schema and numeric parses without importing
 matplotlib or opening a display — the CI gate after the mini-grid sweep.
+`--selftest` exercises the checker itself against synthetic rows
+(including the nonstationary-traffic columns) with no input file.
 
 Usage:
   python3 python/plot_sweep.py --csv bench_out/sweep.csv --out-dir bench_out
   python3 python/plot_sweep.py --csv bench_out/sweep.csv --check
+  python3 python/plot_sweep.py --selftest
 """
 
 from __future__ import annotations
@@ -39,19 +42,25 @@ EXPECTED_HEADER = [
     "mean_queue_wait", "mean_queue_len",
     "bundles", "policy", "bundle",
     "imbalance", "idle_share", "realized_vs_eq1", "converged_r",
-    "cost_model",
+    "cost_model", "traffic", "classes", "slo_attain",
 ]
 
 INT_COLS = {"r", "batch", "r_star_g", "sim_opt_r", "completed",
-            "offered", "admitted", "rejected", "bundles", "converged_r"}
+            "offered", "admitted", "rejected", "bundles", "converged_r",
+            "classes"}
 # `bundle` is "agg" on aggregate rows and the bundle index on per-bundle
 # rows of fleet cells, so it stays a string.
-STR_COLS = {"scenario", "seed", "arrival", "policy", "bundle", "cost_model"}
+STR_COLS = {"scenario", "seed", "arrival", "policy", "bundle",
+            "cost_model", "traffic"}
 
 # Cost-model families emitted by rust/src/latency/cost.rs::CostSpec.
 # The CSV value is the parameterized *label* (e.g. "moe:0.15:2",
 # "blended:0.25"); the family is the part before the first ":".
 KNOWN_COST_MODELS = {"linear", "roofline", "moe", "blended"}
+
+# Rate-function families emitted by rust/src/traffic/rate.rs::RateFn;
+# stationary cells carry the literal "none".
+KNOWN_TRAFFIC = {"constant", "diurnal", "mmpp", "flash"}
 
 
 def load_rows(path: str) -> list[dict]:
@@ -139,6 +148,34 @@ def check(rows: list[dict]) -> None:
                 f"error: non-positive linearized theory columns for "
                 f"cost_model {row['cost_model']!r} at ({row['scenario']}, r={row['r']})"
             )
+    # Nonstationary-traffic columns: the rate-function label is "none"
+    # or a known family, traffic cells are open-loop by construction,
+    # and SLO attainment is a fraction (trivially 1.0 without classes).
+    for row in rows:
+        if row["traffic"] != "none":
+            family = row["traffic"].split(":", 1)[0]
+            if family not in KNOWN_TRAFFIC:
+                raise SystemExit(
+                    f"error: unknown traffic family {row['traffic']!r} "
+                    f"(expected 'none' or a family in {sorted(KNOWN_TRAFFIC)})"
+                )
+            if not row["arrival"].startswith("open-"):
+                raise SystemExit(
+                    f"error: traffic cell {row['traffic']!r} has non-open "
+                    f"arrival {row['arrival']!r}"
+                )
+        if row["classes"] < 0:
+            raise SystemExit(f"error: negative class count {row['classes']}")
+        if not 0.0 <= row["slo_attain"] <= 1.0:
+            raise SystemExit(
+                f"error: slo_attain {row['slo_attain']} outside [0, 1] "
+                f"at ({row['scenario']}, r={row['r']})"
+            )
+        if row["classes"] == 0 and row["slo_attain"] != 1.0:
+            raise SystemExit(
+                f"error: slo_attain {row['slo_attain']} != 1.0 on a row "
+                f"with no traffic classes"
+            )
     for (scenario, arrival, batch, bundles, policy, cost), cells in grouped.items():
         rs = [c["r"] for c in cells]
         if len(set(rs)) != len(rs):
@@ -169,7 +206,8 @@ def check(rows: list[dict]) -> None:
         f"ok: {len(rows)} rows ({n_bundle_rows} per-bundle) in {len(grouped)} group(s); "
         f"arrivals: {sorted({r['arrival'] for r in rows})}; "
         f"fleets: {sorted({(r['bundles'], r['policy']) for r in rows})}; "
-        f"cost models: {sorted({r['cost_model'] for r in rows})}"
+        f"cost models: {sorted({r['cost_model'] for r in rows})}; "
+        f"traffic: {sorted({r['traffic'] for r in rows})}"
     )
 
 
@@ -276,6 +314,116 @@ def plot(rows: list[dict], out_dir: str) -> None:
         print(f"wrote {os.path.join(out_dir, name)}")
 
 
+# ------------------------------------------------------------- selftest
+
+
+def _base_row() -> dict[str, str]:
+    """One valid closed-loop aggregate row as header->value strings."""
+    values = {
+        "scenario": "paper-7b", "r": "4", "batch": "16", "seed": "42",
+        "theta": "0.3", "nu": "0.2", "sim_throughput": "1.2",
+        "sim_delivered": "1.1", "tpot": "0.9", "idle_attention": "0.1",
+        "idle_ffn": "0.1", "theory_thr_mf": "1.3", "theory_thr_g": "1.25",
+        "r_star_g": "4", "sim_opt_r": "4", "ratio_gap": "0.0",
+        "completed": "100", "total_time": "500.0", "arrival": "closed",
+        "lambda": "0.0", "offered": "0", "admitted": "0", "rejected": "0",
+        "mean_queue_wait": "0.0", "mean_queue_len": "0.0", "bundles": "1",
+        "policy": "single", "bundle": "agg", "imbalance": "0.0",
+        "idle_share": "0.1", "realized_vs_eq1": "0.95", "converged_r": "4",
+        "cost_model": "linear", "traffic": "none", "classes": "0",
+        "slo_attain": "1.0",
+    }
+    assert sorted(values) == sorted(EXPECTED_HEADER)
+    return values
+
+
+def _traffic_row() -> dict[str, str]:
+    row = _base_row()
+    row.update(r="6", arrival="open-flash", traffic="flash:0.4:2:30:40",
+               **{"lambda": "0.8"}, offered="50", admitted="40",
+               rejected="10", classes="2", slo_attain="0.97")
+    return row
+
+
+def _run_rows(rows: list[dict[str, str]], header=None):
+    """Write rows to a temp CSV and run load+check. Returns the error
+    message (str) on failure, None on success."""
+    import tempfile
+
+    header = header if header is not None else EXPECTED_HEADER
+    with tempfile.NamedTemporaryFile(
+        "w", suffix=".csv", newline="", delete=False
+    ) as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for row in rows:
+            w.writerow([row[k] for k in header])
+        path = f.name
+    import contextlib
+    import io
+
+    try:
+        with contextlib.redirect_stdout(io.StringIO()):
+            check(load_rows(path))
+        return None
+    except SystemExit as e:
+        return str(e)
+    finally:
+        os.unlink(path)
+
+
+def selftest() -> int:
+    cases = []
+
+    def case(name: str, err, want: str | None) -> None:
+        """want=None: expect success; else: expect `want` in the error."""
+        if want is None:
+            ok = err is None
+        else:
+            ok = err is not None and want in err
+        cases.append((name, ok, err))
+
+    case("stationary row passes", _run_rows([_base_row()]), None)
+    case("traffic row passes", _run_rows([_base_row(), _traffic_row()]), None)
+
+    legacy = [c for c in EXPECTED_HEADER if c not in ("traffic", "classes", "slo_attain")]
+    row = {k: v for k, v in _base_row().items() if k in legacy}
+    case("legacy 33-column header rejected",
+         _run_rows([row], header=legacy), "schema mismatch")
+
+    row = _traffic_row()
+    row["traffic"] = "sawtooth:1:2"
+    case("unknown traffic family rejected", _run_rows([row]),
+         "unknown traffic family")
+
+    row = _traffic_row()
+    row["arrival"] = "closed"
+    case("traffic on closed arrival rejected", _run_rows([row]),
+         "non-open arrival")
+
+    row = _traffic_row()
+    row["slo_attain"] = "1.5"
+    case("slo_attain above 1 rejected", _run_rows([row]), "outside [0, 1]")
+
+    row = _base_row()
+    row["slo_attain"] = "0.5"
+    case("classless row with slo_attain != 1 rejected", _run_rows([row]),
+         "no traffic classes")
+
+    row = _traffic_row()
+    row["classes"] = "two"
+    case("non-integer class count rejected", _run_rows([row]), "not an int")
+
+    failed = [name for name, ok, _ in cases if not ok]
+    for name, ok, err in cases:
+        print(f"  {'ok' if ok else 'FAIL'}: {name}" + ("" if ok else f" (got: {err})"))
+    if failed:
+        print(f"selftest: {len(failed)}/{len(cases)} case(s) FAILED")
+        return 1
+    print(f"selftest: all {len(cases)} cases passed")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -285,8 +433,12 @@ def main() -> int:
                     help="directory for PNGs (default %(default)s)")
     ap.add_argument("--check", action="store_true",
                     help="schema-validate only: no display, no matplotlib import")
+    ap.add_argument("--selftest", action="store_true",
+                    help="exercise the checker against synthetic rows and exit")
     args = ap.parse_args()
 
+    if args.selftest:
+        return selftest()
     rows = load_rows(args.csv)
     check(rows)
     if args.check:

@@ -7,13 +7,31 @@
 //! a reconfiguration is emitted only when the recommended `r` differs
 //! from the current one by at least `min_delta` and the predicted
 //! throughput gain exceeds `min_gain`.
+//!
+//! Two recommendation modes share the window machinery
+//! ([`AutoscaleMode`]):
+//!
+//! * **Stationary** — the paper's point estimate: maximize predicted
+//!   throughput over the feasible set, assuming the offered load keeps
+//!   saturating whatever capacity is provisioned. Right for closed
+//!   loops and steady streams; oblivious to the *rate* of an open
+//!   stream, so it over-provisions the troughs of a diurnal or
+//!   post-flash stream (idle capacity) and under-provisions its peaks.
+//! * **SLO-aware** — sizes to the *windowed arrival-rate estimate*
+//!   instead: `λ̂ = (n−1) / (t_last − t_first)` over the admit times of
+//!   the last `window` completions, demand `λ̂·μ_D·headroom` decode
+//!   tokens per cycle, and pick the **smallest** feasible `r` whose
+//!   bundle capacity `Thr_G(r)·(r+1)` covers it (falling back to the
+//!   capacity argmax when none does). Tracks nonstationary traffic in
+//!   both directions: flash crowds raise `λ̂` and upscale; troughs
+//!   lower it and release capacity the stationary rule would pin.
 
 use std::collections::VecDeque;
 
 use crate::analysis::cycle_time::OperatingPoint;
 use crate::analysis::provisioning::barrier_aware_optimum;
 use crate::config::hardware::HardwareParams;
-use crate::error::Result;
+use crate::error::{AfdError, Result};
 use crate::workload::request::RequestLengths;
 use crate::workload::trace::Trace;
 
@@ -22,8 +40,40 @@ use crate::workload::trace::Trace;
 pub struct Reconfiguration {
     pub from_r: usize,
     pub to_r: usize,
-    /// Predicted relative throughput gain.
+    /// Predicted relative throughput gain (stationary mode) or relative
+    /// capacity change (SLO-aware mode; negative for a downscale).
     pub predicted_gain: f64,
+}
+
+/// How the autoscaler turns its window into a recommendation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscaleMode {
+    /// The paper's stationary point estimate (A.6 + Eq. 12): maximize
+    /// predicted saturated throughput.
+    Stationary,
+    /// Rate-tracking: smallest feasible `r` whose capacity covers the
+    /// windowed arrival-rate estimate times `headroom` (>= 1).
+    SloAware { headroom: f64 },
+}
+
+impl AutoscaleMode {
+    pub fn validate(&self) -> Result<()> {
+        if let AutoscaleMode::SloAware { headroom } = self {
+            if !(headroom.is_finite() && *headroom >= 1.0) {
+                return Err(AfdError::config(format!(
+                    "slo-aware autoscale headroom must be finite and >= 1, got {headroom}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscaleMode::Stationary => "stationary",
+            AutoscaleMode::SloAware { .. } => "slo",
+        }
+    }
 }
 
 /// Sliding-window autoscaler.
@@ -31,11 +81,16 @@ pub struct Autoscaler {
     hw: HardwareParams,
     batch: usize,
     window: VecDeque<RequestLengths>,
+    /// Admit times (global clock) of the same windowed completions —
+    /// the SLO-aware mode's rate estimator. Unused under
+    /// [`AutoscaleMode::Stationary`].
+    admits: VecDeque<f64>,
     window_size: usize,
     feasible: Vec<usize>,
     current_r: usize,
     min_delta: usize,
     min_gain: f64,
+    mode: AutoscaleMode,
 }
 
 impl Autoscaler {
@@ -51,11 +106,13 @@ impl Autoscaler {
             hw,
             batch,
             window: VecDeque::with_capacity(window_size),
+            admits: VecDeque::with_capacity(window_size),
             window_size,
             feasible,
             current_r,
             min_delta: 1,
             min_gain: 0.02,
+            mode: AutoscaleMode::Stationary,
         }
     }
 
@@ -63,6 +120,15 @@ impl Autoscaler {
         self.min_delta = min_delta;
         self.min_gain = min_gain;
         self
+    }
+
+    pub fn with_mode(mut self, mode: AutoscaleMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> AutoscaleMode {
+        self.mode
     }
 
     pub fn current_r(&self) -> usize {
@@ -81,11 +147,28 @@ impl Autoscaler {
         self.window.push_back(lengths);
     }
 
+    /// Feed the admit time (global clock) of one completed request —
+    /// the SLO-aware mode's rate signal. No-op signal under
+    /// [`AutoscaleMode::Stationary`] (the window still slides, cheaply).
+    pub fn observe_admit(&mut self, at: f64) {
+        if self.admits.len() == self.window_size {
+            self.admits.pop_front();
+        }
+        self.admits.push_back(at);
+    }
+
     /// Evaluate the rule; returns a reconfiguration when warranted.
     pub fn evaluate(&mut self) -> Result<Option<Reconfiguration>> {
         if self.window.len() < self.window_size / 2 {
             return Ok(None); // not enough evidence yet
         }
+        match self.mode {
+            AutoscaleMode::Stationary => self.evaluate_stationary(),
+            AutoscaleMode::SloAware { headroom } => self.evaluate_slo(headroom),
+        }
+    }
+
+    fn evaluate_stationary(&mut self) -> Result<Option<Reconfiguration>> {
         let trace = Trace::new(self.window.iter().copied().collect());
         let load = crate::workload::estimator::estimate_stationary(&trace)?;
         let op = OperatingPoint::new(self.hw, load, self.batch);
@@ -102,6 +185,58 @@ impl Autoscaler {
             return Ok(Some(rec));
         }
         Ok(None)
+    }
+
+    /// SLO-aware sizing: estimate the windowed arrival rate from admit
+    /// times, convert it to a decode-token demand, and pick the smallest
+    /// feasible `r` whose bundle capacity `Thr_G(r)·(r+1)` covers
+    /// `demand·headroom` (capacity argmax if none does).
+    fn evaluate_slo(&mut self, headroom: f64) -> Result<Option<Reconfiguration>> {
+        if self.admits.len() < 2 || self.admits.len() < self.window_size / 2 {
+            return Ok(None);
+        }
+        // Completions arrive in *finish* order, so their admit times are
+        // not sorted — span over min/max, not first/last.
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &t in &self.admits {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        let span = hi - lo;
+        if !(span > 0.0) {
+            return Ok(None); // degenerate window (e.g. all preloaded at 0)
+        }
+        let lambda_hat = (self.admits.len() - 1) as f64 / span;
+        let mu_d = self.window.iter().map(|l| l.decode as f64).sum::<f64>()
+            / self.window.len() as f64;
+        let required = lambda_hat * mu_d * headroom;
+        // Capacities come from the same moment estimate the stationary
+        // rule uses, so the two modes disagree only about *demand*.
+        let trace = Trace::new(self.window.iter().copied().collect());
+        let load = crate::workload::estimator::estimate_stationary(&trace)?;
+        let op = OperatingPoint::new(self.hw, load, self.batch);
+        let cap = |r: usize| op.throughput_gaussian(r) * (r + 1) as f64;
+        let mut best = None; // smallest feasible r meeting demand
+        let mut fallback = None; // capacity argmax if none does
+        for &r in &self.feasible {
+            let c = cap(r);
+            if c >= required && best.map_or(true, |(rb, _)| r < rb) {
+                best = Some((r, c));
+            }
+            if fallback.map_or(true, |(_, cb)| c > cb) {
+                fallback = Some((r, c));
+            }
+        }
+        let Some((to_r, cap_new)) = best.or(fallback) else {
+            return Ok(None); // empty feasible set
+        };
+        if to_r.abs_diff(self.current_r) < self.min_delta {
+            return Ok(None);
+        }
+        let gain = cap_new / cap(self.current_r) - 1.0;
+        let rec = Reconfiguration { from_r: self.current_r, to_r, predicted_gain: gain };
+        self.current_r = to_r;
+        Ok(Some(rec))
     }
 }
 
@@ -174,5 +309,86 @@ mod tests {
         let mut a = Autoscaler::new(hw, 256, 1, vec![1, 2], 100);
         feed(&mut a, &WorkloadSpec::paper_section5(), 500, 5);
         assert_eq!(a.observations(), 100);
+    }
+
+    #[test]
+    fn slo_mode_validates_headroom() {
+        assert!(AutoscaleMode::SloAware { headroom: 1.0 }.validate().is_ok());
+        assert!(AutoscaleMode::SloAware { headroom: 0.5 }.validate().is_err());
+        assert!(AutoscaleMode::SloAware { headroom: f64::NAN }.validate().is_err());
+        assert!(AutoscaleMode::Stationary.validate().is_ok());
+    }
+
+    /// Feed completions whose admit times encode a fixed rate, and check
+    /// the SLO mode picks the smallest feasible r covering demand — and
+    /// tracks the rate both up and down.
+    #[test]
+    fn slo_mode_tracks_arrival_rate() {
+        let hw = HardwareParams::paper_table3();
+        let spec = WorkloadSpec::paper_section5();
+        let feasible: Vec<usize> = (1..=24).collect();
+        let mut a = Autoscaler::new(hw, 256, 12, feasible.clone(), 64)
+            .with_mode(AutoscaleMode::SloAware { headroom: 1.1 });
+        // A trickle: 64 admits spread over a huge span => tiny lambda.
+        let mut g = RequestGenerator::new(spec.clone(), 7);
+        for i in 0..64 {
+            a.observe(g.next_lengths());
+            a.observe_admit(i as f64 * 1e9);
+        }
+        let rec = a.evaluate().unwrap().expect("trickle should downscale");
+        assert_eq!(rec.from_r, 12);
+        assert_eq!(rec.to_r, 1, "tiny demand => smallest feasible r");
+        assert!(rec.predicted_gain < 0.0, "downscale sheds capacity: {rec:?}");
+        // A flash crowd: same window count over a tiny span => huge
+        // lambda no feasible r covers => capacity argmax.
+        for i in 0..64 {
+            a.observe(g.next_lengths());
+            a.observe_admit(1e9 * 64.0 + i as f64 * 1e-6);
+        }
+        let rec = a.evaluate().unwrap().expect("flash should upscale");
+        assert_eq!(rec.from_r, 1);
+        let trace = Trace::new((0..64).map(|_| g.next_lengths()).collect());
+        let load = crate::workload::estimator::estimate_stationary(&trace).unwrap();
+        let op = OperatingPoint::new(hw, load, 256);
+        let cap_of = |r: usize| op.throughput_gaussian(r) * (r + 1) as f64;
+        // Argmax capacity must beat every other feasible r (allowing ties
+        // up to estimator noise from the separately drawn trace).
+        let c_star = cap_of(rec.to_r);
+        assert!(
+            feasible.iter().all(|&r| cap_of(r) <= c_star * 1.05),
+            "picked r={} is not near the capacity argmax",
+            rec.to_r
+        );
+    }
+
+    #[test]
+    fn slo_mode_needs_time_span() {
+        let hw = HardwareParams::paper_table3();
+        let mut a = Autoscaler::new(hw, 256, 4, (1..=24).collect(), 64)
+            .with_mode(AutoscaleMode::SloAware { headroom: 1.0 });
+        let mut g = RequestGenerator::new(WorkloadSpec::paper_section5(), 9);
+        for _ in 0..64 {
+            a.observe(g.next_lengths());
+            a.observe_admit(0.0); // all at t=0: degenerate span
+        }
+        assert!(a.evaluate().unwrap().is_none());
+        assert_eq!(a.current_r(), 4);
+    }
+
+    #[test]
+    fn slo_mode_hysteresis_holds_position() {
+        let hw = HardwareParams::paper_table3();
+        // min_delta = 4: small moves are suppressed.
+        let mut a = Autoscaler::new(hw, 256, 1, (1..=24).collect(), 64)
+            .with_mode(AutoscaleMode::SloAware { headroom: 1.0 })
+            .with_hysteresis(4, 0.0);
+        let mut g = RequestGenerator::new(WorkloadSpec::paper_section5(), 11);
+        for i in 0..64 {
+            a.observe(g.next_lengths());
+            a.observe_admit(i as f64 * 1e9);
+        }
+        // Demand says r = 1 and we're already there (delta 0 < 4).
+        assert!(a.evaluate().unwrap().is_none());
+        assert_eq!(a.current_r(), 1);
     }
 }

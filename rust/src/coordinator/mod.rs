@@ -27,7 +27,7 @@ pub mod request_state;
 pub mod router;
 pub mod scheduler;
 
-pub use autoscale::{Autoscaler, Reconfiguration};
+pub use autoscale::{AutoscaleMode, Autoscaler, Reconfiguration};
 pub use batcher::{Admission, Batcher};
 pub use kv::{KvSlotManager, SlotState};
 pub use load::{BundleLoad, LoadSnapshot};

@@ -61,6 +61,9 @@ pub struct IngressStats {
     /// In-flight requests discarded at epoch rebuilds / bundle
     /// shutdown.
     pub dropped: u64,
+    /// In-flight requests re-keyed onto a new epoch's clock by a warm
+    /// handoff (they stay admitted instead of dropping).
+    pub handoffs: u64,
     /// Requests currently admitted and not yet terminal.
     pub inflight: u64,
     /// Arrivals offered but neither admitted nor rejected yet (the
@@ -86,6 +89,7 @@ pub struct Ingress {
     completed: u64,
     preloaded: u64,
     dropped: u64,
+    handoffs: u64,
     /// How many completions may legally miss the admit index (id 0):
     /// the number of pre-loaded slots granted by the engine builders.
     /// One more is a matching failure, not a pre-loaded slot.
@@ -108,6 +112,7 @@ impl Ingress {
             completed: 0,
             preloaded: 0,
             dropped: 0,
+            handoffs: 0,
             preload_budget: 0,
             arrival_seen: BTreeMap::new(),
             poisoned: None,
@@ -262,12 +267,74 @@ impl Ingress {
                 self.on_complete(bundle, offset, &completion)
             }
             IngressEvent::EpochEnd { bundle, at } => self.on_epoch_end(bundle, at),
+            IngressEvent::Handoff { bundle, from, to } => self.on_handoff(bundle, from, to),
+            IngressEvent::DropAt { bundle, from, at } => self.on_drop_at(bundle, from, at),
             IngressEvent::GrantPreload { n } => self.grant_preload(n),
             IngressEvent::Checkpoint => {
                 self.checkpoint()?;
             }
         }
         Ok(())
+    }
+
+    /// Re-key one in-flight request of `bundle` from admit key `from`
+    /// onto `to` (the same instant expressed in the new epoch's clock):
+    /// the warm-handoff path, where an autoscale rebuild carries the
+    /// live decode over instead of dropping it. FIFO within equal admit
+    /// times, like completion matching. A missing entry poisons the
+    /// core — handing off a request the table does not hold is an
+    /// accounting error.
+    pub fn on_handoff(&mut self, bundle: u32, from: f64, to: f64) {
+        match self.take_admitted(bundle, from) {
+            Some(id) => {
+                self.admit_index.entry((bundle, to.to_bits())).or_default().push(id);
+                self.handoffs += 1;
+                self.record(JournalEvent::Handoff { id, bundle, from, to });
+            }
+            None => {
+                if self.poisoned.is_none() {
+                    self.poisoned = Some(format!(
+                        "warm handoff on bundle {bundle} (admit {from}) matched no \
+                         journaled admission — the live-slot export and the admit \
+                         table disagree"
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Drop one specific in-flight request of `bundle` (admit key
+    /// `from`) at time `at`: the warm-handoff overflow path — a live
+    /// decode the rebuilt, smaller shape cannot seat. FIFO within equal
+    /// admit times; a missing entry poisons the core.
+    pub fn on_drop_at(&mut self, bundle: u32, from: f64, at: f64) {
+        match self.take_admitted(bundle, from) {
+            Some(id) => {
+                self.dropped += 1;
+                self.record(JournalEvent::Drop { id, bundle, at });
+            }
+            None => {
+                if self.poisoned.is_none() {
+                    self.poisoned = Some(format!(
+                        "epoch-boundary drop on bundle {bundle} (admit {from}) matched \
+                         no journaled admission — the live-slot export and the admit \
+                         table disagree"
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Pop the oldest admitted id under `(bundle, admit-time)` exactly
+    /// like completion matching does (FIFO among equal-time admits).
+    fn take_admitted(&mut self, bundle: u32, at: f64) -> Option<u64> {
+        let key = (bundle, at.to_bits());
+        let q = self.admit_index.get_mut(&key)?;
+        let id = if q.is_empty() { None } else { Some(q.remove(0)) };
+        if q.is_empty() {
+            self.admit_index.remove(&key);
+        }
+        id
     }
 
     /// Discard every in-flight request of `bundle` at an epoch rebuild
@@ -343,10 +410,55 @@ impl Ingress {
             completed: self.completed,
             preloaded: self.preloaded,
             dropped: self.dropped,
+            handoffs: self.handoffs,
             inflight: self.store.scan_inflight().len() as u64,
             queue_depth,
         }
     }
+
+    /// Derive the shedding advice upstream admission control should
+    /// apply right now, from the dispatcher's own queue-depth view
+    /// (`offered − admitted − rejected`, summed over bundles):
+    /// [`BackpressureLevel::Soft`] at or past `soft` queued arrivals,
+    /// [`BackpressureLevel::Hard`] at or past `hard`. A zero threshold
+    /// disables its level.
+    pub fn backpressure(&self, soft: u64, hard: u64) -> BackpressureSignal {
+        let queue_depth = self.stats().queue_depth;
+        let level = if hard > 0 && queue_depth >= hard {
+            BackpressureLevel::Hard
+        } else if soft > 0 && queue_depth >= soft {
+            BackpressureLevel::Soft
+        } else {
+            BackpressureLevel::Clear
+        };
+        BackpressureSignal {
+            level,
+            queue_depth,
+            pressure: if soft > 0 { queue_depth as f64 / soft as f64 } else { 0.0 },
+        }
+    }
+}
+
+/// Shedding advice tiers derived from dispatcher queue depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressureLevel {
+    /// Admit freely.
+    Clear,
+    /// Shed best-effort (lowest-priority) traffic.
+    Soft,
+    /// Shed everything but the highest priority tier.
+    Hard,
+}
+
+/// A point-in-time backpressure reading (see [`Ingress::backpressure`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackpressureSignal {
+    pub level: BackpressureLevel,
+    /// Visible queue depth the reading derives from.
+    pub queue_depth: u64,
+    /// Depth as a multiple of the soft threshold (0 when disabled);
+    /// crosses 1.0 exactly when the level leaves `Clear`.
+    pub pressure: f64,
 }
 
 // ------------------------------------------------------------- wrappers
@@ -365,6 +477,12 @@ pub enum IngressEvent {
     Counts { bundle: u32, offered: u64, admitted: u64, rejected: u64 },
     Complete { bundle: u32, offset: f64, completion: Completion },
     EpochEnd { bundle: u32, at: f64 },
+    /// Warm handoff: re-key one in-flight request from admit key `from`
+    /// to `to` across an epoch rebuild.
+    Handoff { bundle: u32, from: f64, to: f64 },
+    /// Warm-handoff overflow: drop the one in-flight request keyed
+    /// `from` at time `at`.
+    DropAt { bundle: u32, from: f64, at: f64 },
     GrantPreload { n: u64 },
     Checkpoint,
 }
@@ -537,7 +655,7 @@ mod tests {
     use crate::ingress::lifecycle::Phase;
 
     fn completion(finish: f64, admit: f64) -> Completion {
-        Completion { finish_time: finish, admit_time: admit, prefill: 8, decode_len: 4 }
+        Completion { finish_time: finish, admit_time: admit, prefill: 8, decode_len: 4, class: 0, wait: 0.0 }
     }
 
     #[test]
@@ -671,5 +789,71 @@ mod tests {
         core.borrow_mut().note_arrival_counts(0, 10, 6, 1);
         core.borrow_mut().note_arrival_counts(1, 4, 4, 0);
         assert_eq!(core.borrow().stats().queue_depth, 3);
+    }
+
+    #[test]
+    fn handoff_rekeys_inflight_across_epochs() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.on_admit(0, 2.0);
+            // Rebuild at t=5: the id admitted at 1.0 moves onto the new
+            // epoch's key and later completes under it.
+            c.on_handoff(0, 1.0, 5.25);
+            c.on_complete(0, 0.0, &completion(9.0, 5.25));
+            c.on_complete(0, 0.0, &completion(9.5, 2.0));
+        }
+        let c = core.borrow();
+        let s = c.stats();
+        assert_eq!(s.handoffs, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.preloaded, 0);
+        assert_eq!(s.inflight, 0);
+        c.ensure_healthy().unwrap();
+    }
+
+    #[test]
+    fn drop_at_retires_one_specific_request() {
+        let core = Ingress::in_memory();
+        {
+            let mut c = core.borrow_mut();
+            c.on_admit(0, 1.0);
+            c.on_admit(0, 2.0);
+            c.on_drop_at(0, 1.0, 4.0);
+        }
+        let c = core.borrow();
+        let s = c.stats();
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.inflight, 1);
+        assert_eq!(c.scan_inflight().first().unwrap().phase, Phase::Admitted);
+        c.ensure_healthy().unwrap();
+    }
+
+    #[test]
+    fn handoff_of_unknown_admission_poisons() {
+        let core = Ingress::in_memory();
+        core.borrow_mut().on_handoff(0, 7.0, 8.0);
+        assert!(core.borrow().ensure_healthy().is_err());
+    }
+
+    #[test]
+    fn backpressure_tiers_follow_queue_depth() {
+        let core = Ingress::in_memory();
+        core.borrow_mut().note_arrival_counts(0, 10, 4, 0);
+        let c = core.borrow();
+        let clear = c.backpressure(8, 16);
+        assert_eq!(clear.level, BackpressureLevel::Clear);
+        assert_eq!(clear.queue_depth, 6);
+        assert!(clear.pressure < 1.0);
+        let soft = c.backpressure(6, 16);
+        assert_eq!(soft.level, BackpressureLevel::Soft);
+        assert!(soft.pressure >= 1.0);
+        let hard = c.backpressure(2, 6);
+        assert_eq!(hard.level, BackpressureLevel::Hard);
+        let disabled = c.backpressure(0, 0);
+        assert_eq!(disabled.level, BackpressureLevel::Clear);
+        assert_eq!(disabled.pressure, 0.0);
     }
 }

@@ -35,7 +35,10 @@ pub mod lifecycle;
 pub mod recovery;
 pub mod store;
 
-pub use dispatcher::{Ingress, IngressArrival, IngressHandle, IngressObserver, IngressStats};
+pub use dispatcher::{
+    BackpressureLevel, BackpressureSignal, Ingress, IngressArrival, IngressHandle,
+    IngressObserver, IngressStats,
+};
 pub use lifecycle::{Phase, RequestState, ServingRequest, TrackedRequest};
 pub use recovery::{run_fresh, run_recover, Artifacts, RunSpec};
 pub use store::{JournalStore, MemStore, StateStore};

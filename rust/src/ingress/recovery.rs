@@ -24,6 +24,7 @@ use std::path::Path;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::coordinator::router::Policy;
+use crate::coordinator::AutoscaleMode;
 use crate::error::{AfdError, Result};
 use crate::ingress::dispatcher::{Ingress, IngressHandle, IngressStats};
 use crate::ingress::store::{JournalEvent, JournalStore, StateStore};
@@ -33,6 +34,7 @@ use crate::server::metrics_export::{
 };
 use crate::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
 use crate::sim::session::{OpenLoopPoisson, Simulation};
+use crate::traffic::{ClassSet, RateFn};
 use crate::util::json::Json;
 
 /// Arrival regime of a journaled run.
@@ -48,6 +50,9 @@ pub struct AutoscaleSpec {
     pub feasible: Vec<usize>,
     pub window: usize,
     pub epoch: usize,
+    /// Recommendation rule; journals written before the SLO-aware mode
+    /// existed decode to [`AutoscaleMode::Stationary`].
+    pub mode: AutoscaleMode,
 }
 
 /// Everything needed to rebuild a run from its journal header: the
@@ -71,6 +76,15 @@ pub struct RunSpec {
     /// Cost-model selector, re-parsed by [`CostSpec::parse`].
     pub cost: String,
     pub autoscale: Option<AutoscaleSpec>,
+    /// Nonstationary traffic profile (`--traffic` grammar, re-parsed by
+    /// [`RateFn::parse`]); the raw CLI string is stored so recovery
+    /// parses the exact same decimal literals into the exact same
+    /// floats.
+    pub traffic: Option<String>,
+    /// Traffic classes (`--classes` grammar).
+    pub classes: Option<String>,
+    /// Per-class SLO targets (`--slo` grammar).
+    pub slo: Option<String>,
 }
 
 const HEADER_VERSION: &str = "1";
@@ -103,6 +117,19 @@ impl RunSpec {
             e.push(("autoscale_feasible".into(), feasible.join(",")));
             e.push(("autoscale_window".into(), a.window.to_string()));
             e.push(("autoscale_epoch".into(), a.epoch.to_string()));
+            e.push(("autoscale_mode".into(), a.mode.name().into()));
+            if let AutoscaleMode::SloAware { headroom } = a.mode {
+                e.push(("autoscale_headroom_bits".into(), headroom.to_bits().to_string()));
+            }
+        }
+        if let Some(t) = &self.traffic {
+            e.push(("traffic".into(), t.clone()));
+        }
+        if let Some(c) = &self.classes {
+            e.push(("classes".into(), c.clone()));
+        }
+        if let Some(s) = &self.slo {
+            e.push(("slo".into(), s.clone()));
         }
         e
     }
@@ -142,10 +169,18 @@ impl RunSpec {
                     .split(',')
                     .map(|s| s.trim().parse::<usize>().map_err(|_| bad("autoscale_feasible")))
                     .collect::<Result<_>>()?;
+                let mode = match get("autoscale_mode") {
+                    None | Some("stationary") => AutoscaleMode::Stationary,
+                    Some("slo") => AutoscaleMode::SloAware {
+                        headroom: f64::from_bits(get_u64("autoscale_headroom_bits")?),
+                    },
+                    Some(_) => return Err(bad("autoscale_mode")),
+                };
                 Some(AutoscaleSpec {
                     feasible,
                     window: get_usize("autoscale_window")?,
                     epoch: get_usize("autoscale_epoch")?,
+                    mode,
                 })
             }
         };
@@ -160,7 +195,24 @@ impl RunSpec {
             policy: get("policy").ok_or_else(|| bad("policy"))?.to_string(),
             cost: get("cost").ok_or_else(|| bad("cost"))?.to_string(),
             autoscale,
+            traffic: get("traffic").map(str::to_string),
+            classes: get("classes").map(str::to_string),
+            slo: get("slo").map(str::to_string),
         })
+    }
+
+    /// Parse the stored class/SLO strings into a [`ClassSet`], if any.
+    fn class_set(&self) -> Result<Option<ClassSet>> {
+        match &self.classes {
+            None => Ok(None),
+            Some(c) => {
+                let mut set = ClassSet::parse(c)?;
+                if let Some(s) = &self.slo {
+                    set = set.with_slos(s)?;
+                }
+                Ok(Some(set))
+            }
+        }
     }
 }
 
@@ -184,6 +236,7 @@ pub fn ingress_stats_to_json(s: &IngressStats) -> Json {
         .set("completed", Json::Num(s.completed as f64))
         .set("preloaded", Json::Num(s.preloaded as f64))
         .set("dropped", Json::Num(s.dropped as f64))
+        .set("handoffs", Json::Num(s.handoffs as f64))
         .set("inflight", Json::Num(s.inflight as f64))
         .set("queue_depth", Json::Num(s.queue_depth as f64))
 }
@@ -223,7 +276,14 @@ fn execute_session(
         .cost_spec(CostSpec::parse(&spec.cost)?)
         .ingress(core.clone());
     if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
-        builder = builder.arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed)?);
+        let mut arrival = match &spec.traffic {
+            Some(t) => OpenLoopPoisson::with_traffic(RateFn::parse(t)?, queue, cfg.seed)?,
+            None => OpenLoopPoisson::new(lambda, queue, cfg.seed)?,
+        };
+        if let Some(set) = spec.class_set()? {
+            arrival = arrival.classes(&set);
+        }
+        builder = builder.arrival(arrival);
     }
     let mut sim = builder.build()?;
     let mut steps: u64 = 0;
@@ -268,11 +328,18 @@ fn execute_cluster(
     if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
         builder = builder.arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
     }
+    if let Some(t) = &spec.traffic {
+        builder = builder.traffic(RateFn::parse(t)?);
+    }
+    if let Some(set) = spec.class_set()? {
+        builder = builder.traffic_classes(set);
+    }
     if let Some(a) = &spec.autoscale {
         builder = builder.autoscale(AutoscaleConfig {
             feasible: a.feasible.clone(),
             window: a.window,
             epoch_completions: a.epoch,
+            mode: a.mode,
         });
     }
     let mut sim = builder.build()?;
@@ -369,7 +436,15 @@ mod tests {
             bundles: 4,
             policy: "jsq".into(),
             cost: "linear".into(),
-            autoscale: Some(AutoscaleSpec { feasible: vec![1, 2, 4], window: 32, epoch: 16 }),
+            autoscale: Some(AutoscaleSpec {
+                feasible: vec![1, 2, 4],
+                window: 32,
+                epoch: 16,
+                mode: AutoscaleMode::Stationary,
+            }),
+            traffic: None,
+            classes: None,
+            slo: None,
         }
     }
 
@@ -384,6 +459,31 @@ mod tests {
             ..s
         };
         assert_eq!(RunSpec::from_entries(&closed.to_entries()).unwrap(), closed);
+        let nonstationary = RunSpec {
+            autoscale: Some(AutoscaleSpec {
+                feasible: vec![1, 2, 4],
+                window: 32,
+                epoch: 16,
+                mode: AutoscaleMode::SloAware { headroom: 1.0 + 0.2 },
+            }),
+            traffic: Some("diurnal:1.0:0.5:400".into()),
+            classes: Some("batch:3:0,web:1:2".into()),
+            slo: Some("web:p95:40:2".into()),
+            ..spec()
+        };
+        assert_eq!(
+            RunSpec::from_entries(&nonstationary.to_entries()).unwrap(),
+            nonstationary
+        );
+    }
+
+    #[test]
+    fn unknown_autoscale_mode_is_an_error() {
+        let mut e = spec().to_entries();
+        e.push(("autoscale_mode".into(), "bogus".into()));
+        // spec() already emits autoscale_mode=stationary; replace it.
+        e.retain(|(k, v)| k != "autoscale_mode" || v == "bogus");
+        assert!(RunSpec::from_entries(&e).is_err());
     }
 
     #[test]

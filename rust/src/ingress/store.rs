@@ -23,7 +23,9 @@
 //!
 //! Tags: 0 Header (self-describing run spec, key/value pairs; always
 //! the first record), 1 Admit, 2 Reject, 3 Complete, 4 Drop (in-flight
-//! request discarded at an epoch rebuild or bundle shutdown).
+//! request discarded at an epoch rebuild or bundle shutdown), 5 Handoff
+//! (in-flight request re-keyed onto the next epoch's clock by a warm
+//! autoscale rebuild — it survives instead of dropping).
 //! Encoding is fallible rather than lossy: a string longer than the
 //! u16 length prefix or a payload past [`MAX_RECORD`] is an error, not
 //! a silent truncation the decoder would later reject as a torn tail.
@@ -63,8 +65,13 @@ pub enum JournalEvent {
     Complete { id: u64, bundle: u32, finish: f64, admit: f64, prefill: u64, decode: u64 },
     /// In-flight request discarded when its bundle rebuilt at an epoch
     /// boundary or shut down at its completion target (slots restart
-    /// or vanish; see ROADMAP graceful-drain follow-up).
+    /// or vanish).
     Drop { id: u64, bundle: u32, at: f64 },
+    /// In-flight request carried across an epoch rebuild by a warm
+    /// handoff: its admit key moves from `from` (old epoch's clock) to
+    /// `to` (same instant on the new epoch's clock); the request stays
+    /// admitted and completes under the new key.
+    Handoff { id: u64, bundle: u32, from: f64, to: f64 },
 }
 
 impl JournalEvent {
@@ -75,6 +82,7 @@ impl JournalEvent {
             JournalEvent::Reject { .. } => 2,
             JournalEvent::Complete { .. } => 3,
             JournalEvent::Drop { .. } => 4,
+            JournalEvent::Handoff { .. } => 5,
         }
     }
 }
@@ -140,6 +148,22 @@ impl InflightTable {
                 self.transition(*id, Phase::Completed, *finish)
             }
             JournalEvent::Drop { id, at, .. } => self.transition(*id, Phase::Rejected, *at),
+            JournalEvent::Handoff { id, bundle, to, .. } => {
+                let rec = self.map.get_mut(id).ok_or_else(|| {
+                    AfdError::Coordinator(format!("handoff of untracked request {id}"))
+                })?;
+                if rec.bundle != *bundle {
+                    return Err(AfdError::Coordinator(format!(
+                        "handoff of request {id} on bundle {bundle} but it is tracked on \
+                         bundle {}",
+                        rec.bundle
+                    )));
+                }
+                // The phase is untouched (still admitted/decoding); only
+                // the transition clock moves onto the new epoch.
+                rec.since = *to;
+                Ok(())
+            }
         }
     }
 
@@ -291,6 +315,12 @@ pub fn encode_record(seq: u64, ev: &JournalEvent) -> Result<Vec<u8>> {
             put_u32(&mut p, *bundle);
             put_f64(&mut p, *at);
         }
+        JournalEvent::Handoff { id, bundle, from, to } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *bundle);
+            put_f64(&mut p, *from);
+            put_f64(&mut p, *to);
+        }
     }
     if p.len() > MAX_RECORD {
         return Err(AfdError::Coordinator(format!(
@@ -374,6 +404,7 @@ fn decode_payload(payload: &[u8]) -> Option<(u64, JournalEvent)> {
             decode: c.u64()?,
         },
         4 => JournalEvent::Drop { id: c.u64()?, bundle: c.u32()?, at: c.f64()? },
+        5 => JournalEvent::Handoff { id: c.u64()?, bundle: c.u32()?, from: c.f64()?, to: c.f64()? },
         _ => return None,
     };
     if c.off != payload.len() {
@@ -598,7 +629,8 @@ mod tests {
             JournalEvent::Admit { id: 1, bundle: 0, at: 0.5 },
             JournalEvent::Admit { id: 2, bundle: 1, at: 0.75 },
             JournalEvent::Reject { bundle: 0, at: 1.0 },
-            JournalEvent::Complete { id: 1, bundle: 0, finish: 9.5, admit: 0.5, prefill: 8, decode: 4 },
+            JournalEvent::Handoff { id: 1, bundle: 0, from: 0.5, to: 2.5 },
+            JournalEvent::Complete { id: 1, bundle: 0, finish: 9.5, admit: 2.5, prefill: 8, decode: 4 },
             JournalEvent::Drop { id: 2, bundle: 1, at: 10.0 },
         ]
     }
@@ -672,6 +704,19 @@ mod tests {
     }
 
     #[test]
+    fn handoff_rekeys_without_phase_change() {
+        let mut s = MemStore::new();
+        s.put(&JournalEvent::Admit { id: 1, bundle: 0, at: 1.0 }).unwrap();
+        s.put(&JournalEvent::Handoff { id: 1, bundle: 0, from: 1.0, to: 3.5 }).unwrap();
+        let rec = *s.scan_inflight().first().unwrap();
+        assert_eq!(rec.phase, Phase::Admitted);
+        assert_eq!(rec.since, 3.5);
+        // Untracked id and bundle mismatch are accounting errors.
+        assert!(s.put(&JournalEvent::Handoff { id: 9, bundle: 0, from: 1.0, to: 2.0 }).is_err());
+        assert!(s.put(&JournalEvent::Handoff { id: 1, bundle: 3, from: 3.5, to: 4.0 }).is_err());
+    }
+
+    #[test]
     fn journal_round_trips_through_disk() {
         let dir = tmpdir("roundtrip");
         {
@@ -683,7 +728,7 @@ mod tests {
         }
         let (s, events) = JournalStore::open(&dir, 64).unwrap();
         assert_eq!(events, sample_events());
-        assert_eq!(s.seq(), 6);
+        assert_eq!(s.seq(), 7);
         assert!(s.scan_inflight().is_empty()); // 1 completed, 2 dropped
         let _ = fs::remove_dir_all(&dir);
     }
@@ -709,17 +754,17 @@ mod tests {
         }
         let path = JournalStore::journal_path(&dir);
         let full = fs::read(&path).unwrap();
-        let last = encode_record(6, sample_events().last().unwrap()).unwrap();
+        let last = encode_record(7, sample_events().last().unwrap()).unwrap();
         let tail_start = full.len() - last.len();
         for cut in tail_start..full.len() {
             let trunc_dir = tmpdir("torn_cut");
             fs::create_dir_all(&trunc_dir).unwrap();
             fs::write(JournalStore::journal_path(&trunc_dir), &full[..cut]).unwrap();
             let (s, events) = JournalStore::open(&trunc_dir, 1).unwrap();
-            assert_eq!(events.len(), 5, "cut at {cut}");
+            assert_eq!(events.len(), 6, "cut at {cut}");
             // The tail record was Drop{2}; without it, 2 is in flight.
             assert_eq!(s.scan_inflight().len(), 1);
-            assert_eq!(s.seq(), 5);
+            assert_eq!(s.seq(), 6);
             let _ = fs::remove_dir_all(&trunc_dir);
         }
         let _ = fs::remove_dir_all(&dir);

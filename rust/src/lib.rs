@@ -32,6 +32,10 @@
 //!   replay), and step/completion/idle observers — plus `sim::cluster`,
 //!   the fleet-scale simulation of N bundles sharing one routed request
 //!   stream with online per-bundle autoscaling.
+//! * [`traffic`] — nonstationary traffic: time-varying arrival-rate
+//!   functions (diurnal / MMPP / flash crowd) sampled by deterministic
+//!   Lewis–Shedler thinning, plus multi-tenant traffic classes with
+//!   priorities and TTFT/TPOT percentile SLO targets.
 //! * [`sweep`] — the multi-scenario parallel sweep subsystem: a named
 //!   workload-scenario registry (synthetic + trace replay), a
 //!   deterministic (scenario × arrival × fleet × r × B) grid runner on
@@ -72,6 +76,7 @@ pub mod workload;
 pub mod latency;
 pub mod analysis;
 pub mod sim;
+pub mod traffic;
 pub mod sweep;
 pub mod ingress;
 pub mod coordinator;

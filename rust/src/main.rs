@@ -19,8 +19,10 @@
 use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::{recommend_from_load, recommend_from_trace};
 use afd::config::experiment::ExperimentConfig;
+use afd::coordinator::AutoscaleMode;
 use afd::error::Result;
 use afd::sim::session::{OpenLoopPoisson, Simulation, TraceReplay};
+use afd::traffic::{ClassReport, ClassSet, ClassTally, RateFn};
 use afd::util::cli::{Args, HelpBuilder};
 use afd::util::tablefmt::{sig, Table};
 use afd::workload::stationary::stationary_for_spec;
@@ -46,6 +48,95 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     }
 }
 
+/// `--autoscale` value → mode: bare flag / `true` / `stationary` keep
+/// the classic throughput-maximizing scaler; `slo` (optionally
+/// `slo:HEADROOM`, default 1.1) tracks the windowed arrival rate.
+fn parse_autoscale_mode(args: &Args) -> Result<AutoscaleMode> {
+    let sel = match args.get("autoscale") {
+        None | Some("true") | Some("stationary") => return Ok(AutoscaleMode::Stationary),
+        Some(s) => s,
+    };
+    let mode = match sel.split_once(':') {
+        None if sel == "slo" => AutoscaleMode::SloAware { headroom: 1.1 },
+        Some(("slo", h)) => {
+            let headroom: f64 = h.trim().parse().map_err(|_| {
+                afd::AfdError::config(format!(
+                    "--autoscale slo:{h:?}: headroom is not a number"
+                ))
+            })?;
+            AutoscaleMode::SloAware { headroom }
+        }
+        _ => {
+            return Err(afd::AfdError::config(format!(
+                "unknown autoscale mode {sel:?}; expected stationary|slo[:headroom]"
+            )));
+        }
+    };
+    mode.validate()?;
+    Ok(mode)
+}
+
+/// `--classes name:share:priority,...` plus optional
+/// `--slo name:pXX:ttft:tpot,...` → a validated class set.
+fn parse_class_args(args: &Args) -> Result<Option<ClassSet>> {
+    let set = match args.get("classes") {
+        Some(spec) => ClassSet::parse(spec)?,
+        None => {
+            if args.get("slo").is_some() {
+                return Err(afd::AfdError::config(
+                    "--slo requires --classes <name:share:priority,...>",
+                ));
+            }
+            return Ok(None);
+        }
+    };
+    match args.get("slo") {
+        Some(slo) => Ok(Some(set.with_slos(slo)?)),
+        None => Ok(Some(set)),
+    }
+}
+
+/// Per-class traffic/SLO report table (offered/rejected come from the
+/// arrival-side tally when the run produced one).
+fn class_table(reports: &[ClassReport], tally: Option<&ClassTally>) -> Table {
+    let mut t = Table::new(&[
+        "class",
+        "prio",
+        "offered",
+        "rejected",
+        "completed",
+        "TTFT@p",
+        "TPOT@p",
+        "TTFT att",
+        "TPOT att",
+        "SLO",
+    ])
+    .with_title("Per-class traffic report");
+    for r in reports {
+        let offered =
+            tally.and_then(|y| y.offered.get(r.class as usize)).copied().unwrap_or(0);
+        let rejected =
+            tally.and_then(|y| y.rejected.get(r.class as usize)).copied().unwrap_or(0);
+        t.row(&[
+            r.name.clone(),
+            r.priority.to_string(),
+            offered.to_string(),
+            rejected.to_string(),
+            r.completed.to_string(),
+            sig(r.ttft_p, 4),
+            sig(r.tpot_p, 4),
+            format!("{:.1}%", 100.0 * r.ttft_attainment),
+            format!("{:.1}%", 100.0 * r.tpot_attainment),
+            match &r.slo {
+                Some(_) if r.attained => "met".to_string(),
+                Some(_) => "MISSED".to_string(),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("provision") => provision(args),
@@ -64,8 +155,8 @@ fn run(args: &Args) -> Result<()> {
                 HelpBuilder::new("afd", "Analytical provisioning for Attention-FFN disaggregated LLM serving")
                     .entry("provision", "compute the optimal A/F ratio (closed form + barrier-aware)")
                     .entry("simulate", "run one session at --r (alias sim; --trace <csv>, --arrival open|closed, --cost linear|roofline|moe)")
-                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale, --bundle-specs r:b:cost,..., --threads)")
-                    .entry("sweep", "parallel (scenario x arrival x fleet x cost x r x B) sweep with theory-vs-sim columns")
+                    .entry("cluster", "simulate N rA-1F bundles sharing one stream (--bundles, --policy, --autoscale [slo], --traffic, --classes, --threads)")
+                    .entry("sweep", "parallel (scenario x arrival x fleet x cost x r x B) sweep with theory-vs-sim columns (--traffic, --classes, --slo)")
                     .entry("estimate", "estimate (theta, nu^2) from --trace <csv>")
                     .entry("serve", "serve batched requests through the real PJRT engine")
                     .entry("gen-trace", "write a synthetic production-like trace CSV")
@@ -119,6 +210,12 @@ fn provision(args: &Args) -> Result<()> {
 ///   --arrival closed|open  arrival process (default closed)
 ///   --lambda X           open-loop arrival rate in requests/cycle
 ///   --queue N            open-loop admission-queue capacity (default 4096)
+///   --traffic SPEC       nonstationary open-loop rate profile:
+///                        constant:R | diurnal:BASE:AMP:PERIOD |
+///                        mmpp:R0:R1:DWELL | flash:BASE:PEAK:START:DUR
+///                        (replaces --lambda; requires --arrival open)
+///   --classes SPEC       multi-tenant classes name:share:priority,...
+///   --slo SPEC           per-class SLOs name:pXX:ttft:tpot,...
 ///   --cost MODEL         phase-cost model: linear|roofline|moe[:p:f]|
 ///                        blended[:w] (default linear)
 ///   --completions-csv P  write the completion records as CSV
@@ -135,17 +232,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("replaying {} requests from {path} (sharded per lane x worker)", trace.len());
         builder = builder.length_source(TraceReplay::new(&trace)?);
     }
+    let classes = parse_class_args(args)?;
     match args.get_str("arrival", "closed").as_str() {
-        "closed" => {}
-        "open" => {
-            let lambda = args.get_f64("lambda", 0.0)?;
-            if lambda <= 0.0 {
+        "closed" => {
+            if args.get("traffic").is_some() || classes.is_some() {
                 return Err(afd::AfdError::config(
-                    "--arrival open requires --lambda <requests/cycle> (> 0)",
+                    "--traffic/--classes require --arrival open",
                 ));
             }
+        }
+        "open" => {
             let queue = args.get_usize("queue", 4096)?;
-            builder = builder.arrival(OpenLoopPoisson::new(lambda, queue, cfg.seed)?);
+            let mut arrival = match args.get("traffic") {
+                Some(spec) => {
+                    OpenLoopPoisson::with_traffic(RateFn::parse(spec)?, queue, cfg.seed)?
+                }
+                None => {
+                    let lambda = args.get_f64("lambda", 0.0)?;
+                    if lambda <= 0.0 {
+                        return Err(afd::AfdError::config(
+                            "--arrival open requires --lambda <requests/cycle> (> 0) \
+                             or --traffic <profile>",
+                        ));
+                    }
+                    OpenLoopPoisson::new(lambda, queue, cfg.seed)?
+                }
+            };
+            if let Some(set) = &classes {
+                arrival = arrival.classes(set);
+            }
+            builder = builder.arrival(arrival);
         }
         other => {
             return Err(afd::AfdError::config(format!(
@@ -171,6 +287,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "queue: mean wait {:.2} cycles, mean length {:.2}",
             a.mean_queue_wait, a.mean_queue_len
         );
+    }
+    if let Some(set) = &classes {
+        class_table(&set.evaluate(&out.completions), out.classes.as_ref()).print();
     }
     if let Some(path) = args.get("completions-csv") {
         afd::server::metrics_export::completions_to_csv_table(&out.completions)
@@ -199,7 +318,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///   --arrival closed|open  arrival regime (default closed)
 ///   --lambda X           cluster-wide open-loop rate (requests/cycle)
 ///   --queue N            per-bundle inbox capacity (default 4096)
-///   --autoscale          enable online per-bundle autoscaling
+///   --traffic SPEC       nonstationary shared-stream rate profile:
+///                        constant:R | diurnal:BASE:AMP:PERIOD |
+///                        mmpp:R0:R1:DWELL | flash:BASE:PEAK:START:DUR
+///                        (replaces --lambda; requires --arrival open)
+///   --classes SPEC       multi-tenant classes name:share:priority,...
+///                        (priority-aware shedding + per-class report)
+///   --slo SPEC           per-class SLOs name:pXX:ttft:tpot,...
+///   --autoscale [MODE]   enable online per-bundle autoscaling; MODE is
+///                        stationary (default, throughput-maximizing) or
+///                        slo[:headroom] (windowed rate-tracking,
+///                        headroom >= 1, default 1.1)
 ///   --feasible a,b,...   autoscaler candidate fan-ins (default 1..16)
 ///   --window N           autoscaler estimator window (default 2000)
 ///   --epoch N            completions per autoscale epoch (default 1500)
@@ -251,16 +380,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         })?;
         builder = builder.completions_per_bundle(Some(n));
     }
+    let classes = parse_class_args(args)?;
     match args.get_str("arrival", "closed").as_str() {
         "closed" => {}
         "open" => {
-            let lambda = args.get_f64("lambda", 0.0)?;
-            if lambda <= 0.0 {
-                return Err(afd::AfdError::config(
-                    "--arrival open requires --lambda <requests/cycle> (> 0, cluster-wide)",
-                ));
-            }
             let queue = args.get_usize("queue", 4096)?;
+            // With a traffic profile the regime lambda is the profile's
+            // nominal rate (the builder folds the profile in); plain
+            // open streams still require an explicit --lambda.
+            let lambda = match args.get("traffic") {
+                Some(spec) => RateFn::parse(spec)?.nominal_rate(),
+                None => {
+                    let l = args.get_f64("lambda", 0.0)?;
+                    if l <= 0.0 {
+                        return Err(afd::AfdError::config(
+                            "--arrival open requires --lambda <requests/cycle> \
+                             (> 0, cluster-wide) or --traffic <profile>",
+                        ));
+                    }
+                    l
+                }
+            };
             builder = builder
                 .arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
         }
@@ -270,11 +410,18 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             )));
         }
     }
-    if args.has_flag("autoscale") {
+    if let Some(spec) = args.get("traffic") {
+        builder = builder.traffic(RateFn::parse(spec)?);
+    }
+    if let Some(set) = classes.clone() {
+        builder = builder.traffic_classes(set);
+    }
+    if args.has_flag("autoscale") || args.get("autoscale").is_some() {
         builder = builder.autoscale(AutoscaleConfig {
             feasible: feasible.clone(),
             window: args.get_usize("window", 2000)?,
             epoch_completions: args.get_usize("epoch", 1500)?,
+            mode: parse_autoscale_mode(args)?,
         });
     }
     let threads = args.get_usize("threads", 1)?;
@@ -362,6 +509,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             "queues: mean wait {:.2} cycles, mean total length {:.2}",
             a.mean_queue_wait, a.mean_queue_len
         );
+    }
+    if let Some(set) = &classes {
+        let all: Vec<afd::sim::slots::Completion> =
+            out.bundles.iter().flat_map(|b| b.completions.iter().copied()).collect();
+        class_table(&set.evaluate(&all), out.classes.as_ref()).print();
     }
     if let Some(f) = &out.fleet {
         let per_barrier = if f.barriers > 0 {
@@ -460,6 +612,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 ///   --rho X                     open-loop utilization target (default 0.85)
 ///   --lambda X                  open-loop absolute rate override (req/cycle)
 ///   --queue N                   open-loop queue capacity (default 4096)
+///   --traffic S1,S2,...         nonstationary arrival-axis points, each a
+///                               rate profile (diurnal:B:A:P, mmpp:R0:R1:D,
+///                               flash:B:P:S:D, constant:R); replaces the
+///                               --arrival axis unless --arrival is given
+///                               explicitly, in which case both are swept
+///   --classes SPEC              grid-wide classes name:share:priority,...
+///   --slo SPEC                  per-class SLOs name:pXX:ttft:tpot,...
+///                               (per-class columns land in --csv/--json)
 ///   --ratios 1,2,4,...          fan-in grid (default config ratio_sweep)
 ///   --batches 256,...           per-worker batch grid (default config B)
 ///   --requests N                completions per Attention instance
@@ -518,7 +678,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         },
         queue_capacity: args.get_usize("queue", 4096)?,
     };
-    let arrivals = match args.get_str("arrival", "closed").as_str() {
+    let mut arrivals = match args.get_str("arrival", "closed").as_str() {
         "closed" => vec![ArrivalSpec::Closed],
         "open" => vec![open_spec],
         "both" => vec![ArrivalSpec::Closed, open_spec],
@@ -528,6 +688,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             )));
         }
     };
+    if let Some(spec) = args.get("traffic") {
+        let queue = args.get_usize("queue", 4096)?;
+        let traffic_cells: Vec<ArrivalSpec> = spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                Ok(ArrivalSpec::Traffic {
+                    spec: RateFn::parse(s.trim())?,
+                    queue_capacity: queue,
+                })
+            })
+            .collect::<Result<_>>()?;
+        if traffic_cells.is_empty() {
+            return Err(afd::AfdError::config(
+                "--traffic requires at least one rate profile",
+            ));
+        }
+        // An explicit --arrival keeps its axis points alongside the
+        // traffic cells; otherwise the traffic profiles ARE the axis.
+        if args.get("arrival").is_none() {
+            arrivals = traffic_cells;
+        } else {
+            arrivals.extend(traffic_cells);
+        }
+    }
     let bundles_axis = args.get_list_usize("bundles", &[1])?;
     let policies: Vec<Policy> = args
         .get_str("policy", "rr")
@@ -554,7 +739,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .filter(|s| !s.trim().is_empty())
         .map(CostSpec::parse)
         .collect::<Result<_>>()?;
-    let grid = SweepGrid::new(
+    let mut grid = SweepGrid::new(
         selected,
         args.get_list_usize("ratios", &cfg.ratio_sweep)?,
         args.get_list_usize("batches", &[cfg.topology.batch_per_worker])?,
@@ -562,6 +747,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     .with_arrivals(arrivals)
     .with_fleets(fleets)
     .with_costs(cost_models);
+    if let Some(set) = parse_class_args(args)? {
+        grid = grid.with_classes(set);
+    }
     let threads = args.get_usize("threads", 0)?;
     println!(
         "sweeping {} scenario(s) x {} arrival(s) x {} fleet(s) x {} cost model(s) x {} ratio(s) x {} batch(es) = {} cells ({})",
@@ -732,11 +920,17 @@ fn cmd_lint(args: &Args) -> Result<()> {
 ///   --arrival closed|open  arrival regime (default closed)
 ///   --lambda X           open-loop arrival rate (requests/cycle)
 ///   --queue N            admission-queue capacity (default 4096)
+///   --traffic SPEC       nonstationary rate profile (as in `afd sim`);
+///                        journaled in the header, so recovery replays
+///                        the exact same thinned stream
+///   --classes SPEC       multi-tenant classes name:share:priority,...
+///   --slo SPEC           per-class SLOs name:pXX:ttft:tpot,...
 ///   --bundles N          fleet size (1 = single session; default 1)
 ///   --policy rr|jsq|ltl  routing policy for fleets (default jsq)
 ///   --cost MODEL         phase-cost model (default linear)
-///   --autoscale          enable per-bundle autoscaling (with --feasible,
-///                        --window, --epoch as in `afd cluster`)
+///   --autoscale [MODE]   enable per-bundle autoscaling (with --feasible,
+///                        --window, --epoch as in `afd cluster`; MODE is
+///                        stationary or slo[:headroom])
 ///   --csv PATH           write the completions CSV artifact
 ///   --json PATH          write the metrics JSON artifact
 fn cmd_ingress(args: &Args) -> Result<()> {
@@ -761,12 +955,21 @@ fn cmd_ingress(args: &Args) -> Result<()> {
         let arrival = match args.get_str("arrival", "closed").as_str() {
             "closed" => ArrivalSpec::Closed,
             "open" => {
-                let lambda = args.get_f64("lambda", 0.0)?;
-                if lambda <= 0.0 {
-                    return Err(afd::AfdError::config(
-                        "--arrival open requires --lambda <requests/cycle> (> 0)",
-                    ));
-                }
+                // With --traffic the regime lambda is only the nominal
+                // anchor (the rate function drives arrivals); without it
+                // an explicit positive --lambda is required.
+                let lambda = match args.get("traffic") {
+                    Some(spec) => RateFn::parse(spec)?.nominal_rate(),
+                    None => {
+                        let lambda = args.get_f64("lambda", 0.0)?;
+                        if lambda <= 0.0 {
+                            return Err(afd::AfdError::config(
+                                "--arrival open requires --lambda <requests/cycle> (> 0)",
+                            ));
+                        }
+                        lambda
+                    }
+                };
                 ArrivalSpec::Open { lambda, queue: args.get_usize("queue", 4096)? }
             }
             other => {
@@ -775,15 +978,29 @@ fn cmd_ingress(args: &Args) -> Result<()> {
                 )));
             }
         };
-        let autoscale = if args.has_flag("autoscale") {
+        let autoscale = if args.has_flag("autoscale") || args.get("autoscale").is_some() {
             Some(AutoscaleSpec {
                 feasible: args.get_list_usize("feasible", &(1..=16).collect::<Vec<_>>())?,
                 window: args.get_usize("window", 2000)?,
                 epoch: args.get_usize("epoch", 1500)?,
+                mode: parse_autoscale_mode(args)?,
             })
         } else {
             None
         };
+        // Validate the traffic/class grammars up front (the journal
+        // header stores the raw strings; recovery re-parses them).
+        if let Some(spec) = args.get("traffic") {
+            RateFn::parse(spec)?.validate()?;
+        }
+        let class_set = parse_class_args(args)?;
+        if (args.get("traffic").is_some() || class_set.is_some())
+            && matches!(arrival, ArrivalSpec::Closed)
+        {
+            return Err(afd::AfdError::config(
+                "--traffic/--classes require --arrival open",
+            ));
+        }
         let spec = RunSpec {
             config_path: args.get("config").map(str::to_string),
             seed: args.get_u64("seed", cfg.seed)?,
@@ -795,6 +1012,9 @@ fn cmd_ingress(args: &Args) -> Result<()> {
             policy: args.get_str("policy", "jsq"),
             cost: args.get_str("cost", "linear"),
             autoscale,
+            traffic: args.get("traffic").map(str::to_string),
+            classes: args.get("classes").map(str::to_string),
+            slo: args.get("slo").map(str::to_string),
         };
         println!(
             "journaling {} x {}A-1F to {dir} (fsync every {fsync_every} records)",

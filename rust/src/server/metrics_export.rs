@@ -243,8 +243,22 @@ mod tests {
     #[test]
     fn completions_csv_is_byte_stable() {
         let completions = vec![
-            Completion { finish_time: 1234.5678901234, admit_time: 0.25, prefill: 64, decode_len: 7 },
-            Completion { finish_time: 2000.0, admit_time: 1234.5678901234, prefill: 8, decode_len: 3 },
+            Completion {
+                finish_time: 1234.5678901234,
+                admit_time: 0.25,
+                prefill: 64,
+                decode_len: 7,
+                class: 0,
+                wait: 0.0,
+            },
+            Completion {
+                finish_time: 2000.0,
+                admit_time: 1234.5678901234,
+                prefill: 8,
+                decode_len: 3,
+                class: 0,
+                wait: 0.0,
+            },
         ];
         let a = completions_to_csv_string(&completions);
         let b = completions_to_csv_string(&completions);

@@ -55,7 +55,7 @@ use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::config::experiment::ExperimentConfig;
-use crate::coordinator::autoscale::{Autoscaler, Reconfiguration};
+use crate::coordinator::autoscale::{AutoscaleMode, Autoscaler, Reconfiguration};
 use crate::coordinator::load::LoadSnapshot;
 use crate::coordinator::router::{Policy, Router};
 use crate::error::{AfdError, Result};
@@ -67,8 +67,9 @@ use crate::sim::metrics::SimMetrics;
 use crate::sim::session::{
     ArrivalProcess, ArrivalStats, LengthSource, OpenLoopPoisson, Simulation,
 };
-use crate::sim::slots::Completion;
+use crate::sim::slots::{Completion, LiveSlot};
 use crate::stats::rng::SplitMix64;
+use crate::traffic::{ClassAssigner, ClassSet, ClassTally, RateFn, ThinnedPoisson};
 use crate::workload::request::RequestLengths;
 
 /// Cluster-wide arrival regime.
@@ -173,6 +174,9 @@ pub struct AutoscaleConfig {
     /// recommended `r` at each epoch boundary. Should be >= `window / 2`
     /// for the estimator to reach its evaluation threshold every epoch.
     pub epoch_completions: usize,
+    /// Recommendation rule: the paper's stationary throughput argmax, or
+    /// the SLO-aware windowed-rate tracker (see [`AutoscaleMode`]).
+    pub mode: AutoscaleMode,
 }
 
 impl AutoscaleConfig {
@@ -188,7 +192,7 @@ impl AutoscaleConfig {
         if self.epoch_completions < 16 {
             return Err(AfdError::config("autoscale epoch must be >= 16 completions"));
         }
-        Ok(())
+        self.mode.validate()
     }
 }
 
@@ -201,8 +205,8 @@ pub(crate) type SourceFactory = Arc<dyn Fn(u64) -> Box<dyn LengthSource> + Send 
 /// Per-bundle admission inbox shared between the cluster router (pushes)
 /// and the bundle's arrival proxy (pops).
 pub(crate) struct Inbox {
-    /// Global arrival times, FIFO.
-    pub(crate) queue: VecDeque<f64>,
+    /// `(global arrival time, class)`, FIFO.
+    pub(crate) queue: VecDeque<(f64, u8)>,
     pub(crate) capacity: usize,
     pub(crate) admitted: u64,
     pub(crate) wait_sum: f64,
@@ -214,6 +218,8 @@ pub(crate) struct Inbox {
 pub(crate) struct InboxArrival {
     pub(crate) inbox: Rc<RefCell<Inbox>>,
     pub(crate) offset: f64,
+    /// Class of the most recently admitted arrival.
+    pub(crate) last_class: u8,
 }
 
 impl ArrivalProcess for InboxArrival {
@@ -221,14 +227,19 @@ impl ArrivalProcess for InboxArrival {
         let global = self.offset + now;
         let mut inbox = self.inbox.borrow_mut();
         match inbox.queue.front() {
-            Some(&arrived) if arrived <= global => {
+            Some(&(arrived, class)) if arrived <= global => {
                 inbox.queue.pop_front();
                 inbox.admitted += 1;
                 inbox.wait_sum += global - arrived;
+                self.last_class = class;
                 Some((arrived - self.offset).max(0.0))
             }
             _ => None,
         }
+    }
+
+    fn last_class(&self) -> u8 {
+        self.last_class
     }
 
     fn initial_fill(&self) -> bool {
@@ -258,19 +269,34 @@ impl ArrivalProcess for InboxArrival {
 }
 
 /// The cluster-wide Poisson generator (same exponential-gap construction
-/// as [`OpenLoopPoisson`], lifted above the bundles).
+/// as [`OpenLoopPoisson`], lifted above the bundles). With a
+/// nonstationary [`RateFn`] attached the gaps come from the same
+/// Lewis–Shedler thinning sampler the single-bundle session uses
+/// (`RateFn::Constant` never builds one — the legacy single-draw path is
+/// the compatibility surface for every existing seed). Traffic classes
+/// ride on top: the RNG-free weighted round-robin assigner tags each
+/// arrival and the tally counts per-class offers/rejects.
 pub(crate) struct SharedPoisson {
     pub(crate) lambda: f64,
+    /// Time-varying rate sampler (`None` = constant-rate legacy path).
+    pub(crate) traffic: Option<ThinnedPoisson>,
     pub(crate) rng: crate::stats::rng::Pcg64,
     pub(crate) next_arrival: f64,
     pub(crate) offered: u64,
     pub(crate) rejected: u64,
     pub(crate) queue_integral: f64,
     pub(crate) last_t: f64,
+    /// RNG-free WRR class assigner; `None` tags every arrival class 0.
+    pub(crate) assigner: Option<ClassAssigner>,
+    /// Shedding priority per class id (empty: tail-drop only).
+    pub(crate) priorities: Vec<u8>,
+    /// Per-class offered/rejected counters (present iff classes are).
+    pub(crate) tally: Option<ClassTally>,
     /// Gaps pre-drawn by [`Self::pre_draw`], consumed FIFO by
     /// [`Self::sample_gap`]. The RNG stream order is identical whether
     /// gaps are drawn lazily or batched per window, so pre-drawing can
-    /// never change an output bit.
+    /// never change an output bit (thinning consumes its two draws per
+    /// candidate in the same strict order on both paths).
     pub(crate) pending_gaps: VecDeque<f64>,
 }
 
@@ -280,28 +306,75 @@ impl SharedPoisson {
         let first_gap = -rng.next_f64_open().ln() / lambda;
         Self {
             lambda,
+            traffic: None,
             rng,
             next_arrival: first_gap,
             offered: 0,
             rejected: 0,
             queue_integral: 0.0,
             last_t: 0.0,
+            assigner: None,
+            priorities: Vec::new(),
+            tally: None,
             pending_gaps: VecDeque::new(),
         }
     }
 
-    /// Materialize every exponential gap needed to cover arrivals up to
-    /// time `until` (exclusive of the first arrival strictly past it).
-    /// The parallel fleet engine calls this once per barrier window so
-    /// the whole batch of arrivals it routes is drawn from the RNG in
-    /// one pass. `until` must be finite.
+    /// Nonstationary variant: same dedicated RNG stream, gaps drawn by
+    /// thinning against `spec`. `RateFn::Constant` short-circuits to
+    /// [`Self::new`] so existing seeds stay bitwise unchanged.
+    pub(crate) fn with_traffic(spec: RateFn, seed: u64) -> Result<Self> {
+        spec.validate()?;
+        if let RateFn::Constant { rate } = spec {
+            return Ok(Self::new(rate, seed));
+        }
+        let mut this = Self::new(spec.nominal_rate(), seed);
+        // Redo the first gap through the thinned sampler: the RNG is
+        // reset so the constant-path draw above never lands in the
+        // stream.
+        let mut rng = crate::stats::rng::Pcg64::new(seed ^ 0xC1_057E_12);
+        let mut thin = ThinnedPoisson::new(spec, seed)?;
+        this.next_arrival = thin.next_gap(&mut rng);
+        this.rng = rng;
+        this.traffic = Some(thin);
+        Ok(this)
+    }
+
+    /// Attach multi-tenant traffic classes (RNG-free — the gap stream is
+    /// unperturbed).
+    pub(crate) fn set_classes(&mut self, set: &ClassSet) {
+        self.assigner = Some(set.assigner());
+        self.priorities = set.priorities();
+        self.tally = Some(ClassTally::new(set.len()));
+    }
+
+    /// Arrival-stats kind tag of this stream.
+    pub(crate) fn kind(&self) -> &'static str {
+        match &self.traffic {
+            Some(thin) => thin.spec().arrival_kind(),
+            None => "open-poisson",
+        }
+    }
+
+    fn draw_gap(&mut self) -> f64 {
+        match &mut self.traffic {
+            Some(thin) => thin.next_gap(&mut self.rng),
+            None => -self.rng.next_f64_open().ln() / self.lambda,
+        }
+    }
+
+    /// Materialize every gap needed to cover arrivals up to time `until`
+    /// (exclusive of the first arrival strictly past it). The parallel
+    /// fleet engine calls this once per barrier window so the whole
+    /// batch of arrivals it routes is drawn from the RNG in one pass.
+    /// `until` must be finite.
     pub(crate) fn pre_draw(&mut self, until: f64) {
         let mut t = self.next_arrival;
         for g in &self.pending_gaps {
             t += *g;
         }
         while t <= until {
-            let gap = -self.rng.next_f64_open().ln() / self.lambda;
+            let gap = self.draw_gap();
             t += gap;
             self.pending_gaps.push_back(gap);
         }
@@ -310,8 +383,61 @@ impl SharedPoisson {
     pub(crate) fn sample_gap(&mut self) -> f64 {
         match self.pending_gaps.pop_front() {
             Some(gap) => gap,
-            None => -self.rng.next_f64_open().ln() / self.lambda,
+            None => self.draw_gap(),
         }
+    }
+
+    /// Tag the arrival being routed (deterministic WRR) and count the
+    /// per-class offer.
+    pub(crate) fn assign_class(&mut self) -> u8 {
+        let class = match &mut self.assigner {
+            Some(a) => a.next_class(),
+            None => 0,
+        };
+        if let Some(tally) = &mut self.tally {
+            tally.offer(class);
+        }
+        class
+    }
+
+    /// Count one rejection of `class` (shed, stranded, or no active
+    /// bundle).
+    pub(crate) fn note_reject(&mut self, class: u8) {
+        self.rejected += 1;
+        if let Some(tally) = &mut self.tally {
+            tally.reject(class);
+        }
+    }
+}
+
+/// Index of the inbox entry to evict so a `newcomer_priority` arrival
+/// can enter a full queue, or `None` when the newcomer outranks no one.
+/// Victim: the entry with the lowest priority, ties to the *youngest*
+/// such entry (it has waited least); only evicted when strictly below
+/// the newcomer. Mirrors `OpenLoopPoisson::eviction_victim` so routed
+/// fleets shed exactly like the single-bundle session.
+pub(crate) fn eviction_victim(
+    queue: &VecDeque<(f64, u8)>,
+    newcomer_priority: u8,
+    priorities: &[u8],
+) -> Option<usize> {
+    if priorities.is_empty() {
+        return None;
+    }
+    let mut victim: Option<(usize, u8)> = None;
+    for (i, &(_, c)) in queue.iter().enumerate() {
+        let p = priorities.get(c as usize).copied().unwrap_or(0);
+        let worse = match victim {
+            Some((_, vp)) => p <= vp,
+            None => true,
+        };
+        if worse {
+            victim = Some((i, p));
+        }
+    }
+    match victim {
+        Some((i, p)) if p < newcomer_priority => Some(i),
+        _ => None,
     }
 }
 
@@ -337,6 +463,10 @@ pub(crate) struct Bundle {
     pub(crate) last_arrival: Option<ArrivalStats>,
     /// Accumulated completions in global time.
     pub(crate) completions: Vec<Completion>,
+    /// Per-class offered/rejected tallies accumulated across epochs
+    /// (only the 1-bundle open path populates this — routed fleets
+    /// tally at the shared stream).
+    pub(crate) classes: Option<ClassTally>,
     pub(crate) done: bool,
 }
 
@@ -364,6 +494,10 @@ pub struct BundleOutput {
     pub reconfigurations: Vec<Reconfiguration>,
     /// Cumulative virtual time the bundle ran for.
     pub total_time: f64,
+    /// Per-class offered/rejected tallies of this bundle's own arrival
+    /// process (1-bundle open clusters only; routed fleets report the
+    /// cluster-level tally on [`ClusterOutput::classes`]).
+    pub classes: Option<ClassTally>,
 }
 
 /// Coordinator-side counters of one parallel fleet run: how many
@@ -411,6 +545,9 @@ pub struct ClusterOutput {
     /// when the run took the serial path. Never part of emitted
     /// artifacts (CSV/JSON stay bitwise thread-count-independent).
     pub fleet: Option<FleetCounters>,
+    /// Cluster-level per-class offered/rejected tallies (present iff
+    /// traffic classes were configured).
+    pub classes: Option<ClassTally>,
 }
 
 impl ClusterOutput {
@@ -436,6 +573,8 @@ pub struct ClusterSimulationBuilder {
     specs: Option<Vec<BundleSpec>>,
     ingress: Option<IngressHandle>,
     window: WindowTuning,
+    traffic: Option<RateFn>,
+    classes: Option<ClassSet>,
 }
 
 impl ClusterSimulationBuilder {
@@ -471,6 +610,25 @@ impl ClusterSimulationBuilder {
     /// Arrival regime (default [`ClusterArrival::Closed`]).
     pub fn arrival(mut self, arrival: ClusterArrival) -> Self {
         self.arrival = arrival;
+        self
+    }
+
+    /// Time-varying arrival-rate profile for the shared open stream
+    /// (diurnal / MMPP / flash-crowd; see [`RateFn`]). Requires an
+    /// [`ClusterArrival::Open`] regime — the `lambda` there is
+    /// superseded by the profile's nominal rate. `RateFn::Constant`
+    /// folds back into the plain Poisson stream bit-for-bit.
+    pub fn traffic(mut self, spec: RateFn) -> Self {
+        self.traffic = Some(spec);
+        self
+    }
+
+    /// Multi-tenant traffic classes: every shared-stream arrival is
+    /// tagged by the set's deterministic weighted round-robin, shedding
+    /// becomes priority-aware, and per-class tallies/SLO attainment are
+    /// reported on the output.
+    pub fn traffic_classes(mut self, set: ClassSet) -> Self {
+        self.classes = Some(set);
         self
     }
 
@@ -548,7 +706,7 @@ impl ClusterSimulationBuilder {
             r,
             bundles,
             policy,
-            arrival,
+            mut arrival,
             autoscale,
             batches_in_flight,
             warm_start,
@@ -558,6 +716,8 @@ impl ClusterSimulationBuilder {
             specs,
             ingress,
             window,
+            traffic,
+            classes,
         } = self;
         // Resolve the fleet shape: explicit heterogeneous specs, or a
         // homogeneous fleet of the builder's (r, config batch, cost).
@@ -582,6 +742,44 @@ impl ClusterSimulationBuilder {
                 vec![spec; bundles]
             }
         };
+        // Fold the traffic profile into the arrival regime: a constant
+        // profile *is* the plain Poisson stream (same draws, same
+        // bytes), so only genuinely nonstationary profiles survive to
+        // the thinning sampler; their nominal rate becomes the regime's
+        // `lambda` (the routing/queueing code reads it for capacity
+        // bookkeeping only — gaps come from the sampler).
+        let traffic = match traffic {
+            Some(spec) => {
+                spec.validate()?;
+                match arrival {
+                    ClusterArrival::Closed => {
+                        return Err(AfdError::config(
+                            "a traffic profile requires an open arrival regime \
+                             (closed loops have no arrival stream to shape)",
+                        ));
+                    }
+                    ClusterArrival::Open { queue_capacity, .. } => {
+                        arrival = ClusterArrival::Open {
+                            lambda: spec.nominal_rate(),
+                            queue_capacity,
+                        };
+                        match spec {
+                            RateFn::Constant { .. } => None,
+                            other => Some(other),
+                        }
+                    }
+                }
+            }
+            None => None,
+        };
+        // Class sets validate at construction (`ClassSet::new`/`parse`);
+        // here we only gate the regime.
+        if classes.is_some() && matches!(arrival, ClusterArrival::Closed) {
+            return Err(AfdError::config(
+                "traffic classes require an open arrival regime \
+                 (closed loops admit no external arrivals to tag)",
+            ));
+        }
         arrival.validate()?;
         if let Some(a) = &autoscale {
             a.validate()?;
@@ -606,6 +804,8 @@ impl ClusterSimulationBuilder {
             source_factory,
             ingress_attached: ingress.is_some(),
             window,
+            traffic,
+            classes,
         };
         Ok((fleet, policy, r, ingress))
     }
@@ -648,6 +848,11 @@ pub(crate) struct FleetSpec {
     /// Barrier-window span tunables (coordinator-only; shard workers
     /// carry but ignore them).
     pub(crate) window: WindowTuning,
+    /// Nonstationary rate profile of the open stream (`None` =
+    /// constant-rate; [`RateFn::Constant`] is folded away upstream).
+    pub(crate) traffic: Option<RateFn>,
+    /// Multi-tenant traffic classes of the open stream.
+    pub(crate) classes: Option<ClassSet>,
 }
 
 /// How a bundle's epoch engines hook into ingress journaling:
@@ -673,10 +878,21 @@ pub(crate) struct EpochEnv<'a> {
     pub(crate) warm_start: bool,
     pub(crate) source_factory: Option<&'a SourceFactory>,
     pub(crate) ingress: IngressAttach<'a>,
+    /// Nonstationary rate profile of the open stream (1-bundle clusters
+    /// run it in-bundle; routed fleets at the shared stream).
+    pub(crate) traffic: Option<&'a RateFn>,
+    /// Traffic classes of the open stream.
+    pub(crate) classes: Option<&'a ClassSet>,
 }
 
-/// Build one epoch's engine for `bundle` at its current fan-in.
-pub(crate) fn build_epoch_sim(env: &EpochEnv<'_>, bundle: &Bundle) -> Result<Simulation> {
+/// Build one epoch's engine for `bundle` at its current fan-in,
+/// preloading `preload` live slots carried over from the previous epoch
+/// (the warm-handoff path; empty for cold epochs).
+pub(crate) fn build_epoch_sim(
+    env: &EpochEnv<'_>,
+    bundle: &Bundle,
+    preload: Vec<LiveSlot>,
+) -> Result<Simulation> {
     let epoch_target = match env.autoscale {
         Some(a) => a.epoch_completions.min(bundle.target - bundle.produced),
         None => bundle.target,
@@ -692,6 +908,9 @@ pub(crate) fn build_epoch_sim(env: &EpochEnv<'_>, bundle: &Bundle) -> Result<Sim
         .batches_in_flight(env.batches_in_flight)
         .warm_start(env.warm_start)
         .max_completions(Some(epoch_target));
+    if !preload.is_empty() {
+        builder = builder.preload_slots(preload);
+    }
     if let Some(factory) = env.source_factory {
         builder = builder.length_source(factory(seed));
     }
@@ -712,13 +931,23 @@ pub(crate) fn build_epoch_sim(env: &EpochEnv<'_>, bundle: &Bundle) -> Result<Sim
                 builder = builder.arrival(InboxArrival {
                     inbox: inbox.clone(),
                     offset: bundle.base_time,
+                    last_class: 0,
                 });
             }
-            // 1-bundle cluster: the Poisson stream feeds the bundle
-            // directly — byte-identical to `afd sim --arrival open`.
+            // 1-bundle cluster: the (possibly nonstationary) stream
+            // feeds the bundle directly — byte-identical to
+            // `afd sim --arrival open` with the same traffic flags.
             None => {
-                builder =
-                    builder.arrival(OpenLoopPoisson::new(lambda, queue_capacity, cfg.seed)?);
+                let mut arrival = match env.traffic {
+                    Some(spec) => {
+                        OpenLoopPoisson::with_traffic(spec.clone(), queue_capacity, cfg.seed)?
+                    }
+                    None => OpenLoopPoisson::new(lambda, queue_capacity, cfg.seed)?,
+                };
+                if let Some(set) = env.classes {
+                    arrival = arrival.classes(set);
+                }
+                builder = builder.arrival(arrival);
             }
         }
     }
@@ -748,6 +977,7 @@ pub(crate) fn make_bundle(
     };
     let autoscaler = env.autoscale.map(|a| {
         Autoscaler::new(env.cfg.hardware, spec.batch, spec.r, a.feasible.clone(), a.window)
+            .with_mode(a.mode)
     });
     let mut bundle = Bundle {
         index,
@@ -765,21 +995,32 @@ pub(crate) fn make_bundle(
         last_metrics: None,
         last_arrival: None,
         completions: Vec::with_capacity(target + 64),
+        classes: None,
         done: false,
     };
-    bundle.sim = Some(build_epoch_sim(env, &bundle)?);
+    bundle.sim = Some(build_epoch_sim(env, &bundle, Vec::new())?);
     Ok(bundle)
 }
 
 /// Finalize `bundle`'s epoch: harvest completions, feed the autoscaler,
 /// and rebuild at the (possibly new) fan-in unless the bundle reached
-/// its target. Returns the number of arrivals stranded in the bundle's
-/// inbox when it shut down (0 unless this epoch end finished the
-/// bundle); the caller charges them to the shared stream's rejected
-/// count — the coordinator-side state this function must not touch.
-pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Result<u64> {
+/// its target. Open-arrival rebuilds are *warm handoffs*: live decodes
+/// are exported from the old slot arrays and preloaded into the rebuilt
+/// engine, so an autoscale reconfiguration no longer restarts in-flight
+/// requests. Returns the classes of the arrivals stranded in the
+/// bundle's inbox when it shut down (empty unless this epoch end
+/// finished the bundle); the caller charges them to the shared stream's
+/// rejected count — the coordinator-side state this function must not
+/// touch.
+pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Result<Vec<u8>> {
     let sim = bundle.sim.take().expect("epoch sim present");
     let epoch_time = sim.last_finish();
+    // Live in-flight decodes survive open-arrival rebuilds (closed
+    // loops keep drop semantics: their slots mix preload-budget and
+    // admit-indexed requests, and the closed replenisher refills
+    // instantly anyway). Export before `finish` consumes the engine.
+    let warm_handoff = !matches!(env.arrival, ClusterArrival::Closed);
+    let live = if warm_handoff { sim.export_live_slots() } else { Vec::new() };
     let out = sim.finish();
     bundle.produced += out.completions.len();
     let base = bundle.base_time;
@@ -791,10 +1032,21 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
     if let Some(autoscaler) = &mut bundle.autoscaler {
         for c in &out.completions {
             autoscaler.observe(RequestLengths::new(c.prefill, c.decode_len.max(1)));
+            // Admit times in the cluster-global clock: the SLO-aware
+            // mode's windowed rate estimate spans epochs.
+            autoscaler.observe_admit(base + c.admit_time);
         }
         if let Some(rec) = autoscaler.evaluate()? {
             bundle.reconfigurations.push(rec);
             bundle.current_r = rec.to_r;
+        }
+    }
+    // Per-bundle class tallies (1-bundle open path; routed fleets tally
+    // at the shared stream and `out.classes` is `None`).
+    if let Some(epoch_tally) = &out.classes {
+        match &mut bundle.classes {
+            Some(acc) => acc.merge(epoch_tally),
+            None => bundle.classes = Some(epoch_tally.clone()),
         }
     }
     bundle.last_metrics = Some(out.metrics);
@@ -802,16 +1054,15 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
     bundle.base_time += epoch_time;
     bundle.epoch += 1;
 
-    let mut stranded = 0u64;
+    let mut stranded_classes = Vec::new();
     if bundle.produced >= bundle.target {
         bundle.done = true;
         let bundle_ix = bundle.index as u32;
         let shutdown_at = bundle.base_time;
         // Shutdown is a terminal epoch end: the slot arrays are
         // gone, so still-admitted in-flight requests can never
-        // complete. Journal them as dropped — exactly like a
-        // rebuild — so the durable table drains and the final
-        // inflight accounting is honest.
+        // complete. Journal them as dropped so the durable table
+        // drains and the final inflight accounting is honest.
         match env.ingress {
             IngressAttach::Off => {}
             IngressAttach::Live(core) => core.borrow_mut().on_epoch_end(bundle_ix, shutdown_at),
@@ -829,7 +1080,7 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
         // arrival stats'.
         if let Some(inbox) = &bundle.inbox {
             let mut ib = inbox.borrow_mut();
-            stranded = ib.queue.len() as u64;
+            stranded_classes.extend(ib.queue.iter().map(|&(_, c)| c));
             match env.ingress {
                 IngressAttach::Off => {}
                 IngressAttach::Live(core) => {
@@ -847,18 +1098,67 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
             }
             ib.queue.clear();
         }
+    } else if warm_handoff {
+        // Graceful drain at the rebuild boundary: keep as many live
+        // decodes as the rebuilt shape can hold (lane-capacity bound at
+        // the *new* fan-in), re-key their journal entries onto the new
+        // epoch's clock, and preload them into the fresh engine. Only
+        // the overflow — live requests the smaller shape physically
+        // cannot seat — is dropped, and each drop is journaled
+        // individually. No `EpochEnd` is emitted here: that event drops
+        // *every* in-flight entry, which is exactly what warm handoff
+        // retires.
+        let bundle_ix = bundle.index as u32;
+        let new_base = bundle.base_time;
+        let capacity = env.batches_in_flight * bundle.current_r * bundle.spec.batch;
+        let keep = live.len().min(capacity);
+        let mut preload = Vec::with_capacity(keep);
+        for (i, ls) in live.into_iter().enumerate() {
+            // The key the old epoch's completion would have carried:
+            // the exact float the dispatcher indexed at admission.
+            let from_key = base + ls.admit_time;
+            if i < keep {
+                // Local admit time under the new epoch's clock. The
+                // re-keyed global time `new_base + new_local` is
+                // computed with the *identical expression* the
+                // completion path will use later, so the journaled
+                // `to` key matches the eventual `Complete` lookup
+                // bit-for-bit (float addition does not round-trip:
+                // `new_base + (g - new_base)` need not equal `g`).
+                let new_local = from_key - new_base;
+                let to_key = new_base + new_local;
+                match env.ingress {
+                    IngressAttach::Off => {}
+                    IngressAttach::Live(core) => {
+                        core.borrow_mut().on_handoff(bundle_ix, from_key, to_key)
+                    }
+                    IngressAttach::Record(buf) => buf.borrow_mut().push(
+                        IngressEvent::Handoff { bundle: bundle_ix, from: from_key, to: to_key },
+                    ),
+                }
+                preload.push(LiveSlot { admit_time: new_local, ..ls });
+            } else {
+                match env.ingress {
+                    IngressAttach::Off => {}
+                    IngressAttach::Live(core) => {
+                        core.borrow_mut().on_drop_at(bundle_ix, from_key, new_base)
+                    }
+                    IngressAttach::Record(buf) => buf.borrow_mut().push(
+                        IngressEvent::DropAt { bundle: bundle_ix, from: from_key, at: new_base },
+                    ),
+                }
+            }
+        }
+        let next = build_epoch_sim(env, bundle, preload)?;
+        bundle.sim = Some(next);
     } else {
-        // Drain semantics at the rebuild boundary: `Simulation::finish`
-        // above already harvested every *completed* request, but the
-        // rebuild below constructs fresh slot arrays, so any request
-        // admitted-but-unfinished in the old epoch is destroyed with
-        // its slot — it is neither carried over nor re-queued. Those
-        // in-flight requests are journaled as dropped here, *before*
-        // any next-epoch events, so the durable inflight table drains
-        // at every boundary (admitted == completed + dropped +
-        // live-inflight stays an invariant; the conservation unit test
-        // pins it). A graceful drain — running the old epoch until its
-        // slots empty before rebuilding — is the ROADMAP follow-up.
+        // Closed-loop rebuild keeps drop semantics: every slot of the
+        // fresh arrays refills instantly from the replenisher, so
+        // carrying live decodes over would *displace* new admissions
+        // rather than save work, and the preload-budget bookkeeping
+        // (closed slots mix budgeted preloads with admit-indexed
+        // requests) has no re-key target. In-flight requests are
+        // journaled as dropped at the boundary, as before.
         match env.ingress {
             IngressAttach::Off => {}
             IngressAttach::Live(core) => {
@@ -869,7 +1169,7 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
                 at: bundle.base_time,
             }),
         }
-        let next = build_epoch_sim(env, bundle)?;
+        let next = build_epoch_sim(env, bundle, Vec::new())?;
         bundle.sim = Some(next);
     }
     // Epoch boundaries are the fleet's durability points: flush and
@@ -881,7 +1181,7 @@ pub(crate) fn finish_epoch_impl(env: &EpochEnv<'_>, bundle: &mut Bundle) -> Resu
         }
         IngressAttach::Record(buf) => buf.borrow_mut().push(IngressEvent::Checkpoint),
     }
-    Ok(stranded)
+    Ok(stranded_classes)
 }
 
 /// Fold a finished [`Bundle`] into its output record.
@@ -896,6 +1196,7 @@ pub(crate) fn bundle_output(b: Bundle) -> BundleOutput {
         completions: b.completions,
         reconfigurations: b.reconfigurations,
         total_time: b.base_time,
+        classes: b.classes,
     }
 }
 
@@ -948,19 +1249,21 @@ pub(crate) fn assemble_output(
         }
     };
 
-    let arrival = match (arrival, shared) {
-        (ClusterArrival::Closed, _) => ArrivalStats::closed(),
-        // 1-bundle open cluster: the bundle ran the Poisson process
-        // itself; its stats are the cluster stats.
-        (ClusterArrival::Open { .. }, None) => bundle_outputs[0].arrival,
+    let (arrival, classes) = match (arrival, shared) {
+        (ClusterArrival::Closed, _) => (ArrivalStats::closed(), None),
+        // 1-bundle open cluster: the bundle ran the arrival process
+        // itself; its stats and class tallies are the cluster's.
+        (ClusterArrival::Open { .. }, None) => {
+            (bundle_outputs[0].arrival, bundle_outputs[0].classes.clone())
+        }
         (ClusterArrival::Open { lambda, .. }, Some(shared)) => {
             let admitted: u64 = bundle_outputs.iter().map(|b| b.arrival.admitted).sum();
             let wait_sum: f64 = bundle_outputs
                 .iter()
                 .map(|b| b.arrival.mean_queue_wait * b.arrival.admitted as f64)
                 .sum();
-            ArrivalStats {
-                kind: "open-poisson",
+            let stats = ArrivalStats {
+                kind: shared.kind(),
                 lambda,
                 offered: shared.offered,
                 admitted,
@@ -971,7 +1274,8 @@ pub(crate) fn assemble_output(
                 } else {
                     0.0
                 },
-            }
+            };
+            (stats, shared.tally)
         }
     };
 
@@ -986,6 +1290,7 @@ pub(crate) fn assemble_output(
             0.0
         },
         fleet,
+        classes,
     }
 }
 
@@ -1028,6 +1333,8 @@ pub struct ClusterSimulation {
     bundles: Vec<Bundle>,
     spread_sum: f64,
     spread_samples: u64,
+    traffic: Option<RateFn>,
+    classes: Option<ClassSet>,
 }
 
 impl ClusterSimulation {
@@ -1047,6 +1354,8 @@ impl ClusterSimulation {
             specs: None,
             ingress: None,
             window: WindowTuning::default(),
+            traffic: None,
+            classes: None,
         }
     }
 
@@ -1074,6 +1383,8 @@ impl ClusterSimulation {
             source_factory,
             ingress_attached: _,
             window: _,
+            traffic,
+            classes,
         } = fleet;
         let n = specs.len();
         let mut bundles = Vec::with_capacity(n);
@@ -1089,17 +1400,27 @@ impl ClusterSimulation {
                     Some(core) => IngressAttach::Live(core),
                     None => IngressAttach::Off,
                 },
+                traffic: traffic.as_ref(),
+                classes: classes.as_ref(),
             };
             for (i, &spec) in specs.iter().enumerate() {
                 bundles.push(make_bundle(&env, i, spec, targets[i], n)?);
             }
         }
         // The shared generator exists only when N > 1 routes a stream;
-        // a 1-bundle cluster hands the Poisson process straight to its
-        // bundle and stays byte-identical to the single-bundle session.
+        // a 1-bundle cluster hands the (possibly nonstationary) stream
+        // straight to its bundle and stays byte-identical to the
+        // single-bundle session.
         let shared = match arrival {
             ClusterArrival::Open { lambda, .. } if n > 1 => {
-                Some(SharedPoisson::new(lambda, cfg.seed))
+                let mut s = match &traffic {
+                    Some(spec) => SharedPoisson::with_traffic(spec.clone(), cfg.seed)?,
+                    None => SharedPoisson::new(lambda, cfg.seed),
+                };
+                if let Some(set) = &classes {
+                    s.set_classes(set);
+                }
+                Some(s)
             }
             _ => None,
         };
@@ -1118,6 +1439,8 @@ impl ClusterSimulation {
             bundles,
             spread_sum: 0.0,
             spread_samples: 0,
+            traffic,
+            classes,
         })
     }
 
@@ -1142,6 +1465,9 @@ impl ClusterSimulation {
             shared.queue_integral += queued_total as f64 * (t - shared.last_t);
             shared.last_t = t;
             shared.offered += 1;
+            // RNG-free class assignment: the gap stream above is
+            // unperturbed whether or not classes are attached.
+            let class = shared.assign_class();
 
             // Route on the load state at arrival time, over bundles that
             // are still consuming. The snapshots are O(1) cached reads
@@ -1150,7 +1476,7 @@ impl ClusterSimulation {
             let active: Vec<usize> =
                 self.bundles.iter().filter(|b| !b.done).map(|b| b.index).collect();
             if active.is_empty() {
-                shared.rejected += 1;
+                shared.note_reject(class);
             } else {
                 let loads: Vec<LoadSnapshot> = active
                     .iter()
@@ -1166,9 +1492,21 @@ impl ClusterSimulation {
                 let inbox = self.bundles[dst].inbox.as_ref().unwrap();
                 let mut ib = inbox.borrow_mut();
                 if ib.queue.len() < ib.capacity {
-                    ib.queue.push_back(t);
+                    ib.queue.push_back((t, class));
                 } else {
-                    shared.rejected += 1;
+                    let newcomer = shared.priorities.get(class as usize).copied().unwrap_or(0);
+                    match eviction_victim(&ib.queue, newcomer, &shared.priorities) {
+                        Some(victim) => {
+                            // Class-aware shedding: the routed inbox
+                            // sheds its lowest-priority entry to seat a
+                            // higher-priority newcomer.
+                            let (_, vclass) =
+                                ib.queue.remove(victim).expect("victim index is in bounds");
+                            shared.note_reject(vclass);
+                            ib.queue.push_back((t, class));
+                        }
+                        None => shared.note_reject(class),
+                    }
                 }
             }
             let gap = shared.sample_gap();
@@ -1213,13 +1551,16 @@ impl ClusterSimulation {
                 Some(core) => IngressAttach::Live(core),
                 None => IngressAttach::Off,
             },
+            traffic: self.traffic.as_ref(),
+            classes: self.classes.as_ref(),
         };
         let stranded = finish_epoch_impl(&env, &mut self.bundles[g])?;
         // Arrivals stranded in a shut-down bundle's inbox are charged to
-        // the shared stream (the bundle side already journaled them).
-        if stranded > 0 {
-            if let Some(shared) = self.shared.as_mut() {
-                shared.rejected += stranded;
+        // the shared stream, class by class (the bundle side already
+        // journaled them).
+        if let Some(shared) = self.shared.as_mut() {
+            for class in stranded {
+                shared.note_reject(class);
             }
         }
         Ok(())
@@ -1444,6 +1785,7 @@ mod tests {
                 feasible: (1..=16).collect(),
                 window: 2000,
                 epoch_completions: 1500,
+                mode: AutoscaleMode::Stationary,
             })
             .completions_per_bundle(Some(6000))
             .build()
@@ -1479,7 +1821,8 @@ mod tests {
             .autoscale(AutoscaleConfig {
                 feasible: vec![],
                 window: 2000,
-                epoch_completions: 500
+                epoch_completions: 500,
+                mode: AutoscaleMode::Stationary,
             })
             .build()
             .is_err());
@@ -1487,8 +1830,28 @@ mod tests {
             .autoscale(AutoscaleConfig {
                 feasible: vec![1, 2],
                 window: 4,
-                epoch_completions: 500
+                epoch_completions: 500,
+                mode: AutoscaleMode::Stationary,
             })
+            .build()
+            .is_err());
+        // SLO-aware headroom is validated through the same gate.
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .autoscale(AutoscaleConfig {
+                feasible: vec![1, 2],
+                window: 32,
+                epoch_completions: 500,
+                mode: AutoscaleMode::SloAware { headroom: 0.2 },
+            })
+            .build()
+            .is_err());
+        // A traffic profile needs an open regime; classes too.
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .traffic(RateFn::parse("diurnal:0.2:0.5:4000").unwrap())
+            .build()
+            .is_err());
+        assert!(ClusterSimulation::builder(&cfg, 2)
+            .traffic_classes(ClassSet::parse("gold:2:1,free:1:0").unwrap())
             .build()
             .is_err());
     }
@@ -1618,6 +1981,7 @@ mod tests {
                 feasible: vec![2],
                 window: 16,
                 epoch_completions: 40,
+                mode: AutoscaleMode::Stationary,
             })
             .completions_per_bundle(Some(120))
             .ingress(core.clone())
@@ -1637,6 +2001,104 @@ mod tests {
         // admitted or a pre-loaded slot.
         assert_eq!(s.admitted, s.completed + s.dropped, "{s:?}");
         assert_eq!(s.completed + s.preloaded, 120, "{s:?}");
+    }
+
+    #[test]
+    fn open_loop_epoch_rebuild_hands_off_live_slots() {
+        // Warm-handoff counterpart of the closed-loop conservation test
+        // above: under an *open* arrival stream, autoscale epoch
+        // rebuilds must carry live decodes over instead of dropping
+        // them, so the journal shows handoffs and every admitted
+        // request is completed, handed off into a later completion, or
+        // individually dropped — never bulk-dropped by an `EpochEnd`.
+        use crate::ingress::dispatcher::Ingress;
+        let cfg = small_cfg();
+        let core = Ingress::in_memory();
+        let out = ClusterSimulation::builder(&cfg, 2)
+            .arrival(ClusterArrival::Open { lambda: 0.2, queue_capacity: 64 })
+            .autoscale(AutoscaleConfig {
+                feasible: vec![2],
+                window: 16,
+                epoch_completions: 40,
+                mode: AutoscaleMode::Stationary,
+            })
+            .completions_per_bundle(Some(120))
+            .ingress(core.clone())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.bundles[0].completions.len(), 120);
+        let s = core.borrow().stats();
+        // Rebuild boundaries carried live decodes across epochs.
+        assert!(s.handoffs > 0, "{s:?}");
+        // The terminal epoch end still drains the table.
+        assert_eq!(s.inflight, 0, "{s:?}");
+        // Conservation: admits resolve to completions or drops; the
+        // only drops left are capacity-overflow ones at a shrink (none
+        // here: r is pinned) and the terminal shutdown's.
+        assert_eq!(s.admitted, s.completed + s.dropped, "{s:?}");
+        // Handed-off requests really completed in later epochs: fewer
+        // drops than the cold-restart policy would force (which dropped
+        // every in-flight request at every boundary, epoch count >= 3).
+        assert!(s.completed > 0 && s.dropped < s.admitted / 2, "{s:?}");
+    }
+
+    #[test]
+    fn constant_traffic_profile_is_byte_identical_to_plain_open() {
+        let cfg = small_cfg();
+        let run = |traffic: Option<RateFn>| {
+            let mut b = ClusterSimulation::builder(&cfg, 2)
+                .bundles(2)
+                .arrival(ClusterArrival::Open { lambda: 0.2, queue_capacity: 64 })
+                .completions_per_bundle(Some(100));
+            if let Some(t) = traffic {
+                b = b.traffic(t);
+            }
+            b.build().unwrap().run().unwrap()
+        };
+        let plain = run(None);
+        let constant = run(Some(RateFn::Constant { rate: 0.2 }));
+        assert_eq!(plain.arrival, constant.arrival);
+        for (x, y) in plain.bundles.iter().zip(&constant.bundles) {
+            assert_eq!(x.completions, y.completions);
+        }
+    }
+
+    #[test]
+    fn classed_fleet_tallies_and_conserves() {
+        let cfg = small_cfg();
+        let set = ClassSet::parse("gold:3:2,free:1:0").unwrap();
+        let out = ClusterSimulation::builder(&cfg, 2)
+            .bundles(2)
+            .arrival(ClusterArrival::Open { lambda: 0.6, queue_capacity: 4 })
+            .traffic_classes(set)
+            .completions_per_bundle(Some(80))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let tally = out.classes.as_ref().expect("classes attached");
+        let a = out.arrival;
+        // Per-class tallies sum to the stream totals.
+        assert_eq!(tally.total_offered(), a.offered, "{tally:?} vs {a:?}");
+        assert_eq!(tally.total_rejected(), a.rejected, "{tally:?} vs {a:?}");
+        assert_eq!(a.offered, a.admitted + a.rejected, "{a:?}");
+        // WRR honors shares: gold sees roughly 3x free's offers.
+        let ratio = tally.offered[0] as f64 / tally.offered[1].max(1) as f64;
+        assert!((2.5..=3.5).contains(&ratio), "share ratio {ratio}");
+        // The tight queue forced shedding, and priority shedding pushes
+        // rejects toward the low-priority class.
+        if a.rejected > 20 {
+            assert!(tally.rejected[1] > tally.rejected[0], "{tally:?}");
+        }
+        // Completions carry class tags from both classes.
+        let classes: std::collections::BTreeSet<u8> = out
+            .bundles
+            .iter()
+            .flat_map(|b| b.completions.iter().map(|c| c.class))
+            .collect();
+        assert!(classes.contains(&0) && classes.contains(&1), "{classes:?}");
     }
 
     #[test]

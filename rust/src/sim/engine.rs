@@ -90,6 +90,9 @@ pub struct SimOutput {
     pub steps: Vec<StepRecord>,
     /// Arrival-process statistics (trivial for the closed loop).
     pub arrival: ArrivalStats,
+    /// Per-class offered/rejected tallies when the arrival process
+    /// assigns multi-tenant traffic classes (`None` otherwise).
+    pub classes: Option<crate::traffic::ClassTally>,
 }
 
 /// Run the simulator for a given fan-in `r` (overriding the config's
@@ -177,6 +180,7 @@ pub fn simulate_coupled(cfg: &ExperimentConfig, instances: usize, opts: SimOptio
         completions,
         steps: Vec::new(),
         arrival: ArrivalStats::closed(),
+        classes: None,
     }
 }
 

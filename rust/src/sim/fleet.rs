@@ -79,9 +79,9 @@ use crate::coordinator::router::Router;
 use crate::error::{AfdError, Result};
 use crate::ingress::dispatcher::{IngressEvent, IngressEventBuf};
 use crate::sim::cluster::{
-    assemble_output, bundle_output, finish_epoch_impl, make_bundle, Bundle, BundleOutput,
-    ClusterArrival, ClusterOutput, ClusterSimulation, ClusterSimulationBuilder, EpochEnv,
-    FleetCounters, FleetSpec, IngressAttach, SharedPoisson,
+    assemble_output, bundle_output, eviction_victim, finish_epoch_impl, make_bundle, Bundle,
+    BundleOutput, ClusterArrival, ClusterOutput, ClusterSimulation, ClusterSimulationBuilder,
+    EpochEnv, FleetCounters, FleetSpec, IngressAttach, SharedPoisson,
 };
 use crate::util::pool::ShardPool;
 
@@ -208,10 +208,30 @@ struct BundleStatus {
     hungry: bool,
 }
 
+/// One routed-inbox mutation the coordinator delivers to a worker:
+/// the append of a routed arrival, or the class-priority eviction of a
+/// resident entry (identified by the exact bits of its arrival time —
+/// shared-stream arrival times are strictly increasing, hence unique).
+/// Ops are applied in routing order, so a same-window `Push` always
+/// precedes the `Evict` that removes it.
+#[derive(Clone, Copy)]
+enum InboxOp {
+    Push { dst: usize, t: f64, class: u8 },
+    Evict { dst: usize, t_bits: u64 },
+}
+
+impl InboxOp {
+    fn dst(&self) -> usize {
+        match self {
+            InboxOp::Push { dst, .. } | InboxOp::Evict { dst, .. } => *dst,
+        }
+    }
+}
+
 enum FleetCmd {
     /// Report initial bundle views and build-time ingress preludes.
     Hello,
-    /// Push routed arrivals into owned inboxes, then advance every
+    /// Apply routed inbox ops to owned inboxes, then advance every
     /// owned bundle through all events with pick time < `horizon` (or
     /// <= `force_t` — the fleet frontier always runs), stopping before
     /// any event at/past `admit_horizon` whose inbox can't guarantee
@@ -221,7 +241,7 @@ enum FleetCmd {
         horizon: f64,
         force_t: f64,
         admit_horizon: f64,
-        pushes: Vec<(usize, f64)>,
+        pushes: Vec<InboxOp>,
         events_scratch: Vec<StepEvent>,
     },
     /// Finalize owned bundles into outputs.
@@ -240,7 +260,7 @@ enum FleetRep {
         events: Vec<StepEvent>,
         statuses: Vec<BundleStatus>,
         /// The drained `pushes` buffer, returned for reuse.
-        pushes_scratch: Vec<(usize, f64)>,
+        pushes_scratch: Vec<InboxOp>,
     },
     Finished(Vec<BundleOutput>),
     Error(String),
@@ -260,6 +280,8 @@ fn worker_env<'a>(fleet: &'a FleetSpec, buf: &'a Option<IngressEventBuf>) -> Epo
             Some(buf) => IngressAttach::Record(buf),
             None => IngressAttach::Off,
         },
+        traffic: fleet.traffic.as_ref(),
+        classes: fleet.classes.as_ref(),
     }
 }
 
@@ -269,6 +291,11 @@ struct WorkerState {
     fleet: FleetSpec,
     bundles: Vec<Bundle>,
     buf: Option<IngressEventBuf>,
+    /// Class-priority eviction can remove *resident* inbox entries, so
+    /// the delivered-FIFO-prefix guarantee behind stepping past the
+    /// admission horizon no longer holds — workers with tiered classes
+    /// always stop at the horizon instead (see `advance`).
+    evict_possible: bool,
     /// Build-time ingress events per bundle, handed over on `Hello`.
     preludes: Option<Vec<(usize, Vec<IngressEvent>)>>,
     /// A build or advance error; reported on the next command and
@@ -306,7 +333,8 @@ impl WorkerState {
                 }
             }
         }
-        Self { fleet, bundles, buf, preludes: Some(preludes), err }
+        let evict_possible = fleet.classes.as_ref().map_or(false, |s| s.has_priority_tiers());
+        Self { fleet, bundles, buf, evict_possible, preludes: Some(preludes), err }
     }
 
     fn inits(&self) -> Vec<BundleInit> {
@@ -337,21 +365,37 @@ impl WorkerState {
         horizon: f64,
         force_t: f64,
         admit_horizon: f64,
-        pushes: &mut Vec<(usize, f64)>,
+        pushes: &mut Vec<InboxOp>,
         events: &mut Vec<StepEvent>,
     ) -> Result<Vec<BundleStatus>> {
-        for (ix, t) in pushes.drain(..) {
+        for op in pushes.drain(..) {
+            let ix = op.dst();
             let b = self
                 .bundles
                 .iter_mut()
                 .find(|b| b.index == ix)
                 .ok_or_else(|| AfdError::config("arrival pushed to unowned bundle"))?;
-            b.inbox
+            let inbox = b
+                .inbox
                 .as_ref()
-                .ok_or_else(|| AfdError::config("arrival pushed to inbox-less bundle"))?
-                .borrow_mut()
-                .queue
-                .push_back(t);
+                .ok_or_else(|| AfdError::config("arrival pushed to inbox-less bundle"))?;
+            let mut ib = inbox.borrow_mut();
+            match op {
+                InboxOp::Push { t, class, .. } => ib.queue.push_back((t, class)),
+                InboxOp::Evict { t_bits, .. } => {
+                    // The victim is resident by construction: its Push
+                    // was applied earlier (this window or a previous
+                    // one), and with tiered classes no worker step runs
+                    // past the admission horizon, so nothing later than
+                    // the evicting arrival has popped it.
+                    let pos = ib
+                        .queue
+                        .iter()
+                        .position(|&(t, _)| t.to_bits() == t_bits)
+                        .ok_or_else(|| AfdError::config("eviction target missing from inbox"))?;
+                    ib.queue.remove(pos);
+                }
+            }
         }
         let env = worker_env(&self.fleet, &self.buf);
         let mut statuses = Vec::with_capacity(self.bundles.len());
@@ -379,9 +423,14 @@ impl WorkerState {
                 // trip this: everything <= force_t precedes the
                 // admission horizon by construction.
                 if next >= admit_horizon {
+                    // With tiered class priorities a future arrival can
+                    // *evict* a resident entry, so the delivered prefix
+                    // is no longer a sound lower bound on what the step
+                    // may pop — never step past the horizon then.
                     let enough = match &b.inbox {
                         Some(ib) => {
-                            ib.borrow().queue.len() >= 2 * sim.r() * sim.batch_per_worker()
+                            !self.evict_possible
+                                && ib.borrow().queue.len() >= 2 * sim.r() * sim.batch_per_worker()
                         }
                         None => true,
                     };
@@ -396,7 +445,9 @@ impl WorkerState {
                     sim.step();
                     sim.is_done()
                 };
-                let stranded = if epoch_done { finish_epoch_impl(&env, b)? } else { 0 };
+                let stranded_classes =
+                    if epoch_done { finish_epoch_impl(&env, b)? } else { Vec::new() };
+                let stranded = stranded_classes.len() as u64;
                 let len_after = b.inbox.as_ref().map_or(0, |ib| ib.borrow().queue.len());
                 let ingress = match &self.buf {
                     Some(buf) => std::mem::take(&mut *buf.borrow_mut()),
@@ -468,13 +519,15 @@ impl WorkerState {
 /// what the serial engine would observe at the same point in event
 /// order (worker statuses never touch it: they are post-window truth,
 /// not mid-replay truth).
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 struct Mirror {
     done: bool,
-    /// Serial-truth inbox length: routed arrivals increment it, replayed
-    /// pops decrement it, terminal shutdown zeroes it. May exceed the
-    /// worker's physical queue by the routed-but-undelivered tail.
-    inbox_len: usize,
+    /// Serial-truth inbox contents `(arrival time, class)`: routed
+    /// arrivals append, replayed pops drop the front, evictions remove
+    /// the victim, terminal shutdown drains the rest as rejects. May
+    /// run ahead of the worker's physical queue by the
+    /// routed-but-undelivered tail.
+    inbox: VecDeque<(f64, u8)>,
     snapshot: LoadSnapshot,
 }
 
@@ -492,7 +545,7 @@ fn drain_mirrored(
     shared: &mut SharedPoisson,
     mirror: &mut [Mirror],
     router: &mut Router,
-    pending: &mut [Vec<(usize, f64)>],
+    pending: &mut [Vec<InboxOp>],
     active: &mut Vec<usize>,
     loads: &mut Vec<LoadSnapshot>,
     queue_capacity: usize,
@@ -501,7 +554,7 @@ fn drain_mirrored(
     tail: bool,
 ) {
     loop {
-        let queued_total: usize = mirror.iter().map(|m| m.inbox_len).sum();
+        let queued_total: usize = mirror.iter().map(|m| m.inbox.len()).sum();
         if shared.next_arrival > now {
             if tail && now > shared.last_t {
                 shared.queue_integral += queued_total as f64 * (now - shared.last_t);
@@ -513,22 +566,35 @@ fn drain_mirrored(
         shared.queue_integral += queued_total as f64 * (ta - shared.last_t);
         shared.last_t = ta;
         shared.offered += 1;
+        let class = shared.assign_class();
         active.clear();
         active.extend((0..mirror.len()).filter(|&i| !mirror[i].done));
         if active.is_empty() {
-            shared.rejected += 1;
+            shared.note_reject(class);
         } else {
             loads.clear();
             loads.extend(active.iter().map(|&i| LoadSnapshot {
-                queued: mirror[i].inbox_len,
+                queued: mirror[i].inbox.len(),
                 ..mirror[i].snapshot
             }));
             let dst = active[router.route(loads)];
-            if mirror[dst].inbox_len < queue_capacity {
-                mirror[dst].inbox_len += 1;
-                pending[dst % threads].push((dst, ta));
+            let m = &mut mirror[dst];
+            if m.inbox.len() < queue_capacity {
+                m.inbox.push_back((ta, class));
+                pending[dst % threads].push(InboxOp::Push { dst, t: ta, class });
             } else {
-                shared.rejected += 1;
+                let newcomer = shared.priorities.get(class as usize).copied().unwrap_or(0);
+                match eviction_victim(&m.inbox, newcomer, &shared.priorities) {
+                    Some(victim) => {
+                        let (vt, vclass) =
+                            m.inbox.remove(victim).expect("victim index is in bounds");
+                        shared.note_reject(vclass);
+                        m.inbox.push_back((ta, class));
+                        pending[dst % threads].push(InboxOp::Evict { dst, t_bits: vt.to_bits() });
+                        pending[dst % threads].push(InboxOp::Push { dst, t: ta, class });
+                    }
+                    None => shared.note_reject(class),
+                }
             }
         }
         let gap = shared.sample_gap();
@@ -557,9 +623,19 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
         ClusterArrival::Open { queue_capacity, .. } => queue_capacity,
         ClusterArrival::Closed => 0,
     };
-    // Same construction condition and RNG stream as the serial engine.
+    // Same construction condition and RNG stream as the serial engine
+    // (traffic profile and classes attached identically).
     let mut shared = match arrival {
-        ClusterArrival::Open { lambda, .. } => Some(SharedPoisson::new(lambda, seed)),
+        ClusterArrival::Open { lambda, .. } => {
+            let mut s = match &fleet.traffic {
+                Some(spec) => SharedPoisson::with_traffic(spec.clone(), seed)?,
+                None => SharedPoisson::new(lambda, seed),
+            };
+            if let Some(set) = &fleet.classes {
+                s.set_classes(set);
+            }
+            Some(s)
+        }
         ClusterArrival::Closed => None,
     };
     let mut router = Router::new(policy);
@@ -574,8 +650,10 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
     );
 
     // --- Hello: initial bundle views + build-order ingress preludes ---
-    let mut mirror: Vec<Mirror> =
-        vec![Mirror { done: false, inbox_len: 0, snapshot: LoadSnapshot::default() }; n];
+    let mut mirror: Vec<Mirror> = vec![
+        Mirror { done: false, inbox: VecDeque::new(), snapshot: LoadSnapshot::default() };
+        n
+    ];
     // Worker-truth next unexecuted event time per bundle; feeds only the
     // `t_next` pick (mirrors evolve through replayed events alone).
     let mut frontier: Vec<f64> = vec![f64::INFINITY; n];
@@ -624,7 +702,7 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
     // logs (round-tripped through the Advance/Window protocol), and the
     // routing/spread working vectors — steady-state windows allocate
     // nothing on the merge path.
-    let mut pending_pushes: Vec<Vec<(usize, f64)>> = (0..t).map(|_| Vec::new()).collect();
+    let mut pending_pushes: Vec<Vec<InboxOp>> = (0..t).map(|_| Vec::new()).collect();
     let mut event_scratch: Vec<Vec<StepEvent>> = (0..t).map(|_| Vec::new()).collect();
     let mut route_active: Vec<usize> = Vec::with_capacity(n);
     let mut route_loads: Vec<LoadSnapshot> = Vec::with_capacity(n);
@@ -707,15 +785,18 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
                 // inbox entry present at shutdown — including arrivals
                 // this coordinator routed but never delivered, which the
                 // worker's own stranded count missed. Charge the serial
-                // (mirror) count, splice the missing Reject records into
-                // the recorded ingress stream at the journaled shutdown
-                // time (before the trailing Checkpoint), and drop the
-                // undelivered pushes — the serial inbox they were bound
-                // for no longer exists.
-                let serial_stranded = (mirror[ev.bundle].inbox_len - pops) as u64;
-                if serial_stranded > 0 {
-                    if let Some(shared) = shared.as_mut() {
-                        shared.rejected += serial_stranded;
+                // (mirror) entries class by class, splice the missing
+                // Reject records into the recorded ingress stream at the
+                // journaled shutdown time (before the trailing
+                // Checkpoint), and drop the undelivered ops — the serial
+                // inbox they were bound for no longer exists.
+                for _ in 0..pops {
+                    mirror[ev.bundle].inbox.pop_front();
+                }
+                let serial_stranded = mirror[ev.bundle].inbox.len() as u64;
+                if let Some(shared) = shared.as_mut() {
+                    while let Some((_, class)) = mirror[ev.bundle].inbox.pop_front() {
+                        shared.note_reject(class);
                     }
                 }
                 let extras = serial_stranded - ev.stranded;
@@ -737,14 +818,16 @@ pub fn run_fleet(builder: ClusterSimulationBuilder, threads: usize) -> Result<Cl
                             .insert(ins, IngressEvent::Reject { bundle: ev.bundle as u32, at });
                     }
                 }
-                pending_pushes[ev.bundle % t].retain(|&(dst, _)| dst != ev.bundle);
+                pending_pushes[ev.bundle % t].retain(|op| op.dst() != ev.bundle);
                 let m = &mut mirror[ev.bundle];
                 m.done = true;
-                m.inbox_len = 0;
+                m.inbox.clear();
                 m.snapshot = ev.snapshot_after;
             } else {
                 let m = &mut mirror[ev.bundle];
-                m.inbox_len -= pops;
+                for _ in 0..pops {
+                    m.inbox.pop_front();
+                }
                 m.snapshot = ev.snapshot_after;
             }
             if let Some(core) = &ingress {
@@ -874,8 +957,10 @@ mod tests {
     use crate::config::experiment::ExperimentConfig;
     use crate::config::workload::WorkloadSpec;
     use crate::coordinator::router::Policy;
+    use crate::coordinator::AutoscaleMode;
     use crate::sim::cluster::AutoscaleConfig;
     use crate::stats::distributions::LengthDist;
+    use crate::traffic::{ClassSet, RateFn};
 
     fn small_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -904,6 +989,7 @@ mod tests {
             assert_eq!(x.total_time.to_bits(), y.total_time.to_bits());
         }
         assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.classes, b.classes);
         assert_eq!(a.load_imbalance.to_bits(), b.load_imbalance.to_bits());
         assert_eq!(
             a.aggregate.delivered_throughput_per_instance.to_bits(),
@@ -1010,11 +1096,52 @@ mod tests {
                 feasible: vec![1, 2, 4],
                 window: 16,
                 epoch_completions: 25,
+                mode: AutoscaleMode::Stationary,
             })
         };
         let serial = mk().build().unwrap().run().unwrap();
         let parallel = run_fleet(mk(), 3).unwrap();
         assert_outputs_identical(&serial, &parallel);
+    }
+
+    #[test]
+    fn nonstationary_fleet_parallel_matches_serial_bitwise() {
+        let cfg = small_cfg();
+        let mk = || {
+            builder(&cfg)
+                .policy(Policy::JoinShortestQueue)
+                .arrival(ClusterArrival::Open { lambda: 1.0, queue_capacity: 64 })
+                .traffic(RateFn::parse("diurnal:1.0:0.7:400").unwrap())
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        for threads in [2, 3, 8] {
+            let parallel = run_fleet(mk(), threads).unwrap();
+            assert_outputs_identical(&serial, &parallel);
+        }
+        assert_eq!(serial.arrival.kind, "open-diurnal");
+    }
+
+    #[test]
+    fn classed_evicting_fleet_parallel_matches_serial_bitwise() {
+        // A tiny queue under a flash crowd with tiered priorities:
+        // evictions certain, so this pins the InboxOp protocol (workers
+        // hold at the admission horizon; Evict ops land by exact bits).
+        let cfg = small_cfg();
+        let classes = ClassSet::parse("batch:3:0,web:1:2").unwrap();
+        let mk = || {
+            builder(&cfg)
+                .policy(Policy::LeastTokenLoad)
+                .arrival(ClusterArrival::Open { lambda: 2.0, queue_capacity: 4 })
+                .traffic(RateFn::parse("flash:1.0:6.0:50:150").unwrap())
+                .traffic_classes(classes.clone())
+        };
+        let serial = mk().build().unwrap().run().unwrap();
+        let tally = serial.classes.as_ref().expect("classed run tallies");
+        assert!(tally.total_rejected() > 0, "flash crowd over a 4-deep queue must shed");
+        for threads in [2, 3, 8] {
+            let parallel = run_fleet(mk(), threads).unwrap();
+            assert_outputs_identical(&serial, &parallel);
+        }
     }
 
     #[test]

@@ -73,7 +73,7 @@ mod tests {
     use super::*;
 
     fn completion(finish: f64, admit: f64, d: u64) -> Completion {
-        Completion { finish_time: finish, admit_time: admit, prefill: 0, decode_len: d }
+        Completion { finish_time: finish, admit_time: admit, prefill: 0, decode_len: d, class: 0, wait: 0.0 }
     }
 
     #[test]

@@ -70,8 +70,9 @@ use crate::latency::cost::{CostModel, CostSpec, LinearCost};
 use crate::sim::batch::StepRecord;
 use crate::sim::engine::{SimOptions, SimOutput, BATCHES_IN_FLIGHT};
 use crate::sim::metrics::{mean_tpot, stable_throughput, SimMetrics};
-use crate::sim::slots::{Completion, SlotArray};
+use crate::sim::slots::{Completion, LiveSlot, SlotArray};
 use crate::stats::rng::Pcg64;
+use crate::traffic::{ClassAssigner, ClassSet, ClassTally, RateFn, ThinnedPoisson};
 use crate::workload::generator::RequestGenerator;
 use crate::workload::request::RequestLengths;
 use crate::workload::trace::{synthetic_production_trace, ProductionCorpus, Trace};
@@ -305,6 +306,19 @@ pub trait ArrivalProcess {
     /// request's arrival time, or `None` when no arrival is available.
     fn try_admit(&mut self, now: f64) -> Option<f64>;
 
+    /// Traffic class of the most recently admitted arrival (0 for
+    /// processes without multi-tenant classes). Read by the slot engine
+    /// immediately after a successful [`Self::try_admit`].
+    fn last_class(&self) -> u8 {
+        0
+    }
+
+    /// Per-class offered/rejected tallies, when the process assigns
+    /// traffic classes (`None` otherwise).
+    fn class_tally(&self) -> Option<ClassTally> {
+        None
+    }
+
     /// Whether slots start occupied (closed loop) or idle (open loop).
     fn initial_fill(&self) -> bool {
         true
@@ -360,11 +374,25 @@ impl ArrivalProcess for ClosedLoopReplenish {
 /// columns (`mean_queue_len`, `rejected`) for starvation vs saturation.
 pub struct OpenLoopPoisson {
     lambda: f64,
+    /// Time-varying rate sampler; `None` runs the legacy constant-rate
+    /// single-draw-per-arrival path (the compatibility surface for every
+    /// existing seed — [`RateFn::Constant`] never builds one).
+    traffic: Option<ThinnedPoisson>,
     queue_capacity: usize,
     rng: Pcg64,
     next_arrival: f64,
-    /// Arrival times of queued (admission-pending) requests, FIFO.
-    queue: VecDeque<f64>,
+    /// `(arrival time, class)` of queued (admission-pending) requests,
+    /// FIFO.
+    queue: VecDeque<(f64, u8)>,
+    /// RNG-free weighted round-robin class assigner; `None` tags every
+    /// arrival class 0.
+    assigner: Option<ClassAssigner>,
+    /// Shedding priority per class id (empty without classes: tail-drop).
+    priorities: Vec<u8>,
+    /// Per-class offered/rejected counters (present iff classes are).
+    tally: Option<ClassTally>,
+    /// Class of the most recently admitted arrival.
+    last_class: u8,
     offered: u64,
     admitted: u64,
     rejected: u64,
@@ -391,10 +419,15 @@ impl OpenLoopPoisson {
         let first_gap = -rng.next_f64_open().ln() / lambda;
         Ok(Self {
             lambda,
+            traffic: None,
             queue_capacity,
             rng,
             next_arrival: first_gap,
             queue: VecDeque::new(),
+            assigner: None,
+            priorities: Vec::new(),
+            tally: None,
+            last_class: 0,
             offered: 0,
             admitted: 0,
             rejected: 0,
@@ -405,14 +438,89 @@ impl OpenLoopPoisson {
         })
     }
 
+    /// Nonstationary variant: arrivals follow the time-varying rate
+    /// `spec`, sampled by Lewis–Shedler thinning against the same
+    /// dedicated RNG stream. `RateFn::Constant` short-circuits to the
+    /// legacy [`Self::new`] path so existing seeds stay bitwise
+    /// unchanged.
+    pub fn with_traffic(spec: RateFn, queue_capacity: usize, seed: u64) -> Result<Self> {
+        spec.validate()?;
+        if let RateFn::Constant { rate } = spec {
+            return Self::new(rate, queue_capacity, seed);
+        }
+        let mut this = Self::new(spec.nominal_rate(), queue_capacity, seed)?;
+        // Redo the first gap through the thinned sampler: the RNG is
+        // reset so the constant-path draw above never lands in the
+        // stream.
+        let mut rng = Pcg64::new(seed ^ 0xA441_11AA);
+        let mut thin = ThinnedPoisson::new(spec, seed)?;
+        this.next_arrival = thin.next_gap(&mut rng);
+        this.rng = rng;
+        this.traffic = Some(thin);
+        Ok(this)
+    }
+
+    /// Attach multi-tenant traffic classes: arrivals are tagged by the
+    /// set's deterministic weighted round-robin (no RNG draws — the
+    /// arrival stream is unperturbed), and shedding becomes
+    /// priority-aware (see `advance_to`).
+    pub fn classes(mut self, set: &ClassSet) -> Self {
+        self.assigner = Some(set.assigner());
+        self.priorities = set.priorities();
+        self.tally = Some(ClassTally::new(set.len()));
+        self
+    }
+
     pub fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    /// The traffic spec, when nonstationary.
+    pub fn traffic_spec(&self) -> Option<RateFn> {
+        self.traffic.as_ref().map(|t| t.spec())
     }
 
     fn sample_gap(&mut self) -> f64 {
         match self.pending_gaps.pop_front() {
             Some(gap) => gap,
+            None => match &mut self.traffic {
+                Some(thin) => thin.next_gap(&mut self.rng),
+                None => -self.rng.next_f64_open().ln() / self.lambda,
+            },
+        }
+    }
+
+    fn draw_gap(&mut self) -> f64 {
+        match &mut self.traffic {
+            Some(thin) => thin.next_gap(&mut self.rng),
             None => -self.rng.next_f64_open().ln() / self.lambda,
+        }
+    }
+
+    /// Queue index to evict so `class` can enter a full queue, or `None`
+    /// when the newcomer does not outrank anyone. Victim: the entry with
+    /// the lowest priority, ties to the *youngest* such entry (it has
+    /// waited least); only evicted when strictly below the newcomer's
+    /// priority. Without classes the queue stays tail-drop.
+    fn eviction_victim(&self, class: u8) -> Option<usize> {
+        if self.priorities.is_empty() {
+            return None;
+        }
+        let newcomer = self.priorities.get(class as usize).copied().unwrap_or(0);
+        let mut victim: Option<(usize, u8)> = None;
+        for (i, &(_, c)) in self.queue.iter().enumerate() {
+            let p = self.priorities.get(c as usize).copied().unwrap_or(0);
+            let worse = match victim {
+                Some((_, vp)) => p <= vp,
+                None => true,
+            };
+            if worse {
+                victim = Some((i, p));
+            }
+        }
+        match victim {
+            Some((i, p)) if p < newcomer => Some(i),
+            _ => None,
         }
     }
 }
@@ -428,10 +536,33 @@ impl ArrivalProcess for OpenLoopPoisson {
             self.queue_integral += self.queue.len() as f64 * (t - self.last_t);
             self.last_t = t;
             self.offered += 1;
+            // Class assignment is RNG-free (deficit WRR), so attaching
+            // classes never perturbs the gap stream above.
+            let class = match &mut self.assigner {
+                Some(a) => a.next_class(),
+                None => 0,
+            };
+            if let Some(tally) = &mut self.tally {
+                tally.offer(class);
+            }
             if self.queue.len() < self.queue_capacity {
-                self.queue.push_back(t);
+                self.queue.push_back((t, class));
+            } else if let Some(victim) = self.eviction_victim(class) {
+                // Class-aware shedding: a full queue sheds its
+                // lowest-priority entry to make room for a
+                // higher-priority newcomer.
+                let (_, vclass) =
+                    self.queue.remove(victim).expect("victim index is in bounds");
+                self.rejected += 1;
+                if let Some(tally) = &mut self.tally {
+                    tally.reject(vclass);
+                }
+                self.queue.push_back((t, class));
             } else {
                 self.rejected += 1;
+                if let Some(tally) = &mut self.tally {
+                    tally.reject(class);
+                }
             }
             let gap = self.sample_gap();
             self.next_arrival = t + gap;
@@ -448,7 +579,7 @@ impl ArrivalProcess for OpenLoopPoisson {
             t += *g;
         }
         while t <= until {
-            let gap = -self.rng.next_f64_open().ln() / self.lambda;
+            let gap = self.draw_gap();
             t += gap;
             self.pending_gaps.push_back(gap);
         }
@@ -459,14 +590,23 @@ impl ArrivalProcess for OpenLoopPoisson {
         match self.queue.front() {
             // The guard matters when lanes interleave: arrivals may have
             // been generated past `now` by a later-running lane.
-            Some(&arrived) if arrived <= now => {
+            Some(&(arrived, class)) if arrived <= now => {
                 self.queue.pop_front();
                 self.admitted += 1;
                 self.wait_sum += now - arrived;
+                self.last_class = class;
                 Some(arrived)
             }
             _ => None,
         }
+    }
+
+    fn last_class(&self) -> u8 {
+        self.last_class
+    }
+
+    fn class_tally(&self) -> Option<ClassTally> {
+        self.tally.clone()
     }
 
     fn initial_fill(&self) -> bool {
@@ -475,7 +615,10 @@ impl ArrivalProcess for OpenLoopPoisson {
 
     fn stats(&self, total_time: f64) -> ArrivalStats {
         ArrivalStats {
-            kind: "open-poisson",
+            kind: match &self.traffic {
+                Some(thin) => thin.spec().arrival_kind(),
+                None => "open-poisson",
+            },
             lambda: self.lambda,
             offered: self.offered,
             admitted: self.admitted,
@@ -490,7 +633,10 @@ impl ArrivalProcess for OpenLoopPoisson {
     }
 
     fn name(&self) -> &'static str {
-        "open-poisson"
+        match &self.traffic {
+            Some(thin) => thin.spec().arrival_kind(),
+            None => "open-poisson",
+        }
     }
 }
 
@@ -692,6 +838,9 @@ pub struct SimulationBuilder {
     /// offset). `None` (the default) leaves the session bit-for-bit
     /// identical to the pre-ingress engine.
     ingress: Option<(IngressWiring, u32, f64)>,
+    /// In-flight requests to resume (warm handoff across an autoscale
+    /// epoch rebuild). Requires an open-loop arrival process.
+    preload: Vec<LiveSlot>,
 }
 
 /// How a session's ingress wrappers reach the dispatcher: directly into
@@ -790,6 +939,18 @@ impl SimulationBuilder {
         self
     }
 
+    /// Resume exported in-flight requests in the new session's slots
+    /// (warm handoff: an autoscale epoch rebuild carries live decodes
+    /// over instead of restarting them). Requests keep their original
+    /// admit time, wait, class, and remaining decode lifetime, and are
+    /// distributed round-robin over (lane, worker) in export order.
+    /// Rejected by [`Self::build`] when the arrival process starts slots
+    /// occupied (there would be nowhere to put them).
+    pub fn preload_slots(mut self, slots: Vec<LiveSlot>) -> Self {
+        self.preload = slots;
+        self
+    }
+
     /// Attach an ingress dispatcher: the session's arrival process is
     /// wrapped so every admit/reject is journaled through `core`'s
     /// [`crate::ingress::store::StateStore`], and an observer feeds it
@@ -846,6 +1007,7 @@ impl SimulationBuilder {
             max_completions,
             record_steps,
             ingress,
+            preload,
         } = self;
         if r == 0 {
             return Err(AfdError::config("fan-in r must be >= 1"));
@@ -868,7 +1030,7 @@ impl SimulationBuilder {
         let mut source =
             source.unwrap_or_else(|| Box::new(SyntheticSource::from_config(&cfg)));
         let initial_fill = arrival.initial_fill();
-        let lanes: Vec<Lane> = (0..m)
+        let mut lanes: Vec<Lane> = (0..m)
             .map(|g| Lane {
                 workers: (0..r)
                     .map(|j| {
@@ -889,6 +1051,36 @@ impl SimulationBuilder {
                 steps: 0,
             })
             .collect();
+        // Warm handoff: resume exported live requests round-robin over
+        // the flattened (lane-major) worker list, each into its worker's
+        // lowest idle slot. Deterministic: placement depends only on
+        // export order and session shape.
+        if !preload.is_empty() {
+            if initial_fill {
+                return Err(AfdError::config(
+                    "preload_slots requires an open-loop arrival process (slots must start idle)",
+                ));
+            }
+            let mut flat: Vec<&mut SlotArray> =
+                lanes.iter_mut().flat_map(|l| l.workers.iter_mut()).collect();
+            let k = flat.len();
+            let mut cursor = 0usize;
+            for ls in preload {
+                let mut placed = false;
+                for step in 0..k {
+                    if flat[(cursor + step) % k].preload(ls) {
+                        cursor = (cursor + step + 1) % k;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    return Err(AfdError::config(
+                        "preload_slots exceeds the session's total slot capacity",
+                    ));
+                }
+            }
+        }
         let agg = (r * b) as f64;
         let agg_token_load =
             lanes.iter().flat_map(|l| l.workers.iter()).map(|w| w.token_load()).sum();
@@ -1034,6 +1226,7 @@ impl Simulation {
             max_completions: None,
             record_steps: false,
             ingress: None,
+            preload: Vec::new(),
         }
     }
 
@@ -1103,6 +1296,19 @@ impl Simulation {
     /// Total decode slots (lanes × r × B).
     pub fn total_slots(&self) -> usize {
         self.lanes.len() * self.r * self.b
+    }
+
+    /// Snapshot every live in-flight request, lane-major then ascending
+    /// slot order — the export half of a warm handoff (feed the result
+    /// to [`SimulationBuilder::preload_slots`] on the rebuilt session).
+    pub fn export_live_slots(&self) -> Vec<LiveSlot> {
+        let mut out = Vec::with_capacity(self.agg_live);
+        for lane in &self.lanes {
+            for w in &lane.workers {
+                out.extend(w.export_live());
+            }
+        }
+        out
     }
 
     /// Name of the phase-cost model pricing this session ("linear"
@@ -1270,6 +1476,7 @@ impl Simulation {
 
         self.arrival.advance_to(self.last_finish);
         let arrival = self.arrival.stats(self.last_finish);
+        let classes = self.arrival.class_tally();
         let sim_metrics = self.metrics.finalize(
             &self.cfg,
             self.r,
@@ -1282,6 +1489,7 @@ impl Simulation {
             completions: self.completions,
             steps: self.steps_log,
             arrival,
+            classes,
         }
     }
 

@@ -45,6 +45,22 @@ use crate::workload::request::RequestLengths;
 /// `complete_at` sentinel for an idle slot.
 const IDLE: u64 = u64::MAX;
 
+/// A live in-flight request exported from one [`SlotArray`] and
+/// preloaded into another — the unit of warm handoff when an autoscale
+/// epoch rebuilds the engine around live decodes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveSlot {
+    pub prefill: u64,
+    pub decode_len: u64,
+    /// Decode steps still to run (>= 1 for a live slot).
+    pub remaining: u64,
+    /// Original admission time (absolute simulation time).
+    pub admit_time: f64,
+    /// Queue wait the request experienced at admission.
+    pub wait: f64,
+    pub class: u8,
+}
+
 /// One completed-request record.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Completion {
@@ -58,6 +74,12 @@ pub struct Completion {
     pub prefill: u64,
     /// Decode lifetime (number of output tokens produced).
     pub decode_len: u64,
+    /// Traffic class of the request (0 when classes are not in use).
+    pub class: u8,
+    /// Admission-queue wait: time between the request's arrival and its
+    /// admission into a slot (the TTFT proxy for SLO evaluation; 0 under
+    /// the closed loop, whose requests never queue).
+    pub wait: f64,
 }
 
 impl Completion {
@@ -79,6 +101,10 @@ pub struct SlotArray {
     decode: Vec<u64>,
     /// Admission time per slot (for TPOT accounting).
     admit_times: Vec<f64>,
+    /// Queue wait at admission per slot (stale when idle).
+    waits: Vec<f64>,
+    /// Traffic class per slot (stale when idle).
+    classes: Vec<u8>,
     /// Request id per slot (stale when idle).
     ids: Vec<u64>,
     /// Step-counter value at which the slot's request completes, or
@@ -115,6 +141,8 @@ impl SlotArray {
             prefill: vec![0; batch],
             decode: vec![0; batch],
             admit_times: vec![0.0; batch],
+            waits: vec![0.0; batch],
+            classes: vec![0; batch],
             ids: vec![0; batch],
             complete_at: vec![IDLE; batch],
             calendar: VecDeque::new(),
@@ -140,7 +168,7 @@ impl SlotArray {
         let mut slots = Self::with_capacity(batch, stream);
         for i in 0..batch {
             let lengths = slots.stream.next_lengths();
-            slots.admit_into(i, lengths, 0.0);
+            slots.admit_into(i, lengths, 0.0, 0.0, 0);
         }
         slots
     }
@@ -235,13 +263,23 @@ impl SlotArray {
         bucket.push(slot as u32);
     }
 
-    /// Occupy `slot` with a fresh age-0 request admitted at `now`.
-    fn admit_into(&mut self, slot: usize, lengths: RequestLengths, now: f64) {
+    /// Occupy `slot` with a fresh age-0 request admitted at `now` that
+    /// waited `wait` in the admission queue.
+    fn admit_into(
+        &mut self,
+        slot: usize,
+        lengths: RequestLengths,
+        now: f64,
+        wait: f64,
+        class: u8,
+    ) {
         self.prefill[slot] = lengths.prefill;
         self.decode[slot] = lengths.decode;
         self.ids[slot] = self.next_id;
         self.next_id += 1;
         self.admit_times[slot] = now;
+        self.waits[slot] = wait;
+        self.classes[slot] = class;
         self.token_load += lengths.prefill;
         self.live += 1;
         self.schedule_in(slot, lengths.decode);
@@ -284,12 +322,15 @@ impl SlotArray {
                 admit_time: self.admit_times[s],
                 prefill: self.prefill[s],
                 decode_len: self.decode[s],
+                class: self.classes[s],
+                wait: self.waits[s],
             });
             self.token_load -= self.prefill[s] + self.decode[s].max(1);
             self.live -= 1;
-            if arrival.try_admit(now).is_some() {
+            if let Some(arrived) = arrival.try_admit(now) {
                 let lengths = self.stream.next_lengths();
-                self.admit_into(s, lengths, now);
+                let wait = (now - arrived).max(0.0);
+                self.admit_into(s, lengths, now, wait, arrival.last_class());
             } else {
                 self.complete_at[s] = IDLE;
                 self.free.insert(s);
@@ -310,13 +351,60 @@ impl SlotArray {
     /// `now`, so later idle slots cannot be filled either.
     pub fn fill_empty(&mut self, now: f64, arrival: &mut dyn ArrivalProcess) {
         while let Some(&slot) = self.free.iter().next() {
-            if arrival.try_admit(now).is_none() {
+            let Some(arrived) = arrival.try_admit(now) else {
                 return;
-            }
+            };
             self.free.remove(&slot);
             let lengths = self.stream.next_lengths();
-            self.admit_into(slot, lengths, now);
+            let wait = (now - arrived).max(0.0);
+            self.admit_into(slot, lengths, now, wait, arrival.last_class());
         }
+    }
+
+    /// Snapshot every live (non-idle) slot for a warm handoff across an
+    /// engine rebuild: absolute admit time plus the remaining decode
+    /// lifetime, in ascending slot order. Idle slots are skipped.
+    pub fn export_live(&self) -> Vec<LiveSlot> {
+        let mut out = Vec::with_capacity(self.live);
+        for s in 0..self.batch() {
+            if self.complete_at[s] == IDLE {
+                continue;
+            }
+            out.push(LiveSlot {
+                prefill: self.prefill[s],
+                decode_len: self.decode[s],
+                remaining: self.complete_at[s] - self.clock,
+                admit_time: self.admit_times[s],
+                wait: self.waits[s],
+                class: self.classes[s],
+            });
+        }
+        out
+    }
+
+    /// Resume an exported in-flight request in the lowest idle slot
+    /// (warm handoff into a freshly-built array). The request keeps its
+    /// original admit time, wait, class, and remaining lifetime; it does
+    /// NOT consume the length stream (its lengths travel with it).
+    /// Returns `false` when no idle slot is available.
+    pub fn preload(&mut self, live: LiveSlot) -> bool {
+        let Some(&slot) = self.free.iter().next() else {
+            return false;
+        };
+        self.free.remove(&slot);
+        self.prefill[slot] = live.prefill;
+        self.decode[slot] = live.decode_len;
+        self.ids[slot] = self.next_id;
+        self.next_id += 1;
+        self.admit_times[slot] = live.admit_time;
+        self.waits[slot] = live.wait;
+        self.classes[slot] = live.class;
+        let remaining = live.remaining.clamp(1, live.decode_len.max(1));
+        let age = live.decode_len.max(1) - remaining;
+        self.token_load += live.prefill + age;
+        self.live += 1;
+        self.schedule_in(slot, remaining);
+        true
     }
 
     /// Recompute `(token_load, live)` from scratch by walking every slot
@@ -509,10 +597,24 @@ mod tests {
     fn tpot_is_finite_even_for_zero_length_decode_records() {
         // Malformed trace entries (decode_len == 0) must not emit
         // inf/NaN TPOT into metrics or CSVs: the divisor clamps to 1.
-        let c = Completion { finish_time: 10.0, admit_time: 4.0, prefill: 3, decode_len: 0 };
+        let c = Completion {
+            finish_time: 10.0,
+            admit_time: 4.0,
+            prefill: 3,
+            decode_len: 0,
+            class: 0,
+            wait: 0.0,
+        };
         assert!(c.tpot().is_finite());
         assert_eq!(c.tpot(), 6.0);
-        let ok = Completion { finish_time: 10.0, admit_time: 4.0, prefill: 3, decode_len: 3 };
+        let ok = Completion {
+            finish_time: 10.0,
+            admit_time: 4.0,
+            prefill: 3,
+            decode_len: 3,
+            class: 0,
+            wait: 0.0,
+        };
         assert_eq!(ok.tpot(), 2.0);
     }
 
@@ -523,5 +625,38 @@ mod tests {
         assert_eq!(slots.token_load(), 0);
         assert_eq!(slots.batch(), 4);
         assert_eq!(slots.debug_direct_totals(), (0, 0));
+    }
+
+    #[test]
+    fn export_and_preload_round_trip_live_requests() {
+        // Run a warm array, export its live slots into a fresh empty
+        // array, and check the preloaded requests complete at the same
+        // simulation times with identical records (the warm-handoff
+        // contract for autoscale epoch rebuilds).
+        let mut old = SlotArray::new(8, gen(10));
+        let mut sink = Vec::new();
+        for s in 1..=37 {
+            old.step(s as f64, &mut sink);
+        }
+        let live = old.export_live();
+        assert_eq!(live.len(), old.live());
+        let mut neu = SlotArray::empty_from_stream(8, Box::new(gen(11)));
+        for ls in &live {
+            assert!(neu.preload(*ls));
+        }
+        assert_eq!(neu.live(), old.live());
+        assert_eq!(neu.token_load(), old.token_load());
+        assert_eq!(neu.debug_direct_totals(), old.debug_direct_totals());
+        // Drive both with a denying process: the drained completion
+        // streams must agree on every field.
+        let mut deny = DenyAll;
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for s in 38..200 {
+            old.step_admission(s as f64, &mut deny, &mut a);
+            neu.step_admission(s as f64, &mut deny, &mut b);
+        }
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        assert_eq!(old.live(), 0);
     }
 }

@@ -114,6 +114,36 @@ pub fn max_normal_cdf(r: usize, m: f64) -> f64 {
     normal_cdf(m).powi(r as i32)
 }
 
+/// Empirical nearest-rank percentile of a sample: the smallest value `v`
+/// such that at least `p * n` observations are `<= v` (rank
+/// `ceil(p * n)`, 1-indexed). Returns 0.0 for an empty sample so SLO
+/// reports stay finite; `p` is clamped to (0, 1].
+///
+/// Nearest-rank (rather than interpolated) keeps the estimate an actual
+/// observed latency — SLO attainment then has the exact property that a
+/// class attains its SLO iff `empirical_percentile(x, p) <= target`.
+pub fn empirical_percentile(sample: &[f64], p: f64) -> f64 {
+    if sample.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(f64::MIN_POSITIVE, 1.0);
+    let mut sorted: Vec<f64> = sample.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Fraction of observations at or below `target` — the SLO attainment of
+/// a sample against a latency target. Empty samples report 1.0 (an SLO
+/// with no traffic is vacuously met).
+pub fn attainment_fraction(sample: &[f64], target: f64) -> f64 {
+    if sample.is_empty() {
+        return 1.0;
+    }
+    let ok = sample.iter().filter(|&&x| x <= target).count();
+    ok as f64 / sample.len() as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,5 +257,37 @@ mod tests {
         assert!((var_max_std_normal(1) - 1.0).abs() < 1e-12);
         let v8 = var_max_std_normal(8);
         assert!(v8 > 0.0 && v8 < 1.0, "var max_8 = {v8}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank_matches_definition() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        // Ranks: ceil(0.5*5)=3 -> 3.0; ceil(0.9*5)=5 -> 5.0; p=1 -> max.
+        assert_eq!(empirical_percentile(&xs, 0.5), 3.0);
+        assert_eq!(empirical_percentile(&xs, 0.9), 5.0);
+        assert_eq!(empirical_percentile(&xs, 1.0), 5.0);
+        // Tiny p picks the minimum; empty samples report 0.
+        assert_eq!(empirical_percentile(&xs, 0.01), 1.0);
+        assert_eq!(empirical_percentile(&[], 0.5), 0.0);
+        // Attainment duality: p-percentile <= t iff attainment >= p.
+        for t in [0.5, 2.5, 3.0, 4.5, 6.0] {
+            let att = attainment_fraction(&xs, t);
+            for p in [0.2, 0.4, 0.6, 0.8, 1.0] {
+                assert_eq!(
+                    empirical_percentile(&xs, p) <= t,
+                    att >= p,
+                    "t={t} p={p} att={att}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attainment_counts_at_or_below_target() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(attainment_fraction(&xs, 2.0), 0.5);
+        assert_eq!(attainment_fraction(&xs, 0.5), 0.0);
+        assert_eq!(attainment_fraction(&xs, 10.0), 1.0);
+        assert_eq!(attainment_fraction(&[], 1.0), 1.0);
     }
 }

@@ -13,8 +13,11 @@
 //! rows, the bundle index on per-bundle rows), `imbalance`,
 //! `idle_share`, `realized_vs_eq1`, and `converged_r`; the cost-model
 //! axis appends `cost_model` (with the theory columns computed from the
-//! model's linearization) — keeping the legacy column prefix stable for
-//! existing plotting scripts.
+//! model's linearization); the nonstationary-traffic axis appends
+//! `traffic` (the `--traffic` grammar string, `none` for stationary
+//! cells), `classes` (class count), and `slo_attain` (the binding
+//! per-class SLO attainment, 1.0 without SLOs) — keeping the legacy
+//! column prefix stable for existing plotting scripts.
 
 use std::path::Path;
 
@@ -28,7 +31,7 @@ use crate::util::tablefmt::{sig, Table};
 
 /// CSV header (kept stable; downstream plotting scripts key on names —
 /// `python/plot_sweep.py --check` validates this exact schema).
-pub const CSV_HEADER: [&str; 33] = [
+pub const CSV_HEADER: [&str; 36] = [
     "scenario",
     "r",
     "batch",
@@ -62,6 +65,9 @@ pub const CSV_HEADER: [&str; 33] = [
     "realized_vs_eq1",
     "converged_r",
     "cost_model",
+    "traffic",
+    "classes",
+    "slo_attain",
 ];
 
 fn group_for<'a>(res: &'a SweepResults, cell: &SweepCell) -> &'a GroupSummary {
@@ -127,6 +133,9 @@ fn push_row(
         format!("{:.6}", realized_vs_eq1),
         converged_r.to_string(),
         cell.cost.clone(),
+        cell.traffic.clone(),
+        cell.class_reports.len().to_string(),
+        format!("{:.6}", cell.slo_attainment()),
     ]);
 }
 
@@ -183,12 +192,59 @@ fn arrival_to_json(a: &ArrivalStats) -> Json {
         .set("mean_queue_len", Json::Num(a.mean_queue_len))
 }
 
+fn class_reports_to_json(cell: &SweepCell) -> Json {
+    let tally = cell.class_tally.as_ref();
+    Json::Arr(
+        cell.class_reports
+            .iter()
+            .map(|r| {
+                let ix = r.class as usize;
+                let mut j = Json::obj()
+                    .set("class", Json::Num(r.class as f64))
+                    .set("name", Json::Str(r.name.clone()))
+                    .set("priority", Json::Num(r.priority as f64))
+                    .set("completed", Json::Num(r.completed as f64))
+                    .set(
+                        "offered",
+                        Json::Num(
+                            tally.and_then(|t| t.offered.get(ix)).copied().unwrap_or(0)
+                                as f64,
+                        ),
+                    )
+                    .set(
+                        "rejected",
+                        Json::Num(
+                            tally.and_then(|t| t.rejected.get(ix)).copied().unwrap_or(0)
+                                as f64,
+                        ),
+                    )
+                    .set("ttft_p", Json::Num(r.ttft_p))
+                    .set("tpot_p", Json::Num(r.tpot_p))
+                    .set("ttft_attainment", Json::Num(r.ttft_attainment))
+                    .set("tpot_attainment", Json::Num(r.tpot_attainment))
+                    .set("attained", Json::Bool(r.attained));
+                if let Some(s) = &r.slo {
+                    j = j.set(
+                        "slo",
+                        Json::obj()
+                            .set("percentile", Json::Num(s.percentile))
+                            .set("ttft", Json::Num(s.ttft))
+                            .set("tpot", Json::Num(s.tpot)),
+                    );
+                }
+                j
+            })
+            .collect(),
+    )
+}
+
 fn cell_to_json(cell: &SweepCell) -> Json {
     let m = &cell.metrics;
     let c = &cell.cluster;
     Json::obj()
         .set("scenario", Json::Str(cell.scenario.clone()))
         .set("cost_model", Json::Str(cell.cost.clone()))
+        .set("traffic", Json::Str(cell.traffic.clone()))
         .set("r", Json::Num(m.r as f64))
         .set("batch", Json::Num(m.batch as f64))
         // String, not Num: the SplitMix64-derived seeds use the full u64
@@ -237,6 +293,8 @@ fn cell_to_json(cell: &SweepCell) -> Json {
                     .collect(),
             ),
         )
+        .set("classes", class_reports_to_json(cell))
+        .set("slo_attain", Json::Num(cell.slo_attainment()))
 }
 
 fn group_to_json(g: &GroupSummary) -> Json {
@@ -510,6 +568,58 @@ mod tests {
             groups[1].field("cost_model").unwrap().as_str().unwrap(),
             "roofline"
         );
+    }
+
+    #[test]
+    fn traffic_and_class_columns_emit_on_nonstationary_cells() {
+        use crate::traffic::{ClassSet, RateFn};
+        let mut base = ExperimentConfig::default();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::Traffic {
+            spec: RateFn::parse("flash:0.4:2.0:30:40").unwrap(),
+            queue_capacity: 32,
+        }])
+        .with_classes(
+            ClassSet::parse("web:1:1,batch:1:0")
+                .unwrap()
+                .with_slos("web:p95:1e9:1e9")
+                .unwrap(),
+        );
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        let t = to_csv_table(&res);
+        assert_eq!(t.header.len(), CSV_HEADER.len());
+        let traffic = t.col("traffic").unwrap();
+        assert!(t.rows.iter().all(|r| r[traffic] == "flash:0.4:2:30:40"));
+        assert!(t.column_u64("classes").unwrap().iter().all(|&x| x == 2));
+        let attain = t.column_f64("slo_attain").unwrap();
+        assert!(attain.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let arr = t.col("arrival").unwrap();
+        assert!(t.rows.iter().all(|r| r[arr] == "open-flash"));
+        // JSON carries the traffic string and the per-class reports.
+        let j = to_json(&res);
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        let cells = back.field("cells").unwrap().as_arr().unwrap();
+        assert_eq!(
+            cells[0].field("traffic").unwrap().as_str().unwrap(),
+            "flash:0.4:2:30:40"
+        );
+        let classes = cells[0].field("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].field("name").unwrap().as_str().unwrap(), "web");
+        assert!(classes[0].field("slo").is_some());
+        assert!(classes[1].field("slo").is_none());
+        // Stationary cells keep the columns trivial.
+        let res2 = small_results();
+        let t2 = to_csv_table(&res2);
+        let tr = t2.col("traffic").unwrap();
+        assert!(t2.rows.iter().all(|r| r[tr] == "none"));
+        assert!(t2.column_u64("classes").unwrap().iter().all(|&x| x == 0));
+        assert!(t2.column_f64("slo_attain").unwrap().iter().all(|&x| x == 1.0));
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::sim::metrics::SimMetrics;
 use crate::sim::session::{ArrivalStats, Simulation};
 use crate::stats::rng::SplitMix64;
 use crate::sweep::scenarios::Scenario;
+use crate::traffic::{ClassReport, ClassSet, ClassTally, RateFn};
 use crate::util::pool::{default_threads, ThreadPool};
 use crate::workload::stationary::StationaryLoad;
 
@@ -67,6 +68,15 @@ pub enum ArrivalSpec {
         /// Admission-queue capacity (arrivals beyond it are rejected).
         queue_capacity: usize,
     },
+    /// Open-loop arrivals driven by a time-varying rate profile
+    /// ([`RateFn`]: diurnal / MMPP / flash-crowd), sampled by thinning.
+    /// The profile's rate is absolute (requests per cycle for the whole
+    /// cell), never rho-calibrated.
+    Traffic {
+        spec: RateFn,
+        /// Admission-queue capacity (arrivals beyond it are rejected).
+        queue_capacity: usize,
+    },
 }
 
 impl ArrivalSpec {
@@ -80,26 +90,47 @@ impl ArrivalSpec {
         match self {
             ArrivalSpec::Closed => "closed",
             ArrivalSpec::Open { .. } => "open-poisson",
+            ArrivalSpec::Traffic { spec, .. } => spec.arrival_kind(),
+        }
+    }
+
+    /// The `--traffic` grammar string of this axis point (`none` for
+    /// closed loops and plain Poisson; the CSV `traffic` column).
+    pub fn traffic_string(&self) -> String {
+        match self {
+            ArrivalSpec::Traffic { spec, .. } => spec.spec_string(),
+            _ => "none".to_string(),
         }
     }
 
     fn validate(&self) -> Result<()> {
-        if let ArrivalSpec::Open { rho, lambda, queue_capacity } = self {
-            if let Some(l) = lambda {
-                if !(l.is_finite() && *l > 0.0) {
+        match self {
+            ArrivalSpec::Closed => {}
+            ArrivalSpec::Open { rho, lambda, queue_capacity } => {
+                if let Some(l) = lambda {
+                    if !(l.is_finite() && *l > 0.0) {
+                        return Err(crate::error::AfdError::config(format!(
+                            "open arrival lambda must be positive and finite, got {l}"
+                        )));
+                    }
+                } else if !(rho.is_finite() && *rho > 0.0) {
                     return Err(crate::error::AfdError::config(format!(
-                        "open arrival lambda must be positive and finite, got {l}"
+                        "open arrival rho must be positive and finite, got {rho}"
                     )));
                 }
-            } else if !(rho.is_finite() && *rho > 0.0) {
-                return Err(crate::error::AfdError::config(format!(
-                    "open arrival rho must be positive and finite, got {rho}"
-                )));
+                if *queue_capacity == 0 {
+                    return Err(crate::error::AfdError::config(
+                        "open arrival queue_capacity must be >= 1",
+                    ));
+                }
             }
-            if *queue_capacity == 0 {
-                return Err(crate::error::AfdError::config(
-                    "open arrival queue_capacity must be >= 1",
-                ));
+            ArrivalSpec::Traffic { spec, queue_capacity } => {
+                spec.validate()?;
+                if *queue_capacity == 0 {
+                    return Err(crate::error::AfdError::config(
+                        "traffic arrival queue_capacity must be >= 1",
+                    ));
+                }
             }
         }
         Ok(())
@@ -151,6 +182,10 @@ pub struct SweepGrid {
     pub ratios: Vec<usize>,
     /// Per-worker microbatch sizes (paper's B axis).
     pub batches: Vec<usize>,
+    /// Multi-tenant traffic classes applied to every open-loop cell
+    /// (closed cells have no arrival stream to tag). Adds per-class
+    /// SLO-attainment columns to the emitted CSV/JSON.
+    pub classes: Option<ClassSet>,
 }
 
 impl SweepGrid {
@@ -163,6 +198,7 @@ impl SweepGrid {
             cost_models: vec![CostSpec::Linear],
             ratios,
             batches,
+            classes: None,
         }
     }
 
@@ -181,6 +217,12 @@ impl SweepGrid {
     /// Replace the cost-model axis.
     pub fn with_costs(mut self, cost_models: Vec<CostSpec>) -> Self {
         self.cost_models = cost_models;
+        self
+    }
+
+    /// Tag every open-loop cell's arrivals with a traffic-class set.
+    pub fn with_classes(mut self, classes: ClassSet) -> Self {
+        self.classes = Some(classes);
         self
     }
 
@@ -281,6 +323,17 @@ impl SweepGrid {
                 )));
             }
         }
+        if let Some(set) = &self.classes {
+            if set.is_empty() {
+                return Err(crate::error::AfdError::config("class set must be non-empty"));
+            }
+            if self.arrivals.iter().all(|a| matches!(a, ArrivalSpec::Closed)) {
+                return Err(crate::error::AfdError::config(
+                    "traffic classes need at least one open arrival axis point \
+                     (closed loops admit no external arrivals to tag)",
+                ));
+            }
+        }
         for s in &self.scenarios {
             s.spec.validate()?;
         }
@@ -341,6 +394,26 @@ pub struct SweepCell {
     pub theory_mf: f64,
     /// Gaussian barrier-aware theory throughput `Thr_G(B; r)` (Eq. 9/11).
     pub theory_g: f64,
+    /// The `--traffic` grammar string of the cell's arrival axis point
+    /// (`"none"` for closed loops and plain Poisson).
+    pub traffic: String,
+    /// Per-class SLO reports over the cell's full completion stream
+    /// (empty when the grid carries no class set or the cell is closed).
+    pub class_reports: Vec<ClassReport>,
+    /// Per-class offered/rejected tallies matching `class_reports`.
+    pub class_tally: Option<ClassTally>,
+}
+
+impl SweepCell {
+    /// Binding SLO attainment of the cell: the minimum attainment across
+    /// classes (1.0 when no class carries an SLO or no classes are set).
+    pub fn slo_attainment(&self) -> f64 {
+        self.class_reports
+            .iter()
+            .filter(|r| r.slo.is_some())
+            .map(|r| r.attainment())
+            .fold(1.0, f64::min)
+    }
 }
 
 /// Per-(scenario, arrival, fleet, B) summary: theory vs simulation
@@ -444,6 +517,8 @@ struct CellResult {
     imbalance: f64,
     converged_r: Vec<usize>,
     per_bundle: Vec<BundleCellMetrics>,
+    class_reports: Vec<ClassReport>,
+    class_tally: Option<ClassTally>,
 }
 
 /// Run one grid cell as a cluster simulation (a 1-bundle fleet is
@@ -457,6 +532,7 @@ fn run_cell(
     fleet: FleetSpec,
     cost: CostSpec,
     r: usize,
+    classes: Option<&ClassSet>,
     opts: SimOptions,
 ) -> CellResult {
     let scenario = scenario.clone();
@@ -469,12 +545,31 @@ fn run_cell(
         .completions_per_bundle(opts.max_completions)
         .window_tuning(opts.window)
         .source_factory(move |seed| scenario.make_source(seed));
-    if let ArrivalSpec::Open { lambda, queue_capacity, .. } = arrival {
-        let rate = lambda.expect("build_jobs resolves open-loop rates");
-        builder = builder.arrival(ClusterArrival::Open {
-            lambda: rate * fleet.bundles as f64,
-            queue_capacity,
-        });
+    let open_cell = !matches!(arrival, ArrivalSpec::Closed);
+    match arrival {
+        ArrivalSpec::Closed => {}
+        ArrivalSpec::Open { lambda, queue_capacity, .. } => {
+            let rate = lambda.expect("build_jobs resolves open-loop rates");
+            builder = builder.arrival(ClusterArrival::Open {
+                lambda: rate * fleet.bundles as f64,
+                queue_capacity,
+            });
+        }
+        // Traffic profiles carry their own absolute rate; the builder
+        // substitutes the profile's nominal rate for the regime lambda.
+        ArrivalSpec::Traffic { spec, queue_capacity } => {
+            builder = builder
+                .arrival(ClusterArrival::Open {
+                    lambda: spec.nominal_rate(),
+                    queue_capacity,
+                })
+                .traffic(spec);
+        }
+    }
+    // Classes tag open-loop arrivals only — closed cells have no
+    // arrival stream, and the builder rejects the combination.
+    if let (Some(set), true) = (classes, open_cell) {
+        builder = builder.traffic_classes(set.clone());
     }
     // fleet_threads > 1 shards the cell's bundles across the parallel
     // fleet engine — bitwise-identical output, so sweep artifacts don't
@@ -503,12 +598,24 @@ fn run_cell(
     } else {
         Vec::new()
     };
+    // Per-class SLO attainment over the cell's full completion stream
+    // (bundle-major order; the evaluation is order-insensitive).
+    let class_reports = match (classes, open_cell) {
+        (Some(set), true) => {
+            let all: Vec<crate::sim::slots::Completion> =
+                out.bundles.iter().flat_map(|b| b.completions.iter().copied()).collect();
+            set.evaluate(&all)
+        }
+        _ => Vec::new(),
+    };
     CellResult {
         metrics: out.aggregate.clone(),
         arrival: out.arrival,
         imbalance: out.load_imbalance,
         converged_r: out.converged_r(),
         per_bundle,
+        class_reports,
+        class_tally: out.classes,
     }
 }
 
@@ -668,6 +775,9 @@ fn assemble(grid: &SweepGrid, jobs: &[CellJob], results: Vec<CellResult>) -> Swe
             arrival: res.arrival,
             cluster,
             per_bundle: res.per_bundle,
+            traffic: job.arrival.traffic_string(),
+            class_reports: res.class_reports,
+            class_tally: res.class_tally,
         });
     }
 
@@ -767,8 +877,9 @@ pub fn run_grid(
             )
         })
         .collect();
+    let classes = grid.classes.clone();
     let permuted = pool.map(work, move |(i, cfg, scenario, arrival, fleet, cost, r)| {
-        (i, run_cell(&cfg, &scenario, arrival, fleet, cost, r, opts))
+        (i, run_cell(&cfg, &scenario, arrival, fleet, cost, r, classes.as_ref(), opts))
     });
     let mut slots: Vec<Option<CellResult>> = (0..jobs.len()).map(|_| None).collect();
     for (i, res) in permuted {
@@ -799,6 +910,7 @@ pub fn run_grid_serial(
                 j.fleet,
                 j.cost,
                 j.r,
+                grid.classes.as_ref(),
                 opts,
             )
         })
@@ -1200,6 +1312,102 @@ mod tests {
             res.cells[0].metrics.total_time.to_bits(),
             res.cells[1].metrics.total_time.to_bits()
         );
+    }
+
+    #[test]
+    fn traffic_axis_runs_nonstationary_cells_with_class_reports() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 50;
+        let grid = SweepGrid::new(
+            scenarios::resolve("deterministic-stress").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![
+            ArrivalSpec::Closed,
+            ArrivalSpec::Traffic {
+                spec: RateFn::parse("diurnal:0.4:0.2:200").unwrap(),
+                queue_capacity: 64,
+            },
+        ])
+        .with_classes(
+            ClassSet::parse("batch:1:0,web:1:1")
+                .unwrap()
+                .with_slos("web:p95:1e9:1e9")
+                .unwrap(),
+        );
+        let res = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        assert_eq!(res.cells.len(), 4);
+        // Closed cells: no traffic string, no class reports.
+        for c in &res.cells[..2] {
+            assert_eq!(c.arrival.kind, "closed");
+            assert_eq!(c.traffic, "none");
+            assert!(c.class_reports.is_empty());
+            assert_eq!(c.slo_attainment(), 1.0);
+        }
+        // Traffic cells: nonstationary kind, per-class reports, and a
+        // vacuously-attained SLO at the loose targets.
+        for c in &res.cells[2..] {
+            assert_eq!(c.arrival.kind, "open-diurnal");
+            assert_eq!(c.traffic, "diurnal:0.4:0.2:200");
+            assert!(c.arrival.offered > 0);
+            assert_eq!(c.class_reports.len(), 2);
+            let completed: u64 = c.class_reports.iter().map(|r| r.completed).sum();
+            assert_eq!(completed, c.metrics.completed);
+            assert!(c.class_reports[1].attained);
+            assert_eq!(c.slo_attainment(), 1.0);
+            let tally = c.class_tally.as_ref().expect("classed cells tally");
+            assert_eq!(tally.total_offered(), c.arrival.offered);
+        }
+        assert_eq!(res.groups[0].arrival, "closed");
+        assert_eq!(res.groups[1].arrival, "open-diurnal");
+    }
+
+    #[test]
+    fn traffic_axis_parallel_matches_serial() {
+        let mut base = tiny_base();
+        base.requests_per_instance = 40;
+        let grid = SweepGrid::new(
+            scenarios::resolve("short-chat").unwrap(),
+            vec![1, 2],
+            vec![8],
+        )
+        .with_arrivals(vec![ArrivalSpec::Traffic {
+            spec: RateFn::parse("flash:0.3:2.0:40:60").unwrap(),
+            queue_capacity: 32,
+        }])
+        .with_fleets(vec![FleetSpec::new(
+            2,
+            crate::coordinator::router::Policy::JoinShortestQueue,
+        )])
+        .with_classes(ClassSet::parse("a:3:0,b:1:0").unwrap());
+        let par = run_grid(&base, &grid, SimOptions::default(), 3).unwrap();
+        let ser = run_grid_serial(&base, &grid, SimOptions::default()).unwrap();
+        for (a, b) in par.cells.iter().zip(&ser.cells) {
+            assert_eq!(a.metrics.total_time.to_bits(), b.metrics.total_time.to_bits());
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.traffic, b.traffic);
+            assert_eq!(a.class_reports, b.class_reports);
+            assert_eq!(a.class_tally, b.class_tally);
+        }
+    }
+
+    #[test]
+    fn classes_without_open_arrivals_rejected() {
+        let base = tiny_base();
+        let g = tiny_grid().with_classes(ClassSet::parse("a:1:0").unwrap());
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        // Degenerate traffic shapes are rejected at validation.
+        let g = tiny_grid().with_arrivals(vec![ArrivalSpec::Traffic {
+            spec: RateFn::Diurnal { base: 1.0, amplitude: 2.0, period: 100.0 },
+            queue_capacity: 64,
+        }]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
+        let g = tiny_grid().with_arrivals(vec![ArrivalSpec::Traffic {
+            spec: RateFn::Constant { rate: 1.0 },
+            queue_capacity: 0,
+        }]);
+        assert!(run_grid_serial(&base, &g, SimOptions::default()).is_err());
     }
 
     #[test]

@@ -54,6 +54,13 @@ pub struct ReferenceSlotArray {
     token_load: u64,
     next_id: u64,
     admit_times: Vec<f64>,
+    // Queue wait and traffic class per slot, mirroring the production
+    // SoA arrays with the same admit-time arithmetic (the `Completion`
+    // record grew these fields after the freeze; both engines fill them
+    // from the identical `try_admit`/`last_class` values, so the
+    // byte-identity oracle still covers every field).
+    waits: Vec<f64>,
+    classes: Vec<u8>,
     live: usize,
 }
 
@@ -73,7 +80,16 @@ impl ReferenceSlotArray {
             slots.push(Some(req));
         }
         let admit_times = vec![0.0; batch];
-        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+        Self {
+            slots,
+            stream,
+            token_load,
+            next_id: batch as u64,
+            admit_times,
+            waits: vec![0.0; batch],
+            classes: vec![0; batch],
+            live: batch,
+        }
     }
 
     pub fn new_stationary(batch: usize, gen: RequestGenerator, seed: u64) -> Self {
@@ -108,7 +124,16 @@ impl ReferenceSlotArray {
             slots.push(Some(req));
         }
         let admit_times = vec![0.0; batch];
-        Self { slots, stream, token_load, next_id: batch as u64, admit_times, live: batch }
+        Self {
+            slots,
+            stream,
+            token_load,
+            next_id: batch as u64,
+            admit_times,
+            waits: vec![0.0; batch],
+            classes: vec![0; batch],
+            live: batch,
+        }
     }
 
     pub fn empty_from_stream(batch: usize, stream: Box<dyn LengthStream>) -> Self {
@@ -119,6 +144,8 @@ impl ReferenceSlotArray {
             token_load: 0,
             next_id: 0,
             admit_times: vec![0.0; batch],
+            waits: vec![0.0; batch],
+            classes: vec![0; batch],
             live: 0,
         }
     }
@@ -149,7 +176,9 @@ impl ReferenceSlotArray {
         arrival: &mut dyn ArrivalProcess,
         completions: &mut Vec<Completion>,
     ) {
-        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
+        for (i, (slot, admit)) in
+            self.slots.iter_mut().zip(self.admit_times.iter_mut()).enumerate()
+        {
             let Some(req) = slot.as_mut() else { continue };
             let old_load = req.token_load();
             if req.step() {
@@ -158,12 +187,16 @@ impl ReferenceSlotArray {
                     admit_time: *admit,
                     prefill: req.lengths.prefill,
                     decode_len: req.lengths.decode,
+                    class: self.classes[i],
+                    wait: self.waits[i],
                 });
-                if arrival.try_admit(now).is_some() {
+                if let Some(arrived) = arrival.try_admit(now) {
                     let lengths = self.stream.next_lengths();
                     *req = ActiveRequest::admit(self.next_id, lengths);
                     self.next_id += 1;
                     *admit = now;
+                    self.waits[i] = (now - arrived).max(0.0);
+                    self.classes[i] = arrival.last_class();
                     self.token_load = self.token_load - old_load + req.token_load();
                 } else {
                     *slot = None;
@@ -181,19 +214,23 @@ impl ReferenceSlotArray {
         if self.live == self.slots.len() {
             return;
         }
-        for (slot, admit) in self.slots.iter_mut().zip(self.admit_times.iter_mut()) {
+        for (i, (slot, admit)) in
+            self.slots.iter_mut().zip(self.admit_times.iter_mut()).enumerate()
+        {
             if slot.is_some() {
                 continue;
             }
-            if arrival.try_admit(now).is_none() {
+            let Some(arrived) = arrival.try_admit(now) else {
                 return;
-            }
+            };
             let lengths = self.stream.next_lengths();
             let req = ActiveRequest::admit(self.next_id, lengths);
             self.next_id += 1;
             self.token_load += req.token_load();
             *slot = Some(req);
             *admit = now;
+            self.waits[i] = (now - arrived).max(0.0);
+            self.classes[i] = arrival.last_class();
             self.live += 1;
         }
     }

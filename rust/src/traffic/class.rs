@@ -1,0 +1,490 @@
+//! Multi-tenant traffic classes: rate shares, priorities, and TTFT/TPOT
+//! percentile SLO targets.
+//!
+//! Classes are assigned to arrivals by a deterministic weighted
+//! round-robin ([`ClassAssigner`]) that draws **no randomness** — the
+//! class sequence is a pure function of the arrival index, so attaching
+//! classes to a run never perturbs the arrival RNG stream (and the
+//! parallel fleet engine's serial == parallel equality survives,
+//! because both engines assign classes in the same offered-arrival
+//! order).
+//!
+//! SLO evaluation is nearest-rank percentiles over the completion
+//! stream (via [`crate::stats::order_statistics::empirical_percentile`]):
+//! TTFT is proxied by the admission-queue wait (`Completion::wait` —
+//! time from arrival to slot admission), TPOT by `Completion::tpot()`.
+
+use crate::error::{AfdError, Result};
+use crate::sim::slots::Completion;
+use crate::stats::order_statistics::{attainment_fraction, empirical_percentile};
+
+/// Per-class TTFT/TPOT percentile SLO target: "the `percentile`-th
+/// percentile of TTFT must stay below `ttft` cycles, and of TPOT below
+/// `tpot` cycles".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Percentile in (0, 1], e.g. 0.95.
+    pub percentile: f64,
+    /// TTFT (queue-wait proxy) target in cycles.
+    pub ttft: f64,
+    /// TPOT target in cycles.
+    pub tpot: f64,
+}
+
+/// One traffic class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficClass {
+    pub name: String,
+    /// Relative arrival-rate share (normalized across the set).
+    pub share: f64,
+    /// Shedding priority: higher keeps its spot; lower is shed first.
+    pub priority: u8,
+    pub slo: Option<SloSpec>,
+}
+
+/// A validated, ordered set of traffic classes (index == class id).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClassSet {
+    classes: Vec<TrafficClass>,
+}
+
+impl ClassSet {
+    pub const MAX_CLASSES: usize = 16;
+
+    pub fn new(classes: Vec<TrafficClass>) -> Result<ClassSet> {
+        if classes.is_empty() {
+            return Err(AfdError::config("a class set needs at least one class"));
+        }
+        if classes.len() > Self::MAX_CLASSES {
+            return Err(AfdError::config(format!(
+                "at most {} traffic classes are supported, got {}",
+                Self::MAX_CLASSES,
+                classes.len()
+            )));
+        }
+        let total: f64 = classes.iter().map(|c| c.share).sum();
+        if !(total > 0.0) || classes.iter().any(|c| !(c.share > 0.0) || !c.share.is_finite()) {
+            return Err(AfdError::config("class shares must all be positive and finite"));
+        }
+        let mut names: Vec<&str> = classes.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != classes.len() {
+            return Err(AfdError::config("class names must be unique"));
+        }
+        for c in &classes {
+            if let Some(slo) = &c.slo {
+                let ok = slo.percentile > 0.0
+                    && slo.percentile <= 1.0
+                    && slo.ttft > 0.0
+                    && slo.tpot > 0.0;
+                if !ok {
+                    return Err(AfdError::config(format!(
+                        "class {:?}: SLO needs percentile in (0,1] and positive targets",
+                        c.name
+                    )));
+                }
+            }
+        }
+        Ok(ClassSet { classes })
+    }
+
+    /// Parse `--classes name:share:priority[,name:share:priority...]`.
+    pub fn parse(spec: &str) -> Result<ClassSet> {
+        let mut classes = Vec::new();
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let fields: Vec<&str> = part.trim().split(':').collect();
+            if fields.len() != 3 {
+                return Err(AfdError::config(format!(
+                    "class {part:?}: expected name:share:priority"
+                )));
+            }
+            let share: f64 = fields[1].trim().parse().map_err(|_| {
+                AfdError::config(format!("class {part:?}: share {:?} is not a number", fields[1]))
+            })?;
+            let priority: u8 = fields[2].trim().parse().map_err(|_| {
+                AfdError::config(format!(
+                    "class {part:?}: priority {:?} is not an integer in 0..=255",
+                    fields[2]
+                ))
+            })?;
+            classes.push(TrafficClass {
+                name: fields[0].trim().to_string(),
+                share,
+                priority,
+                slo: None,
+            });
+        }
+        ClassSet::new(classes)
+    }
+
+    /// Attach SLO targets parsed from
+    /// `--slo name:p95:TTFT:TPOT[,...]` (the percentile accepts `p95`,
+    /// `95`, or `0.95`). Unnamed classes keep no SLO.
+    pub fn with_slos(mut self, spec: &str) -> Result<ClassSet> {
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let fields: Vec<&str> = part.trim().split(':').collect();
+            if fields.len() != 4 {
+                return Err(AfdError::config(format!(
+                    "slo {part:?}: expected name:percentile:ttft:tpot"
+                )));
+            }
+            let name = fields[0].trim();
+            let p_raw = fields[1].trim().trim_start_matches('p');
+            let mut percentile: f64 = p_raw.parse().map_err(|_| {
+                AfdError::config(format!("slo {part:?}: bad percentile {:?}", fields[1]))
+            })?;
+            if percentile > 1.0 {
+                percentile /= 100.0;
+            }
+            let ttft: f64 = fields[2].trim().parse().map_err(|_| {
+                AfdError::config(format!("slo {part:?}: bad ttft target {:?}", fields[2]))
+            })?;
+            let tpot: f64 = fields[3].trim().parse().map_err(|_| {
+                AfdError::config(format!("slo {part:?}: bad tpot target {:?}", fields[3]))
+            })?;
+            let c = self
+                .classes
+                .iter_mut()
+                .find(|c| c.name == name)
+                .ok_or_else(|| {
+                    AfdError::config(format!("slo {part:?}: no class named {name:?}"))
+                })?;
+            c.slo = Some(SloSpec { percentile, ttft, tpot });
+        }
+        ClassSet::new(self.classes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    pub fn classes(&self) -> &[TrafficClass] {
+        &self.classes
+    }
+
+    pub fn priority_of(&self, class: u8) -> u8 {
+        self.classes.get(class as usize).map(|c| c.priority).unwrap_or(0)
+    }
+
+    /// Priorities indexed by class id (for arrival processes that shed
+    /// by priority without holding the whole set).
+    pub fn priorities(&self) -> Vec<u8> {
+        self.classes.iter().map(|c| c.priority).collect()
+    }
+
+    /// Whether any two classes differ in priority — iff so, a full
+    /// admission queue can evict (priority shedding is reachable). The
+    /// parallel fleet engine strengthens its admission-horizon
+    /// validation when this holds, since an eviction can remove a
+    /// queued entry out of FIFO order.
+    pub fn has_priority_tiers(&self) -> bool {
+        self.classes.windows(2).any(|w| w[0].priority != w[1].priority)
+    }
+
+    pub fn assigner(&self) -> ClassAssigner {
+        ClassAssigner::new(self.classes.iter().map(|c| c.share).collect())
+    }
+
+    /// Render back to the `--classes` grammar (journal headers).
+    pub fn spec_string(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| format!("{}:{}:{}", c.name, c.share, c.priority))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Render attached SLOs back to the `--slo` grammar; empty when no
+    /// class carries one.
+    pub fn slo_string(&self) -> String {
+        self.classes
+            .iter()
+            .filter_map(|c| {
+                c.slo.as_ref().map(|s| {
+                    format!("{}:{}:{}:{}", c.name, s.percentile, s.ttft, s.tpot)
+                })
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Per-class SLO evaluation over a completion stream. Classes with
+    /// no SLO (or no samples) report attainment 1.0 and `attained`.
+    pub fn evaluate(&self, completions: &[Completion]) -> Vec<ClassReport> {
+        let mut reports = Vec::with_capacity(self.classes.len());
+        for (ix, c) in self.classes.iter().enumerate() {
+            let waits: Vec<f64> = completions
+                .iter()
+                .filter(|k| k.class as usize == ix)
+                .map(|k| k.wait)
+                .collect();
+            let tpots: Vec<f64> = completions
+                .iter()
+                .filter(|k| k.class as usize == ix)
+                .map(|k| k.tpot())
+                .collect();
+            let p = c.slo.map(|s| s.percentile).unwrap_or(0.95);
+            let ttft_p = empirical_percentile(&waits, p);
+            let tpot_p = empirical_percentile(&tpots, p);
+            let (ttft_attainment, tpot_attainment, attained) = match &c.slo {
+                Some(s) if !waits.is_empty() => {
+                    let ta = attainment_fraction(&waits, s.ttft);
+                    let pa = attainment_fraction(&tpots, s.tpot);
+                    (ta, pa, ta >= s.percentile && pa >= s.percentile)
+                }
+                _ => (1.0, 1.0, true),
+            };
+            reports.push(ClassReport {
+                class: ix as u8,
+                name: c.name.clone(),
+                priority: c.priority,
+                completed: waits.len() as u64,
+                ttft_p,
+                tpot_p,
+                ttft_attainment,
+                tpot_attainment,
+                attained,
+                slo: c.slo,
+            });
+        }
+        reports
+    }
+}
+
+/// Per-class SLO outcome over one completion stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    pub class: u8,
+    pub name: String,
+    pub priority: u8,
+    pub completed: u64,
+    /// Achieved TTFT (queue-wait proxy) at the class percentile.
+    pub ttft_p: f64,
+    /// Achieved TPOT at the class percentile.
+    pub tpot_p: f64,
+    /// Fraction of completions meeting the TTFT target (1.0 without an
+    /// SLO or without samples).
+    pub ttft_attainment: f64,
+    /// Fraction of completions meeting the TPOT target.
+    pub tpot_attainment: f64,
+    /// Both attainments reached the SLO percentile.
+    pub attained: bool,
+    pub slo: Option<SloSpec>,
+}
+
+impl ClassReport {
+    /// The binding attainment (min of TTFT and TPOT fractions).
+    pub fn attainment(&self) -> f64 {
+        self.ttft_attainment.min(self.tpot_attainment)
+    }
+}
+
+/// Deterministic weighted round-robin over class shares: each arrival
+/// credits every class by its normalized share, then the class with
+/// the largest accumulated deficit wins (ties to the lowest index) and
+/// pays 1. No RNG draws — attaching classes never perturbs arrival
+/// streams, and long-run assignment frequencies converge to the shares
+/// (the deficit of any class stays within [-1, 1]).
+#[derive(Debug, Clone)]
+pub struct ClassAssigner {
+    share: Vec<f64>,
+    deficit: Vec<f64>,
+}
+
+impl ClassAssigner {
+    pub fn new(shares: Vec<f64>) -> ClassAssigner {
+        let total: f64 = shares.iter().sum();
+        debug_assert!(total > 0.0);
+        ClassAssigner {
+            share: shares.iter().map(|s| s / total).collect(),
+            deficit: vec![0.0; shares.len()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.share.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.share.is_empty()
+    }
+
+    /// Class of the next arrival.
+    pub fn next_class(&mut self) -> u8 {
+        let mut best = 0usize;
+        for i in 0..self.share.len() {
+            self.deficit[i] += self.share[i];
+            if self.deficit[i] > self.deficit[best] {
+                best = i;
+            }
+        }
+        self.deficit[best] -= 1.0;
+        best as u8
+    }
+}
+
+/// Running per-class offered/rejected tallies (admissions and SLO
+/// outcomes are recovered from the completion stream instead).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassTally {
+    pub offered: Vec<u64>,
+    pub rejected: Vec<u64>,
+}
+
+impl ClassTally {
+    pub fn new(n: usize) -> ClassTally {
+        ClassTally { offered: vec![0; n], rejected: vec![0; n] }
+    }
+
+    pub fn offer(&mut self, class: u8) {
+        if let Some(c) = self.offered.get_mut(class as usize) {
+            *c += 1;
+        }
+    }
+
+    pub fn reject(&mut self, class: u8) {
+        if let Some(c) = self.rejected.get_mut(class as usize) {
+            *c += 1;
+        }
+    }
+
+    /// Fold another tally into this one (per-epoch tallies accumulate
+    /// into a per-run total). Widens to the larger class count.
+    pub fn merge(&mut self, other: &ClassTally) {
+        if other.offered.len() > self.offered.len() {
+            self.offered.resize(other.offered.len(), 0);
+            self.rejected.resize(other.rejected.len(), 0);
+        }
+        for (a, b) in self.offered.iter_mut().zip(&other.offered) {
+            *a += b;
+        }
+        for (a, b) in self.rejected.iter_mut().zip(&other.rejected) {
+            *a += b;
+        }
+    }
+
+    /// Total arrivals offered across every class.
+    pub fn total_offered(&self) -> u64 {
+        self.offered.iter().sum()
+    }
+
+    /// Total arrivals rejected across every class.
+    pub fn total_rejected(&self) -> u64 {
+        self.rejected.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn completion(class: u8, wait: f64, decode: u64, span: f64) -> Completion {
+        Completion {
+            finish_time: 100.0 + span,
+            admit_time: 100.0,
+            prefill: 8,
+            decode_len: decode,
+            class,
+            wait,
+        }
+    }
+
+    #[test]
+    fn parse_classes_and_slos() {
+        let set = ClassSet::parse("gold:0.5:2,silver:0.3:1,bronze:0.2:0")
+            .unwrap()
+            .with_slos("gold:p95:40:2.0,silver:0.9:80:4.0")
+            .unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.priority_of(0), 2);
+        assert_eq!(set.priority_of(2), 0);
+        let gold = &set.classes()[0];
+        assert_eq!(gold.slo.unwrap().percentile, 0.95);
+        assert_eq!(set.classes()[1].slo.unwrap().percentile, 0.9);
+        assert!(set.classes()[2].slo.is_none());
+        // Round-trips through the grammar.
+        let back = ClassSet::parse(&set.spec_string()).unwrap();
+        assert_eq!(back.len(), 3);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "",
+            "gold:0:1",
+            "gold:-1:1",
+            "gold:0.5",
+            "gold:0.5:1,gold:0.5:2", // duplicate name
+            "gold:0.5:300",          // priority out of u8
+        ] {
+            assert!(ClassSet::parse(bad).is_err(), "{bad:?}");
+        }
+        let set = ClassSet::parse("a:1:1").unwrap();
+        assert!(set.clone().with_slos("b:p95:1:1").is_err(), "unknown class");
+        assert!(set.clone().with_slos("a:p95:0:1").is_err(), "zero target");
+        assert!(set.with_slos("a:0:1:1").is_err(), "zero percentile");
+    }
+
+    #[test]
+    fn assigner_is_deterministic_and_share_accurate() {
+        let set = ClassSet::parse("gold:0.5:2,silver:0.3:1,bronze:0.2:0").unwrap();
+        let mut a = set.assigner();
+        let mut b = set.assigner();
+        let n = 10_000usize;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            let c = a.next_class();
+            assert_eq!(c, b.next_class(), "assignment must be deterministic");
+            counts[c as usize] += 1;
+        }
+        // Deficit WRR tracks shares within 1 assignment.
+        assert!((counts[0] as f64 - 0.5 * n as f64).abs() <= 1.0, "{counts:?}");
+        assert!((counts[1] as f64 - 0.3 * n as f64).abs() <= 1.0, "{counts:?}");
+        assert!((counts[2] as f64 - 0.2 * n as f64).abs() <= 1.0, "{counts:?}");
+    }
+
+    #[test]
+    fn evaluate_reports_attainment_per_class() {
+        let set = ClassSet::parse("gold:0.5:1,free:0.5:0")
+            .unwrap()
+            .with_slos("gold:p90:10:5.0")
+            .unwrap();
+        // Gold: 9 fast, 1 slow -> p90 wait = 10 (nearest rank), both
+        // attainments 0.9 -> attained at p90.
+        let mut cs: Vec<Completion> =
+            (0..9).map(|_| completion(0, 5.0, 10, 20.0)).collect();
+        cs.push(completion(0, 50.0, 10, 200.0));
+        cs.push(completion(1, 500.0, 10, 400.0)); // free class: no SLO
+        let reports = set.evaluate(&cs);
+        assert_eq!(reports.len(), 2);
+        let gold = &reports[0];
+        assert_eq!(gold.completed, 10);
+        assert!((gold.ttft_attainment - 0.9).abs() < 1e-12);
+        assert!(gold.attained, "{gold:?}");
+        let free = &reports[1];
+        assert_eq!(free.completed, 1);
+        assert!(free.attained && free.attainment() == 1.0);
+        // Tighten the SLO: gold must now fail.
+        let strict = ClassSet::parse("gold:0.5:1,free:0.5:0")
+            .unwrap()
+            .with_slos("gold:p95:10:5.0")
+            .unwrap();
+        assert!(!strict.evaluate(&cs)[0].attained);
+    }
+
+    #[test]
+    fn tally_counts_by_class() {
+        let mut t = ClassTally::new(2);
+        t.offer(0);
+        t.offer(1);
+        t.offer(1);
+        t.reject(1);
+        assert_eq!(t.offered, vec![1, 2]);
+        assert_eq!(t.rejected, vec![0, 1]);
+    }
+}

@@ -1,0 +1,39 @@
+//! Nonstationary traffic: time-varying arrival rates and multi-tenant
+//! SLO classes over the simulator's [`ArrivalProcess`] layer.
+//!
+//! The paper's provisioning rule `r*_G` (Eq. 12) assumes stationary
+//! replenishment; this module supplies the machinery to stress that
+//! assumption and to drive the SLO-aware autoscaler away from it:
+//!
+//! * [`rate`] — [`rate::RateFn`]: piecewise / periodic / Markov-modulated
+//!   arrival-rate functions `lambda(t)` with a deterministic,
+//!   lazily-extended MMPP schedule and closed-form integrals
+//!   `∫ lambda(t) dt` for test oracles.
+//! * [`thinning`] — [`thinning::ThinnedPoisson`]: Lewis–Shedler thinning
+//!   of a homogeneous candidate stream at `lambda_max`, drawing from the
+//!   *caller's* RNG in a strict candidate order so the thinned gap
+//!   sequence is identical whether gaps are drawn lazily or pre-drawn in
+//!   window batches (the fleet engine's `pre_draw` contract).
+//! * [`class`] — [`class::TrafficClass`] / [`class::ClassSet`]:
+//!   multi-tenant rate shares with priorities and TTFT/TPOT percentile
+//!   SLO targets, an RNG-free deterministic weighted-round-robin
+//!   [`class::ClassAssigner`], and per-class SLO-attainment evaluation
+//!   over completion streams (percentiles via
+//!   [`crate::stats::order_statistics`]).
+//!
+//! Everything here is bitwise-deterministic by construction: rate
+//! schedules depend only on their seed and the monotone extension order,
+//! class assignment draws no randomness at all, and thinning consumes
+//! the arrival stream's own RNG in arrival order — which is what keeps
+//! the parallel fleet engine's serial == parallel equality intact when
+//! traffic is nonstationary.
+//!
+//! [`ArrivalProcess`]: crate::sim::session::ArrivalProcess
+
+pub mod class;
+pub mod rate;
+pub mod thinning;
+
+pub use class::{ClassAssigner, ClassReport, ClassSet, ClassTally, SloSpec, TrafficClass};
+pub use rate::{RateFn, RateProcess};
+pub use thinning::ThinnedPoisson;

@@ -1,0 +1,422 @@
+//! Time-varying arrival-rate functions `lambda(t)`.
+//!
+//! A [`RateFn`] is the *spec* (parsed from the CLI grammar, `Copy`, and
+//! carried inside [`crate::sim::cluster::ClusterArrival`]); a
+//! [`RateProcess`] is its runtime form, owning the lazily-extended
+//! Markov-modulated schedule where one exists. Every shape is bounded
+//! (`max_rate` is finite and positive), which is what makes
+//! Lewis–Shedler thinning at `lambda_max` exact.
+//!
+//! Determinism: the MMPP state schedule is drawn from a dedicated
+//! [`Pcg64`] stream (seed salted with [`MMPP_SEED_SALT`]) and extended
+//! only forward, so the realized schedule is a pure function of the
+//! seed and the largest time ever queried — never of *who* queried
+//! (lazy sampling and the fleet engine's window pre-draw see the same
+//! piecewise-constant path bit for bit).
+
+use crate::error::{AfdError, Result};
+use crate::stats::rng::Pcg64;
+
+/// Salt applied to the arrival seed for the MMPP modulating chain, so
+/// the schedule stream never collides with the thinning/gap stream.
+pub const MMPP_SEED_SALT: u64 = 0x7EAF_F1C0_DE7E_C7ED;
+
+/// A bounded time-varying arrival-rate function (requests/cycle).
+///
+/// Grammar (CLI `--traffic`):
+///
+/// ```text
+/// constant:RATE
+/// diurnal:BASE:AMP:PERIOD        lambda(t) = BASE + AMP sin(2 pi t / PERIOD)
+/// mmpp:R0:R1:DWELL               2-state Markov-modulated Poisson process
+/// flash:BASE:PEAK:START:DUR      step to PEAK on [START, START+DUR)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateFn {
+    /// Homogeneous Poisson at `rate` — the stationary baseline. Arrival
+    /// processes treat this as the legacy single-draw path (no thinning
+    /// draws), so `constant:R` is bitwise-identical to `--lambda R`.
+    Constant { rate: f64 },
+    /// Diurnal sinusoid `base + amplitude * sin(2 pi t / period)`.
+    Diurnal { base: f64, amplitude: f64, period: f64 },
+    /// Two-state Markov-modulated Poisson process: the rate holds one
+    /// of `{rate0, rate1}`, switching after exponential dwells of mean
+    /// `dwell` (a CTMC on two states, started in state 0).
+    Mmpp { rate0: f64, rate1: f64, dwell: f64 },
+    /// Flash crowd: `base` everywhere except `[start, start + duration)`
+    /// where the rate steps to `peak`.
+    Flash { base: f64, peak: f64, start: f64, duration: f64 },
+}
+
+impl RateFn {
+    /// Parse the `--traffic` grammar (see the type-level doc).
+    pub fn parse(spec: &str) -> Result<RateFn> {
+        let mut it = spec.split(':');
+        let kind = it.next().unwrap_or("").trim();
+        let nums: Vec<f64> = it
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    AfdError::config(format!("traffic {spec:?}: {s:?} is not a number"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let want = |n: usize| -> Result<()> {
+            if nums.len() == n {
+                Ok(())
+            } else {
+                Err(AfdError::config(format!(
+                    "traffic {spec:?}: {kind} takes {n} parameter(s), got {}",
+                    nums.len()
+                )))
+            }
+        };
+        let f = match kind {
+            "constant" => {
+                want(1)?;
+                RateFn::Constant { rate: nums[0] }
+            }
+            "diurnal" => {
+                want(3)?;
+                RateFn::Diurnal { base: nums[0], amplitude: nums[1], period: nums[2] }
+            }
+            "mmpp" => {
+                want(3)?;
+                RateFn::Mmpp { rate0: nums[0], rate1: nums[1], dwell: nums[2] }
+            }
+            "flash" => {
+                want(4)?;
+                RateFn::Flash {
+                    base: nums[0],
+                    peak: nums[1],
+                    start: nums[2],
+                    duration: nums[3],
+                }
+            }
+            other => {
+                return Err(AfdError::config(format!(
+                    "unknown traffic shape {other:?}; expected constant|diurnal|mmpp|flash"
+                )));
+            }
+        };
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Reject shapes whose rate can reach zero or diverge: thinning
+    /// needs `0 < lambda(t) <= max_rate < inf` everywhere.
+    pub fn validate(&self) -> Result<()> {
+        let ok = match *self {
+            RateFn::Constant { rate } => rate > 0.0 && rate.is_finite(),
+            RateFn::Diurnal { base, amplitude, period } => {
+                base > 0.0
+                    && amplitude >= 0.0
+                    && amplitude < base
+                    && period > 0.0
+                    && (base + amplitude).is_finite()
+                    && period.is_finite()
+            }
+            RateFn::Mmpp { rate0, rate1, dwell } => {
+                rate0 > 0.0
+                    && rate1 > 0.0
+                    && dwell > 0.0
+                    && rate0.is_finite()
+                    && rate1.is_finite()
+                    && dwell.is_finite()
+            }
+            RateFn::Flash { base, peak, start, duration } => {
+                base > 0.0
+                    && peak > 0.0
+                    && start >= 0.0
+                    && duration > 0.0
+                    && peak.is_finite()
+                    && (start + duration).is_finite()
+            }
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(AfdError::config(format!(
+                "invalid traffic shape {self:?}: rates must stay in (0, inf) \
+                 (diurnal needs 0 <= amplitude < base; dwell/period/duration > 0)"
+            )))
+        }
+    }
+
+    /// Shape label for axis/CSV columns.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RateFn::Constant { .. } => "constant",
+            RateFn::Diurnal { .. } => "diurnal",
+            RateFn::Mmpp { .. } => "mmpp",
+            RateFn::Flash { .. } => "flash",
+        }
+    }
+
+    /// The arrival-process kind string an open-loop process driven by
+    /// this rate reports ([`crate::sim::session::ArrivalStats::kind`] /
+    /// the sweep's arrival axis).
+    pub fn arrival_kind(&self) -> &'static str {
+        match self {
+            RateFn::Constant { .. } => "open-poisson",
+            RateFn::Diurnal { .. } => "open-diurnal",
+            RateFn::Mmpp { .. } => "open-mmpp",
+            RateFn::Flash { .. } => "open-flash",
+        }
+    }
+
+    /// Upper envelope `lambda_max` — the thinning candidate rate.
+    pub fn max_rate(&self) -> f64 {
+        match *self {
+            RateFn::Constant { rate } => rate,
+            RateFn::Diurnal { base, amplitude, .. } => base + amplitude,
+            RateFn::Mmpp { rate0, rate1, .. } => rate0.max(rate1),
+            RateFn::Flash { base, peak, .. } => base.max(peak),
+        }
+    }
+
+    /// Nominal long-run rate (reported as the `lambda` column): the
+    /// time average where one exists, the quiescent base for the
+    /// transient flash shape.
+    pub fn nominal_rate(&self) -> f64 {
+        match *self {
+            RateFn::Constant { rate } => rate,
+            RateFn::Diurnal { base, .. } => base,
+            // Symmetric dwell: the chain spends half its time in each state.
+            RateFn::Mmpp { rate0, rate1, .. } => 0.5 * (rate0 + rate1),
+            RateFn::Flash { base, .. } => base,
+        }
+    }
+
+    /// Render back to the `--traffic` grammar (journal headers).
+    pub fn spec_string(&self) -> String {
+        match *self {
+            RateFn::Constant { rate } => format!("constant:{rate}"),
+            RateFn::Diurnal { base, amplitude, period } => {
+                format!("diurnal:{base}:{amplitude}:{period}")
+            }
+            RateFn::Mmpp { rate0, rate1, dwell } => format!("mmpp:{rate0}:{rate1}:{dwell}"),
+            RateFn::Flash { base, peak, start, duration } => {
+                format!("flash:{base}:{peak}:{start}:{duration}")
+            }
+        }
+    }
+}
+
+/// One segment of the realized MMPP schedule: the chain sits in
+/// `state` from `from` until the next segment's `from`.
+#[derive(Debug, Clone, Copy)]
+struct MmppSegment {
+    from: f64,
+    state: u8,
+}
+
+/// Runtime form of a [`RateFn`]: owns the lazily-extended modulating
+/// schedule (MMPP only) and answers `lambda(t)` queries.
+#[derive(Debug, Clone)]
+pub struct RateProcess {
+    spec: RateFn,
+    /// MMPP only: realized segments in increasing `from` order, plus
+    /// the exclusive end of the realized horizon and the schedule RNG.
+    segments: Vec<MmppSegment>,
+    horizon: f64,
+    sched_rng: Pcg64,
+}
+
+impl RateProcess {
+    /// Build from a validated spec. `seed` is the *arrival* seed; the
+    /// MMPP schedule stream is salted so it never aliases the gap
+    /// stream.
+    pub fn new(spec: RateFn, seed: u64) -> Result<RateProcess> {
+        spec.validate()?;
+        Ok(RateProcess {
+            spec,
+            segments: vec![MmppSegment { from: 0.0, state: 0 }],
+            horizon: 0.0,
+            sched_rng: Pcg64::new(seed ^ MMPP_SEED_SALT),
+        })
+    }
+
+    pub fn spec(&self) -> RateFn {
+        self.spec
+    }
+
+    pub fn max_rate(&self) -> f64 {
+        self.spec.max_rate()
+    }
+
+    /// Extend the realized MMPP schedule through `t` (exclusive-end
+    /// semantics: after this, `horizon > t`). Draw order is strictly
+    /// forward, so the schedule is independent of query batching.
+    fn extend_to(&mut self, t: f64) {
+        let RateFn::Mmpp { dwell, .. } = self.spec else { return };
+        while self.horizon <= t {
+            let seg_len = -self.sched_rng.next_f64_open().ln() * dwell;
+            self.horizon += seg_len;
+            let last = self.segments.last().expect("schedule starts non-empty").state;
+            self.segments.push(MmppSegment { from: self.horizon, state: 1 - last });
+        }
+    }
+
+    /// `lambda(t)`. Monotone or non-monotone query order both give the
+    /// same answer; MMPP extension only ever moves forward.
+    pub fn rate_at(&mut self, t: f64) -> f64 {
+        match self.spec {
+            RateFn::Constant { rate } => rate,
+            RateFn::Diurnal { base, amplitude, period } => {
+                base + amplitude * (2.0 * std::f64::consts::PI * t / period).sin()
+            }
+            RateFn::Flash { base, peak, start, duration } => {
+                if t >= start && t < start + duration {
+                    peak
+                } else {
+                    base
+                }
+            }
+            RateFn::Mmpp { rate0, rate1, .. } => {
+                self.extend_to(t);
+                // Last segment with from <= t (segments are sorted and
+                // start at 0, so the partition point is always >= 1).
+                let ix = self.segments.partition_point(|s| s.from <= t) - 1;
+                if self.segments[ix].state == 0 {
+                    rate0
+                } else {
+                    rate1
+                }
+            }
+        }
+    }
+
+    /// `∫_{t0}^{t1} lambda(t) dt` — the test oracle for thinning
+    /// correctness (closed forms; MMPP walks its realized segments).
+    pub fn integral(&mut self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        match self.spec {
+            RateFn::Constant { rate } => rate * (t1 - t0),
+            RateFn::Diurnal { base, amplitude, period } => {
+                let w = 2.0 * std::f64::consts::PI / period;
+                base * (t1 - t0) + amplitude / w * ((w * t0).cos() - (w * t1).cos())
+            }
+            RateFn::Flash { base, peak, start, duration } => {
+                let end = start + duration;
+                let overlap = (t1.min(end) - t0.max(start)).max(0.0);
+                base * (t1 - t0) + (peak - base) * overlap
+            }
+            RateFn::Mmpp { rate0, rate1, .. } => {
+                self.extend_to(t1);
+                let mut acc = 0.0;
+                for (i, seg) in self.segments.iter().enumerate() {
+                    let seg_end = self
+                        .segments
+                        .get(i + 1)
+                        .map(|s| s.from)
+                        .unwrap_or(f64::INFINITY);
+                    let lo = seg.from.max(t0);
+                    let hi = seg_end.min(t1);
+                    if hi > lo {
+                        let r = if seg.state == 0 { rate0 } else { rate1 };
+                        acc += r * (hi - lo);
+                    }
+                    if seg.from >= t1 {
+                        break;
+                    }
+                }
+                acc
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_all_shapes() {
+        for spec in ["constant:0.5", "diurnal:1.0:0.5:200", "mmpp:0.2:2.0:50", "flash:0.2:3.0:100:40"]
+        {
+            let f = RateFn::parse(spec).unwrap();
+            assert_eq!(RateFn::parse(&f.spec_string()).unwrap(), f);
+            assert!(f.max_rate() >= f.nominal_rate());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_shapes() {
+        for bad in [
+            "constant:0",
+            "constant:-1",
+            "diurnal:1.0:1.0:200", // amplitude == base -> rate touches 0
+            "diurnal:1.0:0.5:0",
+            "mmpp:0:1:10",
+            "mmpp:1:1:0",
+            "flash:0:2:10:10",
+            "flash:1:2:10:0",
+            "flash:1:2:10",
+            "sinus:1:2:3",
+            "diurnal:a:b:c",
+        ] {
+            assert!(RateFn::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_and_integral_agree() {
+        let f = RateFn::parse("diurnal:2.0:1.0:100").unwrap();
+        let mut p = RateProcess::new(f, 7).unwrap();
+        assert!((p.rate_at(0.0) - 2.0).abs() < 1e-12);
+        assert!((p.rate_at(25.0) - 3.0).abs() < 1e-9); // quarter period peak
+        // One full period integrates to base * period.
+        assert!((p.integral(0.0, 100.0) - 200.0).abs() < 1e-9);
+        // Riemann cross-check on a partial window.
+        let n = 200_000;
+        let (a, b) = (13.0, 77.0);
+        let dt = (b - a) / n as f64;
+        let riemann: f64 = (0..n).map(|i| p.rate_at(a + (i as f64 + 0.5) * dt) * dt).sum();
+        assert!((riemann - p.integral(a, b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flash_integral_counts_the_burst_window() {
+        let f = RateFn::parse("flash:0.5:4.0:100:20").unwrap();
+        let mut p = RateProcess::new(f, 1).unwrap();
+        assert_eq!(p.rate_at(99.999), 0.5);
+        assert_eq!(p.rate_at(100.0), 4.0);
+        assert_eq!(p.rate_at(119.999), 4.0);
+        assert_eq!(p.rate_at(120.0), 0.5);
+        let want = 0.5 * 200.0 + (4.0 - 0.5) * 20.0;
+        assert!((p.integral(0.0, 200.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mmpp_schedule_is_query_order_independent() {
+        let f = RateFn::parse("mmpp:0.2:2.0:30").unwrap();
+        // Batch-ahead queries vs fine lazy queries: same realized path.
+        let mut a = RateProcess::new(f, 42).unwrap();
+        let mut b = RateProcess::new(f, 42).unwrap();
+        let far: Vec<f64> = (0..400).map(|i| a.rate_at(i as f64 * 2.5)).collect();
+        let _ = b.rate_at(999.0); // extend in one jump first
+        let near: Vec<f64> = (0..400).map(|i| b.rate_at(i as f64 * 2.5)).collect();
+        for (x, y) in far.iter().zip(&near) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Rates only ever take the two state values.
+        assert!(far.iter().all(|&r| r == 0.2 || r == 2.0));
+        // Both states must actually occur over a long horizon.
+        assert!(far.iter().any(|&r| r == 0.2) && far.iter().any(|&r| r == 2.0));
+    }
+
+    #[test]
+    fn mmpp_integral_matches_riemann_sum() {
+        let f = RateFn::parse("mmpp:0.5:3.0:20").unwrap();
+        let mut p = RateProcess::new(f, 9).unwrap();
+        let (a, b) = (5.0, 250.0);
+        let n = 500_000;
+        let dt = (b - a) / n as f64;
+        // Pre-extend so the Riemann pass and the integral see one path.
+        let exact = p.integral(a, b);
+        let riemann: f64 = (0..n).map(|i| p.rate_at(a + (i as f64 + 0.5) * dt) * dt).sum();
+        assert!((riemann - exact).abs() < 1e-3 * exact.max(1.0), "{riemann} vs {exact}");
+    }
+}

@@ -23,6 +23,7 @@ use afd::analysis::cycle_time::OperatingPoint;
 use afd::analysis::provisioning::r_star_g_on_grid;
 use afd::config::experiment::ExperimentConfig;
 use afd::coordinator::router::Policy;
+use afd::coordinator::AutoscaleMode;
 use afd::server::metrics_export::{completions_to_csv_string, sim_metrics_to_json};
 use afd::sim::cluster::{AutoscaleConfig, ClusterArrival, ClusterSimulation};
 use afd::sim::engine::BATCHES_IN_FLIGHT;
@@ -401,6 +402,7 @@ fn autoscaler_converges_to_r_star_g_on_most_registry_scenarios() {
                 feasible: grid.clone(),
                 window: 2000,
                 epoch_completions: 1500,
+                mode: AutoscaleMode::Stationary,
             })
             .completions_per_bundle(Some(6_000))
             .build()

@@ -28,6 +28,7 @@ use std::path::PathBuf;
 use afd::config::experiment::ExperimentConfig;
 use afd::config::workload::WorkloadSpec;
 use afd::coordinator::router::Policy;
+use afd::coordinator::AutoscaleMode;
 use afd::ingress::recovery::{run_fresh, run_recover, ArrivalSpec, RunSpec};
 use afd::ingress::store::JournalStore;
 use afd::ingress::Ingress;
@@ -154,6 +155,7 @@ fn autoscaled_open_fleet_bitwise() {
                 feasible: vec![1, 2, 4],
                 window: 16,
                 epoch_completions: 30,
+                mode: AutoscaleMode::Stationary,
             })
     };
     let serial = mk().build().unwrap().run().unwrap();
@@ -258,6 +260,7 @@ fn dense_autoscaled_fleet_bitwise() {
                 feasible: vec![1, 2, 4],
                 window: 16,
                 epoch_completions: 30,
+                mode: AutoscaleMode::Stationary,
             })
     };
     let serial = mk().build().unwrap().run().unwrap();
@@ -288,6 +291,9 @@ fn journal_spec() -> RunSpec {
         policy: "jsq".into(),
         cost: "linear".into(),
         autoscale: None,
+        traffic: None,
+        classes: None,
+        slo: None,
     }
 }
 
@@ -392,6 +398,9 @@ fn dense_ingress_journal_bytes_invariant_across_thread_counts() {
         policy: "ltl".into(),
         cost: "linear".into(),
         autoscale: None,
+        traffic: None,
+        classes: None,
+        slo: None,
     };
 
     let base = tmpdir("dense_journal_serial");

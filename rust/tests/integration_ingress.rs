@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 
 use afd::config::experiment::ExperimentConfig;
 use afd::coordinator::router::Policy;
+use afd::coordinator::AutoscaleMode;
 use afd::ingress::recovery::{
     run_fresh, run_recover, ArrivalSpec, Artifacts, AutoscaleSpec, RunSpec,
 };
@@ -61,6 +62,9 @@ fn session_spec() -> RunSpec {
         policy: "jsq".into(),
         cost: "linear".into(),
         autoscale: None,
+        traffic: None,
+        classes: None,
+        slo: None,
     }
 }
 
@@ -102,6 +106,7 @@ fn cluster_steps(spec: &RunSpec) -> u64 {
             feasible: a.feasible.clone(),
             window: a.window,
             epoch_completions: a.epoch,
+            mode: a.mode,
         });
     }
     let mut sim = builder.build().unwrap();
@@ -199,7 +204,12 @@ fn autoscaled_bundle_recovers_across_epoch_rebuilds() {
         seed: 11,
         requests: 12,
         arrival: ArrivalSpec::Closed,
-        autoscale: Some(AutoscaleSpec { feasible: vec![1, 2], window: 16, epoch: 8 }),
+        autoscale: Some(AutoscaleSpec {
+            feasible: vec![1, 2],
+            window: 16,
+            epoch: 8,
+            mode: AutoscaleMode::Stationary,
+        }),
         ..session_spec()
     };
     let steps = cluster_steps(&spec);
@@ -269,7 +279,12 @@ fn dispatcher_counters_are_conservative() {
     let spec = RunSpec {
         requests: 12,
         arrival: ArrivalSpec::Closed,
-        autoscale: Some(AutoscaleSpec { feasible: vec![1, 2], window: 16, epoch: 8 }),
+        autoscale: Some(AutoscaleSpec {
+            feasible: vec![1, 2],
+            window: 16,
+            epoch: 8,
+            mode: AutoscaleMode::Stationary,
+        }),
         ..session_spec()
     };
     let cfg = spec_config(&spec);
@@ -283,6 +298,7 @@ fn dispatcher_counters_are_conservative() {
             feasible: auto.feasible,
             window: auto.window,
             epoch_completions: auto.epoch,
+            mode: auto.mode,
         })
         .ingress(core.clone())
         .build()

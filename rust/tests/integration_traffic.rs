@@ -1,0 +1,442 @@
+//! Integration over the nonstationary-traffic layer (`afd::traffic`):
+//! thinned arrival streams, multi-tenant classes, the SLO-aware
+//! autoscaler, and warm handoff across epoch rebuilds.
+//!
+//! 1. **Thinning tolerance**: the offered-arrival count of a thinned
+//!    open-loop session tracks the closed-form rate integral
+//!    `∫ lambda(t) dt` (the `RateProcess` oracle) phase by phase.
+//! 2. **Flash-crowd SLO drop and recovery**: queue waits degrade during
+//!    the burst and recover after it drains; the shed count is nonzero
+//!    during overload and priority shedding protects the high-priority
+//!    class.
+//! 3. **Constant-rate fold**: `--traffic constant:R` is bitwise
+//!    identical to the legacy `--lambda R` stream (the compatibility
+//!    surface for every existing seed).
+//! 4. **Parallel == serial bitwise** for nonstationary classed fleets
+//!    under the SLO-aware autoscaler, at thread counts {1, 2, 3, 8}.
+//! 5. **Warm handoff**: epoch rebuilds re-key live decodes instead of
+//!    dropping them (handoffs > 0), the ingress ledger conserves
+//!    requests, and the on-disk journal bytes — now including Handoff
+//!    records — are invariant across thread counts and crash recovery.
+
+use std::fs;
+use std::path::PathBuf;
+
+use afd::config::experiment::ExperimentConfig;
+use afd::config::workload::WorkloadSpec;
+use afd::coordinator::router::Policy;
+use afd::coordinator::AutoscaleMode;
+use afd::ingress::recovery::{run_fresh, run_recover, ArrivalSpec, AutoscaleSpec, RunSpec};
+use afd::ingress::store::JournalStore;
+use afd::ingress::Ingress;
+use afd::latency::cost::CostSpec;
+use afd::sim::cluster::{
+    AutoscaleConfig, ClusterArrival, ClusterSimulation, ClusterSimulationBuilder,
+};
+use afd::sim::session::{OpenLoopPoisson, Simulation};
+use afd::sim::slots::Completion;
+use afd::stats::distributions::LengthDist;
+use afd::traffic::{ClassSet, RateFn, RateProcess};
+
+const FSYNC: usize = 8;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("afd_traffic_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default().with_seed(seed);
+    cfg.topology.batch_per_worker = 16;
+    cfg.requests_per_instance = 150;
+    cfg.workload = WorkloadSpec::independent(
+        LengthDist::geometric_with_mean(20.0),
+        LengthDist::geometric_with_mean(50.0),
+    );
+    cfg
+}
+
+/// Mean queue wait of the completions admitted inside `[lo, hi)`.
+fn mean_wait_in(completions: &[Completion], lo: f64, hi: f64) -> (f64, usize) {
+    let waits: Vec<f64> = completions
+        .iter()
+        .filter(|c| c.admit_time >= lo && c.admit_time < hi)
+        .map(|c| c.wait)
+        .collect();
+    let n = waits.len();
+    if n == 0 {
+        (0.0, 0)
+    } else {
+        (waits.iter().sum::<f64>() / n as f64, n)
+    }
+}
+
+/// A thinned flash-crowd session: offered arrivals must track the
+/// closed-form `∫ lambda` oracle over the realized horizon, and the
+/// burst phase must be visibly denser than the quiescent phases.
+#[test]
+fn thinned_session_offered_arrivals_track_the_rate_integral() {
+    let cfg = small_cfg(20260808);
+    let spec = RateFn::parse("flash:0.25:50:100:40").unwrap();
+    let out = Simulation::builder(&cfg, 2)
+        .arrival(OpenLoopPoisson::with_traffic(spec, 64, cfg.seed).unwrap())
+        .max_completions(Some(250))
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(out.arrival.kind, "open-flash");
+    let horizon = out.metrics.total_time;
+    assert!(horizon > 200.0, "run must outlive the burst, got {horizon}");
+
+    // Whole-horizon tolerance: Poisson counts have sd sqrt(n); allow
+    // 5 sigma plus slack for the boundary arrival still pending.
+    let mut oracle = RateProcess::new(spec, cfg.seed).unwrap();
+    let want = oracle.integral(0.0, horizon);
+    let got = out.arrival.offered as f64;
+    assert!(
+        (got - want).abs() < 5.0 * want.sqrt() + 10.0,
+        "offered {got} vs integral {want}"
+    );
+
+    // Per-phase density from admit times: the 200x burst dwarfs the
+    // quiescent base rate even after queue-capacity clipping.
+    let pre = out
+        .completions
+        .iter()
+        .filter(|c| c.admit_time < 100.0)
+        .count() as f64
+        / 100.0;
+    let burst = out
+        .completions
+        .iter()
+        .filter(|c| c.admit_time >= 100.0 && c.admit_time < 140.0)
+        .count() as f64
+        / 40.0;
+    assert!(
+        burst > 2.0 * pre,
+        "burst admit density {burst}/cycle must dominate quiescent {pre}/cycle"
+    );
+    // The flood overruns the 64-slot queue: sheds are real, and the
+    // split never over-counts (the remainder is still queued).
+    assert!(out.arrival.rejected > 0, "burst must overflow the queue");
+    assert!(
+        out.arrival.admitted + out.arrival.rejected <= out.arrival.offered,
+        "admitted {} + rejected {} exceeds offered {}",
+        out.arrival.admitted,
+        out.arrival.rejected,
+        out.arrival.offered
+    );
+}
+
+/// Flash-crowd SLO dynamics: waits degrade during the burst and recover
+/// once the backlog drains; with classes attached, priority shedding
+/// concentrates the rejections on the low-priority tenant.
+#[test]
+fn flash_crowd_degrades_and_recovers_with_priority_shedding() {
+    let cfg = small_cfg(7);
+    let spec = RateFn::parse("flash:0.25:50:100:40").unwrap();
+    let set = ClassSet::parse("batch:1:0,web:1:2")
+        .unwrap()
+        .with_slos("web:p95:50:20")
+        .unwrap();
+    let out = Simulation::builder(&cfg, 2)
+        .arrival(
+            OpenLoopPoisson::with_traffic(spec, 32, cfg.seed).unwrap().classes(&set),
+        )
+        .max_completions(Some(250))
+        .build()
+        .unwrap()
+        .run();
+    let horizon = out.metrics.total_time;
+    assert!(horizon > 500.0, "needs a post-burst recovery window, got {horizon}");
+
+    // SLO drop and recovery, phase by phase (admit-time windows). The
+    // "burst" window includes the post-step drain, where admits still
+    // come off a saturated queue with elevated waits.
+    let (wait_pre, n_pre) = mean_wait_in(&out.completions, 0.0, 100.0);
+    let (wait_burst, n_burst) = mean_wait_in(&out.completions, 100.0, 250.0);
+    let (wait_post, n_post) = mean_wait_in(&out.completions, 500.0, horizon);
+    assert!(n_pre > 5 && n_burst > 5 && n_post > 5, "{n_pre}/{n_burst}/{n_post} samples");
+    assert!(
+        wait_burst > wait_pre,
+        "burst wait {wait_burst} must exceed quiescent wait {wait_pre}"
+    );
+    assert!(
+        wait_post < wait_burst,
+        "post-burst wait {wait_post} must recover below burst wait {wait_burst}"
+    );
+
+    // Priority shedding: the flood sheds, and it sheds the priority-0
+    // batch tenant harder than the priority-2 web tenant.
+    let tally = out.classes.as_ref().expect("classed run reports a tally");
+    assert_eq!(tally.total_offered(), out.arrival.offered);
+    assert_eq!(tally.total_rejected(), out.arrival.rejected);
+    assert!(out.arrival.rejected > 0, "burst must shed");
+    assert!(
+        tally.rejected[0] > tally.rejected[1],
+        "priority shedding: batch rejected {} must exceed web rejected {}",
+        tally.rejected[0],
+        tally.rejected[1]
+    );
+
+    // Per-class SLO evaluation is structurally sound.
+    let reports = set.evaluate(&out.completions);
+    assert_eq!(reports.len(), 2);
+    assert_eq!(
+        reports.iter().map(|r| r.completed).sum::<u64>() as usize,
+        out.completions.len()
+    );
+    let web = &reports[1];
+    assert!(web.slo.is_some());
+    for a in [web.ttft_attainment, web.tpot_attainment] {
+        assert!((0.0..=1.0).contains(&a), "attainment {a} out of range");
+    }
+    assert!(reports[0].slo.is_none(), "batch carries no SLO");
+    assert!((reports[0].attainment() - 1.0).abs() < 1e-12, "no SLO -> attainment 1");
+}
+
+/// `constant:R` traffic folds back into the legacy Poisson stream:
+/// completions, arrival stats, and class assignment are bitwise the
+/// plain `--lambda R` session's.
+#[test]
+fn constant_traffic_is_bitwise_the_legacy_poisson_stream() {
+    let cfg = small_cfg(11);
+    let run = |arrival: OpenLoopPoisson| {
+        Simulation::builder(&cfg, 2)
+            .arrival(arrival)
+            .max_completions(Some(200))
+            .build()
+            .unwrap()
+            .run()
+    };
+    let legacy = run(OpenLoopPoisson::new(0.4, 48, cfg.seed).unwrap());
+    let folded = run(
+        OpenLoopPoisson::with_traffic(RateFn::parse("constant:0.4").unwrap(), 48, cfg.seed)
+            .unwrap(),
+    );
+    assert_eq!(folded.arrival.kind, "open-poisson");
+    assert_eq!(legacy.completions, folded.completions);
+    assert_eq!(legacy.arrival, folded.arrival);
+    assert_eq!(
+        legacy.metrics.total_time.to_bits(),
+        folded.metrics.total_time.to_bits()
+    );
+}
+
+/// Nonstationary classed fleet under the SLO-aware autoscaler: the
+/// parallel engine reproduces the serial run bitwise at every thread
+/// count — completions, arrival stats, per-class tallies, and the
+/// autoscaler's reconfiguration trace.
+#[test]
+fn slo_autoscaled_nonstationary_fleet_bitwise_across_thread_counts() {
+    let cfg = small_cfg(20260801);
+    let spec = RateFn::parse("diurnal:0.8:0.5:120").unwrap();
+    let set = ClassSet::parse("batch:3:0,web:1:2")
+        .unwrap()
+        .with_slos("web:p95:60:20")
+        .unwrap();
+    let mk = || {
+        ClusterSimulation::builder(&cfg, 2)
+            .bundles(3)
+            .policy(Policy::JoinShortestQueue)
+            .completions_per_bundle(Some(60))
+            .arrival(ClusterArrival::Open { lambda: spec.nominal_rate(), queue_capacity: 48 })
+            .traffic(spec)
+            .traffic_classes(set.clone())
+            .autoscale(AutoscaleConfig {
+                feasible: vec![1, 2, 4],
+                window: 16,
+                epoch_completions: 25,
+                mode: AutoscaleMode::SloAware { headroom: 1.2 },
+            })
+    };
+    let serial = mk().build().unwrap().run().unwrap();
+    let tally = serial.classes.as_ref().expect("classed fleet reports a tally");
+    assert_eq!(tally.total_offered(), serial.arrival.offered);
+    for threads in [1usize, 2, 3, 8] {
+        let parallel = mk().run_parallel(threads).unwrap();
+        assert_eq!(serial.classes, parallel.classes, "class tally at {threads} threads");
+        assert_eq!(serial.arrival, parallel.arrival, "arrival stats at {threads} threads");
+        assert_eq!(
+            serial.load_imbalance.to_bits(),
+            parallel.load_imbalance.to_bits(),
+            "imbalance at {threads} threads"
+        );
+        for (s, p) in serial.bundles.iter().zip(&parallel.bundles) {
+            assert_eq!(s.completions, p.completions, "bundle {} at {threads} threads", s.bundle);
+            assert_eq!(s.final_r, p.final_r, "bundle {} final r at {threads} threads", s.bundle);
+            assert_eq!(
+                s.reconfigurations.len(),
+                p.reconfigurations.len(),
+                "bundle {} reconfigurations at {threads} threads",
+                s.bundle
+            );
+        }
+    }
+}
+
+/// Warm handoff conserves the ingress ledger: epoch rebuilds re-key
+/// live decodes (handoffs > 0) instead of dropping them, and the final
+/// accounting closes — admitted == completed + dropped, nothing left
+/// in flight.
+#[test]
+fn warm_handoff_conserves_the_ingress_ledger() {
+    let cfg = small_cfg(20260802);
+    let spec = RateFn::parse("diurnal:0.8:0.5:120").unwrap();
+    let core = Ingress::in_memory();
+    let _ = ClusterSimulation::builder(&cfg, 2)
+        .bundles(3)
+        .policy(Policy::JoinShortestQueue)
+        .completions_per_bundle(Some(60))
+        .arrival(ClusterArrival::Open { lambda: spec.nominal_rate(), queue_capacity: 48 })
+        .traffic(spec)
+        .autoscale(AutoscaleConfig {
+            feasible: vec![1, 2, 4],
+            window: 16,
+            epoch_completions: 25,
+            mode: AutoscaleMode::SloAware { headroom: 1.2 },
+        })
+        .ingress(core.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let stats = core.borrow().stats();
+    assert!(stats.admitted > 0);
+    assert!(
+        stats.handoffs > 0,
+        "epoch rebuilds under open arrivals must warm-hand-off live decodes"
+    );
+    assert_eq!(stats.inflight, 0, "terminal epochs drain every in-flight entry");
+    assert_eq!(
+        stats.admitted,
+        stats.completed + stats.dropped,
+        "ledger conservation: admitted == completed + dropped"
+    );
+}
+
+/// The journaled RunSpec the byte-identity tests share: nonstationary
+/// traffic, classes with an SLO, and the SLO-aware autoscaler — the
+/// full PR-10 surface in one journal header.
+fn traffic_journal_spec() -> RunSpec {
+    RunSpec {
+        config_path: None,
+        seed: 20260803,
+        r: 2,
+        batch: 8,
+        requests: 40,
+        arrival: ArrivalSpec::Open { lambda: 0.8, queue: 32 },
+        bundles: 4,
+        policy: "jsq".into(),
+        cost: "linear".into(),
+        autoscale: Some(AutoscaleSpec {
+            feasible: vec![1, 2, 4],
+            window: 16,
+            epoch: 25,
+            mode: AutoscaleMode::SloAware { headroom: 1.2 },
+        }),
+        traffic: Some("diurnal:0.8:0.5:120".into()),
+        classes: Some("batch:3:0,web:1:2".into()),
+        slo: Some("web:p95:60:20".into()),
+    }
+}
+
+/// Build the cluster described by `traffic_journal_spec` (mirrors
+/// `ingress::recovery::execute_cluster`'s builder).
+fn traffic_journal_builder(spec: &RunSpec) -> ClusterSimulationBuilder {
+    let cfg = ExperimentConfig::default()
+        .with_seed(spec.seed)
+        .with_batch(spec.batch)
+        .with_requests(spec.requests);
+    let mut builder = ClusterSimulation::builder(&cfg, spec.r)
+        .bundles(spec.bundles)
+        .policy(Policy::parse(&spec.policy).unwrap())
+        .cost(CostSpec::parse(&spec.cost).unwrap());
+    if let ArrivalSpec::Open { lambda, queue } = spec.arrival {
+        builder = builder.arrival(ClusterArrival::Open { lambda, queue_capacity: queue });
+    }
+    if let Some(t) = &spec.traffic {
+        builder = builder.traffic(RateFn::parse(t).unwrap());
+    }
+    if let Some(set) = spec.class_set().unwrap() {
+        builder = builder.traffic_classes(set);
+    }
+    if let Some(a) = &spec.autoscale {
+        builder = builder.autoscale(AutoscaleConfig {
+            feasible: a.feasible.clone(),
+            window: a.window,
+            epoch_completions: a.epoch,
+            mode: a.mode,
+        });
+    }
+    builder
+}
+
+/// Journal byte-identity under warm handoff: the Handoff records the
+/// rebuild path emits land in the same order at every thread count, and
+/// a crash-recovered journal finishes byte-identical to the serial
+/// reference.
+#[test]
+fn warm_handoff_journal_bytes_invariant_across_thread_counts() {
+    let spec = traffic_journal_spec();
+
+    // Serial reference through the recovery subsystem itself.
+    let base = tmpdir("journal_serial");
+    let store = JournalStore::create(&base, FSYNC).unwrap();
+    let serial_artifacts = run_fresh(&spec, Box::new(store), None).unwrap().unwrap();
+    let serial_journal = fs::read(JournalStore::journal_path(&base)).unwrap();
+    assert!(
+        serial_artifacts.metrics_json.contains("\"handoffs\""),
+        "metrics JSON must report the handoff counter"
+    );
+
+    for threads in [1usize, 2, 3, 8] {
+        let dir = tmpdir(&format!("journal_t{threads}"));
+        let out = {
+            let store = JournalStore::create(&dir, FSYNC).unwrap();
+            let core = Ingress::with_store(Box::new(store));
+            core.borrow_mut().put_header(spec.to_entries()).unwrap();
+            let out = traffic_journal_builder(&spec)
+                .ingress(core.clone())
+                .run_parallel(threads)
+                .unwrap();
+            core.borrow_mut().checkpoint().unwrap();
+            out
+        };
+        let bytes = fs::read(JournalStore::journal_path(&dir)).unwrap();
+        let _ = fs::remove_dir_all(&dir);
+        assert_eq!(
+            bytes, serial_journal,
+            "warm-handoff journal bytes diverged at {threads} threads"
+        );
+        let mut csv = String::from("bundle,finish_time,admit_time,decode_len\n");
+        for b in &out.bundles {
+            for c in &b.completions {
+                csv.push_str(&format!(
+                    "{},{},{},{}\n",
+                    b.bundle, c.finish_time, c.admit_time, c.decode_len
+                ));
+            }
+        }
+        assert_eq!(
+            csv, serial_artifacts.completions_csv,
+            "completions CSV diverged at {threads} threads"
+        );
+    }
+
+    // Crash mid-run, recover, and land on the same bytes — Handoff
+    // records replay like every other lifecycle event.
+    let crash = tmpdir("journal_crash");
+    let store = JournalStore::create(&crash, FSYNC).unwrap();
+    assert!(run_fresh(&spec, Box::new(store), Some(150)).unwrap().is_none());
+    let recovered = run_recover(&crash, FSYNC, None).unwrap().unwrap();
+    assert_eq!(recovered.completions_csv, serial_artifacts.completions_csv);
+    assert_eq!(
+        fs::read(JournalStore::journal_path(&crash)).unwrap(),
+        serial_journal,
+        "recovered journal diverged from the serial reference"
+    );
+    let _ = fs::remove_dir_all(&crash);
+    let _ = fs::remove_dir_all(&base);
+}

@@ -494,3 +494,71 @@ fn prop_fleet_window_batching_bitwise_at_any_span() {
         },
     );
 }
+
+/// The nonstationary extension of the window-batching property: for any
+/// (seed, rate shape, initial span), a fleet fed by a thinned
+/// time-varying stream — diurnal, MMPP, flash, or the constant fold —
+/// with traffic classes attached is bitwise identical between the
+/// serial and window-batched parallel engines: completions, arrival
+/// stats, per-class tallies, and imbalance. This is the Lewis–Shedler
+/// `pre_draw` contract end to end: thinned rejections are pre-drawn
+/// with acceptances, so window placement never perturbs the stream.
+#[test]
+fn prop_nonstationary_classed_fleet_bitwise_at_any_span() {
+    use afd::config::experiment::ExperimentConfig;
+    use afd::sim::cluster::{ClusterArrival, ClusterSimulation};
+    use afd::sim::fleet::WindowTuning;
+    use afd::traffic::{ClassSet, RateFn};
+
+    forall(
+        "nonstationary classed fleet bitwise",
+        16,
+        Gen::triple(
+            Gen::u64_range(0, u64::MAX / 2),
+            Gen::u64_range(0, 3),
+            Gen::f64_log_range(1e-6, 1e3),
+        ),
+        |&(seed, shape, span)| {
+            let spec = RateFn::parse(match shape % 4 {
+                0 => "diurnal:0.8:0.5:60",
+                1 => "mmpp:0.3:2.0:25",
+                2 => "flash:0.4:2.5:30:40",
+                _ => "constant:0.9",
+            })
+            .unwrap();
+            let classes = ClassSet::parse("batch:3:0,web:1:2")
+                .unwrap()
+                .with_slos("web:p95:60:20")
+                .unwrap();
+            let mut cfg = ExperimentConfig::default().with_seed(seed);
+            cfg.topology.batch_per_worker = 8;
+            cfg.requests_per_instance = 60;
+            let mk = || {
+                ClusterSimulation::builder(&cfg, 2)
+                    .bundles(3)
+                    .policy(Policy::JoinShortestQueue)
+                    .completions_per_bundle(Some(30))
+                    .arrival(ClusterArrival::Open {
+                        lambda: spec.nominal_rate(),
+                        queue_capacity: 40,
+                    })
+                    .traffic(spec)
+                    .traffic_classes(classes.clone())
+            };
+            let serial = mk().build().unwrap().run().unwrap();
+            let parallel = mk()
+                .window_tuning(WindowTuning::with_initial(span))
+                .run_parallel(3)
+                .unwrap();
+            for (s, p) in serial.bundles.iter().zip(&parallel.bundles) {
+                if s.completions != p.completions || s.arrival != p.arrival {
+                    return false;
+                }
+            }
+            serial.arrival == parallel.arrival
+                && serial.classes == parallel.classes
+                && serial.classes.is_some()
+                && serial.load_imbalance.to_bits() == parallel.load_imbalance.to_bits()
+        },
+    );
+}
